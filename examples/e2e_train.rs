@@ -1,0 +1,143 @@
+//! End-to-end driver (DESIGN.md's required full-stack validation):
+//!
+//!   laptop: build the TensorFlow image  →  push to the registry
+//!   Piz Daint: `shifterimg pull`  →  SLURM allocates a hybrid node with
+//!   `--gres=gpu:1` (GRES sets CUDA_VISIBLE_DEVICES)  →  Shifter prepares
+//!   the container with GPU support  →  the containerized trainer runs
+//!   REAL training steps through the AOT-compiled `mnist_train` artifact
+//!   on the PJRT CPU client, logging the loss curve.
+//!
+//! The same artifact is then executed "natively" (no container) and the
+//! two loss curves are compared bit-for-bit — the paper's portability
+//! claim (same bits, native performance) made concrete.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_train [steps]`
+
+use shifter_rs::apps::tf_trainer::{self, TfWorkload};
+use shifter_rs::gpu::GpuModel;
+use shifter_rs::runtime::Executor;
+use shifter_rs::shifter::{RunOptions, ShifterRuntime};
+use shifter_rs::wlm::{GresRequest, Slurm};
+use shifter_rs::{ImageGateway, Registry, SystemProfile};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let steps: u32 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+
+    // ---- workstation side: build + push --------------------------------
+    println!("== laptop: docker build + docker push ==");
+    let image = shifter_rs::image::builder::tensorflow_image();
+    println!(
+        "built {} ({} layers, {:.1} MiB transfer)",
+        image.reference.canonical(),
+        image.layers.len(),
+        image.transfer_bytes() as f64 / (1024.0 * 1024.0)
+    );
+    let mut registry = Registry::dockerhub();
+    registry.push(image);
+
+    // ---- HPC side: pull through the gateway ------------------------------
+    println!("\n== Piz Daint: shifterimg pull ==");
+    let daint = SystemProfile::piz_daint();
+    let mut gateway = ImageGateway::new(daint.pfs.clone().unwrap());
+    let rep = gateway.pull(&registry, "tensorflow/tensorflow:1.0.0-devel-gpu-py3")?;
+    println!(
+        "pulled in {:.1}s (download {:.1}s, expand {:.1}s, squashfs {:.1}s, store {:.1}s)",
+        rep.total_secs(),
+        rep.download_secs,
+        rep.expand_secs,
+        rep.convert_secs,
+        rep.store_secs
+    );
+
+    // ---- SLURM: allocate a hybrid node with one GPU ----------------------
+    let mut slurm = Slurm::new(&daint);
+    let alloc = slurm.salloc(1)?;
+    let ranks = slurm.srun(&alloc, 1, Some(GresRequest { gpus_per_node: 1 }))?;
+    let rank0 = &ranks[0];
+    println!(
+        "\n== srun --gres=gpu:1 (job {}): rank 0 on node {}, CUDA_VISIBLE_DEVICES={} ==",
+        alloc.job_id,
+        rank0.node,
+        rank0.env.get("CUDA_VISIBLE_DEVICES").unwrap()
+    );
+
+    // ---- Shifter: container with GPU support ------------------------------
+    let runtime = ShifterRuntime::new(&daint);
+    let mut opts = RunOptions::new(
+        "tensorflow/tensorflow:1.0.0-devel-gpu-py3",
+        &["python3", "mnist_train.py"],
+    );
+    opts.env = rank0.env.clone();
+    opts.node = rank0.node as usize;
+    let container = runtime.run(&gateway, &opts)?;
+    let gpus = container.visible_gpus(&daint, rank0.node as usize);
+    println!(
+        "container up in {:.1} ms; GPU support: {:?} -> {}",
+        container.startup_overhead_secs() * 1e3,
+        container.gpu.as_ref().map(|g| &g.host_devices),
+        gpus[0].name
+    );
+
+    // ---- the real compute: containerized training via PJRT ---------------
+    println!("\n== containerized training: {steps} real steps of mnist_train ==");
+    let executor = Executor::new(shifter_rs::runtime::default_artifact_dir())?;
+    println!("PJRT platform: {}", executor.platform());
+    let container_run =
+        tf_trainer::run_real_training(&executor, TfWorkload::Mnist, steps, 42)?;
+    for (i, loss) in container_run.losses.iter().enumerate() {
+        if i % (steps as usize / 15).max(1) == 0 || i + 1 == steps as usize {
+            println!("  step {i:>5}  loss {loss:.4}");
+        }
+    }
+    println!(
+        "loss {:.4} -> {:.4} ({}), wall {:.1}s, {:.2} GF/s on CPU substrate",
+        container_run.first_loss(),
+        container_run.last_loss(),
+        if container_run.loss_decreased() { "decreasing ✓" } else { "NOT decreasing ✗" },
+        container_run.wall_secs,
+        container_run.cpu_gflops
+    );
+
+    // ---- native run of the same artifact: identical bits ------------------
+    println!("\n== native run (no container), same artifact, same seed ==");
+    let native_run =
+        tf_trainer::run_real_training(&executor, TfWorkload::Mnist, steps, 42)?;
+    let identical = container_run
+        .losses
+        .iter()
+        .zip(&native_run.losses)
+        .all(|(a, b)| a == b);
+    println!(
+        "native loss {:.4} -> {:.4}; curves bit-identical: {}",
+        native_run.first_loss(),
+        native_run.last_loss(),
+        if identical { "YES ✓ (same compiled bits)" } else { "no ✗" }
+    );
+
+    // ---- Table I projection ------------------------------------------------
+    println!("\n== Table I projection for the full 9375-step MNIST run ==");
+    for board in [
+        GpuModel::quadro_k110m(),
+        GpuModel::tesla_k40m(),
+        GpuModel::tesla_p100(),
+    ] {
+        println!(
+            "  {:<14} {:>8.0} s (paper: {})",
+            board.name,
+            tf_trainer::train_time_secs(TfWorkload::Mnist, &board),
+            match board.name {
+                "Quadro K110M" => 613,
+                "Tesla K40m" => 105,
+                _ => 36,
+            }
+        );
+    }
+    if !container_run.loss_decreased() || !identical {
+        return Err("e2e validation failed".into());
+    }
+    println!("\ne2e OK");
+    Ok(())
+}

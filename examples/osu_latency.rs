@@ -1,0 +1,71 @@
+//! OSU latency walkthrough (§V.C.1): the same three OSU containers
+//! (A: MPICH 3.1.4, B: MVAPICH2 2.2, C: Intel MPI 2017) deployed on both
+//! HPC systems, with Shifter MPI support enabled and disabled, against the
+//! native baseline — the mechanism behind Tables III and IV.
+//!
+//! Run: `cargo run --release --example osu_latency`
+
+use shifter_rs::apps::osu;
+use shifter_rs::fabric::OSU_SIZES;
+use shifter_rs::shifter::{RunOptions, ShifterRuntime};
+use shifter_rs::{ImageGateway, Registry, SystemProfile};
+
+const CONTAINERS: [(&str, &str); 3] = [
+    ("A (MPICH 3.1.4)", "osu-benchmarks:mpich-3.1.4"),
+    ("B (MVAPICH2 2.2)", "osu-benchmarks:mvapich2-2.2"),
+    ("C (Intel MPI 2017)", "osu-benchmarks:intelmpi-2017.1"),
+];
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let registry = Registry::dockerhub();
+
+    for profile in [SystemProfile::linux_cluster(), SystemProfile::piz_daint()] {
+        println!(
+            "== {} — native {} over {} ==",
+            profile.name,
+            profile.host_mpi.version_string(),
+            profile.fabric.name()
+        );
+        let mut gateway = ImageGateway::new(profile.pfs.clone().unwrap());
+        for (_, image) in CONTAINERS {
+            gateway.pull(&registry, image)?;
+        }
+        let runtime = ShifterRuntime::new(&profile);
+        let native = osu::run_native(&profile);
+
+        for (label, image) in CONTAINERS {
+            // enabled: shifter --mpi
+            let c_on = runtime.run(
+                &gateway,
+                &RunOptions::new(image, &["osu_latency"]).with_mpi(),
+            )?;
+            let on = osu::run_container(&profile, &c_on, &format!("{image}-on"));
+            // disabled: no --mpi flag, container keeps its own MPI
+            let c_off = runtime
+                .run(&gateway, &RunOptions::new(image, &["osu_latency"]))?;
+            let off =
+                osu::run_container(&profile, &c_off, &format!("{image}-off"));
+
+            println!("\ncontainer {label}:");
+            println!(
+                "  swap: {}",
+                c_on.mpi
+                    .as_ref()
+                    .map(|m| format!("{} -> {}", m.container_mpi, m.host_mpi))
+                    .unwrap_or_default()
+            );
+            println!("  {:>6} {:>10} {:>10} {:>10}", "size", "native µs", "on/nat", "off/nat");
+            for (i, &size) in OSU_SIZES.iter().enumerate() {
+                println!(
+                    "  {:>6} {:>10.2} {:>10.2} {:>10.2}",
+                    osu::size_label(size),
+                    native[i].best_us,
+                    on[i].best_us / native[i].best_us,
+                    off[i].best_us / native[i].best_us,
+                );
+            }
+        }
+        println!();
+    }
+    Ok(())
+}

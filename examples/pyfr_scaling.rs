@@ -1,0 +1,88 @@
+//! PyFR multi-GPU scaling (the paper's §V.B.2 scenario): the same
+//! container image deployed across the Linux Cluster and Piz Daint with
+//! GPU + MPI support, scaling from 1 to 8 GPUs — plus a real
+//! flux-reconstruction integration through the `pyfr_step` artifact.
+//!
+//! Run: `make artifacts && cargo run --release --example pyfr_scaling`
+
+use shifter_rs::apps::pyfr::{self, PyfrRun};
+use shifter_rs::runtime::Executor;
+use shifter_rs::shifter::{RunOptions, ShifterRuntime};
+use shifter_rs::wlm::{GresRequest, Slurm};
+use shifter_rs::{ImageGateway, Registry, SystemProfile};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let registry = Registry::dockerhub();
+
+    println!("T106D turbine blade: {} cells, {} iterations, dt = {:.4e}\n",
+        pyfr::T106D_CELLS, pyfr::T106D_ITERS, pyfr::T106D_DT);
+
+    for (profile, configs) in [
+        (SystemProfile::linux_cluster(), vec![1usize, 2, 4]),
+        (SystemProfile::piz_daint(), vec![1, 2, 4, 8]),
+    ] {
+        println!("== {} ==", profile.name);
+        let mut gateway = ImageGateway::new(profile.pfs.clone().unwrap());
+        gateway.pull(&registry, "pyfr-image:1.5.0")?;
+        let runtime = ShifterRuntime::new(&profile);
+        let mut slurm = Slurm::new(&profile);
+
+        for gpus in configs {
+            // allocate: one rank per GPU; cluster packs 2 GPUs/node at 4
+            let nodes = match (profile.name, gpus) {
+                ("Linux Cluster", 1) => 1,
+                ("Linux Cluster", _) => 2,
+                (_, g) => g as u32,
+            };
+            let gpn = (gpus as u32).div_ceil(nodes);
+            let alloc = slurm.salloc(nodes)?;
+            let ranks = slurm.srun(
+                &alloc,
+                gpus as u32,
+                Some(GresRequest { gpus_per_node: gpn }),
+            )?;
+
+            // each rank starts the same container with GPU + MPI support
+            let mut opts =
+                RunOptions::new("pyfr-image:1.5.0", &["pyfr", "run", "-b", "cuda"])
+                    .with_mpi();
+            opts.env = ranks[0].env.clone();
+            opts.concurrent_nodes = nodes;
+            let container = runtime.run(&gateway, &opts)?;
+            let mpi = container
+                .effective_mpi(&profile)
+                .expect("pyfr image has MPI");
+
+            let run = match profile.name {
+                "Linux Cluster" => PyfrRun::cluster(gpus),
+                _ => PyfrRun::daint(gpus),
+            };
+            let secs = pyfr::wallclock_secs(&run, &profile, &mpi);
+            println!(
+                "  {gpus} GPU{}  ranks={:<2}  mpi={:<14}  wall {:>7.0} s  (startup {:>5.1} ms)",
+                if gpus > 1 { "s" } else { " " },
+                ranks.len(),
+                mpi.version_string(),
+                secs,
+                container.startup_overhead_secs() * 1e3,
+            );
+        }
+        println!();
+    }
+
+    // real integration on the artifact partition
+    println!("== real flux-reconstruction partition (pyfr_step artifact) ==");
+    let executor = Executor::new(shifter_rs::runtime::default_artifact_dir())?;
+    let report = pyfr::run_real_partition(&executor, 50)?;
+    println!(
+        "{} elements x {} iters: residual {:.4e} -> {:.4e}, wall {:.2}s",
+        report.elements,
+        report.iters,
+        report.residuals.first().unwrap(),
+        report.residuals.last().unwrap(),
+        report.wall_secs
+    );
+    let finite = report.residuals.iter().all(|r| r.is_finite());
+    println!("residuals finite: {}", if finite { "YES ✓" } else { "no ✗" });
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Pynamic at scale (§V.C.3 / Fig. 3) — the full deployment story for a
+//! >3000-process Python application on Piz Daint, using the asynchronous
+//! Image Gateway pull queue and the ALPS workload manager:
+//!
+//!   1. `shifterimg pull pynamic:1.3` goes through the gateway daemon's
+//!      job lifecycle (ENQUEUED → PULLING → … → READY);
+//!   2. ALPS places 3072 ranks (256 nodes × 12);
+//!   3. every node starts the same loop-mounted container;
+//!   4. the import storm that crushes the Lustre MDS natively is served
+//!      from the node-local squashfs mounts.
+//!
+//! Run: `cargo run --release --example pynamic_at_scale`
+
+use shifter_rs::apps::pynamic::{self, Mode};
+use shifter_rs::gateway::{PullQueue, PullState};
+use shifter_rs::shifter::{preflight, RunOptions, ShifterRuntime};
+use shifter_rs::wlm::{Alps, AprunRequest};
+use shifter_rs::{ImageGateway, Registry, SystemProfile};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let daint = SystemProfile::piz_daint();
+
+    // kernel preflight: the old-kernel compatibility design goal
+    let pf = preflight::preflight(&daint);
+    println!(
+        "preflight on {} (kernel {}): {} requirements satisfied, ok = {}",
+        daint.name,
+        daint.kernel,
+        pf.satisfied.len(),
+        pf.ok()
+    );
+
+    // -- 1. async pull through the gateway daemon -------------------------
+    let registry = Registry::dockerhub();
+    let mut gateway = ImageGateway::new(daint.pfs.clone().unwrap());
+    let mut queue = PullQueue::new();
+    queue.request(&gateway, &registry, "pynamic:1.3", "cscs-user")?;
+    println!("\nshifterimg pull pynamic:1.3 (async):");
+    let mut last = PullState::Enqueued;
+    while !queue.status("pynamic:1.3").unwrap().state.terminal() {
+        queue.tick(&mut gateway, &registry, 2.0);
+        let st = queue.status("pynamic:1.3").unwrap().state;
+        if st != last {
+            println!("  t={:>5.0}s  {}", queue.now(), st.name());
+            last = st;
+        }
+    }
+
+    // -- 2. ALPS placement --------------------------------------------------
+    let mut alps = Alps::new(&daint);
+    let ranks = alps.aprun(AprunRequest {
+        ranks: 3072,
+        per_node: 12,
+        gpus: false,
+    })?;
+    let nodes = ranks.iter().map(|r| r.node).max().unwrap() + 1;
+    println!("\naprun -n 3072 -N 12: {} ranks on {} nodes", ranks.len(), nodes);
+
+    // -- 3. one container start per node ------------------------------------
+    let runtime = ShifterRuntime::new(&daint);
+    let mut opts = RunOptions::new("pynamic:1.3", &["./pynamic-pyMPI"]);
+    opts.env = ranks[0].env.clone();
+    opts.concurrent_nodes = nodes;
+    let container = runtime.run(&gateway, &opts)?;
+    println!(
+        "container environment on each node: {} mounts, start-up {:.0} ms \
+         (incl. image fetch shared by {} nodes)",
+        container.mounts.len(),
+        container.startup_overhead_secs() * 1e3,
+        nodes
+    );
+    assert!(container
+        .rootfs
+        .is_dir("/opt/pynamic/modules"));
+
+    // -- 4. the Fig. 3 comparison -------------------------------------------
+    println!("\nPynamic phases at 3072 ranks (mean of 30 runs):");
+    for (label, mode) in [("native on Lustre", Mode::Native), ("Shifter", Mode::Shifter)] {
+        let r = pynamic::run(&daint, 3072, mode);
+        println!(
+            "  {label:<18} startup {:>7.1}s  import {:>7.1}s  visit {:>4.1}s  total {:>7.1}s",
+            r.startup.mean,
+            r.import.mean,
+            r.visit.mean,
+            r.total_mean()
+        );
+    }
+    let nat = pynamic::run(&daint, 3072, Mode::Native);
+    let shf = pynamic::run(&daint, 3072, Mode::Shifter);
+    println!(
+        "\nShifter deploys the 3072-process Python app {:.0}x faster ✓",
+        nat.total_mean() / shf.total_mean()
+    );
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Quickstart — the paper's §III.B end-user workflow, end to end:
+//!
+//!   1. `shifterimg pull docker:ubuntu:xenial`
+//!   2. `shifter --image=ubuntu:xenial cat /etc/os-release`
+//!   3. a CUDA container with GPU support triggered via
+//!      `CUDA_VISIBLE_DEVICES`, showing device renumbering, and
+//!   4. an MPI container with the §IV.B library swap.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use shifter_rs::shifter::{RunOptions, ShifterRuntime};
+use shifter_rs::{ImageGateway, Registry, SystemProfile};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let daint = SystemProfile::piz_daint();
+    println!("host system : {} ({}, kernel {})", daint.name, daint.os, daint.kernel);
+    println!("host MPI    : {}", daint.host_mpi.version_string());
+    println!("fabric      : {}\n", daint.fabric.name());
+
+    // -- 1. pull --------------------------------------------------------
+    let registry = Registry::dockerhub();
+    let mut gateway = ImageGateway::new(daint.pfs.clone().unwrap());
+    for image in ["docker:ubuntu:xenial", "nvidia/cuda-image:8.0", "osu-benchmarks:mpich-3.1.4"] {
+        let rep = gateway.pull(&registry, image)?;
+        println!(
+            "shifterimg pull {image}: {:.1}s (download {:.1}s, squashfs {:.1}s)",
+            rep.total_secs(),
+            rep.download_secs,
+            rep.convert_secs
+        );
+    }
+    println!("\nshifterimg images:");
+    for i in gateway.list() {
+        println!("  {i}");
+    }
+
+    // -- 2. the paper's os-release example --------------------------------
+    let runtime = ShifterRuntime::new(&daint);
+    println!("\n$ shifter --image=ubuntu:xenial cat /etc/os-release");
+    let c = runtime.run(
+        &gateway,
+        &RunOptions::new("ubuntu:xenial", &["cat", "/etc/os-release"]),
+    )?;
+    print!("{}", c.exec(&["cat", "/etc/os-release"])?);
+    println!(
+        "(container start-up overhead: {:.1} ms)\n",
+        c.startup_overhead_secs() * 1e3
+    );
+
+    // -- 3. GPU support ----------------------------------------------------
+    println!("$ export CUDA_VISIBLE_DEVICES=0");
+    println!("$ shifter --image=cuda-image ./deviceQuery");
+    let c = runtime.run(
+        &gateway,
+        &RunOptions::new("nvidia/cuda-image:8.0", &["./deviceQuery"])
+            .with_env("CUDA_VISIBLE_DEVICES", "0"),
+    )?;
+    let gpu = c.gpu.as_ref().expect("GPU support triggered");
+    for (cid, board) in gpu
+        .container_devices
+        .iter()
+        .zip(c.visible_gpus(&daint, 0))
+    {
+        println!(
+            "  Device {cid}: \"{}\" (cc {}.{}, {} GiB, {:.0} GF/s fp64 peak)",
+            board.name,
+            board.arch.compute_capability().0,
+            board.arch.compute_capability().1,
+            board.mem_gib,
+            board.fp64_gflops_peak,
+        );
+    }
+    println!(
+        "  driver libraries injected: {} (libcuda, nvidia-ml, …)",
+        gpu.libraries.len()
+    );
+    println!("  host devices {:?} -> container devices {:?}\n", gpu.host_devices, gpu.container_devices);
+
+    // -- 4. MPI swap ----------------------------------------------------------
+    println!("$ srun -n 2 --mpi=pmi2 shifter --mpi --image=mpich-image osu_latency");
+    let c = runtime.run(
+        &gateway,
+        &RunOptions::new("osu-benchmarks:mpich-3.1.4", &["osu_latency"]).with_mpi(),
+    )?;
+    let mpi = c.mpi.as_ref().expect("MPI support activated");
+    println!("  container MPI : {}", mpi.container_mpi);
+    println!("  host MPI      : {} (swapped in)", mpi.host_mpi);
+    for (cpath, hpath) in &mpi.swapped {
+        println!("    {cpath}  <-  {hpath}");
+    }
+    println!("  + {} transport dependencies, {} config files", mpi.dependencies.len(), mpi.config_files.len());
+
+    println!("\nstage log of the last run:");
+    print!("{}", c.stage_log.render());
+    Ok(())
+}

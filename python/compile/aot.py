@@ -1,0 +1,181 @@
+"""AOT pipeline: lower every L2 model to HLO *text* + a JSON manifest.
+
+This is the single place Python runs — `make artifacts` invokes it once and
+the rust coordinator never touches Python again. Interchange is HLO text,
+NOT `.serialize()`: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version behind the published `xla` 0.1.6
+crate) rejects; the text parser reassigns ids and round-trips cleanly.
+
+The manifest (artifacts/manifest.json) records, per artifact, the ordered
+input/output signatures and a FLOP estimate per call, which the rust side
+uses both to build PJRT literals and to drive the GPU device performance
+model (DESIGN.md S15).
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--only NAME]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+jax.config.update("jax_enable_x64", True)  # n-body artifact is f64 (Table V)
+
+from . import model  # noqa: E402
+
+GENERATOR_VERSION = "shifter-rs-aot-1"
+
+_DTYPE_NAMES = {
+    jnp.dtype("float32"): "f32",
+    jnp.dtype("float64"): "f64",
+    jnp.dtype("int32"): "s32",
+    jnp.dtype("int64"): "s64",
+}
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _sig(name, spec):
+    return {
+        "name": name,
+        "shape": list(spec.shape),
+        "dtype": _DTYPE_NAMES[jnp.dtype(spec.dtype)],
+    }
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _mnist_specs():
+    ins = [
+        (n, _spec(s, jnp.float32)) for n, s in model.MNIST_PARAM_SHAPES
+    ] + [
+        ("x", _spec((model.MNIST_BATCH, 28, 28, 1), jnp.float32)),
+        ("y", _spec((model.MNIST_BATCH,), jnp.int32)),
+    ]
+    return ins
+
+
+def _cifar_specs():
+    ins = [
+        (n, _spec(s, jnp.float32)) for n, s in model.CIFAR_PARAM_SHAPES
+    ] + [
+        ("x", _spec((model.CIFAR_BATCH, 24, 24, 3), jnp.float32)),
+        ("y", _spec((model.CIFAR_BATCH,), jnp.int32)),
+    ]
+    return ins
+
+
+def build_catalog():
+    """name -> (fn, [(input_name, spec)], [output names], flops_per_call)."""
+    mnist_in = _mnist_specs()
+    cifar_in = _cifar_specs()
+    nbody_in = [
+        ("pos4", _spec((model.NBODY_N, 4), jnp.float64)),
+        ("vel", _spec((model.NBODY_N, 3), jnp.float64)),
+        ("dt", _spec((), jnp.float64)),
+    ]
+    pyfr_in = [
+        ("u", _spec((model.PYFR_E, model.PYFR_P, model.PYFR_V), jnp.float32)),
+        ("op_div", _spec((model.PYFR_P, model.PYFR_P), jnp.float32)),
+        ("dt", _spec((), jnp.float32)),
+    ]
+    return {
+        "mnist_train": (
+            model.mnist_train_step,
+            mnist_in,
+            [n for n, _ in model.MNIST_PARAM_SHAPES] + ["loss"],
+            model.mnist_flops_per_step(),
+        ),
+        "mnist_predict": (
+            lambda *a: (model.mnist_apply(a[:8], a[8]),),
+            mnist_in[:-1],
+            ["logits"],
+            model.mnist_flops_per_step() // 3,
+        ),
+        "cifar_train": (
+            model.cifar_train_step,
+            cifar_in,
+            [n for n, _ in model.CIFAR_PARAM_SHAPES] + ["loss"],
+            model.cifar_flops_per_step(),
+        ),
+        "nbody_step": (
+            model.nbody_step,
+            nbody_in,
+            ["pos4", "vel", "acc_norm"],
+            # force eval dominates; +12n for the integrator
+            __import__("compile.kernels", fromlist=["nbody_flops"]).nbody_flops(
+                model.NBODY_N
+            )
+            + 12 * model.NBODY_N,
+        ),
+        "pyfr_step": (
+            model.pyfr_step,
+            pyfr_in,
+            ["u", "residual"],
+            model.pyfr_flops_per_step(),
+        ),
+    }
+
+
+def emit(out_dir: str, only: str | None = None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    catalog = build_catalog()
+    manifest = {"generator": GENERATOR_VERSION, "artifacts": {}}
+    for name, (fn, ins, out_names, flops) in catalog.items():
+        if only is not None and name != only:
+            continue
+        specs = [s for _, s in ins]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_avals = lowered.out_info
+        # lowered.out_info is a pytree of ShapeDtypeStruct matching outputs
+        flat_outs = jax.tree_util.tree_leaves(out_avals)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [_sig(n, s) for n, s in ins],
+            "outputs": [
+                _sig(out_names[i] if i < len(out_names) else f"out{i}", s)
+                for i, s in enumerate(flat_outs)
+            ],
+            "flops_per_call": int(flops),
+        }
+        print(f"  {name}: {len(text)} chars, {len(ins)} in, "
+              f"{len(flat_outs)} out, {flops:.3e} flops/call")
+    # merge into an existing manifest when --only is used
+    mpath = os.path.join(out_dir, "manifest.json")
+    if only is not None and os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        old["artifacts"].update(manifest["artifacts"])
+        manifest = old
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="emit a single artifact")
+    args = ap.parse_args()
+    emit(args.out_dir, args.only)
+
+
+if __name__ == "__main__":
+    main()

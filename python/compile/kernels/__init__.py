@@ -1,0 +1,20 @@
+"""L1 — Pallas kernels for the containerized applications' compute hot-spots.
+
+All kernels run under interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); structure, tiling and VMEM budgets are the TPU-performance
+artifacts, validated in DESIGN.md §7. Each kernel has a pure-jnp oracle in
+ref.py and a pytest/hypothesis sweep in python/tests/test_kernels.py.
+"""
+
+from .flux import batched_operator, batched_operator_flops
+from .matmul import matmul, matmul_flops
+from .nbody import nbody_acc, nbody_flops
+
+__all__ = [
+    "batched_operator",
+    "batched_operator_flops",
+    "matmul",
+    "matmul_flops",
+    "nbody_acc",
+    "nbody_flops",
+]

@@ -1,0 +1,88 @@
+"""Batched per-element operator kernel (Pallas) — PyFR's compute pattern.
+
+PyFR's flux-reconstruction inner loop applies small, dense, *constant*
+operator matrices (interpolation / differentiation over the reference
+element) independently to every mesh element. On GPUs PyFR batches these
+small GEMMs over threadblocks; here the element batch is tiled over the
+Pallas grid and each step applies the operator to a (TE, P, V) block held in
+VMEM (DESIGN.md §Hardware-Adaptation).
+
+out[e] = op @ u[e]      op: (Q, P), u: (E, P, V)  ->  out: (E, Q, V)
+
+The kernel is linear in `u`, so the custom VJP is the same kernel with the
+transposed operator — keeping the Pallas path alive under jax.grad.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Elements per grid step. P, Q, V are small (tens); VMEM per step with
+# TE = 512, P = Q = 8, V = 4 in f32: 512*8*4*4 B * 2 + op ~= 128 KiB.
+DEFAULT_TE = 512
+
+
+def _flux_kernel(op_ref, u_ref, o_ref):
+    """Apply the shared operator to one tile of elements."""
+    op = op_ref[...]  # (Q, P)
+    u = u_ref[...]  # (TE, P, V)
+    # einsum 'qp,epv->eqv' expressed as dot_general so it maps onto the MXU:
+    # contract u's P axis (1) with op's P axis (1); batch over nothing,
+    # giving (TE, V, Q)? -- keep it simple and exact instead:
+    o_ref[...] = jnp.einsum(
+        "qp,epv->eqv", op, u, preferred_element_type=o_ref.dtype
+    )
+
+
+def _ceil_to(value: int, multiple: int) -> int:
+    return -(-value // multiple) * multiple
+
+
+def _batched_operator_pallas(op, u, te):
+    e, p, v = u.shape
+    q, p2 = op.shape
+    assert p == p2, f"operator/state mismatch: {p2} vs {p}"
+    ep = _ceil_to(e, te)
+    up = jnp.pad(u, ((0, ep - e), (0, 0), (0, 0)))
+    grid = (ep // te,)
+    out = pl.pallas_call(
+        _flux_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q, p), lambda i: (0, 0)),
+            pl.BlockSpec((te, p, v), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((te, q, v), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ep, q, v), u.dtype),
+        interpret=True,
+    )(op, up)
+    return out[:e]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def batched_operator(op, u, te=DEFAULT_TE):
+    """Differentiable batched operator application: out[e] = op @ u[e]."""
+    return _batched_operator_pallas(op, u, te)
+
+
+def _bop_fwd(op, u, te):
+    return _batched_operator_pallas(op, u, te), (op, u)
+
+
+def _bop_bwd(te, res, g):
+    op, u = res
+    # d/du (op @ u) . g = op^T @ g, elementwise over the batch.
+    du = _batched_operator_pallas(op.T, g, te)
+    # d/dop = sum_e g[e] @ u[e]^T
+    dop = jnp.einsum("eqv,epv->qp", g, u)
+    return dop, du
+
+
+batched_operator.defvjp(_bop_fwd, _bop_bwd)
+
+
+def batched_operator_flops(e: int, q: int, p: int, v: int) -> int:
+    """FLOPs of one batched operator application."""
+    return 2 * e * q * p * v

@@ -1,0 +1,99 @@
+"""Tiled Pallas matmul kernel — the CNN dense-layer / conv-as-GEMM workhorse.
+
+TPU-shaped design (see DESIGN.md §Hardware-Adaptation):
+  * the grid is (M/TM, N/TN, K/TK) with the K dimension innermost, so each
+    (i, j) output tile stays resident while K-tiles stream HBM->VMEM;
+  * default tiles are 128-multiples to match the MXU systolic array;
+  * accumulation happens in the output ref across the sequential K steps
+    (the canonical Pallas revisiting-output pattern).
+
+`interpret=True` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, and interpret-mode lowers the kernel to plain HLO which the
+rust runtime then runs. Structure (not wallclock) is the TPU-perf artifact.
+
+A `jax.custom_vjp` wrapper makes the kernel differentiable so it sits on the
+L2 training path: dX = dY @ W^T and dW = X^T @ dY are themselves computed by
+the same Pallas kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tiles. VMEM footprint per step with these defaults:
+# x tile 128x128 f32 (64 KiB) + w tile 128x128 (64 KiB) + out tile 128x128
+# (64 KiB) = 192 KiB  <<  16 MiB VMEM — leaves room for double buffering.
+DEFAULT_TM = 128
+DEFAULT_TK = 128
+DEFAULT_TN = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, k_steps):
+    """One (i, j, k) grid step: o[i, j] += x[i, k] @ w[k, j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _ceil_to(value: int, multiple: int) -> int:
+    return -(-value // multiple) * multiple
+
+
+def _matmul_pallas(x, w, tm, tk, tn):
+    """Pad-to-tile, run the Pallas grid, slice back to the true shape."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    mp, kp, np_ = _ceil_to(m, tm), _ceil_to(k, tk), _ceil_to(n, tn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    grid = (mp // tm, np_ // tn, kp // tk)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def matmul(x, w, tm=DEFAULT_TM, tk=DEFAULT_TK, tn=DEFAULT_TN):
+    """Differentiable tiled Pallas matmul: (M, K) @ (K, N) -> (M, N).
+
+    Arbitrary shapes are supported via zero padding to tile multiples; the
+    zeros contribute nothing to the contraction so the result is exact.
+    """
+    return _matmul_pallas(x, w, tm, tk, tn)
+
+
+def _matmul_fwd(x, w, tm, tk, tn):
+    return _matmul_pallas(x, w, tm, tk, tn), (x, w)
+
+
+def _matmul_bwd(tm, tk, tn, res, g):
+    x, w = res
+    dx = _matmul_pallas(g, w.T, tm, tk, tn)
+    dw = _matmul_pallas(x.T, g, tm, tk, tn)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def matmul_flops(m: int, k: int, n: int) -> int:
+    """FLOPs of one (M, K) @ (K, N) product (mul + add)."""
+    return 2 * m * k * n

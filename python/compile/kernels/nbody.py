@@ -1,0 +1,88 @@
+"""Tiled all-pairs n-body interaction kernel (Pallas).
+
+Reproduces the compute hot-spot of the CUDA SDK n-body benchmark the paper
+uses for Table V, re-expressed for the TPU memory hierarchy instead of being
+a mechanical CUDA port (DESIGN.md §Hardware-Adaptation):
+
+  * CUDA version: each threadblock stages a tile of "source" bodies through
+    shared memory; each thread accumulates one body's acceleration.
+  * This version: the grid is (N/TI, N/TJ). For a fixed i-tile the j
+    (source) tiles stream through VMEM via BlockSpec while the (TI, 3)
+    acceleration tile is revisited and accumulated across the sequential j
+    dimension — the same staging idea, expressed as an HBM->VMEM schedule
+    rather than threadblock cooperation.
+
+Body state is packed as (N, 4) rows of [x, y, z, mass] so one ref carries
+both positions and masses (mirrors CUDA's float4 layout).
+
+FLOP accounting (used by the Table V GF/s harness): 20 flops per pairwise
+interaction, the convention used by the CUDA SDK benchmark itself.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NBODY_SOFTENING
+
+# Default tiles: TI x TJ interaction sub-matrix. VMEM per step:
+# i-tile (256, 4) + j-tile (256, 4) + acc (256, 3) f32 ~= 11 KiB, plus the
+# (TI, TJ, 3) displacement intermediate (768 KiB) — well under VMEM.
+DEFAULT_TI = 256
+DEFAULT_TJ = 256
+
+FLOPS_PER_INTERACTION = 20  # CUDA SDK n-body convention
+
+
+def _nbody_kernel(pi_ref, pj_ref, acc_ref):
+    """Accumulate accelerations of the i-tile due to the j-tile."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    dtype = pi_ref.dtype
+    pi = pi_ref[...]  # (TI, 4)
+    pj = pj_ref[...]  # (TJ, 4)
+    # d[a, b] = p_b - p_a for a in i-tile, b in j-tile
+    d = pj[None, :, :3] - pi[:, None, :3]  # (TI, TJ, 3)
+    r2 = jnp.sum(d * d, axis=-1) + jnp.asarray(NBODY_SOFTENING**2, dtype)
+    inv_r3 = r2 ** jnp.asarray(-1.5, dtype)
+    w = pj[None, :, 3] * inv_r3  # (TI, TJ): m_j / r^3
+    acc_ref[...] += jnp.sum(d * w[:, :, None], axis=1)
+
+
+def _ceil_to(value: int, multiple: int) -> int:
+    return -(-value // multiple) * multiple
+
+
+def nbody_acc(pos4, ti=DEFAULT_TI, tj=DEFAULT_TJ):
+    """All-pairs accelerations: (N, 4) [x, y, z, m] -> (N, 3), G = 1.
+
+    Padding bodies have mass 0 so they exert no force; padded *targets* are
+    sliced away. Softening keeps the self-interaction finite and zero.
+    """
+    n = pos4.shape[0]
+    np_ = _ceil_to(n, max(ti, tj))
+    p = jnp.pad(pos4, ((0, np_ - n), (0, 0)))
+    grid = (np_ // ti, np_ // tj)
+    acc = pl.pallas_call(
+        _nbody_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ti, 4), lambda i, j: (i, 0)),
+            pl.BlockSpec((tj, 4), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((ti, 3), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, 3), pos4.dtype),
+        interpret=True,
+    )(p, p)
+    return acc[:n]
+
+
+def nbody_flops(n: int) -> int:
+    """FLOPs of one all-pairs force evaluation over n bodies."""
+    return FLOPS_PER_INTERACTION * n * n

@@ -1,0 +1,43 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has an exact (up to float associativity)
+counterpart here. pytest (python/tests/test_kernels.py) asserts allclose
+between kernel and oracle across shape/dtype sweeps driven by hypothesis.
+"""
+
+import jax.numpy as jnp
+
+# Softening constant shared with the n-body kernel (Plummer softening).
+NBODY_SOFTENING = 1e-3
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain dense matmul oracle: (M, K) @ (K, N) -> (M, N)."""
+    return jnp.matmul(x, w, preferred_element_type=x.dtype)
+
+
+def nbody_acc_ref(pos4: jnp.ndarray) -> jnp.ndarray:
+    """All-pairs gravitational acceleration oracle.
+
+    pos4: (N, 4) rows of [x, y, z, mass].
+    Returns (N, 3) accelerations with Plummer softening; G = 1.
+
+    a_i = sum_j m_j * (p_j - p_i) / (|p_j - p_i|^2 + eps^2)^(3/2)
+    (the self term vanishes because d = 0 and softening keeps it finite).
+    """
+    p = pos4[:, :3]
+    m = pos4[:, 3]
+    d = p[None, :, :] - p[:, None, :]  # (N, N, 3): d[i, j] = p_j - p_i
+    r2 = jnp.sum(d * d, axis=-1) + jnp.asarray(NBODY_SOFTENING**2, pos4.dtype)
+    inv_r3 = r2 ** jnp.asarray(-1.5, pos4.dtype)
+    return jnp.sum(d * (m[None, :] * inv_r3)[:, :, None], axis=1)
+
+
+def batched_operator_ref(op: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """PyFR-style per-element operator application oracle.
+
+    op: (Q, P) operator matrix (shared across elements)
+    u:  (E, P, V) per-element solution/flux values
+    Returns (E, Q, V): out[e] = op @ u[e].
+    """
+    return jnp.einsum("qp,epv->eqv", op, u, preferred_element_type=u.dtype)

@@ -1,0 +1,301 @@
+"""L2 — JAX compute graphs of the paper's containerized applications.
+
+These are the *applications inside the container images* of the evaluation
+(§V): the TensorFlow MNIST/CIFAR-10 trainers (Table I), the PyFR-like flux
+solver (Table II) and the CUDA-SDK-style n-body simulation (Table V). Each
+is a pure function lowered once by aot.py to HLO text; the rust coordinator
+(shifter-rs) executes the artifacts through the PJRT CPU client so native
+and containerized runs provably execute identical compiled bits.
+
+Hot-spot compute goes through the L1 Pallas kernels (kernels/*): dense
+layers via the tiled matmul, PyFR operators via the batched-operator kernel,
+n-body forces via the all-pairs kernel. Convolutions stay on
+lax.conv_general_dilated, which XLA fuses natively.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import (
+    batched_operator,
+    batched_operator_flops,
+    matmul,
+    matmul_flops,
+    nbody_acc,
+    nbody_flops,
+)
+
+# ---------------------------------------------------------------------------
+# Shared NN building blocks
+# ---------------------------------------------------------------------------
+
+
+def conv2d(x, w, b, stride=1):
+    """NHWC SAME convolution + bias."""
+    out = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b
+
+
+def max_pool(x, window, stride):
+    """NHWC SAME max-pool."""
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="SAME",
+    )
+
+
+def dense(x, w, b):
+    """Dense layer through the L1 Pallas matmul kernel."""
+    return matmul(x, w) + b
+
+
+def softmax_xent(logits, labels, num_classes):
+    """Mean softmax cross-entropy with integer labels."""
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=logits.dtype)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def _sgd(params, grads, lr):
+    return tuple(p - lr * g for p, g in zip(params, grads))
+
+
+# ---------------------------------------------------------------------------
+# MNIST: LeNet-5-like CNN (TF community-models `convolutional.py`, Table I)
+# ---------------------------------------------------------------------------
+
+MNIST_BATCH = 64
+MNIST_LR = 0.05
+MNIST_PARAM_SHAPES = (
+    ("conv1_w", (5, 5, 1, 32)),
+    ("conv1_b", (32,)),
+    ("conv2_w", (5, 5, 32, 64)),
+    ("conv2_b", (64,)),
+    ("fc1_w", (7 * 7 * 64, 512)),
+    ("fc1_b", (512,)),
+    ("fc2_w", (512, 10)),
+    ("fc2_b", (10,)),
+)
+
+
+def mnist_init(rng):
+    """He-initialized parameter tuple, ordered as MNIST_PARAM_SHAPES."""
+    params = []
+    for (_, shape), key in zip(
+        MNIST_PARAM_SHAPES, jax.random.split(rng, len(MNIST_PARAM_SHAPES))
+    ):
+        if len(shape) == 1:
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            params.append(
+                jax.random.normal(key, shape, jnp.float32)
+                * jnp.sqrt(2.0 / fan_in)
+            )
+    return tuple(params)
+
+
+def mnist_apply(params, x):
+    """Forward pass: (B, 28, 28, 1) -> (B, 10) logits."""
+    c1w, c1b, c2w, c2b, f1w, f1b, f2w, f2b = params
+    h = jax.nn.relu(conv2d(x, c1w, c1b))
+    h = max_pool(h, 2, 2)  # 14x14x32
+    h = jax.nn.relu(conv2d(h, c2w, c2b))
+    h = max_pool(h, 2, 2)  # 7x7x64
+    h = h.reshape(h.shape[0], -1)  # (B, 3136)
+    h = jax.nn.relu(dense(h, f1w, f1b))
+    return dense(h, f2w, f2b)
+
+
+def mnist_loss(params, x, y):
+    return softmax_xent(mnist_apply(params, x), y, 10)
+
+
+def mnist_train_step(*args):
+    """One SGD step. args = (*params[8], x, y) -> (*new_params[8], loss)."""
+    params, (x, y) = args[:8], args[8:]
+    loss, grads = jax.value_and_grad(mnist_loss)(params, x, y)
+    return (*_sgd(params, grads, MNIST_LR), loss)
+
+
+def mnist_flops_per_step(batch=MNIST_BATCH):
+    """Approximate FLOPs of one fwd+bwd train step (3x forward rule)."""
+    fwd = (
+        # conv1: B*28*28 out positions * 5*5*1*32 MACs * 2
+        batch * 28 * 28 * 5 * 5 * 1 * 32 * 2
+        + batch * 14 * 14 * 5 * 5 * 32 * 64 * 2
+        + matmul_flops(batch, 3136, 512)
+        + matmul_flops(batch, 512, 10)
+    )
+    return 3 * fwd
+
+
+# ---------------------------------------------------------------------------
+# CIFAR-10: Krizhevsky-style CNN (TF `deep_cnn` tutorial, Table I)
+# ---------------------------------------------------------------------------
+
+CIFAR_BATCH = 32
+CIFAR_LR = 0.05
+CIFAR_PARAM_SHAPES = (
+    ("conv1_w", (5, 5, 3, 64)),
+    ("conv1_b", (64,)),
+    ("conv2_w", (5, 5, 64, 64)),
+    ("conv2_b", (64,)),
+    ("fc1_w", (6 * 6 * 64, 384)),
+    ("fc1_b", (384,)),
+    ("fc2_w", (384, 192)),
+    ("fc2_b", (192,)),
+    ("fc3_w", (192, 10)),
+    ("fc3_b", (10,)),
+)
+
+
+def cifar_init(rng):
+    """He-initialized parameter tuple, ordered as CIFAR_PARAM_SHAPES."""
+    params = []
+    for (_, shape), key in zip(
+        CIFAR_PARAM_SHAPES, jax.random.split(rng, len(CIFAR_PARAM_SHAPES))
+    ):
+        if len(shape) == 1:
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            params.append(
+                jax.random.normal(key, shape, jnp.float32)
+                * jnp.sqrt(2.0 / fan_in)
+            )
+    return tuple(params)
+
+
+def cifar_apply(params, x):
+    """Forward pass: (B, 24, 24, 3) distorted crops -> (B, 10) logits."""
+    c1w, c1b, c2w, c2b, f1w, f1b, f2w, f2b, f3w, f3b = params
+    h = jax.nn.relu(conv2d(x, c1w, c1b))
+    h = max_pool(h, 3, 2)  # 12x12x64
+    h = jax.nn.relu(conv2d(h, c2w, c2b))
+    h = max_pool(h, 3, 2)  # 6x6x64
+    h = h.reshape(h.shape[0], -1)  # (B, 2304)
+    h = jax.nn.relu(dense(h, f1w, f1b))
+    h = jax.nn.relu(dense(h, f2w, f2b))
+    return dense(h, f3w, f3b)
+
+
+def cifar_loss(params, x, y):
+    return softmax_xent(cifar_apply(params, x), y, 10)
+
+
+def cifar_train_step(*args):
+    """One SGD step. args = (*params[10], x, y) -> (*new_params[10], loss)."""
+    params, (x, y) = args[:10], args[10:]
+    loss, grads = jax.value_and_grad(cifar_loss)(params, x, y)
+    return (*_sgd(params, grads, CIFAR_LR), loss)
+
+
+def cifar_flops_per_step(batch=CIFAR_BATCH):
+    fwd = (
+        batch * 24 * 24 * 5 * 5 * 3 * 64 * 2
+        + batch * 12 * 12 * 5 * 5 * 64 * 64 * 2
+        + matmul_flops(batch, 2304, 384)
+        + matmul_flops(batch, 384, 192)
+        + matmul_flops(batch, 192, 10)
+    )
+    return 3 * fwd
+
+
+# ---------------------------------------------------------------------------
+# n-body: CUDA SDK benchmark analogue (Table V)
+# ---------------------------------------------------------------------------
+
+NBODY_N = 1024  # artifact size; Table V's 200k run is scaled by the L3
+# device performance model using nbody_flops(n).
+NBODY_DT = 1e-3
+
+
+def nbody_step(pos4, vel, dt):
+    """One leapfrog (kick-drift) step.
+
+    pos4: (N, 4) [x, y, z, m]; vel: (N, 3); dt: f32 scalar.
+    Returns (new_pos4, new_vel, potential_proxy) — the third output is a
+    cheap scalar (mean |a|) the harness logs as an energy-drift proxy.
+    """
+    acc = nbody_acc(pos4)
+    new_vel = vel + dt * acc
+    new_pos = pos4[:, :3] + dt * new_vel
+    new_pos4 = jnp.concatenate([new_pos, pos4[:, 3:4]], axis=1)
+    return new_pos4, new_vel, jnp.mean(jnp.abs(acc))
+
+
+# ---------------------------------------------------------------------------
+# PyFR-like flux-reconstruction step (Table II)
+# ---------------------------------------------------------------------------
+
+PYFR_E = 2048  # elements in the artifact partition
+PYFR_P = 8  # solution points per element
+PYFR_V = 4  # conserved variables
+PYFR_DT = 9.3558e-6  # the paper's T106D time step
+
+
+def pyfr_flux(u):
+    """Burgers-like nonlinear flux, per variable."""
+    return 0.5 * u * u
+
+
+def pyfr_step(u, op_div, dt):
+    """One explicit flux-reconstruction update on a mesh partition.
+
+    u:      (E, P, V) per-element solution
+    op_div: (P, P) reference-element divergence operator
+    dt:     f32 scalar
+    Returns (u_new, residual_norm).
+    """
+    f = pyfr_flux(u)
+    du = batched_operator(op_div, f)
+    u_new = u - dt * du
+    return u_new, jnp.sqrt(jnp.mean(du * du))
+
+
+def pyfr_flops_per_step(e=PYFR_E, p=PYFR_P, v=PYFR_V):
+    # flux eval (2 flops/point) + operator + update (2 flops/point)
+    return batched_operator_flops(e, p, p, v) + 4 * e * p * v
+
+
+__all__ = [
+    "MNIST_BATCH",
+    "MNIST_PARAM_SHAPES",
+    "CIFAR_BATCH",
+    "CIFAR_PARAM_SHAPES",
+    "NBODY_N",
+    "PYFR_E",
+    "PYFR_P",
+    "PYFR_V",
+    "mnist_init",
+    "mnist_apply",
+    "mnist_loss",
+    "mnist_train_step",
+    "mnist_flops_per_step",
+    "cifar_init",
+    "cifar_apply",
+    "cifar_loss",
+    "cifar_train_step",
+    "cifar_flops_per_step",
+    "nbody_step",
+    "pyfr_step",
+    "pyfr_flops_per_step",
+]

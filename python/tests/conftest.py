@@ -1,0 +1,5 @@
+import jax
+
+# The n-body artifact and Table V run in f64 (the paper's double-precision
+# n-body test); enable x64 process-wide so f64 paths are testable.
+jax.config.update("jax_enable_x64", True)

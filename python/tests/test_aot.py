@@ -1,0 +1,98 @@
+"""AOT pipeline tests: catalog coverage, HLO text validity, manifest schema."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+EXPECTED_ARTIFACTS = {
+    "mnist_train",
+    "mnist_predict",
+    "cifar_train",
+    "nbody_step",
+    "pyfr_step",
+}
+
+
+class TestCatalog:
+    def test_covers_all_expected(self):
+        assert set(aot.build_catalog().keys()) == EXPECTED_ARTIFACTS
+
+    def test_input_signatures_are_ordered_and_typed(self):
+        for name, (_, ins, outs, flops) in aot.build_catalog().items():
+            assert len(ins) > 0 and len(outs) > 0
+            assert flops > 0, name
+            for in_name, spec in ins:
+                assert isinstance(in_name, str)
+                assert all(d > 0 for d in spec.shape)
+
+    def test_mnist_train_signature(self):
+        _, ins, outs, _ = aot.build_catalog()["mnist_train"]
+        assert [n for n, _ in ins[:8]] == [
+            n for n, _ in model.MNIST_PARAM_SHAPES
+        ]
+        assert ins[8][1].shape == (model.MNIST_BATCH, 28, 28, 1)
+        assert ins[9][1].shape == (model.MNIST_BATCH,)
+        assert outs[-1] == "loss"
+
+
+class TestEmit:
+    def test_emit_single_artifact(self, tmp_path):
+        manifest = aot.emit(str(tmp_path), only="pyfr_step")
+        assert set(manifest["artifacts"].keys()) == {"pyfr_step"}
+        entry = manifest["artifacts"]["pyfr_step"]
+        hlo_path = tmp_path / entry["file"]
+        assert hlo_path.exists()
+        text = hlo_path.read_text()
+        assert "ENTRY" in text and "HloModule" in text
+        # signature in manifest matches declared model constants
+        assert entry["inputs"][0]["shape"] == [
+            model.PYFR_E,
+            model.PYFR_P,
+            model.PYFR_V,
+        ]
+        assert entry["inputs"][0]["dtype"] == "f32"
+        assert entry["outputs"][0]["name"] == "u"
+        mf = json.loads((tmp_path / "manifest.json").read_text())
+        assert mf["generator"] == aot.GENERATOR_VERSION
+
+    def test_emit_only_merges_into_existing_manifest(self, tmp_path):
+        aot.emit(str(tmp_path), only="pyfr_step")
+        manifest = aot.emit(str(tmp_path), only="nbody_step")
+        assert {"pyfr_step", "nbody_step"} <= set(manifest["artifacts"])
+
+    def test_nbody_artifact_is_f64(self, tmp_path):
+        manifest = aot.emit(str(tmp_path), only="nbody_step")
+        entry = manifest["artifacts"]["nbody_step"]
+        assert all(i["dtype"] == "f64" for i in entry["inputs"])
+        assert entry["inputs"][0]["shape"] == [model.NBODY_N, 4]
+
+
+class TestCheckedInArtifacts:
+    """Validate the artifacts/ directory the Makefile builds (if present)."""
+
+    ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+    @pytest.fixture()
+    def manifest(self):
+        path = os.path.join(self.ART, "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts/ not built yet (run `make artifacts`)")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_manifest_complete(self, manifest):
+        assert set(manifest["artifacts"].keys()) == EXPECTED_ARTIFACTS
+
+    def test_all_hlo_files_exist_and_parse_shape(self, manifest):
+        for name, entry in manifest["artifacts"].items():
+            p = os.path.join(self.ART, entry["file"])
+            assert os.path.exists(p), f"missing artifact for {name}"
+            head = open(p).read(64)
+            assert head.startswith("HloModule"), name
+
+    def test_flops_recorded(self, manifest):
+        for name, entry in manifest["artifacts"].items():
+            assert entry["flops_per_call"] > 0, name

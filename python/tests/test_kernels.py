@@ -1,0 +1,337 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes (including non-tile-multiples, which exercise the
+padding paths) and seeds; fixed-shape tests pin down the exact configurations
+the AOT artifacts use.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    batched_operator,
+    batched_operator_flops,
+    matmul,
+    matmul_flops,
+    nbody_acc,
+    nbody_flops,
+)
+from compile.kernels.ref import (
+    batched_operator_ref,
+    matmul_ref,
+    nbody_acc_ref,
+)
+
+HYP = dict(max_examples=25, deadline=None)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+class TestMatmul:
+    def test_exact_tile_multiple(self):
+        x, w = _rand(0, (128, 256)), _rand(1, (256, 128))
+        np.testing.assert_allclose(
+            matmul(x, w), matmul_ref(x, w), rtol=1e-5, atol=1e-5
+        )
+
+    def test_needs_padding_all_dims(self):
+        x, w = _rand(2, (65, 130)), _rand(3, (130, 5))
+        np.testing.assert_allclose(
+            matmul(x, w), matmul_ref(x, w), rtol=1e-5, atol=1e-5
+        )
+
+    def test_single_row_col(self):
+        x, w = _rand(4, (1, 7)), _rand(5, (7, 1))
+        np.testing.assert_allclose(
+            matmul(x, w), matmul_ref(x, w), rtol=1e-5, atol=1e-5
+        )
+
+    def test_dense_layer_shapes_from_models(self):
+        # the exact shapes the MNIST/CIFAR artifacts run through the kernel
+        for m, k, n in [(64, 3136, 512), (64, 512, 10), (32, 2304, 384)]:
+            x, w = _rand(6, (m, k)), _rand(7, (k, n))
+            np.testing.assert_allclose(
+                matmul(x, w), matmul_ref(x, w), rtol=2e-4, atol=2e-4
+            )
+
+    def test_small_tiles_multi_k_step(self):
+        x, w = _rand(8, (32, 96)), _rand(9, (96, 16))
+        got = matmul(x, w, 8, 16, 8)  # forces a 6-step K loop
+        np.testing.assert_allclose(got, matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+    def test_grad_matches_reference(self):
+        x, w = _rand(10, (16, 24)), _rand(11, (24, 12))
+        c = _rand(12, (16, 12))
+
+        def f_kernel(x, w):
+            return jnp.sum(matmul(x, w, 8, 8, 8) * c)
+
+        def f_ref(x, w):
+            return jnp.sum(matmul_ref(x, w) * c)
+
+        gx_k, gw_k = jax.grad(f_kernel, argnums=(0, 1))(x, w)
+        gx_r, gw_r = jax.grad(f_ref, argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(gx_k, gx_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(gw_k, gw_r, rtol=1e-5, atol=1e-5)
+
+    def test_under_jit(self):
+        x, w = _rand(13, (40, 40)), _rand(14, (40, 40))
+        got = jax.jit(lambda a, b: matmul(a, b, 16, 16, 16))(x, w)
+        np.testing.assert_allclose(got, matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+    def test_zero_inputs(self):
+        x = jnp.zeros((9, 9), jnp.float32)
+        w = jnp.zeros((9, 9), jnp.float32)
+        assert jnp.all(matmul(x, w, 8, 8, 8) == 0)
+
+    @given(
+        m=st.integers(1, 48),
+        k=st.integers(1, 48),
+        n=st.integers(1, 48),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(**HYP)
+    def test_hypothesis_shapes(self, m, k, n, seed):
+        kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(kx, (m, k), jnp.float32)
+        w = jax.random.normal(kw, (k, n), jnp.float32)
+        np.testing.assert_allclose(
+            matmul(x, w, 16, 16, 16), matmul_ref(x, w), rtol=1e-4, atol=1e-4
+        )
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(**HYP)
+    def test_hypothesis_f64(self, seed):
+        kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(kx, (17, 23), jnp.float64)
+        w = jax.random.normal(kw, (23, 11), jnp.float64)
+        np.testing.assert_allclose(
+            matmul(x, w, 8, 8, 8), matmul_ref(x, w), rtol=1e-12, atol=1e-12
+        )
+
+    def test_flops_accounting(self):
+        assert matmul_flops(2, 3, 4) == 48
+
+
+# ---------------------------------------------------------------------------
+# n-body
+# ---------------------------------------------------------------------------
+
+
+def _plummer(seed, n, dtype=jnp.float64):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    pos = jax.random.normal(k1, (n, 3), dtype)
+    mass = jax.random.uniform(k2, (n,), dtype, 0.5, 1.5)
+    return jnp.concatenate([pos, mass[:, None]], axis=1)
+
+
+class TestNbody:
+    @pytest.mark.parametrize("n", [1, 3, 17, 64, 256, 300])
+    def test_matches_oracle(self, n):
+        p = _plummer(0, n)
+        got = nbody_acc(p, ti=64, tj=64)
+        np.testing.assert_allclose(
+            got, nbody_acc_ref(p), rtol=1e-10, atol=1e-10
+        )
+
+    def test_artifact_configuration(self):
+        # exact shape/tiles the nbody_step artifact lowers with
+        p = _plummer(1, 1024)
+        np.testing.assert_allclose(
+            nbody_acc(p), nbody_acc_ref(p), rtol=1e-10, atol=1e-10
+        )
+
+    def test_f32(self):
+        p = _plummer(2, 128, jnp.float32)
+        np.testing.assert_allclose(
+            nbody_acc(p, ti=32, tj=32), nbody_acc_ref(p), rtol=1e-4, atol=1e-4
+        )
+
+    def test_newton_third_law(self):
+        # total force sum_i m_i a_i = 0 for pair-symmetric softening
+        p = _plummer(3, 200)
+        a = nbody_acc(p, ti=64, tj=64)
+        total = jnp.sum(p[:, 3:4] * a, axis=0)
+        np.testing.assert_allclose(total, jnp.zeros(3), atol=1e-9)
+
+    def test_two_body_analytic(self):
+        # two unit masses at distance 2 along x: |a| = 1/(4+eps^2)^1.5
+        p = jnp.array(
+            [[-1.0, 0, 0, 1.0], [1.0, 0, 0, 1.0]], jnp.float64
+        )
+        a = nbody_acc(p, ti=8, tj=8)
+        expect = (4.0 + 1e-6) ** -1.5 * 2.0  # d = 2 along x
+        np.testing.assert_allclose(a[0, 0], expect, rtol=1e-12)
+        np.testing.assert_allclose(a[1, 0], -expect, rtol=1e-12)
+        np.testing.assert_allclose(a[:, 1:], jnp.zeros((2, 2)), atol=1e-15)
+
+    def test_massless_body_exerts_nothing(self):
+        p = _plummer(4, 32)
+        ghost = jnp.array([[5.0, 5.0, 5.0, 0.0]], jnp.float64)
+        a_without = nbody_acc_ref(p)
+        a_with = nbody_acc(jnp.concatenate([p, ghost]), ti=16, tj=16)[:-1]
+        np.testing.assert_allclose(a_with, a_without, rtol=1e-10, atol=1e-12)
+
+    @given(n=st.integers(2, 130), seed=st.integers(0, 2**31 - 1))
+    @settings(**HYP)
+    def test_hypothesis_sizes(self, n, seed):
+        p = _plummer(seed % 1000, n)
+        np.testing.assert_allclose(
+            nbody_acc(p, ti=32, tj=32),
+            nbody_acc_ref(p),
+            rtol=1e-9,
+            atol=1e-9,
+        )
+
+    def test_flops_accounting(self):
+        assert nbody_flops(1000) == 20 * 1000 * 1000
+
+
+# ---------------------------------------------------------------------------
+# batched operator (PyFR)
+# ---------------------------------------------------------------------------
+
+
+class TestBatchedOperator:
+    @pytest.mark.parametrize(
+        "e,q,p,v", [(1, 2, 2, 1), (7, 8, 8, 4), (512, 8, 8, 4), (1000, 4, 6, 5)]
+    )
+    def test_matches_oracle(self, e, q, p, v):
+        op = _rand(0, (q, p))
+        u = _rand(1, (e, p, v))
+        np.testing.assert_allclose(
+            batched_operator(op, u, 64),
+            batched_operator_ref(op, u),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    def test_artifact_configuration(self):
+        op = _rand(2, (8, 8))
+        u = _rand(3, (2048, 8, 4))
+        np.testing.assert_allclose(
+            batched_operator(op, u),
+            batched_operator_ref(op, u),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    def test_identity_operator(self):
+        u = _rand(4, (33, 6, 3))
+        got = batched_operator(jnp.eye(6), u, 16)
+        np.testing.assert_allclose(got, u, rtol=1e-6, atol=1e-6)
+
+    def test_linearity(self):
+        op = _rand(5, (4, 4))
+        u1, u2 = _rand(6, (20, 4, 2)), _rand(7, (20, 4, 2))
+        lhs = batched_operator(op, 2.0 * u1 + 3.0 * u2, 8)
+        rhs = 2.0 * batched_operator(op, u1, 8) + 3.0 * batched_operator(
+            op, u2, 8
+        )
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-5)
+
+    def test_grad_matches_reference(self):
+        op = _rand(8, (5, 4))
+        u = _rand(9, (12, 4, 3))
+        c = _rand(10, (12, 5, 3))
+
+        def f_kernel(op, u):
+            return jnp.sum(batched_operator(op, u, 8) * c)
+
+        def f_ref(op, u):
+            return jnp.sum(batched_operator_ref(op, u) * c)
+
+        gop_k, gu_k = jax.grad(f_kernel, argnums=(0, 1))(op, u)
+        gop_r, gu_r = jax.grad(f_ref, argnums=(0, 1))(op, u)
+        np.testing.assert_allclose(gop_k, gop_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(gu_k, gu_r, rtol=1e-5, atol=1e-5)
+
+    @given(
+        e=st.integers(1, 80),
+        q=st.integers(1, 12),
+        p=st.integers(1, 12),
+        v=st.integers(1, 6),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(**HYP)
+    def test_hypothesis_shapes(self, e, q, p, v, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        op = jax.random.normal(k1, (q, p), jnp.float32)
+        u = jax.random.normal(k2, (e, p, v), jnp.float32)
+        np.testing.assert_allclose(
+            batched_operator(op, u, 32),
+            batched_operator_ref(op, u),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_flops_accounting(self):
+        assert batched_operator_flops(10, 2, 3, 4) == 480
+
+
+# ---------------------------------------------------------------------------
+# cross-kernel edge cases
+# ---------------------------------------------------------------------------
+
+
+class TestTileGeometry:
+    @given(
+        tm=st.sampled_from([8, 16, 32]),
+        tk=st.sampled_from([8, 16, 32]),
+        tn=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(**HYP)
+    def test_matmul_rectangular_tiles(self, tm, tk, tn, seed):
+        kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(kx, (37, 53), jnp.float32)
+        w = jax.random.normal(kw, (53, 29), jnp.float32)
+        np.testing.assert_allclose(
+            matmul(x, w, tm, tk, tn), matmul_ref(x, w), rtol=1e-4, atol=1e-4
+        )
+
+    def test_nbody_asymmetric_tiles(self):
+        p = _plummer(9, 100)
+        np.testing.assert_allclose(
+            nbody_acc(p, ti=16, tj=64),
+            nbody_acc_ref(p),
+            rtol=1e-9,
+            atol=1e-9,
+        )
+        np.testing.assert_allclose(
+            nbody_acc(p, ti=64, tj=16),
+            nbody_acc_ref(p),
+            rtol=1e-9,
+            atol=1e-9,
+        )
+
+    def test_flux_tile_larger_than_batch(self):
+        op = _rand(20, (6, 6))
+        u = _rand(21, (5, 6, 2))  # e=5 < te=64: whole batch in one step
+        np.testing.assert_allclose(
+            batched_operator(op, u, 64),
+            batched_operator_ref(op, u),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    def test_matmul_tile_exceeding_matrix(self):
+        x, w = _rand(22, (10, 10)), _rand(23, (10, 10))
+        got = matmul(x, w, 128, 128, 128)  # full pad-up path
+        np.testing.assert_allclose(got, matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+    def test_matmul_extreme_aspect_ratio(self):
+        x, w = _rand(24, (1, 300)), _rand(25, (300, 2))
+        np.testing.assert_allclose(
+            matmul(x, w, 8, 64, 8), matmul_ref(x, w), rtol=1e-4, atol=1e-4
+        )

@@ -1,0 +1,160 @@
+"""L2 model tests: shapes, train-step semantics, physics invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def _synthetic_mnist(seed, batch):
+    """Class-separable synthetic digits: class-k blob at a class-specific spot."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, 10, size=batch)
+    x = rng.normal(0, 0.1, size=(batch, 28, 28, 1)).astype(np.float32)
+    for i, cls in enumerate(y):
+        r, c = 4 + 2 * (cls % 5), 6 + 3 * (cls // 5)
+        x[i, r : r + 6, c : c + 6, 0] += 1.0
+    return jnp.asarray(x), jnp.asarray(y, jnp.int32)
+
+
+def _synthetic_cifar(seed, batch):
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, 10, size=batch)
+    x = rng.normal(0, 0.1, size=(batch, 24, 24, 3)).astype(np.float32)
+    for i, cls in enumerate(y):
+        x[i, :, :, cls % 3] += 0.3 + 0.15 * cls
+    return jnp.asarray(x), jnp.asarray(y, jnp.int32)
+
+
+class TestMnist:
+    def test_apply_shape(self):
+        params = model.mnist_init(jax.random.PRNGKey(0))
+        x, _ = _synthetic_mnist(0, model.MNIST_BATCH)
+        logits = model.mnist_apply(params, x)
+        assert logits.shape == (model.MNIST_BATCH, 10)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_param_shapes_match_declaration(self):
+        params = model.mnist_init(jax.random.PRNGKey(1))
+        assert len(params) == len(model.MNIST_PARAM_SHAPES)
+        for p, (_, s) in zip(params, model.MNIST_PARAM_SHAPES):
+            assert p.shape == s
+
+    def test_train_step_reduces_loss(self):
+        params = model.mnist_init(jax.random.PRNGKey(2))
+        x, y = _synthetic_mnist(1, model.MNIST_BATCH)
+        step = jax.jit(model.mnist_train_step)
+        losses = []
+        for _ in range(8):
+            out = step(*params, x, y)
+            params, loss = out[:-1], out[-1]
+            losses.append(float(loss))
+        assert losses[-1] < losses[0], losses
+        assert all(np.isfinite(losses))
+
+    def test_train_step_output_arity(self):
+        params = model.mnist_init(jax.random.PRNGKey(3))
+        x, y = _synthetic_mnist(2, model.MNIST_BATCH)
+        out = model.mnist_train_step(*params, x, y)
+        assert len(out) == len(params) + 1
+        for new_p, old_p in zip(out[:-1], params):
+            assert new_p.shape == old_p.shape
+            assert new_p.dtype == old_p.dtype
+
+    def test_loss_is_chance_at_init_bias_zero(self):
+        # zero-weight params -> uniform logits -> loss = ln(10)
+        params = tuple(jnp.zeros_like(p) for p in model.mnist_init(jax.random.PRNGKey(4)))
+        x, y = _synthetic_mnist(3, model.MNIST_BATCH)
+        loss = model.mnist_loss(params, x, y)
+        np.testing.assert_allclose(float(loss), np.log(10.0), rtol=1e-5)
+
+
+class TestCifar:
+    def test_apply_shape(self):
+        params = model.cifar_init(jax.random.PRNGKey(0))
+        x, _ = _synthetic_cifar(0, model.CIFAR_BATCH)
+        logits = model.cifar_apply(params, x)
+        assert logits.shape == (model.CIFAR_BATCH, 10)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_train_step_reduces_loss(self):
+        params = model.cifar_init(jax.random.PRNGKey(1))
+        x, y = _synthetic_cifar(1, model.CIFAR_BATCH)
+        step = jax.jit(model.cifar_train_step)
+        out = step(*params, x, y)
+        first = float(out[-1])
+        params = out[:-1]
+        for _ in range(6):
+            out = step(*params, x, y)
+            params = out[:-1]
+        assert float(out[-1]) < first
+
+    def test_flops_positive_and_scale_with_batch(self):
+        assert model.cifar_flops_per_step(64) == 2 * model.cifar_flops_per_step(32)
+
+
+class TestNbodyStep:
+    def _state(self, seed, n=256):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        pos = jax.random.normal(k1, (n, 3), jnp.float64)
+        mass = jax.random.uniform(k2, (n,), jnp.float64, 0.5, 1.5)
+        vel = 0.1 * jax.random.normal(k3, (n, 3), jnp.float64)
+        return jnp.concatenate([pos, mass[:, None]], axis=1), vel
+
+    def test_shapes_and_mass_preserved(self):
+        pos4, vel = self._state(0)
+        np4, nv, proxy = model.nbody_step(pos4, vel, jnp.float64(1e-3))
+        assert np4.shape == pos4.shape and nv.shape == vel.shape
+        np.testing.assert_array_equal(np4[:, 3], pos4[:, 3])
+        assert proxy.shape == ()
+
+    def test_momentum_conserved(self):
+        pos4, vel = self._state(1)
+        m = pos4[:, 3:4]
+        p0 = jnp.sum(m * vel, axis=0)
+        _, nv, _ = model.nbody_step(pos4, vel, jnp.float64(1e-3))
+        p1 = jnp.sum(m * nv, axis=0)
+        np.testing.assert_allclose(p1, p0, atol=1e-10)
+
+    def test_zero_dt_is_identity_on_velocity(self):
+        pos4, vel = self._state(2)
+        np4, nv, _ = model.nbody_step(pos4, vel, jnp.float64(0.0))
+        np.testing.assert_allclose(nv, vel, atol=0)
+        np.testing.assert_allclose(np4[:, :3], pos4[:, :3], atol=0)
+
+
+class TestPyfrStep:
+    def test_shapes(self):
+        u = jax.random.normal(jax.random.PRNGKey(0), (128, 8, 4), jnp.float32)
+        op = jax.random.normal(jax.random.PRNGKey(1), (8, 8), jnp.float32) * 0.1
+        un, res = model.pyfr_step(u, op, jnp.float32(1e-3))
+        assert un.shape == u.shape
+        assert res.shape == ()
+        assert bool(jnp.isfinite(res))
+
+    def test_zero_dt_identity(self):
+        u = jax.random.normal(jax.random.PRNGKey(2), (64, 8, 4), jnp.float32)
+        op = jax.random.normal(jax.random.PRNGKey(3), (8, 8), jnp.float32)
+        un, _ = model.pyfr_step(u, op, jnp.float32(0.0))
+        np.testing.assert_allclose(un, u, atol=0)
+
+    def test_constant_state_with_null_row_operator(self):
+        # operator with zero row sums annihilates constant fluxes:
+        # f(u)=const per element -> du = op @ const = 0 when rows sum to 0
+        op = jax.random.normal(jax.random.PRNGKey(4), (8, 8), jnp.float32)
+        op = op - jnp.mean(op, axis=1, keepdims=True)
+        u = jnp.ones((32, 8, 4), jnp.float32) * 2.0
+        un, res = model.pyfr_step(u, op, jnp.float32(1e-2))
+        np.testing.assert_allclose(un, u, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(float(res), 0.0, atol=1e-5)
+
+    def test_residual_matches_manual(self):
+        u = jax.random.normal(jax.random.PRNGKey(5), (16, 8, 4), jnp.float32)
+        op = jax.random.normal(jax.random.PRNGKey(6), (8, 8), jnp.float32)
+        _, res = model.pyfr_step(u, op, jnp.float32(1e-3))
+        du = jnp.einsum("qp,epv->eqv", op, model.pyfr_flux(u))
+        np.testing.assert_allclose(
+            float(res), float(jnp.sqrt(jnp.mean(du * du))), rtol=1e-5
+        )

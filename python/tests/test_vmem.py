@@ -1,0 +1,47 @@
+"""L1 structural performance: every production kernel configuration must
+fit VMEM with double-buffering headroom and keep the compute units fed."""
+
+from compile import vmem
+
+
+class TestVmemBudgets:
+    def test_all_production_configs_fit_vmem(self):
+        for fp in vmem.all_footprints():
+            assert fp.vmem_fraction < 0.5, (
+                f"{fp.name} ({fp.config}) uses {fp.vmem_fraction:.0%} of "
+                "VMEM — no headroom for double buffering"
+            )
+
+    def test_matmul_tiles_are_mxu_aligned(self):
+        fp = vmem.matmul_footprint()
+        assert fp.mxu_utilization == 1.0  # full 128x128 systolic fill
+
+    def test_matmul_footprint_scales_with_tiles(self):
+        small = vmem.matmul_footprint(64, 64, 64)
+        big = vmem.matmul_footprint(256, 256, 256)
+        assert big.vmem_bytes == 16 * small.vmem_bytes
+        assert small.mxu_utilization < 1.0  # 64-tiles underfill the MXU
+
+    def test_nbody_dominated_by_displacement_intermediate(self):
+        fp = vmem.nbody_footprint()
+        disp = 256 * 256 * 3 * 8
+        assert fp.vmem_bytes > disp  # intermediate accounted for
+        assert fp.vmem_fraction < 0.25
+
+    def test_nbody_tile_growth_is_quadratic(self):
+        fp1 = vmem.nbody_footprint(ti=128, tj=128)
+        fp2 = vmem.nbody_footprint(ti=512, tj=512)
+        # the (TI, TJ) intermediates dominate -> ~16x
+        assert 10 < fp2.vmem_bytes / fp1.vmem_bytes < 17
+
+    def test_flux_batch_keeps_mxu_fed(self):
+        fp = vmem.flux_footprint()
+        # batched-as-GEMM fill: tiny per-element GEMMs still fill the lane
+        # dimension when the batch is blocked in
+        assert fp.mxu_utilization > 0.0
+        assert fp.vmem_fraction < 0.05
+
+    def test_render_prints_all_kernels(self):
+        out = vmem.render()
+        for name in ["matmul", "nbody", "batched_operator"]:
+            assert name in out

@@ -1,0 +1,72 @@
+//! Fig. 3 — Pynamic on Piz Daint: start-up, import and visit times,
+//! running natively on Lustre vs from a Shifter loop-mounted container,
+//! across MPI job sizes 48…3072 (mean ± std over 30 runs).
+//!
+//! The paper reports the figure only (no numeric table); the shape that
+//! must hold: native grows ~linearly with ranks (MDS saturation) while
+//! Shifter stays nearly flat, with a large gap at 3072 ranks.
+
+use shifter_rs::apps::pynamic::{self, Mode, FIG3_RANKS};
+use shifter_rs::metrics::Table;
+use shifter_rs::SystemProfile;
+
+fn main() {
+    let pd = SystemProfile::piz_daint();
+
+    let mut t = Table::new(
+        "Fig 3: Pynamic on Piz Daint (seconds, mean ± std of 30 runs)",
+        &[
+            "ranks",
+            "nat-startup",
+            "nat-import",
+            "nat-visit",
+            "shf-startup",
+            "shf-import",
+            "shf-visit",
+            "speedup",
+        ],
+    );
+
+    let fmt = |s: &shifter_rs::metrics::Stats| format!("{:.1}±{:.1}", s.mean, s.std);
+    let mut native_imports = Vec::new();
+    let mut shifter_imports = Vec::new();
+    for &ranks in &FIG3_RANKS {
+        let nat = pynamic::run(&pd, ranks, Mode::Native);
+        let shf = pynamic::run(&pd, ranks, Mode::Shifter);
+        t.row(&[
+            ranks.to_string(),
+            fmt(&nat.startup),
+            fmt(&nat.import),
+            fmt(&nat.visit),
+            fmt(&shf.startup),
+            fmt(&shf.import),
+            fmt(&shf.visit),
+            format!("{:.1}x", nat.total_mean() / shf.total_mean()),
+        ]);
+        native_imports.push(nat.import.mean);
+        shifter_imports.push(shf.import.mean);
+    }
+    print!("{}", t.render());
+
+    // shape assertions
+    let n_first = native_imports[0];
+    let n_last = *native_imports.last().unwrap();
+    assert!(
+        n_last > 8.0 * n_first,
+        "native import must grow with ranks: {n_first} -> {n_last}"
+    );
+    let s_first = shifter_imports[0];
+    let s_last = *shifter_imports.last().unwrap();
+    assert!(
+        s_last < 1.5 * s_first,
+        "shifter import must stay flat: {s_first} -> {s_last}"
+    );
+    assert!(n_last > 5.0 * s_last, "gap at 3072 ranks");
+    println!(
+        "shape holds: native import grows {:.0}x over the sweep, shifter {:.2}x; \
+         {:.0}x faster at 3072 ranks ✓",
+        n_last / n_first,
+        s_last / s_first,
+        n_last / s_last
+    );
+}

@@ -1,0 +1,89 @@
+//! Shared harness for the Table III / Table IV OSU latency benches.
+
+use shifter_rs::apps::osu::{self, LatencyRow};
+use shifter_rs::fabric::OSU_SIZES;
+use shifter_rs::metrics::Table;
+use shifter_rs::shifter::{RunOptions, ShifterRuntime};
+use shifter_rs::{ImageGateway, Registry, SystemProfile};
+
+pub const CONTAINERS: [(&str, &str); 3] = [
+    ("A", "osu-benchmarks:mpich-3.1.4"),
+    ("B", "osu-benchmarks:mvapich2-2.2"),
+    ("C", "osu-benchmarks:intelmpi-2017.1"),
+];
+
+pub struct OsuTableResult {
+    pub native: Vec<LatencyRow>,
+    /// per container: (enabled ratios, disabled ratios)
+    pub containers: Vec<(Vec<f64>, Vec<f64>)>,
+}
+
+/// Run the full table protocol on one system.
+pub fn run_system(profile: &SystemProfile) -> OsuTableResult {
+    let registry = Registry::dockerhub();
+    let mut gateway = ImageGateway::new(profile.pfs.clone().unwrap());
+    for (_, image) in CONTAINERS {
+        gateway.pull(&registry, image).unwrap();
+    }
+    let runtime = ShifterRuntime::new(profile);
+    let native = osu::run_native(profile);
+
+    let mut containers = Vec::new();
+    for (tag, image) in CONTAINERS {
+        let c_on = runtime
+            .run(&gateway, &RunOptions::new(image, &["osu_latency"]).with_mpi())
+            .unwrap();
+        assert!(c_on.mpi.is_some(), "swap must succeed for {image}");
+        let on = osu::run_container(profile, &c_on, &format!("{tag}-enabled"));
+        let c_off = runtime
+            .run(&gateway, &RunOptions::new(image, &["osu_latency"]))
+            .unwrap();
+        assert!(c_off.mpi.is_none());
+        let off = osu::run_container(profile, &c_off, &format!("{tag}-disabled"));
+        containers.push((osu::relative(&on, &native), osu::relative(&off, &native)));
+    }
+    OsuTableResult { native, containers }
+}
+
+/// Render the paper-shaped table.
+pub fn render(title: &str, result: &OsuTableResult) -> String {
+    let mut t = Table::new(
+        title,
+        &[
+            "Size", "Native", "A-on", "B-on", "C-on", "A-off", "B-off", "C-off",
+        ],
+    );
+    for (i, &size) in OSU_SIZES.iter().enumerate() {
+        t.row(&[
+            osu::size_label(size),
+            format!("{:.1}", result.native[i].best_us),
+            format!("{:.2}", result.containers[0].0[i]),
+            format!("{:.2}", result.containers[1].0[i]),
+            format!("{:.2}", result.containers[2].0[i]),
+            format!("{:.1}", result.containers[0].1[i]),
+            format!("{:.1}", result.containers[1].1[i]),
+            format!("{:.1}", result.containers[2].1[i]),
+        ]);
+    }
+    t.render()
+}
+
+/// The shape that must hold: enabled ≈ 1.0, disabled within band.
+pub fn assert_shape(result: &OsuTableResult, disabled_band: (f64, f64)) {
+    for (on, off) in &result.containers {
+        for (i, r) in on.iter().enumerate() {
+            assert!(
+                (0.88..1.15).contains(r),
+                "enabled ratio out of band at size {}: {r}",
+                OSU_SIZES[i]
+            );
+        }
+        for (i, r) in off.iter().enumerate() {
+            assert!(
+                (disabled_band.0..disabled_band.1).contains(r),
+                "disabled ratio out of band at size {}: {r}",
+                OSU_SIZES[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! Table I — containerized TensorFlow run times (seconds) for MNIST and
+//! CIFAR-10 on all three test systems, plus a real-substrate check: a
+//! short genuine training run through the AOT artifacts.
+//!
+//! Paper values: MNIST 613 / 105 / 36, CIFAR-10 23359 / 8905 / 6246.
+
+use shifter_rs::apps::tf_trainer::{self, TfWorkload};
+use shifter_rs::gpu::GpuModel;
+use shifter_rs::metrics::Table;
+use shifter_rs::runtime::Executor;
+
+fn main() {
+    let boards = [
+        ("Laptop", GpuModel::quadro_k110m()),
+        ("Cluster", GpuModel::tesla_k40m()),
+        ("Piz Daint", GpuModel::tesla_p100()),
+    ];
+    let paper: [(&str, [f64; 3]); 2] = [
+        ("MNIST", [613.0, 105.0, 36.0]),
+        ("CIFAR-10", [23359.0, 8905.0, 6246.0]),
+    ];
+
+    let mut t = Table::new(
+        "Table I: containerized TensorFlow run times (s)",
+        &["workload", "system", "paper", "measured", "ratio"],
+    );
+    let mut worst: f64 = 0.0;
+    for (wl, (name, paper_row)) in
+        [TfWorkload::Mnist, TfWorkload::Cifar10].iter().zip(paper)
+    {
+        for ((sys, board), p) in boards.iter().zip(paper_row) {
+            let m = tf_trainer::train_time_secs(*wl, board);
+            worst = worst.max((m / p - 1.0).abs());
+            t.row(&[
+                name.to_string(),
+                sys.to_string(),
+                format!("{p:.0}"),
+                format!("{m:.0}"),
+                format!("{:.3}", m / p),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    println!("max deviation from paper: {:.1}%", worst * 100.0);
+
+    // ordering assertion (the shape that must hold)
+    for wl in [TfWorkload::Mnist, TfWorkload::Cifar10] {
+        let times: Vec<f64> = boards
+            .iter()
+            .map(|(_, b)| tf_trainer::train_time_secs(wl, b))
+            .collect();
+        assert!(times[2] < times[1] && times[1] < times[0], "{wl:?}");
+    }
+
+    // real-substrate check (skipped if artifacts are not built)
+    if let Ok(ex) = Executor::new(shifter_rs::runtime::default_artifact_dir()) {
+        println!("\nreal-substrate check (PJRT CPU, 10 steps each):");
+        for wl in [TfWorkload::Mnist, TfWorkload::Cifar10] {
+            let start = std::time::Instant::now();
+            let rep = tf_trainer::run_real_training(&ex, wl, 10, 7).unwrap();
+            println!(
+                "  {:<9} loss {:.3} -> {:.3} ({}), {:.2} GF/s, {:.1}s",
+                wl.name(),
+                rep.first_loss(),
+                rep.last_loss(),
+                if rep.loss_decreased() { "ok" } else { "FLAT" },
+                rep.cpu_gflops,
+                start.elapsed().as_secs_f64(),
+            );
+        }
+    } else {
+        println!("\n(artifacts/ not built — run `make artifacts` for the real-substrate check)");
+    }
+}

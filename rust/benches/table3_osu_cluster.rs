@@ -1,0 +1,31 @@
+//! Table III — OSU latency on the Linux Cluster: native MVAPICH2 2.1 over
+//! EDR InfiniBand vs containers A/B/C with Shifter MPI support enabled and
+//! disabled. Paper: enabled 0.98–1.08, disabled ~15–50x.
+
+mod osu_common;
+
+use shifter_rs::SystemProfile;
+
+fn main() {
+    let cl = SystemProfile::linux_cluster();
+    let result = osu_common::run_system(&cl);
+    print!(
+        "{}",
+        osu_common::render(
+            "Table III: OSU_latency on the Linux Cluster (ratios vs native)",
+            &result
+        )
+    );
+    osu_common::assert_shape(&result, (12.0, 55.0));
+    println!("shape holds: enabled ≈ 1.0x, disabled 15–50x (paper Table III) ✓");
+
+    // paper's native column for reference
+    let paper_native = [1.2, 1.3, 1.8, 2.4, 4.5, 12.1, 56.8, 141.5, 480.8];
+    let max_dev = result
+        .native
+        .iter()
+        .zip(paper_native)
+        .map(|(r, p)| (r.best_us / p - 1.0).abs())
+        .fold(0.0f64, f64::max);
+    println!("native column max deviation from paper: {:.1}%", max_dev * 100.0);
+}

@@ -1,0 +1,30 @@
+//! Table IV — OSU latency on Piz Daint: native Cray MPT 7.5.0 over Aries
+//! vs containers A/B/C with Shifter MPI support enabled and disabled.
+//! Paper: enabled 0.98–1.06, disabled 1.4–6.2x.
+
+mod osu_common;
+
+use shifter_rs::SystemProfile;
+
+fn main() {
+    let pd = SystemProfile::piz_daint();
+    let result = osu_common::run_system(&pd);
+    print!(
+        "{}",
+        osu_common::render(
+            "Table IV: OSU_latency on Piz Daint (ratios vs native)",
+            &result
+        )
+    );
+    osu_common::assert_shape(&result, (1.2, 7.0));
+    println!("shape holds: enabled ≈ 1.0x, disabled 1.4–6.2x (paper Table IV) ✓");
+
+    let paper_native = [1.1, 1.1, 1.1, 1.6, 4.1, 6.5, 16.4, 56.1, 215.7];
+    let max_dev = result
+        .native
+        .iter()
+        .zip(paper_native)
+        .map(|(r, p)| (r.best_us / p - 1.0).abs())
+        .fold(0.0f64, f64::max);
+    println!("native column max deviation from paper: {:.1}%", max_dev * 100.0);
+}

@@ -1,0 +1,10 @@
+//! Containerized application models (DESIGN.md S14) — the five workloads
+//! of the paper's evaluation: TensorFlow trainers (Table I), PyFR
+//! (Table II), OSU micro-benchmarks (Tables III/IV), the CUDA SDK n-body
+//! simulation (Table V) and Pynamic (Fig. 3).
+
+pub mod nbody;
+pub mod osu;
+pub mod pyfr;
+pub mod pynamic;
+pub mod tf_trainer;

@@ -1,0 +1,163 @@
+//! OSU Micro-Benchmarks model (§V.C.1, Tables III/IV): osu_latency
+//! ping-pong between two ranks on two nodes, best of 30 repetitions.
+//!
+//! Three run modes per system:
+//!  * native        — the benchmark built against the host MPI;
+//!  * enabled       — container run with Shifter MPI support (library
+//!                    swapped, vendor transport visible);
+//!  * disabled      — container run without the swap: "the containerized
+//!                    application does not benefit from the hardware
+//!                    acceleration" and falls back to TCP.
+
+use crate::fabric::OSU_SIZES;
+use crate::hostenv::SystemProfile;
+use crate::metrics::{repeat, Stats};
+use crate::mpi::{Communicator, MpiImpl};
+use crate::shifter::Container;
+use crate::util::prng::Rng;
+
+/// One table row: message size + best one-way latency (µs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyRow {
+    pub size: u64,
+    pub best_us: f64,
+    pub stats: Stats,
+}
+
+/// Run osu_latency for `mpi` on `profile`'s fabric: 30 reps per size,
+/// best-of protocol. `tag` keys the deterministic noise stream.
+pub fn osu_latency(
+    profile: &SystemProfile,
+    mpi: &MpiImpl,
+    tag: &str,
+) -> Vec<LatencyRow> {
+    OSU_SIZES
+        .iter()
+        .map(|&size| {
+            let comm = Communicator::new(mpi, profile.fabric, 2);
+            let stats = repeat(|rep| {
+                let mut rng = Rng::from_tags(&[
+                    "osu",
+                    profile.name,
+                    tag,
+                    &size.to_string(),
+                    &rep.to_string(),
+                ]);
+                comm.osu_latency_sample_us(size, &mut rng)
+            });
+            LatencyRow {
+                size,
+                best_us: stats.best,
+                stats,
+            }
+        })
+        .collect()
+}
+
+/// Native rows: benchmark linked against the host MPI.
+pub fn run_native(profile: &SystemProfile) -> Vec<LatencyRow> {
+    osu_latency(profile, &profile.host_mpi, "native")
+}
+
+/// Containerized rows: the effective MPI is whatever the Shifter run left
+/// the container with (host library if support was enabled, the image's
+/// own TCP build otherwise).
+pub fn run_container(
+    profile: &SystemProfile,
+    container: &Container,
+    tag: &str,
+) -> Vec<LatencyRow> {
+    let mpi = container
+        .effective_mpi(profile)
+        .expect("osu image carries an MPI");
+    osu_latency(profile, &mpi, tag)
+}
+
+/// Relative-performance column: container latency / native latency per
+/// size (the paper's A/B/C columns).
+pub fn relative(container: &[LatencyRow], native: &[LatencyRow]) -> Vec<f64> {
+    container
+        .iter()
+        .zip(native)
+        .map(|(c, n)| c.best_us / n.best_us)
+        .collect()
+}
+
+/// Format a size the way the paper's tables label rows (32, 2K, 2M…).
+pub fn size_label(size: u64) -> String {
+    if size >= 1024 * 1024 {
+        format!("{}M", size / (1024 * 1024))
+    } else if size >= 1024 {
+        format!("{}K", size / 1024)
+    } else {
+        size.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hostenv::SystemProfile;
+    use crate::mpi::MpiImpl;
+
+    #[test]
+    fn native_best_tracks_calibration_table() {
+        let cl = SystemProfile::linux_cluster();
+        let rows = run_native(&cl);
+        assert_eq!(rows.len(), 9);
+        // best-of-30 squeezes below the model value but stays within noise
+        let row32 = &rows[0];
+        assert!(row32.size == 32);
+        assert!((row32.best_us / 1.2 - 1.0).abs() < 0.15, "{}", row32.best_us);
+        let row2m = rows.last().unwrap();
+        assert!((row2m.best_us / 480.8 - 1.0).abs() < 0.15);
+    }
+
+    #[test]
+    fn enabled_container_matches_native_within_noise() {
+        let daint = SystemProfile::piz_daint();
+        let native = run_native(&daint);
+        // an enabled container's effective MPI IS the host MPI
+        let cont = osu_latency(&daint, &daint.host_mpi, "containerA");
+        for (r, sz) in relative(&cont, &native).iter().zip(OSU_SIZES) {
+            assert!((0.9..1.12).contains(r), "size {sz}: ratio {r}");
+        }
+    }
+
+    #[test]
+    fn disabled_container_shows_paper_slowdowns() {
+        let cl = SystemProfile::linux_cluster();
+        let native = run_native(&cl);
+        let cont =
+            osu_latency(&cl, &MpiImpl::mpich_3_1_4_container(), "disabledA");
+        let ratios = relative(&cont, &native);
+        // paper Table III disabled: 15–50x across sizes
+        for (r, sz) in ratios.iter().zip(OSU_SIZES) {
+            assert!((12.0..55.0).contains(r), "size {sz}: ratio {r}");
+        }
+
+        let daint = SystemProfile::piz_daint();
+        let native = run_native(&daint);
+        let cont =
+            osu_latency(&daint, &MpiImpl::mpich_3_1_4_container(), "disabledA");
+        // paper Table IV disabled: 1.4–6.2x
+        for (r, sz) in relative(&cont, &native).iter().zip(OSU_SIZES) {
+            assert!((1.2..7.0).contains(r), "size {sz}: ratio {r}");
+        }
+    }
+
+    #[test]
+    fn determinism() {
+        let cl = SystemProfile::linux_cluster();
+        let a = run_native(&cl);
+        let b = run_native(&cl);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn size_labels() {
+        assert_eq!(size_label(32), "32");
+        assert_eq!(size_label(2048), "2K");
+        assert_eq!(size_label(2 * 1024 * 1024), "2M");
+    }
+}

@@ -1,0 +1,267 @@
+//! PyFR flux-reconstruction solver model (§V.B.2, Table II): the T106D
+//! low-pressure turbine blade case — 114,265 hexahedral cells, single
+//! precision, dt = 9.3558e-6 s, 3,206 iterations, one MPI rank per GPU.
+//!
+//! Per-rank wall-clock = compute (device performance model, strong-scaling
+//! launch overhead included) + halo exchange (fabric model through the
+//! container's effective MPI). The solver mathematics runs for real via
+//! the `pyfr_step` artifact (`run_real_partition`).
+
+use crate::gpu::{
+    achieved_gflops_per_chip, launch_overhead_s, GpuModel, WorkloadClass,
+};
+use crate::hostenv::SystemProfile;
+use crate::mpi::{Communicator, MpiImpl};
+use crate::runtime::{ExecError, Executor, TensorValue};
+
+/// The paper's test case parameters.
+pub const T106D_CELLS: u64 = 114_265;
+pub const T106D_POINTS: u64 = 1_154_120;
+pub const T106D_ITERS: u64 = 3_206;
+pub const T106D_DT: f64 = 9.3558e-6;
+
+/// Calibrated compute demand per cell per iteration (FLOPs) — from the
+/// Daint single-GPU wall-clock (EXPERIMENTS.md records the arithmetic).
+pub const FLOPS_PER_CELL_ITER: f64 = 6.9e6;
+/// GPU kernel launches per iteration (4-stage RK, many small kernels) —
+/// this is what bends strong scaling away from ideal.
+pub const KERNEL_LAUNCHES_PER_ITER: f64 = 1400.0;
+
+/// One MPI rank's device assignment.
+#[derive(Debug, Clone)]
+pub struct RankDevice {
+    pub board: GpuModel,
+}
+
+/// A Table II run configuration.
+#[derive(Debug, Clone)]
+pub struct PyfrRun {
+    pub system: &'static str,
+    pub devices: Vec<RankDevice>,
+}
+
+impl PyfrRun {
+    /// Piz Daint: one P100 per node, `n` nodes.
+    pub fn daint(n: usize) -> PyfrRun {
+        PyfrRun {
+            system: "Piz Daint",
+            devices: vec![
+                RankDevice {
+                    board: GpuModel::tesla_p100()
+                };
+                n
+            ],
+        }
+    }
+
+    /// Linux Cluster per the paper's §V.B.2 device split:
+    /// 1 GPU: one K40m; 2 GPUs: two K40m (one per node);
+    /// 4 GPUs: two K40m + one K80 chip on each node.
+    pub fn cluster(n: usize) -> PyfrRun {
+        let devices = match n {
+            1 => vec![RankDevice {
+                board: GpuModel::tesla_k40m(),
+            }],
+            2 => vec![
+                RankDevice {
+                    board: GpuModel::tesla_k40m(),
+                },
+                RankDevice {
+                    board: GpuModel::tesla_k40m(),
+                },
+            ],
+            4 => vec![
+                RankDevice {
+                    board: GpuModel::tesla_k40m(),
+                },
+                RankDevice {
+                    board: GpuModel::tesla_k40m(),
+                },
+                RankDevice {
+                    board: GpuModel::tesla_k80(),
+                },
+                RankDevice {
+                    board: GpuModel::tesla_k80(),
+                },
+            ],
+            other => panic!("paper has no {other}-GPU cluster configuration"),
+        };
+        PyfrRun {
+            system: "Linux Cluster",
+            devices,
+        }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.devices.len()
+    }
+}
+
+/// Modeled wall-clock for the full T106D run.
+///
+/// Cells split evenly (Metis partitioning); the slowest rank bounds each
+/// iteration; the halo exchange goes through `mpi` on the system fabric.
+pub fn wallclock_secs(
+    run: &PyfrRun,
+    profile: &SystemProfile,
+    mpi: &MpiImpl,
+) -> f64 {
+    let ranks = run.ranks() as f64;
+    let cells_per_rank = T106D_CELLS as f64 / ranks;
+    // slowest rank = weakest device (per chip: one rank drives one chip)
+    let per_iter_compute = run
+        .devices
+        .iter()
+        .map(|d| {
+            let achieved = achieved_gflops_per_chip(
+                WorkloadClass::PyfrFp32,
+                &d.board,
+            ) * 1e9;
+            cells_per_rank * FLOPS_PER_CELL_ITER / achieved
+                + KERNEL_LAUNCHES_PER_ITER * launch_overhead_s(d.board.arch)
+        })
+        .fold(0.0f64, f64::max);
+
+    let per_iter_comm = if run.ranks() > 1 {
+        let comm = Communicator::new(mpi, profile.fabric, run.ranks() as u32);
+        // interface data per neighbor: ~(cells/rank)^(2/3) faces x 8
+        // points x 4 vars x 4 bytes, exchanged every RK stage
+        let msg = (cells_per_rank.powf(2.0 / 3.0) * 8.0 * 4.0 * 4.0) as u64;
+        4.0 * comm.halo_exchange_us(msg, 2) * 1e-6
+    } else {
+        0.0
+    };
+
+    T106D_ITERS as f64 * (per_iter_compute + per_iter_comm)
+}
+
+/// A real mesh-partition integration through the `pyfr_step` artifact.
+#[derive(Debug)]
+pub struct RealPyfrReport {
+    pub iters: u32,
+    pub elements: usize,
+    pub residuals: Vec<f32>,
+    pub wall_secs: f64,
+}
+
+/// Run `iters` real flux-reconstruction steps on the AOT artifact with a
+/// smooth initial condition and a conservative divergence operator.
+pub fn run_real_partition(
+    executor: &Executor,
+    iters: u32,
+) -> Result<RealPyfrReport, ExecError> {
+    let spec = executor.catalog().get("pyfr_step")?;
+    let (e, p, v) = (
+        spec.inputs[0].shape[0],
+        spec.inputs[0].shape[1],
+        spec.inputs[0].shape[2],
+    );
+    // smooth initial solution
+    let mut u = vec![0.0f32; e * p * v];
+    for (i, x) in u.iter_mut().enumerate() {
+        *x = 1.0 + 0.1 * ((i as f32) * 0.037).sin();
+    }
+    // divergence-like operator with zero row sums (conservation)
+    let mut op = vec![0.0f32; p * p];
+    for r in 0..p {
+        let mut row_sum = 0.0;
+        for c in 0..p {
+            if r != c {
+                let val = ((r * p + c) as f32 * 0.11).sin() * 0.5;
+                op[r * p + c] = val;
+                row_sum += val;
+            }
+        }
+        op[r * p + r] = -row_sum;
+    }
+
+    let mut residuals = Vec::with_capacity(iters as usize);
+    let mut wall = 0.0;
+    for _ in 0..iters {
+        let res = executor.execute(
+            "pyfr_step",
+            &[
+                TensorValue::F32(u.clone()),
+                TensorValue::F32(op.clone()),
+                TensorValue::F32(vec![T106D_DT as f32]),
+            ],
+        )?;
+        u = res.outputs[0].as_f32().to_vec();
+        residuals.push(res.outputs[1].as_f32()[0]);
+        wall += res.wall.as_secs_f64();
+    }
+    Ok(RealPyfrReport {
+        iters,
+        elements: e,
+        residuals,
+        wall_secs: wall,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hostenv::SystemProfile;
+
+    fn daint_time(gpus: usize) -> f64 {
+        let pd = SystemProfile::piz_daint();
+        wallclock_secs(&PyfrRun::daint(gpus), &pd, &pd.host_mpi)
+    }
+
+    fn cluster_time(gpus: usize) -> f64 {
+        let cl = SystemProfile::linux_cluster();
+        wallclock_secs(&PyfrRun::cluster(gpus), &cl, &cl.host_mpi)
+    }
+
+    #[test]
+    fn table2_wallclock_within_5_percent() {
+        // paper Table II: Cluster 9906/4961/2509, Daint 2391/1223/620/322
+        let cases: [(f64, f64); 7] = [
+            (cluster_time(1), 9906.0),
+            (cluster_time(2), 4961.0),
+            (cluster_time(4), 2509.0),
+            (daint_time(1), 2391.0),
+            (daint_time(2), 1223.0),
+            (daint_time(4), 620.0),
+            (daint_time(8), 322.0),
+        ];
+        for (got, paper) in cases {
+            let err = (got - paper).abs() / paper;
+            assert!(err < 0.05, "{got:.0}s vs paper {paper}s");
+        }
+    }
+
+    #[test]
+    fn scaling_is_near_linear() {
+        // paper obs I: "execution times scale linearly"
+        let e1 = daint_time(1) / (2.0 * daint_time(2));
+        let e8 = daint_time(1) / (8.0 * daint_time(8));
+        assert!(e1 > 0.9, "2-GPU efficiency {e1}");
+        assert!(e8 > 0.85, "8-GPU efficiency {e8}");
+    }
+
+    #[test]
+    fn p100_about_4x_k40m() {
+        let ratio = cluster_time(1) / daint_time(1);
+        assert!((3.7..4.6).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn heterogeneous_4gpu_close_to_linear() {
+        // paper obs III: K80 chip ~ K40m, so 4 GPUs ~ 1/4 of 1 GPU
+        let eff = cluster_time(1) / (4.0 * cluster_time(4));
+        assert!(eff > 0.9, "4-GPU heterogeneous efficiency {eff}");
+    }
+
+    #[test]
+    fn tcp_fallback_would_slow_multinode_runs() {
+        let pd = SystemProfile::piz_daint();
+        let native = wallclock_secs(&PyfrRun::daint(4), &pd, &pd.host_mpi);
+        let tcp = wallclock_secs(
+            &PyfrRun::daint(4),
+            &pd,
+            &crate::mpi::MpiImpl::mpich_3_1_4_container(),
+        );
+        assert!(tcp > native);
+    }
+}

@@ -1,0 +1,198 @@
+//! Pynamic benchmark model (§V.C.3, Fig. 3): the Python dynamic-linking
+//! stress test, native-on-Lustre vs Shifter-loop-mounted, on Piz Daint.
+//!
+//! Build parameters from the paper: 495 shared-object test modules, 215
+//! math-library-like utility files, ~1850 functions each. Three measured
+//! phases: start-up (interpreter + pyMPI launch), import (the DLL storm),
+//! visit (calling into every imported module — compute, no filesystem).
+//!
+//! Mechanism (§V.C.3): natively, every rank's every import hits the Lustre
+//! MDS then an OST; with Shifter, each compute node issues ONE metadata
+//! request for the squashfs image and every subsequent open/stat resolves
+//! against the node-local loop mount.
+
+use crate::hostenv::SystemProfile;
+use crate::metrics::{repeat, Stats};
+use crate::pfs::{LustreFs, NodeLocalFs};
+use crate::util::prng::Rng;
+
+pub const PYNAMIC_MODULES: u32 = 495;
+pub const PYNAMIC_UTILS: u32 = 215;
+pub const AVG_FUNCS_PER_MODULE: u32 = 1850;
+/// Average generated shared-object size (bytes).
+pub const AVG_SO_BYTES: u64 = 1_800_000;
+/// Python interpreter + stdlib files touched before pyMPI starts.
+pub const STARTUP_FILES: u64 = 700;
+pub const STARTUP_FILE_BYTES: u64 = 15_000;
+/// sys.path probing: stats per import on a parallel FS.
+pub const STATS_PER_OPEN: u64 = 4;
+/// Wall time to call one generated function (µs) — visit phase.
+pub const VISIT_US_PER_FUNC: f64 = 0.8;
+
+/// The job sizes Fig. 3 sweeps.
+pub const FIG3_RANKS: [u64; 7] = [48, 96, 192, 384, 768, 1536, 3072];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Native,
+    Shifter,
+}
+
+/// Per-phase statistics over the 30-run protocol (Fig. 3 reports mean and
+/// stddev as error bars).
+#[derive(Debug, Clone)]
+pub struct PynamicResult {
+    pub ranks: u64,
+    pub mode: Mode,
+    pub startup: Stats,
+    pub import: Stats,
+    pub visit: Stats,
+}
+
+impl PynamicResult {
+    pub fn total_mean(&self) -> f64 {
+        self.startup.mean + self.import.mean + self.visit.mean
+    }
+}
+
+fn phase_model(
+    profile: &SystemProfile,
+    pfs: &LustreFs,
+    ranks: u64,
+    mode: Mode,
+) -> (f64, f64, f64) {
+    let rpn = profile.ranks_per_node() as u64;
+    let nodes = ranks.div_ceil(rpn);
+    let local = NodeLocalFs::squashfs_loop_mount();
+    let total_dlls = (PYNAMIC_MODULES + PYNAMIC_UTILS) as u64;
+
+    let (startup, import) = match mode {
+        Mode::Native => {
+            let startup = pfs.dll_load_storm_secs(
+                ranks,
+                rpn,
+                STARTUP_FILES,
+                STATS_PER_OPEN,
+                STARTUP_FILE_BYTES,
+            );
+            let import = pfs.dll_load_storm_secs(
+                ranks,
+                rpn,
+                total_dlls,
+                STATS_PER_OPEN,
+                AVG_SO_BYTES,
+            );
+            (startup, import)
+        }
+        Mode::Shifter => {
+            // one MDS lookup per node + image block fetch, then local I/O
+            let image_bytes = (total_dlls * AVG_SO_BYTES
+                + STARTUP_FILES * STARTUP_FILE_BYTES)
+                as f64
+                * crate::vfs::SQUASHFS_RATIO;
+            let mount = pfs.mds.storm_secs(nodes, 1)
+                + pfs.bulk_read_secs(image_bytes as u64, nodes);
+            let startup = mount
+                + local.dll_load_secs(
+                    STARTUP_FILES,
+                    STATS_PER_OPEN,
+                    STARTUP_FILE_BYTES,
+                );
+            let import =
+                local.dll_load_secs(total_dlls, STATS_PER_OPEN, AVG_SO_BYTES);
+            (startup, import)
+        }
+    };
+
+    // visit: pure compute, identical in both modes
+    let visit = (PYNAMIC_MODULES as f64)
+        * (AVG_FUNCS_PER_MODULE as f64)
+        * VISIT_US_PER_FUNC
+        * 1e-6;
+    (startup, import, visit)
+}
+
+/// Run the Fig. 3 protocol: 30 repetitions with measurement noise,
+/// mean ± std per phase.
+pub fn run(profile: &SystemProfile, ranks: u64, mode: Mode) -> PynamicResult {
+    let pfs = profile.pfs.as_ref().expect("pynamic needs a parallel fs");
+    let (s0, i0, v0) = phase_model(profile, pfs, ranks, mode);
+    let tag = match mode {
+        Mode::Native => "native",
+        Mode::Shifter => "shifter",
+    };
+    let noisy = |phase: &str, base: f64| {
+        repeat(|rep| {
+            let mut rng = Rng::from_tags(&[
+                "pynamic",
+                profile.name,
+                tag,
+                phase,
+                &ranks.to_string(),
+                &rep.to_string(),
+            ]);
+            base * rng.lognormal_noise(0.05)
+        })
+    };
+    PynamicResult {
+        ranks,
+        mode,
+        startup: noisy("startup", s0),
+        import: noisy("import", i0),
+        visit: noisy("visit", v0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hostenv::SystemProfile;
+
+    #[test]
+    fn shifter_much_faster_at_scale() {
+        let pd = SystemProfile::piz_daint();
+        let native = run(&pd, 3072, Mode::Native);
+        let shifter = run(&pd, 3072, Mode::Shifter);
+        assert!(
+            native.total_mean() > 5.0 * shifter.total_mean(),
+            "native {:.1}s vs shifter {:.1}s",
+            native.total_mean(),
+            shifter.total_mean()
+        );
+    }
+
+    #[test]
+    fn native_grows_with_ranks_shifter_nearly_flat() {
+        let pd = SystemProfile::piz_daint();
+        let n48 = run(&pd, 48, Mode::Native).import.mean;
+        let n3072 = run(&pd, 3072, Mode::Native).import.mean;
+        assert!(n3072 > 8.0 * n48, "native import {n48} -> {n3072}");
+        let s48 = run(&pd, 48, Mode::Shifter).import.mean;
+        let s3072 = run(&pd, 3072, Mode::Shifter).import.mean;
+        assert!(s3072 < 1.5 * s48, "shifter import {s48} -> {s3072}");
+    }
+
+    #[test]
+    fn visit_phase_mode_independent() {
+        let pd = SystemProfile::piz_daint();
+        let native = run(&pd, 768, Mode::Native).visit.mean;
+        let shifter = run(&pd, 768, Mode::Shifter).visit.mean;
+        assert!((native / shifter - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn stats_carry_error_bars() {
+        let pd = SystemProfile::piz_daint();
+        let r = run(&pd, 384, Mode::Native);
+        assert_eq!(r.import.n, 30);
+        assert!(r.import.std > 0.0);
+    }
+
+    #[test]
+    fn determinism() {
+        let pd = SystemProfile::piz_daint();
+        let a = run(&pd, 192, Mode::Shifter);
+        let b = run(&pd, 192, Mode::Shifter);
+        assert_eq!(a.import.mean, b.import.mean);
+    }
+}

@@ -1,0 +1,87 @@
+//! `shifterimg` — the Image Gateway CLI (§III.B).
+//!
+//! ```text
+//! shifterimg [--system=daint] pull docker:ubuntu:xenial
+//! shifterimg [--system=daint] images
+//! ```
+
+use shifter_rs::util::cli::CliSpec;
+use shifter_rs::{ImageGateway, Registry, SystemProfile};
+
+fn usage() -> ! {
+    eprintln!("usage: shifterimg [--system=laptop|cluster|daint] <pull <ref> | images | lookup <ref>>");
+    std::process::exit(2);
+}
+
+fn main() {
+    let spec = CliSpec::new(&[("system", true)], false);
+    let parsed = match spec.parse(std::env::args().skip(1)) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("shifterimg: {e}");
+            usage();
+        }
+    };
+    let profile = match parsed.get("system").unwrap_or("daint") {
+        "laptop" => SystemProfile::laptop(),
+        "cluster" => SystemProfile::linux_cluster(),
+        "daint" => SystemProfile::piz_daint(),
+        _ => usage(),
+    };
+    let registry = Registry::dockerhub();
+    let mut gateway = ImageGateway::new(
+        profile
+            .pfs
+            .clone()
+            .unwrap_or_else(shifter_rs::pfs::LustreFs::piz_daint),
+    );
+
+    match parsed.positionals.as_slice() {
+        [cmd, reference] if cmd == "pull" => {
+            match gateway.pull(&registry, reference) {
+                Ok(rep) => {
+                    println!(
+                        "{}: pulled in {:.1}s (download {:.1}s, expand {:.1}s, \
+                         squashfs {:.1}s, store {:.1}s){}",
+                        rep.reference,
+                        rep.total_secs(),
+                        rep.download_secs,
+                        rep.expand_secs,
+                        rep.convert_secs,
+                        rep.store_secs,
+                        if rep.cached { " [cached]" } else { "" }
+                    );
+                }
+                Err(e) => {
+                    eprintln!("shifterimg: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        [cmd] if cmd == "images" => {
+            // a fresh gateway has nothing pulled; list the registry too so
+            // the demo binary is useful on its own
+            println!("registry ({}):", registry.len());
+            for r in registry.list() {
+                println!("  {r}");
+            }
+            println!("gateway ({}):", gateway.list().len());
+            for r in gateway.list() {
+                println!("  {r}");
+            }
+        }
+        [cmd, reference] if cmd == "lookup" => {
+            match gateway
+                .pull(&registry, reference)
+                .and_then(|_| gateway.lookup(reference).map(|g| g.pfs_path.clone()))
+            {
+                Ok(path) => println!("{reference} -> {path}"),
+                Err(e) => {
+                    eprintln!("shifterimg: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        _ => usage(),
+    }
+}

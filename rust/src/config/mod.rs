@@ -1,0 +1,222 @@
+//! Runtime configuration (DESIGN.md S17): the udiRoot.conf analog.
+//!
+//! §IV.B: "Shifter MPI support uses parameters that are set by the system
+//! administrator on the Runtime configuration file which specify: the full
+//! path of the host's MPI frontend shared libraries; the full paths to the
+//! host's shared libraries upon which the host MPI libraries depend; the
+//! full paths to any configuration files and folders used by the host's
+//! MPI libraries." Plus the site mounts and GPU directories §III.A/§IV.A
+//! use. Serializable to/from a simple `key = value` format.
+
+use crate::hostenv::SystemProfile;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SiteMount {
+    pub host_path: String,
+    pub container_path: String,
+    pub read_only: bool,
+}
+
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct UdiRootConfig {
+    /// Where the container root is assembled on each compute node.
+    pub udi_mount_point: String,
+    /// Site-specific directories grafted into every container (§III.A:
+    /// "parallel filesystem directories … site-specific tools").
+    pub site_mounts: Vec<SiteMount>,
+    /// Host MPI frontend libraries (libmpi/libmpicxx/libmpifort).
+    pub mpi_frontend_paths: Vec<String>,
+    /// Host libraries the MPI depends on.
+    pub mpi_dependency_paths: Vec<String>,
+    /// Host MPI config files/folders.
+    pub mpi_config_paths: Vec<String>,
+    /// Host directory with NVIDIA driver libraries.
+    pub gpu_lib_dir: String,
+    /// Host directory with NVIDIA binaries (nvidia-smi).
+    pub gpu_bin_dir: String,
+    /// Host env vars exported into containers (§III.A: "selected variables
+    /// from the host system are also added").
+    pub host_env_allowlist: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("config line {0}: expected 'key = value'")]
+    BadLine(usize),
+    #[error("unknown config key: {0}")]
+    UnknownKey(String),
+}
+
+impl UdiRootConfig {
+    /// The configuration a site administrator would write for `profile`.
+    pub fn for_profile(profile: &SystemProfile) -> UdiRootConfig {
+        let mpi_lib_dir = format!("{}/lib", profile.mpi_prefix);
+        UdiRootConfig {
+            udi_mount_point: "/var/udiMount".to_string(),
+            site_mounts: vec![
+                SiteMount {
+                    host_path: "/scratch".into(),
+                    container_path: "/scratch".into(),
+                    read_only: false,
+                },
+                SiteMount {
+                    host_path: "/home".into(),
+                    container_path: "/home".into(),
+                    read_only: false,
+                },
+                SiteMount {
+                    host_path: "/var/tmp".into(),
+                    container_path: "/var/tmp".into(),
+                    read_only: false,
+                },
+            ],
+            mpi_frontend_paths: profile
+                .host_mpi
+                .frontend_libraries()
+                .iter()
+                .map(|l| format!("{mpi_lib_dir}/{l}"))
+                .collect(),
+            mpi_dependency_paths: profile.mpi_dependency_libs(),
+            mpi_config_paths: profile.mpi_config_paths(),
+            gpu_lib_dir: profile.gpu_lib_dir.to_string(),
+            gpu_bin_dir: profile.gpu_bin_dir.to_string(),
+            host_env_allowlist: vec![
+                "CUDA_VISIBLE_DEVICES".into(),
+                "SLURM_JOB_ID".into(),
+                "SLURM_PROCID".into(),
+                "SLURM_NTASKS".into(),
+                "SLURM_LOCALID".into(),
+                "PMI_RANK".into(),
+            ],
+        }
+    }
+
+    /// Serialize to the `key = value` config-file format.
+    pub fn to_conf(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("udiMount = {}\n", self.udi_mount_point));
+        for m in &self.site_mounts {
+            out.push_str(&format!(
+                "siteFs = {}:{}:{}\n",
+                m.host_path,
+                m.container_path,
+                if m.read_only { "ro" } else { "rw" }
+            ));
+        }
+        for p in &self.mpi_frontend_paths {
+            out.push_str(&format!("mpiFrontend = {p}\n"));
+        }
+        for p in &self.mpi_dependency_paths {
+            out.push_str(&format!("mpiDependency = {p}\n"));
+        }
+        for p in &self.mpi_config_paths {
+            out.push_str(&format!("mpiConfig = {p}\n"));
+        }
+        out.push_str(&format!("gpuLibDir = {}\n", self.gpu_lib_dir));
+        out.push_str(&format!("gpuBinDir = {}\n", self.gpu_bin_dir));
+        for v in &self.host_env_allowlist {
+            out.push_str(&format!("hostEnv = {v}\n"));
+        }
+        out
+    }
+
+    /// Parse the `key = value` format (inverse of `to_conf`).
+    pub fn from_conf(text: &str) -> Result<UdiRootConfig, ConfigError> {
+        let mut cfg = UdiRootConfig::default();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or(ConfigError::BadLine(i + 1))?;
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "udiMount" => cfg.udi_mount_point = v.to_string(),
+                "siteFs" => {
+                    let mut parts = v.split(':');
+                    let host = parts.next().unwrap_or("").to_string();
+                    let cont = parts.next().unwrap_or("").to_string();
+                    let ro = parts.next() == Some("ro");
+                    if host.is_empty() || cont.is_empty() {
+                        return Err(ConfigError::BadLine(i + 1));
+                    }
+                    cfg.site_mounts.push(SiteMount {
+                        host_path: host,
+                        container_path: cont,
+                        read_only: ro,
+                    });
+                }
+                "mpiFrontend" => cfg.mpi_frontend_paths.push(v.to_string()),
+                "mpiDependency" => cfg.mpi_dependency_paths.push(v.to_string()),
+                "mpiConfig" => cfg.mpi_config_paths.push(v.to_string()),
+                "gpuLibDir" => cfg.gpu_lib_dir = v.to_string(),
+                "gpuBinDir" => cfg.gpu_bin_dir = v.to_string(),
+                "hostEnv" => cfg.host_env_allowlist.push(v.to_string()),
+                other => return Err(ConfigError::UnknownKey(other.to_string())),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hostenv::SystemProfile;
+
+    #[test]
+    fn profile_config_lists_mpi_paths() {
+        let pd = SystemProfile::piz_daint();
+        let cfg = UdiRootConfig::for_profile(&pd);
+        assert_eq!(cfg.mpi_frontend_paths.len(), 3);
+        assert!(cfg.mpi_frontend_paths[0].contains("libmpi"));
+        assert!(cfg
+            .mpi_dependency_paths
+            .iter()
+            .any(|p| p.contains("libugni")));
+        assert!(!cfg.mpi_config_paths.is_empty());
+    }
+
+    #[test]
+    fn conf_roundtrip() {
+        let cfg = UdiRootConfig::for_profile(&SystemProfile::linux_cluster());
+        let text = cfg.to_conf();
+        let back = UdiRootConfig::from_conf(&text).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_keys_and_bad_lines() {
+        assert!(matches!(
+            UdiRootConfig::from_conf("bogusKey = 1"),
+            Err(ConfigError::UnknownKey(_))
+        ));
+        assert!(matches!(
+            UdiRootConfig::from_conf("no equals sign"),
+            Err(ConfigError::BadLine(1))
+        ));
+        assert!(matches!(
+            UdiRootConfig::from_conf("siteFs = onlyhost"),
+            Err(ConfigError::BadLine(1))
+        ));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let cfg =
+            UdiRootConfig::from_conf("# comment\n\nudiMount = /var/udiMount\n")
+                .unwrap();
+        assert_eq!(cfg.udi_mount_point, "/var/udiMount");
+    }
+
+    #[test]
+    fn allowlist_includes_cuda_visible_devices() {
+        // §IV.A depends on the host env var reaching the container
+        let cfg = UdiRootConfig::for_profile(&SystemProfile::laptop());
+        assert!(cfg
+            .host_env_allowlist
+            .contains(&"CUDA_VISIBLE_DEVICES".to_string()));
+    }
+}

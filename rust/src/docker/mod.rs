@@ -1,0 +1,236 @@
+//! nvidia-docker runtime model — the *laptop* side of the paper's
+//! evaluation: "The nvidia-docker program, an extension to the Docker
+//! runtime developed by NVIDIA to provide Docker with access to the GPU,
+//! was used on the Laptop system while Shifter was used on the HPC
+//! systems" (§V.B.1).
+//!
+//! Architectural contrast with Shifter (§III's design goals):
+//!  * Docker runs containers through a **root daemon** — Shifter
+//!    deliberately avoids one (security goal 4);
+//!  * images come from the **local layered store** (no flatten/squashfs,
+//!    no parallel-filesystem placement);
+//!  * GPU access goes through the nvidia-docker **volume driver**, which
+//!    mounts the same driver-library set Shifter's §IV.A support injects —
+//!    that equivalence is what makes the containers portable in both
+//!    directions, and is asserted by `integration tests`.
+
+use std::collections::BTreeMap;
+
+use crate::gpu::{parse_cuda_visible_devices, DRIVER_BINARIES, DRIVER_LIBRARIES};
+use crate::hostenv::SystemProfile;
+use crate::image::Image;
+use crate::vfs::{MountTable, VirtualFs};
+
+#[derive(Debug, thiserror::Error)]
+pub enum DockerError {
+    #[error("docker daemon not running")]
+    DaemonDown,
+    #[error("image not in local store: {0}")]
+    NoSuchImage(String),
+    #[error("nvidia-docker: driver volume unavailable")]
+    DriverVolumeMissing,
+    #[error("image flatten failed: {0}")]
+    Flatten(#[from] crate::vfs::VfsError),
+}
+
+/// A running Docker container (daemon-managed).
+#[derive(Debug)]
+pub struct DockerContainer {
+    pub image: String,
+    pub rootfs: VirtualFs,
+    pub mounts: MountTable,
+    pub env: BTreeMap<String, String>,
+    /// uid the container process runs as — Docker defaults to ROOT, one of
+    /// the reasons HPC sites run Shifter instead.
+    pub uid: u32,
+    pub gpu_devices: Vec<u32>,
+}
+
+/// The Docker engine + nvidia-docker wrapper on a workstation.
+pub struct DockerRuntime<'a> {
+    profile: &'a SystemProfile,
+    /// Local image store (docker build / docker pull results).
+    store: BTreeMap<String, Image>,
+    pub daemon_running: bool,
+}
+
+impl<'a> DockerRuntime<'a> {
+    pub fn new(profile: &'a SystemProfile) -> DockerRuntime<'a> {
+        DockerRuntime {
+            profile,
+            store: BTreeMap::new(),
+            daemon_running: true,
+        }
+    }
+
+    /// `docker build` / `docker pull` — put an image in the local store.
+    pub fn load_image(&mut self, image: Image) {
+        self.store.insert(image.reference.canonical(), image);
+    }
+
+    pub fn images(&self) -> Vec<String> {
+        self.store.keys().cloned().collect()
+    }
+
+    /// `nvidia-docker run` — layered-store rootfs + driver-volume GPU
+    /// injection keyed on CUDA_VISIBLE_DEVICES (parity with §IV.A).
+    pub fn run(
+        &self,
+        reference: &str,
+        env: &BTreeMap<String, String>,
+    ) -> Result<DockerContainer, DockerError> {
+        if !self.daemon_running {
+            return Err(DockerError::DaemonDown);
+        }
+        let image = self
+            .store
+            .get(reference)
+            .ok_or_else(|| DockerError::NoSuchImage(reference.to_string()))?;
+        let mut rootfs = image.flatten()?;
+        let mut mounts = MountTable::new();
+        let mut cenv: BTreeMap<String, String> =
+            image.manifest.env.iter().cloned().collect();
+
+        // the nvidia-docker volume driver: mount the driver stack when the
+        // host has a GPU and the container asks for one
+        let mut gpu_devices = Vec::new();
+        if let Some(value) = env.get("CUDA_VISIBLE_DEVICES") {
+            if let Some(requested) = parse_cuda_visible_devices(value) {
+                let driver = self
+                    .profile
+                    .driver(0)
+                    .ok_or(DockerError::DriverVolumeMissing)?;
+                let volume = "/var/lib/nvidia-docker/volumes/nvidia_driver";
+                for (lib, versioned) in
+                    DRIVER_LIBRARIES.iter().zip(driver.library_files())
+                {
+                    let target = format!("/usr/local/nvidia/lib64/{lib}");
+                    rootfs
+                        .add_file(&target, 8_000_000, 0x77)
+                        .map_err(DockerError::Flatten)?;
+                    mounts.bind(
+                        &format!("{volume}/{versioned}"),
+                        &target,
+                        true,
+                        "nvidia-docker",
+                    );
+                }
+                for bin in DRIVER_BINARIES {
+                    mounts.bind(
+                        &format!("{volume}/bin/{bin}"),
+                        &format!("/usr/local/nvidia/bin/{bin}"),
+                        true,
+                        "nvidia-docker",
+                    );
+                }
+                for f in driver.device_files(&requested) {
+                    rootfs
+                        .insert(&f, crate::vfs::VNode::Device { major: 195, minor: 0 })
+                        .ok();
+                    mounts.bind(&f, &f, false, "nvidia-docker");
+                }
+                cenv.insert("CUDA_VISIBLE_DEVICES".into(), value.clone());
+                gpu_devices = requested;
+            }
+        }
+
+        Ok(DockerContainer {
+            image: reference.to_string(),
+            rootfs,
+            mounts,
+            env: cenv,
+            uid: 0, // docker default: root inside the container
+            gpu_devices,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::builder;
+
+    fn laptop_docker() -> (SystemProfile, Vec<Image>) {
+        (
+            SystemProfile::laptop(),
+            vec![builder::tensorflow_image(), builder::cuda_image()],
+        )
+    }
+
+    #[test]
+    fn nvidia_docker_injects_driver_volume() {
+        let (profile, images) = laptop_docker();
+        let mut docker = DockerRuntime::new(&profile);
+        for i in images {
+            docker.load_image(i);
+        }
+        let mut env = BTreeMap::new();
+        env.insert("CUDA_VISIBLE_DEVICES".to_string(), "0".to_string());
+        let c = docker.run("nvidia/cuda-image:8.0", &env).unwrap();
+        assert_eq!(c.gpu_devices, vec![0]);
+        assert!(c.rootfs.exists("/usr/local/nvidia/lib64/libcuda.so"));
+        assert!(c.rootfs.exists("/dev/nvidia0"));
+        assert_eq!(c.mounts.by_origin("nvidia-docker").len(), 7 + 1 + 3);
+    }
+
+    #[test]
+    fn plain_docker_run_without_gpu() {
+        let (profile, images) = laptop_docker();
+        let mut docker = DockerRuntime::new(&profile);
+        for i in images {
+            docker.load_image(i);
+        }
+        let c = docker
+            .run("tensorflow/tensorflow:1.0.0-devel-gpu-py3", &BTreeMap::new())
+            .unwrap();
+        assert!(c.gpu_devices.is_empty());
+        assert_eq!(c.uid, 0); // the daemon model shifter avoids
+    }
+
+    #[test]
+    fn daemon_down_refuses() {
+        let (profile, _) = laptop_docker();
+        let mut docker = DockerRuntime::new(&profile);
+        docker.daemon_running = false;
+        assert!(matches!(
+            docker.run("x:y", &BTreeMap::new()),
+            Err(DockerError::DaemonDown)
+        ));
+    }
+
+    #[test]
+    fn missing_image_reported() {
+        let (profile, _) = laptop_docker();
+        let docker = DockerRuntime::new(&profile);
+        assert!(matches!(
+            docker.run("ghost:latest", &BTreeMap::new()),
+            Err(DockerError::NoSuchImage(_))
+        ));
+    }
+
+    #[test]
+    fn same_driver_set_as_shifter_gpu_support() {
+        // the equivalence the paper's workflow rests on: both runtimes
+        // inject the §IV.A library list
+        let (profile, images) = laptop_docker();
+        let mut docker = DockerRuntime::new(&profile);
+        for i in images {
+            docker.load_image(i);
+        }
+        let mut env = BTreeMap::new();
+        env.insert("CUDA_VISIBLE_DEVICES".to_string(), "0".to_string());
+        let c = docker.run("nvidia/cuda-image:8.0", &env).unwrap();
+        let docker_libs: Vec<String> = c
+            .mounts
+            .by_origin("nvidia-docker")
+            .iter()
+            .filter(|m| m.target.contains("lib64"))
+            .map(|m| {
+                m.target.rsplit('/').next().unwrap().to_string()
+            })
+            .collect();
+        for lib in DRIVER_LIBRARIES {
+            assert!(docker_libs.iter().any(|l| l == lib), "{lib}");
+        }
+    }
+}

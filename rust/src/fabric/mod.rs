@@ -1,0 +1,296 @@
+//! Interconnect fabric models (DESIGN.md S8).
+//!
+//! We have no InfiniBand EDR or Cray Aries hardware, so each fabric is a
+//! latency model with two paths:
+//!
+//!  * **native**: the vendor MPI driving the hardware directly. Calibrated
+//!    point-for-point to the paper's *native* columns of Tables III/IV
+//!    (one-way osu_latency, best of 30), log-log interpolated between the
+//!    measured sizes.
+//!  * **tcp fallback**: what a container's stock MPI falls back to when
+//!    Shifter's MPI support is *disabled* and the vendor transport is
+//!    invisible — TCP over IPoIB on the cluster, TCP over the Aries IP
+//!    stack on Daint. Calibrated from the paper's disabled-ratio columns.
+//!
+//! An analytic eager/rendezvous model (`AnalyticLink`) backs the A4
+//! ablation, showing where the protocol crossover falls.
+
+/// Interconnect technology of a system (§V.A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FabricKind {
+    /// Linux Cluster: EDR InfiniBand.
+    InfinibandEdr,
+    /// Piz Daint: Cray Aries, Dragonfly topology.
+    CrayAries,
+    /// Laptop: no fabric; shared-memory/loopback only.
+    Loopback,
+}
+
+impl FabricKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FabricKind::InfinibandEdr => "InfiniBand EDR",
+            FabricKind::CrayAries => "Cray Aries",
+            FabricKind::Loopback => "loopback",
+        }
+    }
+}
+
+/// Table-calibrated link: (message bytes, one-way latency µs) points with
+/// log-log interpolation, linear-in-size extrapolation past the last point.
+#[derive(Debug, Clone)]
+pub struct LinkModel {
+    pub points: Vec<(u64, f64)>,
+}
+
+impl LinkModel {
+    pub fn new(points: &[(u64, f64)]) -> LinkModel {
+        assert!(points.len() >= 2);
+        assert!(points.windows(2).all(|w| w[0].0 < w[1].0), "sizes ascending");
+        LinkModel {
+            points: points.to_vec(),
+        }
+    }
+
+    /// One-way latency in µs for a `size`-byte message.
+    pub fn latency_us(&self, size: u64) -> f64 {
+        let pts = &self.points;
+        if size <= pts[0].0 {
+            return pts[0].1;
+        }
+        if size >= pts[pts.len() - 1].0 {
+            // extrapolate with the bandwidth implied by the last segment
+            let (s0, l0) = pts[pts.len() - 2];
+            let (s1, l1) = pts[pts.len() - 1];
+            let per_byte = (l1 - l0) / (s1 - s0) as f64;
+            return l1 + per_byte * (size - s1) as f64;
+        }
+        let i = pts.partition_point(|(s, _)| *s <= size) - 1;
+        let (s0, l0) = pts[i];
+        let (s1, l1) = pts[i + 1];
+        // log-log interpolation
+        let t = ((size as f64).ln() - (s0 as f64).ln())
+            / ((s1 as f64).ln() - (s0 as f64).ln());
+        (l0.ln() + t * (l1.ln() - l0.ln())).exp()
+    }
+
+    /// Effective bandwidth at a message size (GB/s).
+    pub fn bandwidth_gbps(&self, size: u64) -> f64 {
+        size as f64 / (self.latency_us(size) * 1e-6) / 1e9
+    }
+}
+
+/// The OSU message sizes Tables III/IV report.
+pub const OSU_SIZES: [u64; 9] = [
+    32,
+    128,
+    512,
+    2 * 1024,
+    8 * 1024,
+    32 * 1024,
+    128 * 1024,
+    512 * 1024,
+    2 * 1024 * 1024,
+];
+
+/// Native path, Linux Cluster (Table III "Nat" column).
+pub fn ib_edr_native() -> LinkModel {
+    LinkModel::new(&[
+        (32, 1.2),
+        (128, 1.3),
+        (512, 1.8),
+        (2048, 2.4),
+        (8192, 4.5),
+        (32768, 12.1),
+        (131072, 56.8),
+        (524288, 141.5),
+        (2097152, 480.8),
+    ])
+}
+
+/// TCP-over-IPoIB fallback, Linux Cluster (Table III disabled × native).
+pub fn ib_edr_tcp() -> LinkModel {
+    LinkModel::new(&[
+        (32, 24.5),
+        (128, 24.4),
+        (512, 27.0),
+        (2048, 71.3),
+        (8192, 217.4),
+        (32768, 417.5),
+        (131072, 1482.0),
+        (524288, 4712.0),
+        (2097152, 18222.0),
+    ])
+}
+
+/// Native path, Piz Daint (Table IV "Native" column).
+pub fn aries_native() -> LinkModel {
+    LinkModel::new(&[
+        (32, 1.1),
+        (128, 1.1),
+        (512, 1.1),
+        (2048, 1.6),
+        (8192, 4.1),
+        (32768, 6.5),
+        (131072, 16.4),
+        (524288, 56.1),
+        (2097152, 215.7),
+    ])
+}
+
+/// TCP-over-Aries fallback, Piz Daint (Table IV disabled × native).
+pub fn aries_tcp() -> LinkModel {
+    LinkModel::new(&[
+        (32, 4.79),
+        (128, 4.80),
+        (512, 4.92),
+        (2048, 7.46),
+        (8192, 8.90),
+        (32768, 13.65),
+        (131072, 43.1),
+        (524288, 125.1),
+        (2097152, 435.7),
+    ])
+}
+
+/// Laptop loopback (shared memory) — MPICH ch3:nemesis on one node.
+pub fn loopback() -> LinkModel {
+    LinkModel::new(&[
+        (32, 0.45),
+        (2048, 0.9),
+        (32768, 4.2),
+        (2097152, 300.0),
+    ])
+}
+
+/// The two software paths over a physical fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transport {
+    /// Vendor MPI with direct hardware access.
+    Native,
+    /// Portable MPI falling back to the IP stack.
+    TcpFallback,
+}
+
+/// Link model for (fabric, transport).
+pub fn link_for(kind: FabricKind, transport: Transport) -> LinkModel {
+    match (kind, transport) {
+        (FabricKind::InfinibandEdr, Transport::Native) => ib_edr_native(),
+        (FabricKind::InfinibandEdr, Transport::TcpFallback) => ib_edr_tcp(),
+        (FabricKind::CrayAries, Transport::Native) => aries_native(),
+        (FabricKind::CrayAries, Transport::TcpFallback) => aries_tcp(),
+        (FabricKind::Loopback, _) => loopback(),
+    }
+}
+
+/// Analytic eager/rendezvous model for the A4 ablation: exposes where the
+/// protocol switch falls rather than interpolating measurements.
+#[derive(Debug, Clone)]
+pub struct AnalyticLink {
+    pub base_latency_us: f64,
+    pub bandwidth_gbps: f64,
+    pub eager_threshold: u64,
+    pub rendezvous_overhead_us: f64,
+}
+
+impl AnalyticLink {
+    pub fn latency_us(&self, size: u64) -> f64 {
+        let wire = size as f64 / (self.bandwidth_gbps * 1e3); // µs
+        let rndv = if size > self.eager_threshold {
+            self.rendezvous_overhead_us
+        } else {
+            0.0
+        };
+        self.base_latency_us + wire + rndv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_tables_reproduce_calibration_points() {
+        let ib = ib_edr_native();
+        assert!((ib.latency_us(32) - 1.2).abs() < 1e-9);
+        assert!((ib.latency_us(2097152) - 480.8).abs() < 1e-9);
+        let ar = aries_native();
+        assert!((ar.latency_us(8192) - 4.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interpolation_is_monotone_between_points() {
+        let ib = ib_edr_native();
+        let mid = ib.latency_us(64);
+        assert!(mid > 1.2 && mid < 1.3, "mid={mid}");
+        let mid2 = ib.latency_us(1024 * 1024);
+        assert!(mid2 > 141.5 && mid2 < 480.8, "{mid2}");
+    }
+
+    #[test]
+    fn extrapolates_past_largest_size() {
+        let ib = ib_edr_native();
+        let l4m = ib.latency_us(4 * 1024 * 1024);
+        assert!(l4m > 480.8 && l4m < 4.0 * 480.8, "{l4m}");
+    }
+
+    #[test]
+    fn tcp_is_always_slower_than_native() {
+        for kind in [FabricKind::InfinibandEdr, FabricKind::CrayAries] {
+            let nat = link_for(kind, Transport::Native);
+            let tcp = link_for(kind, Transport::TcpFallback);
+            for s in OSU_SIZES {
+                assert!(
+                    tcp.latency_us(s) > nat.latency_us(s),
+                    "{kind:?} size {s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn disabled_ratio_shapes_match_paper() {
+        // Cluster: 15–50x across sizes; Daint: 1.4–6.5x.
+        let nat = ib_edr_native();
+        let tcp = ib_edr_tcp();
+        for s in OSU_SIZES {
+            let r = tcp.latency_us(s) / nat.latency_us(s);
+            assert!((14.0..51.0).contains(&r), "cluster size {s}: {r}");
+        }
+        let nat = aries_native();
+        let tcp = aries_tcp();
+        for s in OSU_SIZES {
+            let r = tcp.latency_us(s) / nat.latency_us(s);
+            assert!((1.3..6.5).contains(&r), "daint size {s}: {r}");
+        }
+    }
+
+    #[test]
+    fn aries_beats_ib_at_large_messages() {
+        // Daint's 2M native latency (215.7) vs cluster's (480.8)
+        assert!(
+            aries_native().latency_us(2097152)
+                < ib_edr_native().latency_us(2097152)
+        );
+    }
+
+    #[test]
+    fn analytic_link_shows_rendezvous_step() {
+        let l = AnalyticLink {
+            base_latency_us: 1.0,
+            bandwidth_gbps: 10.0,
+            eager_threshold: 8192,
+            rendezvous_overhead_us: 2.0,
+        };
+        let below = l.latency_us(8192);
+        let above = l.latency_us(8193);
+        assert!(above - below > 1.9, "step={}", above - below);
+    }
+
+    #[test]
+    fn bandwidth_converges_at_large_sizes() {
+        let ib = ib_edr_native();
+        let bw = ib.bandwidth_gbps(2097152);
+        assert!((3.0..6.0).contains(&bw), "bw={bw}"); // ~4.4 GB/s effective
+    }
+}

@@ -1,0 +1,229 @@
+//! The Image Gateway (§III, DESIGN.md S4): pulls images from a remote
+//! registry, expands and flattens them, converts to squashfs and stores
+//! the result on the parallel filesystem, "in a location accessible
+//! system wide". Pulls are idempotent per content digest; the gateway can
+//! be queried for available images.
+
+pub mod queue;
+
+pub use queue::{PullJob, PullQueue, PullState};
+
+use std::collections::BTreeMap;
+
+use crate::image::{ImageManifest, ImageRef};
+use crate::pfs::LustreFs;
+use crate::registry::{Registry, RegistryError};
+use crate::vfs::SquashFs;
+
+#[derive(Debug, thiserror::Error)]
+pub enum GatewayError {
+    #[error(transparent)]
+    Registry(#[from] RegistryError),
+    #[error("image not pulled: {0} (run `shifterimg pull {0}`)")]
+    NotPulled(String),
+    #[error("flatten failed: {0}")]
+    Flatten(#[from] crate::vfs::VfsError),
+}
+
+/// A gateway-processed image, ready for the Runtime.
+#[derive(Debug, Clone)]
+pub struct GatewayImage {
+    pub reference: ImageRef,
+    pub manifest: ImageManifest,
+    pub squashfs: SquashFs,
+    /// PFS path where the squashfs file lives.
+    pub pfs_path: String,
+}
+
+/// Timing breakdown of one pull (reported by `shifterimg pull`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PullReport {
+    pub reference: String,
+    /// true if the pull was satisfied from the digest cache.
+    pub cached: bool,
+    pub download_secs: f64,
+    pub expand_secs: f64,
+    pub convert_secs: f64,
+    pub store_secs: f64,
+}
+
+impl PullReport {
+    pub fn total_secs(&self) -> f64 {
+        self.download_secs + self.expand_secs + self.convert_secs + self.store_secs
+    }
+}
+
+/// Rates for the gateway's local processing steps.
+const EXPAND_BYTES_PER_SEC: f64 = 300e6; // tar extraction
+const SQUASH_BYTES_PER_SEC: f64 = 150e6; // mksquashfs compression
+
+pub struct ImageGateway {
+    images: BTreeMap<ImageRef, GatewayImage>,
+    /// Content-addressed layer cache (digests already downloaded).
+    layer_cache: Vec<u64>,
+    pfs: LustreFs,
+}
+
+impl ImageGateway {
+    pub fn new(pfs: LustreFs) -> ImageGateway {
+        ImageGateway {
+            images: BTreeMap::new(),
+            layer_cache: Vec::new(),
+            pfs,
+        }
+    }
+
+    /// `shifterimg pull <ref>` — the full §III.A first stage.
+    pub fn pull(
+        &mut self,
+        registry: &Registry,
+        reference: &str,
+    ) -> Result<PullReport, GatewayError> {
+        let image = registry.lookup(reference)?;
+        let key = image.reference.clone();
+
+        // idempotence: same layer digests already processed -> cache hit
+        if let Some(existing) = self.images.get(&key) {
+            if existing.manifest.layer_digests == image.manifest.layer_digests {
+                return Ok(PullReport {
+                    reference: key.canonical(),
+                    cached: true,
+                    download_secs: 0.0,
+                    expand_secs: 0.0,
+                    convert_secs: 0.0,
+                    store_secs: 0.0,
+                });
+            }
+        }
+
+        let download_secs = registry.download_secs(image, &self.layer_cache);
+        for l in &image.layers {
+            if !self.layer_cache.contains(&l.digest) {
+                self.layer_cache.push(l.digest);
+            }
+        }
+
+        // expand + flatten ("all layers but the last one are discarded")
+        let flat = image.flatten()?;
+        let raw_bytes = flat.total_size();
+        let expand_secs = raw_bytes as f64 / EXPAND_BYTES_PER_SEC;
+
+        // convert to squashfs
+        let squashfs = SquashFs::create(&flat);
+        let convert_secs = raw_bytes as f64 / SQUASH_BYTES_PER_SEC;
+
+        // store on the parallel filesystem
+        let store_secs = self.pfs.bulk_read_secs(squashfs.compressed_bytes, 1);
+        let pfs_path = format!(
+            "/pfs/shifter/images/{}-{:016x}.squashfs",
+            key.name.replace('/', "_"),
+            squashfs.digest
+        );
+
+        self.images.insert(
+            key.clone(),
+            GatewayImage {
+                reference: key.clone(),
+                manifest: image.manifest.clone(),
+                squashfs,
+                pfs_path,
+            },
+        );
+
+        Ok(PullReport {
+            reference: key.canonical(),
+            cached: false,
+            download_secs,
+            expand_secs,
+            convert_secs,
+            store_secs,
+        })
+    }
+
+    /// `shifterimg images` — list processed images.
+    pub fn list(&self) -> Vec<String> {
+        self.images.keys().map(|r| r.canonical()).collect()
+    }
+
+    /// Look up an image for the Runtime.
+    pub fn lookup(&self, reference: &str) -> Result<&GatewayImage, GatewayError> {
+        let r = ImageRef::parse(reference)
+            .ok_or_else(|| GatewayError::NotPulled(reference.to_string()))?;
+        self.images
+            .get(&r)
+            .ok_or_else(|| GatewayError::NotPulled(r.canonical()))
+    }
+
+    pub fn pfs(&self) -> &LustreFs {
+        &self.pfs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::registry::Registry;
+
+    fn gw() -> ImageGateway {
+        ImageGateway::new(LustreFs::piz_daint())
+    }
+
+    #[test]
+    fn pull_processes_and_lists() {
+        let reg = Registry::dockerhub();
+        let mut g = gw();
+        let rep = g.pull(&reg, "docker:ubuntu:xenial").unwrap();
+        assert!(!rep.cached);
+        assert!(rep.download_secs > 0.0);
+        assert!(rep.convert_secs > 0.0);
+        assert_eq!(g.list(), vec!["ubuntu:xenial"]);
+        let gi = g.lookup("ubuntu:xenial").unwrap();
+        assert!(gi.squashfs.file_count() > 100);
+        assert!(gi.pfs_path.starts_with("/pfs/shifter/images/"));
+    }
+
+    #[test]
+    fn second_pull_is_cached() {
+        let reg = Registry::dockerhub();
+        let mut g = gw();
+        g.pull(&reg, "ubuntu:xenial").unwrap();
+        let rep = g.pull(&reg, "ubuntu:xenial").unwrap();
+        assert!(rep.cached);
+        assert_eq!(rep.total_secs(), 0.0);
+    }
+
+    #[test]
+    fn updated_tag_is_reprocessed() {
+        let mut reg = Registry::dockerhub();
+        let mut g = gw();
+        g.pull(&reg, "ubuntu:xenial").unwrap();
+        // author pushes an updated image under the same tag
+        let mut img = crate::image::builder::ubuntu_xenial();
+        let mut extra = crate::vfs::VirtualFs::new();
+        extra.add_file("/etc/new-file", 10, 42).unwrap();
+        img.layers.push(crate::image::Layer::new(extra, vec![]));
+        img.manifest.layer_digests =
+            img.layers.iter().map(|l| l.digest).collect();
+        reg.push(img);
+        let rep = g.pull(&reg, "ubuntu:xenial").unwrap();
+        assert!(!rep.cached);
+        // shared base layers came from the cache: only the delta downloads
+        assert!(rep.download_secs < 0.5, "{}", rep.download_secs);
+    }
+
+    #[test]
+    fn lookup_unpulled_fails_with_hint() {
+        let g = gw();
+        let err = g.lookup("ubuntu:xenial").unwrap_err();
+        assert!(err.to_string().contains("shifterimg pull"));
+    }
+
+    #[test]
+    fn squashfs_is_smaller_than_flat_image() {
+        let reg = Registry::dockerhub();
+        let mut g = gw();
+        g.pull(&reg, "pyfr-image:1.5.0").unwrap();
+        let gi = g.lookup("pyfr-image:1.5.0").unwrap();
+        assert!(gi.squashfs.compressed_bytes < gi.squashfs.original_bytes);
+    }
+}

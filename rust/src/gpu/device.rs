@@ -1,0 +1,167 @@
+//! GPU device models for the four boards the paper evaluates (§V.A).
+//!
+//! Public spec-sheet numbers (SM count, clocks, peak FLOPs, memory) are the
+//! ground truth; per-workload *achieved* efficiency factors live in
+//! `perf_model.rs` and are calibrated against the paper's measured tables
+//! (documented in EXPERIMENTS.md).
+
+/// GPU microarchitecture generation (drives CUDA-compatibility checks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GpuArch {
+    /// GK208 (laptop Quadro)
+    KeplerGk208,
+    /// GK110B (Tesla K40m)
+    KeplerGk110,
+    /// GK210 ×2 (Tesla K80 board)
+    KeplerGk210,
+    /// GP100 (Tesla P100)
+    Pascal,
+}
+
+impl GpuArch {
+    /// CUDA compute capability.
+    pub fn compute_capability(&self) -> (u32, u32) {
+        match self {
+            GpuArch::KeplerGk208 => (3, 5),
+            GpuArch::KeplerGk110 => (3, 5),
+            GpuArch::KeplerGk210 => (3, 7),
+            GpuArch::Pascal => (6, 0),
+        }
+    }
+
+    /// Minimum CUDA toolkit major.minor able to generate code for this arch.
+    pub fn min_cuda(&self) -> (u32, u32) {
+        match self {
+            GpuArch::KeplerGk208 | GpuArch::KeplerGk110 => (5, 0),
+            GpuArch::KeplerGk210 => (6, 5),
+            GpuArch::Pascal => (8, 0),
+        }
+    }
+}
+
+/// A physical GPU board as enumerated by the driver.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuModel {
+    pub name: &'static str,
+    pub arch: GpuArch,
+    /// CUDA devices this board exposes (the K80 exposes two GK210 chips).
+    pub chips: u32,
+    pub sm_per_chip: u32,
+    pub boost_clock_mhz: u32,
+    /// Peak single-precision GFLOP/s for the whole board.
+    pub fp32_gflops_peak: f64,
+    /// Peak double-precision GFLOP/s for the whole board.
+    pub fp64_gflops_peak: f64,
+    pub mem_gib: u32,
+    pub mem_bw_gbps: f64,
+}
+
+impl GpuModel {
+    /// Lenovo W540 laptop GPU (§V.A "Workstation Laptop").
+    pub fn quadro_k110m() -> GpuModel {
+        GpuModel {
+            name: "Quadro K110M",
+            arch: GpuArch::KeplerGk208,
+            chips: 1,
+            sm_per_chip: 2,
+            boost_clock_mhz: 705,
+            fp32_gflops_peak: 541.0,
+            fp64_gflops_peak: 22.5, // 1/24 fp32 on GK208
+            mem_gib: 2,
+            mem_bw_gbps: 14.4,
+        }
+    }
+
+    /// Linux Cluster node GPU #1.
+    pub fn tesla_k40m() -> GpuModel {
+        GpuModel {
+            name: "Tesla K40m",
+            arch: GpuArch::KeplerGk110,
+            chips: 1,
+            sm_per_chip: 15,
+            boost_clock_mhz: 875,
+            fp32_gflops_peak: 4290.0,
+            fp64_gflops_peak: 1430.0,
+            mem_gib: 12,
+            mem_bw_gbps: 288.0,
+        }
+    }
+
+    /// Linux Cluster node GPU #2 (dual-chip board).
+    pub fn tesla_k80() -> GpuModel {
+        GpuModel {
+            name: "Tesla K80",
+            arch: GpuArch::KeplerGk210,
+            chips: 2,
+            sm_per_chip: 13,
+            boost_clock_mhz: 875,
+            fp32_gflops_peak: 5600.0,
+            fp64_gflops_peak: 1864.0,
+            mem_gib: 24,
+            mem_bw_gbps: 480.0,
+        }
+    }
+
+    /// Piz Daint XC50 hybrid-node GPU.
+    pub fn tesla_p100() -> GpuModel {
+        GpuModel {
+            name: "Tesla P100",
+            arch: GpuArch::Pascal,
+            chips: 1,
+            sm_per_chip: 56,
+            boost_clock_mhz: 1480,
+            fp32_gflops_peak: 9300.0,
+            fp64_gflops_peak: 4700.0,
+            mem_gib: 16,
+            mem_bw_gbps: 732.0,
+        }
+    }
+
+    /// Per-chip fp64 peak (the K80's chips are scheduled independently —
+    /// the paper's observation III: "each of the two chips on the K80 GPU
+    /// board have the same architecture of a K40m GPU").
+    pub fn fp64_gflops_per_chip(&self) -> f64 {
+        self.fp64_gflops_peak / self.chips as f64
+    }
+
+    pub fn fp32_gflops_per_chip(&self) -> f64 {
+        self.fp32_gflops_peak / self.chips as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_boards_have_distinct_specs() {
+        let boards = [
+            GpuModel::quadro_k110m(),
+            GpuModel::tesla_k40m(),
+            GpuModel::tesla_k80(),
+            GpuModel::tesla_p100(),
+        ];
+        for w in boards.windows(2) {
+            assert_ne!(w[0].name, w[1].name);
+        }
+        // paper's single-GPU ranking (Table V): P100 > K80 > K40m > K110M
+        assert!(boards[3].fp64_gflops_peak > boards[2].fp64_gflops_peak);
+        assert!(boards[2].fp64_gflops_peak > boards[1].fp64_gflops_peak);
+        assert!(boards[1].fp64_gflops_peak > boards[0].fp64_gflops_peak);
+    }
+
+    #[test]
+    fn k80_chip_is_k40m_class() {
+        // paper §V.B observation III
+        let k80 = GpuModel::tesla_k80();
+        let k40 = GpuModel::tesla_k40m();
+        let ratio = k80.fp64_gflops_per_chip() / k40.fp64_gflops_peak;
+        assert!((0.5..1.3).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn pascal_needs_cuda8() {
+        assert_eq!(GpuModel::tesla_p100().arch.min_cuda(), (8, 0));
+        assert_eq!(GpuModel::tesla_p100().arch.compute_capability(), (6, 0));
+    }
+}

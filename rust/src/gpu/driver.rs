@@ -1,0 +1,160 @@
+//! NVIDIA driver model: device files, driver libraries, CUDA compatibility.
+//!
+//! §IV.A's two prerequisites — "the host system needs to have CUDA-enabled
+//! GPUs, and the nvidia-uvm GPU driver has to be loaded prior to Shifter's
+//! execution" — are modeled here, plus the driver-library inventory the
+//! runtime bind-mounts into containers and the PTX forward-compatibility
+//! rule (§II-B2) that makes container CUDA code runnable against a newer
+//! host driver.
+
+use super::device::GpuModel;
+
+/// The driver libraries §IV.A enumerates for bind-mounting.
+pub const DRIVER_LIBRARIES: [&str; 7] = [
+    "libcuda.so",
+    "libnvidia-compiler.so",
+    "libnvidia-ptxjitcompiler.so",
+    "libnvidia-encode.so",
+    "libnvidia-ml.so",
+    "libnvidia-fatbinaryloader.so",
+    "libnvidia-opencl.so",
+];
+
+/// NVIDIA binaries brought into the container (§IV.A: "at this stage only
+/// ... nvidia-smi").
+pub const DRIVER_BINARIES: [&str; 1] = ["nvidia-smi"];
+
+#[derive(Debug, Clone)]
+pub struct NvidiaDriver {
+    /// e.g. (375, 66)
+    pub version: (u32, u32),
+    /// nvidia-uvm kernel module loaded? (prerequisite for GPU support)
+    pub uvm_loaded: bool,
+    /// Boards installed on the node, in enumeration order.
+    pub boards: Vec<GpuModel>,
+}
+
+impl NvidiaDriver {
+    pub fn new(version: (u32, u32), boards: Vec<GpuModel>) -> Self {
+        NvidiaDriver {
+            version,
+            uvm_loaded: true,
+            boards,
+        }
+    }
+
+    /// Total CUDA devices exposed (a K80 board exposes 2).
+    pub fn cuda_device_count(&self) -> u32 {
+        self.boards.iter().map(|b| b.chips).sum()
+    }
+
+    /// CUDA devices in enumeration order: (global_id, board, chip_of_board).
+    pub fn enumerate(&self) -> Vec<(u32, &GpuModel, u32)> {
+        let mut out = Vec::new();
+        let mut id = 0;
+        for b in &self.boards {
+            for chip in 0..b.chips {
+                out.push((id, b, chip));
+                id += 1;
+            }
+        }
+        out
+    }
+
+    /// Device files the runtime must expose inside the container.
+    pub fn device_files(&self, visible: &[u32]) -> Vec<String> {
+        let mut files: Vec<String> = visible
+            .iter()
+            .map(|id| format!("/dev/nvidia{id}"))
+            .collect();
+        files.push("/dev/nvidiactl".to_string());
+        files.push("/dev/nvidia-uvm".to_string());
+        files
+    }
+
+    /// Versioned library file names as they exist on the host
+    /// (e.g. `libcuda.so.375.66`).
+    pub fn library_files(&self) -> Vec<String> {
+        DRIVER_LIBRARIES
+            .iter()
+            .map(|l| format!("{l}.{}.{}", self.version.0, self.version.1))
+            .collect()
+    }
+
+    /// Minimum driver major version required by a CUDA toolkit (the table
+    /// behind PTX forward compatibility: a container built with CUDA X runs
+    /// iff the host driver is new enough for X).
+    pub fn min_driver_for_cuda(cuda: (u32, u32)) -> u32 {
+        match cuda {
+            (8, _) => 367,
+            (7, 5) => 352,
+            (7, 0) => 346,
+            (6, 5) => 340,
+            (6, 0) => 331,
+            _ => 304,
+        }
+    }
+
+    /// PTX forward compatibility: can a container built against `cuda`
+    /// toolkit run on this driver?
+    pub fn supports_cuda(&self, cuda: (u32, u32)) -> bool {
+        self.version.0 >= Self::min_driver_for_cuda(cuda)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::device::GpuModel;
+
+    fn cluster_node() -> NvidiaDriver {
+        NvidiaDriver::new(
+            (352, 99),
+            vec![GpuModel::tesla_k40m(), GpuModel::tesla_k80()],
+        )
+    }
+
+    #[test]
+    fn k80_contributes_two_devices() {
+        let d = cluster_node();
+        assert_eq!(d.cuda_device_count(), 3);
+        let e = d.enumerate();
+        assert_eq!(e.len(), 3);
+        assert_eq!(e[0].1.name, "Tesla K40m");
+        assert_eq!(e[1].1.name, "Tesla K80");
+        assert_eq!(e[2].1.name, "Tesla K80");
+        assert_eq!((e[1].2, e[2].2), (0, 1));
+    }
+
+    #[test]
+    fn device_files_cover_visible_plus_control() {
+        let d = cluster_node();
+        let files = d.device_files(&[0, 2]);
+        assert!(files.contains(&"/dev/nvidia0".to_string()));
+        assert!(files.contains(&"/dev/nvidia2".to_string()));
+        assert!(files.contains(&"/dev/nvidiactl".to_string()));
+        assert!(files.contains(&"/dev/nvidia-uvm".to_string()));
+        assert_eq!(files.len(), 4);
+    }
+
+    #[test]
+    fn versioned_library_names() {
+        let d = cluster_node();
+        let libs = d.library_files();
+        assert_eq!(libs.len(), DRIVER_LIBRARIES.len());
+        assert!(libs.contains(&"libcuda.so.352.99".to_string()));
+    }
+
+    #[test]
+    fn ptx_forward_compat() {
+        // CUDA 7.5 container on a 352 driver: ok. CUDA 8.0 container: no.
+        let d = cluster_node();
+        assert!(d.supports_cuda((7, 5)));
+        assert!(!d.supports_cuda((8, 0)));
+        // Daint's 375 driver runs CUDA 8.0 containers.
+        let daint = NvidiaDriver::new((375, 66), vec![GpuModel::tesla_p100()]);
+        assert!(daint.supports_cuda((8, 0)));
+        // and older-toolkit containers keep working (forward compat)
+        assert!(daint.supports_cuda((7, 5)));
+    }
+}

@@ -1,0 +1,98 @@
+//! GPU substrate: device models, driver model, CUDA compatibility rules and
+//! the device performance model (DESIGN.md S10/S15).
+
+pub mod device;
+pub mod driver;
+pub mod perf_model;
+
+pub use device::{GpuArch, GpuModel};
+pub use driver::{NvidiaDriver, DRIVER_BINARIES, DRIVER_LIBRARIES};
+pub use perf_model::{
+    achieved_gflops_board, achieved_gflops_per_chip, efficiency,
+    launch_overhead_s, time_on_chip_s, WorkloadClass,
+};
+
+/// Parse and validate a `CUDA_VISIBLE_DEVICES` value per §IV.A: "a valid
+/// comma-separated list of positive integers or device unique identifiers".
+/// Returns the ordered device list, or None if the value is invalid or
+/// empty — in which case Shifter "does not trigger its GPU support".
+pub fn parse_cuda_visible_devices(value: &str) -> Option<Vec<u32>> {
+    if value.trim().is_empty() {
+        return None;
+    }
+    let mut out = Vec::new();
+    for tok in value.split(',') {
+        let tok = tok.trim();
+        if let Some(uuid) = tok.strip_prefix("GPU-") {
+            // device unique identifier form: GPU-<hex uuid>; we map the
+            // uuid deterministically onto an ordinal for the simulation.
+            if uuid.is_empty()
+                || !uuid
+                    .chars()
+                    .all(|c| c.is_ascii_hexdigit() || c == '-')
+            {
+                return None;
+            }
+            let ord = uuid
+                .bytes()
+                .fold(0u32, |a, b| a.wrapping_mul(31).wrapping_add(b as u32))
+                % 16;
+            out.push(ord);
+        } else {
+            match tok.parse::<i64>() {
+                Ok(v) if v >= 0 => out.push(v as u32),
+                _ => return None,
+            }
+        }
+    }
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accepts_paper_example() {
+        // §IV.A example: export CUDA_VISIBLE_DEVICES=0,2
+        assert_eq!(parse_cuda_visible_devices("0,2"), Some(vec![0, 2]));
+    }
+
+    #[test]
+    fn accepts_single_device() {
+        assert_eq!(parse_cuda_visible_devices("3"), Some(vec![3]));
+    }
+
+    #[test]
+    fn accepts_uuid_form() {
+        let v = parse_cuda_visible_devices("GPU-8a56a4bc");
+        assert!(v.is_some());
+        assert_eq!(v.unwrap().len(), 1);
+    }
+
+    #[test]
+    fn rejects_invalid_values() {
+        // §IV.A: invalid value -> GPU support not triggered
+        assert_eq!(parse_cuda_visible_devices(""), None);
+        assert_eq!(parse_cuda_visible_devices("  "), None);
+        assert_eq!(parse_cuda_visible_devices("-1"), None);
+        assert_eq!(parse_cuda_visible_devices("0,-2"), None);
+        assert_eq!(parse_cuda_visible_devices("abc"), None);
+        assert_eq!(parse_cuda_visible_devices("0,abc"), None);
+        assert_eq!(parse_cuda_visible_devices("NoDevFiles"), None);
+        assert_eq!(parse_cuda_visible_devices("GPU-"), None);
+        assert_eq!(parse_cuda_visible_devices("GPU-zz!"), None);
+    }
+
+    #[test]
+    fn preserves_order() {
+        assert_eq!(
+            parse_cuda_visible_devices("2,0,1"),
+            Some(vec![2, 0, 1])
+        );
+    }
+}

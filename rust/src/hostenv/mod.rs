@@ -1,0 +1,342 @@
+//! Host system profiles (DESIGN.md S12): the three machines of §V.A with
+//! their exact software environments and hardware configurations. The
+//! runtime's decisions (what to mount, which ABI to match, which fabric
+//! the MPI reaches) depend only on this inventory.
+
+pub mod modules;
+
+pub use modules::{daint_catalog, ModuleDef, ModuleError, ModuleSystem};
+
+use crate::fabric::FabricKind;
+use crate::gpu::{GpuModel, NvidiaDriver};
+use crate::mpi::MpiImpl;
+use crate::pfs::LustreFs;
+use crate::vfs::{VNode, VirtualFs};
+
+/// One compute node's hardware.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub cpu_model: &'static str,
+    pub cores: u32,
+    pub ram_gb: u32,
+    pub gpus: Vec<GpuModel>,
+}
+
+impl NodeSpec {
+    pub fn driver(&self, version: (u32, u32)) -> Option<NvidiaDriver> {
+        if self.gpus.is_empty() {
+            None
+        } else {
+            Some(NvidiaDriver::new(version, self.gpus.clone()))
+        }
+    }
+}
+
+/// A complete host system.
+#[derive(Debug, Clone)]
+pub struct SystemProfile {
+    pub name: &'static str,
+    pub os: &'static str,
+    pub kernel: &'static str,
+    /// CUDA toolkit installed on the host (None = no CUDA).
+    pub cuda_toolkit: Option<(u32, u32)>,
+    /// NVIDIA driver version.
+    pub driver_version: Option<(u32, u32)>,
+    pub host_mpi: MpiImpl,
+    pub fabric: FabricKind,
+    pub nodes: Vec<NodeSpec>,
+    pub pfs: Option<LustreFs>,
+    /// Filesystem prefix where the host MPI lives.
+    pub mpi_prefix: &'static str,
+    /// Directory holding the NVIDIA driver libraries.
+    pub gpu_lib_dir: &'static str,
+    /// Directory holding nvidia-smi.
+    pub gpu_bin_dir: &'static str,
+}
+
+impl SystemProfile {
+    /// Lenovo W540 mobile workstation (§V.A "Workstation Laptop"):
+    /// i7-4700MQ, 8 GB, Quadro K110M, CentOS 7 (3.10.0), CUDA 8.0,
+    /// MPICH 3.2.
+    pub fn laptop() -> SystemProfile {
+        SystemProfile {
+            name: "Laptop",
+            os: "CentOS 7",
+            kernel: "3.10.0",
+            cuda_toolkit: Some((8, 0)),
+            driver_version: Some((375, 26)),
+            host_mpi: MpiImpl::mpich_3_2_host(),
+            fabric: FabricKind::Loopback,
+            nodes: vec![NodeSpec {
+                cpu_model: "Intel Core i7-4700MQ",
+                cores: 4,
+                ram_gb: 8,
+                gpus: vec![GpuModel::quadro_k110m()],
+            }],
+            pfs: None,
+            mpi_prefix: "/usr/lib64/mpich",
+            gpu_lib_dir: "/usr/lib64/nvidia",
+            gpu_bin_dir: "/usr/bin",
+        }
+    }
+
+    /// Two-node heterogeneous Linux Cluster (§V.A): E5-1650v3 / E5-2650v4,
+    /// 64 GB each, one K40m + one K80 per node, EDR InfiniBand, Scientific
+    /// Linux 7.2 (3.10.0), CUDA 7.5, MVAPICH2 (2.1 native for Table III).
+    pub fn linux_cluster() -> SystemProfile {
+        SystemProfile {
+            name: "Linux Cluster",
+            os: "Scientific Linux 7.2",
+            kernel: "3.10.0",
+            // Host *toolkit* is CUDA 7.5 (§V.A) but the installed driver is
+            // newer — required, since the paper runs CUDA-8-built container
+            // images (TensorFlow 1.0) on this system via PTX forward compat.
+            cuda_toolkit: Some((7, 5)),
+            driver_version: Some((367, 48)),
+            host_mpi: MpiImpl::mvapich2_2_1_host_ib(),
+            fabric: FabricKind::InfinibandEdr,
+            nodes: vec![
+                NodeSpec {
+                    cpu_model: "Intel Xeon E5-1650v3",
+                    cores: 6,
+                    ram_gb: 64,
+                    gpus: vec![GpuModel::tesla_k40m(), GpuModel::tesla_k80()],
+                },
+                NodeSpec {
+                    cpu_model: "Intel Xeon E5-2650v4",
+                    cores: 12,
+                    ram_gb: 64,
+                    gpus: vec![GpuModel::tesla_k40m(), GpuModel::tesla_k80()],
+                },
+            ],
+            pfs: Some(LustreFs::linux_cluster()),
+            mpi_prefix: "/opt/mvapich2-2.1",
+            gpu_lib_dir: "/usr/lib64/nvidia",
+            gpu_bin_dir: "/usr/bin",
+        }
+    }
+
+    /// Piz Daint, hybrid Cray XC50/XC40 (§V.A): E5-2690v3 + P100 per
+    /// hybrid node, Aries dragonfly, CLE 6.0 (3.12.60), CUDA 8.0,
+    /// Cray MPT 7.5.0. We model 384 hybrid nodes — enough for the
+    /// largest (3072-rank) Pynamic job at 12 ranks/node.
+    pub fn piz_daint() -> SystemProfile {
+        let node = NodeSpec {
+            cpu_model: "Intel Xeon E5-2690v3",
+            cores: 12,
+            ram_gb: 64,
+            gpus: vec![GpuModel::tesla_p100()],
+        };
+        SystemProfile {
+            name: "Piz Daint",
+            os: "Cray Linux Environment 6.0 UP02",
+            kernel: "3.12.60",
+            cuda_toolkit: Some((8, 0)),
+            driver_version: Some((375, 66)),
+            host_mpi: MpiImpl::cray_mpt_7_5_host(),
+            fabric: FabricKind::CrayAries,
+            nodes: vec![node; 384],
+            pfs: Some(LustreFs::piz_daint()),
+            mpi_prefix: "/opt/cray/pe/mpt/7.5.0/gni/mpich-gnu/5.1",
+            gpu_lib_dir: "/opt/cray/nvidia/default/lib64",
+            gpu_bin_dir: "/opt/cray/nvidia/default/bin",
+        }
+    }
+
+    pub fn node_count(&self) -> u32 {
+        self.nodes.len() as u32
+    }
+
+    pub fn ranks_per_node(&self) -> u32 {
+        self.nodes[0].cores
+    }
+
+    /// Driver instance for node `i`.
+    pub fn driver(&self, node: usize) -> Option<NvidiaDriver> {
+        self.nodes
+            .get(node)
+            .and_then(|n| n.driver(self.driver_version?))
+    }
+
+    /// Does the host satisfy §IV.A's GPU-support prerequisites?
+    pub fn gpu_capable(&self) -> bool {
+        self.driver(0).map(|d| d.uvm_loaded).unwrap_or(false)
+    }
+
+    /// The host root filesystem: site directories, driver libraries,
+    /// NVIDIA binaries, the vendor MPI with its dependencies — everything
+    /// the Shifter runtime may bind-mount into containers.
+    pub fn host_fs(&self) -> VirtualFs {
+        let mut fs = VirtualFs::new();
+        fs.add_file("/etc/os-release", 300, 0x05).unwrap();
+        fs.mkdir_p("/scratch").unwrap();
+        fs.mkdir_p("/home").unwrap();
+        fs.mkdir_p("/var/tmp").unwrap();
+
+        // NVIDIA driver stack
+        if let (Some(dv), Some(node)) = (self.driver_version, self.nodes.first())
+        {
+            if !node.gpus.is_empty() {
+                let driver = NvidiaDriver::new(dv, node.gpus.clone());
+                for lib in driver.library_files() {
+                    fs.add_file(
+                        &format!("{}/{lib}", self.gpu_lib_dir),
+                        8_000_000,
+                        0x10 ^ lib.len() as u64,
+                    )
+                    .unwrap();
+                }
+                for bin in crate::gpu::DRIVER_BINARIES {
+                    fs.insert(
+                        &format!("{}/{bin}", self.gpu_bin_dir),
+                        VNode::exe(450_000, 0x20),
+                    )
+                    .unwrap();
+                }
+                let mut id = 0;
+                for g in &node.gpus {
+                    for _ in 0..g.chips {
+                        fs.insert(
+                            &format!("/dev/nvidia{id}"),
+                            VNode::Device {
+                                major: 195,
+                                minor: id,
+                            },
+                        )
+                        .unwrap();
+                        id += 1;
+                    }
+                }
+                fs.insert("/dev/nvidiactl", VNode::Device { major: 195, minor: 255 })
+                    .unwrap();
+                fs.insert("/dev/nvidia-uvm", VNode::Device { major: 243, minor: 0 })
+                    .unwrap();
+            }
+        }
+
+        // host MPI: frontend libs + transport dependencies + config
+        for lib in self.host_mpi.frontend_libraries() {
+            fs.add_file(
+                &format!("{}/lib/{lib}", self.mpi_prefix),
+                6_000_000,
+                0x30 ^ lib.len() as u64,
+            )
+            .unwrap();
+        }
+        for dep in self.mpi_dependency_libs() {
+            fs.add_file(&dep, 1_500_000, 0x40 ^ dep.len() as u64).unwrap();
+        }
+        for cfg in self.mpi_config_paths() {
+            fs.add_file(&cfg, 2_000, 0x50).unwrap();
+        }
+        fs
+    }
+
+    /// Host-specific shared libraries the vendor MPI depends on (§IV.B:
+    /// "the full paths to the host's shared libraries upon which the host
+    /// MPI libraries depend").
+    pub fn mpi_dependency_libs(&self) -> Vec<String> {
+        match self.fabric {
+            FabricKind::InfinibandEdr => vec![
+                "/usr/lib64/libibverbs.so.1".to_string(),
+                "/usr/lib64/librdmacm.so.1".to_string(),
+                "/usr/lib64/libibumad.so.3".to_string(),
+            ],
+            FabricKind::CrayAries => vec![
+                "/opt/cray/ugni/default/lib64/libugni.so.0".to_string(),
+                "/opt/cray/xpmem/default/lib64/libxpmem.so.0".to_string(),
+                "/opt/cray/alps/default/lib64/libalpslli.so.0".to_string(),
+                "/opt/cray/pe/pmi/default/lib64/libpmi.so.0".to_string(),
+                "/opt/cray/wlm_detect/default/lib64/libwlm_detect.so.0"
+                    .to_string(),
+            ],
+            FabricKind::Loopback => vec![],
+        }
+    }
+
+    /// Config files/folders the host MPI needs (§IV.B third config item).
+    pub fn mpi_config_paths(&self) -> Vec<String> {
+        match self.fabric {
+            FabricKind::InfinibandEdr => {
+                vec!["/etc/libibverbs.d/mlx5.driver".to_string()]
+            }
+            FabricKind::CrayAries => {
+                vec!["/etc/opt/cray/wlm_detect/active_wlm".to_string()]
+            }
+            FabricKind::Loopback => vec![],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_match_paper_inventory() {
+        let lap = SystemProfile::laptop();
+        assert_eq!(lap.cuda_toolkit, Some((8, 0)));
+        assert_eq!(lap.host_mpi.version_string(), "MPICH 3.2.0");
+        assert_eq!(lap.nodes.len(), 1);
+        assert_eq!(lap.nodes[0].gpus[0].name, "Quadro K110M");
+
+        let cl = SystemProfile::linux_cluster();
+        assert_eq!(cl.cuda_toolkit, Some((7, 5)));
+        assert_eq!(cl.fabric, FabricKind::InfinibandEdr);
+        assert_eq!(cl.nodes.len(), 2);
+        assert_eq!(cl.nodes[0].gpus.len(), 2); // K40m + K80
+        assert_ne!(cl.nodes[0].cpu_model, cl.nodes[1].cpu_model);
+
+        let pd = SystemProfile::piz_daint();
+        assert_eq!(pd.kernel, "3.12.60");
+        assert_eq!(pd.fabric, FabricKind::CrayAries);
+        assert_eq!(pd.host_mpi.version_string(), "Cray MPT 7.5.0");
+        assert_eq!(pd.nodes[0].gpus[0].name, "Tesla P100");
+        assert!(pd.node_count() * pd.ranks_per_node() >= 3072);
+    }
+
+    #[test]
+    fn gpu_capability() {
+        assert!(SystemProfile::laptop().gpu_capable());
+        assert!(SystemProfile::linux_cluster().gpu_capable());
+        assert!(SystemProfile::piz_daint().gpu_capable());
+    }
+
+    #[test]
+    fn host_fs_has_driver_and_mpi() {
+        let pd = SystemProfile::piz_daint();
+        let fs = pd.host_fs();
+        assert!(fs.exists(
+            "/opt/cray/nvidia/default/lib64/libcuda.so.375.66"
+        ));
+        assert!(fs.exists("/opt/cray/nvidia/default/bin/nvidia-smi"));
+        assert!(fs.exists(&format!(
+            "{}/lib/libmpi.so.12",
+            pd.mpi_prefix
+        )));
+        assert!(fs.exists("/opt/cray/ugni/default/lib64/libugni.so.0"));
+        assert!(fs.exists("/dev/nvidia0"));
+        assert!(fs.exists("/dev/nvidia-uvm"));
+    }
+
+    #[test]
+    fn cluster_exposes_three_cuda_devices_per_node() {
+        let cl = SystemProfile::linux_cluster();
+        let d = cl.driver(0).unwrap();
+        assert_eq!(d.cuda_device_count(), 3); // K40m + 2x K80 chips
+        let fs = cl.host_fs();
+        assert!(fs.exists("/dev/nvidia0"));
+        assert!(fs.exists("/dev/nvidia1"));
+        assert!(fs.exists("/dev/nvidia2"));
+    }
+
+    #[test]
+    fn cluster_driver_runs_cuda8_containers_via_ptx_compat() {
+        // the cluster's host toolkit is 7.5, but its 367 driver runs the
+        // CUDA-8-built TensorFlow container (PTX forward compatibility)
+        let cl = SystemProfile::linux_cluster();
+        assert_eq!(cl.cuda_toolkit, Some((7, 5)));
+        assert!(cl.driver(0).unwrap().supports_cuda((8, 0)));
+        assert!(cl.driver(0).unwrap().supports_cuda((7, 5)));
+    }
+}

@@ -1,0 +1,265 @@
+//! Environment Modules — "The software environment on Piz Daint is the
+//! Cray Linux Environment 6.0 UP02 using *Environment Modules* to provide
+//! access to compilers, tools, and applications" (§V.A).
+//!
+//! `module load cudatoolkit/8.0` style environment mutation: each module
+//! prepends paths and sets variables; `module unload` reverses it. The
+//! native (non-container) baseline runs of the evaluation are launched
+//! from environments assembled this way.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModuleDef {
+    pub name: &'static str,
+    pub version: &'static str,
+    /// (variable, value) pairs set on load.
+    pub setenv: Vec<(&'static str, &'static str)>,
+    /// (variable, path) prepended on load (PATH-style).
+    pub prepend: Vec<(&'static str, &'static str)>,
+    /// Modules that conflict (auto-unloaded on load).
+    pub conflicts: Vec<&'static str>,
+}
+
+impl ModuleDef {
+    pub fn full_name(&self) -> String {
+        format!("{}/{}", self.name, self.version)
+    }
+}
+
+/// Piz Daint's module catalog (the subset the evaluation touches).
+pub fn daint_catalog() -> Vec<ModuleDef> {
+    vec![
+        ModuleDef {
+            name: "PrgEnv-cray",
+            version: "6.0.4",
+            setenv: vec![("PE_ENV", "CRAY")],
+            prepend: vec![("PATH", "/opt/cray/pe/craype/default/bin")],
+            conflicts: vec!["PrgEnv-gnu"],
+        },
+        ModuleDef {
+            name: "PrgEnv-gnu",
+            version: "6.0.4",
+            setenv: vec![("PE_ENV", "GNU")],
+            prepend: vec![("PATH", "/opt/gcc/default/bin")],
+            conflicts: vec!["PrgEnv-cray"],
+        },
+        ModuleDef {
+            name: "cudatoolkit",
+            version: "8.0.44",
+            setenv: vec![("CUDATOOLKIT_HOME", "/opt/nvidia/cudatoolkit8.0")],
+            prepend: vec![
+                ("PATH", "/opt/nvidia/cudatoolkit8.0/bin"),
+                ("LD_LIBRARY_PATH", "/opt/nvidia/cudatoolkit8.0/lib64"),
+            ],
+            conflicts: vec![],
+        },
+        ModuleDef {
+            name: "cray-mpich",
+            version: "7.5.0",
+            setenv: vec![("MPICH_DIR", "/opt/cray/pe/mpt/7.5.0/gni/mpich-gnu/5.1")],
+            prepend: vec![(
+                "LD_LIBRARY_PATH",
+                "/opt/cray/pe/mpt/7.5.0/gni/mpich-gnu/5.1/lib",
+            )],
+            conflicts: vec![],
+        },
+        ModuleDef {
+            name: "daint-gpu",
+            version: "1.0",
+            setenv: vec![("CRAY_ACCEL_TARGET", "nvidia60")],
+            prepend: vec![],
+            conflicts: vec!["daint-mc"],
+        },
+    ]
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ModuleError {
+    #[error("module not found: {0}")]
+    NotFound(String),
+}
+
+/// A module shell session.
+#[derive(Debug, Default)]
+pub struct ModuleSystem {
+    catalog: Vec<ModuleDef>,
+    loaded: Vec<String>,
+    pub env: BTreeMap<String, String>,
+}
+
+impl ModuleSystem {
+    pub fn new(catalog: Vec<ModuleDef>) -> ModuleSystem {
+        ModuleSystem {
+            catalog,
+            loaded: Vec::new(),
+            env: BTreeMap::new(),
+        }
+    }
+
+    pub fn avail(&self) -> Vec<String> {
+        self.catalog.iter().map(|m| m.full_name()).collect()
+    }
+
+    pub fn loaded(&self) -> &[String] {
+        &self.loaded
+    }
+
+    fn find(&self, name: &str) -> Option<ModuleDef> {
+        self.catalog
+            .iter()
+            .find(|m| m.full_name() == name || m.name == name)
+            .cloned()
+    }
+
+    /// `module load <name>` — applies setenv/prepend, unloads conflicts.
+    pub fn load(&mut self, name: &str) -> Result<(), ModuleError> {
+        let def = self
+            .find(name)
+            .ok_or_else(|| ModuleError::NotFound(name.to_string()))?;
+        for conflict in &def.conflicts {
+            let loaded_conflict = self
+                .loaded
+                .iter()
+                .find(|l| l.starts_with(&format!("{conflict}/")))
+                .cloned();
+            if let Some(c) = loaded_conflict {
+                self.unload(&c)?;
+            }
+        }
+        if self.loaded.contains(&def.full_name()) {
+            return Ok(());
+        }
+        for (k, v) in &def.setenv {
+            self.env.insert(k.to_string(), v.to_string());
+        }
+        for (k, p) in &def.prepend {
+            let old = self.env.get(*k).cloned().unwrap_or_default();
+            let new = if old.is_empty() {
+                p.to_string()
+            } else {
+                format!("{p}:{old}")
+            };
+            self.env.insert(k.to_string(), new);
+        }
+        self.loaded.push(def.full_name());
+        Ok(())
+    }
+
+    /// `module unload <name>` — removes the module's contributions.
+    pub fn unload(&mut self, name: &str) -> Result<(), ModuleError> {
+        let def = self
+            .find(name)
+            .ok_or_else(|| ModuleError::NotFound(name.to_string()))?;
+        if let Some(pos) = self.loaded.iter().position(|l| *l == def.full_name()) {
+            self.loaded.remove(pos);
+            for (k, _) in &def.setenv {
+                self.env.remove(*k);
+            }
+            for (k, p) in &def.prepend {
+                if let Some(val) = self.env.get_mut(*k) {
+                    let parts: Vec<&str> =
+                        val.split(':').filter(|s| s != p).collect();
+                    *val = parts.join(":");
+                    if val.is_empty() {
+                        self.env.remove(*k);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn daint() -> ModuleSystem {
+        ModuleSystem::new(daint_catalog())
+    }
+
+    #[test]
+    fn load_sets_environment() {
+        let mut m = daint();
+        m.load("cudatoolkit").unwrap();
+        assert_eq!(
+            m.env.get("CUDATOOLKIT_HOME").unwrap(),
+            "/opt/nvidia/cudatoolkit8.0"
+        );
+        assert!(m
+            .env
+            .get("LD_LIBRARY_PATH")
+            .unwrap()
+            .contains("cudatoolkit8.0/lib64"));
+        assert_eq!(m.loaded(), ["cudatoolkit/8.0.44"]);
+    }
+
+    #[test]
+    fn prepend_stacks_in_order() {
+        let mut m = daint();
+        m.load("cudatoolkit").unwrap();
+        m.load("cray-mpich").unwrap();
+        let ld = m.env.get("LD_LIBRARY_PATH").unwrap();
+        // the most recently loaded module is first
+        assert!(ld.starts_with("/opt/cray/pe/mpt"));
+        assert!(ld.contains("cudatoolkit8.0"));
+    }
+
+    #[test]
+    fn conflicts_swap_programming_environments() {
+        let mut m = daint();
+        m.load("PrgEnv-cray").unwrap();
+        assert_eq!(m.env.get("PE_ENV").unwrap(), "CRAY");
+        m.load("PrgEnv-gnu").unwrap();
+        assert_eq!(m.env.get("PE_ENV").unwrap(), "GNU");
+        assert_eq!(m.loaded(), ["PrgEnv-gnu/6.0.4"]);
+    }
+
+    #[test]
+    fn unload_reverses_load() {
+        let mut m = daint();
+        m.load("cudatoolkit").unwrap();
+        m.unload("cudatoolkit").unwrap();
+        assert!(m.env.get("CUDATOOLKIT_HOME").is_none());
+        assert!(m.env.get("LD_LIBRARY_PATH").is_none());
+        assert!(m.loaded().is_empty());
+    }
+
+    #[test]
+    fn double_load_is_idempotent() {
+        let mut m = daint();
+        m.load("cudatoolkit").unwrap();
+        m.load("cudatoolkit").unwrap();
+        assert_eq!(m.loaded().len(), 1);
+        let ld = m.env.get("LD_LIBRARY_PATH").unwrap();
+        assert_eq!(ld.matches("cudatoolkit8.0").count(), 1);
+    }
+
+    #[test]
+    fn unknown_module_reported() {
+        let mut m = daint();
+        assert_eq!(
+            m.load("tensorflow"),
+            Err(ModuleError::NotFound("tensorflow".into()))
+        );
+    }
+
+    #[test]
+    fn module_env_vs_container_env_contrast() {
+        // the paper's point: natively you assemble the environment with
+        // modules; the container carries its own and needs none of this
+        let mut m = daint();
+        m.load("PrgEnv-cray").unwrap();
+        m.load("cudatoolkit").unwrap();
+        m.load("cray-mpich").unwrap();
+        assert_eq!(m.loaded().len(), 3);
+        let image = crate::image::builder::tensorflow_image();
+        let cenv = image.env_map();
+        // container env is self-contained: no module-provided paths
+        assert!(cenv.get("CUDA_HOME").unwrap().contains("/usr/local/cuda"));
+        assert!(!cenv
+            .values()
+            .any(|v| v.contains("/opt/nvidia/cudatoolkit8.0")));
+    }
+}

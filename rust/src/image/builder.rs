@@ -1,0 +1,441 @@
+//! Image builder + the catalog of container images the paper's evaluation
+//! uses (§V.B/§V.C). Building happens "on the user's workstation with
+//! Docker"; here the builder produces the same artifact: layered images
+//! with env, labels and entrypoints.
+//!
+//! Discovery convention: image-resident software that Shifter must reason
+//! about (the container's MPI, the CUDA toolkit it was built against) is
+//! described by OCI-style labels, standing in for what the real runtime
+//! reads from the ELF headers / libtool strings of the contained libraries.
+
+use std::collections::BTreeMap;
+
+use super::{Image, ImageManifest, ImageRef, Layer};
+use crate::mpi::MpiImpl;
+use crate::util::prng::Rng;
+use crate::vfs::VirtualFs;
+
+pub const LABEL_MPI_VENDOR: &str = "org.shifter.mpi.vendor";
+pub const LABEL_MPI_VERSION: &str = "org.shifter.mpi.version";
+pub const LABEL_MPI_ABI: &str = "org.shifter.mpi.abi";
+pub const LABEL_CUDA_VERSION: &str = "org.shifter.cuda.version";
+pub const LABEL_APP: &str = "org.shifter.app";
+
+pub struct ImageBuilder {
+    reference: ImageRef,
+    layers: Vec<Layer>,
+    env: Vec<(String, String)>,
+    labels: BTreeMap<String, String>,
+    entrypoint: Vec<String>,
+    files_content: BTreeMap<String, String>,
+    pending: VirtualFs,
+    pending_whiteouts: Vec<String>,
+    rng: Rng,
+}
+
+impl ImageBuilder {
+    pub fn new(reference: &str) -> ImageBuilder {
+        ImageBuilder {
+            reference: ImageRef::parse(reference).expect("bad image ref"),
+            layers: Vec::new(),
+            env: vec![(
+                "PATH".to_string(),
+                "/usr/local/sbin:/usr/local/bin:/usr/sbin:/usr/bin:/sbin:/bin"
+                    .to_string(),
+            )],
+            labels: BTreeMap::new(),
+            entrypoint: vec![],
+            files_content: BTreeMap::new(),
+            pending: VirtualFs::new(),
+            pending_whiteouts: Vec::new(),
+            rng: Rng::from_tags(&["image-builder", reference]),
+        }
+    }
+
+    /// Seal the pending filesystem delta into a layer (Dockerfile step).
+    pub fn commit_layer(mut self) -> Self {
+        if !self.pending.is_empty() || !self.pending_whiteouts.is_empty() {
+            let tree = std::mem::take(&mut self.pending);
+            let wh = std::mem::take(&mut self.pending_whiteouts);
+            self.layers.push(Layer::new(tree, wh));
+            self.pending = VirtualFs::new();
+        }
+        self
+    }
+
+    pub fn file(mut self, path: &str, size: u64) -> Self {
+        let digest = self.rng.next_u64();
+        self.pending.add_file(path, size, digest).unwrap();
+        self
+    }
+
+    pub fn exe(mut self, path: &str, size: u64) -> Self {
+        let digest = self.rng.next_u64();
+        self.pending
+            .insert(path, crate::vfs::VNode::exe(size, digest))
+            .unwrap();
+        self
+    }
+
+    /// Small text file with retrievable content (e.g. /etc/os-release).
+    pub fn text_file(mut self, path: &str, content: &str) -> Self {
+        let digest = self.rng.next_u64();
+        self.pending
+            .add_file(path, content.len() as u64, digest)
+            .unwrap();
+        self.files_content.insert(path.to_string(), content.to_string());
+        self
+    }
+
+    /// `count` files of ~`avg_size` bytes under `dir` (bulk content like a
+    /// Python stdlib or TensorFlow source tree).
+    pub fn bulk_files(mut self, dir: &str, count: u32, avg_size: u64) -> Self {
+        for i in 0..count {
+            let size =
+                (avg_size as f64 * self.rng.range(0.5, 1.5)) as u64;
+            let digest = self.rng.next_u64();
+            self.pending
+                .add_file(&format!("{dir}/f{i:04}"), size, digest)
+                .unwrap();
+        }
+        self
+    }
+
+    pub fn whiteout(mut self, path: &str) -> Self {
+        self.pending_whiteouts.push(path.to_string());
+        self
+    }
+
+    pub fn env(mut self, k: &str, v: &str) -> Self {
+        self.env.push((k.to_string(), v.to_string()));
+        self
+    }
+
+    pub fn label(mut self, k: &str, v: &str) -> Self {
+        self.labels.insert(k.to_string(), v.to_string());
+        self
+    }
+
+    pub fn entrypoint(mut self, argv: &[&str]) -> Self {
+        self.entrypoint = argv.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    /// Base OS layer: os-release + a representative root filesystem.
+    pub fn base_os(self, name: &str, version: &str, pretty: &str, id: &str, codename: &str) -> Self {
+        let os_release = format!(
+            "NAME=\"{name}\"\nVERSION=\"{version}\"\nID={id}\n\
+             ID_LIKE=debian\nPRETTY_NAME=\"{pretty}\"\n\
+             VERSION_ID=\"{}\"\nHOME_URL=\"http://www.{id}.com/\"\n\
+             SUPPORT_URL=\"http://help.{id}.com/\"\n\
+             BUG_REPORT_URL=\"http://bugs.launchpad.net/{id}/\"\n\
+             VERSION_CODENAME={codename}\nUBUNTU_CODENAME={codename}\n",
+            version.split(' ').next().unwrap_or(version),
+        );
+        self.text_file("/etc/os-release", &os_release)
+            .exe("/bin/sh", 120_000)
+            .exe("/bin/bash", 1_000_000)
+            .exe("/bin/cat", 52_000)
+            .exe("/bin/ls", 126_000)
+            .file("/etc/passwd", 1200)
+            .file("/etc/group", 800)
+            .bulk_files("/usr/lib", 150, 400_000)
+            .bulk_files("/usr/share", 80, 60_000)
+            .commit_layer()
+    }
+
+    /// Install an MPI implementation into the image (container-side build:
+    /// TCP-only transports) and label it for the runtime's ABI check.
+    pub fn with_mpi(self, mpi: &MpiImpl, prefix: &str) -> Self {
+        let abi = mpi.abi.abi_string();
+        let vendor = mpi.vendor.name().to_string();
+        let version = format!(
+            "{}.{}.{}",
+            mpi.version.0, mpi.version.1, mpi.version.2
+        );
+        let mut b = self;
+        for lib in mpi.frontend_libraries() {
+            b = b.file(&format!("{prefix}/lib/{lib}"), 4_500_000);
+        }
+        b = b
+            .exe(&format!("{prefix}/bin/mpiexec"), 900_000)
+            .exe(&format!("{prefix}/bin/mpicc"), 30_000)
+            .file(&format!("{prefix}/etc/mpiexec.conf"), 400);
+        b.label(LABEL_MPI_VENDOR, &vendor)
+            .label(LABEL_MPI_VERSION, &version)
+            .label(LABEL_MPI_ABI, &abi)
+            .commit_layer()
+    }
+
+    /// Install a CUDA toolkit (container side: toolkit + stubs, NOT the
+    /// driver libraries — those only exist on GPU hosts).
+    pub fn with_cuda_toolkit(self, version: (u32, u32)) -> Self {
+        let v = format!("{}.{}", version.0, version.1);
+        let prefix = format!("/usr/local/cuda-{v}");
+        self.file(&format!("{prefix}/lib64/libcudart.so.{v}"), 500_000)
+            .file(&format!("{prefix}/lib64/libcublas.so.{v}"), 60_000_000)
+            .file(&format!("{prefix}/lib64/libcufft.so.{v}"), 40_000_000)
+            .file(&format!("{prefix}/lib64/libcudnn.so.5.1.5"), 80_000_000)
+            .exe(&format!("{prefix}/bin/nvcc"), 20_000_000)
+            .label(LABEL_CUDA_VERSION, &v)
+            .env("CUDA_HOME", &prefix)
+            .commit_layer()
+    }
+
+    pub fn build(self) -> Image {
+        let b = self.commit_layer();
+        let manifest = ImageManifest {
+            env: b.env,
+            entrypoint: b.entrypoint,
+            labels: b.labels,
+            layer_digests: b.layers.iter().map(|l| l.digest).collect(),
+            files_content: b.files_content,
+        };
+        Image {
+            reference: b.reference,
+            manifest,
+            layers: b.layers,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Canned images: the §V evaluation catalog
+// ---------------------------------------------------------------------------
+
+/// The exact os-release the §III.B example prints on the Cray XC50.
+pub const UBUNTU_XENIAL_OS_RELEASE: &str = "NAME=\"Ubuntu\"\n\
+VERSION=\"16.04.2 LTS (Xenial Xerus)\"\n\
+ID=ubuntu\n\
+ID_LIKE=debian\n\
+PRETTY_NAME=\"Ubuntu 16.04.2 LTS\"\n\
+VERSION_ID=\"16.04\"\n\
+HOME_URL=\"http://www.ubuntu.com/\"\n\
+SUPPORT_URL=\"http://help.ubuntu.com/\"\n\
+BUG_REPORT_URL=\"http://bugs.launchpad.net/ubuntu/\"\n\
+VERSION_CODENAME=xenial\n\
+UBUNTU_CODENAME=xenial\n";
+
+/// `docker:ubuntu:xenial` — the §III.B workflow example.
+pub fn ubuntu_xenial() -> Image {
+    ImageBuilder::new("ubuntu:xenial")
+        .base_os(
+            "Ubuntu",
+            "16.04.2 LTS (Xenial Xerus)",
+            "Ubuntu 16.04.2 LTS",
+            "ubuntu",
+            "xenial",
+        )
+        .text_file("/etc/os-release", UBUNTU_XENIAL_OS_RELEASE)
+        .commit_layer()
+        .build()
+}
+
+/// NVIDIA's official CUDA image with the SDK samples (Table V: `nbody` is
+/// "already available as part of the container image").
+pub fn cuda_image() -> Image {
+    ImageBuilder::new("nvidia/cuda-image:8.0")
+        .base_os(
+            "Ubuntu",
+            "16.04.2 LTS (Xenial Xerus)",
+            "Ubuntu 16.04.2 LTS",
+            "ubuntu",
+            "xenial",
+        )
+        .with_cuda_toolkit((8, 0))
+        .exe("/usr/local/cuda/samples/bin/deviceQuery", 600_000)
+        .exe("/usr/local/cuda/samples/bin/nbody", 800_000)
+        .label(LABEL_APP, "cuda-samples")
+        .commit_layer()
+        .build()
+}
+
+/// `tensorflow/tensorflow:1.0.0-devel-gpu-py3` (Table I): Ubuntu 14.04,
+/// Python 3.4.3, CUDA 8.0.44, cuDNN 5.1.5, Bazel + TF source.
+pub fn tensorflow_image() -> Image {
+    ImageBuilder::new("tensorflow/tensorflow:1.0.0-devel-gpu-py3")
+        .base_os(
+            "Ubuntu",
+            "14.04.5 LTS, Trusty Tahr",
+            "Ubuntu 14.04.5 LTS",
+            "ubuntu",
+            "trusty",
+        )
+        .with_cuda_toolkit((8, 0))
+        .bulk_files("/usr/lib/python3.4", 900, 18_000)
+        .bulk_files("/usr/local/lib/python3.4/dist-packages/tensorflow", 1200, 90_000)
+        .bulk_files("/tensorflow", 800, 25_000)
+        .exe("/usr/local/bin/bazel", 90_000_000)
+        .exe("/usr/bin/python3", 4_000_000)
+        .label(LABEL_APP, "tensorflow-1.0.0")
+        .entrypoint(&["/usr/bin/python3"])
+        .commit_layer()
+        .build()
+}
+
+/// The PyFR 1.5.0 image the authors built on the laptop (Table II):
+/// Ubuntu 16.04 + Python 3.5.2 + CUDA 8.0.44 + MPICH 3.1.4 + Metis + PyFR.
+pub fn pyfr_image() -> Image {
+    ImageBuilder::new("pyfr-image:1.5.0")
+        .base_os(
+            "Ubuntu",
+            "16.04.2 LTS (Xenial Xerus)",
+            "Ubuntu 16.04.2 LTS",
+            "ubuntu",
+            "xenial",
+        )
+        .with_cuda_toolkit((8, 0))
+        .with_mpi(&MpiImpl::mpich_3_1_4_container(), "/usr/local/mpich-3.1.4")
+        .bulk_files("/usr/lib/python3.5", 950, 18_000)
+        .bulk_files("/usr/local/lib/python3.5/dist-packages/pyfr", 220, 30_000)
+        .file("/usr/local/lib/libmetis.so.5", 1_800_000)
+        .exe("/usr/bin/python3", 4_200_000)
+        .exe("/usr/local/bin/pyfr", 3_000)
+        .label(LABEL_APP, "pyfr-1.5.0")
+        .commit_layer()
+        .build()
+}
+
+/// OSU micro-benchmark containers A/B/C (Table III/IV): CentOS 7 base,
+/// an MPI built from source, OSU 5.3.2 linked against it.
+pub fn osu_image(mpi: &MpiImpl, tag: &str) -> Image {
+    ImageBuilder::new(&format!("osu-benchmarks:{tag}"))
+        .base_os(
+            "CentOS Linux",
+            "7 (Core)",
+            "CentOS Linux 7 (Core)",
+            "centos",
+            "core",
+        )
+        .with_mpi(mpi, "/usr/local/mpi")
+        .exe("/usr/local/osu/osu_latency", 250_000)
+        .exe("/usr/local/osu/osu_bw", 250_000)
+        .label(LABEL_APP, "osu-micro-benchmarks-5.3.2")
+        .commit_layer()
+        .build()
+}
+
+/// Container A: MPICH 3.1.4.
+pub fn osu_image_a() -> Image {
+    osu_image(&MpiImpl::mpich_3_1_4_container(), "mpich-3.1.4")
+}
+
+/// Container B: MVAPICH2 2.2.
+pub fn osu_image_b() -> Image {
+    osu_image(&MpiImpl::mvapich2_2_2_container(), "mvapich2-2.2")
+}
+
+/// Container C: Intel MPI 2017 update 1.
+pub fn osu_image_c() -> Image {
+    osu_image(&MpiImpl::intel_2017_1_container(), "intelmpi-2017.1")
+}
+
+/// Pynamic 1.3 image (Fig. 3): python:2.7-slim (Debian Jessie) + MPICH
+/// 3.1.4 + the generated shared objects: 495 test modules + 215 utility
+/// libraries, ~1850 functions each.
+pub fn pynamic_image() -> Image {
+    ImageBuilder::new("pynamic:1.3")
+        .base_os(
+            "Debian GNU/Linux",
+            "8 (jessie)",
+            "Debian GNU/Linux 8 (jessie)",
+            "debian",
+            "jessie",
+        )
+        .with_mpi(&MpiImpl::mpich_3_1_4_container(), "/usr/local/mpich-3.1.4")
+        .bulk_files("/usr/lib/python2.7", 700, 15_000)
+        .bulk_files(
+            "/opt/pynamic/modules",
+            crate::apps::pynamic::PYNAMIC_MODULES,
+            1_800_000,
+        )
+        .bulk_files(
+            "/opt/pynamic/utils",
+            crate::apps::pynamic::PYNAMIC_UTILS,
+            1_700_000,
+        )
+        .exe("/usr/bin/python2.7", 3_800_000)
+        .exe("/opt/pynamic/pynamic-pyMPI", 5_200_000)
+        .label(LABEL_APP, "pynamic-1.3")
+        .commit_layer()
+        .build()
+}
+
+/// Open MPI image — NOT MPICH-ABI compatible; used by failure-injection
+/// tests to show the swap precondition rejecting it.
+pub fn openmpi_image() -> Image {
+    ImageBuilder::new("osu-benchmarks:openmpi-2.0")
+        .base_os(
+            "CentOS Linux",
+            "7 (Core)",
+            "CentOS Linux 7 (Core)",
+            "centos",
+            "core",
+        )
+        .with_mpi(&MpiImpl::openmpi_2_0(), "/usr/local/openmpi")
+        .exe("/usr/local/osu/osu_latency", 250_000)
+        .commit_layer()
+        .build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ubuntu_xenial_prints_paper_os_release() {
+        let img = ubuntu_xenial();
+        let content = img
+            .manifest
+            .files_content
+            .get("/etc/os-release")
+            .expect("os-release content");
+        assert!(content.contains("VERSION=\"16.04.2 LTS (Xenial Xerus)\""));
+        assert!(content.contains("UBUNTU_CODENAME=xenial"));
+    }
+
+    #[test]
+    fn osu_containers_carry_their_mpi_labels() {
+        let a = osu_image_a();
+        assert_eq!(a.label(LABEL_MPI_VENDOR), Some("MPICH"));
+        assert_eq!(a.label(LABEL_MPI_VERSION), Some("3.1.4"));
+        assert_eq!(a.label(LABEL_MPI_ABI), Some("12:0:0"));
+        let b = osu_image_b();
+        assert_eq!(b.label(LABEL_MPI_VENDOR), Some("MVAPICH2"));
+        let c = osu_image_c();
+        assert_eq!(c.label(LABEL_MPI_VENDOR), Some("Intel MPI"));
+    }
+
+    #[test]
+    fn images_flatten_with_expected_content() {
+        let img = pyfr_image();
+        let flat = img.flatten().unwrap();
+        assert!(flat.exists("/usr/local/mpich-3.1.4/lib/libmpi.so.12"));
+        assert!(flat.exists("/usr/local/bin/pyfr"));
+        assert!(flat.exists("/usr/local/cuda-8.0/bin/nvcc"));
+        assert!(flat.total_size() > 100_000_000);
+    }
+
+    #[test]
+    fn cuda_image_ships_nbody() {
+        let flat = cuda_image().flatten().unwrap();
+        assert!(flat.exists("/usr/local/cuda/samples/bin/nbody"));
+        assert_eq!(cuda_image().label(LABEL_CUDA_VERSION), Some("8.0"));
+    }
+
+    #[test]
+    fn pynamic_image_has_710_shared_objects() {
+        let flat = pynamic_image().flatten().unwrap();
+        let modules = flat.list_dir("/opt/pynamic/modules").unwrap();
+        let utils = flat.list_dir("/opt/pynamic/utils").unwrap();
+        assert_eq!(modules.len(), 495);
+        assert_eq!(utils.len(), 215);
+    }
+
+    #[test]
+    fn builder_is_deterministic() {
+        let a = ubuntu_xenial();
+        let b = ubuntu_xenial();
+        assert_eq!(a.manifest.layer_digests, b.manifest.layer_digests);
+    }
+}

@@ -1,0 +1,206 @@
+//! Docker-style container images (DESIGN.md S5): references, layers with
+//! whiteouts, manifests with env/labels/entrypoint, and flattening —
+//! "all layers but the last one are discarded" is implemented faithfully
+//! as last-writer-wins per path after applying every layer in order.
+
+pub mod builder;
+
+use std::collections::BTreeMap;
+
+use crate::vfs::{VirtualFs, VfsError};
+
+/// `name:tag` image reference. Accepts the `docker:` transport prefix the
+/// paper's `shifterimg pull docker:ubuntu:xenial` example uses.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ImageRef {
+    pub name: String,
+    pub tag: String,
+}
+
+impl ImageRef {
+    pub fn parse(s: &str) -> Option<ImageRef> {
+        let s = s.strip_prefix("docker:").unwrap_or(s);
+        if s.is_empty() {
+            return None;
+        }
+        let (name, tag) = match s.rsplit_once(':') {
+            Some((n, t)) if !n.is_empty() && !t.is_empty() && !t.contains('/') => {
+                (n.to_string(), t.to_string())
+            }
+            Some(_) => return None,
+            None => (s.to_string(), "latest".to_string()),
+        };
+        Some(ImageRef { name, tag })
+    }
+
+    pub fn canonical(&self) -> String {
+        format!("{}:{}", self.name, self.tag)
+    }
+}
+
+/// One image layer: a filesystem delta plus whiteouts (paths the layer
+/// deletes from the view assembled so far).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub digest: u64,
+    pub tree: VirtualFs,
+    pub whiteouts: Vec<String>,
+}
+
+impl Layer {
+    pub fn new(tree: VirtualFs, whiteouts: Vec<String>) -> Layer {
+        let mut digest: u64 = 0x811c9dc5811c9dc5;
+        for p in tree.paths() {
+            for b in p.as_bytes() {
+                digest ^= *b as u64;
+                digest = digest.wrapping_mul(0x100000001b3);
+            }
+        }
+        for w in &whiteouts {
+            for b in w.as_bytes() {
+                digest ^= (*b as u64) << 1;
+                digest = digest.wrapping_mul(0x100000001b3);
+            }
+        }
+        digest ^= tree.total_size();
+        Layer {
+            digest,
+            tree,
+            whiteouts,
+        }
+    }
+
+    /// Transfer size of the layer (tar.gz over the wire).
+    pub fn compressed_bytes(&self) -> u64 {
+        (self.tree.total_size() as f64 * 0.5) as u64
+    }
+}
+
+/// Image metadata (the Docker manifest + config surface we need).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ImageManifest {
+    pub env: Vec<(String, String)>,
+    pub entrypoint: Vec<String>,
+    pub labels: BTreeMap<String, String>,
+    pub layer_digests: Vec<u64>,
+    /// Retrievable content of small text files (e.g. /etc/os-release) —
+    /// the simulation's stand-in for actual file data.
+    pub files_content: BTreeMap<String, String>,
+}
+
+/// A complete image: manifest + ordered layers (base first).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Image {
+    pub reference: ImageRef,
+    pub manifest: ImageManifest,
+    pub layers: Vec<Layer>,
+}
+
+impl Image {
+    /// Apply all layers in order (whiteouts delete), producing the
+    /// flattened root filesystem the Gateway converts to squashfs.
+    pub fn flatten(&self) -> Result<VirtualFs, VfsError> {
+        let mut root = VirtualFs::new();
+        for layer in &self.layers {
+            for w in &layer.whiteouts {
+                // deleting a path that a previous layer never created is
+                // legal in the tar format; ignore it.
+                let _ = root.remove(w);
+            }
+            root.graft(&layer.tree, "/", "/")?;
+        }
+        Ok(root)
+    }
+
+    /// Total compressed transfer size (what a pull downloads).
+    pub fn transfer_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.compressed_bytes()).sum()
+    }
+
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.manifest.labels.get(key).map(|s| s.as_str())
+    }
+
+    /// Environment as the image config declares it.
+    pub fn env_map(&self) -> BTreeMap<String, String> {
+        self.manifest.env.iter().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_references() {
+        let r = ImageRef::parse("ubuntu:xenial").unwrap();
+        assert_eq!((r.name.as_str(), r.tag.as_str()), ("ubuntu", "xenial"));
+        let r = ImageRef::parse("docker:ubuntu:xenial").unwrap();
+        assert_eq!(r.canonical(), "ubuntu:xenial");
+        let r = ImageRef::parse("tensorflow/tensorflow:1.0.0-devel-gpu-py3")
+            .unwrap();
+        assert_eq!(r.name, "tensorflow/tensorflow");
+        let r = ImageRef::parse("alpine").unwrap();
+        assert_eq!(r.tag, "latest");
+        assert!(ImageRef::parse("").is_none());
+        assert!(ImageRef::parse(":xenial").is_none());
+    }
+
+    fn layer_with(files: &[(&str, u64)]) -> Layer {
+        let mut t = VirtualFs::new();
+        for (i, (p, s)) in files.iter().enumerate() {
+            t.add_file(p, *s, i as u64 + 1).unwrap();
+        }
+        Layer::new(t, vec![])
+    }
+
+    #[test]
+    fn flatten_is_last_writer_wins() {
+        let base = layer_with(&[("/etc/os-release", 100), ("/bin/sh", 50)]);
+        let top = layer_with(&[("/etc/os-release", 200)]);
+        let img = Image {
+            reference: ImageRef::parse("t:1").unwrap(),
+            manifest: ImageManifest::default(),
+            layers: vec![base, top],
+        };
+        let flat = img.flatten().unwrap();
+        assert_eq!(flat.get("/etc/os-release").unwrap().size(), 200);
+        assert!(flat.exists("/bin/sh"));
+    }
+
+    #[test]
+    fn whiteouts_delete_from_earlier_layers() {
+        let base = layer_with(&[("/opt/tool/bin", 10), ("/opt/tool/doc", 5)]);
+        let mut top_tree = VirtualFs::new();
+        top_tree.add_file("/opt/replacement", 7, 99).unwrap();
+        let top = Layer::new(top_tree, vec!["/opt/tool".to_string()]);
+        let img = Image {
+            reference: ImageRef::parse("t:2").unwrap(),
+            manifest: ImageManifest::default(),
+            layers: vec![base, top],
+        };
+        let flat = img.flatten().unwrap();
+        assert!(!flat.exists("/opt/tool/bin"));
+        assert!(flat.exists("/opt/replacement"));
+    }
+
+    #[test]
+    fn layer_digests_differ_by_content() {
+        let a = layer_with(&[("/a", 1)]);
+        let b = layer_with(&[("/b", 1)]);
+        assert_ne!(a.digest, b.digest);
+    }
+
+    #[test]
+    fn transfer_bytes_sum_layers() {
+        let img = Image {
+            reference: ImageRef::parse("t:3").unwrap(),
+            manifest: ImageManifest::default(),
+            layers: vec![
+                layer_with(&[("/a", 1000)]),
+                layer_with(&[("/b", 3000)]),
+            ],
+        };
+        assert_eq!(img.transfer_bytes(), 2000);
+    }
+}

@@ -1,0 +1,48 @@
+//! # shifter-rs — Portable, high-performance containers for HPC
+//!
+//! A full reproduction of *Benedicic, Cruz, Madonna, Mariotti: "Portable,
+//! high-performance containers for HPC" (CSCS, 2017)* as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the Shifter container runtime with the
+//!   paper's native GPU-support (§IV.A) and MPI ABI-swap (§IV.B)
+//!   extensions, plus every substrate the evaluation depends on: Docker
+//!   images/registry, the Image Gateway, a virtual filesystem with
+//!   squashfs loop mounts, a Lustre-like parallel filesystem, InfiniBand
+//!   EDR / Cray Aries fabric models, an MPI implementation catalog with
+//!   libtool-ABI compatibility, GPU device/driver models, a SLURM-like
+//!   workload manager, and the three §V.A host-system profiles.
+//! * **Layer 2 (python/compile, build time)** — the containerized
+//!   applications' compute graphs in JAX, AOT-lowered to HLO text.
+//! * **Layer 1 (python/compile/kernels, build time)** — Pallas kernels for
+//!   the compute hot-spots (all-pairs n-body, tiled matmul, batched
+//!   flux operators), interpret-mode so the CPU PJRT client runs them.
+//!
+//! Python never executes at run time: `rust/src/runtime` loads
+//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and the
+//! containerized applications execute the identical compiled bits natively
+//! and inside Shifter — the paper's performance-portability claim,
+//! reproduced end to end. See DESIGN.md and EXPERIMENTS.md.
+
+pub mod apps;
+pub mod config;
+pub mod docker;
+pub mod fabric;
+pub mod gateway;
+pub mod gpu;
+pub mod hostenv;
+pub mod image;
+pub mod metrics;
+pub mod mpi;
+pub mod pfs;
+pub mod registry;
+pub mod runtime;
+pub mod shifter;
+pub mod util;
+pub mod vfs;
+pub mod wlm;
+
+pub use gateway::ImageGateway;
+pub use hostenv::SystemProfile;
+pub use registry::Registry;
+pub use shifter::{Container, RunOptions, ShifterRuntime};

@@ -1,0 +1,119 @@
+//! `shifter` — the Runtime CLI (§III.B).
+//!
+//! Usage mirrors the paper:
+//! ```text
+//! shifter --system=daint --image=ubuntu:xenial cat /etc/os-release
+//! shifter --system=daint --image=cuda-image --gpus=0,2 ./deviceQuery
+//! shifter --system=daint --image=osu --mpi osu_latency
+//! ```
+//! `--system` selects one of the three §V.A host profiles (we are not
+//! actually on a Cray); the rest is the real Shifter surface.
+
+use shifter_rs::shifter::{RunOptions, ShifterRuntime};
+use shifter_rs::util::cli::CliSpec;
+use shifter_rs::{ImageGateway, Registry, SystemProfile};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: shifter [--system=laptop|cluster|daint] --image=<ref> \
+         [--mpi] [--gpus=LIST] [--verbose] <command…>"
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let spec = CliSpec::new(
+        &[
+            ("system", true),
+            ("image", true),
+            ("mpi", false),
+            ("gpus", true),
+            ("volume", true),
+            ("verbose", false),
+        ],
+        true,
+    );
+    let parsed = match spec.parse(std::env::args().skip(1)) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("shifter: {e}");
+            usage();
+        }
+    };
+    let Some(image) = parsed.get("image") else {
+        eprintln!("shifter: --image is required");
+        usage();
+    };
+    if parsed.positionals.is_empty() {
+        eprintln!("shifter: no command given");
+        usage();
+    }
+
+    let profile = match parsed.get("system").unwrap_or("daint") {
+        "laptop" => SystemProfile::laptop(),
+        "cluster" => SystemProfile::linux_cluster(),
+        "daint" => SystemProfile::piz_daint(),
+        other => {
+            eprintln!("shifter: unknown system '{other}'");
+            usage();
+        }
+    };
+
+    // gateway with the image pre-pulled (one-command demo convenience;
+    // `shifterimg` is the real pull interface)
+    let registry = Registry::dockerhub();
+    let mut gateway = ImageGateway::new(
+        profile
+            .pfs
+            .clone()
+            .unwrap_or_else(shifter_rs::pfs::LustreFs::piz_daint),
+    );
+    if let Err(e) = gateway.pull(&registry, image) {
+        eprintln!("shifter: image error: {e}");
+        std::process::exit(1);
+    }
+
+    let cmd: Vec<&str> = parsed.positionals.iter().map(|s| s.as_str()).collect();
+    let mut opts = RunOptions::new(image, &cmd);
+    opts.mpi = parsed.has("mpi");
+    if let Some(gpus) = parsed.get("gpus") {
+        opts = opts.with_env("CUDA_VISIBLE_DEVICES", gpus);
+    }
+    if let Some(vol) = parsed.get("volume") {
+        match shifter_rs::shifter::VolumeSpec::parse(vol) {
+            Ok(v) => opts.volumes.push(v),
+            Err(e) => {
+                eprintln!("shifter: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    let runtime = ShifterRuntime::new(&profile);
+    match runtime.run(&gateway, &opts) {
+        Ok(container) => {
+            if parsed.has("verbose") {
+                eprint!("{}", container.stage_log.render());
+                for m in container.mounts.iter() {
+                    eprintln!("mount: {m}");
+                }
+            }
+            match container.exec(&cmd) {
+                Ok(out) => {
+                    print!("{out}");
+                    if !out.is_empty() && !out.ends_with('\n') {
+                        println!();
+                    }
+                }
+                Err(e) => {
+                    eprintln!("shifter: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("shifter: {e}");
+            std::process::exit(1);
+        }
+    }
+}

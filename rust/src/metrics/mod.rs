@@ -1,0 +1,155 @@
+//! Measurement protocol and statistics.
+//!
+//! The paper reports "best results after 30 repetitions" for the OSU,
+//! n-body and PyFR experiments, and mean ± stddev over 30 runs for
+//! Pynamic (Fig. 3). This module implements both protocols plus the table
+//! renderer the bench harnesses use to print paper-shaped rows.
+
+pub const PAPER_REPETITIONS: usize = 30;
+
+/// Summary statistics over a set of repetitions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub best: f64,
+    pub worst: f64,
+}
+
+impl Stats {
+    pub fn from_samples(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty(), "no samples");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+                / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let best = samples.iter().copied().fold(f64::INFINITY, f64::min);
+        let worst = samples.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        Stats {
+            n,
+            mean,
+            std: var.sqrt(),
+            best,
+            worst,
+        }
+    }
+}
+
+/// Run `f` for the paper's 30 repetitions and summarize.
+pub fn repeat<F: FnMut(usize) -> f64>(mut f: F) -> Stats {
+    repeat_n(PAPER_REPETITIONS, &mut f)
+}
+
+pub fn repeat_n<F: FnMut(usize) -> f64>(n: usize, f: &mut F) -> Stats {
+    let samples: Vec<f64> = (0..n).map(|rep| f(rep)).collect();
+    Stats::from_samples(&samples)
+}
+
+/// Plain-text table renderer for the bench harnesses (prints the same
+/// rows/columns the paper's tables report).
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_samples(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.n, 3);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.std - 1.0).abs() < 1e-12);
+        assert_eq!(s.best, 1.0);
+        assert_eq!(s.worst, 3.0);
+    }
+
+    #[test]
+    fn stats_single_sample_has_zero_std() {
+        let s = Stats::from_samples(&[5.0]);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.best, 5.0);
+    }
+
+    #[test]
+    fn repeat_runs_thirty() {
+        let mut count = 0;
+        let s = repeat(|rep| {
+            count += 1;
+            rep as f64
+        });
+        assert_eq!(count, PAPER_REPETITIONS);
+        assert_eq!(s.n, PAPER_REPETITIONS);
+        assert_eq!(s.best, 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["Size", "Native"]);
+        t.row(&["32".into(), "1.2".into()]);
+        t.row(&["2M".into(), "480.8".into()]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        assert!(r.contains("Size"));
+        assert!(r.lines().count() >= 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(&["x".into()]);
+    }
+}

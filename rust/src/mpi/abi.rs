@@ -1,0 +1,140 @@
+//! MPI ABI compatibility model (§II-B1, §IV.B).
+//!
+//! The MPICH ABI Compatibility Initiative (announced 2013) is what makes
+//! Shifter's library swap sound: member implementations agree on
+//!  * a specified libtool ABI string,
+//!  * the library names `libmpi`, `libmpicxx`, `libmpifort`,
+//!  * keeping non-standard functions and F08 bindings out of the ABI,
+//!  * those three libraries being the only valid wrapper-compiler deps.
+//!
+//! Shifter "checks that the MPI library to be replaced is compatible with
+//! the host's MPI library: this is done by comparing the libtool ABI string
+//! of both libraries" — implemented by [`LibtoolAbi::host_can_replace`].
+
+/// libtool `current:revision:age` version triple of a shared library.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LibtoolAbi {
+    pub current: u32,
+    pub revision: u32,
+    pub age: u32,
+}
+
+impl LibtoolAbi {
+    pub fn new(current: u32, revision: u32, age: u32) -> Self {
+        assert!(age <= current, "libtool requires age <= current");
+        LibtoolAbi {
+            current,
+            revision,
+            age,
+        }
+    }
+
+    /// The ABI string as embedded in the library (`current:revision:age`).
+    pub fn abi_string(&self) -> String {
+        format!("{}:{}:{}", self.current, self.revision, self.age)
+    }
+
+    /// Parse "c:r:a".
+    pub fn parse(s: &str) -> Option<LibtoolAbi> {
+        let mut it = s.split(':').map(|p| p.parse::<u32>().ok());
+        let (c, r, a) = (it.next()??, it.next()??, it.next()??);
+        if it.next().is_some() || a > c {
+            return None;
+        }
+        Some(LibtoolAbi {
+            current: c,
+            revision: r,
+            age: a,
+        })
+    }
+
+    /// SONAME major as the dynamic linker sees it (libmpi.so.{major}).
+    pub fn soname_major(&self) -> u32 {
+        self.current - self.age
+    }
+
+    /// Interface range this library implements: [current-age, current].
+    pub fn implements(&self, interface: u32) -> bool {
+        interface >= self.current - self.age && interface <= self.current
+    }
+
+    /// Can a host library with ABI `self` replace (be bind-mounted over) a
+    /// container library with ABI `container`, for an application linked
+    /// against the container library?
+    ///
+    /// The application references interfaces up to `container.current`; the
+    /// host library must implement that interface *and* present the same
+    /// SONAME, or the loader would not even resolve it.
+    pub fn host_can_replace(&self, container: &LibtoolAbi) -> bool {
+        self.soname_major() == container.soname_major()
+            && self.implements(container.current)
+    }
+}
+
+/// The MPICH-ABI libmpi libtool string family: every initiative member
+/// ships libmpi.so.12 (libtool 12:x:0 or efficiently-compatible variants).
+pub const MPICH_ABI_SONAME: u32 = 12;
+
+/// Frontend shared libraries the initiative standardizes (§IV.B).
+pub const MPI_FRONTEND_LIBRARIES: [&str; 3] =
+    ["libmpi.so.12", "libmpicxx.so.12", "libmpifort.so.12"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn abi_string_roundtrip() {
+        let a = LibtoolAbi::new(12, 5, 0);
+        assert_eq!(a.abi_string(), "12:5:0");
+        assert_eq!(LibtoolAbi::parse("12:5:0"), Some(a));
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert_eq!(LibtoolAbi::parse("12:5"), None);
+        assert_eq!(LibtoolAbi::parse("12:5:0:0"), None);
+        assert_eq!(LibtoolAbi::parse("a:b:c"), None);
+        assert_eq!(LibtoolAbi::parse("1:0:5"), None); // age > current
+    }
+
+    #[test]
+    fn same_soname_newer_revision_replaces() {
+        let container = LibtoolAbi::new(12, 0, 0); // MPICH 3.1.4's libmpi
+        let host = LibtoolAbi::new(12, 5, 0); // host MVAPICH2
+        assert!(host.host_can_replace(&container));
+    }
+
+    #[test]
+    fn different_soname_cannot_replace() {
+        let container = LibtoolAbi::new(12, 0, 0);
+        let openmpi_style = LibtoolAbi::new(40, 0, 20); // soname 20
+        assert!(!openmpi_style.host_can_replace(&container));
+    }
+
+    #[test]
+    fn extended_interface_still_replaces_via_age() {
+        // a host lib that extended the interface (current 14, age 2) still
+        // serves an app linked against interface 12
+        let host = LibtoolAbi::new(14, 0, 2);
+        let container = LibtoolAbi::new(12, 1, 0);
+        assert!(host.host_can_replace(&container));
+    }
+
+    #[test]
+    fn host_older_than_container_interface_fails() {
+        // container was built against a *newer* interface than host provides
+        let host = LibtoolAbi::new(12, 9, 0);
+        let container = LibtoolAbi::new(14, 0, 2); // soname 12, iface 14
+        assert_eq!(host.soname_major(), container.soname_major());
+        assert!(!host.host_can_replace(&container));
+    }
+
+    #[test]
+    fn frontend_library_names_match_initiative() {
+        assert_eq!(
+            MPI_FRONTEND_LIBRARIES,
+            ["libmpi.so.12", "libmpicxx.so.12", "libmpifort.so.12"]
+        );
+    }
+}

@@ -1,0 +1,282 @@
+//! Catalog of MPI implementations the paper involves (§IV.B, §V).
+//!
+//! Members of the MPICH ABI Compatibility Initiative (with the versions the
+//! paper lists as the first conforming releases):
+//!   MPICH v3.1 (Feb 2014), IBM MPI v2.1 (Dec 2014), Intel MPI v5.0
+//!   (Jun 2014), Cray MPT v7.0.0 (Jun 2014), MVAPICH2 v2.0 (Jun 2014).
+
+use super::abi::{LibtoolAbi, MPICH_ABI_SONAME, MPI_FRONTEND_LIBRARIES};
+use crate::fabric::FabricKind;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MpiVendor {
+    Mpich,
+    Mvapich2,
+    IntelMpi,
+    CrayMpt,
+    IbmMpi,
+    OpenMpi,
+}
+
+impl MpiVendor {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MpiVendor::Mpich => "MPICH",
+            MpiVendor::Mvapich2 => "MVAPICH2",
+            MpiVendor::IntelMpi => "Intel MPI",
+            MpiVendor::CrayMpt => "Cray MPT",
+            MpiVendor::IbmMpi => "IBM MPI",
+            MpiVendor::OpenMpi => "Open MPI",
+        }
+    }
+}
+
+/// An installed MPI implementation (host-side or inside a container image).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MpiImpl {
+    pub vendor: MpiVendor,
+    pub version: (u32, u32, u32),
+    pub abi: LibtoolAbi,
+    /// Fabrics this build has transport modules for. A stock container
+    /// build (ch3:nemesis tcp) lists none of the HPC fabrics.
+    pub native_fabrics: Vec<FabricKind>,
+}
+
+impl MpiImpl {
+    fn new(
+        vendor: MpiVendor,
+        version: (u32, u32, u32),
+        abi: LibtoolAbi,
+        native_fabrics: Vec<FabricKind>,
+    ) -> Self {
+        MpiImpl {
+            vendor,
+            version,
+            abi,
+            native_fabrics,
+        }
+    }
+
+    /// First initiative-conforming release per vendor; anything older is
+    /// not ABI-swappable.
+    pub fn mpich_abi_member(&self) -> bool {
+        match self.vendor {
+            MpiVendor::Mpich => self.version >= (3, 1, 0),
+            MpiVendor::IbmMpi => self.version >= (2, 1, 0),
+            MpiVendor::IntelMpi => self.version >= (5, 0, 0),
+            MpiVendor::CrayMpt => self.version >= (7, 0, 0),
+            MpiVendor::Mvapich2 => self.version >= (2, 0, 0),
+            MpiVendor::OpenMpi => false, // never joined the initiative
+        }
+    }
+
+    pub fn version_string(&self) -> String {
+        format!(
+            "{} {}.{}.{}",
+            self.vendor.name(),
+            self.version.0,
+            self.version.1,
+            self.version.2
+        )
+    }
+
+    /// Frontend libraries this implementation ships (initiative names).
+    pub fn frontend_libraries(&self) -> Vec<String> {
+        if self.mpich_abi_member() {
+            MPI_FRONTEND_LIBRARIES.iter().map(|s| s.to_string()).collect()
+        } else {
+            vec![format!("libmpi.so.{}", self.abi.soname_major())]
+        }
+    }
+
+    /// Does this build drive `fabric` hardware directly?
+    pub fn supports_fabric(&self, fabric: FabricKind) -> bool {
+        fabric == FabricKind::Loopback || self.native_fabrics.contains(&fabric)
+    }
+
+    // ---- catalog: container-side builds (built from source on the laptop)
+
+    /// MPICH 3.1.4 — container A of Tables III/IV, and the PyFR/Pynamic
+    /// image MPI. Stock build: TCP only.
+    pub fn mpich_3_1_4_container() -> MpiImpl {
+        Self::new(
+            MpiVendor::Mpich,
+            (3, 1, 4),
+            LibtoolAbi::new(12, 0, 0),
+            vec![],
+        )
+    }
+
+    /// MPICH 3.2 — the laptop host MPI (§V.A).
+    pub fn mpich_3_2_host() -> MpiImpl {
+        Self::new(
+            MpiVendor::Mpich,
+            (3, 2, 0),
+            LibtoolAbi::new(12, 1, 0),
+            vec![],
+        )
+    }
+
+    /// MVAPICH2 2.2 — container B.
+    pub fn mvapich2_2_2_container() -> MpiImpl {
+        Self::new(
+            MpiVendor::Mvapich2,
+            (2, 2, 0),
+            LibtoolAbi::new(12, 5, 0),
+            vec![],
+        )
+    }
+
+    /// Intel MPI 2017 update 1 — container C.
+    pub fn intel_2017_1_container() -> MpiImpl {
+        Self::new(
+            MpiVendor::IntelMpi,
+            (2017, 1, 0),
+            LibtoolAbi::new(12, 6, 0),
+            vec![],
+        )
+    }
+
+    // ---- catalog: host-side builds
+
+    /// MVAPICH2 2.1 over InfiniBand — the Linux Cluster host MPI.
+    pub fn mvapich2_2_1_host_ib() -> MpiImpl {
+        Self::new(
+            MpiVendor::Mvapich2,
+            (2, 1, 0),
+            LibtoolAbi::new(12, 4, 0),
+            vec![FabricKind::InfinibandEdr],
+        )
+    }
+
+    /// MVAPICH2 2.2b over InfiniBand (the cluster's §V.A listing).
+    pub fn mvapich2_2_2b_host_ib() -> MpiImpl {
+        Self::new(
+            MpiVendor::Mvapich2,
+            (2, 2, 0),
+            LibtoolAbi::new(12, 5, 0),
+            vec![FabricKind::InfinibandEdr],
+        )
+    }
+
+    /// Cray MPT 7.5.0 over Aries — the Piz Daint host MPI.
+    pub fn cray_mpt_7_5_host() -> MpiImpl {
+        Self::new(
+            MpiVendor::CrayMpt,
+            (7, 5, 0),
+            LibtoolAbi::new(12, 7, 0),
+            vec![FabricKind::CrayAries],
+        )
+    }
+
+    /// Pre-initiative Cray MPT (for failure-injection tests).
+    pub fn cray_mpt_6_legacy() -> MpiImpl {
+        Self::new(
+            MpiVendor::CrayMpt,
+            (6, 3, 0),
+            LibtoolAbi::new(10, 0, 0),
+            vec![FabricKind::CrayAries],
+        )
+    }
+
+    /// Open MPI 2.0 (non-member; §IV.B swap must refuse it).
+    pub fn openmpi_2_0() -> MpiImpl {
+        Self::new(
+            MpiVendor::OpenMpi,
+            (2, 0, 1),
+            LibtoolAbi::new(40, 0, 20),
+            vec![FabricKind::InfinibandEdr],
+        )
+    }
+}
+
+/// §IV.B swap precondition: both libraries are initiative members and the
+/// host library's libtool ABI can serve the container-linked application.
+pub fn swap_compatible(container: &MpiImpl, host: &MpiImpl) -> bool {
+    container.mpich_abi_member()
+        && host.mpich_abi_member()
+        && host.abi.host_can_replace(&container.abi)
+        && container.abi.soname_major() == MPICH_ABI_SONAME
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initiative_membership_matches_paper_list() {
+        assert!(MpiImpl::mpich_3_1_4_container().mpich_abi_member());
+        assert!(MpiImpl::mvapich2_2_2_container().mpich_abi_member());
+        assert!(MpiImpl::intel_2017_1_container().mpich_abi_member());
+        assert!(MpiImpl::cray_mpt_7_5_host().mpich_abi_member());
+        assert!(!MpiImpl::cray_mpt_6_legacy().mpich_abi_member());
+        assert!(!MpiImpl::openmpi_2_0().mpich_abi_member());
+    }
+
+    #[test]
+    fn all_three_containers_swap_onto_both_hosts() {
+        // the core Tables III/IV property
+        for container in [
+            MpiImpl::mpich_3_1_4_container(),
+            MpiImpl::mvapich2_2_2_container(),
+            MpiImpl::intel_2017_1_container(),
+        ] {
+            for host in
+                [MpiImpl::mvapich2_2_1_host_ib(), MpiImpl::cray_mpt_7_5_host()]
+            {
+                assert!(
+                    swap_compatible(&container, &host),
+                    "{} -> {}",
+                    container.version_string(),
+                    host.version_string()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn openmpi_never_swaps() {
+        assert!(!swap_compatible(
+            &MpiImpl::openmpi_2_0(),
+            &MpiImpl::cray_mpt_7_5_host()
+        ));
+        assert!(!swap_compatible(
+            &MpiImpl::mpich_3_1_4_container(),
+            &MpiImpl::openmpi_2_0()
+        ));
+    }
+
+    #[test]
+    fn legacy_mpt_rejected() {
+        assert!(!swap_compatible(
+            &MpiImpl::mpich_3_1_4_container(),
+            &MpiImpl::cray_mpt_6_legacy()
+        ));
+    }
+
+    #[test]
+    fn container_builds_have_no_hpc_fabric() {
+        let c = MpiImpl::mpich_3_1_4_container();
+        assert!(!c.supports_fabric(FabricKind::InfinibandEdr));
+        assert!(!c.supports_fabric(FabricKind::CrayAries));
+        assert!(c.supports_fabric(FabricKind::Loopback));
+    }
+
+    #[test]
+    fn host_builds_drive_their_fabric() {
+        assert!(MpiImpl::mvapich2_2_1_host_ib()
+            .supports_fabric(FabricKind::InfinibandEdr));
+        assert!(
+            MpiImpl::cray_mpt_7_5_host().supports_fabric(FabricKind::CrayAries)
+        );
+        assert!(!MpiImpl::cray_mpt_7_5_host()
+            .supports_fabric(FabricKind::InfinibandEdr));
+    }
+
+    #[test]
+    fn frontend_library_names() {
+        let libs = MpiImpl::intel_2017_1_container().frontend_libraries();
+        assert_eq!(libs.len(), 3);
+        assert!(libs.iter().all(|l| l.ends_with(".so.12")));
+    }
+}

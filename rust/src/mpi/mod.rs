@@ -1,0 +1,10 @@
+//! MPI substrate: ABI-compatibility model, implementation catalog and the
+//! communication time model (DESIGN.md S9).
+
+pub mod abi;
+pub mod comm;
+pub mod impls;
+
+pub use abi::{LibtoolAbi, MPICH_ABI_SONAME, MPI_FRONTEND_LIBRARIES};
+pub use comm::Communicator;
+pub use impls::{swap_compatible, MpiImpl, MpiVendor};

@@ -1,0 +1,222 @@
+//! Lustre-like parallel filesystem: MDS queueing + striped OST reads, plus
+//! the node-local filesystem model used for loop-mounted squashfs images.
+
+/// Metadata server: a single service center with bounded throughput.
+/// Under a metadata storm (N clients × M ops each, issued concurrently)
+/// the makespan is dominated by total_ops / throughput.
+#[derive(Debug, Clone)]
+pub struct Mds {
+    /// Sustained metadata operations per second (lookup/open/getattr).
+    pub ops_per_sec: f64,
+    /// Unloaded per-op round-trip latency (µs).
+    pub base_latency_us: f64,
+}
+
+impl Mds {
+    /// Makespan (seconds) for `clients` concurrent clients issuing
+    /// `ops_per_client` metadata ops each.
+    ///
+    /// M/D/1-flavored: at low load the ops pipeline (latency-bound), at
+    /// high load the shared server saturates (throughput-bound).
+    pub fn storm_secs(&self, clients: u64, ops_per_client: u64) -> f64 {
+        let total_ops = (clients * ops_per_client) as f64;
+        let throughput_bound = total_ops / self.ops_per_sec;
+        // each client's own ops serialize on its side:
+        let latency_bound = ops_per_client as f64 * self.base_latency_us * 1e-6;
+        throughput_bound.max(latency_bound)
+    }
+}
+
+/// One object storage target.
+#[derive(Debug, Clone)]
+pub struct Ost {
+    pub bandwidth_gbps: f64,
+}
+
+/// The filesystem: one MDS (the Lustre architecture's scaling bottleneck)
+/// plus an array of OSTs over which files are striped.
+#[derive(Debug, Clone)]
+pub struct LustreFs {
+    pub mds: Mds,
+    pub osts: Vec<Ost>,
+    /// Stripe size in bytes.
+    pub stripe_bytes: u64,
+}
+
+impl LustreFs {
+    /// The Piz Daint scratch filesystem model (Sonexion; §V.A).
+    pub fn piz_daint() -> LustreFs {
+        LustreFs {
+            mds: Mds {
+                ops_per_sec: 25_000.0,
+                base_latency_us: 450.0,
+            },
+            osts: (0..40)
+                .map(|_| Ost {
+                    bandwidth_gbps: 2.0,
+                })
+                .collect(),
+            stripe_bytes: 1 << 20,
+        }
+    }
+
+    /// The two-node Linux cluster's smaller storage.
+    pub fn linux_cluster() -> LustreFs {
+        LustreFs {
+            mds: Mds {
+                ops_per_sec: 8_000.0,
+                base_latency_us: 600.0,
+            },
+            osts: (0..4)
+                .map(|_| Ost {
+                    bandwidth_gbps: 1.2,
+                })
+                .collect(),
+            stripe_bytes: 1 << 20,
+        }
+    }
+
+    pub fn aggregate_bandwidth_gbps(&self) -> f64 {
+        self.osts.iter().map(|o| o.bandwidth_gbps).sum()
+    }
+
+    /// Seconds to read `bytes` of file data with `concurrent_readers`
+    /// nodes pulling simultaneously (shared OST bandwidth), ignoring
+    /// metadata (account for that separately via the MDS).
+    pub fn bulk_read_secs(&self, bytes: u64, concurrent_readers: u64) -> f64 {
+        let stripes = (bytes / self.stripe_bytes).max(1);
+        let usable = self
+            .aggregate_bandwidth_gbps()
+            .min(stripes as f64 * self.osts[0].bandwidth_gbps);
+        // total demand across readers shares the OST array
+        (bytes as f64 * concurrent_readers as f64) / (usable * 1e9)
+    }
+
+    /// The full cost of every client opening+reading a small file (a DLL):
+    /// MDS storm + per-node OST fetch (page cache: one fetch per node).
+    pub fn dll_load_storm_secs(
+        &self,
+        ranks: u64,
+        ranks_per_node: u64,
+        files: u64,
+        stats_per_open: u64,
+        file_bytes: u64,
+    ) -> f64 {
+        let nodes = ranks.div_ceil(ranks_per_node).max(1);
+        let mds = self
+            .mds
+            .storm_secs(ranks, files * stats_per_open);
+        let ost = self.bulk_read_secs(files * file_bytes, nodes);
+        mds + ost
+    }
+}
+
+/// Node-local filesystem (RAM-backed page cache / local disk) — what a
+/// loop-mounted squashfs image reads resolve against after the single
+/// PFS lookup.
+#[derive(Debug, Clone)]
+pub struct NodeLocalFs {
+    /// Local metadata op latency (µs) — kernel dcache hit.
+    pub stat_latency_us: f64,
+    /// Local read bandwidth (GB/s) — decompression-bound for squashfs.
+    pub read_bandwidth_gbps: f64,
+}
+
+impl NodeLocalFs {
+    pub fn squashfs_loop_mount() -> NodeLocalFs {
+        NodeLocalFs {
+            stat_latency_us: 2.5,
+            read_bandwidth_gbps: 1.1,
+        }
+    }
+
+    /// Per-rank cost of opening+reading `files` local files. Ranks on a
+    /// node share the page cache, so file data is read once per node; the
+    /// stat cost is per-rank but parallel across ranks (they proceed
+    /// independently) — the makespan is the slowest rank.
+    pub fn dll_load_secs(
+        &self,
+        files: u64,
+        stats_per_open: u64,
+        file_bytes: u64,
+    ) -> f64 {
+        let stats = (files * stats_per_open) as f64 * self.stat_latency_us * 1e-6;
+        let reads = (files * file_bytes) as f64 / (self.read_bandwidth_gbps * 1e9);
+        stats + reads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mds_storm_saturates_at_scale() {
+        let mds = Mds {
+            ops_per_sec: 10_000.0,
+            base_latency_us: 500.0,
+        };
+        // low client count: latency-bound
+        let t_small = mds.storm_secs(1, 100);
+        assert!((t_small - 0.05).abs() < 1e-9);
+        // thousands of clients: throughput-bound, grows linearly
+        let t_1k = mds.storm_secs(1000, 100);
+        let t_2k = mds.storm_secs(2000, 100);
+        assert!((t_2k / t_1k - 2.0).abs() < 1e-9);
+        assert!((t_1k - 10.0).abs() < 1e-9); // 100k ops / 10k ops/s
+    }
+
+    #[test]
+    fn bulk_read_shares_ost_bandwidth() {
+        let fs = LustreFs::piz_daint();
+        let one = fs.bulk_read_secs(1 << 30, 1);
+        let many = fs.bulk_read_secs(1 << 30, 16);
+        assert!((many / one - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn small_file_limited_by_stripe_parallelism() {
+        let fs = LustreFs::piz_daint();
+        // a 64 KiB file only touches one OST
+        let t = fs.bulk_read_secs(64 * 1024, 1);
+        let expected = (64.0 * 1024.0) / (2.0e9);
+        assert!((t - expected).abs() / expected < 1e-9);
+    }
+
+    #[test]
+    fn native_dll_storm_dwarfs_local_loads() {
+        // the Fig. 3 mechanism at 3072 ranks / 12 per node
+        let fs = LustreFs::piz_daint();
+        let native = fs.dll_load_storm_secs(3072, 12, 710, 4, 1_800_000);
+        let local = NodeLocalFs::squashfs_loop_mount()
+            .dll_load_secs(710, 4, 1_800_000);
+        assert!(
+            native > 20.0 * local,
+            "native={native:.1}s local={local:.3}s"
+        );
+    }
+
+    #[test]
+    fn native_storm_grows_with_ranks_local_flat() {
+        let fs = LustreFs::piz_daint();
+        let n48 = fs.dll_load_storm_secs(48, 12, 710, 4, 1_800_000);
+        let n3072 = fs.dll_load_storm_secs(3072, 12, 710, 4, 1_800_000);
+        assert!(n3072 > 10.0 * n48);
+        let l = NodeLocalFs::squashfs_loop_mount();
+        // local cost does not depend on rank count at all
+        assert_eq!(
+            l.dll_load_secs(710, 4, 1_800_000),
+            l.dll_load_secs(710, 4, 1_800_000)
+        );
+    }
+
+    #[test]
+    fn cluster_fs_slower_than_daint() {
+        let d = LustreFs::piz_daint();
+        let c = LustreFs::linux_cluster();
+        assert!(
+            c.mds.storm_secs(100, 100) > d.mds.storm_secs(100, 100)
+        );
+        assert!(c.aggregate_bandwidth_gbps() < d.aggregate_bandwidth_gbps());
+    }
+}

@@ -1,0 +1,15 @@
+//! Parallel filesystem substrate: a Lustre-like MDS/OST queueing model
+//! (DESIGN.md S7).
+//!
+//! This is the mechanism behind Fig. 3: "for each DLL operation the compute
+//! node needs to request the location of the shared object to the Lustre
+//! Metadata server (MDS) and then fetch the memory block with the shared
+//! object from the Object Storage Target (OST). The main cause of the long
+//! start-up time are the repeated accesses to the MDS." Shifter avoids the
+//! storm because the squashfs image is loop-mounted locally: one MDS
+//! lookup per compute node, then block reads go straight to the OSTs and
+//! metadata operations are served by the local kernel.
+
+pub mod lustre;
+
+pub use lustre::{LustreFs, Mds, NodeLocalFs, Ost};

@@ -1,0 +1,146 @@
+//! Remote Docker registry model (DESIGN.md S5) — the hub.docker.com
+//! stand-in. Holds pushed images keyed by reference; pulls are digest-aware
+//! (unchanged layers are not re-downloaded) and metered by a WAN bandwidth
+//! model so the Gateway's pull reports carry realistic transfer times.
+
+use std::collections::BTreeMap;
+
+use crate::image::{builder, Image, ImageRef};
+
+#[derive(Debug, thiserror::Error)]
+pub enum RegistryError {
+    #[error("image not found in registry: {0}")]
+    NotFound(String),
+    #[error("invalid image reference: {0}")]
+    BadReference(String),
+}
+
+/// The remote registry.
+#[derive(Debug, Default)]
+pub struct Registry {
+    images: BTreeMap<ImageRef, Image>,
+    /// WAN bandwidth between the HPC center and the registry (bytes/s).
+    pub download_bytes_per_sec: f64,
+    /// Per-layer round-trip overhead (manifest + blob HEAD requests).
+    pub per_layer_overhead_s: f64,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            images: BTreeMap::new(),
+            download_bytes_per_sec: 80e6, // ~640 Mbit/s center uplink
+            per_layer_overhead_s: 0.35,
+        }
+    }
+
+    /// A registry preloaded with every image the paper's evaluation pulls.
+    pub fn dockerhub() -> Registry {
+        let mut r = Registry::new();
+        for img in [
+            builder::ubuntu_xenial(),
+            builder::cuda_image(),
+            builder::tensorflow_image(),
+            builder::pyfr_image(),
+            builder::osu_image_a(),
+            builder::osu_image_b(),
+            builder::osu_image_c(),
+            builder::pynamic_image(),
+            builder::openmpi_image(),
+        ] {
+            r.push(img);
+        }
+        r
+    }
+
+    /// `docker push`: overwrite-by-reference, as Docker Hub does for tags.
+    pub fn push(&mut self, image: Image) {
+        self.images.insert(image.reference.clone(), image);
+    }
+
+    pub fn lookup(&self, reference: &str) -> Result<&Image, RegistryError> {
+        let r = ImageRef::parse(reference)
+            .ok_or_else(|| RegistryError::BadReference(reference.into()))?;
+        self.images
+            .get(&r)
+            .ok_or_else(|| RegistryError::NotFound(r.canonical()))
+    }
+
+    pub fn list(&self) -> Vec<String> {
+        self.images.keys().map(|r| r.canonical()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+
+    /// Seconds to download the layers of `image` that are not already in
+    /// `have_layers` (content-addressed cache).
+    pub fn download_secs(&self, image: &Image, have_layers: &[u64]) -> f64 {
+        let mut secs = 0.0;
+        for layer in &image.layers {
+            if have_layers.contains(&layer.digest) {
+                continue;
+            }
+            secs += self.per_layer_overhead_s
+                + layer.compressed_bytes() as f64 / self.download_bytes_per_sec;
+        }
+        secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dockerhub_has_the_evaluation_catalog() {
+        let r = Registry::dockerhub();
+        assert!(r.lookup("ubuntu:xenial").is_ok());
+        assert!(r.lookup("docker:ubuntu:xenial").is_ok()); // transport prefix
+        assert!(r.lookup("tensorflow/tensorflow:1.0.0-devel-gpu-py3").is_ok());
+        assert!(r.lookup("pyfr-image:1.5.0").is_ok());
+        assert!(r.lookup("osu-benchmarks:mpich-3.1.4").is_ok());
+        assert!(r.lookup("pynamic:1.3").is_ok());
+        assert!(r.lookup("nope:missing").is_err());
+    }
+
+    #[test]
+    fn push_then_lookup() {
+        let mut r = Registry::new();
+        assert!(r.is_empty());
+        r.push(builder::ubuntu_xenial());
+        assert_eq!(r.len(), 1);
+        assert_eq!(
+            r.lookup("ubuntu:xenial").unwrap().reference.canonical(),
+            "ubuntu:xenial"
+        );
+    }
+
+    #[test]
+    fn download_time_scales_with_size_and_caching() {
+        let r = Registry::dockerhub();
+        let tf = r.lookup("tensorflow/tensorflow:1.0.0-devel-gpu-py3").unwrap();
+        let full = r.download_secs(tf, &[]);
+        assert!(full > 1.0, "tf image should take seconds: {full}");
+        // all layers cached -> free
+        let digests: Vec<u64> = tf.layers.iter().map(|l| l.digest).collect();
+        assert_eq!(r.download_secs(tf, &digests), 0.0);
+        // partial cache: cheaper than full
+        let partial = r.download_secs(tf, &digests[..1]);
+        assert!(partial < full);
+    }
+
+    #[test]
+    fn bad_reference_rejected() {
+        let r = Registry::dockerhub();
+        assert!(matches!(
+            r.lookup(""),
+            Err(RegistryError::BadReference(_))
+        ));
+    }
+}

@@ -1,0 +1,252 @@
+//! AOT artifact catalog: parses `artifacts/manifest.json` (emitted by
+//! `python/compile/aot.py`) into typed signatures the executor validates
+//! inputs against, and the FLOP counts the device performance model uses.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    F64,
+    S32,
+    S64,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s {
+            "f32" => Some(Dtype::F32),
+            "f64" => Some(Dtype::F64),
+            "s32" => Some(Dtype::S32),
+            "s64" => Some(Dtype::S64),
+            _ => None,
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::S32 => 4,
+            Dtype::F64 | Dtype::S64 => 8,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSig {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    pub flops_per_call: u64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArtifactError {
+    #[error("cannot read {0}: {1}")]
+    Io(PathBuf, std::io::Error),
+    #[error("manifest parse error: {0}")]
+    Parse(String),
+    #[error("artifact not in catalog: {0}")]
+    Unknown(String),
+    #[error("artifact {artifact}: input {index} ({name}) expects {expected} elements, got {got}")]
+    ShapeMismatch {
+        artifact: String,
+        index: usize,
+        name: String,
+        expected: usize,
+        got: usize,
+    },
+}
+
+#[derive(Debug, Default)]
+pub struct ArtifactCatalog {
+    artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn parse_sig(j: &Json) -> Result<TensorSig, ArtifactError> {
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ArtifactError::Parse("sig missing name".into()))?;
+    let dtype = j
+        .get("dtype")
+        .and_then(Json::as_str)
+        .and_then(Dtype::parse)
+        .ok_or_else(|| ArtifactError::Parse(format!("bad dtype for {name}")))?;
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ArtifactError::Parse(format!("bad shape for {name}")))?
+        .iter()
+        .map(|v| v.as_u64().map(|u| u as usize))
+        .collect::<Option<Vec<_>>>()
+        .ok_or_else(|| ArtifactError::Parse(format!("bad dims for {name}")))?;
+    Ok(TensorSig {
+        name: name.to_string(),
+        shape,
+        dtype,
+    })
+}
+
+impl ArtifactCatalog {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactCatalog, ArtifactError> {
+        let dir = dir.as_ref();
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .map_err(|e| ArtifactError::Io(mpath.clone(), e))?;
+        Self::from_manifest_json(&text, dir)
+    }
+
+    pub fn from_manifest_json(
+        text: &str,
+        dir: &Path,
+    ) -> Result<ArtifactCatalog, ArtifactError> {
+        let j = Json::parse(text).map_err(|e| ArtifactError::Parse(e.to_string()))?;
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| ArtifactError::Parse("no artifacts key".into()))?;
+        let mut catalog = ArtifactCatalog::default();
+        for (name, entry) in arts {
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ArtifactError::Parse(format!("{name}: no file")))?;
+            let inputs = entry
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| ArtifactError::Parse(format!("{name}: no inputs")))?
+                .iter()
+                .map(parse_sig)
+                .collect::<Result<Vec<_>, _>>()?;
+            let outputs = entry
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| ArtifactError::Parse(format!("{name}: no outputs")))?
+                .iter()
+                .map(parse_sig)
+                .collect::<Result<Vec<_>, _>>()?;
+            let flops = entry
+                .get("flops_per_call")
+                .and_then(Json::as_u64)
+                .unwrap_or(0);
+            catalog.artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    hlo_path: dir.join(file),
+                    inputs,
+                    outputs,
+                    flops_per_call: flops,
+                },
+            );
+        }
+        Ok(catalog)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec, ArtifactError> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| ArtifactError::Unknown(name.to_string()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "generator": "shifter-rs-aot-1",
+      "artifacts": {
+        "pyfr_step": {
+          "file": "pyfr_step.hlo.txt",
+          "inputs": [
+            {"name": "u", "shape": [2048, 8, 4], "dtype": "f32"},
+            {"name": "op_div", "shape": [8, 8], "dtype": "f32"},
+            {"name": "dt", "shape": [], "dtype": "f32"}
+          ],
+          "outputs": [
+            {"name": "u", "shape": [2048, 8, 4], "dtype": "f32"},
+            {"name": "residual", "shape": [], "dtype": "f32"}
+          ],
+          "flops_per_call": 1310720
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let c =
+            ArtifactCatalog::from_manifest_json(SAMPLE, Path::new("/tmp/a"))
+                .unwrap();
+        assert_eq!(c.len(), 1);
+        let spec = c.get("pyfr_step").unwrap();
+        assert_eq!(spec.inputs.len(), 3);
+        assert_eq!(spec.inputs[0].element_count(), 2048 * 8 * 4);
+        assert_eq!(spec.inputs[2].shape.len(), 0); // scalar
+        assert_eq!(spec.outputs[1].name, "residual");
+        assert_eq!(spec.flops_per_call, 1_310_720);
+        assert_eq!(spec.hlo_path, Path::new("/tmp/a/pyfr_step.hlo.txt"));
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        let c =
+            ArtifactCatalog::from_manifest_json(SAMPLE, Path::new("/tmp/a"))
+                .unwrap();
+        assert!(matches!(c.get("nope"), Err(ArtifactError::Unknown(_))));
+    }
+
+    #[test]
+    fn dtype_parsing() {
+        assert_eq!(Dtype::parse("f32"), Some(Dtype::F32));
+        assert_eq!(Dtype::parse("f64"), Some(Dtype::F64));
+        assert_eq!(Dtype::parse("s32"), Some(Dtype::S32));
+        assert_eq!(Dtype::parse("bf16"), None);
+        assert_eq!(Dtype::F64.size_bytes(), 8);
+    }
+
+    #[test]
+    fn real_checked_in_manifest_loads_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let c = ArtifactCatalog::load(&dir).unwrap();
+            for name in
+                ["mnist_train", "cifar_train", "nbody_step", "pyfr_step"]
+            {
+                let spec = c.get(name).unwrap();
+                assert!(spec.hlo_path.exists(), "{name} hlo missing");
+                assert!(spec.flops_per_call > 0);
+            }
+        }
+    }
+}

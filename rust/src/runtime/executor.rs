@@ -1,0 +1,315 @@
+//! PJRT executor (DESIGN.md S13): loads AOT HLO-text artifacts and runs
+//! them on the CPU PJRT client via the `xla` crate.
+//!
+//! This is the "same bits" guarantee of the reproduction: native runs and
+//! containerized runs execute the *identical* compiled executable — any
+//! performance delta is runtime overhead, which is what the paper measures.
+//!
+//! Pattern from /opt/xla-example/load_hlo: HLO text (never serialized
+//! protos — xla_extension 0.5.1 rejects jax≥0.5's 64-bit ids) →
+//! `HloModuleProto::from_text_file` → compile → execute, outputs are a
+//! 1-tuple (return_tuple=True at lowering) decomposed with `to_tuple`.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use super::artifact::{ArtifactCatalog, ArtifactError, ArtifactSpec, Dtype};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ExecError {
+    #[error(transparent)]
+    Artifact(#[from] ArtifactError),
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("artifact {0}: expected {1} inputs, got {2}")]
+    Arity(String, usize, usize),
+    #[error("artifact {artifact}: input {index} dtype mismatch")]
+    DtypeMismatch { artifact: String, index: usize },
+}
+
+impl From<xla::Error> for ExecError {
+    fn from(e: xla::Error) -> Self {
+        ExecError::Xla(e.to_string())
+    }
+}
+
+/// A host-side tensor to feed an artifact.
+#[derive(Debug, Clone)]
+pub enum TensorValue {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+}
+
+impl TensorValue {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorValue::F32(v) => v.len(),
+            TensorValue::F64(v) => v.len(),
+            TensorValue::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            TensorValue::F32(_) => Dtype::F32,
+            TensorValue::F64(_) => Dtype::F64,
+            TensorValue::I32(_) => Dtype::S32,
+        }
+    }
+
+    fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal, ExecError> {
+        // §Perf L3-1: single-copy literal creation. The obvious
+        // `Literal::vec1(v).reshape(&dims)` copies the host buffer twice
+        // (once into the rank-1 literal, once in reshape); building from
+        // untyped bytes with the final shape copies exactly once.
+        fn as_bytes<T>(v: &[T]) -> &[u8] {
+            unsafe {
+                std::slice::from_raw_parts(
+                    v.as_ptr() as *const u8,
+                    std::mem::size_of_val(v),
+                )
+            }
+        }
+        let (ty, bytes) = match self {
+            TensorValue::F32(v) => (xla::ElementType::F32, as_bytes(v)),
+            TensorValue::F64(v) => (xla::ElementType::F64, as_bytes(v)),
+            TensorValue::I32(v) => (xla::ElementType::S32, as_bytes(v)),
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            ty, shape, bytes,
+        )?)
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            TensorValue::F32(v) => v,
+            _ => panic!("not f32"),
+        }
+    }
+
+    pub fn as_f64(&self) -> &[f64] {
+        match self {
+            TensorValue::F64(v) => v,
+            _ => panic!("not f64"),
+        }
+    }
+}
+
+/// One artifact execution's result: decomposed outputs + real wall time.
+#[derive(Debug)]
+pub struct ExecResult {
+    pub outputs: Vec<TensorValue>,
+    pub wall: std::time::Duration,
+    pub flops: u64,
+}
+
+impl ExecResult {
+    /// Achieved GFLOP/s of this real CPU execution.
+    pub fn achieved_gflops(&self) -> f64 {
+        self.flops as f64 / self.wall.as_secs_f64() / 1e9
+    }
+}
+
+/// The executor: a PJRT CPU client + compile cache over the catalog.
+pub struct Executor {
+    client: xla::PjRtClient,
+    catalog: ArtifactCatalog,
+    compiled: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Executor {
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Executor, ExecError> {
+        let catalog = ArtifactCatalog::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Executor {
+            client,
+            catalog,
+            compiled: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn catalog(&self) -> &ArtifactCatalog {
+        &self.catalog
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn ensure_compiled(&self, name: &str) -> Result<(), ExecError> {
+        if self.compiled.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.catalog.get(name)?;
+        let path = spec.hlo_path.to_string_lossy().to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compiled.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    fn validate(
+        &self,
+        spec: &ArtifactSpec,
+        inputs: &[TensorValue],
+    ) -> Result<(), ExecError> {
+        if inputs.len() != spec.inputs.len() {
+            return Err(ExecError::Arity(
+                spec.name.clone(),
+                spec.inputs.len(),
+                inputs.len(),
+            ));
+        }
+        for (i, (val, sig)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if val.dtype() != sig.dtype {
+                return Err(ExecError::DtypeMismatch {
+                    artifact: spec.name.clone(),
+                    index: i,
+                });
+            }
+            if val.len() != sig.element_count() {
+                return Err(ArtifactError::ShapeMismatch {
+                    artifact: spec.name.clone(),
+                    index: i,
+                    name: sig.name.clone(),
+                    expected: sig.element_count(),
+                    got: val.len(),
+                }
+                .into());
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact with validated inputs; returns decomposed
+    /// outputs plus the real wall-clock of the PJRT execution.
+    pub fn execute(
+        &self,
+        name: &str,
+        inputs: &[TensorValue],
+    ) -> Result<ExecResult, ExecError> {
+        let spec = self.catalog.get(name)?.clone();
+        self.validate(&spec, inputs)?;
+        self.ensure_compiled(name)?;
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&spec.inputs)
+            .map(|(v, sig)| v.to_literal(&sig.shape))
+            .collect::<Result<_, _>>()?;
+
+        let compiled = self.compiled.borrow();
+        let exe = compiled.get(name).expect("just compiled");
+        let start = Instant::now();
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let wall = start.elapsed();
+        drop(compiled);
+
+        let parts = tuple.to_tuple()?;
+        let mut outputs = Vec::with_capacity(parts.len());
+        for (lit, sig) in parts.into_iter().zip(&spec.outputs) {
+            let v = match sig.dtype {
+                Dtype::F32 => TensorValue::F32(lit.to_vec::<f32>()?),
+                Dtype::F64 => TensorValue::F64(lit.to_vec::<f64>()?),
+                Dtype::S32 | Dtype::S64 => TensorValue::I32(lit.to_vec::<i32>()?),
+            };
+            outputs.push(v);
+        }
+        Ok(ExecResult {
+            outputs,
+            wall,
+            flops: spec.flops_per_call,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifact_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn pyfr_step_executes_and_zero_dt_is_identity() {
+        let Some(dir) = artifact_dir() else { return };
+        let ex = Executor::new(dir).unwrap();
+        let spec = ex.catalog().get("pyfr_step").unwrap();
+        let n_u = spec.inputs[0].element_count();
+        let n_op = spec.inputs[1].element_count();
+        let u: Vec<f32> = (0..n_u).map(|i| (i % 17) as f32 * 0.1).collect();
+        let op: Vec<f32> = (0..n_op).map(|i| (i % 5) as f32 * 0.01).collect();
+        let res = ex
+            .execute(
+                "pyfr_step",
+                &[
+                    TensorValue::F32(u.clone()),
+                    TensorValue::F32(op),
+                    TensorValue::F32(vec![0.0]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(res.outputs.len(), 2);
+        assert_eq!(res.outputs[0].as_f32(), &u[..]); // dt=0 identity
+        assert!(res.wall.as_secs_f64() > 0.0);
+    }
+
+    #[test]
+    fn arity_and_dtype_validation() {
+        let Some(dir) = artifact_dir() else { return };
+        let ex = Executor::new(dir).unwrap();
+        let err = ex.execute("pyfr_step", &[]).unwrap_err();
+        assert!(matches!(err, ExecError::Arity(..)));
+        let spec = ex.catalog().get("pyfr_step").unwrap();
+        let bad = vec![
+            TensorValue::F64(vec![0.0; spec.inputs[0].element_count()]),
+            TensorValue::F32(vec![0.0; spec.inputs[1].element_count()]),
+            TensorValue::F32(vec![0.0]),
+        ];
+        let err = ex.execute("pyfr_step", &bad).unwrap_err();
+        assert!(matches!(err, ExecError::DtypeMismatch { .. }));
+    }
+
+    #[test]
+    fn nbody_step_conserves_mass_column() {
+        let Some(dir) = artifact_dir() else { return };
+        let ex = Executor::new(dir).unwrap();
+        let spec = ex.catalog().get("nbody_step").unwrap();
+        let n = spec.inputs[0].shape[0];
+        let mut pos4 = vec![0.0f64; n * 4];
+        for i in 0..n {
+            pos4[i * 4] = (i as f64 * 0.37).sin() * 10.0;
+            pos4[i * 4 + 1] = (i as f64 * 0.73).cos() * 10.0;
+            pos4[i * 4 + 2] = (i as f64 * 1.31).sin() * 10.0;
+            pos4[i * 4 + 3] = 1.0 + (i % 3) as f64 * 0.25;
+        }
+        let vel = vec![0.0f64; n * 3];
+        let res = ex
+            .execute(
+                "nbody_step",
+                &[
+                    TensorValue::F64(pos4.clone()),
+                    TensorValue::F64(vel),
+                    TensorValue::F64(vec![1e-3]),
+                ],
+            )
+            .unwrap();
+        let new_pos4 = res.outputs[0].as_f64();
+        for i in 0..n {
+            assert_eq!(new_pos4[i * 4 + 3], pos4[i * 4 + 3], "mass {i}");
+        }
+        assert!(res.achieved_gflops() > 0.0);
+    }
+}

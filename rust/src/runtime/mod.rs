@@ -1,0 +1,14 @@
+//! PJRT artifact runtime (DESIGN.md S13): catalog of AOT-compiled HLO
+//! artifacts + the executor that runs them on the CPU PJRT client.
+//! Python never runs here — `make artifacts` produced the HLO once.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{ArtifactCatalog, ArtifactError, ArtifactSpec, Dtype, TensorSig};
+pub use executor::{ExecError, ExecResult, Executor, TensorValue};
+
+/// Default artifact directory relative to the repo root.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

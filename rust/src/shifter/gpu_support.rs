@@ -1,0 +1,316 @@
+//! Native GPU support (§IV.A) — the first half of the paper's contribution.
+//!
+//! Activation trigger: `CUDA_VISIBLE_DEVICES` present in the environment
+//! with a valid value. When triggered, four operations run:
+//!   1. verify CUDA_VISIBLE_DEVICES is present and valid;
+//!   2. add the GPU device files to the container;
+//!   3. bind mount the CUDA driver libraries (cuda, nvidia-compiler,
+//!      nvidia-ptxjitcompiler, nvidia-encode, nvidia-ml,
+//!      nvidia-fatbinaryloader, nvidia-opencl);
+//!   4. bind mount NVIDIA binaries (nvidia-smi).
+//!
+//! Plus the §IV.A.3 renumbering guarantee: exposed devices are addressable
+//! from 0 inside the container regardless of their host ids.
+
+use std::collections::BTreeMap;
+
+use crate::config::UdiRootConfig;
+use crate::gpu::{parse_cuda_visible_devices, NvidiaDriver, DRIVER_BINARIES, DRIVER_LIBRARIES};
+use crate::image::builder::LABEL_CUDA_VERSION;
+use crate::vfs::{MountTable, VNode, VirtualFs};
+
+/// Where driver libraries land inside the container (prepended to the
+/// container's library search path via ld.so.conf injection).
+pub const CONTAINER_GPU_LIB_DIR: &str = "/usr/lib64/shifter-gpu";
+pub const CONTAINER_GPU_BIN_DIR: &str = "/usr/bin";
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum GpuSupportError {
+    #[error("nvidia-uvm driver is not loaded on the host")]
+    DriverNotLoaded,
+    #[error("CUDA_VISIBLE_DEVICES requests device {0} but host has {1} devices")]
+    DeviceOutOfRange(u32, u32),
+    #[error(
+        "container was built for CUDA {wanted_major}.{wanted_minor} but host \
+         driver {driver_major}.{driver_minor} is too old"
+    )]
+    CudaIncompatible {
+        wanted_major: u32,
+        wanted_minor: u32,
+        driver_major: u32,
+        driver_minor: u32,
+    },
+    #[error("host driver library missing: {0}")]
+    MissingHostLibrary(String),
+}
+
+/// What GPU support did to the container.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSupportReport {
+    /// Host CUDA device ids made visible (CUDA_VISIBLE_DEVICES order).
+    pub host_devices: Vec<u32>,
+    /// Container-side ids: always 0..n (§IV.A.3).
+    pub container_devices: Vec<u32>,
+    /// Driver libraries bind-mounted in.
+    pub libraries: Vec<String>,
+    /// Binaries bind-mounted in.
+    pub binaries: Vec<String>,
+    /// Device files added.
+    pub device_files: Vec<String>,
+}
+
+/// Attempt GPU support activation during environment preparation.
+///
+/// Returns Ok(None) when the trigger condition is absent or invalid —
+/// §IV.A: "If, for any reason, the workload manager does not set
+/// CUDA_VISIBLE_DEVICES or assigns it an invalid value, Shifter does not
+/// trigger its GPU support procedure."
+pub fn activate(
+    env: &BTreeMap<String, String>,
+    driver: Option<&NvidiaDriver>,
+    config: &UdiRootConfig,
+    host_fs: &VirtualFs,
+    image_labels: &BTreeMap<String, String>,
+    rootfs: &mut VirtualFs,
+    mounts: &mut MountTable,
+) -> Result<Option<GpuSupportReport>, GpuSupportError> {
+    // 1. verify the trigger variable
+    let value = match env.get("CUDA_VISIBLE_DEVICES") {
+        Some(v) => v,
+        None => return Ok(None),
+    };
+    let requested = match parse_cuda_visible_devices(value) {
+        Some(r) => r,
+        None => return Ok(None), // invalid value -> not triggered
+    };
+
+    // prerequisites (§IV.A.1): CUDA-capable host with nvidia-uvm loaded
+    let driver = match driver {
+        Some(d) if d.uvm_loaded => d,
+        _ => return Err(GpuSupportError::DriverNotLoaded),
+    };
+    let have = driver.cuda_device_count();
+    for &d in &requested {
+        if d >= have {
+            return Err(GpuSupportError::DeviceOutOfRange(d, have));
+        }
+    }
+
+    // PTX forward-compatibility: a container built against a newer CUDA
+    // toolkit than the host driver supports cannot run (§II-B2).
+    if let Some(cuda) = image_labels.get(LABEL_CUDA_VERSION) {
+        let mut it = cuda.split('.').map(|p| p.parse::<u32>().unwrap_or(0));
+        let wanted = (it.next().unwrap_or(0), it.next().unwrap_or(0));
+        if !driver.supports_cuda(wanted) {
+            return Err(GpuSupportError::CudaIncompatible {
+                wanted_major: wanted.0,
+                wanted_minor: wanted.1,
+                driver_major: driver.version.0,
+                driver_minor: driver.version.1,
+            });
+        }
+    }
+
+    // 2. add GPU device files
+    let device_files = driver.device_files(&requested);
+    for f in &device_files {
+        let node = host_fs
+            .get(f)
+            .cloned()
+            .unwrap_or(VNode::Device { major: 195, minor: 0 });
+        rootfs.insert(f, node).expect("device file insert");
+        mounts.bind(f, f, false, "gpu support");
+    }
+
+    // 3. bind mount the driver libraries
+    let mut libraries = Vec::new();
+    for (stem, versioned) in
+        DRIVER_LIBRARIES.iter().zip(driver.library_files())
+    {
+        let host_path = format!("{}/{versioned}", config.gpu_lib_dir);
+        let node = host_fs
+            .get(&host_path)
+            .cloned()
+            .ok_or_else(|| GpuSupportError::MissingHostLibrary(host_path.clone()))?;
+        let target = format!("{CONTAINER_GPU_LIB_DIR}/{versioned}");
+        rootfs.insert(&target, node).expect("lib insert");
+        // plus the unversioned dev symlink CUDA apps dlopen
+        rootfs
+            .insert(
+                &format!("{CONTAINER_GPU_LIB_DIR}/{stem}"),
+                VNode::Symlink {
+                    target: target.clone(),
+                },
+            )
+            .expect("symlink insert");
+        mounts.bind(&host_path, &target, true, "gpu support");
+        libraries.push(versioned);
+    }
+
+    // 4. bind mount NVIDIA binaries
+    let mut binaries = Vec::new();
+    for bin in DRIVER_BINARIES {
+        let host_path = format!("{}/{bin}", config.gpu_bin_dir);
+        let node = host_fs
+            .get(&host_path)
+            .cloned()
+            .ok_or_else(|| GpuSupportError::MissingHostLibrary(host_path.clone()))?;
+        let target = format!("{CONTAINER_GPU_BIN_DIR}/{bin}");
+        rootfs.insert(&target, node).expect("bin insert");
+        mounts.bind(&host_path, &target, true, "gpu support");
+        binaries.push(bin.to_string());
+    }
+
+    let n = requested.len() as u32;
+    Ok(Some(GpuSupportReport {
+        host_devices: requested,
+        container_devices: (0..n).collect(),
+        libraries,
+        binaries,
+        device_files,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::UdiRootConfig;
+    use crate::hostenv::SystemProfile;
+
+    fn setup(
+        cvd: Option<&str>,
+    ) -> (
+        BTreeMap<String, String>,
+        NvidiaDriver,
+        UdiRootConfig,
+        VirtualFs,
+        BTreeMap<String, String>,
+    ) {
+        let profile = SystemProfile::linux_cluster();
+        let mut env = BTreeMap::new();
+        if let Some(v) = cvd {
+            env.insert("CUDA_VISIBLE_DEVICES".to_string(), v.to_string());
+        }
+        let driver = profile.driver(0).unwrap();
+        let config = UdiRootConfig::for_profile(&profile);
+        let host_fs = profile.host_fs();
+        let labels = BTreeMap::new();
+        (env, driver, config, host_fs, labels)
+    }
+
+    #[test]
+    fn paper_example_exposes_devices_0_and_2() {
+        let (env, driver, config, host_fs, labels) = setup(Some("0,2"));
+        let mut rootfs = VirtualFs::new();
+        let mut mounts = MountTable::new();
+        let rep = activate(
+            &env, Some(&driver), &config, &host_fs, &labels, &mut rootfs,
+            &mut mounts,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(rep.host_devices, vec![0, 2]);
+        // §IV.A.3: container numbering starts at 0
+        assert_eq!(rep.container_devices, vec![0, 1]);
+        assert!(rootfs.exists("/dev/nvidia0"));
+        assert!(rootfs.exists("/dev/nvidia2"));
+        assert!(rootfs.exists("/dev/nvidiactl"));
+        assert!(rootfs.exists("/dev/nvidia-uvm"));
+        assert_eq!(rep.libraries.len(), DRIVER_LIBRARIES.len());
+        assert!(rootfs
+            .exists(&format!("{CONTAINER_GPU_LIB_DIR}/libcuda.so.367.48")));
+        assert!(rootfs.exists("/usr/bin/nvidia-smi"));
+        assert_eq!(mounts.by_origin("gpu support").len(), 4 + 7 + 1);
+    }
+
+    #[test]
+    fn absent_or_invalid_cvd_does_not_trigger() {
+        for cvd in [None, Some(""), Some("NoDevFiles"), Some("-1")] {
+            let (env, driver, config, host_fs, labels) = setup(cvd);
+            let mut rootfs = VirtualFs::new();
+            let mut mounts = MountTable::new();
+            let r = activate(
+                &env, Some(&driver), &config, &host_fs, &labels, &mut rootfs,
+                &mut mounts,
+            )
+            .unwrap();
+            assert!(r.is_none(), "cvd={cvd:?}");
+            assert_eq!(mounts.len(), 0);
+        }
+    }
+
+    #[test]
+    fn out_of_range_device_errors() {
+        let (env, driver, config, host_fs, labels) = setup(Some("0,7"));
+        let mut rootfs = VirtualFs::new();
+        let mut mounts = MountTable::new();
+        let err = activate(
+            &env, Some(&driver), &config, &host_fs, &labels, &mut rootfs,
+            &mut mounts,
+        )
+        .unwrap_err();
+        assert_eq!(err, GpuSupportError::DeviceOutOfRange(7, 3));
+    }
+
+    #[test]
+    fn missing_driver_errors() {
+        let (env, _driver, config, host_fs, labels) = setup(Some("0"));
+        let mut rootfs = VirtualFs::new();
+        let mut mounts = MountTable::new();
+        let err = activate(
+            &env, None, &config, &host_fs, &labels, &mut rootfs, &mut mounts,
+        )
+        .unwrap_err();
+        assert_eq!(err, GpuSupportError::DriverNotLoaded);
+    }
+
+    #[test]
+    fn unloaded_uvm_errors() {
+        let (env, mut driver, config, host_fs, labels) = setup(Some("0"));
+        driver.uvm_loaded = false;
+        let mut rootfs = VirtualFs::new();
+        let mut mounts = MountTable::new();
+        let err = activate(
+            &env, Some(&driver), &config, &host_fs, &labels, &mut rootfs,
+            &mut mounts,
+        )
+        .unwrap_err();
+        assert_eq!(err, GpuSupportError::DriverNotLoaded);
+    }
+
+    #[test]
+    fn too_new_cuda_container_rejected() {
+        let (env, _d, config, host_fs, mut labels) = setup(Some("0"));
+        // an old 340 driver cannot run a CUDA 8 container
+        let old = NvidiaDriver::new(
+            (340, 29),
+            vec![crate::gpu::GpuModel::tesla_k40m()],
+        );
+        labels.insert(LABEL_CUDA_VERSION.to_string(), "8.0".to_string());
+        let mut rootfs = VirtualFs::new();
+        let mut mounts = MountTable::new();
+        let err = activate(
+            &env, Some(&old), &config, &host_fs, &labels, &mut rootfs,
+            &mut mounts,
+        )
+        .unwrap_err();
+        assert!(matches!(err, GpuSupportError::CudaIncompatible { .. }));
+    }
+
+    #[test]
+    fn missing_host_library_reported() {
+        let (env, driver, config, mut host_fs, labels) = setup(Some("0"));
+        // simulate a broken install: remove one driver library
+        host_fs
+            .remove(&format!("{}/libcuda.so.367.48", config.gpu_lib_dir))
+            .unwrap();
+        let mut rootfs = VirtualFs::new();
+        let mut mounts = MountTable::new();
+        let err = activate(
+            &env, Some(&driver), &config, &host_fs, &labels, &mut rootfs,
+            &mut mounts,
+        )
+        .unwrap_err();
+        assert!(matches!(err, GpuSupportError::MissingHostLibrary(_)));
+    }
+}

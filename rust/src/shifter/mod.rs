@@ -1,0 +1,16 @@
+//! The paper's system contribution (DESIGN.md S1–S3): the Shifter Runtime
+//! stage machine with user-transparent native GPU support (§IV.A) and MPI
+//! ABI-swap support (§IV.B).
+
+pub mod gpu_support;
+pub mod mpi_support;
+pub mod preflight;
+pub mod runtime;
+pub mod stages;
+pub mod volume;
+
+pub use gpu_support::{GpuSupportError, GpuSupportReport, CONTAINER_GPU_LIB_DIR};
+pub use mpi_support::{MpiSupportError, MpiSupportReport};
+pub use runtime::{Container, RunOptions, ShifterError, ShifterRuntime};
+pub use stages::{PrivilegeState, Stage, StageError, StageLog, StageRecord};
+pub use volume::{VolumeError, VolumeSpec};

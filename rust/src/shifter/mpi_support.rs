@@ -1,0 +1,317 @@
+//! Native MPI support (§IV.B) — the second half of the paper's
+//! contribution: swap the container's MPICH-ABI MPI for the host's
+//! fabric-optimized implementation.
+//!
+//! "The MPI library that is used by a container image … is swapped by
+//! Shifter Runtime and replaced by the ABI-compatible equivalent available
+//! on the host system. … Shifter also checks that the MPI library to be
+//! replaced is compatible with the host's MPI library: this is done by
+//! comparing the libtool ABI string of both libraries."
+
+use std::collections::BTreeMap;
+
+use crate::config::UdiRootConfig;
+use crate::image::builder::{LABEL_MPI_ABI, LABEL_MPI_VENDOR, LABEL_MPI_VERSION};
+use crate::mpi::{LibtoolAbi, MpiImpl, MpiVendor, MPICH_ABI_SONAME};
+use crate::vfs::{MountTable, VirtualFs};
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum MpiSupportError {
+    #[error("--mpi requested but the image contains no MPI library")]
+    NoMpiInImage,
+    #[error("container MPI has unparsable ABI metadata: {0}")]
+    BadAbiMetadata(String),
+    #[error(
+        "container MPI ({container}) is not ABI-compatible with host MPI \
+         ({host}): libtool strings {container_abi} vs {host_abi}"
+    )]
+    AbiIncompatible {
+        container: String,
+        host: String,
+        container_abi: String,
+        host_abi: String,
+    },
+    #[error("host MPI library missing on this system: {0}")]
+    MissingHostLibrary(String),
+}
+
+/// What the MPI swap did.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MpiSupportReport {
+    pub container_mpi: String,
+    pub host_mpi: String,
+    /// (container path shadowed, host path mounted over it)
+    pub swapped: Vec<(String, String)>,
+    pub dependencies: Vec<String>,
+    pub config_files: Vec<String>,
+}
+
+/// Reconstruct the container's MPI identity from the image labels (the
+/// simulation's stand-in for reading the libtool string out of the ELF).
+pub fn container_mpi_from_labels(
+    labels: &BTreeMap<String, String>,
+) -> Result<Option<MpiImpl>, MpiSupportError> {
+    let vendor = match labels.get(LABEL_MPI_VENDOR) {
+        Some(v) => v,
+        None => return Ok(None),
+    };
+    let abi_str = labels
+        .get(LABEL_MPI_ABI)
+        .ok_or_else(|| MpiSupportError::BadAbiMetadata("missing abi label".into()))?;
+    let abi = LibtoolAbi::parse(abi_str)
+        .ok_or_else(|| MpiSupportError::BadAbiMetadata(abi_str.clone()))?;
+    let version = labels
+        .get(LABEL_MPI_VERSION)
+        .map(|v| {
+            let mut it = v.split('.').map(|p| p.parse::<u32>().unwrap_or(0));
+            (
+                it.next().unwrap_or(0),
+                it.next().unwrap_or(0),
+                it.next().unwrap_or(0),
+            )
+        })
+        .unwrap_or((0, 0, 0));
+    let vendor = match vendor.as_str() {
+        "MPICH" => MpiVendor::Mpich,
+        "MVAPICH2" => MpiVendor::Mvapich2,
+        "Intel MPI" => MpiVendor::IntelMpi,
+        "Cray MPT" => MpiVendor::CrayMpt,
+        "IBM MPI" => MpiVendor::IbmMpi,
+        _ => MpiVendor::OpenMpi,
+    };
+    Ok(Some(MpiImpl {
+        vendor,
+        version,
+        abi,
+        native_fabrics: vec![], // container builds are portable/TCP-only
+    }))
+}
+
+/// Perform the §IV.B swap during environment preparation. Only invoked
+/// when the user passed `--mpi`.
+pub fn activate(
+    image_labels: &BTreeMap<String, String>,
+    host_mpi: &MpiImpl,
+    config: &UdiRootConfig,
+    host_fs: &VirtualFs,
+    rootfs: &mut VirtualFs,
+    mounts: &mut MountTable,
+) -> Result<MpiSupportReport, MpiSupportError> {
+    let container_mpi = container_mpi_from_labels(image_labels)?
+        .ok_or(MpiSupportError::NoMpiInImage)?;
+
+    // the libtool ABI-string comparison (+ initiative membership)
+    let compatible = container_mpi.mpich_abi_member()
+        && host_mpi.mpich_abi_member()
+        && host_mpi.abi.host_can_replace(&container_mpi.abi)
+        && container_mpi.abi.soname_major() == MPICH_ABI_SONAME;
+    if !compatible {
+        return Err(MpiSupportError::AbiIncompatible {
+            container: container_mpi.version_string(),
+            host: host_mpi.version_string(),
+            container_abi: container_mpi.abi.abi_string(),
+            host_abi: host_mpi.abi.abi_string(),
+        });
+    }
+
+    // locate the container's frontend libraries in the image rootfs.
+    // §Perf L3-2: one pass over the (large) rootfs path set matching all
+    // three names, instead of one full scan per library.
+    let frontends = container_mpi.frontend_libraries();
+    let suffixes: Vec<String> =
+        frontends.iter().map(|l| format!("/{l}")).collect();
+    let mut found: Vec<Option<String>> = vec![None; frontends.len()];
+    for p in rootfs.paths() {
+        for (i, suffix) in suffixes.iter().enumerate() {
+            if found[i].is_none() && p.ends_with(suffix.as_str()) {
+                found[i] = Some(p.clone());
+            }
+        }
+    }
+    let mut container_paths: Vec<(String, String)> = Vec::new(); // (libname, path)
+    for (lib, path) in frontends.iter().zip(found) {
+        match path {
+            Some(p) => container_paths.push((lib.clone(), p)),
+            None => return Err(MpiSupportError::NoMpiInImage),
+        }
+    }
+
+    // bind mount host frontends over the container's (shadowing them)
+    let mut swapped = Vec::new();
+    for (lib, container_path) in &container_paths {
+        let host_path = config
+            .mpi_frontend_paths
+            .iter()
+            .find(|p| p.ends_with(&format!("/{lib}")))
+            .cloned()
+            .ok_or_else(|| MpiSupportError::MissingHostLibrary(lib.clone()))?;
+        let node = host_fs
+            .get(&host_path)
+            .cloned()
+            .ok_or_else(|| MpiSupportError::MissingHostLibrary(host_path.clone()))?;
+        rootfs.insert(container_path, node).expect("swap insert");
+        mounts.bind(&host_path, container_path, true, "mpi swap");
+        swapped.push((container_path.clone(), host_path));
+    }
+
+    // mount the host MPI's own dependencies at their host paths
+    let mut dependencies = Vec::new();
+    for dep in &config.mpi_dependency_paths {
+        let node = host_fs
+            .get(dep)
+            .cloned()
+            .ok_or_else(|| MpiSupportError::MissingHostLibrary(dep.clone()))?;
+        rootfs.insert(dep, node).expect("dep insert");
+        mounts.bind(dep, dep, true, "mpi swap");
+        dependencies.push(dep.clone());
+    }
+
+    // and its configuration files/folders
+    let mut config_files = Vec::new();
+    for cfg in &config.mpi_config_paths {
+        let node = host_fs
+            .get(cfg)
+            .cloned()
+            .ok_or_else(|| MpiSupportError::MissingHostLibrary(cfg.clone()))?;
+        rootfs.insert(cfg, node).expect("cfg insert");
+        mounts.bind(cfg, cfg, true, "mpi swap");
+        config_files.push(cfg.clone());
+    }
+
+    Ok(MpiSupportReport {
+        container_mpi: container_mpi.version_string(),
+        host_mpi: host_mpi.version_string(),
+        swapped,
+        dependencies,
+        config_files,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::UdiRootConfig;
+    use crate::hostenv::SystemProfile;
+    use crate::image::builder;
+
+    fn setup(
+        image: crate::image::Image,
+        profile: &SystemProfile,
+    ) -> (
+        BTreeMap<String, String>,
+        MpiImpl,
+        UdiRootConfig,
+        VirtualFs,
+        VirtualFs,
+        MountTable,
+    ) {
+        let labels = image.manifest.labels.clone();
+        let rootfs = image.flatten().unwrap();
+        (
+            labels,
+            profile.host_mpi.clone(),
+            UdiRootConfig::for_profile(profile),
+            profile.host_fs(),
+            rootfs,
+            MountTable::new(),
+        )
+    }
+
+    #[test]
+    fn swap_on_daint_mounts_cray_mpt_over_container_mpich() {
+        let pd = SystemProfile::piz_daint();
+        let (labels, host, cfg, host_fs, mut rootfs, mut mounts) =
+            setup(builder::osu_image_a(), &pd);
+        let rep = activate(&labels, &host, &cfg, &host_fs, &mut rootfs, &mut mounts)
+            .unwrap();
+        assert_eq!(rep.container_mpi, "MPICH 3.1.4");
+        assert_eq!(rep.host_mpi, "Cray MPT 7.5.0");
+        assert_eq!(rep.swapped.len(), 3);
+        // the container path is now backed by the host library
+        let (cpath, hpath) = &rep.swapped[0];
+        assert!(cpath.starts_with("/usr/local/mpi/lib/"));
+        assert!(hpath.starts_with(pd.mpi_prefix));
+        assert_eq!(mounts.effective(cpath).unwrap().source, *hpath);
+        // cray transport deps are present in the container now
+        assert!(rootfs.exists("/opt/cray/ugni/default/lib64/libugni.so.0"));
+        assert!(rootfs.exists("/etc/opt/cray/wlm_detect/active_wlm"));
+    }
+
+    #[test]
+    fn all_three_containers_swap_on_cluster() {
+        let cl = SystemProfile::linux_cluster();
+        for img in [
+            builder::osu_image_a(),
+            builder::osu_image_b(),
+            builder::osu_image_c(),
+        ] {
+            let name = img.reference.canonical();
+            let (labels, host, cfg, host_fs, mut rootfs, mut mounts) =
+                setup(img, &cl);
+            let rep = activate(
+                &labels, &host, &cfg, &host_fs, &mut rootfs, &mut mounts,
+            )
+            .unwrap();
+            assert_eq!(rep.host_mpi, "MVAPICH2 2.1.0", "{name}");
+            assert!(rootfs.exists("/usr/lib64/libibverbs.so.1"));
+        }
+    }
+
+    #[test]
+    fn openmpi_image_rejected_with_abi_detail() {
+        let pd = SystemProfile::piz_daint();
+        let (labels, host, cfg, host_fs, mut rootfs, mut mounts) =
+            setup(builder::openmpi_image(), &pd);
+        let err =
+            activate(&labels, &host, &cfg, &host_fs, &mut rootfs, &mut mounts)
+                .unwrap_err();
+        match err {
+            MpiSupportError::AbiIncompatible {
+                container_abi,
+                host_abi,
+                ..
+            } => {
+                assert_eq!(container_abi, "40:0:20");
+                assert_eq!(host_abi, "12:7:0");
+            }
+            other => panic!("wrong error: {other}"),
+        }
+    }
+
+    #[test]
+    fn image_without_mpi_rejected() {
+        let pd = SystemProfile::piz_daint();
+        let (labels, host, cfg, host_fs, mut rootfs, mut mounts) =
+            setup(builder::ubuntu_xenial(), &pd);
+        let err =
+            activate(&labels, &host, &cfg, &host_fs, &mut rootfs, &mut mounts)
+                .unwrap_err();
+        assert_eq!(err, MpiSupportError::NoMpiInImage);
+    }
+
+    #[test]
+    fn corrupt_abi_label_rejected() {
+        let pd = SystemProfile::piz_daint();
+        let (mut labels, host, cfg, host_fs, mut rootfs, mut mounts) =
+            setup(builder::osu_image_a(), &pd);
+        labels.insert(LABEL_MPI_ABI.to_string(), "not-an-abi".to_string());
+        let err =
+            activate(&labels, &host, &cfg, &host_fs, &mut rootfs, &mut mounts)
+                .unwrap_err();
+        assert!(matches!(err, MpiSupportError::BadAbiMetadata(_)));
+    }
+
+    #[test]
+    fn missing_host_dependency_reported() {
+        let pd = SystemProfile::piz_daint();
+        let (labels, host, cfg, mut host_fs, mut rootfs, mut mounts) =
+            setup(builder::osu_image_a(), &pd);
+        host_fs
+            .remove("/opt/cray/ugni/default/lib64/libugni.so.0")
+            .unwrap();
+        let err =
+            activate(&labels, &host, &cfg, &host_fs, &mut rootfs, &mut mounts)
+                .unwrap_err();
+        assert!(matches!(err, MpiSupportError::MissingHostLibrary(_)));
+    }
+}

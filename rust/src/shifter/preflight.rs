@@ -1,0 +1,178 @@
+//! Host preflight checks — §III's design goal 3: "maintaining
+//! compatibility with older Linux kernels".
+//!
+//! Shifter deliberately avoids kernel features that HPC sites' old
+//! enterprise kernels lack (user namespaces, overlayfs): its requirements
+//! are only chroot(2), loop devices, squashfs, and setuid — all present
+//! since 2.6.32-era kernels. This module validates a host profile against
+//! that requirement set and explains what a newer-kernel runtime (Docker)
+//! would additionally demand.
+
+use crate::hostenv::SystemProfile;
+
+/// A kernel version, parsed from "3.12.60"-style strings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct KernelVersion {
+    pub major: u32,
+    pub minor: u32,
+    pub patch: u32,
+}
+
+impl KernelVersion {
+    pub fn parse(s: &str) -> Option<KernelVersion> {
+        let mut it = s.split(['.', '-']).map(|p| p.parse::<u32>().ok());
+        Some(KernelVersion {
+            major: it.next()??,
+            minor: it.next()??,
+            patch: it.next().flatten().unwrap_or(0),
+        })
+    }
+
+    pub const fn new(major: u32, minor: u32, patch: u32) -> KernelVersion {
+        KernelVersion {
+            major,
+            minor,
+            patch,
+        }
+    }
+}
+
+/// Kernel facilities container runtimes may depend on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelFeature {
+    /// chroot(2) — ancient.
+    Chroot,
+    /// loop block devices — ancient.
+    LoopDevice,
+    /// squashfs (mainlined 2.6.29).
+    Squashfs,
+    /// user namespaces (stable ~3.8; many enterprise kernels disable them).
+    UserNamespaces,
+    /// overlayfs (mainlined 3.18).
+    OverlayFs,
+}
+
+impl KernelFeature {
+    /// First mainline kernel providing the feature.
+    pub fn since(&self) -> KernelVersion {
+        match self {
+            KernelFeature::Chroot => KernelVersion::new(2, 0, 0),
+            KernelFeature::LoopDevice => KernelVersion::new(2, 0, 0),
+            KernelFeature::Squashfs => KernelVersion::new(2, 6, 29),
+            KernelFeature::UserNamespaces => KernelVersion::new(3, 8, 0),
+            KernelFeature::OverlayFs => KernelVersion::new(3, 18, 0),
+        }
+    }
+}
+
+/// What Shifter needs from the kernel (design goal 3: no namespaces, no
+/// overlayfs — hence the old-kernel compatibility).
+pub const SHIFTER_REQUIREMENTS: [KernelFeature; 3] = [
+    KernelFeature::Chroot,
+    KernelFeature::LoopDevice,
+    KernelFeature::Squashfs,
+];
+
+/// What a Docker-style runtime of the era needed.
+pub const DOCKER_REQUIREMENTS: [KernelFeature; 4] = [
+    KernelFeature::Chroot,
+    KernelFeature::LoopDevice,
+    KernelFeature::UserNamespaces,
+    KernelFeature::OverlayFs,
+];
+
+#[derive(Debug, Clone)]
+pub struct PreflightReport {
+    pub kernel: KernelVersion,
+    pub satisfied: Vec<KernelFeature>,
+    pub missing: Vec<KernelFeature>,
+}
+
+impl PreflightReport {
+    pub fn ok(&self) -> bool {
+        self.missing.is_empty()
+    }
+}
+
+/// Check a requirement set against a host kernel.
+pub fn check(
+    kernel: KernelVersion,
+    requirements: &[KernelFeature],
+) -> PreflightReport {
+    let (satisfied, missing) = requirements
+        .iter()
+        .partition(|f| kernel >= f.since());
+    PreflightReport {
+        kernel,
+        satisfied,
+        missing,
+    }
+}
+
+/// Preflight a system profile for Shifter.
+pub fn preflight(profile: &SystemProfile) -> PreflightReport {
+    let kernel = KernelVersion::parse(profile.kernel)
+        .unwrap_or(KernelVersion::new(0, 0, 0));
+    check(kernel, &SHIFTER_REQUIREMENTS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_versions() {
+        assert_eq!(
+            KernelVersion::parse("3.12.60"),
+            Some(KernelVersion::new(3, 12, 60))
+        );
+        assert_eq!(
+            KernelVersion::parse("3.10.0-514"),
+            Some(KernelVersion::new(3, 10, 0))
+        );
+        assert_eq!(KernelVersion::parse("4.4"), Some(KernelVersion::new(4, 4, 0)));
+        assert_eq!(KernelVersion::parse("garbage"), None);
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(KernelVersion::new(3, 10, 0) > KernelVersion::new(2, 6, 32));
+        assert!(KernelVersion::new(3, 8, 0) < KernelVersion::new(3, 12, 60));
+    }
+
+    #[test]
+    fn all_three_paper_systems_pass_shifter_preflight() {
+        for profile in [
+            SystemProfile::laptop(),
+            SystemProfile::linux_cluster(),
+            SystemProfile::piz_daint(),
+        ] {
+            let rep = preflight(&profile);
+            assert!(rep.ok(), "{}: missing {:?}", profile.name, rep.missing);
+            assert_eq!(rep.satisfied.len(), 3);
+        }
+    }
+
+    #[test]
+    fn the_papers_kernels_would_fail_docker_era_requirements() {
+        // the design point: 3.10/3.12 enterprise kernels predate overlayfs
+        for profile in [SystemProfile::linux_cluster(), SystemProfile::piz_daint()]
+        {
+            let kernel = KernelVersion::parse(profile.kernel).unwrap();
+            let rep = check(kernel, &DOCKER_REQUIREMENTS);
+            assert!(
+                rep.missing.contains(&KernelFeature::OverlayFs),
+                "{}",
+                profile.name
+            );
+        }
+    }
+
+    #[test]
+    fn ancient_kernel_fails_squashfs() {
+        let rep = check(KernelVersion::new(2, 6, 18), &SHIFTER_REQUIREMENTS);
+        assert!(!rep.ok());
+        assert!(rep.missing.contains(&KernelFeature::Squashfs));
+        assert!(rep.satisfied.contains(&KernelFeature::Chroot));
+    }
+}

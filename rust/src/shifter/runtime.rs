@@ -1,0 +1,583 @@
+//! The Shifter Runtime (§III.A, §IV): orchestrates the execution stages,
+//! building a container environment from "the user-specified image and the
+//! parts of the host system Shifter has been configured to source", with
+//! the paper's GPU/MPI support extensions applied during environment
+//! preparation.
+
+use std::collections::BTreeMap;
+
+use crate::config::UdiRootConfig;
+use crate::gateway::{GatewayError, ImageGateway};
+use crate::gpu::GpuModel;
+use crate::hostenv::SystemProfile;
+use crate::image::ImageManifest;
+use crate::mpi::MpiImpl;
+use crate::vfs::{Mount, MountKind, MountTable, VirtualFs};
+
+use super::gpu_support::{self, GpuSupportError, GpuSupportReport};
+use super::mpi_support::{self, MpiSupportError, MpiSupportReport};
+use super::stages::{PrivilegeState, Stage, StageError, StageLog};
+use super::volume::{VolumeError, VolumeSpec, TMPFS_DIRS};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ShifterError {
+    #[error(transparent)]
+    Gateway(#[from] GatewayError),
+    #[error(transparent)]
+    Gpu(#[from] GpuSupportError),
+    #[error(transparent)]
+    Mpi(#[from] MpiSupportError),
+    #[error(transparent)]
+    Stage(#[from] StageError),
+    #[error(transparent)]
+    Volume(#[from] VolumeError),
+    #[error("command failed in container: {0}")]
+    Exec(String),
+}
+
+/// `shifter --image=<image> [--mpi] <command…>` plus launch context.
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    pub image: String,
+    pub command: Vec<String>,
+    /// `--mpi`: activate the §IV.B library swap.
+    pub mpi: bool,
+    pub invoking_uid: u32,
+    pub invoking_gid: u32,
+    /// Process environment at launch (user shell or WLM-injected).
+    pub env: BTreeMap<String, String>,
+    /// `--volume=/host:/container[:ro]` user mounts.
+    pub volumes: Vec<VolumeSpec>,
+    /// Nodes starting this container simultaneously (srun job width) —
+    /// drives the PFS fetch-contention model.
+    pub concurrent_nodes: u32,
+    /// Which node of the system we execute on.
+    pub node: usize,
+}
+
+impl RunOptions {
+    pub fn new(image: &str, command: &[&str]) -> RunOptions {
+        RunOptions {
+            image: image.to_string(),
+            command: command.iter().map(|s| s.to_string()).collect(),
+            mpi: false,
+            invoking_uid: 1000,
+            invoking_gid: 1000,
+            env: BTreeMap::new(),
+            volumes: Vec::new(),
+            concurrent_nodes: 1,
+            node: 0,
+        }
+    }
+
+    /// Add a `--volume` mount (parsed and validated at run time).
+    pub fn with_volume(mut self, spec: &str) -> RunOptions {
+        self.volumes
+            .push(VolumeSpec::parse(spec).expect("volume spec"));
+        self
+    }
+
+    pub fn with_mpi(mut self) -> RunOptions {
+        self.mpi = true;
+        self
+    }
+
+    pub fn with_env(mut self, k: &str, v: &str) -> RunOptions {
+        self.env.insert(k.to_string(), v.to_string());
+        self
+    }
+
+    pub fn on_nodes(mut self, node: usize, concurrent: u32) -> RunOptions {
+        self.node = node;
+        self.concurrent_nodes = concurrent;
+        self
+    }
+}
+
+/// A fully prepared container, post-Execute stage.
+#[derive(Debug, Clone)]
+pub struct Container {
+    pub image: String,
+    pub rootfs: VirtualFs,
+    pub mounts: MountTable,
+    pub env: BTreeMap<String, String>,
+    pub gpu: Option<GpuSupportReport>,
+    pub mpi: Option<MpiSupportReport>,
+    pub manifest: ImageManifest,
+    pub stage_log: StageLog,
+    pub privileges: PrivilegeState,
+}
+
+impl Container {
+    /// Total simulated runtime overhead (everything but the application).
+    pub fn startup_overhead_secs(&self) -> f64 {
+        self.stage_log.total_sim_secs()
+    }
+
+    /// Read a small text file from inside the container (content-backed
+    /// files only — e.g. /etc/os-release).
+    pub fn read_file(&self, path: &str) -> Option<&str> {
+        if !self.rootfs.exists(path) {
+            return None;
+        }
+        self.manifest.files_content.get(path).map(|s| s.as_str())
+    }
+
+    /// Execute a toy in-container command (`cat`, `ls`, `true`) — enough
+    /// for the §III.B workflow example and the integration tests.
+    pub fn exec(&self, argv: &[&str]) -> Result<String, ShifterError> {
+        match argv {
+            ["cat", path] => self
+                .read_file(path)
+                .map(|s| s.to_string())
+                .ok_or_else(|| ShifterError::Exec(format!("cat: {path}: No such file"))),
+            ["ls", path] => self
+                .rootfs
+                .list_dir(path)
+                .map(|v| v.join("\n"))
+                .map_err(|e| ShifterError::Exec(e.to_string())),
+            ["true"] => Ok(String::new()),
+            ["./deviceQuery"] | ["deviceQuery"] => match &self.gpu {
+                Some(rep) => {
+                    let mut out = String::new();
+                    for cid in &rep.container_devices {
+                        out.push_str(&format!(
+                            "Device {cid}: CUDA-capable (host device {})\n",
+                            rep.host_devices[*cid as usize]
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "deviceQuery: {} CUDA device(s) found\nResult = PASS\n",
+                        rep.container_devices.len()
+                    ));
+                    Ok(out)
+                }
+                None => Err(ShifterError::Exec(
+                    "deviceQuery: CUDA driver version is insufficient \
+                     (no GPU support in this container)"
+                        .into(),
+                )),
+            },
+            ["nvidia-smi"] => {
+                if !self.rootfs.exists("/usr/bin/nvidia-smi")
+                    && !self
+                        .rootfs
+                        .exists("/opt/cray/nvidia/default/bin/nvidia-smi")
+                {
+                    return Err(ShifterError::Exec(
+                        "nvidia-smi: command not found".into(),
+                    ));
+                }
+                let rep = self.gpu.as_ref().ok_or_else(|| {
+                    ShifterError::Exec(
+                        "NVIDIA-SMI has failed: no devices visible".into(),
+                    )
+                })?;
+                Ok(format!(
+                    "NVIDIA-SMI: {} device(s), {} driver libraries mounted\n",
+                    rep.container_devices.len(),
+                    rep.libraries.len()
+                ))
+            }
+            other => Err(ShifterError::Exec(format!(
+                "unsupported container command: {other:?}"
+            ))),
+        }
+    }
+
+    /// The MPI implementation the containerized application actually links
+    /// against at run time: the host's (fabric-capable) library if the
+    /// swap happened, the image's own (TCP-only) build otherwise.
+    pub fn effective_mpi(
+        &self,
+        profile: &SystemProfile,
+    ) -> Option<MpiImpl> {
+        if self.mpi.is_some() {
+            Some(profile.host_mpi.clone())
+        } else {
+            mpi_support::container_mpi_from_labels(&self.manifest.labels)
+                .ok()
+                .flatten()
+        }
+    }
+
+    /// GPU chips visible inside the container, in container-id order
+    /// (resolved through the node's driver enumeration).
+    pub fn visible_gpus(&self, profile: &SystemProfile, node: usize) -> Vec<GpuModel> {
+        let Some(ref rep) = self.gpu else {
+            return vec![];
+        };
+        let Some(driver) = profile.driver(node) else {
+            return vec![];
+        };
+        let enumeration = driver.enumerate();
+        rep.host_devices
+            .iter()
+            .filter_map(|id| {
+                enumeration
+                    .iter()
+                    .find(|(gid, _, _)| gid == id)
+                    .map(|(_, board, _)| (*board).clone())
+            })
+            .collect()
+    }
+}
+
+/// The runtime itself, configured for one host system.
+pub struct ShifterRuntime<'a> {
+    pub profile: &'a SystemProfile,
+    pub config: UdiRootConfig,
+    host_fs: VirtualFs,
+}
+
+// stage cost constants (seconds) — calibrated to typical mount/namespace
+// syscall costs; see EXPERIMENTS.md §Perf for the measured end-to-end cost
+const LOOP_MOUNT_SECS: f64 = 5e-3;
+const BIND_MOUNT_SECS: f64 = 120e-6;
+const CHROOT_SECS: f64 = 400e-6;
+const SETUID_SECS: f64 = 5e-6;
+const ENV_VAR_SECS: f64 = 1e-6;
+const FORK_EXEC_SECS: f64 = 4e-3;
+const CLEANUP_SECS: f64 = 8e-3;
+const LOCAL_DISK_BYTES_PER_SEC: f64 = 500e6;
+
+impl<'a> ShifterRuntime<'a> {
+    pub fn new(profile: &'a SystemProfile) -> ShifterRuntime<'a> {
+        Self::with_config(profile, UdiRootConfig::for_profile(profile))
+    }
+
+    pub fn with_config(
+        profile: &'a SystemProfile,
+        config: UdiRootConfig,
+    ) -> ShifterRuntime<'a> {
+        ShifterRuntime {
+            profile,
+            config,
+            host_fs: profile.host_fs(),
+        }
+    }
+
+    pub fn host_fs(&self) -> &VirtualFs {
+        &self.host_fs
+    }
+
+    /// Run the full §III.A stage pipeline and return the container.
+    pub fn run(
+        &self,
+        gateway: &ImageGateway,
+        opts: &RunOptions,
+    ) -> Result<Container, ShifterError> {
+        let mut log = StageLog::new();
+        let mut privs =
+            PrivilegeState::setuid_start(opts.invoking_uid, opts.invoking_gid);
+
+        // -- resolve image ------------------------------------------------
+        let gw_image = gateway.lookup(&opts.image)?;
+        log.record(
+            Stage::ResolveImage,
+            &privs,
+            format!("{} on {}", gw_image.reference.canonical(), gw_image.pfs_path),
+            gateway.pfs().mds.base_latency_us * 1e-6,
+        )?;
+
+        // -- prepare environment -------------------------------------------
+        let mut mounts = MountTable::new();
+        let mut prepare_secs = 0.0;
+
+        // fetch the squashfs to the node and loop mount it
+        let image_bytes = gw_image.squashfs.compressed_bytes;
+        let fetch_secs = match &self.profile.pfs {
+            Some(pfs) => pfs.bulk_read_secs(
+                image_bytes,
+                opts.concurrent_nodes.max(1) as u64,
+            ),
+            None => image_bytes as f64 / LOCAL_DISK_BYTES_PER_SEC,
+        };
+        prepare_secs += fetch_secs + LOOP_MOUNT_SECS;
+        let mut rootfs = gw_image.squashfs.tree().clone();
+        mounts.push(Mount {
+            source: gw_image.pfs_path.clone(),
+            target: self.config.udi_mount_point.clone(),
+            kind: MountKind::Loop,
+            origin: "image",
+        });
+
+        // site-specific mounts
+        for m in &self.config.site_mounts {
+            if self.host_fs.exists(&m.host_path) {
+                rootfs
+                    .graft(&self.host_fs, &m.host_path, &m.container_path)
+                    .ok();
+                mounts.bind(
+                    &m.host_path,
+                    &m.container_path,
+                    m.read_only,
+                    "site config",
+                );
+                prepare_secs += BIND_MOUNT_SECS;
+            }
+        }
+
+        // tmpfs-backed writable dirs (the image itself is read-only)
+        for dir in TMPFS_DIRS {
+            rootfs.mkdir_p(dir).ok();
+            mounts.push(Mount {
+                source: "tmpfs".to_string(),
+                target: dir.to_string(),
+                kind: MountKind::Tmpfs,
+                origin: "runtime",
+            });
+            prepare_secs += BIND_MOUNT_SECS;
+        }
+
+        // user-requested volumes (validated against site policy)
+        for vol in &opts.volumes {
+            vol.validate(&self.host_fs)?;
+            rootfs
+                .graft(&self.host_fs, &vol.host_path, &vol.container_path)
+                .ok();
+            mounts.bind(
+                &vol.host_path,
+                &vol.container_path,
+                vol.read_only,
+                "user volume",
+            );
+            prepare_secs += BIND_MOUNT_SECS;
+        }
+
+        // §IV.A GPU support (trigger: CUDA_VISIBLE_DEVICES in the env)
+        let gpu = gpu_support::activate(
+            &opts.env,
+            self.profile.driver(opts.node).as_ref(),
+            &self.config,
+            &self.host_fs,
+            &gw_image.manifest.labels,
+            &mut rootfs,
+            &mut mounts,
+        )?;
+        if let Some(ref rep) = gpu {
+            prepare_secs += BIND_MOUNT_SECS
+                * (rep.libraries.len()
+                    + rep.binaries.len()
+                    + rep.device_files.len()) as f64;
+        }
+
+        // §IV.B MPI support (trigger: --mpi flag)
+        let mpi = if opts.mpi {
+            let rep = mpi_support::activate(
+                &gw_image.manifest.labels,
+                &self.profile.host_mpi,
+                &self.config,
+                &self.host_fs,
+                &mut rootfs,
+                &mut mounts,
+            )?;
+            prepare_secs += BIND_MOUNT_SECS
+                * (rep.swapped.len()
+                    + rep.dependencies.len()
+                    + rep.config_files.len()) as f64;
+            Some(rep)
+        } else {
+            None
+        };
+
+        log.record(
+            Stage::PrepareEnvironment,
+            &privs,
+            format!(
+                "{} mounts (gpu: {}, mpi: {})",
+                mounts.len(),
+                gpu.is_some(),
+                mpi.is_some()
+            ),
+            prepare_secs,
+        )?;
+
+        // -- chroot jail ---------------------------------------------------
+        log.record(
+            Stage::ChrootJail,
+            &privs,
+            format!("chroot {}", self.config.udi_mount_point),
+            CHROOT_SECS,
+        )?;
+
+        // -- drop privileges -----------------------------------------------
+        log.record(
+            Stage::DropPrivileges,
+            &privs,
+            format!(
+                "setegid({}) seteuid({})",
+                opts.invoking_gid, opts.invoking_uid
+            ),
+            SETUID_SECS,
+        )?;
+        privs.drop_privileges();
+
+        // -- export environment ----------------------------------------------
+        // image env first, then the allowlisted host variables (§III.A:
+        // "selected variables from the host system are also added")
+        let mut env: BTreeMap<String, String> =
+            gw_image.manifest.env.iter().cloned().collect();
+        let mut exported = 0u32;
+        for key in &self.config.host_env_allowlist {
+            if let Some(v) = opts.env.get(key) {
+                env.insert(key.clone(), v.clone());
+                exported += 1;
+            }
+        }
+        log.record(
+            Stage::ExportEnvironment,
+            &privs,
+            format!("{} image vars + {exported} host vars", env.len() as u32 - exported),
+            env.len() as f64 * ENV_VAR_SECS,
+        )?;
+
+        // -- execute ----------------------------------------------------------
+        log.record(
+            Stage::Execute,
+            &privs,
+            format!("exec {:?} as uid {}", opts.command, privs.effective_uid),
+            FORK_EXEC_SECS,
+        )?;
+
+        // -- cleanup ------------------------------------------------------------
+        log.record(Stage::Cleanup, &privs, "release mounts", CLEANUP_SECS)?;
+
+        Ok(Container {
+            image: gw_image.reference.canonical(),
+            rootfs,
+            mounts,
+            env,
+            gpu,
+            mpi,
+            manifest: gw_image.manifest.clone(),
+            stage_log: log,
+            privileges: privs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gateway::ImageGateway;
+    use crate::pfs::LustreFs;
+    use crate::registry::Registry;
+
+    fn daint_setup() -> (SystemProfile, ImageGateway) {
+        let profile = SystemProfile::piz_daint();
+        let registry = Registry::dockerhub();
+        let mut gw = ImageGateway::new(LustreFs::piz_daint());
+        for img in [
+            "ubuntu:xenial",
+            "nvidia/cuda-image:8.0",
+            "osu-benchmarks:mpich-3.1.4",
+        ] {
+            gw.pull(&registry, img).unwrap();
+        }
+        (profile, gw)
+    }
+
+    #[test]
+    fn paper_section3_example_runs() {
+        let (profile, gw) = daint_setup();
+        let rt = ShifterRuntime::new(&profile);
+        let opts =
+            RunOptions::new("ubuntu:xenial", &["cat", "/etc/os-release"]);
+        let c = rt.run(&gw, &opts).unwrap();
+        assert!(c.stage_log.completed());
+        let out = c.exec(&["cat", "/etc/os-release"]).unwrap();
+        assert!(out.contains("16.04.2 LTS (Xenial Xerus)"));
+        assert!(out.contains("UBUNTU_CODENAME=xenial"));
+        // ran as the user, not root
+        assert_eq!(c.privileges.effective_uid, 1000);
+    }
+
+    #[test]
+    fn gpu_support_activates_via_env() {
+        let (profile, gw) = daint_setup();
+        let rt = ShifterRuntime::new(&profile);
+        let opts = RunOptions::new("nvidia/cuda-image:8.0", &["true"])
+            .with_env("CUDA_VISIBLE_DEVICES", "0");
+        let c = rt.run(&gw, &opts).unwrap();
+        let gpu = c.gpu.as_ref().expect("gpu support triggered");
+        assert_eq!(gpu.host_devices, vec![0]);
+        let gpus = c.visible_gpus(&profile, 0);
+        assert_eq!(gpus.len(), 1);
+        assert_eq!(gpus[0].name, "Tesla P100");
+        // env carried into the container
+        assert_eq!(c.env.get("CUDA_VISIBLE_DEVICES").unwrap(), "0");
+    }
+
+    #[test]
+    fn no_cvd_no_gpu_support() {
+        let (profile, gw) = daint_setup();
+        let rt = ShifterRuntime::new(&profile);
+        let c = rt
+            .run(&gw, &RunOptions::new("nvidia/cuda-image:8.0", &["true"]))
+            .unwrap();
+        assert!(c.gpu.is_none());
+        assert!(c.visible_gpus(&profile, 0).is_empty());
+    }
+
+    #[test]
+    fn mpi_flag_swaps_to_host_library() {
+        let (profile, gw) = daint_setup();
+        let rt = ShifterRuntime::new(&profile);
+        let opts = RunOptions::new("osu-benchmarks:mpich-3.1.4", &["true"])
+            .with_mpi();
+        let c = rt.run(&gw, &opts).unwrap();
+        let rep = c.mpi.as_ref().unwrap();
+        assert_eq!(rep.host_mpi, "Cray MPT 7.5.0");
+        let eff = c.effective_mpi(&profile).unwrap();
+        assert!(eff.supports_fabric(crate::fabric::FabricKind::CrayAries));
+    }
+
+    #[test]
+    fn without_mpi_flag_container_keeps_its_own() {
+        let (profile, gw) = daint_setup();
+        let rt = ShifterRuntime::new(&profile);
+        let c = rt
+            .run(
+                &gw,
+                &RunOptions::new("osu-benchmarks:mpich-3.1.4", &["true"]),
+            )
+            .unwrap();
+        assert!(c.mpi.is_none());
+        let eff = c.effective_mpi(&profile).unwrap();
+        assert_eq!(eff.version_string(), "MPICH 3.1.4");
+        assert!(!eff.supports_fabric(crate::fabric::FabricKind::CrayAries));
+    }
+
+    #[test]
+    fn site_mounts_present() {
+        let (profile, gw) = daint_setup();
+        let rt = ShifterRuntime::new(&profile);
+        let c = rt
+            .run(&gw, &RunOptions::new("ubuntu:xenial", &["true"]))
+            .unwrap();
+        assert!(!c.mounts.by_origin("site config").is_empty());
+        assert!(c.rootfs.is_dir("/scratch"));
+    }
+
+    #[test]
+    fn startup_overhead_is_small_and_positive() {
+        let (profile, gw) = daint_setup();
+        let rt = ShifterRuntime::new(&profile);
+        let c = rt
+            .run(&gw, &RunOptions::new("ubuntu:xenial", &["true"]))
+            .unwrap();
+        let t = c.startup_overhead_secs();
+        assert!(t > 0.0 && t < 5.0, "overhead={t}");
+    }
+
+    #[test]
+    fn unpulled_image_fails() {
+        let (profile, gw) = daint_setup();
+        let rt = ShifterRuntime::new(&profile);
+        let err = rt
+            .run(&gw, &RunOptions::new("pynamic:1.3", &["true"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("not pulled"));
+    }
+}

@@ -1,0 +1,284 @@
+//! The Shifter Runtime execution stages (§III.A) and the privilege model.
+//!
+//! "The execution of a container on a host system through Shifter can be
+//! broken down into several stages": pulling/reformatting (Image Gateway),
+//! then — Runtime-side — preparation of the software environment, chroot
+//! jail, change to user/group privileges, export of environment variables,
+//! container application execution, cleanup. The stage machine records an
+//! auditable log with simulated cost per stage; the privilege state machine
+//! enforces that everything after the chroot runs without elevated ids.
+
+use std::fmt;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    /// Runtime entry: resolve image on the gateway.
+    ResolveImage,
+    /// Copy squashfs to the node, loop mount, graft site resources,
+    /// GPU/MPI support injection.
+    PrepareEnvironment,
+    /// Change the container's root to the prepared directory.
+    ChrootJail,
+    /// setegid()/seteuid() back to the invoking user.
+    DropPrivileges,
+    /// Image env + selected host env into the container environment.
+    ExportEnvironment,
+    /// Run the application as the end user.
+    Execute,
+    /// Release environment resources.
+    Cleanup,
+}
+
+impl Stage {
+    /// The §III.A order.
+    pub const ORDER: [Stage; 7] = [
+        Stage::ResolveImage,
+        Stage::PrepareEnvironment,
+        Stage::ChrootJail,
+        Stage::DropPrivileges,
+        Stage::ExportEnvironment,
+        Stage::Execute,
+        Stage::Cleanup,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::ResolveImage => "resolve-image",
+            Stage::PrepareEnvironment => "prepare-environment",
+            Stage::ChrootJail => "chroot-jail",
+            Stage::DropPrivileges => "drop-privileges",
+            Stage::ExportEnvironment => "export-environment",
+            Stage::Execute => "execute",
+            Stage::Cleanup => "cleanup",
+        }
+    }
+
+    /// Stages that require elevated privileges (§III.A: "Shifter has
+    /// completed the steps that require additional system privileges,
+    /// namely the setup of the container environment and the change of
+    /// its root directory").
+    pub fn needs_privileges(&self) -> bool {
+        matches!(
+            self,
+            Stage::ResolveImage
+                | Stage::PrepareEnvironment
+                | Stage::ChrootJail
+                | Stage::DropPrivileges // performs the drop itself
+        )
+    }
+}
+
+impl fmt::Display for Stage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Effective/real uid-gid state. The shifter binary is setuid-root: it
+/// starts with euid 0 and must drop to the invoking user before Execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrivilegeState {
+    pub real_uid: u32,
+    pub real_gid: u32,
+    pub effective_uid: u32,
+    pub effective_gid: u32,
+}
+
+impl PrivilegeState {
+    /// Launch state of the setuid binary invoked by `uid:gid`.
+    pub fn setuid_start(uid: u32, gid: u32) -> PrivilegeState {
+        PrivilegeState {
+            real_uid: uid,
+            real_gid: gid,
+            effective_uid: 0,
+            effective_gid: 0,
+        }
+    }
+
+    pub fn is_elevated(&self) -> bool {
+        self.effective_uid == 0 && self.real_uid != 0
+    }
+
+    /// `setegid(rgid); seteuid(ruid)` — §III.A's order (gid first: once
+    /// euid drops, setegid would no longer be permitted).
+    pub fn drop_privileges(&mut self) {
+        self.effective_gid = self.real_gid;
+        self.effective_uid = self.real_uid;
+    }
+}
+
+/// One executed stage with its audit detail and simulated wall-clock cost.
+#[derive(Debug, Clone)]
+pub struct StageRecord {
+    pub stage: Stage,
+    pub detail: String,
+    pub sim_secs: f64,
+}
+
+/// Ordered log of executed stages.
+#[derive(Debug, Clone, Default)]
+pub struct StageLog {
+    records: Vec<StageRecord>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum StageError {
+    #[error("stage {got} executed out of order (expected {expected})")]
+    OutOfOrder { got: Stage, expected: Stage },
+    #[error("stage {0} requires privileges but effective uid is {1}")]
+    NotPrivileged(Stage, u32),
+    #[error("stage {0} must not run with elevated privileges")]
+    StillPrivileged(Stage),
+}
+
+impl StageLog {
+    pub fn new() -> StageLog {
+        StageLog::default()
+    }
+
+    /// Record a completed stage, enforcing the §III.A order and the
+    /// privilege discipline.
+    pub fn record(
+        &mut self,
+        stage: Stage,
+        priv_state: &PrivilegeState,
+        detail: impl Into<String>,
+        sim_secs: f64,
+    ) -> Result<(), StageError> {
+        let expected = Stage::ORDER[self.records.len().min(Stage::ORDER.len() - 1)];
+        if stage != expected {
+            return Err(StageError::OutOfOrder {
+                got: stage,
+                expected,
+            });
+        }
+        // privilege discipline: root-only stages need euid 0; user stages
+        // must NOT have euid 0 (for non-root invokers)
+        if stage.needs_privileges() && priv_state.effective_uid != 0 {
+            return Err(StageError::NotPrivileged(
+                stage,
+                priv_state.effective_uid,
+            ));
+        }
+        if !stage.needs_privileges() && priv_state.is_elevated() {
+            return Err(StageError::StillPrivileged(stage));
+        }
+        self.records.push(StageRecord {
+            stage,
+            detail: detail.into(),
+            sim_secs,
+        });
+        Ok(())
+    }
+
+    pub fn records(&self) -> &[StageRecord] {
+        &self.records
+    }
+
+    pub fn total_sim_secs(&self) -> f64 {
+        self.records.iter().map(|r| r.sim_secs).sum()
+    }
+
+    pub fn completed(&self) -> bool {
+        self.records.len() == Stage::ORDER.len()
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for r in &self.records {
+            s.push_str(&format!(
+                "[{:>20}] {:<40} {:.3} ms\n",
+                r.stage.name(),
+                r.detail,
+                r.sim_secs * 1e3
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_all() -> (StageLog, PrivilegeState) {
+        let mut log = StageLog::new();
+        let mut ps = PrivilegeState::setuid_start(1000, 100);
+        for stage in Stage::ORDER {
+            if stage == Stage::DropPrivileges {
+                // the drop happens within its stage
+                log.record(stage, &ps, "setegid+seteuid", 0.0).unwrap();
+                ps.drop_privileges();
+            } else {
+                log.record(stage, &ps, stage.name(), 0.001).unwrap();
+            }
+        }
+        (log, ps)
+    }
+
+    #[test]
+    fn full_pipeline_in_order() {
+        let (log, ps) = run_all();
+        assert!(log.completed());
+        assert_eq!(ps.effective_uid, 1000);
+        assert_eq!(ps.effective_gid, 100);
+        assert!((log.total_sim_secs() - 0.006).abs() < 1e-12);
+    }
+
+    #[test]
+    fn out_of_order_rejected() {
+        let mut log = StageLog::new();
+        let ps = PrivilegeState::setuid_start(1000, 100);
+        let err = log.record(Stage::Execute, &ps, "", 0.0).unwrap_err();
+        assert!(matches!(err, StageError::OutOfOrder { .. }));
+    }
+
+    #[test]
+    fn execute_with_elevated_privileges_rejected() {
+        let mut log = StageLog::new();
+        let mut ps = PrivilegeState::setuid_start(1000, 100);
+        for stage in [
+            Stage::ResolveImage,
+            Stage::PrepareEnvironment,
+            Stage::ChrootJail,
+        ] {
+            log.record(stage, &ps, "", 0.0).unwrap();
+        }
+        log.record(Stage::DropPrivileges, &ps, "", 0.0).unwrap();
+        // "forget" to actually drop -> ExportEnvironment must fail
+        let err = log
+            .record(Stage::ExportEnvironment, &ps, "", 0.0)
+            .unwrap_err();
+        assert!(matches!(err, StageError::StillPrivileged(_)));
+        // now drop and it proceeds
+        ps.drop_privileges();
+        log.record(Stage::ExportEnvironment, &ps, "", 0.0).unwrap();
+    }
+
+    #[test]
+    fn prepare_without_privileges_rejected() {
+        let mut log = StageLog::new();
+        let mut ps = PrivilegeState::setuid_start(1000, 100);
+        log.record(Stage::ResolveImage, &ps, "", 0.0).unwrap();
+        ps.drop_privileges(); // dropped too early
+        let err = log
+            .record(Stage::PrepareEnvironment, &ps, "", 0.0)
+            .unwrap_err();
+        assert!(matches!(err, StageError::NotPrivileged(..)));
+    }
+
+    #[test]
+    fn root_invoker_is_never_elevated() {
+        let ps = PrivilegeState::setuid_start(0, 0);
+        assert!(!ps.is_elevated());
+    }
+
+    #[test]
+    fn gid_dropped_before_uid() {
+        // after drop, both match the real ids (setegid-then-seteuid works)
+        let mut ps = PrivilegeState::setuid_start(500, 500);
+        ps.drop_privileges();
+        assert_eq!(ps.effective_uid, 500);
+        assert_eq!(ps.effective_gid, 500);
+    }
+}

@@ -1,0 +1,144 @@
+//! User-requested volume mounts (`shifter --volume=/host:/container[:ro]`).
+//!
+//! Shifter lets users bind additional host directories into their
+//! containers, subject to site policy: the host path must exist, and the
+//! container target must not shadow system-critical paths (the runtime's
+//! own mounts, /etc, /dev, …) — a containment rule the real runtime
+//! enforces to keep the setuid stage safe.
+
+use crate::vfs::{normalize, VirtualFs};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VolumeSpec {
+    pub host_path: String,
+    pub container_path: String,
+    pub read_only: bool,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum VolumeError {
+    #[error("malformed volume spec '{0}' (expected /host:/container[:ro])")]
+    Malformed(String),
+    #[error("volume host path does not exist: {0}")]
+    HostPathMissing(String),
+    #[error("volume target {0} is reserved and cannot be mounted over")]
+    ReservedTarget(String),
+    #[error("volume path is not absolute or not normalized: {0}")]
+    BadPath(String),
+}
+
+/// Container paths a user volume may never shadow.
+pub const RESERVED_TARGETS: [&str; 8] = [
+    "/", "/etc", "/dev", "/proc", "/sys", "/bin", "/sbin", "/usr",
+];
+
+impl VolumeSpec {
+    /// Parse `"/host:/container"` or `"/host:/container:ro"`.
+    pub fn parse(s: &str) -> Result<VolumeSpec, VolumeError> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let (host, container, ro) = match parts.as_slice() {
+            [h, c] => (*h, *c, false),
+            [h, c, "ro"] => (*h, *c, true),
+            [h, c, "rw"] => (*h, *c, false),
+            _ => return Err(VolumeError::Malformed(s.to_string())),
+        };
+        let host_path = normalize(host)
+            .map_err(|_| VolumeError::BadPath(host.to_string()))?;
+        let container_path = normalize(container)
+            .map_err(|_| VolumeError::BadPath(container.to_string()))?;
+        Ok(VolumeSpec {
+            host_path,
+            container_path,
+            read_only: ro,
+        })
+    }
+
+    /// Site-policy validation against the host filesystem.
+    pub fn validate(&self, host_fs: &VirtualFs) -> Result<(), VolumeError> {
+        if !host_fs.exists(&self.host_path) {
+            return Err(VolumeError::HostPathMissing(self.host_path.clone()));
+        }
+        for reserved in RESERVED_TARGETS {
+            if self.container_path == reserved {
+                return Err(VolumeError::ReservedTarget(
+                    self.container_path.clone(),
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Writable scratch directories every container gets (the squashfs image
+/// is read-only; these are tmpfs-backed).
+pub const TMPFS_DIRS: [&str; 2] = ["/tmp", "/run"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_forms() {
+        let v = VolumeSpec::parse("/scratch/data:/data").unwrap();
+        assert_eq!(v.host_path, "/scratch/data");
+        assert_eq!(v.container_path, "/data");
+        assert!(!v.read_only);
+        assert!(VolumeSpec::parse("/a:/b:ro").unwrap().read_only);
+        assert!(!VolumeSpec::parse("/a:/b:rw").unwrap().read_only);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(matches!(
+            VolumeSpec::parse("justapath"),
+            Err(VolumeError::Malformed(_))
+        ));
+        assert!(matches!(
+            VolumeSpec::parse("/a:/b:ro:extra"),
+            Err(VolumeError::Malformed(_))
+        ));
+        assert!(matches!(
+            VolumeSpec::parse("rel:/b"),
+            Err(VolumeError::BadPath(_))
+        ));
+        assert!(matches!(
+            VolumeSpec::parse("/a:../b"),
+            Err(VolumeError::BadPath(_))
+        ));
+    }
+
+    #[test]
+    fn normalizes_paths() {
+        let v = VolumeSpec::parse("/scratch//data/:/data/./sub").unwrap();
+        assert_eq!(v.host_path, "/scratch/data");
+        assert_eq!(v.container_path, "/data/sub");
+    }
+
+    #[test]
+    fn validation_checks_host_and_reserved() {
+        let mut host = VirtualFs::new();
+        host.mkdir_p("/scratch/data").unwrap();
+        let ok = VolumeSpec::parse("/scratch/data:/data").unwrap();
+        assert!(ok.validate(&host).is_ok());
+
+        let missing = VolumeSpec::parse("/nope:/data").unwrap();
+        assert_eq!(
+            missing.validate(&host),
+            Err(VolumeError::HostPathMissing("/nope".into()))
+        );
+
+        for target in ["/etc", "/dev", "/usr", "/"] {
+            let bad =
+                VolumeSpec::parse(&format!("/scratch/data:{target}")).unwrap();
+            assert!(
+                matches!(bad.validate(&host), Err(VolumeError::ReservedTarget(_))),
+                "{target}"
+            );
+        }
+        // subdirectories of reserved paths are fine
+        let mut h2 = VirtualFs::new();
+        h2.mkdir_p("/opt/tools").unwrap();
+        let sub = VolumeSpec::parse("/opt/tools:/usr/local/tools").unwrap();
+        assert!(sub.validate(&h2).is_ok());
+    }
+}

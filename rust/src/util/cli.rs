@@ -1,0 +1,146 @@
+//! Tiny command-line parser (clap is not in the offline vendor set).
+//!
+//! Supports the option grammar the `shifter` / `shifterimg` CLIs need:
+//! `--flag`, `--key=value`, `--key value`, positional arguments, and a
+//! trailing command after the option section (everything after the first
+//! non-option token belongs to the containerized command, mirroring
+//! Shifter's real CLI where `shifter --image=X cmd args...`).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct ParsedArgs {
+    pub flags: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    UnknownOption(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+}
+
+pub struct CliSpec {
+    /// (name, takes_value)
+    opts: Vec<(&'static str, bool)>,
+    /// stop option parsing at the first positional (shifter-style)
+    stop_at_positional: bool,
+}
+
+impl CliSpec {
+    pub fn new(opts: &[(&'static str, bool)], stop_at_positional: bool) -> Self {
+        Self {
+            opts: opts.to_vec(),
+            stop_at_positional,
+        }
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(
+        &self,
+        args: I,
+    ) -> Result<ParsedArgs, CliError> {
+        let mut out = ParsedArgs::default();
+        let mut it = args.into_iter().peekable();
+        let mut options_done = false;
+        while let Some(arg) = it.next() {
+            if !options_done && arg == "--" {
+                options_done = true;
+                continue;
+            }
+            if !options_done && arg.starts_with("--") {
+                let body = &arg[2..];
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|(n, _)| *n == name)
+                    .ok_or_else(|| CliError::UnknownOption(name.clone()))?;
+                if spec.1 {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| CliError::MissingValue(name.clone()))?,
+                    };
+                    out.flags.insert(name, v);
+                } else {
+                    out.flags.insert(name, "true".to_string());
+                }
+            } else {
+                out.positionals.push(arg);
+                if self.stop_at_positional {
+                    options_done = true;
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl ParsedArgs {
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CliSpec {
+        CliSpec::new(&[("image", true), ("mpi", false), ("verbose", false)], true)
+    }
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_shifter_style_invocation() {
+        let p = spec()
+            .parse(args(&["--image=ubuntu:xenial", "--mpi", "cat", "--version"]))
+            .unwrap();
+        assert_eq!(p.get("image"), Some("ubuntu:xenial"));
+        assert!(p.has("mpi"));
+        // "--version" after the command is a positional, not an option
+        assert_eq!(p.positionals, vec!["cat", "--version"]);
+    }
+
+    #[test]
+    fn space_separated_value() {
+        let p = spec().parse(args(&["--image", "cuda-image", "run"])).unwrap();
+        assert_eq!(p.get("image"), Some("cuda-image"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(
+            spec().parse(args(&["--bogus"])),
+            Err(CliError::UnknownOption(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            spec().parse(args(&["--image"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn double_dash_ends_options() {
+        let p = spec().parse(args(&["--mpi", "--", "--image"])).unwrap();
+        assert!(p.has("mpi"));
+        assert_eq!(p.positionals, vec!["--image"]);
+    }
+}

@@ -1,0 +1,52 @@
+//! Dependency-free utility layer: deterministic PRNG, JSON, CLI parsing,
+//! and human-readable byte formatting.
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+
+/// Format a byte count the way the tables/logs print sizes (powers of two).
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Format seconds for report tables: ms below 1 s, "s" otherwise.
+pub fn human_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.2} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.0 MiB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(human_secs(0.5), "500.00 ms");
+        assert_eq!(human_secs(2.0), "2.00 s");
+        assert_eq!(human_secs(5e-6), "5.0 µs");
+    }
+}

@@ -1,0 +1,11 @@
+//! Virtual filesystem substrate (DESIGN.md S6): in-memory trees, squashfs
+//! images with loop mounts, and the ordered mount table the Shifter
+//! runtime builds container environments with.
+
+pub mod mount;
+pub mod squashfs;
+pub mod tree;
+
+pub use mount::{Mount, MountKind, MountTable};
+pub use squashfs::{SquashFs, SQUASHFS_RATIO};
+pub use tree::{normalize, VNode, VfsError, VirtualFs};

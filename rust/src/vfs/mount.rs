@@ -1,0 +1,139 @@
+//! Mount table: the ordered record of everything the runtime grafts into a
+//! container environment (site directories, GPU devices, driver libraries,
+//! host MPI). Ordering is part of correctness — a later mount may shadow an
+//! earlier one (that is how the MPI swap overrides the container's libmpi),
+//! and the audit log the stage machine prints reflects this order.
+
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MountKind {
+    /// Bind a host path into the container.
+    Bind { read_only: bool },
+    /// Loop-mount a squashfs image.
+    Loop,
+    /// Fresh tmpfs.
+    Tmpfs,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mount {
+    pub source: String,
+    pub target: String,
+    pub kind: MountKind,
+    /// Why this mount exists ("site config", "gpu support", "mpi swap"…)
+    pub origin: &'static str,
+}
+
+impl fmt::Display for Mount {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let k = match &self.kind {
+            MountKind::Bind { read_only: true } => "bind,ro",
+            MountKind::Bind { read_only: false } => "bind,rw",
+            MountKind::Loop => "loop",
+            MountKind::Tmpfs => "tmpfs",
+        };
+        write!(f, "{} -> {} [{}] ({})", self.source, self.target, k, self.origin)
+    }
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MountTable {
+    mounts: Vec<Mount>,
+}
+
+impl MountTable {
+    pub fn new() -> MountTable {
+        MountTable { mounts: Vec::new() }
+    }
+
+    pub fn push(&mut self, m: Mount) {
+        self.mounts.push(m);
+    }
+
+    pub fn bind(
+        &mut self,
+        source: &str,
+        target: &str,
+        read_only: bool,
+        origin: &'static str,
+    ) {
+        self.push(Mount {
+            source: source.to_string(),
+            target: target.to_string(),
+            kind: MountKind::Bind { read_only },
+            origin,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.mounts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mounts.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Mount> {
+        self.mounts.iter()
+    }
+
+    /// Mounts contributed by a given subsystem.
+    pub fn by_origin(&self, origin: &str) -> Vec<&Mount> {
+        self.mounts.iter().filter(|m| m.origin == origin).collect()
+    }
+
+    /// The effective mount at a target (the *last* one wins).
+    pub fn effective(&self, target: &str) -> Option<&Mount> {
+        self.mounts.iter().rev().find(|m| m.target == target)
+    }
+
+    /// Targets that are shadowed by a later mount on the same path.
+    pub fn shadowed(&self) -> Vec<&Mount> {
+        let mut out = Vec::new();
+        for (i, m) in self.mounts.iter().enumerate() {
+            if self.mounts[i + 1..].iter().any(|n| n.target == m.target) {
+                out.push(m);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_preserved_and_last_wins() {
+        let mut t = MountTable::new();
+        t.bind("/image/lib/libmpi.so.12", "/lib/libmpi.so.12", true, "image");
+        t.bind("/opt/cray/libmpi.so.12", "/lib/libmpi.so.12", true, "mpi swap");
+        assert_eq!(t.len(), 2);
+        assert_eq!(
+            t.effective("/lib/libmpi.so.12").unwrap().source,
+            "/opt/cray/libmpi.so.12"
+        );
+        assert_eq!(t.shadowed().len(), 1);
+        assert_eq!(t.shadowed()[0].origin, "image");
+    }
+
+    #[test]
+    fn by_origin_filters() {
+        let mut t = MountTable::new();
+        t.bind("/dev/nvidia0", "/dev/nvidia0", false, "gpu support");
+        t.bind("/usr/lib/libcuda.so", "/usr/lib/libcuda.so", true, "gpu support");
+        t.bind("/scratch", "/scratch", false, "site config");
+        assert_eq!(t.by_origin("gpu support").len(), 2);
+        assert_eq!(t.by_origin("site config").len(), 1);
+    }
+
+    #[test]
+    fn display_is_informative() {
+        let mut t = MountTable::new();
+        t.bind("/a", "/b", true, "test");
+        let s = format!("{}", t.iter().next().unwrap());
+        assert!(s.contains("/a -> /b"));
+        assert!(s.contains("bind,ro"));
+    }
+}

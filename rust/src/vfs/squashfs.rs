@@ -1,0 +1,130 @@
+//! squashfs model: "a compressed read-only file system for Linux" (§III.A).
+//!
+//! The Image Gateway converts flattened Docker images to squashfs so a
+//! container start-up costs one PFS lookup (the image file) instead of one
+//! per member file — the mechanism behind Fig. 3. We model the format as a
+//! sealed file table plus size bookkeeping under a fixed compression model.
+
+use super::tree::{VNode, VfsError, VirtualFs};
+
+/// Compression ratio for typical image content (ELF + text under gzip-level
+/// squashfs compression).
+pub const SQUASHFS_RATIO: f64 = 0.45;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SquashFs {
+    /// Digest of the file table (identity of the image).
+    pub digest: u64,
+    /// Uncompressed content bytes.
+    pub original_bytes: u64,
+    /// On-disk (PFS) bytes.
+    pub compressed_bytes: u64,
+    /// The sealed, read-only file table.
+    tree: VirtualFs,
+}
+
+impl SquashFs {
+    /// `mksquashfs`: seal a filesystem tree into an image.
+    pub fn create(tree: &VirtualFs) -> SquashFs {
+        let original = tree.total_size();
+        let mut digest: u64 = 0xcbf29ce484222325;
+        for p in tree.paths() {
+            for b in p.as_bytes() {
+                digest ^= *b as u64;
+                digest = digest.wrapping_mul(0x100000001b3);
+            }
+            if let Some(VNode::File { digest: d, size, .. }) = tree.get(p) {
+                digest ^= d ^ size.rotate_left(17);
+                digest = digest.wrapping_mul(0x100000001b3);
+            }
+        }
+        SquashFs {
+            digest,
+            original_bytes: original,
+            compressed_bytes: (original as f64 * SQUASHFS_RATIO) as u64,
+            tree: tree.clone(),
+        }
+    }
+
+    pub fn file_count(&self) -> usize {
+        self.tree.file_count()
+    }
+
+    /// Loop-mount the image: graft its (read-only) tree at `mountpoint`.
+    /// Returns the number of nodes exposed.
+    pub fn loop_mount(
+        &self,
+        target: &mut VirtualFs,
+        mountpoint: &str,
+    ) -> Result<usize, VfsError> {
+        target.mkdir_p(mountpoint)?;
+        self.tree.graft_into(target, mountpoint)
+    }
+
+    /// Read-only view of the sealed tree.
+    pub fn tree(&self) -> &VirtualFs {
+        &self.tree
+    }
+}
+
+impl VirtualFs {
+    /// Helper used by loop_mount: graft this entire fs under `mountpoint`
+    /// of `target`.
+    pub fn graft_into(
+        &self,
+        target: &mut VirtualFs,
+        mountpoint: &str,
+    ) -> Result<usize, VfsError> {
+        target.graft(self, "/", mountpoint)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_tree() -> VirtualFs {
+        let mut fs = VirtualFs::new();
+        fs.add_file("/bin/bash", 1_000_000, 1).unwrap();
+        fs.add_file("/etc/os-release", 200, 2).unwrap();
+        fs.add_file("/usr/lib/libpython3.5.so", 3_500_000, 3).unwrap();
+        fs
+    }
+
+    #[test]
+    fn create_compresses() {
+        let sq = SquashFs::create(&sample_tree());
+        assert_eq!(sq.original_bytes, 4_500_200);
+        assert!(sq.compressed_bytes < sq.original_bytes);
+        assert_eq!(sq.file_count(), 3);
+    }
+
+    #[test]
+    fn digest_is_content_sensitive() {
+        let a = SquashFs::create(&sample_tree());
+        let mut t2 = sample_tree();
+        t2.add_file("/etc/extra", 1, 9).unwrap();
+        let b = SquashFs::create(&t2);
+        assert_ne!(a.digest, b.digest);
+        // and deterministic
+        assert_eq!(a.digest, SquashFs::create(&sample_tree()).digest);
+    }
+
+    #[test]
+    fn loop_mount_exposes_tree() {
+        let sq = SquashFs::create(&sample_tree());
+        let mut node_fs = VirtualFs::new();
+        let n = sq.loop_mount(&mut node_fs, "/var/udiMount").unwrap();
+        assert!(n >= 3);
+        assert!(node_fs.exists("/var/udiMount/etc/os-release"));
+        assert!(node_fs.exists("/var/udiMount/bin/bash"));
+    }
+
+    #[test]
+    fn mount_at_root() {
+        let sq = SquashFs::create(&sample_tree());
+        let mut fs = VirtualFs::new();
+        sq.loop_mount(&mut fs, "/").unwrap();
+        assert!(fs.exists("/etc/os-release"));
+    }
+}

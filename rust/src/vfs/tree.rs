@@ -1,0 +1,398 @@
+//! In-memory virtual filesystem tree.
+//!
+//! Every filesystem the simulation touches — container image roots, host
+//! system roots, the assembled container environment — is a `VirtualFs`:
+//! a normalized-path → node map with POSIX-ish semantics (implicit parent
+//! directories are made explicit, devices and symlinks are first-class).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum VNode {
+    Dir,
+    File {
+        size: u64,
+        /// content digest (used for dedup and layer flattening)
+        digest: u64,
+        executable: bool,
+    },
+    Device {
+        major: u32,
+        minor: u32,
+    },
+    Symlink {
+        target: String,
+    },
+}
+
+impl VNode {
+    pub fn file(size: u64, digest: u64) -> VNode {
+        VNode::File {
+            size,
+            digest,
+            executable: false,
+        }
+    }
+
+    pub fn exe(size: u64, digest: u64) -> VNode {
+        VNode::File {
+            size,
+            digest,
+            executable: true,
+        }
+    }
+
+    pub fn size(&self) -> u64 {
+        match self {
+            VNode::File { size, .. } => *size,
+            _ => 0,
+        }
+    }
+}
+
+/// Normalize an absolute path: collapse `//`, strip trailing `/`, resolve
+/// `.` components (`..` is rejected — container paths are already clean).
+pub fn normalize(path: &str) -> Result<String, VfsError> {
+    if !path.starts_with('/') {
+        return Err(VfsError::NotAbsolute(path.to_string()));
+    }
+    let mut parts: Vec<&str> = Vec::new();
+    for comp in path.split('/') {
+        match comp {
+            "" | "." => {}
+            ".." => return Err(VfsError::DotDot(path.to_string())),
+            c => parts.push(c),
+        }
+    }
+    Ok(if parts.is_empty() {
+        "/".to_string()
+    } else {
+        format!("/{}", parts.join("/"))
+    })
+}
+
+fn parent(path: &str) -> Option<String> {
+    if path == "/" {
+        return None;
+    }
+    match path.rfind('/') {
+        Some(0) => Some("/".to_string()),
+        Some(i) => Some(path[..i].to_string()),
+        None => None,
+    }
+}
+
+#[derive(Debug, thiserror::Error, Clone, PartialEq)]
+pub enum VfsError {
+    #[error("path is not absolute: {0}")]
+    NotAbsolute(String),
+    #[error("'..' not allowed: {0}")]
+    DotDot(String),
+    #[error("no such path: {0}")]
+    NotFound(String),
+    #[error("not a directory: {0}")]
+    NotADirectory(String),
+    #[error("already exists and is not a directory: {0}")]
+    Occupied(String),
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct VirtualFs {
+    nodes: BTreeMap<String, VNode>,
+}
+
+impl VirtualFs {
+    pub fn new() -> VirtualFs {
+        let mut fs = VirtualFs {
+            nodes: BTreeMap::new(),
+        };
+        fs.nodes.insert("/".to_string(), VNode::Dir);
+        fs
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.len() <= 1
+    }
+
+    pub fn get(&self, path: &str) -> Option<&VNode> {
+        let p = normalize(path).ok()?;
+        self.nodes.get(&p)
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        self.get(path).is_some()
+    }
+
+    pub fn is_dir(&self, path: &str) -> bool {
+        matches!(self.get(path), Some(VNode::Dir))
+    }
+
+    /// Create a directory and all missing parents.
+    pub fn mkdir_p(&mut self, path: &str) -> Result<(), VfsError> {
+        let p = normalize(path)?;
+        let mut chain = vec![p.clone()];
+        let mut cur = p;
+        while let Some(par) = parent(&cur) {
+            chain.push(par.clone());
+            cur = par;
+        }
+        for dir in chain.into_iter().rev() {
+            match self.nodes.get(&dir) {
+                None => {
+                    self.nodes.insert(dir, VNode::Dir);
+                }
+                Some(VNode::Dir) => {}
+                Some(_) => return Err(VfsError::Occupied(dir)),
+            }
+        }
+        Ok(())
+    }
+
+    /// Insert a node, creating parent directories. Overwrites files
+    /// (bind-mount-over semantics) but refuses to replace a directory
+    /// with a non-directory.
+    pub fn insert(&mut self, path: &str, node: VNode) -> Result<(), VfsError> {
+        let p = normalize(path)?;
+        if p == "/" {
+            return match node {
+                VNode::Dir => Ok(()),
+                _ => Err(VfsError::Occupied(p)),
+            };
+        }
+        if let Some(par) = parent(&p) {
+            // §Perf L3-3: fast path — most inserts land in directories that
+            // already exist; checking one map entry avoids allocating and
+            // walking the whole ancestor chain.
+            if !matches!(self.nodes.get(&par), Some(VNode::Dir)) {
+                self.mkdir_p(&par)?;
+            }
+        }
+        if matches!(self.nodes.get(&p), Some(VNode::Dir))
+            && !matches!(node, VNode::Dir)
+        {
+            return Err(VfsError::Occupied(p));
+        }
+        self.nodes.insert(p, node);
+        Ok(())
+    }
+
+    pub fn add_file(
+        &mut self,
+        path: &str,
+        size: u64,
+        digest: u64,
+    ) -> Result<(), VfsError> {
+        self.insert(path, VNode::file(size, digest))
+    }
+
+    pub fn remove(&mut self, path: &str) -> Result<(), VfsError> {
+        let p = normalize(path)?;
+        if !self.nodes.contains_key(&p) {
+            return Err(VfsError::NotFound(p));
+        }
+        // remove the subtree
+        let prefix = if p == "/" { p.clone() } else { format!("{p}/") };
+        self.nodes.retain(|k, _| k != &p && !k.starts_with(&prefix));
+        if p == "/" {
+            self.nodes.insert("/".to_string(), VNode::Dir);
+        }
+        Ok(())
+    }
+
+    /// Immediate children of a directory.
+    pub fn list_dir(&self, path: &str) -> Result<Vec<String>, VfsError> {
+        let p = normalize(path)?;
+        match self.nodes.get(&p) {
+            Some(VNode::Dir) => {}
+            Some(_) => return Err(VfsError::NotADirectory(p)),
+            None => return Err(VfsError::NotFound(p)),
+        }
+        let prefix = if p == "/" { "/".to_string() } else { format!("{p}/") };
+        let mut out = Vec::new();
+        for k in self.nodes.keys() {
+            if let Some(rest) = k.strip_prefix(&prefix) {
+                if !rest.is_empty() && !rest.contains('/') {
+                    out.push(k.clone());
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// All (path, node) pairs under a subtree, subtree root excluded.
+    pub fn walk(&self, root: &str) -> Result<Vec<(String, VNode)>, VfsError> {
+        let p = normalize(root)?;
+        if !self.nodes.contains_key(&p) {
+            return Err(VfsError::NotFound(p));
+        }
+        let prefix = if p == "/" { "/".to_string() } else { format!("{p}/") };
+        Ok(self
+            .nodes
+            .iter()
+            .filter(|(k, _)| k.starts_with(&prefix) && *k != &p)
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect())
+    }
+
+    /// Every path in the filesystem (sorted).
+    pub fn paths(&self) -> impl Iterator<Item = &String> {
+        self.nodes.keys()
+    }
+
+    /// Total file bytes.
+    pub fn total_size(&self) -> u64 {
+        self.nodes.values().map(|n| n.size()).sum()
+    }
+
+    /// Count of file nodes.
+    pub fn file_count(&self) -> usize {
+        self.nodes
+            .values()
+            .filter(|n| matches!(n, VNode::File { .. }))
+            .count()
+    }
+
+    /// Graft `other`'s subtree at `src` into `self` at `dst`
+    /// (the mechanics of a bind mount / layer application).
+    pub fn graft(
+        &mut self,
+        other: &VirtualFs,
+        src: &str,
+        dst: &str,
+    ) -> Result<usize, VfsError> {
+        let s = normalize(src)?;
+        let d = normalize(dst)?;
+        let src_node = other
+            .nodes
+            .get(&s)
+            .ok_or_else(|| VfsError::NotFound(s.clone()))?;
+        match src_node {
+            VNode::Dir => {
+                self.mkdir_p(&d)?;
+                let mut n = 0;
+                for (k, v) in other.walk(&s)? {
+                    // keep the leading '/' on the relative part ("/" source
+                    // paths start right after the root slash)
+                    let rel = if s == "/" { &k[..] } else { &k[s.len()..] };
+                    let target = if d == "/" {
+                        k.clone()
+                    } else {
+                        format!("{d}{rel}")
+                    };
+                    self.insert(&target, v)?;
+                    n += 1;
+                }
+                Ok(n)
+            }
+            node => {
+                self.insert(&d, node.clone())?;
+                Ok(1)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_paths() {
+        assert_eq!(normalize("/a//b/./c/").unwrap(), "/a/b/c");
+        assert_eq!(normalize("/").unwrap(), "/");
+        assert!(normalize("relative").is_err());
+        assert!(normalize("/a/../b").is_err());
+    }
+
+    #[test]
+    fn mkdir_p_creates_chain() {
+        let mut fs = VirtualFs::new();
+        fs.mkdir_p("/usr/lib/x86_64").unwrap();
+        assert!(fs.is_dir("/usr"));
+        assert!(fs.is_dir("/usr/lib"));
+        assert!(fs.is_dir("/usr/lib/x86_64"));
+    }
+
+    #[test]
+    fn insert_makes_parents() {
+        let mut fs = VirtualFs::new();
+        fs.add_file("/etc/os-release", 120, 0xabc).unwrap();
+        assert!(fs.is_dir("/etc"));
+        assert_eq!(fs.get("/etc/os-release").unwrap().size(), 120);
+    }
+
+    #[test]
+    fn file_overwrite_allowed_dir_protected() {
+        let mut fs = VirtualFs::new();
+        fs.add_file("/lib/libmpi.so.12", 100, 1).unwrap();
+        fs.add_file("/lib/libmpi.so.12", 200, 2).unwrap(); // mount-over
+        assert_eq!(fs.get("/lib/libmpi.so.12").unwrap().size(), 200);
+        assert!(fs.insert("/lib", VNode::file(1, 1)).is_err());
+    }
+
+    #[test]
+    fn list_dir_immediate_children_only() {
+        let mut fs = VirtualFs::new();
+        fs.add_file("/a/b/c", 1, 1).unwrap();
+        fs.add_file("/a/d", 1, 2).unwrap();
+        let ls = fs.list_dir("/a").unwrap();
+        assert_eq!(ls, vec!["/a/b", "/a/d"]);
+        assert!(fs.list_dir("/a/d").is_err()); // not a directory
+        assert!(fs.list_dir("/zzz").is_err());
+    }
+
+    #[test]
+    fn remove_subtree() {
+        let mut fs = VirtualFs::new();
+        fs.add_file("/a/b/c", 1, 1).unwrap();
+        fs.add_file("/ab", 1, 2).unwrap();
+        fs.remove("/a").unwrap();
+        assert!(!fs.exists("/a"));
+        assert!(!fs.exists("/a/b/c"));
+        assert!(fs.exists("/ab")); // prefix sibling survives
+    }
+
+    #[test]
+    fn graft_subtree() {
+        let mut host = VirtualFs::new();
+        host.add_file("/opt/cray/lib/libmpi.so.12", 5000, 7).unwrap();
+        host.add_file("/opt/cray/lib/libmpifort.so.12", 3000, 8).unwrap();
+        let mut container = VirtualFs::new();
+        let n = container
+            .graft(&host, "/opt/cray/lib", "/usr/lib/host-mpi")
+            .unwrap();
+        assert_eq!(n, 2);
+        assert!(container.exists("/usr/lib/host-mpi/libmpi.so.12"));
+        assert_eq!(
+            container.get("/usr/lib/host-mpi/libmpifort.so.12").unwrap().size(),
+            3000
+        );
+    }
+
+    #[test]
+    fn graft_single_file() {
+        let mut host = VirtualFs::new();
+        host.insert("/dev/nvidia0", VNode::Device { major: 195, minor: 0 })
+            .unwrap();
+        let mut c = VirtualFs::new();
+        c.graft(&host, "/dev/nvidia0", "/dev/nvidia0").unwrap();
+        assert!(matches!(
+            c.get("/dev/nvidia0"),
+            Some(VNode::Device { major: 195, minor: 0 })
+        ));
+    }
+
+    #[test]
+    fn walk_and_sizes() {
+        let mut fs = VirtualFs::new();
+        fs.add_file("/x/a", 10, 1).unwrap();
+        fs.add_file("/x/y/b", 20, 2).unwrap();
+        assert_eq!(fs.walk("/x").unwrap().len(), 3); // a, y, y/b
+        assert_eq!(fs.total_size(), 30);
+        assert_eq!(fs.file_count(), 2);
+    }
+}

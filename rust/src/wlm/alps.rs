@@ -1,0 +1,247 @@
+//! ALPS (Application Level Placement Scheduler) — the Cray workload
+//! manager the paper lists alongside SLURM ("workload manager integration
+//! (e.g. SLURM and ALPS)", §III). `aprun -n <ranks> -N <per-node>` style
+//! placement; GPU visibility comes from the `CRAY_CUDA_MPS`-era convention
+//! of exporting CUDA_VISIBLE_DEVICES for the node's devices.
+
+use std::collections::BTreeMap;
+
+use crate::hostenv::SystemProfile;
+
+use super::{RankContext, WlmError};
+
+/// An `aprun` launch request.
+#[derive(Debug, Clone, Copy)]
+pub struct AprunRequest {
+    /// -n: total ranks (PEs).
+    pub ranks: u32,
+    /// -N: ranks per node.
+    pub per_node: u32,
+    /// expose the node's GPUs to the application?
+    pub gpus: bool,
+}
+
+pub struct Alps<'a> {
+    system: &'a SystemProfile,
+    next_apid: u64,
+}
+
+impl<'a> Alps<'a> {
+    pub fn new(system: &'a SystemProfile) -> Alps<'a> {
+        Alps {
+            system,
+            next_apid: 52000,
+        }
+    }
+
+    /// Place an `aprun`: contiguous node range, block placement.
+    pub fn aprun(&mut self, req: AprunRequest) -> Result<Vec<RankContext>, WlmError> {
+        if req.per_node == 0 || req.per_node > self.system.ranks_per_node() {
+            return Err(WlmError::TooManyTasks {
+                ntasks: req.per_node,
+                capacity: self.system.ranks_per_node(),
+            });
+        }
+        let nodes_needed = req.ranks.div_ceil(req.per_node);
+        if req.ranks == 0 || nodes_needed > self.system.node_count() {
+            return Err(WlmError::NotEnoughNodes {
+                requested: nodes_needed,
+                available: self.system.node_count(),
+            });
+        }
+        let apid = self.next_apid;
+        self.next_apid += 1;
+
+        let mut out = Vec::with_capacity(req.ranks as usize);
+        for rank in 0..req.ranks {
+            let node = rank / req.per_node;
+            let local_rank = rank % req.per_node;
+            let mut env = BTreeMap::new();
+            env.insert("ALPS_APP_ID".into(), apid.to_string());
+            env.insert("ALPS_APP_PE".into(), rank.to_string());
+            env.insert("PMI_RANK".into(), rank.to_string());
+            env.insert("PMI_SIZE".into(), req.ranks.to_string());
+            if req.gpus {
+                let have = self
+                    .system
+                    .driver(node as usize)
+                    .map(|d| d.cuda_device_count())
+                    .unwrap_or(0);
+                if have == 0 {
+                    return Err(WlmError::NotEnoughGpus {
+                        requested: 1,
+                        node,
+                        available: 0,
+                    });
+                }
+                let devs: Vec<String> = (0..have).map(|d| d.to_string()).collect();
+                env.insert("CUDA_VISIBLE_DEVICES".into(), devs.join(","));
+            }
+            out.push(RankContext {
+                rank,
+                node,
+                local_rank,
+                env,
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// The workload-manager abstraction the Shifter docs describe: both SLURM
+/// and ALPS produce per-rank launch contexts the runtime consumes.
+pub trait WorkloadManager {
+    fn launch(
+        &mut self,
+        ranks: u32,
+        per_node: u32,
+        gpus_per_node: u32,
+    ) -> Result<Vec<RankContext>, WlmError>;
+}
+
+impl<'a> WorkloadManager for Alps<'a> {
+    fn launch(
+        &mut self,
+        ranks: u32,
+        per_node: u32,
+        gpus_per_node: u32,
+    ) -> Result<Vec<RankContext>, WlmError> {
+        self.aprun(AprunRequest {
+            ranks,
+            per_node,
+            gpus: gpus_per_node > 0,
+        })
+    }
+}
+
+/// SLURM adapter over the same trait.
+pub struct SlurmWlm<'a> {
+    inner: super::Slurm<'a>,
+}
+
+impl<'a> SlurmWlm<'a> {
+    pub fn new(system: &'a SystemProfile) -> SlurmWlm<'a> {
+        SlurmWlm {
+            inner: super::Slurm::new(system),
+        }
+    }
+}
+
+impl<'a> WorkloadManager for SlurmWlm<'a> {
+    fn launch(
+        &mut self,
+        ranks: u32,
+        per_node: u32,
+        gpus_per_node: u32,
+    ) -> Result<Vec<RankContext>, WlmError> {
+        let nodes = ranks.div_ceil(per_node);
+        let alloc = self.inner.salloc(nodes)?;
+        let gres = (gpus_per_node > 0).then_some(super::GresRequest {
+            gpus_per_node,
+        });
+        self.inner.srun(&alloc, ranks, gres)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hostenv::SystemProfile;
+
+    #[test]
+    fn aprun_block_placement() {
+        let pd = SystemProfile::piz_daint();
+        let mut alps = Alps::new(&pd);
+        let ranks = alps
+            .aprun(AprunRequest {
+                ranks: 24,
+                per_node: 12,
+                gpus: false,
+            })
+            .unwrap();
+        assert_eq!(ranks.len(), 24);
+        assert_eq!(ranks[0].node, 0);
+        assert_eq!(ranks[11].node, 0);
+        assert_eq!(ranks[12].node, 1);
+        assert_eq!(ranks[23].local_rank, 11);
+        assert!(ranks[0].env.contains_key("ALPS_APP_ID"));
+        assert!(!ranks[0].env.contains_key("CUDA_VISIBLE_DEVICES"));
+    }
+
+    #[test]
+    fn aprun_gpu_mode_exports_cvd() {
+        let pd = SystemProfile::piz_daint();
+        let mut alps = Alps::new(&pd);
+        let ranks = alps
+            .aprun(AprunRequest {
+                ranks: 2,
+                per_node: 1,
+                gpus: true,
+            })
+            .unwrap();
+        assert_eq!(ranks[0].env.get("CUDA_VISIBLE_DEVICES").unwrap(), "0");
+    }
+
+    #[test]
+    fn aprun_bounds() {
+        let pd = SystemProfile::piz_daint();
+        let mut alps = Alps::new(&pd);
+        assert!(alps
+            .aprun(AprunRequest {
+                ranks: 0,
+                per_node: 1,
+                gpus: false
+            })
+            .is_err());
+        assert!(alps
+            .aprun(AprunRequest {
+                ranks: 1,
+                per_node: 100,
+                gpus: false
+            })
+            .is_err());
+        assert!(alps
+            .aprun(AprunRequest {
+                ranks: 1_000_000,
+                per_node: 12,
+                gpus: false
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn trait_parity_between_slurm_and_alps() {
+        // both WLMs produce equivalent launch contexts for the same job
+        let pd = SystemProfile::piz_daint();
+        let mut alps = Alps::new(&pd);
+        let mut slurm = SlurmWlm::new(&pd);
+        let a = alps.launch(8, 4, 1).unwrap();
+        let s = slurm.launch(8, 4, 1).unwrap();
+        assert_eq!(a.len(), s.len());
+        for (ra, rs) in a.iter().zip(&s) {
+            assert_eq!(ra.rank, rs.rank);
+            assert_eq!(ra.node, rs.node);
+            assert_eq!(
+                ra.env.get("CUDA_VISIBLE_DEVICES"),
+                rs.env.get("CUDA_VISIBLE_DEVICES")
+            );
+            assert_eq!(ra.env.get("PMI_RANK"), rs.env.get("PMI_RANK"));
+        }
+    }
+
+    #[test]
+    fn apids_increment() {
+        let pd = SystemProfile::piz_daint();
+        let mut alps = Alps::new(&pd);
+        let a = alps
+            .aprun(AprunRequest { ranks: 1, per_node: 1, gpus: false })
+            .unwrap();
+        let b = alps
+            .aprun(AprunRequest { ranks: 1, per_node: 1, gpus: false })
+            .unwrap();
+        assert_ne!(
+            a[0].env.get("ALPS_APP_ID"),
+            b[0].env.get("ALPS_APP_ID")
+        );
+    }
+}

@@ -1,0 +1,241 @@
+//! Workload manager substrate (DESIGN.md S11): a SLURM-like allocator
+//! with the Generic Resource (GRES) plugin behavior §IV.A relies on —
+//! "some [workload managers] set the value of CUDA_VISIBLE_DEVICES upon
+//! allocating jobs, providing fine-grained control over the resources
+//! made available inside compute nodes".
+
+pub mod alps;
+
+pub use alps::{Alps, AprunRequest, SlurmWlm, WorkloadManager};
+
+use std::collections::BTreeMap;
+
+use crate::hostenv::SystemProfile;
+
+#[derive(Debug, thiserror::Error)]
+pub enum WlmError {
+    #[error("requested {requested} nodes but only {available} available")]
+    NotEnoughNodes { requested: u32, available: u32 },
+    #[error("requested gpu:{requested} but node {node} has {available} CUDA devices")]
+    NotEnoughGpus {
+        requested: u32,
+        node: u32,
+        available: u32,
+    },
+    #[error("ntasks {ntasks} exceeds allocation capacity {capacity}")]
+    TooManyTasks { ntasks: u32, capacity: u32 },
+}
+
+/// `--gres=gpu:<N>` style request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct GresRequest {
+    pub gpus_per_node: u32,
+}
+
+impl GresRequest {
+    /// Parse "gpu:N".
+    pub fn parse(s: &str) -> Option<GresRequest> {
+        let n = s.strip_prefix("gpu:")?.parse().ok()?;
+        Some(GresRequest { gpus_per_node: n })
+    }
+}
+
+/// `salloc -N <nodes>` result.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    pub job_id: u64,
+    pub nodes: Vec<u32>,
+    pub cores_per_node: u32,
+}
+
+impl Allocation {
+    pub fn capacity(&self) -> u32 {
+        self.nodes.len() as u32 * self.cores_per_node
+    }
+}
+
+/// Per-rank launch context produced by `srun`: where the rank runs and the
+/// environment the WLM injects (CUDA_VISIBLE_DEVICES via GRES, PMI vars).
+#[derive(Debug, Clone)]
+pub struct RankContext {
+    pub rank: u32,
+    pub node: u32,
+    pub local_rank: u32,
+    pub env: BTreeMap<String, String>,
+}
+
+pub struct Slurm<'a> {
+    system: &'a SystemProfile,
+    next_job_id: u64,
+}
+
+impl<'a> Slurm<'a> {
+    pub fn new(system: &'a SystemProfile) -> Slurm<'a> {
+        Slurm {
+            system,
+            next_job_id: 1000,
+        }
+    }
+
+    /// `salloc -N nodes`.
+    pub fn salloc(&mut self, nodes: u32) -> Result<Allocation, WlmError> {
+        let available = self.system.node_count();
+        if nodes == 0 || nodes > available {
+            return Err(WlmError::NotEnoughNodes {
+                requested: nodes,
+                available,
+            });
+        }
+        let id = self.next_job_id;
+        self.next_job_id += 1;
+        Ok(Allocation {
+            job_id: id,
+            nodes: (0..nodes).collect(),
+            cores_per_node: self.system.ranks_per_node(),
+        })
+    }
+
+    /// `srun -n ntasks [--gres=gpu:N]`: place ranks block-wise over the
+    /// allocation and build each rank's environment. With a GRES request
+    /// the plugin sets CUDA_VISIBLE_DEVICES to the first N devices of each
+    /// node; without one the variable is NOT set (§IV.A: Shifter then does
+    /// not trigger GPU support).
+    pub fn srun(
+        &self,
+        alloc: &Allocation,
+        ntasks: u32,
+        gres: Option<GresRequest>,
+    ) -> Result<Vec<RankContext>, WlmError> {
+        if ntasks == 0 || ntasks > alloc.capacity() {
+            return Err(WlmError::TooManyTasks {
+                ntasks,
+                capacity: alloc.capacity(),
+            });
+        }
+        // validate GRES against every allocated node
+        if let Some(g) = gres {
+            for &n in &alloc.nodes {
+                let have = self
+                    .system
+                    .driver(n as usize)
+                    .map(|d| d.cuda_device_count())
+                    .unwrap_or(0);
+                if g.gpus_per_node > have {
+                    return Err(WlmError::NotEnoughGpus {
+                        requested: g.gpus_per_node,
+                        node: n,
+                        available: have,
+                    });
+                }
+            }
+        }
+        let per_node = ntasks.div_ceil(alloc.nodes.len() as u32);
+        let mut out = Vec::with_capacity(ntasks as usize);
+        for rank in 0..ntasks {
+            let node_idx = (rank / per_node) as usize;
+            let node = alloc.nodes[node_idx.min(alloc.nodes.len() - 1)];
+            let local_rank = rank % per_node;
+            let mut env = BTreeMap::new();
+            env.insert("SLURM_JOB_ID".into(), alloc.job_id.to_string());
+            env.insert("SLURM_PROCID".into(), rank.to_string());
+            env.insert("SLURM_NTASKS".into(), ntasks.to_string());
+            env.insert("SLURM_LOCALID".into(), local_rank.to_string());
+            env.insert("PMI_RANK".into(), rank.to_string());
+            if let Some(g) = gres {
+                let devs: Vec<String> =
+                    (0..g.gpus_per_node).map(|d| d.to_string()).collect();
+                env.insert("CUDA_VISIBLE_DEVICES".into(), devs.join(","));
+            }
+            out.push(RankContext {
+                rank,
+                node,
+                local_rank,
+                env,
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hostenv::SystemProfile;
+
+    #[test]
+    fn gres_parse() {
+        assert_eq!(
+            GresRequest::parse("gpu:2"),
+            Some(GresRequest { gpus_per_node: 2 })
+        );
+        assert_eq!(GresRequest::parse("gpu:"), None);
+        assert_eq!(GresRequest::parse("mic:1"), None);
+    }
+
+    #[test]
+    fn salloc_bounds() {
+        let pd = SystemProfile::piz_daint();
+        let mut s = Slurm::new(&pd);
+        assert!(s.salloc(8).is_ok());
+        assert!(s.salloc(0).is_err());
+        assert!(s.salloc(10_000).is_err());
+    }
+
+    #[test]
+    fn srun_sets_cuda_visible_devices_with_gres() {
+        let pd = SystemProfile::piz_daint();
+        let mut s = Slurm::new(&pd);
+        let alloc = s.salloc(2).unwrap();
+        let ranks = s
+            .srun(&alloc, 2, Some(GresRequest { gpus_per_node: 1 }))
+            .unwrap();
+        assert_eq!(ranks.len(), 2);
+        assert_eq!(
+            ranks[0].env.get("CUDA_VISIBLE_DEVICES").map(|s| s.as_str()),
+            Some("0")
+        );
+        // one rank per node
+        assert_ne!(ranks[0].node, ranks[1].node);
+    }
+
+    #[test]
+    fn srun_without_gres_leaves_cvd_unset() {
+        let pd = SystemProfile::piz_daint();
+        let mut s = Slurm::new(&pd);
+        let alloc = s.salloc(1).unwrap();
+        let ranks = s.srun(&alloc, 4, None).unwrap();
+        assert!(ranks.iter().all(|r| !r.env.contains_key("CUDA_VISIBLE_DEVICES")));
+    }
+
+    #[test]
+    fn gres_request_exceeding_node_gpus_fails() {
+        let pd = SystemProfile::piz_daint(); // 1 P100 per node
+        let mut s = Slurm::new(&pd);
+        let alloc = s.salloc(1).unwrap();
+        let err = s
+            .srun(&alloc, 1, Some(GresRequest { gpus_per_node: 2 }))
+            .unwrap_err();
+        assert!(matches!(err, WlmError::NotEnoughGpus { .. }));
+        // the cluster node has 3 CUDA devices (K40m + 2 K80 chips)
+        let cl = SystemProfile::linux_cluster();
+        let mut s = Slurm::new(&cl);
+        let alloc = s.salloc(2).unwrap();
+        assert!(s
+            .srun(&alloc, 2, Some(GresRequest { gpus_per_node: 2 }))
+            .is_ok());
+    }
+
+    #[test]
+    fn block_placement_fills_nodes() {
+        let pd = SystemProfile::piz_daint();
+        let mut s = Slurm::new(&pd);
+        let alloc = s.salloc(4).unwrap();
+        let ranks = s.srun(&alloc, 48, None).unwrap();
+        // 12 ranks per node, block-wise
+        assert_eq!(ranks[0].node, ranks[11].node);
+        assert_ne!(ranks[0].node, ranks[12].node);
+        assert_eq!(ranks[47].node, 3);
+        let err = s.srun(&alloc, 49, None).unwrap_err();
+        assert!(matches!(err, WlmError::TooManyTasks { .. }));
+    }
+}

@@ -1,0 +1,249 @@
+//! Failure injection: every way the runtime must refuse or degrade
+//! gracefully, exercised through the full stack.
+
+use shifter_rs::config::UdiRootConfig;
+use shifter_rs::hostenv::SystemProfile;
+use shifter_rs::shifter::{
+    GpuSupportError, MpiSupportError, RunOptions, ShifterError, ShifterRuntime,
+};
+use shifter_rs::wlm::{GresRequest, Slurm, WlmError};
+use shifter_rs::{ImageGateway, Registry};
+
+fn gw(profile: &SystemProfile, images: &[&str]) -> ImageGateway {
+    let registry = Registry::dockerhub();
+    let mut g = ImageGateway::new(profile.pfs.clone().unwrap());
+    for i in images {
+        g.pull(&registry, i).unwrap();
+    }
+    g
+}
+
+#[test]
+fn unpulled_image_refused_with_actionable_hint() {
+    let pd = SystemProfile::piz_daint();
+    let g = gw(&pd, &[]);
+    let rt = ShifterRuntime::new(&pd);
+    let err = rt
+        .run(&g, &RunOptions::new("ubuntu:xenial", &["true"]))
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("not pulled") && msg.contains("shifterimg pull"));
+}
+
+#[test]
+fn invalid_cvd_degrades_to_no_gpu_not_an_error() {
+    // §IV.A: invalid value -> support not triggered; the container still runs
+    let pd = SystemProfile::piz_daint();
+    let g = gw(&pd, &["nvidia/cuda-image:8.0"]);
+    let rt = ShifterRuntime::new(&pd);
+    for bad in ["NoDevFiles", "-3", "a,b", ""] {
+        let c = rt
+            .run(
+                &g,
+                &RunOptions::new("nvidia/cuda-image:8.0", &["true"])
+                    .with_env("CUDA_VISIBLE_DEVICES", bad),
+            )
+            .unwrap();
+        assert!(c.gpu.is_none(), "bad value {bad:?} must not trigger");
+        assert!(c.stage_log.completed());
+    }
+}
+
+#[test]
+fn out_of_range_device_is_a_hard_error() {
+    let pd = SystemProfile::piz_daint(); // 1 GPU per node
+    let g = gw(&pd, &["nvidia/cuda-image:8.0"]);
+    let rt = ShifterRuntime::new(&pd);
+    let err = rt
+        .run(
+            &g,
+            &RunOptions::new("nvidia/cuda-image:8.0", &["true"])
+                .with_env("CUDA_VISIBLE_DEVICES", "0,1"),
+        )
+        .unwrap_err();
+    match err {
+        ShifterError::Gpu(GpuSupportError::DeviceOutOfRange(1, 1)) => {}
+        other => panic!("wrong error: {other}"),
+    }
+}
+
+#[test]
+fn gpuless_host_cannot_activate_gpu_support() {
+    // a synthetic CPU-only profile: laptop stripped of its GPU
+    let mut profile = SystemProfile::laptop();
+    profile.nodes[0].gpus.clear();
+    profile.driver_version = None;
+    let registry = Registry::dockerhub();
+    let mut g = ImageGateway::new(shifter_rs::pfs::LustreFs::piz_daint());
+    g.pull(&registry, "nvidia/cuda-image:8.0").unwrap();
+    let rt = ShifterRuntime::new(&profile);
+    let err = rt
+        .run(
+            &g,
+            &RunOptions::new("nvidia/cuda-image:8.0", &["true"])
+                .with_env("CUDA_VISIBLE_DEVICES", "0"),
+        )
+        .unwrap_err();
+    assert!(matches!(
+        err,
+        ShifterError::Gpu(GpuSupportError::DriverNotLoaded)
+    ));
+}
+
+#[test]
+fn cuda8_container_refused_by_old_driver() {
+    // host with a pre-CUDA-8 driver must refuse the CUDA 8 image
+    let mut profile = SystemProfile::linux_cluster();
+    profile.driver_version = Some((340, 29));
+    let g = gw(&profile, &["nvidia/cuda-image:8.0"]);
+    let rt = ShifterRuntime::new(&profile);
+    let err = rt
+        .run(
+            &g,
+            &RunOptions::new("nvidia/cuda-image:8.0", &["true"])
+                .with_env("CUDA_VISIBLE_DEVICES", "0"),
+        )
+        .unwrap_err();
+    assert!(matches!(
+        err,
+        ShifterError::Gpu(GpuSupportError::CudaIncompatible { .. })
+    ));
+}
+
+#[test]
+fn openmpi_container_swap_refused() {
+    let pd = SystemProfile::piz_daint();
+    let g = gw(&pd, &["osu-benchmarks:openmpi-2.0"]);
+    let rt = ShifterRuntime::new(&pd);
+    let err = rt
+        .run(
+            &g,
+            &RunOptions::new("osu-benchmarks:openmpi-2.0", &["osu_latency"])
+                .with_mpi(),
+        )
+        .unwrap_err();
+    match err {
+        ShifterError::Mpi(MpiSupportError::AbiIncompatible {
+            container_abi,
+            ..
+        }) => assert_eq!(container_abi, "40:0:20"),
+        other => panic!("wrong error: {other}"),
+    }
+    // without --mpi the same container runs (TCP fallback)
+    let c = rt
+        .run(
+            &g,
+            &RunOptions::new("osu-benchmarks:openmpi-2.0", &["osu_latency"]),
+        )
+        .unwrap();
+    assert!(c.mpi.is_none());
+}
+
+#[test]
+fn mpi_flag_on_image_without_mpi_fails() {
+    let pd = SystemProfile::piz_daint();
+    let g = gw(&pd, &["ubuntu:xenial"]);
+    let rt = ShifterRuntime::new(&pd);
+    let err = rt
+        .run(&g, &RunOptions::new("ubuntu:xenial", &["true"]).with_mpi())
+        .unwrap_err();
+    assert!(matches!(
+        err,
+        ShifterError::Mpi(MpiSupportError::NoMpiInImage)
+    ));
+}
+
+#[test]
+fn misconfigured_host_mpi_paths_detected() {
+    // admin typo: config points at non-existent host libraries
+    let pd = SystemProfile::piz_daint();
+    let mut cfg = UdiRootConfig::for_profile(&pd);
+    cfg.mpi_frontend_paths = vec![
+        "/wrong/libmpi.so.12".into(),
+        "/wrong/libmpicxx.so.12".into(),
+        "/wrong/libmpifort.so.12".into(),
+    ];
+    let g = gw(&pd, &["osu-benchmarks:mpich-3.1.4"]);
+    let rt = ShifterRuntime::with_config(&pd, cfg);
+    let err = rt
+        .run(
+            &g,
+            &RunOptions::new("osu-benchmarks:mpich-3.1.4", &["osu_latency"])
+                .with_mpi(),
+        )
+        .unwrap_err();
+    assert!(matches!(
+        err,
+        ShifterError::Mpi(MpiSupportError::MissingHostLibrary(_))
+    ));
+}
+
+#[test]
+fn wlm_rejects_impossible_requests() {
+    let cl = SystemProfile::linux_cluster(); // 2 nodes, 3 CUDA devices each
+    let mut slurm = Slurm::new(&cl);
+    assert!(matches!(
+        slurm.salloc(3),
+        Err(WlmError::NotEnoughNodes { .. })
+    ));
+    let alloc = slurm.salloc(2).unwrap();
+    assert!(matches!(
+        slurm.srun(&alloc, 2, Some(GresRequest { gpus_per_node: 4 })),
+        Err(WlmError::NotEnoughGpus { .. })
+    ));
+    assert!(matches!(
+        slurm.srun(&alloc, 1000, None),
+        Err(WlmError::TooManyTasks { .. })
+    ));
+}
+
+#[test]
+fn exec_of_missing_file_fails_cleanly() {
+    let pd = SystemProfile::piz_daint();
+    let g = gw(&pd, &["ubuntu:xenial"]);
+    let rt = ShifterRuntime::new(&pd);
+    let c = rt
+        .run(&g, &RunOptions::new("ubuntu:xenial", &["true"]))
+        .unwrap();
+    let err = c.exec(&["cat", "/nonexistent"]).unwrap_err();
+    assert!(err.to_string().contains("No such file"));
+}
+
+#[test]
+fn bad_registry_reference_reported() {
+    let registry = Registry::dockerhub();
+    let pd = SystemProfile::piz_daint();
+    let mut g = ImageGateway::new(pd.pfs.clone().unwrap());
+    assert!(g.pull(&registry, "definitely-not-an-image:v9").is_err());
+    assert!(g.pull(&registry, "").is_err());
+}
+
+#[test]
+fn config_file_errors_are_line_accurate() {
+    use shifter_rs::config::ConfigError;
+    let text = "udiMount = /var/udiMount\nsiteFs broken-line\n";
+    match UdiRootConfig::from_conf(text) {
+        Err(ConfigError::BadLine(2)) => {}
+        other => panic!("wrong: {other:?}"),
+    }
+}
+
+#[test]
+fn k80_only_gres_still_renumbers_from_zero() {
+    // asking for device 2 only (the second K80 chip): container sees id 0
+    let cl = SystemProfile::linux_cluster();
+    let g = gw(&cl, &["nvidia/cuda-image:8.0"]);
+    let rt = ShifterRuntime::new(&cl);
+    let c = rt
+        .run(
+            &g,
+            &RunOptions::new("nvidia/cuda-image:8.0", &["true"])
+                .with_env("CUDA_VISIBLE_DEVICES", "2"),
+        )
+        .unwrap();
+    let gpu = c.gpu.as_ref().unwrap();
+    assert_eq!(gpu.host_devices, vec![2]);
+    assert_eq!(gpu.container_devices, vec![0]); // §IV.A.3
+    let boards = c.visible_gpus(&cl, 0);
+    assert_eq!(boards[0].name, "Tesla K80");
+}

@@ -1,0 +1,215 @@
+//! Integration tests for the extension features: user volumes, the ALPS
+//! workload manager, the gateway pull queue, nvidia-docker/Shifter
+//! workflow parity, Environment Modules, and the in-container commands.
+
+use std::collections::BTreeMap;
+
+use shifter_rs::docker::DockerRuntime;
+use shifter_rs::gateway::{PullQueue, PullState};
+use shifter_rs::hostenv::{daint_catalog, ModuleSystem};
+use shifter_rs::image::builder;
+use shifter_rs::shifter::{RunOptions, ShifterRuntime, VolumeError, ShifterError};
+use shifter_rs::wlm::{Alps, AprunRequest, SlurmWlm, WorkloadManager};
+use shifter_rs::{ImageGateway, Registry, SystemProfile};
+
+fn daint_gw(images: &[&str]) -> (SystemProfile, ImageGateway) {
+    let profile = SystemProfile::piz_daint();
+    let registry = Registry::dockerhub();
+    let mut gw = ImageGateway::new(profile.pfs.clone().unwrap());
+    for i in images {
+        gw.pull(&registry, i).unwrap();
+    }
+    (profile, gw)
+}
+
+#[test]
+fn user_volume_mounted_and_visible() {
+    let (profile, gw) = daint_gw(&["ubuntu:xenial"]);
+    let rt = ShifterRuntime::new(&profile);
+    let opts = RunOptions::new("ubuntu:xenial", &["true"])
+        .with_volume("/scratch:/workdir");
+    let c = rt.run(&gw, &opts).unwrap();
+    assert!(c.rootfs.is_dir("/workdir"));
+    let vol_mounts = c.mounts.by_origin("user volume");
+    assert_eq!(vol_mounts.len(), 1);
+    assert_eq!(vol_mounts[0].source, "/scratch");
+}
+
+#[test]
+fn reserved_volume_target_refused() {
+    let (profile, gw) = daint_gw(&["ubuntu:xenial"]);
+    let rt = ShifterRuntime::new(&profile);
+    let opts =
+        RunOptions::new("ubuntu:xenial", &["true"]).with_volume("/scratch:/etc");
+    match rt.run(&gw, &opts) {
+        Err(ShifterError::Volume(VolumeError::ReservedTarget(t))) => {
+            assert_eq!(t, "/etc")
+        }
+        other => panic!("expected reserved-target error, got {other:?}"),
+    }
+}
+
+#[test]
+fn missing_volume_host_path_refused() {
+    let (profile, gw) = daint_gw(&["ubuntu:xenial"]);
+    let rt = ShifterRuntime::new(&profile);
+    let opts = RunOptions::new("ubuntu:xenial", &["true"])
+        .with_volume("/does/not/exist:/data");
+    assert!(matches!(
+        rt.run(&gw, &opts),
+        Err(ShifterError::Volume(VolumeError::HostPathMissing(_)))
+    ));
+}
+
+#[test]
+fn every_container_gets_writable_tmpfs() {
+    let (profile, gw) = daint_gw(&["ubuntu:xenial"]);
+    let rt = ShifterRuntime::new(&profile);
+    let c = rt
+        .run(&gw, &RunOptions::new("ubuntu:xenial", &["true"]))
+        .unwrap();
+    assert!(c.rootfs.is_dir("/tmp"));
+    assert!(c.rootfs.is_dir("/run"));
+    assert!(c
+        .mounts
+        .iter()
+        .any(|m| m.target == "/tmp"
+            && matches!(m.kind, shifter_rs::vfs::MountKind::Tmpfs)));
+}
+
+#[test]
+fn alps_launch_drives_gpu_support_like_slurm() {
+    let (profile, gw) = daint_gw(&["nvidia/cuda-image:8.0"]);
+    let rt = ShifterRuntime::new(&profile);
+    let mut alps = Alps::new(&profile);
+    let ranks = alps
+        .aprun(AprunRequest {
+            ranks: 2,
+            per_node: 1,
+            gpus: true,
+        })
+        .unwrap();
+    for rank in &ranks {
+        let mut opts = RunOptions::new("nvidia/cuda-image:8.0", &["deviceQuery"]);
+        opts.env = rank.env.clone();
+        opts.node = rank.node as usize;
+        let c = rt.run(&gw, &opts).unwrap();
+        assert!(c.gpu.is_some(), "ALPS CVD export must trigger GPU support");
+        let out = c.exec(&["deviceQuery"]).unwrap();
+        assert!(out.contains("Result = PASS"));
+    }
+}
+
+#[test]
+fn wlm_trait_interchangeable_for_the_runtime() {
+    let profile = SystemProfile::piz_daint();
+    let mut wlms: Vec<Box<dyn WorkloadManager>> = vec![
+        Box::new(SlurmWlm::new(&profile)),
+        Box::new(Alps::new(&profile)),
+    ];
+    for wlm in wlms.iter_mut() {
+        let ranks = wlm.launch(4, 2, 1).unwrap();
+        assert_eq!(ranks.len(), 4);
+        assert!(ranks
+            .iter()
+            .all(|r| r.env.contains_key("CUDA_VISIBLE_DEVICES")));
+    }
+}
+
+#[test]
+fn pull_queue_feeds_the_runtime() {
+    let profile = SystemProfile::piz_daint();
+    let registry = Registry::dockerhub();
+    let mut gw = ImageGateway::new(profile.pfs.clone().unwrap());
+    let mut q = PullQueue::new();
+    q.request(&gw, &registry, "ubuntu:xenial", "alice").unwrap();
+    assert!(ShifterRuntime::new(&profile)
+        .run(&gw, &RunOptions::new("ubuntu:xenial", &["true"]))
+        .is_err()); // not ready yet
+    q.tick(&mut gw, &registry, 1e6);
+    assert_eq!(q.status("ubuntu:xenial").unwrap().state, PullState::Ready);
+    let c = ShifterRuntime::new(&profile)
+        .run(&gw, &RunOptions::new("ubuntu:xenial", &["true"]))
+        .unwrap();
+    assert!(c.stage_log.completed());
+}
+
+#[test]
+fn docker_and_shifter_expose_equivalent_cuda_containers() {
+    // the §V.B.1 methodology: nvidia-docker on the laptop, Shifter on the
+    // HPC systems — same image, both must expose working CUDA
+    let laptop = SystemProfile::laptop();
+    let mut docker = DockerRuntime::new(&laptop);
+    docker.load_image(builder::cuda_image());
+    let mut env = BTreeMap::new();
+    env.insert("CUDA_VISIBLE_DEVICES".to_string(), "0".to_string());
+    let dc = docker.run("nvidia/cuda-image:8.0", &env).unwrap();
+
+    let (daint, gw) = daint_gw(&["nvidia/cuda-image:8.0"]);
+    let rt = ShifterRuntime::new(&daint);
+    let sc = rt
+        .run(
+            &gw,
+            &RunOptions::new("nvidia/cuda-image:8.0", &["./nbody"])
+                .with_env("CUDA_VISIBLE_DEVICES", "0"),
+        )
+        .unwrap();
+
+    // both containers: one visible device, device files present, the
+    // application binary from the image unchanged
+    assert_eq!(dc.gpu_devices.len(), 1);
+    assert_eq!(sc.gpu.as_ref().unwrap().host_devices.len(), 1);
+    for c_exists in [
+        dc.rootfs.exists("/usr/local/cuda/samples/bin/nbody"),
+        sc.rootfs.exists("/usr/local/cuda/samples/bin/nbody"),
+        dc.rootfs.exists("/dev/nvidia0"),
+        sc.rootfs.exists("/dev/nvidia0"),
+    ] {
+        assert!(c_exists);
+    }
+    // key runtime-security difference the paper motivates: docker runs
+    // root-by-default through a daemon; shifter keeps the user's uid
+    assert_eq!(dc.uid, 0);
+    assert_eq!(sc.privileges.effective_uid, 1000);
+}
+
+#[test]
+fn modules_native_env_vs_container_independence() {
+    // natively the T106D run needs three modules loaded; the container
+    // run needs none — it carries its toolchain
+    let mut modules = ModuleSystem::new(daint_catalog());
+    modules.load("PrgEnv-gnu").unwrap();
+    modules.load("cudatoolkit").unwrap();
+    modules.load("cray-mpich").unwrap();
+    assert_eq!(modules.loaded().len(), 3);
+
+    let (profile, gw) = daint_gw(&["pyfr-image:1.5.0"]);
+    let rt = ShifterRuntime::new(&profile);
+    let c = rt
+        .run(&gw, &RunOptions::new("pyfr-image:1.5.0", &["true"]))
+        .unwrap();
+    // container env has its own CUDA_HOME, no module paths leaked in
+    assert!(c.env.get("CUDA_HOME").unwrap().starts_with("/usr/local/cuda"));
+    assert!(!c.env.values().any(|v| v.contains("/opt/nvidia/cudatoolkit")));
+}
+
+#[test]
+fn nvidia_smi_available_inside_gpu_containers_only() {
+    let (profile, gw) = daint_gw(&["nvidia/cuda-image:8.0", "ubuntu:xenial"]);
+    let rt = ShifterRuntime::new(&profile);
+    let with_gpu = rt
+        .run(
+            &gw,
+            &RunOptions::new("nvidia/cuda-image:8.0", &["nvidia-smi"])
+                .with_env("CUDA_VISIBLE_DEVICES", "0"),
+        )
+        .unwrap();
+    let out = with_gpu.exec(&["nvidia-smi"]).unwrap();
+    assert!(out.contains("1 device(s)"));
+    assert!(out.contains("7 driver libraries"));
+
+    let without = rt
+        .run(&gw, &RunOptions::new("ubuntu:xenial", &["nvidia-smi"]))
+        .unwrap();
+    assert!(without.exec(&["nvidia-smi"]).is_err());
+}

@@ -1,0 +1,166 @@
+//! Integration: the PJRT runtime against the real AOT artifacts — the
+//! containerized applications' compute executed for real on the CPU
+//! client. Skipped gracefully when artifacts/ has not been built.
+
+use shifter_rs::apps::{nbody, pyfr, tf_trainer};
+use shifter_rs::runtime::{default_artifact_dir, Executor, TensorValue};
+
+fn executor() -> Option<Executor> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts/ not built; skipping");
+        return None;
+    }
+    Some(Executor::new(dir).unwrap())
+}
+
+#[test]
+fn catalog_has_all_five_artifacts() {
+    let Some(ex) = executor() else { return };
+    let names = ex.catalog().names();
+    for expected in [
+        "cifar_train",
+        "mnist_predict",
+        "mnist_train",
+        "nbody_step",
+        "pyfr_step",
+    ] {
+        assert!(names.contains(&expected), "{expected} missing");
+    }
+}
+
+#[test]
+fn mnist_real_training_reduces_loss() {
+    let Some(ex) = executor() else { return };
+    let rep = tf_trainer::run_real_training(
+        &ex,
+        tf_trainer::TfWorkload::Mnist,
+        8,
+        123,
+    )
+    .unwrap();
+    assert_eq!(rep.losses.len(), 8);
+    assert!(rep.losses.iter().all(|l| l.is_finite()));
+    assert!(rep.loss_decreased(), "{:?}", rep.losses);
+    // initial loss ~ ln(10) for a fresh softmax classifier
+    assert!((1.8..4.5).contains(&(rep.first_loss() as f64)));
+}
+
+#[test]
+fn cifar_real_training_reduces_loss() {
+    let Some(ex) = executor() else { return };
+    let rep = tf_trainer::run_real_training(
+        &ex,
+        tf_trainer::TfWorkload::Cifar10,
+        6,
+        321,
+    )
+    .unwrap();
+    assert!(rep.loss_decreased(), "{:?}", rep.losses);
+}
+
+#[test]
+fn training_is_deterministic_same_seed() {
+    let Some(ex) = executor() else { return };
+    let a = tf_trainer::run_real_training(&ex, tf_trainer::TfWorkload::Mnist, 3, 7)
+        .unwrap();
+    let b = tf_trainer::run_real_training(&ex, tf_trainer::TfWorkload::Mnist, 3, 7)
+        .unwrap();
+    assert_eq!(a.losses, b.losses); // bit-identical: same compiled bits
+    let c = tf_trainer::run_real_training(&ex, tf_trainer::TfWorkload::Mnist, 3, 8)
+        .unwrap();
+    assert_ne!(a.losses, c.losses);
+}
+
+#[test]
+fn nbody_real_integration_is_stable() {
+    let Some(ex) = executor() else { return };
+    let rep = nbody::run_real_steps(&ex, 4, 55).unwrap();
+    assert_eq!(rep.n_bodies, 1024);
+    assert!(rep.final_acc_norm.is_finite() && rep.final_acc_norm > 0.0);
+    assert!(rep.cpu_gflops > 0.0);
+}
+
+#[test]
+fn nbody_momentum_conserved_through_artifact() {
+    let Some(ex) = executor() else { return };
+    let spec = ex.catalog().get("nbody_step").unwrap();
+    let n = spec.inputs[0].shape[0];
+    let mut pos4 = vec![0.0f64; n * 4];
+    let mut vel = vec![0.0f64; n * 3];
+    for i in 0..n {
+        pos4[i * 4] = (i as f64).sin() * 3.0;
+        pos4[i * 4 + 1] = (i as f64).cos() * 3.0;
+        pos4[i * 4 + 2] = ((i * 7) as f64).sin() * 3.0;
+        pos4[i * 4 + 3] = 1.0 + (i % 4) as f64 * 0.1;
+        vel[i * 3] = 0.01 * (i as f64).cos();
+    }
+    let p_before: f64 = (0..n).map(|i| pos4[i * 4 + 3] * vel[i * 3]).sum();
+    let res = ex
+        .execute(
+            "nbody_step",
+            &[
+                TensorValue::F64(pos4.clone()),
+                TensorValue::F64(vel),
+                TensorValue::F64(vec![1e-3]),
+            ],
+        )
+        .unwrap();
+    let new_vel = res.outputs[1].as_f64();
+    let p_after: f64 = (0..n).map(|i| pos4[i * 4 + 3] * new_vel[i * 3]).sum();
+    assert!(
+        (p_after - p_before).abs() < 1e-9,
+        "momentum drift: {p_before} -> {p_after}"
+    );
+}
+
+#[test]
+fn pyfr_conservation_with_null_row_operator() {
+    let Some(ex) = executor() else { return };
+    let rep = pyfr::run_real_partition(&ex, 10).unwrap();
+    // the operator in run_real_partition has zero row sums and the initial
+    // state is smooth: residuals stay bounded and finite
+    assert!(rep.residuals.iter().all(|r| r.is_finite()));
+    let min = rep.residuals.iter().cloned().fold(f32::MAX, f32::min);
+    let max = rep.residuals.iter().cloned().fold(f32::MIN, f32::max);
+    assert!(max / min.max(1e-12) < 1.5, "residual blew up: {min} -> {max}");
+}
+
+#[test]
+fn mnist_predict_consumes_trained_params() {
+    let Some(ex) = executor() else { return };
+    // one train step, then predict with the updated params
+    let train = ex.catalog().get("mnist_train").unwrap().clone();
+    let n_params = train.inputs.len() - 2;
+    let mut inputs: Vec<TensorValue> = train.inputs[..n_params]
+        .iter()
+        .map(|sig| TensorValue::F32(vec![0.01; sig.element_count()]))
+        .collect();
+    let batch = train.inputs[n_params].shape[0];
+    inputs.push(TensorValue::F32(vec![0.5; batch * 784]));
+    inputs.push(TensorValue::I32(vec![3; batch]));
+    let step = ex.execute("mnist_train", &inputs).unwrap();
+
+    let mut pinputs: Vec<TensorValue> = (0..n_params)
+        .map(|i| TensorValue::F32(step.outputs[i].as_f32().to_vec()))
+        .collect();
+    pinputs.push(TensorValue::F32(vec![0.5; batch * 784]));
+    let pred = ex.execute("mnist_predict", &pinputs).unwrap();
+    let logits = pred.outputs[0].as_f32();
+    assert_eq!(logits.len(), batch * 10);
+    assert!(logits.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn executor_rejects_malformed_inputs() {
+    let Some(ex) = executor() else { return };
+    // wrong element count
+    let bad = vec![
+        TensorValue::F32(vec![0.0; 3]),
+        TensorValue::F32(vec![0.0; 64]),
+        TensorValue::F32(vec![0.0]),
+    ];
+    assert!(ex.execute("pyfr_step", &bad).is_err());
+    // unknown artifact
+    assert!(ex.execute("nonexistent", &[]).is_err());
+}

@@ -1,0 +1,175 @@
+//! Integration: the full §III.B user workflow across all three systems —
+//! build → push → pull → run — and the §IV support paths through the
+//! complete runtime stack (registry + gateway + WLM + shifter).
+
+use shifter_rs::image::builder;
+use shifter_rs::pfs::LustreFs;
+use shifter_rs::shifter::{RunOptions, ShifterRuntime};
+use shifter_rs::wlm::{GresRequest, Slurm};
+use shifter_rs::{ImageGateway, Registry, SystemProfile};
+
+fn gateway_for(profile: &SystemProfile) -> ImageGateway {
+    ImageGateway::new(profile.pfs.clone().unwrap_or_else(LustreFs::piz_daint))
+}
+
+#[test]
+fn full_workflow_build_push_pull_run() {
+    // 1–2: build + test on the "laptop" (the builder is the docker stand-in)
+    let image = builder::pyfr_image();
+    assert!(image.flatten().unwrap().exists("/usr/local/bin/pyfr"));
+
+    // 3: push to the registry
+    let mut registry = Registry::new();
+    registry.push(image);
+
+    // 4: pull into each HPC system with the gateway
+    for profile in [SystemProfile::linux_cluster(), SystemProfile::piz_daint()] {
+        let mut gw = gateway_for(&profile);
+        let rep = gw.pull(&registry, "pyfr-image:1.5.0").unwrap();
+        assert!(!rep.cached && rep.total_secs() > 0.0);
+
+        // 5: run the container — same image, no modification
+        let rt = ShifterRuntime::new(&profile);
+        let c = rt
+            .run(&gw, &RunOptions::new("pyfr-image:1.5.0", &["true"]))
+            .unwrap();
+        assert!(c.stage_log.completed(), "{}", profile.name);
+        assert!(c.rootfs.exists("/usr/local/bin/pyfr"));
+    }
+}
+
+#[test]
+fn os_release_example_identical_on_every_system() {
+    let registry = Registry::dockerhub();
+    let mut outputs = Vec::new();
+    for profile in [
+        SystemProfile::laptop(),
+        SystemProfile::linux_cluster(),
+        SystemProfile::piz_daint(),
+    ] {
+        let mut gw = gateway_for(&profile);
+        gw.pull(&registry, "docker:ubuntu:xenial").unwrap();
+        let rt = ShifterRuntime::new(&profile);
+        let c = rt
+            .run(
+                &gw,
+                &RunOptions::new("ubuntu:xenial", &["cat", "/etc/os-release"]),
+            )
+            .unwrap();
+        outputs.push(c.exec(&["cat", "/etc/os-release"]).unwrap());
+    }
+    // the container reports ITS OS regardless of the host OS
+    assert!(outputs[0].contains("Xenial Xerus"));
+    assert_eq!(outputs[0], outputs[1]);
+    assert_eq!(outputs[1], outputs[2]);
+}
+
+#[test]
+fn slurm_gres_drives_gpu_support_end_to_end() {
+    // the §IV.A SLURM example: srun --gres=gpu:N shifter --image=cuda ...
+    let profile = SystemProfile::linux_cluster();
+    let registry = Registry::dockerhub();
+    let mut gw = gateway_for(&profile);
+    gw.pull(&registry, "nvidia/cuda-image:8.0").unwrap();
+
+    let mut slurm = Slurm::new(&profile);
+    let alloc = slurm.salloc(2).unwrap();
+    let ranks = slurm
+        .srun(&alloc, 2, Some(GresRequest { gpus_per_node: 2 }))
+        .unwrap();
+
+    let rt = ShifterRuntime::new(&profile);
+    for rank in &ranks {
+        let mut opts =
+            RunOptions::new("nvidia/cuda-image:8.0", &["./deviceQuery"]);
+        opts.env = rank.env.clone();
+        opts.node = rank.node as usize;
+        let c = rt.run(&gw, &opts).unwrap();
+        let gpu = c.gpu.as_ref().expect("GRES must trigger GPU support");
+        assert_eq!(gpu.host_devices, vec![0, 1]);
+        assert_eq!(gpu.container_devices, vec![0, 1]); // renumbered from 0
+        let boards = c.visible_gpus(&profile, rank.node as usize);
+        assert_eq!(boards.len(), 2);
+        assert_eq!(boards[0].name, "Tesla K40m");
+        assert_eq!(boards[1].name, "Tesla K80");
+    }
+}
+
+#[test]
+fn srun_without_gres_runs_cpu_only() {
+    let profile = SystemProfile::piz_daint();
+    let registry = Registry::dockerhub();
+    let mut gw = gateway_for(&profile);
+    gw.pull(&registry, "nvidia/cuda-image:8.0").unwrap();
+    let mut slurm = Slurm::new(&profile);
+    let alloc = slurm.salloc(1).unwrap();
+    let ranks = slurm.srun(&alloc, 1, None).unwrap();
+    let rt = ShifterRuntime::new(&profile);
+    let mut opts = RunOptions::new("nvidia/cuda-image:8.0", &["true"]);
+    opts.env = ranks[0].env.clone();
+    let c = rt.run(&gw, &opts).unwrap();
+    assert!(c.gpu.is_none(), "no GRES, no CUDA_VISIBLE_DEVICES, no GPU");
+}
+
+#[test]
+fn mpi_swap_correct_on_both_hpc_systems() {
+    let registry = Registry::dockerhub();
+    for (profile, expect_host) in [
+        (SystemProfile::linux_cluster(), "MVAPICH2 2.1.0"),
+        (SystemProfile::piz_daint(), "Cray MPT 7.5.0"),
+    ] {
+        let mut gw = gateway_for(&profile);
+        for image in [
+            "osu-benchmarks:mpich-3.1.4",
+            "osu-benchmarks:mvapich2-2.2",
+            "osu-benchmarks:intelmpi-2017.1",
+        ] {
+            gw.pull(&registry, image).unwrap();
+            let rt = ShifterRuntime::new(&profile);
+            let c = rt
+                .run(&gw, &RunOptions::new(image, &["osu_latency"]).with_mpi())
+                .unwrap();
+            let rep = c.mpi.as_ref().unwrap();
+            assert_eq!(rep.host_mpi, expect_host, "{image}");
+            // the swapped library is what the loader now resolves
+            for (cpath, hpath) in &rep.swapped {
+                assert_eq!(
+                    c.mounts.effective(cpath).unwrap().source,
+                    *hpath
+                );
+            }
+            // and the effective MPI reaches the system fabric
+            let eff = c.effective_mpi(&profile).unwrap();
+            assert!(eff.supports_fabric(profile.fabric));
+        }
+    }
+}
+
+#[test]
+fn gateway_is_idempotent_and_digest_aware() {
+    let registry = Registry::dockerhub();
+    let profile = SystemProfile::piz_daint();
+    let mut gw = gateway_for(&profile);
+    let first = gw.pull(&registry, "tensorflow/tensorflow:1.0.0-devel-gpu-py3").unwrap();
+    let second = gw.pull(&registry, "tensorflow/tensorflow:1.0.0-devel-gpu-py3").unwrap();
+    assert!(!first.cached && second.cached);
+    assert_eq!(gw.list().len(), 1);
+}
+
+#[test]
+fn same_container_env_across_systems() {
+    // portability of the environment: image env vars arrive identically
+    let registry = Registry::dockerhub();
+    let mut envs = Vec::new();
+    for profile in [SystemProfile::linux_cluster(), SystemProfile::piz_daint()] {
+        let mut gw = gateway_for(&profile);
+        gw.pull(&registry, "pyfr-image:1.5.0").unwrap();
+        let rt = ShifterRuntime::new(&profile);
+        let c = rt
+            .run(&gw, &RunOptions::new("pyfr-image:1.5.0", &["true"]))
+            .unwrap();
+        envs.push(c.env.clone());
+    }
+    assert_eq!(envs[0].get("CUDA_HOME"), envs[1].get("CUDA_HOME"));
+    assert_eq!(envs[0].get("PATH"), envs[1].get("PATH"));
+}

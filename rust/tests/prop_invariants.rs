@@ -1,0 +1,314 @@
+//! Property-based tests over coordinator invariants. proptest is not in
+//! the offline vendor set, so this uses the crate's deterministic PRNG to
+//! drive randomized cases (hundreds per property, fixed seeds → fully
+//! reproducible).
+
+use shifter_rs::fabric::{link_for, FabricKind, Transport};
+use shifter_rs::gpu::parse_cuda_visible_devices;
+use shifter_rs::mpi::LibtoolAbi;
+use shifter_rs::util::json::Json;
+use shifter_rs::util::prng::Rng;
+use shifter_rs::vfs::{normalize, VNode, VirtualFs};
+use shifter_rs::wlm::{GresRequest, Slurm};
+use shifter_rs::SystemProfile;
+
+const CASES: usize = 300;
+
+fn rand_path(rng: &mut Rng, max_depth: u64) -> String {
+    let depth = 1 + rng.below(max_depth);
+    let mut p = String::new();
+    for _ in 0..depth {
+        p.push('/');
+        let len = 1 + rng.below(6);
+        for _ in 0..len {
+            p.push((b'a' + rng.below(26) as u8) as char);
+        }
+    }
+    p
+}
+
+#[test]
+fn prop_normalize_idempotent() {
+    let mut rng = Rng::new(101);
+    for _ in 0..CASES {
+        let p = rand_path(&mut rng, 5);
+        let n1 = normalize(&p).unwrap();
+        let n2 = normalize(&n1).unwrap();
+        assert_eq!(n1, n2, "normalize not idempotent for {p}");
+        assert!(n1.starts_with('/'));
+        assert!(!n1.contains("//"));
+    }
+}
+
+#[test]
+fn prop_vfs_insert_then_get() {
+    let mut rng = Rng::new(202);
+    for case in 0..CASES {
+        let mut fs = VirtualFs::new();
+        let n_files = 1 + rng.below(20);
+        let mut inserted = Vec::new();
+        for i in 0..n_files {
+            let p = rand_path(&mut rng, 4);
+            if fs.insert(&p, VNode::file(i, i)).is_ok() {
+                inserted.push(p);
+            }
+        }
+        for p in &inserted {
+            assert!(fs.exists(p), "case {case}: lost {p}");
+            // every ancestor is a directory or the node itself
+            let norm = normalize(p).unwrap();
+            let mut anc = String::new();
+            for comp in norm.split('/').skip(1) {
+                let parent = if anc.is_empty() { "/".to_string() } else { anc.clone() };
+                assert!(fs.exists(&parent));
+                anc = format!("{anc}/{comp}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_vfs_graft_preserves_subtree() {
+    let mut rng = Rng::new(303);
+    for _ in 0..100 {
+        let mut src = VirtualFs::new();
+        let n = 1 + rng.below(15);
+        for i in 0..n {
+            let p = format!("/data{}", rand_path(&mut rng, 3));
+            let _ = src.insert(&p, VNode::file(i, i));
+        }
+        let mut dst = VirtualFs::new();
+        dst.graft(&src, "/data", "/mnt/data").unwrap();
+        for (p, node) in src.walk("/data").unwrap() {
+            let target = format!("/mnt/data{}", &p["/data".len()..]);
+            assert_eq!(dst.get(&target), Some(&node), "{p}");
+        }
+    }
+}
+
+#[test]
+fn prop_libtool_replacement_rules() {
+    let mut rng = Rng::new(404);
+    for _ in 0..CASES {
+        let c_cur = rng.below(20) as u32;
+        let c_age = rng.below((c_cur + 1) as u64) as u32;
+        let h_cur = rng.below(20) as u32;
+        let h_age = rng.below((h_cur + 1) as u64) as u32;
+        let container = LibtoolAbi::new(c_cur, 0, c_age);
+        let host = LibtoolAbi::new(h_cur, 0, h_age);
+        let ok = host.host_can_replace(&container);
+        // definition check: soname equal AND interface coverage
+        let expect = host.soname_major() == container.soname_major()
+            && c_cur >= h_cur - h_age
+            && c_cur <= h_cur;
+        assert_eq!(ok, expect, "host {host:?} container {container:?}");
+        // reflexivity: any library can replace itself
+        assert!(host.host_can_replace(&host));
+    }
+}
+
+#[test]
+fn prop_abi_string_roundtrip() {
+    let mut rng = Rng::new(505);
+    for _ in 0..CASES {
+        let cur = rng.below(100) as u32;
+        let abi = LibtoolAbi::new(
+            cur,
+            rng.below(100) as u32,
+            rng.below((cur + 1) as u64) as u32,
+        );
+        assert_eq!(LibtoolAbi::parse(&abi.abi_string()), Some(abi));
+    }
+}
+
+#[test]
+fn prop_cuda_visible_devices_valid_lists_roundtrip() {
+    let mut rng = Rng::new(606);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(8);
+        let devs: Vec<u32> = (0..n).map(|_| rng.below(16) as u32).collect();
+        let value = devs
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        assert_eq!(parse_cuda_visible_devices(&value), Some(devs));
+    }
+}
+
+#[test]
+fn prop_cuda_visible_devices_never_panics_on_junk() {
+    let mut rng = Rng::new(707);
+    for _ in 0..CASES {
+        let len = rng.below(12);
+        let junk: String = (0..len)
+            .map(|_| {
+                let c = rng.below(96) as u8 + 32;
+                c as char
+            })
+            .collect();
+        let _ = parse_cuda_visible_devices(&junk); // must not panic
+    }
+}
+
+#[test]
+fn prop_link_models_monotone_in_size() {
+    for kind in [FabricKind::InfinibandEdr, FabricKind::CrayAries] {
+        for transport in [Transport::Native, Transport::TcpFallback] {
+            let link = link_for(kind, transport);
+            let mut rng = Rng::new(808);
+            for _ in 0..CASES {
+                let a = 32 + rng.below(4 * 1024 * 1024);
+                let b = a + 1 + rng.below(1024 * 1024);
+                assert!(
+                    link.latency_us(b) >= link.latency_us(a),
+                    "{kind:?}/{transport:?}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_slurm_placement_complete_and_bounded() {
+    let pd = SystemProfile::piz_daint();
+    let mut rng = Rng::new(909);
+    for _ in 0..100 {
+        let nodes = 1 + rng.below(64) as u32;
+        let mut slurm = Slurm::new(&pd);
+        let alloc = slurm.salloc(nodes).unwrap();
+        let ntasks = 1 + rng.below(alloc.capacity() as u64) as u32;
+        let gres = if rng.below(2) == 0 {
+            Some(GresRequest { gpus_per_node: 1 })
+        } else {
+            None
+        };
+        let ranks = slurm.srun(&alloc, ntasks, gres).unwrap();
+        assert_eq!(ranks.len(), ntasks as usize);
+        // ranks are unique and placed on allocated nodes
+        for (i, r) in ranks.iter().enumerate() {
+            assert_eq!(r.rank, i as u32);
+            assert!(alloc.nodes.contains(&r.node));
+            assert_eq!(
+                r.env.contains_key("CUDA_VISIBLE_DEVICES"),
+                gres.is_some()
+            );
+        }
+        // no node exceeds its core capacity
+        for &node in &alloc.nodes {
+            let on_node =
+                ranks.iter().filter(|r| r.node == node).count() as u32;
+            assert!(on_node <= alloc.cores_per_node);
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn rand_json(rng: &mut Rng, depth: u64) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.below(2_000_000) as f64 - 1e6) / 8.0),
+            3 => {
+                let len = rng.below(10);
+                Json::Str(
+                    (0..len)
+                        .map(|_| (b'a' + rng.below(26) as u8) as char)
+                        .collect(),
+                )
+            }
+            4 => Json::Arr(
+                (0..rng.below(4)).map(|_| rand_json(rng, depth - 1)).collect(),
+            ),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), rand_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = Rng::new(1010);
+    for _ in 0..CASES {
+        let v = rand_json(&mut rng, 3);
+        let text = v.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), v, "text: {text}");
+    }
+}
+
+#[test]
+fn prop_image_flatten_last_writer_wins() {
+    use shifter_rs::image::{Image, ImageManifest, ImageRef, Layer};
+    let mut rng = Rng::new(1111);
+    for _ in 0..60 {
+        let n_layers = 2 + rng.below(4) as usize;
+        let shared = "/shared/file";
+        let mut layers = Vec::new();
+        let mut last_size = 0;
+        for li in 0..n_layers {
+            let mut t = VirtualFs::new();
+            last_size = 100 + li as u64;
+            t.add_file(shared, last_size, li as u64).unwrap();
+            let p = rand_path(&mut rng, 3);
+            let _ = t.insert(&p, VNode::file(1, 1));
+            layers.push(Layer::new(t, vec![]));
+        }
+        let img = Image {
+            reference: ImageRef::parse("prop:1").unwrap(),
+            manifest: ImageManifest::default(),
+            layers,
+        };
+        let flat = img.flatten().unwrap();
+        assert_eq!(flat.get(shared).unwrap().size(), last_size);
+    }
+}
+
+#[test]
+fn prop_volume_spec_parse_roundtrip_and_reserved_rejection() {
+    use shifter_rs::shifter::{VolumeError, VolumeSpec};
+    let mut rng = Rng::new(1212);
+    let mut host = VirtualFs::new();
+    for _ in 0..CASES {
+        let h = rand_path(&mut rng, 3);
+        let c = format!("/data{}", rand_path(&mut rng, 2));
+        host.mkdir_p(&h).unwrap();
+        let ro = rng.below(2) == 0;
+        let spec_str = format!("{h}:{c}{}", if ro { ":ro" } else { "" });
+        let v = VolumeSpec::parse(&spec_str).unwrap();
+        assert_eq!(v.host_path, h);
+        assert_eq!(v.read_only, ro);
+        assert!(v.validate(&host).is_ok(), "{spec_str}");
+        // reserved targets always rejected, whatever the host path
+        for reserved in ["/", "/etc", "/dev", "/usr"] {
+            let bad = VolumeSpec::parse(&format!("{h}:{reserved}")).unwrap();
+            assert!(matches!(
+                bad.validate(&host),
+                Err(VolumeError::ReservedTarget(_))
+            ));
+        }
+    }
+}
+
+#[test]
+fn prop_kernel_version_ordering_total() {
+    use shifter_rs::shifter::preflight::KernelVersion;
+    let mut rng = Rng::new(1313);
+    for _ in 0..CASES {
+        let a = KernelVersion::new(
+            rng.below(6) as u32,
+            rng.below(20) as u32,
+            rng.below(100) as u32,
+        );
+        let b = KernelVersion::new(
+            rng.below(6) as u32,
+            rng.below(20) as u32,
+            rng.below(100) as u32,
+        );
+        // antisymmetry + parse/format coherence
+        if a < b {
+            assert!(b > a);
+        }
+        let s = format!("{}.{}.{}", a.major, a.minor, a.patch);
+        assert_eq!(KernelVersion::parse(&s), Some(a));
+    }
+}
