@@ -1,0 +1,190 @@
+//! gateway_scale — the distributed image-distribution benchmark
+//! (DESIGN.md S18): a 10 000-concurrent-node pull storm against the
+//! sharded gateway cluster, cold vs warm node caches, at 1/4/16 shards.
+//!
+//! Reported (and asserted, like the paper-table benches):
+//!   * cold-storm makespan/throughput for a 32-image catalog at each shard
+//!     count — 16 shards must beat 1 shard by >= 4x;
+//!   * per-node pull latency percentiles (p50/p95/p99) for cold vs warm
+//!     node caches — warm p99 must be >= 10x lower than cold;
+//!   * content-addressed-store dedup: bytes stored < the sum of per-image
+//!     bytes (the catalog shares one ubuntu base).
+
+use shifter_rs::distrib::DistributionFabric;
+use shifter_rs::gateway::ImageSource;
+use shifter_rs::image::builder::{self, ImageBuilder};
+use shifter_rs::metrics::{Stats, Table};
+use shifter_rs::pfs::LustreFs;
+use shifter_rs::registry::Registry;
+use shifter_rs::util::prng::Rng;
+
+/// srun job width of the storm (paper scale: "thousands of compute nodes").
+const NODES: usize = 10_000;
+/// Distinct images in the catalog storm.
+const CATALOG: usize = 32;
+/// Fixed app-layer size: identical job cost per image, so the shard
+/// speedup measures scheduling, not image-size luck.
+const APP_LAYER_BYTES: u64 = 80_000_000;
+/// The flagship image all 10k nodes pull (1 GB model weights on top of
+/// the shared base).
+const FLAGSHIP_LAYER_BYTES: u64 = 1_000_000_000;
+
+/// Registry with one shared base, 32 derived service images, and the
+/// flagship — the shape of a production site's catalog.
+fn storm_registry() -> (Registry, Vec<String>) {
+    let base = builder::ubuntu_xenial();
+    let mut registry = Registry::new();
+    registry.push(base.clone());
+    let mut refs = Vec::new();
+    for i in 0..CATALOG {
+        let name = format!("svc-{i:02}:1.0");
+        registry.push(
+            ImageBuilder::from_image(&base, &name)
+                .file(&format!("/opt/svc-{i:02}/app.bin"), APP_LAYER_BYTES)
+                .build(),
+        );
+        refs.push(name);
+    }
+    registry.push(
+        ImageBuilder::from_image(&base, "mega-app:1.0")
+            .file("/opt/mega/model.bin", FLAGSHIP_LAYER_BYTES)
+            .build(),
+    );
+    (registry, refs)
+}
+
+fn main() {
+    let pfs = LustreFs::piz_daint();
+    let (registry, catalog_refs) = storm_registry();
+
+    // -- phase 1: catalog cold storm at 1/4/16 shards ---------------------
+    let mut table = Table::new(
+        &format!("{CATALOG}-image cold storm (catalog sync)"),
+        &["shards", "makespan", "imgs/min", "speedup"],
+    );
+    let mut makespans = Vec::new();
+    let mut dedup_report = None;
+    for &shards in &[1usize, 4, 16] {
+        let mut fabric = DistributionFabric::new(shards, pfs.clone());
+        for name in &catalog_refs {
+            fabric.request(&registry, name, "storm").unwrap();
+        }
+        fabric.tick(&registry, 1e9);
+        assert!(fabric.cluster().drained());
+        let makespan = fabric.cluster().makespan_secs();
+        table.row(&[
+            shards.to_string(),
+            format!("{makespan:.1}s"),
+            format!("{:.1}", CATALOG as f64 / makespan * 60.0),
+            format!("{:.1}x", makespans.first().unwrap_or(&makespan) / makespan),
+        ]);
+        makespans.push(makespan);
+        if shards == 16 {
+            let cas = fabric.cluster().cas();
+            dedup_report = Some((
+                cas.stored_bytes(),
+                cas.logical_bytes(),
+                cas.dedup_ratio(),
+            ));
+        }
+    }
+    print!("{}", table.render());
+
+    let (serial, sharded) = (makespans[0], makespans[2]);
+    assert!(
+        serial >= 4.0 * sharded,
+        "16-shard cold-storm throughput must be >= 4x the 1-shard \
+         configuration: 1-shard={serial:.1}s 16-shard={sharded:.1}s"
+    );
+
+    let (stored, logical, ratio) = dedup_report.unwrap();
+    println!(
+        "layer dedup: {:.1} MB stored for {:.1} MB of per-image layers \
+         ({ratio:.2}x)",
+        stored as f64 / 1e6,
+        logical as f64 / 1e6,
+    );
+    assert!(
+        stored < logical,
+        "CAS must store less than the sum of per-image bytes"
+    );
+
+    // -- phase 2: 10k nodes pull the flagship, cold then warm -------------
+    let mut fabric = DistributionFabric::new(16, pfs.clone());
+    for node in 0..NODES {
+        fabric
+            .request(&registry, "mega-app:1.0", &format!("node-{node:05}"))
+            .unwrap();
+    }
+    fabric.tick(&registry, 1e9);
+    let job = fabric.cluster().status("mega-app:1.0").unwrap();
+    assert_eq!(job.requesters.len(), NODES, "storm coalesces into one job");
+    let ready_secs = job.completed_at.expect("storm job completed");
+    let image = fabric.resolve("mega-app:1.0").unwrap();
+
+    let node_latencies = |mode: &str, queue_secs: f64| -> Stats {
+        let samples: Vec<f64> = (0..NODES)
+            .map(|node| {
+                let fetch = fabric
+                    .node_fetch_secs(image, node, NODES as u64)
+                    .expect("fabric always models the node fetch");
+                let noise = Rng::from_tags(&[
+                    "gateway-scale",
+                    mode,
+                    &node.to_string(),
+                ])
+                .lognormal_noise(0.05);
+                (queue_secs + fetch) * noise
+            })
+            .collect();
+        Stats::from_samples(&samples)
+    };
+
+    // cold: every node waits for the shared job, then joins the broadcast
+    let cold = node_latencies("cold", ready_secs);
+    // warm: the image is READY and node-local — a lookup plus a stat
+    let warm = node_latencies("warm", fabric.resolve_latency_secs());
+
+    let mut lat = Table::new(
+        &format!("per-node pull latency, {NODES} nodes (16 shards)"),
+        &["cache", "p50", "p95", "p99", "mean"],
+    );
+    let fmt = |s: &Stats| -> Vec<String> {
+        [s.p50, s.p95, s.p99, s.mean]
+            .iter()
+            .map(|v| {
+                if *v < 1.0 {
+                    format!("{:.1}ms", v * 1e3)
+                } else {
+                    format!("{v:.1}s")
+                }
+            })
+            .collect()
+    };
+    let mut cold_row = vec!["cold".to_string()];
+    cold_row.extend(fmt(&cold));
+    lat.row(&cold_row);
+    let mut warm_row = vec!["warm".to_string()];
+    warm_row.extend(fmt(&warm));
+    lat.row(&warm_row);
+    print!("{}", lat.render());
+
+    let stats = fabric.cache_stats();
+    assert_eq!(stats.nodes, NODES);
+    assert_eq!(stats.misses, NODES as u64); // one cold fill per node
+    assert_eq!(stats.hits, NODES as u64); // one warm hit per node
+
+    assert!(
+        warm.p99 * 10.0 <= cold.p99,
+        "warm-cache p99 must be >= 10x lower than cold: \
+         warm={:.4}s cold={:.1}s",
+        warm.p99,
+        cold.p99
+    );
+    println!(
+        "shape holds: 16-shard storm {:.1}x faster than 1 shard, warm p99 \
+         {:.0}x below cold, dedup {ratio:.2}x ✓",
+        serial / sharded,
+        cold.p99 / warm.p99
+    );
+}

@@ -3,18 +3,30 @@
 //! ```text
 //! shifterimg [--system=daint] pull docker:ubuntu:xenial
 //! shifterimg [--system=daint] images
+//! shifterimg [--system=daint] lookup docker:ubuntu:xenial
+//! shifterimg [--system=daint] [--shards=4] cluster-status
 //! ```
+//!
+//! `cluster-status` drives the distributed fabric (DESIGN.md S18): it
+//! pulls the full registry catalog through a sharded gateway cluster and
+//! prints the per-shard queue/image state plus the content-addressed
+//! store's dedup accounting.
 
+use shifter_rs::distrib::DistributionFabric;
+use shifter_rs::metrics::Table;
 use shifter_rs::util::cli::CliSpec;
 use shifter_rs::{ImageGateway, Registry, SystemProfile};
 
 fn usage() -> ! {
-    eprintln!("usage: shifterimg [--system=laptop|cluster|daint] <pull <ref> | images | lookup <ref>>");
+    eprintln!(
+        "usage: shifterimg [--system=laptop|cluster|daint] [--shards=N] \
+         <pull <ref> | images | lookup <ref> | cluster-status>"
+    );
     std::process::exit(2);
 }
 
 fn main() {
-    let spec = CliSpec::new(&[("system", true)], false);
+    let spec = CliSpec::new(&[("system", true), ("shards", true)], false);
     let parsed = match spec.parse(std::env::args().skip(1)) {
         Ok(p) => p,
         Err(e) => {
@@ -28,13 +40,12 @@ fn main() {
         "daint" => SystemProfile::piz_daint(),
         _ => usage(),
     };
+    let pfs = profile
+        .pfs
+        .clone()
+        .unwrap_or_else(shifter_rs::pfs::LustreFs::piz_daint);
     let registry = Registry::dockerhub();
-    let mut gateway = ImageGateway::new(
-        profile
-            .pfs
-            .clone()
-            .unwrap_or_else(shifter_rs::pfs::LustreFs::piz_daint),
-    );
+    let mut gateway = ImageGateway::new(pfs.clone());
 
     match parsed.positionals.as_slice() {
         [cmd, reference] if cmd == "pull" => {
@@ -81,6 +92,56 @@ fn main() {
                     std::process::exit(1);
                 }
             }
+        }
+        [cmd] if cmd == "cluster-status" => {
+            let shards: usize = match parsed.get("shards").unwrap_or("4").parse()
+            {
+                Ok(n) if n >= 1 => n,
+                _ => {
+                    eprintln!("shifterimg: --shards must be a positive integer");
+                    usage();
+                }
+            };
+            let mut fabric = DistributionFabric::new(shards, pfs);
+            // drive the whole catalog through the cluster, as a site's
+            // nightly sync would
+            for reference in registry.list() {
+                if let Err(e) = fabric.request(&registry, &reference, "admin") {
+                    eprintln!("shifterimg: {reference}: {e}");
+                }
+            }
+            fabric.tick(&registry, 1e9);
+
+            let mut table = Table::new(
+                &format!("cluster status ({shards} shards)"),
+                &["shard", "backlog", "ready", "failed", "images", "active"],
+            );
+            for s in fabric.cluster().cluster_status() {
+                table.row(&[
+                    s.shard.to_string(),
+                    s.backlog.to_string(),
+                    s.ready.to_string(),
+                    s.failed.to_string(),
+                    s.images.to_string(),
+                    s.active.unwrap_or_else(|| "-".to_string()),
+                ]);
+            }
+            print!("{}", table.render());
+
+            let cas = fabric.cluster().cas();
+            println!(
+                "storm drained in {:.1}s (makespan across shards)",
+                fabric.cluster().makespan_secs()
+            );
+            println!(
+                "cas: {} blobs, {:.1} MB stored / {:.1} MB logical \
+                 (dedup {:.2}x, {:.1} MB saved)",
+                cas.blob_count(),
+                cas.stored_bytes() as f64 / 1e6,
+                cas.logical_bytes() as f64 / 1e6,
+                cas.dedup_ratio(),
+                cas.saved_bytes() as f64 / 1e6,
+            );
         }
         _ => usage(),
     }

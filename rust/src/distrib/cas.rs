@@ -1,0 +1,230 @@
+//! Content-addressed blob store (DESIGN.md S18): the cluster-wide layer
+//! store behind the gateway shards. Every image layer is a blob keyed by
+//! its content digest; images that share base layers (the common
+//! `FROM ubuntu` case) store those layers exactly once. Ref-counting keeps
+//! a blob alive as long as any registered image still references it, and
+//! the logical-vs-stored accounting is what the `gateway_scale` bench
+//! reports as the dedup ratio.
+
+use std::collections::BTreeMap;
+
+use crate::image::Image;
+
+/// One stored blob: size plus the number of registered images using it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlobInfo {
+    pub bytes: u64,
+    pub refcount: u32,
+}
+
+/// Receipt of registering one image: how much was new vs deduplicated.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImageReceipt {
+    pub reference: String,
+    /// Layers stored for the first time.
+    pub new_layers: usize,
+    /// Layers that were already present (refcount bumped only).
+    pub shared_layers: usize,
+    pub new_bytes: u64,
+    pub shared_bytes: u64,
+}
+
+/// The content-addressed store.
+#[derive(Debug, Default)]
+pub struct ContentStore {
+    blobs: BTreeMap<u64, BlobInfo>,
+    /// Sum of blob sizes weighted by refcount — what naive per-image
+    /// storage would have cost.
+    logical_bytes: u64,
+    /// Actual bytes on disk (each blob once).
+    stored_bytes: u64,
+}
+
+impl ContentStore {
+    pub fn new() -> ContentStore {
+        ContentStore::default()
+    }
+
+    /// Add one reference to `digest`, storing the blob if it is new.
+    /// Returns true when the blob was newly stored.
+    pub fn insert(&mut self, digest: u64, bytes: u64) -> bool {
+        self.logical_bytes += bytes;
+        match self.blobs.get_mut(&digest) {
+            Some(blob) => {
+                blob.refcount += 1;
+                false
+            }
+            None => {
+                self.blobs.insert(digest, BlobInfo { bytes, refcount: 1 });
+                self.stored_bytes += bytes;
+                true
+            }
+        }
+    }
+
+    /// Drop one reference; the blob is evicted when its refcount reaches
+    /// zero. Returns false if the digest was unknown.
+    pub fn release(&mut self, digest: u64) -> bool {
+        let Some(blob) = self.blobs.get_mut(&digest) else {
+            return false;
+        };
+        self.logical_bytes -= blob.bytes;
+        blob.refcount -= 1;
+        if blob.refcount == 0 {
+            self.stored_bytes -= blob.bytes;
+            self.blobs.remove(&digest);
+        }
+        true
+    }
+
+    pub fn contains(&self, digest: u64) -> bool {
+        self.blobs.contains_key(&digest)
+    }
+
+    pub fn refcount(&self, digest: u64) -> u32 {
+        self.blobs.get(&digest).map_or(0, |b| b.refcount)
+    }
+
+    /// Register every layer of `image`. Idempotence is the caller's
+    /// concern (the cluster registers each reference once).
+    pub fn add_image(&mut self, image: &Image) -> ImageReceipt {
+        let mut receipt = ImageReceipt {
+            reference: image.reference.canonical(),
+            new_layers: 0,
+            shared_layers: 0,
+            new_bytes: 0,
+            shared_bytes: 0,
+        };
+        for layer in &image.layers {
+            let bytes = layer.compressed_bytes();
+            if self.insert(layer.digest, bytes) {
+                receipt.new_layers += 1;
+                receipt.new_bytes += bytes;
+            } else {
+                receipt.shared_layers += 1;
+                receipt.shared_bytes += bytes;
+            }
+        }
+        receipt
+    }
+
+    /// Unregister an image, releasing each of its layers once.
+    pub fn remove_image(&mut self, image: &Image) {
+        for layer in &image.layers {
+            self.release(layer.digest);
+        }
+    }
+
+    pub fn blob_count(&self) -> usize {
+        self.blobs.len()
+    }
+
+    pub fn stored_bytes(&self) -> u64 {
+        self.stored_bytes
+    }
+
+    pub fn logical_bytes(&self) -> u64 {
+        self.logical_bytes
+    }
+
+    /// Bytes dedup saved versus storing every image's layers separately.
+    pub fn saved_bytes(&self) -> u64 {
+        self.logical_bytes - self.stored_bytes
+    }
+
+    /// logical / stored; 1.0 means no sharing at all.
+    pub fn dedup_ratio(&self) -> f64 {
+        if self.stored_bytes == 0 {
+            1.0
+        } else {
+            self.logical_bytes as f64 / self.stored_bytes as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::builder::{self, ImageBuilder};
+
+    #[test]
+    fn insert_release_refcounting() {
+        let mut cas = ContentStore::new();
+        assert!(cas.insert(42, 1000));
+        assert!(!cas.insert(42, 1000)); // second ref, not a second copy
+        assert_eq!(cas.refcount(42), 2);
+        assert_eq!(cas.stored_bytes(), 1000);
+        assert_eq!(cas.logical_bytes(), 2000);
+
+        assert!(cas.release(42));
+        assert!(cas.contains(42)); // still referenced
+        assert!(cas.release(42));
+        assert!(!cas.contains(42)); // refcount hit zero -> evicted
+        assert_eq!(cas.stored_bytes(), 0);
+        assert_eq!(cas.logical_bytes(), 0);
+        assert!(!cas.release(42)); // unknown digest
+    }
+
+    #[test]
+    fn derived_images_dedup_base_layers() {
+        let base = builder::ubuntu_xenial();
+        let app_a = ImageBuilder::from_image(&base, "app-a:1.0")
+            .file("/opt/a/app.bin", 50_000_000)
+            .build();
+        let app_b = ImageBuilder::from_image(&base, "app-b:1.0")
+            .file("/opt/b/app.bin", 50_000_000)
+            .build();
+
+        let mut cas = ContentStore::new();
+        let ra = cas.add_image(&app_a);
+        assert_eq!(ra.shared_layers, 0); // first image: everything is new
+        assert_eq!(ra.new_layers, app_a.layers.len());
+
+        let rb = cas.add_image(&app_b);
+        assert_eq!(rb.shared_layers, base.layers.len());
+        assert_eq!(rb.new_layers, 1); // only the app layer
+
+        // the dedup criterion: bytes stored < sum of per-image bytes
+        let per_image_sum = app_a.transfer_bytes() + app_b.transfer_bytes();
+        assert_eq!(cas.logical_bytes(), per_image_sum);
+        assert!(cas.stored_bytes() < per_image_sum);
+        assert!(cas.dedup_ratio() > 1.2, "ratio={}", cas.dedup_ratio());
+        assert_eq!(
+            cas.saved_bytes(),
+            per_image_sum - cas.stored_bytes()
+        );
+    }
+
+    #[test]
+    fn removing_one_image_keeps_shared_layers_alive() {
+        let base = builder::ubuntu_xenial();
+        let app = ImageBuilder::from_image(&base, "app:1.0")
+            .file("/opt/app.bin", 10_000_000)
+            .build();
+        let mut cas = ContentStore::new();
+        cas.add_image(&base);
+        cas.add_image(&app);
+
+        cas.remove_image(&app);
+        // base layers survive (still referenced by `base`)
+        for layer in &base.layers {
+            assert!(cas.contains(layer.digest));
+        }
+        assert_eq!(cas.logical_bytes(), base.transfer_bytes());
+
+        cas.remove_image(&base);
+        assert_eq!(cas.blob_count(), 0);
+        assert_eq!(cas.stored_bytes(), 0);
+    }
+
+    #[test]
+    fn unrelated_images_share_nothing() {
+        let mut cas = ContentStore::new();
+        cas.add_image(&builder::ubuntu_xenial());
+        let before = cas.stored_bytes();
+        let receipt = cas.add_image(&builder::pynamic_image());
+        assert_eq!(receipt.shared_layers, 0);
+        assert!(cas.stored_bytes() > before);
+        assert!((cas.dedup_ratio() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,336 @@
+//! Sharded gateway cluster (DESIGN.md S18): N gateway workers, each the
+//! existing single-worker `PullQueue` + `ImageGateway` pair, with image
+//! references spread across shards by rendezvous (highest-random-weight)
+//! hashing. Concurrent pulls of the same reference from many nodes
+//! coalesce into one job on the owning shard — the queue's dedup — while
+//! distinct images process in parallel across shards. Completed images
+//! register their layers in the cluster-wide content-addressed store.
+
+use std::collections::BTreeSet;
+
+use crate::gateway::{
+    GatewayError, GatewayImage, ImageGateway, PullJob, PullQueue, PullState,
+};
+use crate::image::ImageRef;
+use crate::pfs::LustreFs;
+use crate::registry::Registry;
+use crate::util::prng::Rng;
+
+use super::cas::ContentStore;
+
+/// One gateway worker: a synchronous gateway plus its job queue.
+pub struct GatewayShard {
+    pub id: usize,
+    pub gateway: ImageGateway,
+    pub queue: PullQueue,
+}
+
+/// Point-in-time view of one shard, for `shifterimg cluster-status`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardStatus {
+    pub shard: usize,
+    /// Jobs not yet terminal.
+    pub backlog: usize,
+    pub ready: usize,
+    pub failed: usize,
+    /// Images materialized on this shard's gateway.
+    pub images: usize,
+    /// Reference the worker is advancing right now.
+    pub active: Option<String>,
+}
+
+/// The cluster.
+pub struct GatewayCluster {
+    shards: Vec<GatewayShard>,
+    cas: ContentStore,
+    /// References whose layers are already in the CAS.
+    registered: BTreeSet<ImageRef>,
+}
+
+impl GatewayCluster {
+    /// `n_shards` workers, each storing to (a striped slice of) the same
+    /// parallel filesystem.
+    pub fn new(n_shards: usize, pfs: &LustreFs) -> GatewayCluster {
+        assert!(n_shards >= 1, "a cluster needs at least one shard");
+        GatewayCluster {
+            shards: (0..n_shards)
+                .map(|id| GatewayShard {
+                    id,
+                    gateway: ImageGateway::new(pfs.clone()),
+                    queue: PullQueue::new(),
+                })
+                .collect(),
+            cas: ContentStore::new(),
+            registered: BTreeSet::new(),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shards(&self) -> impl Iterator<Item = &GatewayShard> {
+        self.shards.iter()
+    }
+
+    /// Rendezvous hashing: the owning shard for a reference is the one
+    /// with the highest keyed weight. Deterministic, uniform, and adding a
+    /// shard only remaps ~1/N of the references.
+    pub fn shard_for(&self, reference: &ImageRef) -> usize {
+        let canonical = reference.canonical();
+        let mut best = 0;
+        let mut best_weight = 0u64;
+        for id in 0..self.shards.len() {
+            let weight =
+                Rng::from_tags(&["shard", &id.to_string(), &canonical])
+                    .next_u64();
+            if id == 0 || weight > best_weight {
+                best = id;
+                best_weight = weight;
+            }
+        }
+        best
+    }
+
+    /// Enqueue a pull on the owning shard. Requests for the same reference
+    /// from any number of users coalesce into one job. Returns the shard
+    /// id and the job state as observed by this requester.
+    pub fn request(
+        &mut self,
+        registry: &Registry,
+        reference: &str,
+        user: &str,
+    ) -> Result<(usize, PullState), GatewayError> {
+        let r = ImageRef::parse(reference)
+            .ok_or_else(|| GatewayError::NotPulled(reference.to_string()))?;
+        let id = self.shard_for(&r);
+        let shard = &mut self.shards[id];
+        let state =
+            shard.queue.request(&shard.gateway, registry, reference, user)?;
+        Ok((id, state))
+    }
+
+    /// Advance every shard's worker by `dt` simulated seconds (the workers
+    /// run in parallel — same wall clock for all), then register newly
+    /// completed images in the content store.
+    pub fn tick(&mut self, registry: &Registry, dt: f64) {
+        for shard in &mut self.shards {
+            shard.queue.tick(&mut shard.gateway, registry, dt);
+        }
+        let mut newly_ready: Vec<ImageRef> = Vec::new();
+        for shard in &self.shards {
+            for job in shard.queue.in_state(PullState::Ready) {
+                if !self.registered.contains(&job.reference) {
+                    newly_ready.push(job.reference.clone());
+                }
+            }
+        }
+        for r in newly_ready {
+            if let Ok(image) = registry.lookup(&r.canonical()) {
+                self.cas.add_image(image);
+            }
+            self.registered.insert(r);
+        }
+    }
+
+    /// True when no shard has in-flight work.
+    pub fn drained(&self) -> bool {
+        self.shards.iter().all(|s| s.queue.drained())
+    }
+
+    /// Simulated time when the last completed job finished — the storm
+    /// makespan once `drained()`.
+    pub fn makespan_secs(&self) -> f64 {
+        self.shards
+            .iter()
+            .flat_map(|s| s.queue.jobs())
+            .filter_map(|j| j.completed_at)
+            .fold(0.0, f64::max)
+    }
+
+    pub fn now(&self) -> f64 {
+        self.shards.first().map_or(0.0, |s| s.queue.now())
+    }
+
+    /// Job status for a reference (routed to the owning shard).
+    pub fn status(&self, reference: &str) -> Option<&PullJob> {
+        let r = ImageRef::parse(reference)?;
+        self.shards[self.shard_for(&r)].queue.status(reference)
+    }
+
+    /// Look up a processed image on its owning shard.
+    pub fn lookup(
+        &self,
+        reference: &str,
+    ) -> Result<&GatewayImage, GatewayError> {
+        let r = ImageRef::parse(reference)
+            .ok_or_else(|| GatewayError::NotPulled(reference.to_string()))?;
+        self.shards[self.shard_for(&r)].gateway.lookup(reference)
+    }
+
+    pub fn cas(&self) -> &ContentStore {
+        &self.cas
+    }
+
+    pub fn cluster_status(&self) -> Vec<ShardStatus> {
+        self.shards
+            .iter()
+            .map(|s| ShardStatus {
+                shard: s.id,
+                backlog: s.queue.backlog(),
+                ready: s.queue.in_state(PullState::Ready).len(),
+                failed: s.queue.in_state(PullState::Failed).len(),
+                images: s.gateway.list().len(),
+                active: s
+                    .queue
+                    .active()
+                    .map(|j| j.reference.canonical()),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::builder::{self, ImageBuilder};
+
+    fn derived_catalog(n: usize) -> (Registry, Vec<String>) {
+        let base = builder::ubuntu_xenial();
+        let mut registry = Registry::dockerhub();
+        let refs: Vec<String> = (0..n)
+            .map(|i| {
+                let name = format!("svc-{i:02}:1.0");
+                registry.push(
+                    ImageBuilder::from_image(&base, &name)
+                        .file("/opt/svc/app.bin", 80_000_000)
+                        .build(),
+                );
+                name
+            })
+            .collect();
+        (registry, refs)
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_spreads() {
+        let cluster = GatewayCluster::new(16, &LustreFs::piz_daint());
+        let (_, refs) = derived_catalog(32);
+        let mut used = BTreeSet::new();
+        for name in &refs {
+            let r = ImageRef::parse(name).unwrap();
+            let a = cluster.shard_for(&r);
+            assert_eq!(a, cluster.shard_for(&r)); // stable
+            used.insert(a);
+        }
+        assert!(
+            used.len() >= 8,
+            "32 refs over 16 shards must spread: {used:?}"
+        );
+    }
+
+    #[test]
+    fn coalescing_many_users_one_job() {
+        let mut cluster = GatewayCluster::new(4, &LustreFs::piz_daint());
+        let registry = Registry::dockerhub();
+        let mut shard_ids = BTreeSet::new();
+        for user in 0..50 {
+            let (id, _) = cluster
+                .request(&registry, "ubuntu:xenial", &format!("node-{user}"))
+                .unwrap();
+            shard_ids.insert(id);
+        }
+        assert_eq!(shard_ids.len(), 1, "same ref always routes to one shard");
+        let job = cluster.status("ubuntu:xenial").unwrap();
+        assert_eq!(job.requesters.len(), 50);
+        cluster.tick(&registry, 1e6);
+        assert!(cluster.drained());
+        assert!(cluster.lookup("ubuntu:xenial").is_ok());
+        // exactly one shard materialized it
+        let total: usize =
+            cluster.shards().map(|s| s.gateway.list().len()).sum();
+        assert_eq!(total, 1);
+    }
+
+    #[test]
+    fn sharding_shrinks_the_storm_makespan() {
+        let (registry, refs) = derived_catalog(32);
+        let mut makespans = Vec::new();
+        for n_shards in [1usize, 16] {
+            let mut cluster =
+                GatewayCluster::new(n_shards, &LustreFs::piz_daint());
+            for name in &refs {
+                cluster.request(&registry, name, "storm").unwrap();
+            }
+            cluster.tick(&registry, 1e9);
+            assert!(cluster.drained());
+            makespans.push(cluster.makespan_secs());
+        }
+        let (serial, sharded) = (makespans[0], makespans[1]);
+        assert!(
+            serial > 4.0 * sharded,
+            "16 shards must beat 1 by >= 4x: serial={serial}s sharded={sharded}s"
+        );
+    }
+
+    #[test]
+    fn completed_images_register_layers_in_cas() {
+        let (registry, refs) = derived_catalog(8);
+        let mut cluster = GatewayCluster::new(4, &LustreFs::piz_daint());
+        for name in &refs {
+            cluster.request(&registry, name, "u").unwrap();
+        }
+        cluster.tick(&registry, 1e9);
+        let cas = cluster.cas();
+        let per_image_sum: u64 = refs
+            .iter()
+            .map(|n| registry.lookup(n).unwrap().transfer_bytes())
+            .sum();
+        assert_eq!(cas.logical_bytes(), per_image_sum);
+        assert!(
+            cas.stored_bytes() < per_image_sum,
+            "shared base layers must dedup"
+        );
+        assert!(cas.dedup_ratio() > 1.5, "ratio={}", cas.dedup_ratio());
+        // re-ticking must not double-register
+        cluster.tick(&registry, 1.0);
+        assert_eq!(cas_logical(&cluster), per_image_sum);
+    }
+
+    fn cas_logical(c: &GatewayCluster) -> u64 {
+        c.cas().logical_bytes()
+    }
+
+    #[test]
+    fn failed_pull_reports_on_owning_shard() {
+        let mut cluster = GatewayCluster::new(4, &LustreFs::piz_daint());
+        let registry = Registry::dockerhub();
+        let (_, state) =
+            cluster.request(&registry, "nope:missing", "u").unwrap();
+        assert_eq!(state, PullState::Failed);
+        let status = cluster.cluster_status();
+        assert_eq!(status.iter().map(|s| s.failed).sum::<usize>(), 1);
+        assert!(cluster.lookup("nope:missing").is_err());
+    }
+
+    #[test]
+    fn cluster_status_reflects_backlog_and_active() {
+        let (registry, refs) = derived_catalog(6);
+        let mut cluster = GatewayCluster::new(2, &LustreFs::piz_daint());
+        for name in &refs {
+            cluster.request(&registry, name, "u").unwrap();
+        }
+        let before: usize =
+            cluster.cluster_status().iter().map(|s| s.backlog).sum();
+        assert_eq!(before, 6);
+        cluster.tick(&registry, 0.5); // mid-flight: someone is active
+        assert!(cluster
+            .cluster_status()
+            .iter()
+            .any(|s| s.active.is_some()));
+        cluster.tick(&registry, 1e9);
+        let after = cluster.cluster_status();
+        assert_eq!(after.iter().map(|s| s.backlog).sum::<usize>(), 0);
+        assert_eq!(after.iter().map(|s| s.ready).sum::<usize>(), 6);
+    }
+}

@@ -1,0 +1,260 @@
+//! Distributed image distribution (DESIGN.md S18): the scaling layer that
+//! turns the single synchronous Image Gateway (§III) into a subsystem able
+//! to serve pull storms from thousands of compute nodes.
+//!
+//! Three pieces compose through the `DistributionFabric` facade:
+//!
+//! * [`cas::ContentStore`] — cluster-wide content-addressed layer store;
+//!   images sharing base layers store them once (ref-counted).
+//! * [`cluster::GatewayCluster`] — N gateway shards selected by rendezvous
+//!   hashing; each runs the existing `PullQueue` worker, so concurrent
+//!   pulls of one reference coalesce into a single job while distinct
+//!   references process in parallel.
+//! * [`node_cache::NodeCache`] — per-compute-node squashfs cache with LRU
+//!   eviction; cold fills pay the Lustre broadcast cost, warm starts a
+//!   local stat.
+//!
+//! The fabric implements `gateway::ImageSource`, so
+//! `ShifterRuntime::run(&fabric, …)` works exactly like the classic
+//! single-gateway path — callers opt into distribution without touching
+//! the stage pipeline.
+
+pub mod cas;
+pub mod cluster;
+pub mod node_cache;
+
+pub use cas::{BlobInfo, ContentStore, ImageReceipt};
+pub use cluster::{GatewayCluster, GatewayShard, ShardStatus};
+pub use node_cache::{CacheOutcome, NodeCache};
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use crate::gateway::{GatewayError, GatewayImage, ImageSource, PullState};
+use crate::pfs::LustreFs;
+use crate::registry::Registry;
+
+/// Default per-node squashfs cache: 32 GB of node-local storage (the
+/// RAM-backed tmpfs / local SSD slice sites give Shifter).
+pub const DEFAULT_NODE_CACHE_BYTES: u64 = 32_000_000_000;
+
+/// One blocking drain: far longer than any storm, small enough that
+/// completion timestamps keep sub-microsecond precision.
+const DRAIN_TICK_SECS: f64 = 1e9;
+
+/// Aggregated node-cache counters across every node the fabric has seen.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    pub nodes: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+/// The facade the runtime and CLI talk to.
+pub struct DistributionFabric {
+    cluster: GatewayCluster,
+    /// Per-node caches, created lazily as nodes first fetch. RefCell:
+    /// `ImageSource::node_fetch_secs` takes `&self` but a fetch updates
+    /// LRU/hit state.
+    caches: RefCell<BTreeMap<usize, NodeCache>>,
+    node_cache_bytes: u64,
+    pfs: LustreFs,
+}
+
+impl DistributionFabric {
+    pub fn new(n_shards: usize, pfs: LustreFs) -> DistributionFabric {
+        DistributionFabric {
+            cluster: GatewayCluster::new(n_shards, &pfs),
+            caches: RefCell::new(BTreeMap::new()),
+            node_cache_bytes: DEFAULT_NODE_CACHE_BYTES,
+            pfs,
+        }
+    }
+
+    /// Override the per-node cache capacity (tests, small-node systems).
+    pub fn with_node_cache_bytes(mut self, bytes: u64) -> DistributionFabric {
+        self.node_cache_bytes = bytes;
+        self
+    }
+
+    pub fn cluster(&self) -> &GatewayCluster {
+        &self.cluster
+    }
+
+    pub fn pfs(&self) -> &LustreFs {
+        &self.pfs
+    }
+
+    /// Enqueue a pull (see `GatewayCluster::request`).
+    pub fn request(
+        &mut self,
+        registry: &Registry,
+        reference: &str,
+        user: &str,
+    ) -> Result<(usize, PullState), GatewayError> {
+        self.cluster.request(registry, reference, user)
+    }
+
+    /// Advance all shard workers by `dt` simulated seconds.
+    pub fn tick(&mut self, registry: &Registry, dt: f64) {
+        self.cluster.tick(registry, dt);
+    }
+
+    /// Request and run the cluster until the job is terminal — the
+    /// synchronous convenience the CLI uses. Returns the final state.
+    pub fn pull_blocking(
+        &mut self,
+        registry: &Registry,
+        reference: &str,
+        user: &str,
+    ) -> Result<PullState, GatewayError> {
+        let (_, state) = self.request(registry, reference, user)?;
+        if state.terminal() {
+            return Ok(state);
+        }
+        self.tick(registry, DRAIN_TICK_SECS);
+        Ok(self
+            .cluster
+            .status(reference)
+            .map(|j| j.state)
+            .unwrap_or(PullState::Failed))
+    }
+
+    /// Whether `node` already holds `reference`'s squashfs locally.
+    pub fn node_has_image(&self, node: usize, reference: &str) -> bool {
+        let Ok(image) = self.cluster.lookup(reference) else {
+            return false;
+        };
+        self.caches
+            .borrow()
+            .get(&node)
+            .is_some_and(|c| c.contains(image.squashfs.digest))
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        let caches = self.caches.borrow();
+        CacheStats {
+            nodes: caches.len(),
+            hits: caches.values().map(|c| c.hits).sum(),
+            misses: caches.values().map(|c| c.misses).sum(),
+            evictions: caches.values().map(|c| c.evictions).sum(),
+        }
+    }
+}
+
+impl ImageSource for DistributionFabric {
+    fn resolve(&self, reference: &str) -> Result<&GatewayImage, GatewayError> {
+        self.cluster.lookup(reference)
+    }
+
+    /// Shard-index query: one MDS round trip, same as the classic path.
+    fn resolve_latency_secs(&self) -> f64 {
+        self.pfs.mds.base_latency_us * 1e-6
+    }
+
+    /// Cache-aware node fetch: a warm node stats its local copy; a cold
+    /// node joins the Lustre broadcast storm and admits the blob.
+    fn node_fetch_secs(
+        &self,
+        image: &GatewayImage,
+        node: usize,
+        concurrent_nodes: u64,
+    ) -> Option<f64> {
+        let mut caches = self.caches.borrow_mut();
+        let cache = caches
+            .entry(node)
+            .or_insert_with(|| NodeCache::new(self.node_cache_bytes));
+        let bytes = image.squashfs.compressed_bytes;
+        Some(match cache.fetch(image.squashfs.digest, bytes) {
+            CacheOutcome::Hit => cache.warm_hit_secs(),
+            CacheOutcome::Miss { .. } => {
+                NodeCache::cold_fill_secs(&self.pfs, bytes, concurrent_nodes)
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fabric() -> (DistributionFabric, Registry) {
+        (
+            DistributionFabric::new(4, LustreFs::piz_daint()),
+            Registry::dockerhub(),
+        )
+    }
+
+    #[test]
+    fn pull_blocking_materializes_the_image() {
+        let (mut f, reg) = fabric();
+        let state = f.pull_blocking(&reg, "ubuntu:xenial", "alice").unwrap();
+        assert_eq!(state, PullState::Ready);
+        let image = f.resolve("ubuntu:xenial").unwrap();
+        assert!(image.squashfs.file_count() > 100);
+        assert!(f.cluster().cas().stored_bytes() > 0);
+    }
+
+    #[test]
+    fn missing_image_fails_terminal() {
+        let (mut f, reg) = fabric();
+        let state = f.pull_blocking(&reg, "nope:missing", "u").unwrap();
+        assert_eq!(state, PullState::Failed);
+        assert!(f.resolve("nope:missing").is_err());
+    }
+
+    #[test]
+    fn second_node_fetch_is_a_cache_hit() {
+        let (mut f, reg) = fabric();
+        f.pull_blocking(&reg, "ubuntu:xenial", "u").unwrap();
+        let image = f.resolve("ubuntu:xenial").unwrap();
+
+        let cold = f.node_fetch_secs(image, 7, 1000).unwrap();
+        let warm = f.node_fetch_secs(image, 7, 1000).unwrap();
+        assert!(
+            cold > 1000.0 * warm,
+            "cold={cold}s warm={warm}s — the cache must collapse the cost"
+        );
+        assert!(f.node_has_image(7, "ubuntu:xenial"));
+        assert!(!f.node_has_image(8, "ubuntu:xenial"));
+        let stats = f.cache_stats();
+        assert_eq!((stats.nodes, stats.hits, stats.misses), (1, 1, 1));
+    }
+
+    #[test]
+    fn tiny_node_cache_evicts_under_pressure() {
+        use crate::image::builder::{self, ImageBuilder};
+        let base = builder::ubuntu_xenial();
+        let mut registry = Registry::dockerhub();
+        for name in ["app-a:1", "app-b:1"] {
+            registry.push(
+                ImageBuilder::from_image(&base, name)
+                    .file("/opt/app.bin", 10_000_000)
+                    .build(),
+            );
+        }
+        // cache that fits exactly one derived squashfs (~34 MB) at a time
+        let mut f = DistributionFabric::new(2, LustreFs::piz_daint())
+            .with_node_cache_bytes(40_000_000);
+        f.pull_blocking(&registry, "app-a:1", "u").unwrap();
+        f.pull_blocking(&registry, "app-b:1", "u").unwrap();
+        let app_a = f.resolve("app-a:1").unwrap().clone();
+        let app_b = f.resolve("app-b:1").unwrap().clone();
+        assert!(app_a.squashfs.compressed_bytes <= 40_000_000);
+        assert!(
+            app_a.squashfs.compressed_bytes
+                + app_b.squashfs.compressed_bytes
+                > 40_000_000
+        );
+
+        f.node_fetch_secs(&app_a, 0, 1);
+        assert!(f.node_has_image(0, "app-a:1"));
+        f.node_fetch_secs(&app_b, 0, 1);
+        assert!(f.node_has_image(0, "app-b:1"));
+        assert!(!f.node_has_image(0, "app-a:1"), "LRU evicted app-a");
+        let stats = f.cache_stats();
+        assert_eq!(stats.misses, 2);
+        assert_eq!(stats.evictions, 1);
+    }
+}

@@ -1,0 +1,197 @@
+//! Per-compute-node squashfs cache (DESIGN.md S18): once a node has
+//! fetched an image's squashfs from the PFS, subsequent container starts
+//! on that node resolve against the local copy — a dcache stat instead of
+//! a parallel-filesystem broadcast. Bounded capacity with LRU eviction;
+//! the cold-fill cost reuses the `pfs::LustreFs` contention model.
+
+use std::collections::BTreeMap;
+
+use crate::pfs::{LustreFs, NodeLocalFs};
+
+/// Outcome of asking the cache for a squashfs blob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// Blob already local.
+    Hit,
+    /// Blob fetched from the PFS and (capacity permitting) admitted,
+    /// evicting `evicted` older blobs.
+    Miss { evicted: usize },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct CacheEntry {
+    bytes: u64,
+    last_used: u64,
+}
+
+/// One node's cache.
+#[derive(Debug)]
+pub struct NodeCache {
+    capacity_bytes: u64,
+    used_bytes: u64,
+    /// LRU clock: bumped on every access.
+    clock: u64,
+    entries: BTreeMap<u64, CacheEntry>,
+    local: NodeLocalFs,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl NodeCache {
+    pub fn new(capacity_bytes: u64) -> NodeCache {
+        NodeCache {
+            capacity_bytes,
+            used_bytes: 0,
+            clock: 0,
+            entries: BTreeMap::new(),
+            local: NodeLocalFs::squashfs_loop_mount(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn contains(&self, digest: u64) -> bool {
+        self.entries.contains_key(&digest)
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Look up `digest`, admitting it on miss. A blob larger than the whole
+    /// cache is streamed, never admitted (it would evict everything for a
+    /// single use).
+    pub fn fetch(&mut self, digest: u64, bytes: u64) -> CacheOutcome {
+        self.clock += 1;
+        if let Some(entry) = self.entries.get_mut(&digest) {
+            entry.last_used = self.clock;
+            self.hits += 1;
+            return CacheOutcome::Hit;
+        }
+        self.misses += 1;
+        if bytes > self.capacity_bytes {
+            return CacheOutcome::Miss { evicted: 0 };
+        }
+        let mut evicted = 0;
+        while self.used_bytes + bytes > self.capacity_bytes {
+            let lru = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(d, e)| (*d, e.bytes))
+                .expect("used > 0 implies entries");
+            self.entries.remove(&lru.0);
+            self.used_bytes -= lru.1;
+            evicted += 1;
+        }
+        self.entries.insert(
+            digest,
+            CacheEntry {
+                bytes,
+                last_used: self.clock,
+            },
+        );
+        self.used_bytes += bytes;
+        self.evictions += evicted as u64;
+        CacheOutcome::Miss { evicted }
+    }
+
+    /// Cost of a warm start: the squashfs is already local, so resolution
+    /// is a kernel dcache stat — no PFS traffic at all.
+    pub fn warm_hit_secs(&self) -> f64 {
+        self.local.stat_latency_us * 1e-6
+    }
+
+    /// Cost of a cold fill under a broadcast storm: `concurrent_nodes`
+    /// nodes open the image on the PFS (MDS storm) and stream it over the
+    /// shared OST array.
+    pub fn cold_fill_secs(
+        pfs: &LustreFs,
+        bytes: u64,
+        concurrent_nodes: u64,
+    ) -> f64 {
+        let nodes = concurrent_nodes.max(1);
+        pfs.mds.storm_secs(nodes, 1) + pfs.bulk_read_secs(bytes, nodes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: u64 = 1_000_000;
+
+    #[test]
+    fn hit_after_miss() {
+        let mut c = NodeCache::new(100 * MB);
+        assert_eq!(c.fetch(1, 10 * MB), CacheOutcome::Miss { evicted: 0 });
+        assert_eq!(c.fetch(1, 10 * MB), CacheOutcome::Hit);
+        assert_eq!((c.hits, c.misses), (1, 1));
+        assert_eq!(c.used_bytes(), 10 * MB);
+        assert!(c.contains(1));
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut c = NodeCache::new(30 * MB);
+        c.fetch(1, 10 * MB);
+        c.fetch(2, 10 * MB);
+        c.fetch(3, 10 * MB);
+        c.fetch(1, 10 * MB); // touch 1 -> 2 is now the LRU
+        assert_eq!(c.fetch(4, 10 * MB), CacheOutcome::Miss { evicted: 1 });
+        assert!(!c.contains(2), "LRU entry should be evicted");
+        assert!(c.contains(1) && c.contains(3) && c.contains(4));
+        assert_eq!(c.evictions, 1);
+        assert_eq!(c.used_bytes(), 30 * MB);
+    }
+
+    #[test]
+    fn oversized_blob_streams_without_admission() {
+        let mut c = NodeCache::new(10 * MB);
+        c.fetch(1, 5 * MB);
+        assert_eq!(c.fetch(9, 50 * MB), CacheOutcome::Miss { evicted: 0 });
+        assert!(!c.contains(9));
+        assert!(c.contains(1)); // resident entries untouched
+        assert_eq!(c.fetch(9, 50 * MB), CacheOutcome::Miss { evicted: 0 });
+    }
+
+    #[test]
+    fn multi_entry_eviction_frees_enough_space() {
+        let mut c = NodeCache::new(30 * MB);
+        c.fetch(1, 10 * MB);
+        c.fetch(2, 10 * MB);
+        c.fetch(3, 10 * MB);
+        assert_eq!(c.fetch(4, 25 * MB), CacheOutcome::Miss { evicted: 3 });
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.used_bytes(), 25 * MB);
+    }
+
+    #[test]
+    fn cold_fill_dwarfs_warm_hit() {
+        let pfs = LustreFs::piz_daint();
+        let c = NodeCache::new(1000 * MB);
+        let cold = NodeCache::cold_fill_secs(&pfs, 400 * MB, 10_000);
+        let warm = c.warm_hit_secs();
+        assert!(
+            cold > 1000.0 * warm,
+            "cold={cold}s warm={warm}s — broadcast must dominate"
+        );
+        // and the broadcast cost grows with the storm width
+        let narrow = NodeCache::cold_fill_secs(&pfs, 400 * MB, 16);
+        assert!(cold > 50.0 * narrow);
+    }
+}

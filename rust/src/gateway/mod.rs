@@ -57,6 +57,29 @@ impl PullReport {
 const EXPAND_BYTES_PER_SEC: f64 = 300e6; // tar extraction
 const SQUASH_BYTES_PER_SEC: f64 = 150e6; // mksquashfs compression
 
+/// Anything the Shifter runtime can resolve images against: the single
+/// synchronous `ImageGateway`, or `distrib::DistributionFabric`. The
+/// runtime stays agnostic of where the squashfs actually lives.
+pub trait ImageSource {
+    /// Look up a processed image by reference.
+    fn resolve(&self, reference: &str) -> Result<&GatewayImage, GatewayError>;
+
+    /// Metadata round-trip cost of the resolution (MDS lookup or shard
+    /// index query), charged to the ResolveImage stage.
+    fn resolve_latency_secs(&self) -> f64;
+
+    /// Node-side cost of materializing the squashfs on `node` with
+    /// `concurrent_nodes` peers starting simultaneously. `None` defers to
+    /// the runtime's host-profile PFS model (the classic single-gateway
+    /// path); a distributed source answers from its node-cache model.
+    fn node_fetch_secs(
+        &self,
+        image: &GatewayImage,
+        node: usize,
+        concurrent_nodes: u64,
+    ) -> Option<f64>;
+}
+
 pub struct ImageGateway {
     images: BTreeMap<ImageRef, GatewayImage>,
     /// Content-addressed layer cache (digests already downloaded).
@@ -156,6 +179,25 @@ impl ImageGateway {
 
     pub fn pfs(&self) -> &LustreFs {
         &self.pfs
+    }
+}
+
+impl ImageSource for ImageGateway {
+    fn resolve(&self, reference: &str) -> Result<&GatewayImage, GatewayError> {
+        self.lookup(reference)
+    }
+
+    fn resolve_latency_secs(&self) -> f64 {
+        self.pfs.mds.base_latency_us * 1e-6
+    }
+
+    fn node_fetch_secs(
+        &self,
+        _image: &GatewayImage,
+        _node: usize,
+        _concurrent_nodes: u64,
+    ) -> Option<f64> {
+        None // runtime applies its host-profile PFS contention model
     }
 }
 

@@ -8,7 +8,7 @@
 //! simulated time, and stage durations come from the same cost models the
 //! synchronous `ImageGateway::pull` uses.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::image::ImageRef;
 use crate::registry::Registry;
@@ -49,19 +49,33 @@ impl PullState {
 pub struct PullJob {
     pub reference: ImageRef,
     pub state: PullState,
-    /// Users waiting on this job (dedup: all requesters share it).
+    /// Users waiting on this job (dedup: all requesters share it), in
+    /// arrival order.
     pub requesters: Vec<String>,
+    /// Membership index over `requesters` — keeps absorbing a 10k-node
+    /// pull storm O(log n) per request instead of a linear rescan.
+    requester_set: BTreeSet<String>,
     /// Remaining seconds in the current stage.
     remaining: f64,
     /// Per-stage durations, computed at enqueue.
     durations: [f64; 4], // pulling, expanding, converting, transferring
     pub error: Option<String>,
+    /// Queue clock when the job was first requested.
+    pub enqueued_at: f64,
+    /// Queue clock when the job reached a terminal state (exact within a
+    /// tick — the transition moment, not the tick boundary).
+    pub completed_at: Option<f64>,
 }
 
 impl PullJob {
     /// Simulated seconds spent so far across completed stages.
     pub fn stage_durations(&self) -> &[f64; 4] {
         &self.durations
+    }
+
+    /// Enqueue-to-READY latency, once terminal.
+    pub fn turnaround_secs(&self) -> Option<f64> {
+        self.completed_at.map(|t| t - self.enqueued_at)
     }
 }
 
@@ -105,7 +119,7 @@ impl PullQueue {
         let r = ImageRef::parse(reference)
             .ok_or_else(|| GatewayError::NotPulled(reference.to_string()))?;
         if let Some(job) = self.jobs.get_mut(&r) {
-            if !job.requesters.iter().any(|u| u == user) {
+            if job.requester_set.insert(user.to_string()) {
                 job.requesters.push(user.to_string());
             }
             return Ok(job.state);
@@ -118,9 +132,12 @@ impl PullQueue {
                     reference: r.clone(),
                     state: PullState::Failed,
                     requesters: vec![user.to_string()],
+                    requester_set: BTreeSet::from([user.to_string()]),
                     remaining: 0.0,
                     durations: [0.0; 4],
                     error: Some(e.to_string()),
+                    enqueued_at: self.clock,
+                    completed_at: Some(self.clock),
                 };
                 self.jobs.insert(r.clone(), job);
                 return Ok(PullState::Failed);
@@ -142,9 +159,12 @@ impl PullQueue {
             reference: r.clone(),
             state: PullState::Enqueued,
             requesters: vec![user.to_string()],
+            requester_set: BTreeSet::from([user.to_string()]),
             remaining: 0.0,
             durations,
             error: None,
+            enqueued_at: self.clock,
+            completed_at: None,
         };
         self.jobs.insert(r.clone(), job);
         self.fifo.push(r);
@@ -196,7 +216,10 @@ impl PullQueue {
                     PullState::Transferring
                 }
                 PullState::Transferring => {
-                    // materialize on the gateway
+                    // materialize on the gateway; `dt` of the budget is
+                    // still unspent, so the transition happened exactly at
+                    // clock - dt.
+                    job.completed_at = Some(self.clock - dt);
                     match gateway.pull(registry, &r.canonical()) {
                         Ok(_) => PullState::Ready,
                         Err(e) => {
@@ -219,6 +242,29 @@ impl PullQueue {
     /// Jobs in a given state.
     pub fn in_state(&self, state: PullState) -> Vec<&PullJob> {
         self.jobs.values().filter(|j| j.state == state).collect()
+    }
+
+    /// All jobs (terminal and in-flight), in reference order.
+    pub fn jobs(&self) -> impl Iterator<Item = &PullJob> {
+        self.jobs.values()
+    }
+
+    /// Jobs the worker has not finished yet (the shard's backlog depth).
+    pub fn backlog(&self) -> usize {
+        self.jobs.values().filter(|j| !j.state.terminal()).count()
+    }
+
+    /// The job the single worker is currently advancing, if any.
+    pub fn active(&self) -> Option<&PullJob> {
+        self.fifo
+            .iter()
+            .find(|r| !self.jobs[*r].state.terminal())
+            .map(|r| &self.jobs[r])
+    }
+
+    /// True when every enqueued job has reached a terminal state.
+    pub fn drained(&self) -> bool {
+        self.jobs.values().all(|j| j.state.terminal())
     }
 }
 
@@ -290,6 +336,66 @@ mod tests {
         q.tick(&mut gw, &reg, 1e6);
         assert_eq!(q.status("ubuntu:xenial").unwrap().state, PullState::Ready);
         assert_eq!(gw.list().len(), 1); // processed once
+    }
+
+    #[test]
+    fn dedup_both_users_observe_the_same_lifecycle() {
+        // Two users pulling the same reference share one job: the state
+        // transitions each observes via `shifterimg lookup` are identical,
+        // and the backend processes the image exactly once.
+        let (mut gw, reg, mut q) = setup();
+        let s_alice = q.request(&gw, &reg, "ubuntu:xenial", "alice").unwrap();
+        let s_bob = q.request(&gw, &reg, "ubuntu:xenial", "bob").unwrap();
+        assert_eq!(s_alice, PullState::Enqueued);
+        assert_eq!(s_bob, PullState::Enqueued); // absorbed into the same job
+        assert_eq!(q.backlog(), 1);
+
+        let mut alice_saw = vec![s_alice];
+        let mut bob_saw = vec![s_bob];
+        for _ in 0..10_000 {
+            q.tick(&mut gw, &reg, 0.05);
+            // both poll the same reference, as the CLI would
+            let st = q.status("ubuntu:xenial").unwrap().state;
+            if alice_saw.last() != Some(&st) {
+                alice_saw.push(st);
+            }
+            let st = q.status("ubuntu:xenial").unwrap().state;
+            if bob_saw.last() != Some(&st) {
+                bob_saw.push(st);
+            }
+            if st.terminal() {
+                break;
+            }
+        }
+        assert_eq!(alice_saw, bob_saw);
+        assert_eq!(*alice_saw.last().unwrap(), PullState::Ready);
+        assert!(alice_saw.len() >= 4, "observed too few states: {alice_saw:?}");
+
+        let job = q.status("ubuntu:xenial").unwrap();
+        assert_eq!(job.requesters, vec!["alice", "bob"]);
+        assert_eq!(gw.list().len(), 1); // one job, one materialization
+        // both waited the same turnaround — the job's, not per-user
+        let turnaround = job.turnaround_secs().unwrap();
+        assert!(turnaround > 0.0);
+        assert!(job.completed_at.unwrap() <= q.now());
+        assert!(q.drained());
+    }
+
+    #[test]
+    fn completion_time_is_exact_within_a_coarse_tick() {
+        // one huge tick: completed_at must be the transition moment (the
+        // sum of the stage durations), not the tick boundary
+        let (mut gw, reg, mut q) = setup();
+        q.request(&gw, &reg, "ubuntu:xenial", "u").unwrap();
+        q.tick(&mut gw, &reg, 1e6);
+        let job = q.status("ubuntu:xenial").unwrap();
+        let expected: f64 = job.stage_durations().iter().sum();
+        let got = job.completed_at.unwrap();
+        assert!(
+            (got - expected).abs() < 1e-6,
+            "completed_at={got} expected={expected}"
+        );
+        assert_eq!(q.now(), 1e6);
     }
 
     #[test]

@@ -52,6 +52,24 @@ impl ImageBuilder {
         }
     }
 
+    /// `FROM <base>`: start from an existing image's layers and config, the
+    /// way a Dockerfile derives app images from a common base. Derived
+    /// images share the base's layer digests byte-for-byte — which is what
+    /// lets the content-addressed store (distrib::cas) dedup them.
+    pub fn from_image(base: &Image, reference: &str) -> ImageBuilder {
+        ImageBuilder {
+            reference: ImageRef::parse(reference).expect("bad image ref"),
+            layers: base.layers.clone(),
+            env: base.manifest.env.clone(),
+            labels: base.manifest.labels.clone(),
+            entrypoint: base.manifest.entrypoint.clone(),
+            files_content: base.manifest.files_content.clone(),
+            pending: VirtualFs::new(),
+            pending_whiteouts: Vec::new(),
+            rng: Rng::from_tags(&["image-builder", reference]),
+        }
+    }
+
     /// Seal the pending filesystem delta into a layer (Dockerfile step).
     pub fn commit_layer(mut self) -> Self {
         if !self.pending.is_empty() || !self.pending_whiteouts.is_empty() {
@@ -437,5 +455,32 @@ mod tests {
         let a = ubuntu_xenial();
         let b = ubuntu_xenial();
         assert_eq!(a.manifest.layer_digests, b.manifest.layer_digests);
+    }
+
+    #[test]
+    fn derived_images_share_base_layer_digests() {
+        let base = ubuntu_xenial();
+        let app_a = ImageBuilder::from_image(&base, "app-a:1.0")
+            .bulk_files("/opt/app-a", 40, 2_000_000)
+            .build();
+        let app_b = ImageBuilder::from_image(&base, "app-b:1.0")
+            .bulk_files("/opt/app-b", 40, 2_000_000)
+            .build();
+        // base layers are shared byte-for-byte ...
+        let n_base = base.layers.len();
+        for (i, l) in base.layers.iter().enumerate() {
+            assert_eq!(app_a.layers[i].digest, l.digest);
+            assert_eq!(app_b.layers[i].digest, l.digest);
+        }
+        // ... the app layers are not
+        assert_eq!(app_a.layers.len(), n_base + 1);
+        assert_ne!(
+            app_a.layers[n_base].digest,
+            app_b.layers[n_base].digest
+        );
+        // derived config carries over
+        let flat = app_a.flatten().unwrap();
+        assert!(flat.exists("/etc/os-release"));
+        assert!(flat.exists("/opt/app-a/f0000"));
     }
 }

@@ -26,6 +26,7 @@
 
 pub mod apps;
 pub mod config;
+pub mod distrib;
 pub mod docker;
 pub mod fabric;
 pub mod gateway;
@@ -42,7 +43,8 @@ pub mod util;
 pub mod vfs;
 pub mod wlm;
 
-pub use gateway::ImageGateway;
+pub use distrib::DistributionFabric;
+pub use gateway::{ImageGateway, ImageSource};
 pub use hostenv::SystemProfile;
 pub use registry::Registry;
 pub use shifter::{Container, RunOptions, ShifterRuntime};

@@ -15,6 +15,20 @@ pub struct Stats {
     pub std: f64,
     pub best: f64,
     pub worst: f64,
+    /// Median (nearest-rank).
+    pub p50: f64,
+    /// 95th percentile — tail latency for the distribution benches.
+    pub p95: f64,
+    /// 99th percentile — the SLO metric `gateway_scale` reports.
+    pub p99: f64,
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample set, `q` in [0, 1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "no samples");
+    let n = sorted.len();
+    let rank = (q * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
 }
 
 impl Stats {
@@ -28,14 +42,17 @@ impl Stats {
         } else {
             0.0
         };
-        let best = samples.iter().copied().fold(f64::INFINITY, f64::min);
-        let worst = samples.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(f64::total_cmp);
         Stats {
             n,
             mean,
             std: var.sqrt(),
-            best,
-            worst,
+            best: sorted[0],
+            worst: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p95: percentile_sorted(&sorted, 0.95),
+            p99: percentile_sorted(&sorted, 0.99),
         }
     }
 }
@@ -121,6 +138,34 @@ mod tests {
         let s = Stats::from_samples(&[5.0]);
         assert_eq!(s.std, 0.0);
         assert_eq!(s.best, 5.0);
+        assert_eq!(s.p50, 5.0);
+        assert_eq!(s.p99, 5.0);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        // 1..=100: p50 = 50, p95 = 95, p99 = 99 under nearest-rank
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Stats::from_samples(&samples);
+        assert_eq!(s.p50, 50.0);
+        assert_eq!(s.p95, 95.0);
+        assert_eq!(s.p99, 99.0);
+        assert_eq!(s.best, 1.0);
+        assert_eq!(s.worst, 100.0);
+        // order of the input must not matter
+        let mut rev = samples.clone();
+        rev.reverse();
+        assert_eq!(Stats::from_samples(&rev), s);
+    }
+
+    #[test]
+    fn percentile_sorted_small_sets() {
+        assert_eq!(percentile_sorted(&[3.0], 0.99), 3.0);
+        assert_eq!(percentile_sorted(&[1.0, 2.0], 0.5), 1.0);
+        assert_eq!(percentile_sorted(&[1.0, 2.0], 0.51), 2.0);
+        assert_eq!(percentile_sorted(&[1.0, 2.0, 3.0], 1.0), 3.0);
+        // q=0 clamps to the first sample instead of underflowing
+        assert_eq!(percentile_sorted(&[1.0, 2.0, 3.0], 0.0), 1.0);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 
 pub mod artifact;
 pub mod executor;
+pub mod xla_shim;
 
 pub use artifact::{ArtifactCatalog, ArtifactError, ArtifactSpec, Dtype, TensorSig};
 pub use executor::{ExecError, ExecResult, Executor, TensorValue};

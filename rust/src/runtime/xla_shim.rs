@@ -1,0 +1,225 @@
+//! Offline stand-in for the `xla` PJRT bindings.
+//!
+//! The original executor linked the `xla` crate (xla_extension 0.5.1, a C
+//! library with its own PJRT CPU client). That toolchain is not part of the
+//! offline vendor set, so this module mirrors the small API surface
+//! `runtime::executor` uses. Construction, artifact loading and input
+//! staging all work (so the catalog/validation layers are fully exercised);
+//! `PjRtClient::compile` reports that the native backend is unavailable.
+//! Swapping this module back for the real crate is a one-line change in
+//! `executor.rs` — the call sites are identical by design. See DESIGN.md
+//! S13.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (the executor only ever formats it).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+const UNAVAILABLE: &str = "PJRT backend unavailable: built against the \
+     offline xla shim (xla_extension not in the vendor set)";
+
+/// Marker for element types a literal's raw bytes may be reinterpreted as.
+/// Restricting `Literal::to_vec` to these keeps the byte transmute sound:
+/// every bit pattern is a valid value for each of them (unlike e.g. `bool`
+/// or reference types, which would make the cast undefined behavior).
+pub trait PlainScalar: Copy {}
+impl PlainScalar for f32 {}
+impl PlainScalar for f64 {}
+impl PlainScalar for i32 {}
+impl PlainScalar for i64 {}
+impl PlainScalar for u8 {}
+
+/// Element types the artifacts use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    F64,
+    S32,
+}
+
+/// A host-side literal: typed, shaped bytes.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    shape: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        bytes: &[u8],
+    ) -> Result<Literal, Error> {
+        Ok(Literal {
+            ty,
+            shape: shape.to_vec(),
+            bytes: bytes.to_vec(),
+        })
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(Error(UNAVAILABLE.to_string()))
+    }
+
+    /// Reinterpret the raw bytes as a typed vector.
+    pub fn to_vec<T: PlainScalar>(&self) -> Result<Vec<T>, Error> {
+        let sz = std::mem::size_of::<T>();
+        if sz == 0 || self.bytes.len() % sz != 0 {
+            return Err(Error(format!(
+                "literal of {} bytes does not reinterpret as {}-byte elements",
+                self.bytes.len(),
+                sz
+            )));
+        }
+        let n = self.bytes.len() / sz;
+        let mut out: Vec<T> = Vec::with_capacity(n);
+        // copy_nonoverlapping handles the (possibly unaligned) byte buffer
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.bytes.as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                self.bytes.len(),
+            );
+            out.set_len(n);
+        }
+        Ok(out)
+    }
+}
+
+/// Parsed HLO module (text form only — protos are never serialized here).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(
+        path: impl AsRef<std::path::Path>,
+    ) -> Result<HloModuleProto, Error> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error(format!("{}: {e}", path.as_ref().display())))?;
+        Ok(HloModuleProto { text })
+    }
+
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// An HLO computation handle.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            _text: proto.text.clone(),
+        }
+    }
+}
+
+/// PJRT client handle. `cpu()` succeeds so catalogs load and inputs
+/// validate; only `compile` requires the native backend.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-shim".to_string()
+    }
+
+    pub fn compile(
+        &self,
+        _computation: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error(UNAVAILABLE.to_string()))
+    }
+}
+
+/// A compiled executable (unreachable through the shim's `compile`).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error(UNAVAILABLE.to_string()))
+    }
+}
+
+/// A device buffer returned by `execute`.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error(UNAVAILABLE.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trips_bytes() {
+        let data: Vec<f32> = vec![1.0, 2.5, -3.0, 4.0];
+        let bytes: Vec<u8> =
+            data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2, 2],
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(lit.shape(), &[2, 2]);
+        assert_eq!(lit.element_type(), ElementType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+    }
+
+    #[test]
+    fn misaligned_reinterpret_rejected() {
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[3],
+            &[0u8; 3],
+        )
+        .unwrap();
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn client_constructs_but_compile_reports_shim() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "cpu-shim");
+        let comp = XlaComputation::from_proto(&HloModuleProto {
+            text: "HloModule m".to_string(),
+        });
+        let err = client.compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("shim"));
+    }
+}

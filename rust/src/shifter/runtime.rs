@@ -7,7 +7,7 @@
 use std::collections::BTreeMap;
 
 use crate::config::UdiRootConfig;
-use crate::gateway::{GatewayError, ImageGateway};
+use crate::gateway::{GatewayError, ImageSource};
 use crate::gpu::GpuModel;
 use crate::hostenv::SystemProfile;
 use crate::image::ImageManifest;
@@ -262,9 +262,13 @@ impl<'a> ShifterRuntime<'a> {
     }
 
     /// Run the full §III.A stage pipeline and return the container.
-    pub fn run(
+    ///
+    /// Generic over the image source: pass the classic `&ImageGateway` or a
+    /// `&distrib::DistributionFabric` — the stage pipeline is identical,
+    /// only image resolution and the node-side squashfs fetch differ.
+    pub fn run<S: ImageSource>(
         &self,
-        gateway: &ImageGateway,
+        source: &S,
         opts: &RunOptions,
     ) -> Result<Container, ShifterError> {
         let mut log = StageLog::new();
@@ -272,26 +276,33 @@ impl<'a> ShifterRuntime<'a> {
             PrivilegeState::setuid_start(opts.invoking_uid, opts.invoking_gid);
 
         // -- resolve image ------------------------------------------------
-        let gw_image = gateway.lookup(&opts.image)?;
+        let gw_image = source.resolve(&opts.image)?;
         log.record(
             Stage::ResolveImage,
             &privs,
             format!("{} on {}", gw_image.reference.canonical(), gw_image.pfs_path),
-            gateway.pfs().mds.base_latency_us * 1e-6,
+            source.resolve_latency_secs(),
         )?;
 
         // -- prepare environment -------------------------------------------
         let mut mounts = MountTable::new();
         let mut prepare_secs = 0.0;
 
-        // fetch the squashfs to the node and loop mount it
+        // fetch the squashfs to the node and loop mount it; a distributed
+        // source answers from its node-cache model, the single gateway
+        // defers to the host profile's PFS contention model
         let image_bytes = gw_image.squashfs.compressed_bytes;
-        let fetch_secs = match &self.profile.pfs {
-            Some(pfs) => pfs.bulk_read_secs(
-                image_bytes,
-                opts.concurrent_nodes.max(1) as u64,
-            ),
-            None => image_bytes as f64 / LOCAL_DISK_BYTES_PER_SEC,
+        let concurrent = opts.concurrent_nodes.max(1) as u64;
+        let fetch_secs = match source.node_fetch_secs(
+            gw_image,
+            opts.node,
+            concurrent,
+        ) {
+            Some(secs) => secs,
+            None => match &self.profile.pfs {
+                Some(pfs) => pfs.bulk_read_secs(image_bytes, concurrent),
+                None => image_bytes as f64 / LOCAL_DISK_BYTES_PER_SEC,
+            },
         };
         prepare_secs += fetch_secs + LOOP_MOUNT_SECS;
         let mut rootfs = gw_image.squashfs.tree().clone();

@@ -1,0 +1,135 @@
+//! Integration: the distributed image-distribution subsystem end to end —
+//! registry → sharded cluster → CAS → node caches → ShifterRuntime — and
+//! its equivalence with the classic single-gateway path.
+
+use shifter_rs::distrib::DistributionFabric;
+use shifter_rs::gateway::{ImageSource, PullState};
+use shifter_rs::image::builder::{self, ImageBuilder};
+use shifter_rs::pfs::LustreFs;
+use shifter_rs::shifter::{RunOptions, ShifterRuntime};
+use shifter_rs::{ImageGateway, Registry, SystemProfile};
+
+#[test]
+fn container_from_fabric_matches_single_gateway() {
+    let registry = Registry::dockerhub();
+    let profile = SystemProfile::piz_daint();
+    let rt = ShifterRuntime::new(&profile);
+    let opts = RunOptions::new("ubuntu:xenial", &["cat", "/etc/os-release"]);
+
+    // classic path
+    let mut gateway = ImageGateway::new(LustreFs::piz_daint());
+    gateway.pull(&registry, "ubuntu:xenial").unwrap();
+    let classic = rt.run(&gateway, &opts).unwrap();
+
+    // distributed path
+    let mut fabric = DistributionFabric::new(4, LustreFs::piz_daint());
+    let state = fabric
+        .pull_blocking(&registry, "ubuntu:xenial", "alice")
+        .unwrap();
+    assert_eq!(state, PullState::Ready);
+    let distributed = rt.run(&fabric, &opts).unwrap();
+
+    // same image, same container contents, same env — only the fetch
+    // model differs
+    assert_eq!(classic.image, distributed.image);
+    assert_eq!(
+        classic.exec(&["cat", "/etc/os-release"]).unwrap(),
+        distributed.exec(&["cat", "/etc/os-release"]).unwrap()
+    );
+    assert_eq!(classic.env, distributed.env);
+    assert!(distributed.stage_log.completed());
+}
+
+#[test]
+fn warm_node_restarts_much_faster() {
+    let registry = Registry::dockerhub();
+    let profile = SystemProfile::piz_daint();
+    let rt = ShifterRuntime::new(&profile);
+    let mut fabric = DistributionFabric::new(4, LustreFs::piz_daint());
+    fabric
+        .pull_blocking(&registry, "ubuntu:xenial", "alice")
+        .unwrap();
+
+    // 512-node job start: every node cold-fills from the PFS broadcast
+    let cold_opts =
+        RunOptions::new("ubuntu:xenial", &["true"]).on_nodes(3, 512);
+    let cold = rt.run(&fabric, &cold_opts).unwrap();
+    // second container start on the same node: squashfs already local
+    let warm = rt.run(&fabric, &cold_opts).unwrap();
+    assert!(
+        cold.startup_overhead_secs() > 2.0 * warm.startup_overhead_secs(),
+        "cold={}s warm={}s",
+        cold.startup_overhead_secs(),
+        warm.startup_overhead_secs()
+    );
+    assert!(fabric.node_has_image(3, "ubuntu:xenial"));
+    let stats = fabric.cache_stats();
+    assert_eq!((stats.hits, stats.misses), (1, 1));
+}
+
+#[test]
+fn unpulled_reference_fails_like_the_classic_path() {
+    let profile = SystemProfile::piz_daint();
+    let rt = ShifterRuntime::new(&profile);
+    let fabric = DistributionFabric::new(2, LustreFs::piz_daint());
+    let err = rt
+        .run(&fabric, &RunOptions::new("pynamic:1.3", &["true"]))
+        .unwrap_err();
+    assert!(err.to_string().contains("not pulled"));
+}
+
+#[test]
+fn catalog_storm_spreads_images_across_shards() {
+    let base = builder::ubuntu_xenial();
+    let mut registry = Registry::dockerhub();
+    let mut refs = Vec::new();
+    for i in 0..12 {
+        let name = format!("team-{i:02}/app:2.0");
+        registry.push(
+            ImageBuilder::from_image(&base, &name)
+                .file(&format!("/opt/team-{i:02}/bin"), 30_000_000)
+                .build(),
+        );
+        refs.push(name);
+    }
+    let mut fabric = DistributionFabric::new(4, LustreFs::piz_daint());
+    for name in &refs {
+        fabric.request(&registry, name, "ci").unwrap();
+    }
+    fabric.tick(&registry, 1e9);
+    assert!(fabric.cluster().drained());
+
+    // every image is resolvable through the facade afterwards
+    for name in &refs {
+        assert!(fabric.resolve(name).is_ok(), "{name} not resolvable");
+    }
+    // more than one shard did work, and the CAS deduped the shared base
+    let busy = fabric
+        .cluster()
+        .cluster_status()
+        .iter()
+        .filter(|s| s.images > 0)
+        .count();
+    assert!(busy >= 2, "expected the storm to use >= 2 shards");
+    let cas = fabric.cluster().cas();
+    assert!(cas.stored_bytes() < cas.logical_bytes());
+}
+
+#[test]
+fn fabric_pull_is_idempotent_per_reference() {
+    let registry = Registry::dockerhub();
+    let mut fabric = DistributionFabric::new(4, LustreFs::piz_daint());
+    fabric
+        .pull_blocking(&registry, "ubuntu:xenial", "alice")
+        .unwrap();
+    let logical_once = fabric.cluster().cas().logical_bytes();
+    let state = fabric
+        .pull_blocking(&registry, "ubuntu:xenial", "bob")
+        .unwrap();
+    assert_eq!(state, PullState::Ready);
+    assert_eq!(
+        fabric.cluster().cas().logical_bytes(),
+        logical_once,
+        "re-pulling must not re-register layers"
+    );
+}
