@@ -18,8 +18,17 @@ use shifter_rs::pfs::LustreFs;
 use shifter_rs::registry::Registry;
 use shifter_rs::util::prng::Rng;
 
-/// srun job width of the storm (paper scale: "thousands of compute nodes").
-const NODES: usize = 10_000;
+/// srun job width of the storm (paper scale: "thousands of compute
+/// nodes"). Overridable via `GATEWAY_SCALE_NODES` for the CI smoke run.
+const DEFAULT_NODES: usize = 10_000;
+
+fn storm_nodes() -> usize {
+    std::env::var("GATEWAY_SCALE_NODES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(DEFAULT_NODES)
+        .max(1)
+}
 /// Distinct images in the catalog storm.
 const CATALOG: usize = 32;
 /// Fixed app-layer size: identical job cost per image, so the shard
@@ -110,23 +119,24 @@ fn main() {
     );
 
     // -- phase 2: 10k nodes pull the flagship, cold then warm -------------
+    let nodes = storm_nodes();
     let mut fabric = DistributionFabric::new(16, pfs.clone());
-    for node in 0..NODES {
+    for node in 0..nodes {
         fabric
             .request(&registry, "mega-app:1.0", &format!("node-{node:05}"))
             .unwrap();
     }
     fabric.tick(&registry, 1e9);
     let job = fabric.cluster().status("mega-app:1.0").unwrap();
-    assert_eq!(job.requesters.len(), NODES, "storm coalesces into one job");
+    assert_eq!(job.requesters.len(), nodes, "storm coalesces into one job");
     let ready_secs = job.completed_at.expect("storm job completed");
     let image = fabric.resolve("mega-app:1.0").unwrap();
 
     let node_latencies = |mode: &str, queue_secs: f64| -> Stats {
-        let samples: Vec<f64> = (0..NODES)
+        let samples: Vec<f64> = (0..nodes)
             .map(|node| {
                 let fetch = fabric
-                    .node_fetch_secs(image, node, NODES as u64)
+                    .node_fetch_secs(image, node, nodes as u64)
                     .expect("fabric always models the node fetch");
                 let noise = Rng::from_tags(&[
                     "gateway-scale",
@@ -146,7 +156,7 @@ fn main() {
     let warm = node_latencies("warm", fabric.resolve_latency_secs());
 
     let mut lat = Table::new(
-        &format!("per-node pull latency, {NODES} nodes (16 shards)"),
+        &format!("per-node pull latency, {nodes} nodes (16 shards)"),
         &["cache", "p50", "p95", "p99", "mean"],
     );
     let fmt = |s: &Stats| -> Vec<String> {
@@ -170,9 +180,9 @@ fn main() {
     print!("{}", lat.render());
 
     let stats = fabric.cache_stats();
-    assert_eq!(stats.nodes, NODES);
-    assert_eq!(stats.misses, NODES as u64); // one cold fill per node
-    assert_eq!(stats.hits, NODES as u64); // one warm hit per node
+    assert_eq!(stats.nodes, nodes);
+    assert_eq!(stats.misses, nodes as u64); // one cold fill per node
+    assert_eq!(stats.hits, nodes as u64); // one warm hit per node
 
     assert!(
         warm.p99 * 10.0 <= cold.p99,

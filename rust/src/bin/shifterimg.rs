@@ -5,14 +5,23 @@
 //! shifterimg [--system=daint] images
 //! shifterimg [--system=daint] lookup docker:ubuntu:xenial
 //! shifterimg [--system=daint] [--shards=4] cluster-status
+//! shifterimg [--system=daint] [--shards=4] [--nodes=64] [--gpus=1] \
+//!     [--mpi] [--hetero] launch <ref> [cmd...]
 //! ```
 //!
 //! `cluster-status` drives the distributed fabric (DESIGN.md S18): it
 //! pulls the full registry catalog through a sharded gateway cluster and
 //! prints the per-shard queue/image state plus the content-addressed
 //! store's dedup accounting.
+//!
+//! `launch` drives the full cluster-scale job orchestrator (DESIGN.md
+//! S19): WLM allocation, one coalesced pull, per-node stage execution on
+//! a worker pool, and the percentile launch report. `--hetero` splits the
+//! node range into a Piz Daint partition and a Linux Cluster partition
+//! (different GPU generations, driver versions and host MPIs).
 
 use shifter_rs::distrib::DistributionFabric;
+use shifter_rs::launch::{JobSpec, LaunchCluster, LaunchScheduler};
 use shifter_rs::metrics::Table;
 use shifter_rs::util::cli::CliSpec;
 use shifter_rs::{ImageGateway, Registry, SystemProfile};
@@ -20,13 +29,27 @@ use shifter_rs::{ImageGateway, Registry, SystemProfile};
 fn usage() -> ! {
     eprintln!(
         "usage: shifterimg [--system=laptop|cluster|daint] [--shards=N] \
-         <pull <ref> | images | lookup <ref> | cluster-status>"
+         [--nodes=N] [--gpus=N] [--mpi] [--hetero] \
+         <pull <ref> | images | lookup <ref> | cluster-status | \
+         launch <ref> [cmd...]>"
     );
     std::process::exit(2);
 }
 
 fn main() {
-    let spec = CliSpec::new(&[("system", true), ("shards", true)], false);
+    let spec = CliSpec::new(
+        &[
+            ("system", true),
+            ("shards", true),
+            ("nodes", true),
+            ("gpus", true),
+            ("mpi", false),
+            ("hetero", false),
+        ],
+        // stop option parsing at the subcommand, so a containerized
+        // command like `launch <ref> ls --color` keeps its own flags
+        true,
+    );
     let parsed = match spec.parse(std::env::args().skip(1)) {
         Ok(p) => p,
         Err(e) => {
@@ -94,14 +117,7 @@ fn main() {
             }
         }
         [cmd] if cmd == "cluster-status" => {
-            let shards: usize = match parsed.get("shards").unwrap_or("4").parse()
-            {
-                Ok(n) if n >= 1 => n,
-                _ => {
-                    eprintln!("shifterimg: --shards must be a positive integer");
-                    usage();
-                }
-            };
+            let shards = parse_shards(&parsed);
             let mut fabric = DistributionFabric::new(shards, pfs);
             // drive the whole catalog through the cluster, as a site's
             // nightly sync would
@@ -114,7 +130,10 @@ fn main() {
 
             let mut table = Table::new(
                 &format!("cluster status ({shards} shards)"),
-                &["shard", "backlog", "ready", "failed", "images", "active"],
+                &[
+                    "shard", "backlog", "ready", "failed", "images",
+                    "max-wait", "active",
+                ],
             );
             for s in fabric.cluster().cluster_status() {
                 table.row(&[
@@ -123,6 +142,7 @@ fn main() {
                     s.ready.to_string(),
                     s.failed.to_string(),
                     s.images.to_string(),
+                    format!("{:.1}s", s.max_queue_wait_secs),
                     s.active.unwrap_or_else(|| "-".to_string()),
                 ]);
             }
@@ -133,6 +153,13 @@ fn main() {
                 "storm drained in {:.1}s (makespan across shards)",
                 fabric.cluster().makespan_secs()
             );
+            if let Some(wait) = fabric.queue_wait_stats() {
+                println!(
+                    "queue wait across {} jobs: p50 {:.1}s, p95 {:.1}s, \
+                     p99 {:.1}s, worst {:.1}s",
+                    wait.n, wait.p50, wait.p95, wait.p99, wait.worst
+                );
+            }
             println!(
                 "cas: {} blobs, {:.1} MB stored / {:.1} MB logical \
                  (dedup {:.2}x, {:.1} MB saved)",
@@ -143,6 +170,69 @@ fn main() {
                 cas.saved_bytes() as f64 / 1e6,
             );
         }
+        [cmd, rest @ ..] if cmd == "launch" && !rest.is_empty() => {
+            let reference = &rest[0];
+            let command: Vec<&str> = if rest.len() > 1 {
+                rest[1..].iter().map(|s| s.as_str()).collect()
+            } else {
+                vec!["true"]
+            };
+            let shards = parse_shards(&parsed);
+            let nodes: u32 = match parsed.get("nodes").unwrap_or("64").parse() {
+                Ok(n) if n >= 1 => n,
+                _ => {
+                    eprintln!("shifterimg: --nodes must be a positive integer");
+                    usage();
+                }
+            };
+            let gpus: u32 = match parsed.get("gpus").unwrap_or("0").parse() {
+                Ok(n) => n,
+                _ => {
+                    eprintln!("shifterimg: --gpus must be an integer");
+                    usage();
+                }
+            };
+            let cluster = if parsed.has("hetero") {
+                if nodes < 2 {
+                    eprintln!("shifterimg: --hetero needs --nodes >= 2");
+                    usage();
+                }
+                LaunchCluster::daint_linux_split(nodes)
+            } else {
+                LaunchCluster::homogeneous(&profile, nodes)
+            };
+            let mut fabric = DistributionFabric::new(shards, pfs);
+            let mut job = JobSpec::new(reference, &command, nodes);
+            if gpus > 0 {
+                job = job.with_gpus(gpus);
+            }
+            if parsed.has("mpi") {
+                job = job.with_mpi();
+            }
+            let scheduler = LaunchScheduler::new(&cluster, &registry);
+            match scheduler.launch(&mut fabric, &job) {
+                Ok(report) => {
+                    print!("{}", report.render());
+                    if report.failed() > 0 {
+                        std::process::exit(1);
+                    }
+                }
+                Err(e) => {
+                    eprintln!("shifterimg: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
         _ => usage(),
+    }
+}
+
+fn parse_shards(parsed: &shifter_rs::util::cli::ParsedArgs) -> usize {
+    match parsed.get("shards").unwrap_or("4").parse() {
+        Ok(n) if n >= 1 => n,
+        _ => {
+            eprintln!("shifterimg: --shards must be a positive integer");
+            usage();
+        }
     }
 }

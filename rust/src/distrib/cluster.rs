@@ -12,6 +12,7 @@ use crate::gateway::{
     GatewayError, GatewayImage, ImageGateway, PullJob, PullQueue, PullState,
 };
 use crate::image::ImageRef;
+use crate::metrics::Stats;
 use crate::pfs::LustreFs;
 use crate::registry::Registry;
 use crate::util::prng::Rng;
@@ -35,6 +36,8 @@ pub struct ShardStatus {
     pub failed: usize,
     /// Images materialized on this shard's gateway.
     pub images: usize,
+    /// Longest enqueue-to-pickup wait any job on this shard has seen.
+    pub max_queue_wait_secs: f64,
     /// Reference the worker is advancing right now.
     pub active: Option<String>,
 }
@@ -172,6 +175,22 @@ impl GatewayCluster {
         &self.cas
     }
 
+    /// Queue-wait (enqueue → worker pickup) distribution across every job
+    /// any shard has started. None until at least one job started.
+    pub fn queue_wait_stats(&self) -> Option<Stats> {
+        let samples: Vec<f64> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.queue.jobs())
+            .filter_map(|j| j.queue_wait_secs())
+            .collect();
+        if samples.is_empty() {
+            None
+        } else {
+            Some(Stats::from_samples(&samples))
+        }
+    }
+
     pub fn cluster_status(&self) -> Vec<ShardStatus> {
         self.shards
             .iter()
@@ -181,6 +200,11 @@ impl GatewayCluster {
                 ready: s.queue.in_state(PullState::Ready).len(),
                 failed: s.queue.in_state(PullState::Failed).len(),
                 images: s.gateway.list().len(),
+                max_queue_wait_secs: s
+                    .queue
+                    .jobs()
+                    .filter_map(|j| j.queue_wait_secs())
+                    .fold(0.0, f64::max),
                 active: s
                     .queue
                     .active()
@@ -299,6 +323,30 @@ mod tests {
 
     fn cas_logical(c: &GatewayCluster) -> u64 {
         c.cas().logical_bytes()
+    }
+
+    #[test]
+    fn queue_wait_surfaces_in_stats_and_status() {
+        let (registry, refs) = derived_catalog(8);
+        let mut cluster = GatewayCluster::new(1, &LustreFs::piz_daint());
+        for name in &refs {
+            cluster.request(&registry, name, "u").unwrap();
+        }
+        assert!(cluster.queue_wait_stats().is_none(), "nothing started yet");
+        cluster.tick(&registry, 1e9);
+        let stats = cluster.queue_wait_stats().unwrap();
+        assert_eq!(stats.n, 8);
+        // one worker, identical jobs: the last job waits ~7 jobs' worth,
+        // the first none — the spread must be visible in the percentiles
+        assert!(stats.best.abs() < 1e-9);
+        assert!(stats.worst > 0.0);
+        assert!(stats.p99 >= stats.p50);
+        let status = cluster.cluster_status();
+        let max_wait = status
+            .iter()
+            .map(|s| s.max_queue_wait_secs)
+            .fold(0.0, f64::max);
+        assert!((max_wait - stats.worst).abs() < 1e-9);
     }
 
     #[test]

@@ -27,10 +27,11 @@ pub use cas::{BlobInfo, ContentStore, ImageReceipt};
 pub use cluster::{GatewayCluster, GatewayShard, ShardStatus};
 pub use node_cache::{CacheOutcome, NodeCache};
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::sync::Mutex;
 
 use crate::gateway::{GatewayError, GatewayImage, ImageSource, PullState};
+use crate::metrics::Stats;
 use crate::pfs::LustreFs;
 use crate::registry::Registry;
 
@@ -54,10 +55,11 @@ pub struct CacheStats {
 /// The facade the runtime and CLI talk to.
 pub struct DistributionFabric {
     cluster: GatewayCluster,
-    /// Per-node caches, created lazily as nodes first fetch. RefCell:
-    /// `ImageSource::node_fetch_secs` takes `&self` but a fetch updates
-    /// LRU/hit state.
-    caches: RefCell<BTreeMap<usize, NodeCache>>,
+    /// Per-node caches, created lazily as nodes first fetch. Mutex (not
+    /// RefCell): `ImageSource::node_fetch_secs` takes `&self` but a fetch
+    /// updates LRU/hit state, and the launch orchestrator shares one
+    /// fabric across its whole worker pool — the fabric must be `Sync`.
+    caches: Mutex<BTreeMap<usize, NodeCache>>,
     node_cache_bytes: u64,
     pfs: LustreFs,
 }
@@ -66,7 +68,7 @@ impl DistributionFabric {
     pub fn new(n_shards: usize, pfs: LustreFs) -> DistributionFabric {
         DistributionFabric {
             cluster: GatewayCluster::new(n_shards, &pfs),
-            caches: RefCell::new(BTreeMap::new()),
+            caches: Mutex::new(BTreeMap::new()),
             node_cache_bytes: DEFAULT_NODE_CACHE_BYTES,
             pfs,
         }
@@ -127,13 +129,21 @@ impl DistributionFabric {
             return false;
         };
         self.caches
-            .borrow()
+            .lock()
+            .expect("node-cache lock poisoned")
             .get(&node)
             .is_some_and(|c| c.contains(image.squashfs.digest))
     }
 
+    /// Queue-wait statistics (enqueue → worker pickup) across every job
+    /// the gateway shards have started, for `cluster-status` and the
+    /// launch report.
+    pub fn queue_wait_stats(&self) -> Option<Stats> {
+        self.cluster.queue_wait_stats()
+    }
+
     pub fn cache_stats(&self) -> CacheStats {
-        let caches = self.caches.borrow();
+        let caches = self.caches.lock().expect("node-cache lock poisoned");
         CacheStats {
             nodes: caches.len(),
             hits: caches.values().map(|c| c.hits).sum(),
@@ -161,7 +171,7 @@ impl ImageSource for DistributionFabric {
         node: usize,
         concurrent_nodes: u64,
     ) -> Option<f64> {
-        let mut caches = self.caches.borrow_mut();
+        let mut caches = self.caches.lock().expect("node-cache lock poisoned");
         let cache = caches
             .entry(node)
             .or_insert_with(|| NodeCache::new(self.node_cache_bytes));

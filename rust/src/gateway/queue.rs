@@ -62,6 +62,9 @@ pub struct PullJob {
     pub error: Option<String>,
     /// Queue clock when the job was first requested.
     pub enqueued_at: f64,
+    /// Queue clock when the worker picked the job up (Enqueued → Pulling
+    /// transition; exact within a tick). Fast-failed jobs never wait.
+    pub started_at: Option<f64>,
     /// Queue clock when the job reached a terminal state (exact within a
     /// tick — the transition moment, not the tick boundary).
     pub completed_at: Option<f64>,
@@ -76,6 +79,13 @@ impl PullJob {
     /// Enqueue-to-READY latency, once terminal.
     pub fn turnaround_secs(&self) -> Option<f64> {
         self.completed_at.map(|t| t - self.enqueued_at)
+    }
+
+    /// Time the job sat behind other work before its worker started it —
+    /// the queue-wait component of the turnaround, surfaced by
+    /// `cluster-status` and the launch report.
+    pub fn queue_wait_secs(&self) -> Option<f64> {
+        self.started_at.map(|t| t - self.enqueued_at)
     }
 }
 
@@ -137,6 +147,7 @@ impl PullQueue {
                     durations: [0.0; 4],
                     error: Some(e.to_string()),
                     enqueued_at: self.clock,
+                    started_at: Some(self.clock),
                     completed_at: Some(self.clock),
                 };
                 self.jobs.insert(r.clone(), job);
@@ -164,6 +175,7 @@ impl PullQueue {
             durations,
             error: None,
             enqueued_at: self.clock,
+            started_at: None,
             completed_at: None,
         };
         self.jobs.insert(r.clone(), job);
@@ -195,6 +207,9 @@ impl PullQueue {
             if job.state == PullState::Enqueued {
                 job.state = PullState::Pulling;
                 job.remaining = job.durations[0];
+                // `dt` of the tick budget is unspent, so the worker picked
+                // the job up exactly at clock - dt.
+                job.started_at = Some(self.clock - dt);
             }
             if dt < job.remaining {
                 job.remaining -= dt;
@@ -409,6 +424,29 @@ mod tests {
         assert!(!q.status("pynamic:1.3").unwrap().state.terminal());
         q.tick(&mut gw, &reg, 1e6);
         assert_eq!(q.status("pynamic:1.3").unwrap().state, PullState::Ready);
+    }
+
+    #[test]
+    fn queue_wait_reflects_fifo_position() {
+        let (mut gw, reg, mut q) = setup();
+        q.request(&gw, &reg, "ubuntu:xenial", "u").unwrap();
+        q.request(&gw, &reg, "pynamic:1.3", "u").unwrap();
+        q.tick(&mut gw, &reg, 1e6);
+        let first = q.status("ubuntu:xenial").unwrap();
+        let second = q.status("pynamic:1.3").unwrap();
+        // the first job starts immediately; the second waits exactly as
+        // long as the first took end to end (one worker, FIFO)
+        assert!(first.queue_wait_secs().unwrap().abs() < 1e-9);
+        let first_total: f64 = first.stage_durations().iter().sum();
+        let wait = second.queue_wait_secs().unwrap();
+        assert!(
+            (wait - first_total).abs() < 1e-6,
+            "wait={wait} expected={first_total}"
+        );
+        // wait + own processing = turnaround
+        let own: f64 = second.stage_durations().iter().sum();
+        let turnaround = second.turnaround_secs().unwrap();
+        assert!((turnaround - (wait + own)).abs() < 1e-6);
     }
 
     #[test]

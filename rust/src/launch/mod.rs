@@ -1,0 +1,233 @@
+//! Cluster-scale job launch orchestrator (DESIGN.md S19): the layer that
+//! turns per-node simulation into the paper's actual scenario — an
+//! `srun`-wide launch where a containerized MPI/GPU application starts on
+//! thousands of nodes at once (§III.A, §IV, §V).
+//!
+//! A [`JobSpec`] names the image, command, node count and GPU/MPI flags; a
+//! [`LaunchCluster`] describes the machine as one or more partitions, each
+//! with its own `SystemProfile` (heterogeneous GPU generations and MPI ABI
+//! versions across partitions); the [`scheduler::LaunchScheduler`] drives
+//! the full launch:
+//!
+//!   1. WLM allocation per partition via `wlm::Slurm` (salloc + srun with
+//!      GRES, so CUDA_VISIBLE_DEVICES is injected exactly as §IV.A wants);
+//!   2. one coalesced image pull per job through the
+//!      `distrib::DistributionFabric` — N nodes, one gateway job;
+//!   3. per-node `ShifterRuntime` stage execution, concurrently on a
+//!      thread pool, with straggler/retry handling for nodes whose
+//!      cold-cache fill misbehaves;
+//!   4. aggregation into a [`report::LaunchReport`] with p50/p95/p99 stage
+//!      timings, a slowest-node breakdown, queue-wait and fabric dedup
+//!      stats — the shape of the paper's §V scaling measurements.
+
+pub mod report;
+pub mod scheduler;
+
+pub use report::{LaunchReport, NodeResult, PullSummary};
+pub use scheduler::{LaunchError, LaunchScheduler, RetryPolicy};
+
+use std::sync::Arc;
+
+use crate::hostenv::SystemProfile;
+
+/// What the user hands to `shifterimg launch` / the batch system: one
+/// containerized job spanning `nodes` compute nodes.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub image: String,
+    pub command: Vec<String>,
+    /// srun job width — nodes starting the container simultaneously.
+    pub nodes: u32,
+    /// `--gres=gpu:<N>` per node; 0 disables the GRES request, so the WLM
+    /// does not set CUDA_VISIBLE_DEVICES and GPU support stays off (§IV.A).
+    pub gpus_per_node: u32,
+    /// `--mpi`: activate the §IV.B library swap on every node.
+    pub mpi: bool,
+    pub invoking_uid: u32,
+    pub invoking_gid: u32,
+}
+
+impl JobSpec {
+    pub fn new(image: &str, command: &[&str], nodes: u32) -> JobSpec {
+        JobSpec {
+            image: image.to_string(),
+            command: command.iter().map(|s| s.to_string()).collect(),
+            nodes,
+            gpus_per_node: 0,
+            mpi: false,
+            invoking_uid: 1000,
+            invoking_gid: 1000,
+        }
+    }
+
+    pub fn with_gpus(mut self, per_node: u32) -> JobSpec {
+        self.gpus_per_node = per_node;
+        self
+    }
+
+    pub fn with_mpi(mut self) -> JobSpec {
+        self.mpi = true;
+        self
+    }
+}
+
+/// A contiguous range of identical nodes sharing one `SystemProfile`.
+///
+/// The stored profile is *padded*: its `nodes` vector covers every global
+/// node id up to the end of the partition, so `profile.driver(global_id)`
+/// resolves for any node the partition owns — the runtime receives global
+/// ids and the fabric keys its per-node caches on them.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    name: String,
+    first_node: u32,
+    node_count: u32,
+    profile: Arc<SystemProfile>,
+}
+
+impl Partition {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn first_node(&self) -> u32 {
+        self.first_node
+    }
+
+    pub fn node_count(&self) -> u32 {
+        self.node_count
+    }
+
+    pub fn contains(&self, node: u32) -> bool {
+        node >= self.first_node && node < self.first_node + self.node_count
+    }
+
+    pub fn profile(&self) -> &SystemProfile {
+        &self.profile
+    }
+
+    pub fn shared_profile(&self) -> Arc<SystemProfile> {
+        Arc::clone(&self.profile)
+    }
+}
+
+/// The whole machine a job launches onto: partitions in node-id order.
+#[derive(Debug, Clone, Default)]
+pub struct LaunchCluster {
+    partitions: Vec<Partition>,
+    total_nodes: u32,
+}
+
+impl LaunchCluster {
+    pub fn new() -> LaunchCluster {
+        LaunchCluster::default()
+    }
+
+    /// Append a partition of `nodes` identical nodes modeled on `base`
+    /// (the base profile's first node spec is replicated; its software
+    /// environment — driver version, host MPI, kernel — carries over).
+    pub fn with_partition(
+        mut self,
+        name: &str,
+        base: &SystemProfile,
+        nodes: u32,
+    ) -> LaunchCluster {
+        assert!(nodes >= 1, "a partition needs at least one node");
+        let first_node = self.total_nodes;
+        let mut profile = base.clone();
+        let spec = profile
+            .nodes
+            .first()
+            .cloned()
+            .expect("base profile has no node spec");
+        profile.nodes = vec![spec; (first_node + nodes) as usize];
+        self.partitions.push(Partition {
+            name: name.to_string(),
+            first_node,
+            node_count: nodes,
+            profile: Arc::new(profile),
+        });
+        self.total_nodes += nodes;
+        self
+    }
+
+    /// Single-partition cluster: `nodes` identical nodes modeled on `base`.
+    pub fn homogeneous(base: &SystemProfile, nodes: u32) -> LaunchCluster {
+        LaunchCluster::new().with_partition(base.name, base, nodes)
+    }
+
+    /// The stock heterogeneous machine the CLI's `--hetero` flag and the
+    /// `launch_scale` bench share: half Piz Daint (P100, driver 375.66,
+    /// Cray MPT), half Linux Cluster (K40m/K80, driver 367.48, MVAPICH2).
+    pub fn daint_linux_split(nodes: u32) -> LaunchCluster {
+        assert!(nodes >= 2, "a two-partition split needs at least 2 nodes");
+        let daint_share = nodes / 2;
+        LaunchCluster::new()
+            .with_partition(
+                "daint-xc50",
+                &SystemProfile::piz_daint(),
+                daint_share,
+            )
+            .with_partition(
+                "linux-cluster",
+                &SystemProfile::linux_cluster(),
+                nodes - daint_share,
+            )
+    }
+
+    pub fn total_nodes(&self) -> u32 {
+        self.total_nodes
+    }
+
+    pub fn partitions(&self) -> &[Partition] {
+        &self.partitions
+    }
+
+    pub fn partition_of(&self, node: u32) -> Option<&Partition> {
+        self.partitions.iter().find(|p| p.contains(node))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partitions_tile_the_node_space() {
+        let cluster = LaunchCluster::new()
+            .with_partition("gpu", &SystemProfile::piz_daint(), 8)
+            .with_partition("cpu", &SystemProfile::linux_cluster(), 4);
+        assert_eq!(cluster.total_nodes(), 12);
+        assert_eq!(cluster.partitions().len(), 2);
+        assert_eq!(cluster.partition_of(0).unwrap().name(), "gpu");
+        assert_eq!(cluster.partition_of(7).unwrap().name(), "gpu");
+        assert_eq!(cluster.partition_of(8).unwrap().name(), "cpu");
+        assert_eq!(cluster.partition_of(11).unwrap().name(), "cpu");
+        assert!(cluster.partition_of(12).is_none());
+    }
+
+    #[test]
+    fn padded_profile_resolves_global_node_ids() {
+        let cluster = LaunchCluster::new()
+            .with_partition("a", &SystemProfile::piz_daint(), 3)
+            .with_partition("b", &SystemProfile::linux_cluster(), 3);
+        let b = cluster.partition_of(5).unwrap();
+        // a global id inside partition b resolves against b's profile,
+        // with b's driver generation — not a's
+        let driver = b.profile().driver(5).expect("driver for global id");
+        assert_eq!(driver.version, (367, 48));
+        assert_eq!(driver.cuda_device_count(), 3);
+        let a = cluster.partition_of(2).unwrap();
+        assert_eq!(a.profile().driver(2).unwrap().version, (375, 66));
+    }
+
+    #[test]
+    fn homogeneous_cluster_scales_past_the_base_profile() {
+        // piz_daint models 384 hybrid nodes; the launch cluster can
+        // replicate the node spec out to storm scale
+        let cluster = LaunchCluster::homogeneous(&SystemProfile::piz_daint(), 4096);
+        assert_eq!(cluster.total_nodes(), 4096);
+        let p = cluster.partition_of(4095).unwrap();
+        assert!(p.profile().driver(4095).is_some());
+    }
+}

@@ -1,0 +1,378 @@
+//! Launch aggregation (DESIGN.md S19): per-node outcomes rolled up into
+//! the percentile report the paper's §V scaling measurements are shaped
+//! like — p50/p95/p99 per runtime stage, slowest-node breakdown, pull
+//! queue-wait, and the distribution fabric's cache/dedup accounting.
+
+use crate::distrib::CacheStats;
+use crate::metrics::{Stats, Table};
+use crate::shifter::Stage;
+use crate::util::json::Json;
+
+/// One node slot's outcome.
+#[derive(Debug, Clone)]
+pub struct NodeResult {
+    /// Global node id.
+    pub node: u32,
+    /// Partition the node belongs to.
+    pub partition: String,
+    /// Launch attempts consumed (1 = clean first try; 0 = never ran
+    /// because WLM allocation or preflight already failed the slot).
+    pub attempts: u32,
+    /// The slot exceeded the straggler threshold at least once.
+    pub straggler: bool,
+    /// Runtime overhead across all attempts, jitter included.
+    pub total_secs: f64,
+    /// (stage name, simulated seconds) of the final successful attempt.
+    pub stage_secs: Vec<(&'static str, f64)>,
+    /// Versioned driver libraries injected on this node — the per-node
+    /// driver stack (differs across heterogeneous partitions).
+    pub gpu_libraries: Vec<String>,
+    /// Host MPI the container was swapped to, when `--mpi` succeeded.
+    pub host_mpi: Option<String>,
+    /// Why the slot failed; None = the container launched.
+    pub error: Option<String>,
+}
+
+impl NodeResult {
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+/// The coalesced gateway pull backing the whole job.
+#[derive(Debug, Clone, Copy)]
+pub struct PullSummary {
+    /// How long the job sat in the shard queue before its worker started.
+    pub queue_wait_secs: f64,
+    /// Enqueue-to-READY latency of the shared job.
+    pub turnaround_secs: f64,
+    /// Nodes absorbed into the one job (the dedup width).
+    pub requesters: usize,
+    /// Pull jobs that exist across all gateway shards of the fabric —
+    /// launch-scale coalescing holds when this equals the number of
+    /// distinct image references ever pulled.
+    pub jobs_total: usize,
+}
+
+/// What `shifterimg launch` prints and `benches/launch_scale.rs` asserts.
+#[derive(Debug, Clone)]
+pub struct LaunchReport {
+    pub image: String,
+    pub nodes_requested: u32,
+    /// Per-slot outcomes in global node order.
+    pub node_results: Vec<NodeResult>,
+    /// None when every slot died before the pull phase.
+    pub pull: Option<PullSummary>,
+    /// Node-cache counters across the fabric after the launch.
+    pub cache: CacheStats,
+    /// Content-store dedup ratio after the launch.
+    pub cas_dedup_ratio: f64,
+}
+
+impl LaunchReport {
+    pub fn succeeded(&self) -> usize {
+        self.node_results.iter().filter(|r| r.ok()).count()
+    }
+
+    pub fn failed(&self) -> usize {
+        self.node_results.len() - self.succeeded()
+    }
+
+    /// Extra attempts beyond the first, summed over all slots.
+    pub fn retries(&self) -> u32 {
+        self.node_results
+            .iter()
+            .map(|r| r.attempts.saturating_sub(1))
+            .sum()
+    }
+
+    pub fn stragglers(&self) -> usize {
+        self.node_results.iter().filter(|r| r.straggler).count()
+    }
+
+    /// Distribution of per-node launch totals over successful slots.
+    pub fn total_stats(&self) -> Option<Stats> {
+        let samples: Vec<f64> = self
+            .node_results
+            .iter()
+            .filter(|r| r.ok())
+            .map(|r| r.total_secs)
+            .collect();
+        if samples.is_empty() {
+            None
+        } else {
+            Some(Stats::from_samples(&samples))
+        }
+    }
+
+    /// Per-stage timing distribution over successful slots, in §III.A
+    /// stage order.
+    pub fn stage_stats(&self) -> Vec<(&'static str, Stats)> {
+        Stage::ORDER
+            .iter()
+            .filter_map(|stage| {
+                let samples: Vec<f64> = self
+                    .node_results
+                    .iter()
+                    .filter(|r| r.ok())
+                    .filter_map(|r| {
+                        r.stage_secs
+                            .iter()
+                            .find(|(name, _)| *name == stage.name())
+                            .map(|(_, secs)| *secs)
+                    })
+                    .collect();
+                if samples.is_empty() {
+                    None
+                } else {
+                    Some((stage.name(), Stats::from_samples(&samples)))
+                }
+            })
+            .collect()
+    }
+
+    /// The `k` slowest successful slots, slowest first.
+    pub fn slowest(&self, k: usize) -> Vec<&NodeResult> {
+        let mut ok: Vec<&NodeResult> =
+            self.node_results.iter().filter(|r| r.ok()).collect();
+        ok.sort_by(|a, b| b.total_secs.total_cmp(&a.total_secs));
+        ok.truncate(k);
+        ok
+    }
+
+    /// Distinct failure reasons with their node counts (deduplicated so a
+    /// 4096-node report stays readable).
+    pub fn failure_summary(&self) -> Vec<(String, usize)> {
+        let mut out: Vec<(String, usize)> = Vec::new();
+        for r in &self.node_results {
+            let Some(err) = &r.error else { continue };
+            match out.iter_mut().find(|(msg, _)| msg == err) {
+                Some((_, n)) => *n += 1,
+                None => out.push((err.clone(), 1)),
+            }
+        }
+        out
+    }
+
+    /// Render the report the way the paper-table benches do.
+    pub fn render(&self) -> String {
+        let fmt_secs = |v: f64| -> String {
+            if v < 1.0 {
+                format!("{:.2}ms", v * 1e3)
+            } else {
+                format!("{v:.2}s")
+            }
+        };
+        let mut out = String::new();
+        let mut table = Table::new(
+            &format!(
+                "launch {} on {} nodes ({} ok, {} failed)",
+                self.image,
+                self.nodes_requested,
+                self.succeeded(),
+                self.failed()
+            ),
+            &["stage", "p50", "p95", "p99", "worst"],
+        );
+        for (name, stats) in self.stage_stats() {
+            table.row(&[
+                name.to_string(),
+                fmt_secs(stats.p50),
+                fmt_secs(stats.p95),
+                fmt_secs(stats.p99),
+                fmt_secs(stats.worst),
+            ]);
+        }
+        if let Some(total) = self.total_stats() {
+            table.row(&[
+                "TOTAL".to_string(),
+                fmt_secs(total.p50),
+                fmt_secs(total.p95),
+                fmt_secs(total.p99),
+                fmt_secs(total.worst),
+            ]);
+        }
+        out.push_str(&table.render());
+        if let Some(pull) = &self.pull {
+            out.push_str(&format!(
+                "pull: 1 coalesced job for {} requesters ({} job(s) on the \
+                 fabric), queue wait {}, turnaround {}\n",
+                pull.requesters,
+                pull.jobs_total,
+                fmt_secs(pull.queue_wait_secs),
+                fmt_secs(pull.turnaround_secs),
+            ));
+        }
+        out.push_str(&format!(
+            "retries: {} ({} straggler slot(s)); node caches: {} hits / {} \
+             misses / {} evictions on {} nodes; cas dedup {:.2}x\n",
+            self.retries(),
+            self.stragglers(),
+            self.cache.hits,
+            self.cache.misses,
+            self.cache.evictions,
+            self.cache.nodes,
+            self.cas_dedup_ratio,
+        ));
+        for r in self.slowest(3) {
+            let breakdown: Vec<String> = r
+                .stage_secs
+                .iter()
+                .filter(|(_, secs)| *secs > 1e-4)
+                .map(|(name, secs)| format!("{name} {}", fmt_secs(*secs)))
+                .collect();
+            out.push_str(&format!(
+                "slowest: node {} [{}] {} in {} attempt(s) ({})\n",
+                r.node,
+                r.partition,
+                fmt_secs(r.total_secs),
+                r.attempts,
+                breakdown.join(", "),
+            ));
+        }
+        for (err, n) in self.failure_summary() {
+            out.push_str(&format!("failed: {n} node(s): {err}\n"));
+        }
+        out
+    }
+
+    /// JSON shape for `BENCH_launch.json` (the CI bench-smoke artifact).
+    pub fn to_json(&self) -> Json {
+        let stages: Vec<Json> = self
+            .stage_stats()
+            .iter()
+            .map(|(name, s)| {
+                Json::obj(vec![
+                    ("stage", Json::str(*name)),
+                    ("p50_secs", Json::Num(s.p50)),
+                    ("p95_secs", Json::Num(s.p95)),
+                    ("p99_secs", Json::Num(s.p99)),
+                    ("worst_secs", Json::Num(s.worst)),
+                ])
+            })
+            .collect();
+        let mut fields = vec![
+            ("image", Json::str(self.image.as_str())),
+            ("nodes_requested", Json::Num(self.nodes_requested as f64)),
+            ("succeeded", Json::Num(self.succeeded() as f64)),
+            ("failed", Json::Num(self.failed() as f64)),
+            ("retries", Json::Num(f64::from(self.retries()))),
+            ("stragglers", Json::Num(self.stragglers() as f64)),
+            ("cache_hits", Json::Num(self.cache.hits as f64)),
+            ("cache_misses", Json::Num(self.cache.misses as f64)),
+            ("cas_dedup_ratio", Json::Num(self.cas_dedup_ratio)),
+            ("stages", Json::Arr(stages)),
+        ];
+        if let Some(total) = self.total_stats() {
+            fields.push((
+                "total",
+                Json::obj(vec![
+                    ("p50_secs", Json::Num(total.p50)),
+                    ("p95_secs", Json::Num(total.p95)),
+                    ("p99_secs", Json::Num(total.p99)),
+                    ("worst_secs", Json::Num(total.worst)),
+                ]),
+            ));
+        }
+        if let Some(pull) = &self.pull {
+            fields.push((
+                "pull",
+                Json::obj(vec![
+                    ("queue_wait_secs", Json::Num(pull.queue_wait_secs)),
+                    ("turnaround_secs", Json::Num(pull.turnaround_secs)),
+                    ("requesters", Json::Num(pull.requesters as f64)),
+                    ("jobs_total", Json::Num(pull.jobs_total as f64)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(node: u32, secs: f64, err: Option<&str>) -> NodeResult {
+        NodeResult {
+            node,
+            partition: "p".to_string(),
+            attempts: 1,
+            straggler: false,
+            total_secs: secs,
+            stage_secs: vec![
+                ("resolve-image", 1e-4),
+                ("prepare-environment", secs - 1e-4),
+            ],
+            gpu_libraries: vec![],
+            host_mpi: None,
+            error: err.map(|e| e.to_string()),
+        }
+    }
+
+    fn report(results: Vec<NodeResult>) -> LaunchReport {
+        LaunchReport {
+            image: "ubuntu:xenial".to_string(),
+            nodes_requested: results.len() as u32,
+            node_results: results,
+            pull: Some(PullSummary {
+                queue_wait_secs: 0.5,
+                turnaround_secs: 9.0,
+                requesters: 4,
+                jobs_total: 1,
+            }),
+            cache: CacheStats::default(),
+            cas_dedup_ratio: 1.0,
+        }
+    }
+
+    #[test]
+    fn counts_and_percentiles() {
+        let rep = report(vec![
+            result(0, 1.0, None),
+            result(1, 2.0, None),
+            result(2, 4.0, None),
+            result(3, 1.0, Some("boom")),
+        ]);
+        assert_eq!(rep.succeeded(), 3);
+        assert_eq!(rep.failed(), 1);
+        let total = rep.total_stats().unwrap();
+        assert_eq!(total.n, 3);
+        assert_eq!(total.worst, 4.0);
+        assert!(total.p99 >= total.p50);
+        let stages = rep.stage_stats();
+        assert_eq!(stages[0].0, "resolve-image");
+        assert_eq!(stages.len(), 2);
+        let slowest = rep.slowest(2);
+        assert_eq!(slowest[0].node, 2);
+        assert_eq!(slowest.len(), 2);
+        assert_eq!(rep.failure_summary(), vec![("boom".to_string(), 1)]);
+    }
+
+    #[test]
+    fn render_and_json_carry_the_story() {
+        let rep = report(vec![result(0, 1.0, None), result(1, 2.0, None)]);
+        let text = rep.render();
+        assert!(text.contains("launch ubuntu:xenial on 2 nodes"));
+        assert!(text.contains("p99"));
+        assert!(text.contains("coalesced job"));
+        let json = rep.to_json();
+        assert_eq!(json.get("succeeded").unwrap().as_u64(), Some(2));
+        assert_eq!(
+            json.at(&["pull", "jobs_total"]).unwrap().as_u64(),
+            Some(1)
+        );
+        // round-trips through the parser (the CI artifact is consumable)
+        let back = Json::parse(&json.to_string()).unwrap();
+        assert_eq!(back.get("image").unwrap().as_str(), Some("ubuntu:xenial"));
+    }
+
+    #[test]
+    fn all_failed_report_has_no_totals() {
+        let rep = report(vec![result(0, 1.0, Some("dead"))]);
+        assert!(rep.total_stats().is_none());
+        assert!(rep.stage_stats().is_empty());
+        assert_eq!(rep.failed(), 1);
+        assert!(rep.render().contains("dead"));
+    }
+}

@@ -1,0 +1,584 @@
+//! The launch scheduler (DESIGN.md S19): WLM allocation → one coalesced
+//! pull → per-node stage execution on a worker pool → aggregation.
+//!
+//! Concurrency model: the `DistributionFabric` is `Sync` (its node caches
+//! live behind a `Mutex`) and `ShifterRuntime::run` takes `&self`, so one
+//! runtime per partition is shared by every worker thread. Workers pull
+//! slot indices from an atomic counter; results are keyed by slot index,
+//! so the report is deterministic regardless of thread interleaving (the
+//! per-node caches are independent, and all jitter is PRNG-keyed on
+//! `(image, node, attempt)`).
+//!
+//! Straggler/retry policy: each attempt draws a lognormal jitter
+//! multiplier. A multiplier above `RetryPolicy::straggler_threshold`
+//! marks the slot a straggler and relaunches it — the squashfs is already
+//! node-local by then, so the retry resolves against the warm cache, which
+//! is exactly what a real site's "cancel the slow node and relaunch"
+//! mitigation buys. Transient cold-fill faults burn their broadcast time
+//! and retry; container-side errors (MPI ABI mismatch, GPU incompat,
+//! missing host libraries) are permanent and fail only their own slot.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::distrib::{DistributionFabric, NodeCache};
+use crate::gateway::{ImageSource, PullState};
+use crate::registry::Registry;
+use crate::shifter::{preflight, RunOptions, ShifterRuntime};
+use crate::util::prng::Rng;
+use crate::wlm::{GresRequest, Slurm, WlmError};
+
+use super::report::{LaunchReport, NodeResult, PullSummary};
+use super::{JobSpec, LaunchCluster};
+
+/// One blocking drain of the gateway cluster (same convention as
+/// `DistributionFabric::pull_blocking`).
+const PULL_DRAIN_SECS: f64 = 1e9;
+
+#[derive(Debug, thiserror::Error)]
+pub enum LaunchError {
+    #[error(transparent)]
+    Wlm(#[from] WlmError),
+    #[error("image pull failed for {reference}: {detail}")]
+    Pull { reference: String, detail: String },
+    #[error("job requests zero nodes")]
+    EmptyJob,
+}
+
+/// Straggler and transient-failure handling knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Attempts per node slot (>= 1).
+    pub max_attempts: u32,
+    /// Lognormal sigma of per-attempt node jitter.
+    pub jitter_sigma: f64,
+    /// An attempt whose jitter multiplier exceeds this is a straggler and
+    /// is relaunched while attempts remain.
+    pub straggler_threshold: f64,
+    /// Probability that a slot's first cold-cache fill fails outright
+    /// (transient Lustre read error); the retry re-reads cleanly.
+    pub cold_fill_fault_rate: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 3,
+            jitter_sigma: 0.05,
+            straggler_threshold: 1.12,
+            cold_fill_fault_rate: 0.0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// No jitter, no faults, single attempt — for exact-count tests.
+    pub fn strict() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 1,
+            jitter_sigma: 0.0,
+            straggler_threshold: f64::INFINITY,
+            cold_fill_fault_rate: 0.0,
+        }
+    }
+}
+
+/// Per-slot plan produced by the WLM phase.
+struct SlotPlan {
+    node: u32,
+    partition: usize,
+    env: BTreeMap<String, String>,
+    /// Set when WLM allocation or preflight already failed the slot.
+    dead: Option<String>,
+}
+
+pub struct LaunchScheduler<'a> {
+    cluster: &'a LaunchCluster,
+    registry: &'a Registry,
+    policy: RetryPolicy,
+    workers: usize,
+}
+
+impl<'a> LaunchScheduler<'a> {
+    pub fn new(
+        cluster: &'a LaunchCluster,
+        registry: &'a Registry,
+    ) -> LaunchScheduler<'a> {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        LaunchScheduler {
+            cluster,
+            registry,
+            policy: RetryPolicy::default(),
+            workers,
+        }
+    }
+
+    pub fn with_policy(mut self, policy: RetryPolicy) -> LaunchScheduler<'a> {
+        assert!(policy.max_attempts >= 1, "at least one attempt per slot");
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> LaunchScheduler<'a> {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Drive `spec` across the cluster end to end.
+    pub fn launch(
+        &self,
+        fabric: &mut DistributionFabric,
+        spec: &JobSpec,
+    ) -> Result<LaunchReport, LaunchError> {
+        if spec.nodes == 0 {
+            return Err(LaunchError::EmptyJob);
+        }
+        if spec.nodes > self.cluster.total_nodes() {
+            return Err(LaunchError::Wlm(WlmError::NotEnoughNodes {
+                requested: spec.nodes,
+                available: self.cluster.total_nodes(),
+            }));
+        }
+
+        let slots = self.plan_slots(spec);
+
+        // -- one coalesced pull for the whole job -------------------------
+        let pull = self.pull_once(fabric, spec, &slots)?;
+
+        // -- per-node stage execution on the worker pool ------------------
+        let runtimes: Vec<ShifterRuntime> = self
+            .cluster
+            .partitions()
+            .iter()
+            .map(|p| ShifterRuntime::shared(p.shared_profile()))
+            .collect();
+        let fabric_ref: &DistributionFabric = fabric;
+        let next = AtomicUsize::new(0);
+        let n_workers = self.workers.clamp(1, slots.len());
+        let collected = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n_workers)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut out = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= slots.len() {
+                                break;
+                            }
+                            out.push((
+                                i,
+                                self.run_slot(
+                                    &runtimes, fabric_ref, spec, &slots[i],
+                                ),
+                            ));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            let mut results: Vec<Option<NodeResult>> =
+                slots.iter().map(|_| None).collect();
+            for handle in handles {
+                for (i, r) in handle.join().expect("launch worker panicked") {
+                    results[i] = Some(r);
+                }
+            }
+            results
+        });
+        let node_results: Vec<NodeResult> = collected
+            .into_iter()
+            .map(|r| r.expect("every slot produces a result"))
+            .collect();
+
+        let cas = fabric.cluster().cas();
+        Ok(LaunchReport {
+            image: spec.image.clone(),
+            nodes_requested: spec.nodes,
+            node_results,
+            pull,
+            cache: fabric.cache_stats(),
+            cas_dedup_ratio: cas.dedup_ratio(),
+        })
+    }
+
+    /// WLM phase: walk partitions in node order, salloc + srun each one's
+    /// share. A partition whose allocation or preflight fails marks only
+    /// its own slots dead — it cannot poison the rest of the job.
+    fn plan_slots(&self, spec: &JobSpec) -> Vec<SlotPlan> {
+        let gres = (spec.gpus_per_node > 0).then_some(GresRequest {
+            gpus_per_node: spec.gpus_per_node,
+        });
+        let mut slots: Vec<SlotPlan> = Vec::with_capacity(spec.nodes as usize);
+        let mut remaining = spec.nodes;
+        for (pidx, part) in self.cluster.partitions().iter().enumerate() {
+            if remaining == 0 {
+                break;
+            }
+            let take = remaining.min(part.node_count());
+            remaining -= take;
+            let dead_all = |reason: String, slots: &mut Vec<SlotPlan>| {
+                for i in 0..take {
+                    slots.push(SlotPlan {
+                        node: part.first_node() + i,
+                        partition: pidx,
+                        env: BTreeMap::new(),
+                        dead: Some(reason.clone()),
+                    });
+                }
+            };
+            let pre = preflight::preflight(part.profile());
+            if !pre.ok() {
+                dead_all(
+                    format!(
+                        "preflight: kernel {} lacks {:?}",
+                        part.profile().kernel,
+                        pre.missing
+                    ),
+                    &mut slots,
+                );
+                continue;
+            }
+            let mut slurm = Slurm::new(part.profile());
+            let ranks = slurm
+                .salloc(take)
+                .and_then(|alloc| slurm.srun(&alloc, take, gres));
+            match ranks {
+                Ok(ranks) => {
+                    for rank in ranks {
+                        slots.push(SlotPlan {
+                            node: part.first_node() + rank.node,
+                            partition: pidx,
+                            env: rank.env,
+                            dead: None,
+                        });
+                    }
+                }
+                Err(e) => dead_all(format!("wlm: {e}"), &mut slots),
+            }
+        }
+        slots
+    }
+
+    /// Pull phase: every live slot requests the image; the shard queue's
+    /// dedup coalesces the storm into exactly one job, and one drain tick
+    /// runs it to a terminal state.
+    fn pull_once(
+        &self,
+        fabric: &mut DistributionFabric,
+        spec: &JobSpec,
+        slots: &[SlotPlan],
+    ) -> Result<Option<PullSummary>, LaunchError> {
+        let live = slots.iter().filter(|s| s.dead.is_none()).count();
+        if live == 0 {
+            return Ok(None);
+        }
+        for slot in slots.iter().filter(|s| s.dead.is_none()) {
+            fabric
+                .request(
+                    self.registry,
+                    &spec.image,
+                    &format!("node-{:05}", slot.node),
+                )
+                .map_err(|e| LaunchError::Pull {
+                    reference: spec.image.clone(),
+                    detail: e.to_string(),
+                })?;
+        }
+        fabric.tick(self.registry, PULL_DRAIN_SECS);
+        let job = fabric.cluster().status(&spec.image);
+        match job {
+            Some(j) if j.state == PullState::Ready => Ok(Some(PullSummary {
+                queue_wait_secs: j.queue_wait_secs().unwrap_or(0.0),
+                turnaround_secs: j.turnaround_secs().unwrap_or(0.0),
+                requesters: j.requesters.len(),
+                jobs_total: fabric
+                    .cluster()
+                    .shards()
+                    .map(|s| s.queue.jobs().count())
+                    .sum(),
+            })),
+            other => Err(LaunchError::Pull {
+                reference: spec.image.clone(),
+                detail: other
+                    .and_then(|j| j.error.clone())
+                    .unwrap_or_else(|| "pull did not reach READY".to_string()),
+            }),
+        }
+    }
+
+    /// Execute one node slot, retrying per policy.
+    fn run_slot(
+        &self,
+        runtimes: &[ShifterRuntime],
+        fabric: &DistributionFabric,
+        spec: &JobSpec,
+        slot: &SlotPlan,
+    ) -> NodeResult {
+        let part = &self.cluster.partitions()[slot.partition];
+        let mut result = NodeResult {
+            node: slot.node,
+            partition: part.name().to_string(),
+            attempts: 0,
+            straggler: false,
+            total_secs: 0.0,
+            stage_secs: Vec::new(),
+            gpu_libraries: Vec::new(),
+            host_mpi: None,
+            error: None,
+        };
+        if let Some(reason) = &slot.dead {
+            result.error = Some(reason.clone());
+            return result;
+        }
+        let rt = &runtimes[slot.partition];
+        let command: Vec<&str> =
+            spec.command.iter().map(|s| s.as_str()).collect();
+        let mut opts = RunOptions::new(&spec.image, &command)
+            .on_nodes(slot.node as usize, spec.nodes);
+        opts.invoking_uid = spec.invoking_uid;
+        opts.invoking_gid = spec.invoking_gid;
+        opts.mpi = spec.mpi;
+        opts.env = slot.env.clone();
+
+        loop {
+            result.attempts += 1;
+            let mut rng = Rng::from_tags(&[
+                "launch",
+                &spec.image,
+                &slot.node.to_string(),
+                &result.attempts.to_string(),
+            ]);
+            if result.attempts == 1
+                && rng.uniform() < self.policy.cold_fill_fault_rate
+            {
+                // the broadcast read ran (and failed) — its time is spent,
+                // and nothing was admitted to the node cache
+                result.total_secs += self.fill_penalty_secs(fabric, spec)
+                    * rng.lognormal_noise(self.policy.jitter_sigma);
+                if result.attempts >= self.policy.max_attempts {
+                    result.error = Some(
+                        "transient cold-fill I/O error (attempts exhausted)"
+                            .to_string(),
+                    );
+                    return result;
+                }
+                continue;
+            }
+            match rt.run(fabric, &opts) {
+                Ok(container) => {
+                    let noise =
+                        rng.lognormal_noise(self.policy.jitter_sigma);
+                    result.total_secs +=
+                        container.startup_overhead_secs() * noise;
+                    if noise > self.policy.straggler_threshold {
+                        result.straggler = true;
+                        if result.attempts < self.policy.max_attempts {
+                            // relaunch: the squashfs is node-local now, so
+                            // the retry resolves against the warm cache
+                            continue;
+                        }
+                    }
+                    result.stage_secs = container
+                        .stage_log
+                        .records()
+                        .iter()
+                        .map(|r| (r.stage.name(), r.sim_secs))
+                        .collect();
+                    if let Some(gpu) = &container.gpu {
+                        result.gpu_libraries = gpu.libraries.clone();
+                    }
+                    if let Some(mpi) = &container.mpi {
+                        result.host_mpi = Some(mpi.host_mpi.clone());
+                    }
+                    return result;
+                }
+                Err(e) => {
+                    // container-side errors are permanent for this job:
+                    // an ABI mismatch or GPU incompatibility will not heal
+                    // on retry, and must only fail this slot
+                    result.error = Some(e.to_string());
+                    return result;
+                }
+            }
+        }
+    }
+
+    /// Time a failed broadcast fill wastes before the retry.
+    fn fill_penalty_secs(
+        &self,
+        fabric: &DistributionFabric,
+        spec: &JobSpec,
+    ) -> f64 {
+        let bytes = fabric
+            .resolve(&spec.image)
+            .map(|img| img.squashfs.compressed_bytes)
+            .unwrap_or(0);
+        NodeCache::cold_fill_secs(fabric.pfs(), bytes, spec.nodes as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hostenv::SystemProfile;
+    use crate::pfs::LustreFs;
+
+    fn setup(nodes: u32) -> (LaunchCluster, Registry, DistributionFabric) {
+        (
+            LaunchCluster::homogeneous(&SystemProfile::piz_daint(), nodes),
+            Registry::dockerhub(),
+            DistributionFabric::new(4, LustreFs::piz_daint()),
+        )
+    }
+
+    #[test]
+    fn launch_runs_every_slot_once() {
+        let (cluster, registry, mut fabric) = setup(16);
+        let scheduler = LaunchScheduler::new(&cluster, &registry)
+            .with_policy(RetryPolicy::strict())
+            .with_workers(4);
+        let spec = JobSpec::new("ubuntu:xenial", &["true"], 16);
+        let report = scheduler.launch(&mut fabric, &spec).unwrap();
+        assert_eq!(report.succeeded(), 16);
+        assert_eq!(report.failed(), 0);
+        assert_eq!(report.retries(), 0);
+        let pull = report.pull.unwrap();
+        assert_eq!(pull.requesters, 16);
+        assert_eq!(pull.jobs_total, 1);
+        // every node cold-filled exactly once
+        assert_eq!(report.cache.misses, 16);
+        assert_eq!(report.cache.hits, 0);
+        // results come back in global node order
+        let nodes: Vec<u32> =
+            report.node_results.iter().map(|r| r.node).collect();
+        assert_eq!(nodes, (0..16).collect::<Vec<u32>>());
+        // stage percentiles exist and are ordered
+        let total = report.total_stats().unwrap();
+        assert!(total.p50 > 0.0);
+        assert!(total.p99 >= total.p50);
+    }
+
+    #[test]
+    fn warm_relaunch_is_all_cache_hits() {
+        // 512 nodes: wide enough that the cold broadcast storm dominates
+        // the fixed mount/exec costs and the warm restart collapses it
+        let (cluster, registry, mut fabric) = setup(512);
+        let scheduler = LaunchScheduler::new(&cluster, &registry)
+            .with_policy(RetryPolicy::strict());
+        let spec = JobSpec::new("ubuntu:xenial", &["true"], 512);
+        let cold = scheduler.launch(&mut fabric, &spec).unwrap();
+        let warm = scheduler.launch(&mut fabric, &spec).unwrap();
+        assert_eq!(warm.cache.hits, 512);
+        assert_eq!(warm.cache.misses, 512); // from the cold launch
+        let cold_p99 = cold.total_stats().unwrap().p99;
+        let warm_p99 = warm.total_stats().unwrap().p99;
+        assert!(
+            warm_p99 * 10.0 <= cold_p99,
+            "warm p99 {warm_p99}s must collapse vs cold {cold_p99}s"
+        );
+        // the relaunch coalesced onto the same (already READY) job
+        assert_eq!(warm.pull.unwrap().jobs_total, 1);
+    }
+
+    #[test]
+    fn oversubscribed_job_is_rejected() {
+        let (cluster, registry, mut fabric) = setup(4);
+        let scheduler = LaunchScheduler::new(&cluster, &registry);
+        let spec = JobSpec::new("ubuntu:xenial", &["true"], 5);
+        let err = scheduler.launch(&mut fabric, &spec).unwrap_err();
+        assert!(matches!(
+            err,
+            LaunchError::Wlm(WlmError::NotEnoughNodes { .. })
+        ));
+        let empty = JobSpec::new("ubuntu:xenial", &["true"], 0);
+        assert!(matches!(
+            scheduler.launch(&mut fabric, &empty).unwrap_err(),
+            LaunchError::EmptyJob
+        ));
+    }
+
+    #[test]
+    fn missing_image_fails_the_whole_job() {
+        let (cluster, registry, mut fabric) = setup(4);
+        let scheduler = LaunchScheduler::new(&cluster, &registry);
+        let spec = JobSpec::new("nope:missing", &["true"], 4);
+        let err = scheduler.launch(&mut fabric, &spec).unwrap_err();
+        assert!(matches!(err, LaunchError::Pull { .. }));
+        assert!(err.to_string().contains("not found"));
+    }
+
+    #[test]
+    fn transient_cold_fill_faults_retry_and_succeed() {
+        let (cluster, registry, mut fabric) = setup(8);
+        let policy = RetryPolicy {
+            max_attempts: 2,
+            jitter_sigma: 0.0,
+            straggler_threshold: f64::INFINITY,
+            cold_fill_fault_rate: 1.0, // every first fill fails
+        };
+        let scheduler = LaunchScheduler::new(&cluster, &registry)
+            .with_policy(policy);
+        let spec = JobSpec::new("ubuntu:xenial", &["true"], 8);
+        let report = scheduler.launch(&mut fabric, &spec).unwrap();
+        assert_eq!(report.succeeded(), 8);
+        assert_eq!(report.retries(), 8, "every slot burned one retry");
+        assert!(report
+            .node_results
+            .iter()
+            .all(|r| r.attempts == 2 && r.ok()));
+        // the wasted broadcast time is charged to the slot
+        let any = &report.node_results[0];
+        let final_attempt: f64 =
+            any.stage_secs.iter().map(|(_, s)| s).sum();
+        assert!(any.total_secs > final_attempt);
+    }
+
+    #[test]
+    fn exhausted_fault_retries_fail_only_their_slots() {
+        let (cluster, registry, mut fabric) = setup(4);
+        let policy = RetryPolicy {
+            max_attempts: 1,
+            jitter_sigma: 0.0,
+            straggler_threshold: f64::INFINITY,
+            cold_fill_fault_rate: 1.0,
+        };
+        let scheduler = LaunchScheduler::new(&cluster, &registry)
+            .with_policy(policy);
+        let spec = JobSpec::new("ubuntu:xenial", &["true"], 4);
+        let report = scheduler.launch(&mut fabric, &spec).unwrap();
+        assert_eq!(report.succeeded(), 0);
+        assert_eq!(report.failed(), 4);
+        let summary = report.failure_summary();
+        assert_eq!(summary.len(), 1);
+        assert!(summary[0].0.contains("cold-fill"));
+        assert_eq!(summary[0].1, 4);
+    }
+
+    #[test]
+    fn stragglers_are_detected_and_relaunched() {
+        let (cluster, registry, mut fabric) = setup(64);
+        // sigma 0.05 with threshold 1.0: every positive-jitter attempt
+        // (about half) straggles — plenty of retries, all terminating
+        let policy = RetryPolicy {
+            max_attempts: 2,
+            jitter_sigma: 0.05,
+            straggler_threshold: 1.0,
+            cold_fill_fault_rate: 0.0,
+        };
+        let scheduler = LaunchScheduler::new(&cluster, &registry)
+            .with_policy(policy);
+        let spec = JobSpec::new("ubuntu:xenial", &["true"], 64);
+        let report = scheduler.launch(&mut fabric, &spec).unwrap();
+        assert_eq!(report.succeeded(), 64, "stragglers still finish");
+        let stragglers = report.stragglers();
+        assert!(
+            (10..=60).contains(&stragglers),
+            "about half must straggle, got {stragglers}"
+        );
+        assert!(report.retries() >= stragglers as u32 / 2);
+        // retried slots resolved against the warm cache on attempt 2
+        assert!(report.cache.hits > 0);
+    }
+}

@@ -33,6 +33,7 @@ pub mod gateway;
 pub mod gpu;
 pub mod hostenv;
 pub mod image;
+pub mod launch;
 pub mod metrics;
 pub mod mpi;
 pub mod pfs;
@@ -46,5 +47,6 @@ pub mod wlm;
 pub use distrib::DistributionFabric;
 pub use gateway::{ImageGateway, ImageSource};
 pub use hostenv::SystemProfile;
+pub use launch::{JobSpec, LaunchCluster, LaunchReport, LaunchScheduler};
 pub use registry::Registry;
 pub use shifter::{Container, RunOptions, ShifterRuntime};

@@ -5,6 +5,7 @@
 //! preparation.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::config::UdiRootConfig;
 use crate::gateway::{GatewayError, ImageSource};
@@ -224,8 +225,14 @@ impl Container {
 }
 
 /// The runtime itself, configured for one host system.
-pub struct ShifterRuntime<'a> {
-    pub profile: &'a SystemProfile,
+///
+/// The profile lives behind an `Arc` so the runtime is cheaply cloneable
+/// and shareable across worker threads — the launch orchestrator
+/// (`crate::launch`) drives one runtime per partition from a thread pool,
+/// and `run` only ever takes `&self`.
+#[derive(Clone)]
+pub struct ShifterRuntime {
+    profile: Arc<SystemProfile>,
     pub config: UdiRootConfig,
     host_fs: VirtualFs,
 }
@@ -241,20 +248,39 @@ const FORK_EXEC_SECS: f64 = 4e-3;
 const CLEANUP_SECS: f64 = 8e-3;
 const LOCAL_DISK_BYTES_PER_SEC: f64 = 500e6;
 
-impl<'a> ShifterRuntime<'a> {
-    pub fn new(profile: &'a SystemProfile) -> ShifterRuntime<'a> {
-        Self::with_config(profile, UdiRootConfig::for_profile(profile))
+impl ShifterRuntime {
+    pub fn new(profile: &SystemProfile) -> ShifterRuntime {
+        Self::shared(Arc::new(profile.clone()))
     }
 
     pub fn with_config(
-        profile: &'a SystemProfile,
+        profile: &SystemProfile,
         config: UdiRootConfig,
-    ) -> ShifterRuntime<'a> {
+    ) -> ShifterRuntime {
+        Self::shared_with_config(Arc::new(profile.clone()), config)
+    }
+
+    /// Build from an already-shared profile without a deep clone — the
+    /// path the launch orchestrator uses for its per-partition runtimes.
+    pub fn shared(profile: Arc<SystemProfile>) -> ShifterRuntime {
+        let config = UdiRootConfig::for_profile(&profile);
+        Self::shared_with_config(profile, config)
+    }
+
+    pub fn shared_with_config(
+        profile: Arc<SystemProfile>,
+        config: UdiRootConfig,
+    ) -> ShifterRuntime {
+        let host_fs = profile.host_fs();
         ShifterRuntime {
             profile,
             config,
-            host_fs: profile.host_fs(),
+            host_fs,
         }
+    }
+
+    pub fn profile(&self) -> &SystemProfile {
+        &self.profile
     }
 
     pub fn host_fs(&self) -> &VirtualFs {

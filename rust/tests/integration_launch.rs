@@ -1,0 +1,195 @@
+//! Integration: the cluster-scale launch orchestrator (DESIGN.md S19) —
+//! heterogeneous partitions get per-node correct injected driver stacks,
+//! an unsatisfiable MPI ABI fails only its own launch slots, the pull
+//! storm coalesces into one gateway job, and queue-wait surfaces in the
+//! report.
+
+use shifter_rs::distrib::DistributionFabric;
+use shifter_rs::launch::{
+    JobSpec, LaunchCluster, LaunchScheduler, RetryPolicy,
+};
+use shifter_rs::mpi::MpiImpl;
+use shifter_rs::pfs::LustreFs;
+use shifter_rs::{Registry, SystemProfile};
+
+fn strict_scheduler<'a>(
+    cluster: &'a LaunchCluster,
+    registry: &'a Registry,
+) -> LaunchScheduler<'a> {
+    LaunchScheduler::new(cluster, registry).with_policy(RetryPolicy::strict())
+}
+
+#[test]
+fn heterogeneous_partitions_inject_their_own_driver_stacks() {
+    // §IV.A across generations: P100 nodes run a 375.66 driver, the
+    // K40m/K80 nodes a 367.48 driver — one job spanning both partitions
+    // must see the right stack bind-mounted on every node
+    let cluster = LaunchCluster::new()
+        .with_partition("daint-xc50", &SystemProfile::piz_daint(), 4)
+        .with_partition("linux-cluster", &SystemProfile::linux_cluster(), 4);
+    let registry = Registry::dockerhub();
+    let mut fabric = DistributionFabric::new(4, LustreFs::piz_daint());
+    let scheduler = strict_scheduler(&cluster, &registry);
+    let spec =
+        JobSpec::new("nvidia/cuda-image:8.0", &["deviceQuery"], 8).with_gpus(1);
+    let report = scheduler.launch(&mut fabric, &spec).unwrap();
+
+    assert_eq!(report.succeeded(), 8);
+    assert_eq!(report.failed(), 0);
+    for r in &report.node_results {
+        assert!(r.ok(), "node {}: {:?}", r.node, r.error);
+        let (expected, wrong) = if r.node < 4 {
+            ("libcuda.so.375.66", "libcuda.so.367.48")
+        } else {
+            ("libcuda.so.367.48", "libcuda.so.375.66")
+        };
+        assert!(
+            r.gpu_libraries.iter().any(|l| l == expected),
+            "node {} [{}] missing {expected}: {:?}",
+            r.node,
+            r.partition,
+            r.gpu_libraries
+        );
+        assert!(
+            !r.gpu_libraries.iter().any(|l| l == wrong),
+            "node {} [{}] got the other partition's driver",
+            r.node,
+            r.partition
+        );
+    }
+}
+
+#[test]
+fn unsatisfiable_mpi_abi_fails_its_slots_without_poisoning_others() {
+    // partition B's host MPI never joined the MPICH ABI initiative: the
+    // §IV.B swap must refuse it on B's nodes while A's nodes launch with
+    // the Cray MPT swap intact
+    let mut openmpi_host = SystemProfile::linux_cluster();
+    openmpi_host.host_mpi = MpiImpl::openmpi_2_0();
+    let cluster = LaunchCluster::new()
+        .with_partition("daint-xc50", &SystemProfile::piz_daint(), 3)
+        .with_partition("openmpi-island", &openmpi_host, 3);
+    let registry = Registry::dockerhub();
+    let mut fabric = DistributionFabric::new(4, LustreFs::piz_daint());
+    let scheduler = strict_scheduler(&cluster, &registry);
+    let spec =
+        JobSpec::new("osu-benchmarks:mpich-3.1.4", &["true"], 6).with_mpi();
+    let report = scheduler.launch(&mut fabric, &spec).unwrap();
+
+    assert_eq!(report.succeeded(), 3);
+    assert_eq!(report.failed(), 3);
+    for r in &report.node_results {
+        if r.node < 3 {
+            assert!(r.ok(), "daint node {} poisoned: {:?}", r.node, r.error);
+            assert_eq!(r.host_mpi.as_deref(), Some("Cray MPT 7.5.0"));
+        } else {
+            let err = r.error.as_deref().unwrap_or_default();
+            assert!(
+                err.contains("not ABI-compatible"),
+                "node {}: wrong error {err:?}",
+                r.node
+            );
+            // a permanent error must not burn retries
+            assert_eq!(r.attempts, 1);
+        }
+    }
+    let summary = report.failure_summary();
+    assert_eq!(summary.len(), 1);
+    assert_eq!(summary[0].1, 3);
+}
+
+#[test]
+fn gres_shortfall_kills_only_the_gpuless_partition() {
+    let mut gpuless = SystemProfile::linux_cluster();
+    gpuless.nodes[0].gpus.clear();
+    let cluster = LaunchCluster::new()
+        .with_partition("daint-xc50", &SystemProfile::piz_daint(), 2)
+        .with_partition("cpu-only", &gpuless, 2);
+    let registry = Registry::dockerhub();
+    let mut fabric = DistributionFabric::new(4, LustreFs::piz_daint());
+    let scheduler = strict_scheduler(&cluster, &registry);
+    let spec =
+        JobSpec::new("nvidia/cuda-image:8.0", &["deviceQuery"], 4).with_gpus(1);
+    let report = scheduler.launch(&mut fabric, &spec).unwrap();
+    assert_eq!(report.succeeded(), 2);
+    assert_eq!(report.failed(), 2);
+    for r in &report.node_results {
+        if r.node >= 2 {
+            let err = r.error.as_deref().unwrap_or_default();
+            assert!(err.contains("wlm"), "node {}: {err:?}", r.node);
+            assert!(err.contains("CUDA devices"), "node {}: {err:?}", r.node);
+        } else {
+            assert!(r.ok());
+            assert!(!r.gpu_libraries.is_empty());
+        }
+    }
+}
+
+#[test]
+fn ancient_kernel_partition_fails_preflight_only_for_itself() {
+    let mut ancient = SystemProfile::piz_daint();
+    ancient.kernel = "2.6.18"; // predates squashfs (mainlined 2.6.29)
+    let cluster = LaunchCluster::new()
+        .with_partition("modern", &SystemProfile::piz_daint(), 2)
+        .with_partition("museum", &ancient, 2);
+    let registry = Registry::dockerhub();
+    let mut fabric = DistributionFabric::new(4, LustreFs::piz_daint());
+    let scheduler = strict_scheduler(&cluster, &registry);
+    let spec = JobSpec::new("ubuntu:xenial", &["true"], 4);
+    let report = scheduler.launch(&mut fabric, &spec).unwrap();
+    assert_eq!(report.succeeded(), 2);
+    assert_eq!(report.failed(), 2);
+    for r in &report.node_results {
+        if r.node >= 2 {
+            let err = r.error.as_deref().unwrap_or_default();
+            assert!(err.contains("preflight"), "node {}: {err:?}", r.node);
+            assert_eq!(r.attempts, 0, "dead slots never run");
+        }
+    }
+}
+
+#[test]
+fn launch_storm_coalesces_into_one_pull_job() {
+    let cluster = LaunchCluster::daint_linux_split(64);
+    let registry = Registry::dockerhub();
+    let mut fabric = DistributionFabric::new(4, LustreFs::piz_daint());
+    let scheduler = strict_scheduler(&cluster, &registry);
+    let spec = JobSpec::new("ubuntu:xenial", &["true"], 64);
+    let report = scheduler.launch(&mut fabric, &spec).unwrap();
+    assert_eq!(report.succeeded(), 64);
+    let pull = report.pull.unwrap();
+    assert_eq!(pull.jobs_total, 1, "64 nodes, one gateway job");
+    assert_eq!(pull.requesters, 64);
+    assert!(pull.turnaround_secs > 0.0);
+    // every node cold-filled its own cache exactly once
+    assert_eq!(report.cache.nodes, 64);
+    assert_eq!(report.cache.misses, 64);
+    assert_eq!(report.cache.hits, 0);
+}
+
+#[test]
+fn launch_report_surfaces_queue_wait_behind_a_backlog() {
+    // a huge unrelated pull is already queued on the (single) shard; the
+    // job's coalesced pull must wait behind it and the report must say so
+    let cluster =
+        LaunchCluster::homogeneous(&SystemProfile::piz_daint(), 4);
+    let registry = Registry::dockerhub();
+    let mut fabric = DistributionFabric::new(1, LustreFs::piz_daint());
+    fabric
+        .request(&registry, "pynamic:1.3", "nightly-sync")
+        .unwrap();
+    let scheduler = strict_scheduler(&cluster, &registry);
+    let spec = JobSpec::new("ubuntu:xenial", &["true"], 4);
+    let report = scheduler.launch(&mut fabric, &spec).unwrap();
+    assert_eq!(report.succeeded(), 4);
+    let pull = report.pull.unwrap();
+    assert!(
+        pull.queue_wait_secs > 1.0,
+        "queue wait {}s must cover the pynamic backlog",
+        pull.queue_wait_secs
+    );
+    assert!(pull.turnaround_secs > pull.queue_wait_secs);
+    // the fabric-level stats agree
+    let wait = fabric.queue_wait_stats().unwrap();
+    assert!((wait.worst - pull.queue_wait_secs).abs() < 1e-6);
+}
