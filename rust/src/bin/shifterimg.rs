@@ -7,6 +7,9 @@
 //! shifterimg [--system=daint] [--shards=4] cluster-status
 //! shifterimg [--system=daint] [--shards=4] [--nodes=64] [--gpus=1] \
 //!     [--mpi] [--hetero] launch <ref> [cmd...]
+//! shifterimg [--system=daint] [--shards=4] [--nodes=256] [--hetero] \
+//!     [--tenants=8] [--jobs=64] [--arrival-rate=2.4] [--duration=S] \
+//!     [--policy=fair|fifo] [--seed=N] storm
 //! ```
 //!
 //! `cluster-status` drives the distributed fabric (DESIGN.md S18): it
@@ -19,19 +22,53 @@
 //! a worker pool, and the percentile launch report. `--hetero` splits the
 //! node range into a Piz Daint partition and a Linux Cluster partition
 //! (different GPU generations, driver versions and host MPIs).
+//!
+//! `storm` drives the multi-tenant traffic simulator (DESIGN.md S20): a
+//! Poisson stream of competing GPU/MPI/CPU jobs from `--tenants`
+//! simulated users, scheduled with fair-share + conservative backfill
+//! (`--policy=fair`, the default) or strict FIFO (`--policy=fifo`), over
+//! one shared distribution fabric. Prints the per-tenant queue-wait and
+//! stretch percentiles plus the gateway interference summary.
 
 use shifter_rs::distrib::DistributionFabric;
 use shifter_rs::launch::{JobSpec, LaunchCluster, LaunchScheduler};
 use shifter_rs::metrics::Table;
+use shifter_rs::tenancy::{FairShareScheduler, SchedulingPolicy, TrafficModel};
 use shifter_rs::util::cli::CliSpec;
 use shifter_rs::{ImageGateway, Registry, SystemProfile};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: shifterimg [--system=laptop|cluster|daint] [--shards=N] \
-         [--nodes=N] [--gpus=N] [--mpi] [--hetero] \
-         <pull <ref> | images | lookup <ref> | cluster-status | \
-         launch <ref> [cmd...]>"
+        "usage: shifterimg [options] <subcommand>\n\
+         \n\
+         subcommands:\n\
+         \x20 pull <ref>            pull an image through the gateway\n\
+         \x20 images                list registry and gateway images\n\
+         \x20 lookup <ref>          pull (if needed) and print the PFS path\n\
+         \x20 cluster-status        drive the catalog through the sharded\n\
+         \x20                       fabric and print per-shard state\n\
+         \x20 launch <ref> [cmd..]  one cluster-scale containerized job\n\
+         \x20 storm                 multi-tenant job-storm simulation\n\
+         \n\
+         common options:\n\
+         \x20 --system=laptop|cluster|daint   host profile (default daint)\n\
+         \x20 --shards=N                      gateway shards (default 4)\n\
+         \x20 --nodes=N                       cluster width (launch: 64,\n\
+         \x20                                 storm: 256)\n\
+         \x20 --hetero                        split nodes into Piz Daint +\n\
+         \x20                                 Linux Cluster partitions\n\
+         \n\
+         launch options:\n\
+         \x20 --gpus=N              request --gres=gpu:N per node\n\
+         \x20 --mpi                 activate the MPI ABI swap\n\
+         \n\
+         storm options:\n\
+         \x20 --tenants=N           simulated tenants (default 8)\n\
+         \x20 --jobs=N              jobs to synthesize (default 64)\n\
+         \x20 --arrival-rate=R      aggregate arrivals per minute (2.4)\n\
+         \x20 --duration=SECS       stop generating arrivals after SECS\n\
+         \x20 --policy=fair|fifo    queue policy (default fair)\n\
+         \x20 --seed=N              traffic PRNG seed (default 7)"
     );
     std::process::exit(2);
 }
@@ -45,6 +82,12 @@ fn main() {
             ("gpus", true),
             ("mpi", false),
             ("hetero", false),
+            ("tenants", true),
+            ("jobs", true),
+            ("arrival-rate", true),
+            ("duration", true),
+            ("policy", true),
+            ("seed", true),
         ],
         // stop option parsing at the subcommand, so a containerized
         // command like `launch <ref> ls --color` keeps its own flags
@@ -221,6 +264,96 @@ fn main() {
                     eprintln!("shifterimg: {e}");
                     std::process::exit(1);
                 }
+            }
+        }
+        [cmd] if cmd == "storm" => {
+            let shards = parse_shards(&parsed);
+            let nodes: u32 = match parsed.get("nodes").unwrap_or("256").parse()
+            {
+                Ok(n) if n >= 1 => n,
+                _ => {
+                    eprintln!("shifterimg: --nodes must be a positive integer");
+                    usage();
+                }
+            };
+            let tenants: u32 =
+                match parsed.get("tenants").unwrap_or("8").parse() {
+                    Ok(n) if n >= 1 => n,
+                    _ => {
+                        eprintln!(
+                            "shifterimg: --tenants must be a positive integer"
+                        );
+                        usage();
+                    }
+                };
+            let jobs: u32 = match parsed.get("jobs").unwrap_or("64").parse() {
+                Ok(n) if n >= 1 => n,
+                _ => {
+                    eprintln!("shifterimg: --jobs must be a positive integer");
+                    usage();
+                }
+            };
+            let arrival_rate: f64 =
+                match parsed.get("arrival-rate").unwrap_or("2.4").parse() {
+                    Ok(r) if r > 0.0 => r,
+                    _ => {
+                        eprintln!(
+                            "shifterimg: --arrival-rate must be positive"
+                        );
+                        usage();
+                    }
+                };
+            let duration: f64 = match parsed.get("duration") {
+                None => f64::INFINITY,
+                Some(v) => match v.parse() {
+                    Ok(d) if d > 0.0 => d,
+                    _ => {
+                        eprintln!("shifterimg: --duration must be positive");
+                        usage();
+                    }
+                },
+            };
+            let policy = match parsed.get("policy").unwrap_or("fair") {
+                "fair" | "fair-share" => SchedulingPolicy::FairShare,
+                "fifo" => SchedulingPolicy::Fifo,
+                _ => {
+                    eprintln!("shifterimg: --policy must be fair or fifo");
+                    usage();
+                }
+            };
+            let seed: u64 = match parsed.get("seed").unwrap_or("7").parse() {
+                Ok(s) => s,
+                _ => {
+                    eprintln!("shifterimg: --seed must be an integer");
+                    usage();
+                }
+            };
+            let cluster = if parsed.has("hetero") {
+                if nodes < 2 {
+                    eprintln!("shifterimg: --hetero needs --nodes >= 2");
+                    usage();
+                }
+                LaunchCluster::daint_linux_split(nodes)
+            } else {
+                LaunchCluster::homogeneous(&profile, nodes)
+            };
+            let model = TrafficModel {
+                tenants,
+                jobs,
+                arrival_rate_per_min: arrival_rate,
+                duration_secs: duration,
+                max_width: (nodes / 2).max(1),
+                seed,
+                ..TrafficModel::default()
+            };
+            let stream = model.generate(&cluster);
+            let mut fabric = DistributionFabric::new(shards, pfs);
+            let report = FairShareScheduler::new(&cluster, &registry)
+                .with_policy(policy)
+                .run(&mut fabric, &stream);
+            print!("{}", report.render());
+            if report.failed() > 0 {
+                std::process::exit(1);
             }
         }
         _ => usage(),

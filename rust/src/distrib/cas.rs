@@ -13,19 +13,24 @@ use crate::image::Image;
 /// One stored blob: size plus the number of registered images using it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BlobInfo {
+    /// Compressed size of the blob on the store.
     pub bytes: u64,
+    /// Registered images currently referencing the blob.
     pub refcount: u32,
 }
 
 /// Receipt of registering one image: how much was new vs deduplicated.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ImageReceipt {
+    /// Canonical reference of the registered image.
     pub reference: String,
     /// Layers stored for the first time.
     pub new_layers: usize,
     /// Layers that were already present (refcount bumped only).
     pub shared_layers: usize,
+    /// Bytes newly written to the store.
     pub new_bytes: u64,
+    /// Bytes satisfied by blobs already present.
     pub shared_bytes: u64,
 }
 
@@ -41,6 +46,7 @@ pub struct ContentStore {
 }
 
 impl ContentStore {
+    /// Empty store.
     pub fn new() -> ContentStore {
         ContentStore::default()
     }
@@ -77,10 +83,12 @@ impl ContentStore {
         true
     }
 
+    /// Whether a blob with `digest` is currently stored.
     pub fn contains(&self, digest: u64) -> bool {
         self.blobs.contains_key(&digest)
     }
 
+    /// Current reference count of `digest` (0 if unknown).
     pub fn refcount(&self, digest: u64) -> u32 {
         self.blobs.get(&digest).map_or(0, |b| b.refcount)
     }
@@ -115,14 +123,18 @@ impl ContentStore {
         }
     }
 
+    /// Distinct blobs currently stored.
     pub fn blob_count(&self) -> usize {
         self.blobs.len()
     }
 
+    /// Actual bytes on disk (each blob counted once).
     pub fn stored_bytes(&self) -> u64 {
         self.stored_bytes
     }
 
+    /// Bytes naive per-image storage would have cost (blob sizes weighted
+    /// by refcount).
     pub fn logical_bytes(&self) -> u64 {
         self.logical_bytes
     }

@@ -21,18 +21,24 @@ use super::cas::ContentStore;
 
 /// One gateway worker: a synchronous gateway plus its job queue.
 pub struct GatewayShard {
+    /// Shard index in `0..shard_count`.
     pub id: usize,
+    /// The shard's synchronous gateway (where its images materialize).
     pub gateway: ImageGateway,
+    /// The shard's FIFO pull queue (one worker).
     pub queue: PullQueue,
 }
 
 /// Point-in-time view of one shard, for `shifterimg cluster-status`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ShardStatus {
+    /// Shard index.
     pub shard: usize,
     /// Jobs not yet terminal.
     pub backlog: usize,
+    /// Jobs that reached READY.
     pub ready: usize,
+    /// Jobs that reached FAILED.
     pub failed: usize,
     /// Images materialized on this shard's gateway.
     pub images: usize,
@@ -40,6 +46,31 @@ pub struct ShardStatus {
     pub max_queue_wait_secs: f64,
     /// Reference the worker is advancing right now.
     pub active: Option<String>,
+}
+
+/// Cross-job coalescing accounting: every pull request the cluster has
+/// absorbed (across all jobs and launches that ever hit it) vs the unique
+/// pull jobs actually performed. The multi-tenant report surfaces this to
+/// show that N concurrent jobs sharing an image still cost one pull.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CoalescingStats {
+    /// Pull requests received across all shards, absorbed ones included.
+    pub requests: u64,
+    /// Unique pull jobs that exist across all shards (one per distinct
+    /// image reference ever requested).
+    pub jobs: usize,
+}
+
+impl CoalescingStats {
+    /// Requests per job: 1.0 means no sharing at all; N means N
+    /// requesters coalesced onto each pull job on average.
+    pub fn ratio(&self) -> f64 {
+        if self.jobs == 0 {
+            1.0
+        } else {
+            self.requests as f64 / self.jobs as f64
+        }
+    }
 }
 
 /// The cluster.
@@ -68,10 +99,12 @@ impl GatewayCluster {
         }
     }
 
+    /// Number of shards in the cluster.
     pub fn shard_count(&self) -> usize {
         self.shards.len()
     }
 
+    /// Iterate over the shards in id order.
     pub fn shards(&self) -> impl Iterator<Item = &GatewayShard> {
         self.shards.iter()
     }
@@ -151,6 +184,7 @@ impl GatewayCluster {
             .fold(0.0, f64::max)
     }
 
+    /// Current simulated clock (all shard queues tick in lockstep).
     pub fn now(&self) -> f64 {
         self.shards.first().map_or(0.0, |s| s.queue.now())
     }
@@ -171,8 +205,21 @@ impl GatewayCluster {
         self.shards[self.shard_for(&r)].gateway.lookup(reference)
     }
 
+    /// The cluster-wide content-addressed layer store.
     pub fn cas(&self) -> &ContentStore {
         &self.cas
+    }
+
+    /// Coalescing accounting summed over every shard queue.
+    pub fn coalescing(&self) -> CoalescingStats {
+        CoalescingStats {
+            requests: self
+                .shards
+                .iter()
+                .map(|s| s.queue.request_count())
+                .sum(),
+            jobs: self.shards.iter().map(|s| s.queue.jobs().count()).sum(),
+        }
     }
 
     /// Queue-wait (enqueue → worker pickup) distribution across every job
@@ -191,6 +238,7 @@ impl GatewayCluster {
         }
     }
 
+    /// Point-in-time status row per shard (for `cluster-status`).
     pub fn cluster_status(&self) -> Vec<ShardStatus> {
         self.shards
             .iter()
@@ -347,6 +395,33 @@ mod tests {
             .map(|s| s.max_queue_wait_secs)
             .fold(0.0, f64::max);
         assert!((max_wait - stats.worst).abs() < 1e-9);
+    }
+
+    #[test]
+    fn coalescing_accounting_spans_jobs() {
+        let mut cluster = GatewayCluster::new(4, &LustreFs::piz_daint());
+        let registry = Registry::dockerhub();
+        for user in 0..10 {
+            cluster
+                .request(&registry, "ubuntu:xenial", &format!("n{user}"))
+                .unwrap();
+        }
+        cluster.tick(&registry, 1e9);
+        // a later job pulls the same reference again, plus a new one —
+        // the counter keeps accumulating across jobs and drains
+        for user in 0..5 {
+            cluster
+                .request(&registry, "ubuntu:xenial", &format!("m{user}"))
+                .unwrap();
+            cluster
+                .request(&registry, "pynamic:1.3", &format!("m{user}"))
+                .unwrap();
+        }
+        cluster.tick(&registry, 1e9);
+        let c = cluster.coalescing();
+        assert_eq!(c.requests, 20);
+        assert_eq!(c.jobs, 2, "one pull job per unique reference");
+        assert!((c.ratio() - 10.0).abs() < 1e-12);
     }
 
     #[test]

@@ -24,7 +24,7 @@ pub mod cluster;
 pub mod node_cache;
 
 pub use cas::{BlobInfo, ContentStore, ImageReceipt};
-pub use cluster::{GatewayCluster, GatewayShard, ShardStatus};
+pub use cluster::{CoalescingStats, GatewayCluster, GatewayShard, ShardStatus};
 pub use node_cache::{CacheOutcome, NodeCache};
 
 use std::collections::BTreeMap;
@@ -46,13 +46,32 @@ const DRAIN_TICK_SECS: f64 = 1e9;
 /// Aggregated node-cache counters across every node the fabric has seen.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct CacheStats {
+    /// Nodes that have fetched at least once.
     pub nodes: usize,
+    /// Fetches satisfied from a node-local cache.
     pub hits: u64,
+    /// Fetches that paid the Lustre broadcast cold fill.
     pub misses: u64,
+    /// Cache entries evicted under capacity pressure.
     pub evictions: u64,
 }
 
 /// The facade the runtime and CLI talk to.
+///
+/// ```
+/// use shifter_rs::distrib::DistributionFabric;
+/// use shifter_rs::gateway::PullState;
+/// use shifter_rs::pfs::LustreFs;
+/// use shifter_rs::Registry;
+///
+/// let registry = Registry::dockerhub();
+/// let mut fabric = DistributionFabric::new(4, LustreFs::piz_daint());
+/// let state = fabric
+///     .pull_blocking(&registry, "ubuntu:xenial", "alice")
+///     .unwrap();
+/// assert_eq!(state, PullState::Ready);
+/// assert!(fabric.cluster().cas().stored_bytes() > 0);
+/// ```
 pub struct DistributionFabric {
     cluster: GatewayCluster,
     /// Per-node caches, created lazily as nodes first fetch. Mutex (not
@@ -65,6 +84,8 @@ pub struct DistributionFabric {
 }
 
 impl DistributionFabric {
+    /// Fabric with `n_shards` gateway shards over the given parallel
+    /// filesystem and default-sized node caches.
     pub fn new(n_shards: usize, pfs: LustreFs) -> DistributionFabric {
         DistributionFabric {
             cluster: GatewayCluster::new(n_shards, &pfs),
@@ -80,10 +101,12 @@ impl DistributionFabric {
         self
     }
 
+    /// The sharded gateway cluster behind the facade.
     pub fn cluster(&self) -> &GatewayCluster {
         &self.cluster
     }
 
+    /// The parallel filesystem the fabric broadcasts from.
     pub fn pfs(&self) -> &LustreFs {
         &self.pfs
     }
@@ -142,6 +165,15 @@ impl DistributionFabric {
         self.cluster.queue_wait_stats()
     }
 
+    /// Cross-job coalescing accounting (see
+    /// [`cluster::CoalescingStats`]): total pull requests ever absorbed
+    /// vs unique pull jobs performed.
+    pub fn coalescing(&self) -> CoalescingStats {
+        self.cluster.coalescing()
+    }
+
+    /// Aggregated node-cache counters across every node cache the fabric
+    /// has created.
     pub fn cache_stats(&self) -> CacheStats {
         let caches = self.caches.lock().expect("node-cache lock poisoned");
         CacheStats {

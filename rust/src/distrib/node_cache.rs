@@ -15,7 +15,10 @@ pub enum CacheOutcome {
     Hit,
     /// Blob fetched from the PFS and (capacity permitting) admitted,
     /// evicting `evicted` older blobs.
-    Miss { evicted: usize },
+    Miss {
+        /// Older blobs evicted to admit this one.
+        evicted: usize,
+    },
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -33,12 +36,16 @@ pub struct NodeCache {
     clock: u64,
     entries: BTreeMap<u64, CacheEntry>,
     local: NodeLocalFs,
+    /// Fetches satisfied locally.
     pub hits: u64,
+    /// Fetches that had to fill from the PFS.
     pub misses: u64,
+    /// Entries evicted to make room.
     pub evictions: u64,
 }
 
 impl NodeCache {
+    /// Empty cache with `capacity_bytes` of node-local storage.
     pub fn new(capacity_bytes: u64) -> NodeCache {
         NodeCache {
             capacity_bytes,
@@ -52,22 +59,27 @@ impl NodeCache {
         }
     }
 
+    /// Whether the squashfs blob `digest` is resident.
     pub fn contains(&self, digest: u64) -> bool {
         self.entries.contains_key(&digest)
     }
 
+    /// Bytes currently resident.
     pub fn used_bytes(&self) -> u64 {
         self.used_bytes
     }
 
+    /// Configured capacity.
     pub fn capacity_bytes(&self) -> u64 {
         self.capacity_bytes
     }
 
+    /// Resident blob count.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True when nothing is resident.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

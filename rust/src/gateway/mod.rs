@@ -15,12 +15,16 @@ use crate::pfs::LustreFs;
 use crate::registry::{Registry, RegistryError};
 use crate::vfs::SquashFs;
 
+/// What can go wrong between a pull request and a runnable image.
 #[derive(Debug, thiserror::Error)]
 pub enum GatewayError {
+    /// The remote registry rejected the request (unknown image, …).
     #[error(transparent)]
     Registry(#[from] RegistryError),
+    /// The runtime asked for an image nobody pulled yet.
     #[error("image not pulled: {0} (run `shifterimg pull {0}`)")]
     NotPulled(String),
+    /// Layer flattening failed while expanding the image.
     #[error("flatten failed: {0}")]
     Flatten(#[from] crate::vfs::VfsError),
 }
@@ -28,8 +32,11 @@ pub enum GatewayError {
 /// A gateway-processed image, ready for the Runtime.
 #[derive(Debug, Clone)]
 pub struct GatewayImage {
+    /// Parsed image reference (name + tag).
     pub reference: ImageRef,
+    /// Docker-style manifest carried over from the registry.
     pub manifest: ImageManifest,
+    /// The flattened, squashfs-converted filesystem.
     pub squashfs: SquashFs,
     /// PFS path where the squashfs file lives.
     pub pfs_path: String,
@@ -38,16 +45,22 @@ pub struct GatewayImage {
 /// Timing breakdown of one pull (reported by `shifterimg pull`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct PullReport {
+    /// Canonical reference that was pulled.
     pub reference: String,
     /// true if the pull was satisfied from the digest cache.
     pub cached: bool,
+    /// Registry download time (layer-cache-aware).
     pub download_secs: f64,
+    /// Tar expansion + flatten time.
     pub expand_secs: f64,
+    /// mksquashfs conversion time.
     pub convert_secs: f64,
+    /// PFS store time.
     pub store_secs: f64,
 }
 
 impl PullReport {
+    /// End-to-end pull latency (sum of the four stages).
     pub fn total_secs(&self) -> f64 {
         self.download_secs + self.expand_secs + self.convert_secs + self.store_secs
     }
@@ -80,6 +93,19 @@ pub trait ImageSource {
     ) -> Option<f64>;
 }
 
+/// The single synchronous Image Gateway (§III): pulls, flattens,
+/// converts and stores images, then serves lookups to the Runtime.
+///
+/// ```
+/// use shifter_rs::pfs::LustreFs;
+/// use shifter_rs::{ImageGateway, Registry};
+///
+/// let registry = Registry::dockerhub();
+/// let mut gateway = ImageGateway::new(LustreFs::piz_daint());
+/// let report = gateway.pull(&registry, "docker:ubuntu:xenial").unwrap();
+/// assert!(!report.cached && report.total_secs() > 0.0);
+/// assert!(gateway.lookup("ubuntu:xenial").is_ok());
+/// ```
 pub struct ImageGateway {
     images: BTreeMap<ImageRef, GatewayImage>,
     /// Content-addressed layer cache (digests already downloaded).
@@ -88,6 +114,7 @@ pub struct ImageGateway {
 }
 
 impl ImageGateway {
+    /// Gateway storing to (and costing against) the given PFS.
     pub fn new(pfs: LustreFs) -> ImageGateway {
         ImageGateway {
             images: BTreeMap::new(),
@@ -177,6 +204,7 @@ impl ImageGateway {
             .ok_or_else(|| GatewayError::NotPulled(r.canonical()))
     }
 
+    /// The parallel filesystem this gateway stores to.
     pub fn pfs(&self) -> &LustreFs {
         &self.pfs
     }

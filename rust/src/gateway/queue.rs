@@ -18,16 +18,24 @@ use super::{GatewayError, ImageGateway};
 /// Lifecycle of a pull job.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PullState {
+    /// Waiting for the shard worker.
     Enqueued,
+    /// Downloading layers from the registry.
     Pulling,
+    /// Expanding and flattening the layer tars.
     Expanding,
+    /// Converting the flattened tree to squashfs.
     Converting,
+    /// Storing the squashfs on the parallel filesystem.
     Transferring,
+    /// Terminal: the image is materialized and servable.
     Ready,
+    /// Terminal: the pull failed (see `PullJob::error`).
     Failed,
 }
 
 impl PullState {
+    /// CLI-facing uppercase state name.
     pub fn name(&self) -> &'static str {
         match self {
             PullState::Enqueued => "ENQUEUED",
@@ -40,14 +48,18 @@ impl PullState {
         }
     }
 
+    /// Whether the state is final (READY or FAILED).
     pub fn terminal(&self) -> bool {
         matches!(self, PullState::Ready | PullState::Failed)
     }
 }
 
+/// One deduplicated pull job: all requesters of a reference share it.
 #[derive(Debug, Clone)]
 pub struct PullJob {
+    /// The image reference being pulled.
     pub reference: ImageRef,
+    /// Current lifecycle state.
     pub state: PullState,
     /// Users waiting on this job (dedup: all requesters share it), in
     /// arrival order.
@@ -59,6 +71,7 @@ pub struct PullJob {
     remaining: f64,
     /// Per-stage durations, computed at enqueue.
     durations: [f64; 4], // pulling, expanding, converting, transferring
+    /// Why the job failed, when terminal-failed.
     pub error: Option<String>,
     /// Queue clock when the job was first requested.
     pub enqueued_at: f64,
@@ -96,6 +109,9 @@ pub struct PullQueue {
     jobs: BTreeMap<ImageRef, PullJob>,
     fifo: Vec<ImageRef>,
     clock: f64,
+    /// Every `request()` ever made (absorbed ones included) — the
+    /// numerator of the coalescing ratio.
+    requests: u64,
 }
 
 impl Default for PullQueue {
@@ -105,14 +121,17 @@ impl Default for PullQueue {
 }
 
 impl PullQueue {
+    /// Empty queue at simulated time zero.
     pub fn new() -> PullQueue {
         PullQueue {
             jobs: BTreeMap::new(),
             fifo: Vec::new(),
             clock: 0.0,
+            requests: 0,
         }
     }
 
+    /// Current simulated clock.
     pub fn now(&self) -> f64 {
         self.clock
     }
@@ -128,6 +147,7 @@ impl PullQueue {
     ) -> Result<PullState, GatewayError> {
         let r = ImageRef::parse(reference)
             .ok_or_else(|| GatewayError::NotPulled(reference.to_string()))?;
+        self.requests += 1;
         if let Some(job) = self.jobs.get_mut(&r) {
             if job.requester_set.insert(user.to_string()) {
                 job.requesters.push(user.to_string());
@@ -262,6 +282,14 @@ impl PullQueue {
     /// All jobs (terminal and in-flight), in reference order.
     pub fn jobs(&self) -> impl Iterator<Item = &PullJob> {
         self.jobs.values()
+    }
+
+    /// How many `request()` calls this queue has absorbed over its
+    /// lifetime, coalesced or not. Together with `jobs().count()` this
+    /// yields the dedup ratio: N requesters per unique reference collapse
+    /// into one job.
+    pub fn request_count(&self) -> u64 {
+        self.requests
     }
 
     /// Jobs the worker has not finished yet (the shard's backlog depth).

@@ -34,7 +34,9 @@ use crate::hostenv::SystemProfile;
 /// containerized job spanning `nodes` compute nodes.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
+    /// Image reference to launch.
     pub image: String,
+    /// Command to run inside every container.
     pub command: Vec<String>,
     /// srun job width — nodes starting the container simultaneously.
     pub nodes: u32,
@@ -43,11 +45,14 @@ pub struct JobSpec {
     pub gpus_per_node: u32,
     /// `--mpi`: activate the §IV.B library swap on every node.
     pub mpi: bool,
+    /// Numeric uid of the submitting user (drops privileges to this).
     pub invoking_uid: u32,
+    /// Numeric gid of the submitting user.
     pub invoking_gid: u32,
 }
 
 impl JobSpec {
+    /// A plain CPU job: no GRES, no MPI swap, default credentials.
     pub fn new(image: &str, command: &[&str], nodes: u32) -> JobSpec {
         JobSpec {
             image: image.to_string(),
@@ -60,11 +65,13 @@ impl JobSpec {
         }
     }
 
+    /// Request `--gres=gpu:<per_node>` on every node.
     pub fn with_gpus(mut self, per_node: u32) -> JobSpec {
         self.gpus_per_node = per_node;
         self
     }
 
+    /// Activate the §IV.B MPI library swap on every node.
     pub fn with_mpi(mut self) -> JobSpec {
         self.mpi = true;
         self
@@ -86,26 +93,32 @@ pub struct Partition {
 }
 
 impl Partition {
+    /// Partition name (e.g. `daint-xc50`).
     pub fn name(&self) -> &str {
         &self.name
     }
 
+    /// First global node id the partition owns.
     pub fn first_node(&self) -> u32 {
         self.first_node
     }
 
+    /// Number of nodes in the partition.
     pub fn node_count(&self) -> u32 {
         self.node_count
     }
 
+    /// Whether global node id `node` belongs to this partition.
     pub fn contains(&self, node: u32) -> bool {
         node >= self.first_node && node < self.first_node + self.node_count
     }
 
+    /// The partition's (padded) system profile.
     pub fn profile(&self) -> &SystemProfile {
         &self.profile
     }
 
+    /// Shared handle to the profile, for runtimes on worker threads.
     pub fn shared_profile(&self) -> Arc<SystemProfile> {
         Arc::clone(&self.profile)
     }
@@ -119,6 +132,7 @@ pub struct LaunchCluster {
 }
 
 impl LaunchCluster {
+    /// Empty cluster; add partitions with [`Self::with_partition`].
     pub fn new() -> LaunchCluster {
         LaunchCluster::default()
     }
@@ -175,14 +189,17 @@ impl LaunchCluster {
             )
     }
 
+    /// Total nodes across all partitions.
     pub fn total_nodes(&self) -> u32 {
         self.total_nodes
     }
 
+    /// The partitions in global node-id order.
     pub fn partitions(&self) -> &[Partition] {
         &self.partitions
     }
 
+    /// The partition owning global node id `node`, if any.
     pub fn partition_of(&self, node: u32) -> Option<&Partition> {
         self.partitions.iter().find(|p| p.contains(node))
     }

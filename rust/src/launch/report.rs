@@ -34,6 +34,7 @@ pub struct NodeResult {
 }
 
 impl NodeResult {
+    /// True when the container launched on this slot.
     pub fn ok(&self) -> bool {
         self.error.is_none()
     }
@@ -57,9 +58,14 @@ pub struct PullSummary {
 /// What `shifterimg launch` prints and `benches/launch_scale.rs` asserts.
 #[derive(Debug, Clone)]
 pub struct LaunchReport {
+    /// Image the job launched.
     pub image: String,
+    /// Job width the spec asked for.
     pub nodes_requested: u32,
-    /// Per-slot outcomes in global node order.
+    /// Per-slot outcomes, in plan order: ascending global node id for
+    /// [`crate::launch::LaunchScheduler::launch`]; for
+    /// [`crate::launch::LaunchScheduler::launch_on`], the caller's node
+    /// order grouped by partition.
     pub node_results: Vec<NodeResult>,
     /// None when every slot died before the pull phase.
     pub pull: Option<PullSummary>,
@@ -70,10 +76,12 @@ pub struct LaunchReport {
 }
 
 impl LaunchReport {
+    /// Slots whose container launched.
     pub fn succeeded(&self) -> usize {
         self.node_results.iter().filter(|r| r.ok()).count()
     }
 
+    /// Slots that failed (WLM, preflight, pull or container errors).
     pub fn failed(&self) -> usize {
         self.node_results.len() - self.succeeded()
     }
@@ -86,6 +94,7 @@ impl LaunchReport {
             .sum()
     }
 
+    /// Slots that exceeded the straggler threshold at least once.
     pub fn stragglers(&self) -> usize {
         self.node_results.iter().filter(|r| r.straggler).count()
     }

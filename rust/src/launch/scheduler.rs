@@ -35,14 +35,29 @@ use super::{JobSpec, LaunchCluster};
 /// `DistributionFabric::pull_blocking`).
 const PULL_DRAIN_SECS: f64 = 1e9;
 
+/// Whole-job failures: anything that kills the launch before (or while)
+/// slots can be planned. Per-slot failures land in
+/// [`super::report::NodeResult::error`] instead.
 #[derive(Debug, thiserror::Error)]
 pub enum LaunchError {
+    /// The WLM rejected the job outright (e.g. more nodes than exist).
     #[error(transparent)]
     Wlm(#[from] WlmError),
+    /// The coalesced gateway pull did not reach READY.
     #[error("image pull failed for {reference}: {detail}")]
-    Pull { reference: String, detail: String },
+    Pull {
+        /// Image reference that failed to pull.
+        reference: String,
+        /// Terminal gateway error, verbatim.
+        detail: String,
+    },
+    /// The job requested zero nodes.
     #[error("job requests zero nodes")]
     EmptyJob,
+    /// An explicit node set handed to [`LaunchScheduler::launch_on`] is
+    /// inconsistent (wrong length, duplicate or unknown node ids).
+    #[error("invalid node set: {0}")]
+    BadNodeSet(String),
 }
 
 /// Straggler and transient-failure handling knobs.
@@ -92,6 +107,15 @@ struct SlotPlan {
     dead: Option<String>,
 }
 
+/// Drives one [`JobSpec`] across a [`LaunchCluster`] end to end: WLM
+/// allocation, one coalesced fabric pull, per-node stage execution on a
+/// worker pool, aggregation into a [`LaunchReport`].
+///
+/// The scheduler is re-entrant: it holds no per-launch state, so one
+/// instance can run any number of jobs back to back against a shared
+/// [`DistributionFabric`] — the multi-tenant layer (`crate::tenancy`)
+/// does exactly that, placing each job on an explicit node set via
+/// [`LaunchScheduler::launch_on`].
 pub struct LaunchScheduler<'a> {
     cluster: &'a LaunchCluster,
     registry: &'a Registry,
@@ -100,6 +124,8 @@ pub struct LaunchScheduler<'a> {
 }
 
 impl<'a> LaunchScheduler<'a> {
+    /// Scheduler over `cluster`, resolving images against `registry`,
+    /// with the default retry policy and one worker per host core.
     pub fn new(
         cluster: &'a LaunchCluster,
         registry: &'a Registry,
@@ -115,18 +141,21 @@ impl<'a> LaunchScheduler<'a> {
         }
     }
 
+    /// Replace the straggler/retry policy.
     pub fn with_policy(mut self, policy: RetryPolicy) -> LaunchScheduler<'a> {
         assert!(policy.max_attempts >= 1, "at least one attempt per slot");
         self.policy = policy;
         self
     }
 
+    /// Cap the worker-pool width (clamped to at least 1).
     pub fn with_workers(mut self, workers: usize) -> LaunchScheduler<'a> {
         self.workers = workers.max(1);
         self
     }
 
-    /// Drive `spec` across the cluster end to end.
+    /// Drive `spec` across the cluster end to end, filling slots from the
+    /// lowest global node id upward (the classic single-job path).
     pub fn launch(
         &self,
         fabric: &mut DistributionFabric,
@@ -141,9 +170,44 @@ impl<'a> LaunchScheduler<'a> {
                 available: self.cluster.total_nodes(),
             }));
         }
-
         let slots = self.plan_slots(spec);
+        self.run_planned(fabric, spec, slots)
+    }
 
+    /// Drive `spec` on an explicit set of global node ids — the
+    /// re-entrant path a multi-job scheduler uses to place concurrent
+    /// jobs on disjoint node sets over one shared fabric. The node list
+    /// must match `spec.nodes` in length and name each node exactly once;
+    /// nodes may span partitions (each partition's share is allocated
+    /// through its own WLM instance, exactly like [`Self::launch`]).
+    pub fn launch_on(
+        &self,
+        fabric: &mut DistributionFabric,
+        spec: &JobSpec,
+        nodes: &[u32],
+    ) -> Result<LaunchReport, LaunchError> {
+        if spec.nodes == 0 || nodes.is_empty() {
+            return Err(LaunchError::EmptyJob);
+        }
+        if nodes.len() != spec.nodes as usize {
+            return Err(LaunchError::BadNodeSet(format!(
+                "spec requests {} nodes but {} were supplied",
+                spec.nodes,
+                nodes.len()
+            )));
+        }
+        let slots = self.plan_slots_on(spec, nodes)?;
+        self.run_planned(fabric, spec, slots)
+    }
+
+    /// Shared back half of [`Self::launch`] / [`Self::launch_on`]: one
+    /// coalesced pull, then per-node stage execution and aggregation.
+    fn run_planned(
+        &self,
+        fabric: &mut DistributionFabric,
+        spec: &JobSpec,
+        slots: Vec<SlotPlan>,
+    ) -> Result<LaunchReport, LaunchError> {
         // -- one coalesced pull for the whole job -------------------------
         let pull = self.pull_once(fabric, spec, &slots)?;
 
@@ -218,47 +282,105 @@ impl<'a> LaunchScheduler<'a> {
             }
             let take = remaining.min(part.node_count());
             remaining -= take;
-            let dead_all = |reason: String, slots: &mut Vec<SlotPlan>| {
-                for i in 0..take {
-                    slots.push(SlotPlan {
-                        node: part.first_node() + i,
-                        partition: pidx,
-                        env: BTreeMap::new(),
-                        dead: Some(reason.clone()),
-                    });
-                }
-            };
-            let pre = preflight::preflight(part.profile());
-            if !pre.ok() {
-                dead_all(
-                    format!(
-                        "preflight: kernel {} lacks {:?}",
-                        part.profile().kernel,
-                        pre.missing
-                    ),
-                    &mut slots,
-                );
-                continue;
-            }
-            let mut slurm = Slurm::new(part.profile());
-            let ranks = slurm
-                .salloc(take)
-                .and_then(|alloc| slurm.srun(&alloc, take, gres));
-            match ranks {
-                Ok(ranks) => {
-                    for rank in ranks {
-                        slots.push(SlotPlan {
-                            node: part.first_node() + rank.node,
-                            partition: pidx,
-                            env: rank.env,
-                            dead: None,
-                        });
-                    }
-                }
-                Err(e) => dead_all(format!("wlm: {e}"), &mut slots),
-            }
+            let chosen: Vec<u32> =
+                (part.first_node()..part.first_node() + take).collect();
+            self.plan_partition_slots(pidx, &chosen, gres, &mut slots);
         }
         slots
+    }
+
+    /// WLM phase for an explicit node set: validate it, group by
+    /// partition, then allocate each partition's share.
+    fn plan_slots_on(
+        &self,
+        spec: &JobSpec,
+        nodes: &[u32],
+    ) -> Result<Vec<SlotPlan>, LaunchError> {
+        let gres = (spec.gpus_per_node > 0).then_some(GresRequest {
+            gpus_per_node: spec.gpus_per_node,
+        });
+        let mut seen = std::collections::BTreeSet::new();
+        let mut per_part: Vec<Vec<u32>> =
+            vec![Vec::new(); self.cluster.partitions().len()];
+        for &node in nodes {
+            let pidx = self
+                .cluster
+                .partitions()
+                .iter()
+                .position(|p| p.contains(node))
+                .ok_or_else(|| {
+                    LaunchError::BadNodeSet(format!(
+                        "node {node} is outside every partition"
+                    ))
+                })?;
+            if !seen.insert(node) {
+                return Err(LaunchError::BadNodeSet(format!(
+                    "node {node} listed twice"
+                )));
+            }
+            per_part[pidx].push(node);
+        }
+        let mut slots: Vec<SlotPlan> = Vec::with_capacity(nodes.len());
+        for (pidx, chosen) in per_part.iter().enumerate() {
+            if !chosen.is_empty() {
+                self.plan_partition_slots(pidx, chosen, gres, &mut slots);
+            }
+        }
+        Ok(slots)
+    }
+
+    /// Allocate `chosen` (nodes of one partition) via that partition's
+    /// WLM: preflight, salloc, srun-with-GRES. Failures mark only these
+    /// slots dead.
+    fn plan_partition_slots(
+        &self,
+        pidx: usize,
+        chosen: &[u32],
+        gres: Option<GresRequest>,
+        slots: &mut Vec<SlotPlan>,
+    ) {
+        let part = &self.cluster.partitions()[pidx];
+        let take = chosen.len() as u32;
+        let dead_all = |reason: String, slots: &mut Vec<SlotPlan>| {
+            for &node in chosen {
+                slots.push(SlotPlan {
+                    node,
+                    partition: pidx,
+                    env: BTreeMap::new(),
+                    dead: Some(reason.clone()),
+                });
+            }
+        };
+        let pre = preflight::preflight(part.profile());
+        if !pre.ok() {
+            dead_all(
+                format!(
+                    "preflight: kernel {} lacks {:?}",
+                    part.profile().kernel,
+                    pre.missing
+                ),
+                slots,
+            );
+            return;
+        }
+        let mut slurm = Slurm::new(part.profile());
+        let ranks = slurm
+            .salloc(take)
+            .and_then(|alloc| slurm.srun(&alloc, take, gres));
+        match ranks {
+            Ok(ranks) => {
+                for rank in ranks {
+                    slots.push(SlotPlan {
+                        // one task per node: rank.node indexes `chosen`
+                        node: chosen[rank.node as usize],
+                        partition: pidx,
+                        env: rank.env,
+                        dead: None,
+                    });
+                }
+            }
+            Err(e) => dead_all(format!("wlm: {e}"), slots),
+        }
     }
 
     /// Pull phase: every live slot requests the image; the shard queue's
@@ -554,6 +676,60 @@ mod tests {
         assert_eq!(summary.len(), 1);
         assert!(summary[0].0.contains("cold-fill"));
         assert_eq!(summary[0].1, 4);
+    }
+
+    #[test]
+    fn launch_on_places_explicit_node_sets() {
+        let (cluster, registry, mut fabric) = setup(16);
+        let scheduler = LaunchScheduler::new(&cluster, &registry)
+            .with_policy(RetryPolicy::strict());
+        let spec = JobSpec::new("ubuntu:xenial", &["true"], 4);
+        let nodes = [3u32, 7, 8, 15];
+        let report = scheduler.launch_on(&mut fabric, &spec, &nodes).unwrap();
+        assert_eq!(report.succeeded(), 4);
+        let got: Vec<u32> =
+            report.node_results.iter().map(|r| r.node).collect();
+        assert_eq!(got, nodes);
+        assert_eq!(report.cache.misses, 4);
+        // the same nodes relaunch warm — their caches are keyed on the
+        // global ids the explicit set named
+        let warm = scheduler.launch_on(&mut fabric, &spec, &nodes).unwrap();
+        assert_eq!(warm.cache.hits, 4);
+
+        // inconsistent node sets are rejected up front
+        for bad in [
+            &[1u32, 2, 3][..],          // wrong length
+            &[1u32, 1, 2, 3][..],       // duplicate
+            &[1u32, 2, 3, 99][..],      // outside every partition
+        ] {
+            assert!(matches!(
+                scheduler.launch_on(&mut fabric, &spec, bad).unwrap_err(),
+                LaunchError::BadNodeSet(_)
+            ));
+        }
+    }
+
+    #[test]
+    fn launch_on_spans_partitions() {
+        let cluster = LaunchCluster::daint_linux_split(8);
+        let registry = Registry::dockerhub();
+        let mut fabric = DistributionFabric::new(4, LustreFs::piz_daint());
+        let scheduler = LaunchScheduler::new(&cluster, &registry)
+            .with_policy(RetryPolicy::strict());
+        let spec = JobSpec::new("nvidia/cuda-image:8.0", &["deviceQuery"], 4)
+            .with_gpus(1);
+        let report =
+            scheduler.launch_on(&mut fabric, &spec, &[2, 3, 5, 6]).unwrap();
+        assert_eq!(report.succeeded(), 4);
+        let parts: Vec<&str> = report
+            .node_results
+            .iter()
+            .map(|r| r.partition.as_str())
+            .collect();
+        assert_eq!(
+            parts,
+            ["daint-xc50", "daint-xc50", "linux-cluster", "linux-cluster"]
+        );
     }
 
     #[test]

@@ -22,26 +22,50 @@
 //! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and the
 //! containerized applications execute the identical compiled bits natively
 //! and inside Shifter — the paper's performance-portability claim,
-//! reproduced end to end. See DESIGN.md and EXPERIMENTS.md.
+//! reproduced end to end. Repo-level docs: `README.md` (orientation and
+//! quickstart), `DESIGN.md` (S1–S20 architecture), `EXPERIMENTS.md`
+//! (bench → paper-table matrix, knobs, artifacts).
 
+// The rustdoc pass (ISSUE 3) proceeds module by module: `launch`,
+// `distrib`, `gateway` and `tenancy` are fully documented and enforced;
+// the substrate modules below opt out until their own pass lands.
+#![warn(missing_docs)]
+
+#[allow(missing_docs)]
 pub mod apps;
+#[allow(missing_docs)]
 pub mod config;
 pub mod distrib;
+#[allow(missing_docs)]
 pub mod docker;
+#[allow(missing_docs)]
 pub mod fabric;
 pub mod gateway;
+#[allow(missing_docs)]
 pub mod gpu;
+#[allow(missing_docs)]
 pub mod hostenv;
+#[allow(missing_docs)]
 pub mod image;
 pub mod launch;
+#[allow(missing_docs)]
 pub mod metrics;
+#[allow(missing_docs)]
 pub mod mpi;
+#[allow(missing_docs)]
 pub mod pfs;
+#[allow(missing_docs)]
 pub mod registry;
+#[allow(missing_docs)]
 pub mod runtime;
+#[allow(missing_docs)]
 pub mod shifter;
+pub mod tenancy;
+#[allow(missing_docs)]
 pub mod util;
+#[allow(missing_docs)]
 pub mod vfs;
+#[allow(missing_docs)]
 pub mod wlm;
 
 pub use distrib::DistributionFabric;
@@ -50,3 +74,4 @@ pub use hostenv::SystemProfile;
 pub use launch::{JobSpec, LaunchCluster, LaunchReport, LaunchScheduler};
 pub use registry::Registry;
 pub use shifter::{Container, RunOptions, ShifterRuntime};
+pub use tenancy::{FairShareScheduler, TenancyReport, TrafficModel};

@@ -57,6 +57,24 @@ impl Stats {
     }
 }
 
+impl Stats {
+    /// JSON object with the summary fields the `BENCH_*.json` artifacts
+    /// share (`n`, `mean`, `std`, `best`, `worst`, `p50`, `p95`, `p99`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("mean", Json::Num(self.mean)),
+            ("std", Json::Num(self.std)),
+            ("best", Json::Num(self.best)),
+            ("worst", Json::Num(self.worst)),
+            ("p50", Json::Num(self.p50)),
+            ("p95", Json::Num(self.p95)),
+            ("p99", Json::Num(self.p99)),
+        ])
+    }
+}
+
 /// Run `f` for the paper's 30 repetitions and summarize.
 pub fn repeat<F: FnMut(usize) -> f64>(mut f: F) -> Stats {
     repeat_n(PAPER_REPETITIONS, &mut f)
@@ -140,6 +158,15 @@ mod tests {
         assert_eq!(s.best, 5.0);
         assert_eq!(s.p50, 5.0);
         assert_eq!(s.p99, 5.0);
+    }
+
+    #[test]
+    fn stats_serialize_to_json() {
+        let s = Stats::from_samples(&[1.0, 2.0, 3.0]);
+        let j = s.to_json();
+        assert_eq!(j.get("n").unwrap().as_u64(), Some(3));
+        assert_eq!(j.get("worst").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("p50").unwrap().as_f64(), Some(2.0));
     }
 
     #[test]

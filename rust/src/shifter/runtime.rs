@@ -230,6 +230,23 @@ impl Container {
 /// and shareable across worker threads — the launch orchestrator
 /// (`crate::launch`) drives one runtime per partition from a thread pool,
 /// and `run` only ever takes `&self`.
+///
+/// ```
+/// use shifter_rs::pfs::LustreFs;
+/// use shifter_rs::shifter::RunOptions;
+/// use shifter_rs::{ImageGateway, Registry, ShifterRuntime, SystemProfile};
+///
+/// let registry = Registry::dockerhub();
+/// let mut gateway = ImageGateway::new(LustreFs::piz_daint());
+/// gateway.pull(&registry, "ubuntu:xenial").unwrap();
+///
+/// let runtime = ShifterRuntime::new(&SystemProfile::piz_daint());
+/// let container = runtime
+///     .run(&gateway, &RunOptions::new("ubuntu:xenial", &["true"]))
+///     .unwrap();
+/// assert!(container.startup_overhead_secs() > 0.0);
+/// assert!(container.read_file("/etc/os-release").is_some());
+/// ```
 #[derive(Clone)]
 pub struct ShifterRuntime {
     profile: Arc<SystemProfile>,

@@ -1,0 +1,33 @@
+//! Multi-tenant workload layer (DESIGN.md S20): the paper's promise is
+//! that containers let *many independent researchers* deploy software
+//! onto shared supercomputers (§I) — this module actually exercises that
+//! claim at cluster scale, where PR 2's orchestrator launched exactly one
+//! job at a time.
+//!
+//! Three pieces:
+//!
+//! * [`traffic::TrafficModel`] — synthesizes the competing-job stream:
+//!   Poisson arrivals, a tenant population with Zipf-skewed activity, a
+//!   GPU/MPI/CPU class mix, and Zipf-skewed image popularity so the
+//!   distribution fabric's dedup/coalescing is genuinely stressed.
+//! * [`scheduler::FairShareScheduler`] — a discrete-event simulation
+//!   that extends `wlm::` with per-tenant share accounting
+//!   ([`crate::wlm::fairshare::ShareLedger`]), priority aging, and
+//!   conservative backfill over the partition slot map, dispatching each
+//!   placed job through the re-entrant
+//!   [`crate::launch::LaunchScheduler::launch_on`] against one shared
+//!   [`crate::distrib::DistributionFabric`].
+//! * [`report::TenancyReport`] — per-tenant queue-wait/stretch
+//!   percentiles, starvation detection, backfill and cross-job pull
+//!   coalescing accounting, cluster utilization; serialized to
+//!   `BENCH_tenancy.json` by `benches/tenancy_storm.rs`.
+//!
+//! CLI: `shifterimg storm --tenants=8 --jobs=64 --arrival-rate=2.4`.
+
+pub mod report;
+pub mod scheduler;
+pub mod traffic;
+
+pub use report::{JobRecord, TenancyReport, TenantStats};
+pub use scheduler::{FairShareScheduler, SchedulingPolicy};
+pub use traffic::{unique_image_refs, JobClass, TenantJob, TrafficModel, Zipf};

@@ -1,0 +1,468 @@
+//! Multi-tenant storm aggregation (DESIGN.md S20): per-tenant
+//! queue-wait/stretch percentiles, starvation detection, cluster
+//! utilization, backfill accounting, and the gateway-side interference
+//! counters (pull queue waits, cross-job coalescing, node caches) —
+//! rendered for the CLI and serialized as `BENCH_tenancy.json`.
+
+use std::collections::BTreeMap;
+
+use crate::distrib::{CacheStats, CoalescingStats};
+use crate::metrics::{Stats, Table};
+use crate::util::json::Json;
+
+use super::traffic::JobClass;
+
+/// One job's scheduling outcome.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    /// Submission-order id from the traffic stream.
+    pub id: u32,
+    /// Owning tenant name.
+    pub tenant: String,
+    /// Owning tenant index.
+    pub tenant_idx: u32,
+    /// Workload class the job was drawn from.
+    pub class: JobClass,
+    /// Image reference the job launched.
+    pub image: String,
+    /// Node width.
+    pub width: u32,
+    /// Submission time (storm seconds).
+    pub arrival_secs: f64,
+    /// Time the scheduler dispatched the job.
+    pub start_secs: f64,
+    /// Time the job released its nodes.
+    pub end_secs: f64,
+    /// Occupancy duration: application runtime plus measured launch
+    /// overhead (0.0 when the launch failed outright).
+    pub service_secs: f64,
+    /// Queue wait (`start - arrival`).
+    pub wait_secs: f64,
+    /// The job started while a higher-priority job was still blocked —
+    /// it ran in a backfill hole.
+    pub backfilled: bool,
+    /// Node slots that failed inside an otherwise-running job.
+    pub failed_slots: usize,
+    /// Whole-job failure (WLM rejection, pull failure, unschedulable).
+    pub error: Option<String>,
+}
+
+impl JobRecord {
+    /// True when the job launched (individual slots may still have
+    /// failed; see `failed_slots`).
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+    }
+
+    /// Slowdown factor `(wait + service) / service` — 1.0 is a job that
+    /// started the moment it arrived. `None` for failed jobs.
+    pub fn stretch(&self) -> Option<f64> {
+        (self.ok() && self.service_secs > 0.0)
+            .then(|| (self.wait_secs + self.service_secs) / self.service_secs)
+    }
+}
+
+/// Aggregates for one tenant.
+#[derive(Debug, Clone)]
+pub struct TenantStats {
+    /// Tenant name.
+    pub tenant: String,
+    /// Jobs the tenant completed.
+    pub jobs: usize,
+    /// Node-seconds the tenant consumed.
+    pub node_secs: f64,
+    /// Queue-wait distribution over the tenant's completed jobs.
+    pub wait: Stats,
+    /// Stretch distribution over the tenant's completed jobs.
+    pub stretch: Stats,
+}
+
+/// What a multi-tenant storm run produces — the S20 counterpart of the
+/// single-job `LaunchReport`.
+#[derive(Debug, Clone)]
+pub struct TenancyReport {
+    /// Scheduling policy that produced this run (`fifo`, `fair-share`).
+    pub policy: String,
+    /// Cluster width the storm ran on.
+    pub total_nodes: u32,
+    /// Per-job outcomes, in submission order.
+    pub records: Vec<JobRecord>,
+    /// Per-tenant aggregates (tenants with at least one completed job),
+    /// in tenant-name order.
+    pub tenants: Vec<TenantStats>,
+    /// Time from storm start until the last job released its nodes.
+    pub makespan_secs: f64,
+    /// Node-seconds of occupancy summed over all completed jobs.
+    pub busy_node_secs: f64,
+    /// Jobs that started in a backfill hole.
+    pub backfilled_jobs: usize,
+    /// Distinct image references the stream pulled.
+    pub unique_images: usize,
+    /// Cross-job pull coalescing counters from the fabric.
+    pub coalescing: CoalescingStats,
+    /// Gateway queue-wait distribution across all pull jobs (None when
+    /// nothing was ever pulled).
+    pub pull_queue_wait: Option<Stats>,
+    /// Node-cache counters across the fabric after the storm.
+    pub cache: CacheStats,
+}
+
+impl TenancyReport {
+    /// Assemble a report from per-job records plus the fabric-side
+    /// counters captured after the storm drained.
+    pub fn from_records(
+        policy: &str,
+        total_nodes: u32,
+        records: Vec<JobRecord>,
+        coalescing: CoalescingStats,
+        pull_queue_wait: Option<Stats>,
+        cache: CacheStats,
+    ) -> TenancyReport {
+        let makespan_secs = records
+            .iter()
+            .filter(|r| r.ok())
+            .map(|r| r.end_secs)
+            .fold(0.0, f64::max);
+        let busy_node_secs = records
+            .iter()
+            .filter(|r| r.ok())
+            .map(|r| f64::from(r.width) * r.service_secs)
+            .sum();
+        let backfilled_jobs =
+            records.iter().filter(|r| r.ok() && r.backfilled).count();
+        let unique_images = records
+            .iter()
+            .map(|r| r.image.as_str())
+            .collect::<std::collections::BTreeSet<_>>()
+            .len();
+        let mut by_tenant: BTreeMap<&str, Vec<&JobRecord>> = BTreeMap::new();
+        for r in records.iter().filter(|r| r.ok()) {
+            by_tenant.entry(r.tenant.as_str()).or_default().push(r);
+        }
+        let tenants = by_tenant
+            .into_iter()
+            .map(|(tenant, rs)| {
+                let waits: Vec<f64> = rs.iter().map(|r| r.wait_secs).collect();
+                let mut stretches: Vec<f64> =
+                    rs.iter().filter_map(|r| r.stretch()).collect();
+                if stretches.is_empty() {
+                    // zero-service completed jobs only — nothing waited
+                    stretches.push(1.0);
+                }
+                TenantStats {
+                    tenant: tenant.to_string(),
+                    jobs: rs.len(),
+                    node_secs: rs
+                        .iter()
+                        .map(|r| f64::from(r.width) * r.service_secs)
+                        .sum(),
+                    wait: Stats::from_samples(&waits),
+                    stretch: Stats::from_samples(&stretches),
+                }
+            })
+            .collect();
+        TenancyReport {
+            policy: policy.to_string(),
+            total_nodes,
+            records,
+            tenants,
+            makespan_secs,
+            busy_node_secs,
+            backfilled_jobs,
+            unique_images,
+            coalescing,
+            pull_queue_wait,
+            cache,
+        }
+    }
+
+    /// Jobs that launched.
+    pub fn completed(&self) -> usize {
+        self.records.iter().filter(|r| r.ok()).count()
+    }
+
+    /// Jobs that failed outright.
+    pub fn failed(&self) -> usize {
+        self.records.len() - self.completed()
+    }
+
+    /// Fraction of the cluster kept busy over the storm's makespan,
+    /// in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        if self.total_nodes == 0 || self.makespan_secs <= 0.0 {
+            return 0.0;
+        }
+        self.busy_node_secs
+            / (f64::from(self.total_nodes) * self.makespan_secs)
+    }
+
+    /// Worst stretch any completed job saw (1.0 when nothing waited).
+    pub fn max_stretch(&self) -> f64 {
+        self.records
+            .iter()
+            .filter_map(|r| r.stretch())
+            .fold(1.0, f64::max)
+    }
+
+    /// Starvation detection: tenants whose worst stretch exceeds
+    /// `stretch_bound`. An empty result is the bounded-starvation
+    /// guarantee the storm bench asserts.
+    pub fn starved_tenants(&self, stretch_bound: f64) -> Vec<String> {
+        self.tenants
+            .iter()
+            .filter(|t| t.stretch.worst > stretch_bound)
+            .map(|t| t.tenant.clone())
+            .collect()
+    }
+
+    /// Queue-wait distribution over all completed jobs.
+    pub fn wait_stats(&self) -> Option<Stats> {
+        let waits: Vec<f64> = self
+            .records
+            .iter()
+            .filter(|r| r.ok())
+            .map(|r| r.wait_secs)
+            .collect();
+        if waits.is_empty() {
+            None
+        } else {
+            Some(Stats::from_samples(&waits))
+        }
+    }
+
+    /// Render the per-tenant table plus the cluster/gateway summary the
+    /// `shifterimg storm` subcommand prints.
+    pub fn render(&self) -> String {
+        let fmt = |v: f64| format!("{v:.1}s");
+        let mut table = Table::new(
+            &format!(
+                "tenancy storm [{}]: {} jobs ({} ok, {} failed) from {} \
+                 tenants on {} nodes",
+                self.policy,
+                self.records.len(),
+                self.completed(),
+                self.failed(),
+                self.tenants.len(),
+                self.total_nodes
+            ),
+            &[
+                "tenant", "jobs", "node-secs", "wait-p50", "wait-p99",
+                "stretch-p50", "stretch-max",
+            ],
+        );
+        for t in &self.tenants {
+            table.row(&[
+                t.tenant.clone(),
+                t.jobs.to_string(),
+                format!("{:.0}", t.node_secs),
+                fmt(t.wait.p50),
+                fmt(t.wait.p99),
+                format!("{:.2}", t.stretch.p50),
+                format!("{:.2}", t.stretch.worst),
+            ]);
+        }
+        let mut out = table.render();
+        out.push_str(&format!(
+            "cluster: {:.1}% utilization over {:.0}s makespan, {} \
+             backfilled job(s)\n",
+            self.utilization() * 100.0,
+            self.makespan_secs,
+            self.backfilled_jobs,
+        ));
+        out.push_str(&format!(
+            "gateway: {} pull requests coalesced into {} job(s) for {} \
+             unique image(s) ({:.1}x dedup)\n",
+            self.coalescing.requests,
+            self.coalescing.jobs,
+            self.unique_images,
+            self.coalescing.ratio(),
+        ));
+        if let Some(wait) = &self.pull_queue_wait {
+            out.push_str(&format!(
+                "pull interference: queue wait p50 {:.2}s, p99 {:.2}s, \
+                 worst {:.2}s across {} pull job(s)\n",
+                wait.p50, wait.p99, wait.worst, wait.n,
+            ));
+        }
+        out.push_str(&format!(
+            "node caches: {} hits / {} misses / {} evictions on {} nodes\n",
+            self.cache.hits,
+            self.cache.misses,
+            self.cache.evictions,
+            self.cache.nodes,
+        ));
+        out
+    }
+
+    /// JSON shape for `BENCH_tenancy.json` (the CI bench-smoke artifact).
+    pub fn to_json(&self) -> Json {
+        let tenants: Vec<Json> = self
+            .tenants
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("tenant", Json::str(t.tenant.as_str())),
+                    ("jobs", Json::Num(t.jobs as f64)),
+                    ("node_secs", Json::Num(t.node_secs)),
+                    ("wait_secs", t.wait.to_json()),
+                    ("stretch", t.stretch.to_json()),
+                ])
+            })
+            .collect();
+        let jobs: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("id", Json::Num(f64::from(r.id))),
+                    ("tenant", Json::str(r.tenant.as_str())),
+                    ("class", Json::str(r.class.name())),
+                    ("image", Json::str(r.image.as_str())),
+                    ("width", Json::Num(f64::from(r.width))),
+                    ("arrival_secs", Json::Num(r.arrival_secs)),
+                    ("start_secs", Json::Num(r.start_secs)),
+                    ("end_secs", Json::Num(r.end_secs)),
+                    ("wait_secs", Json::Num(r.wait_secs)),
+                    (
+                        "stretch",
+                        r.stretch().map_or(Json::Null, Json::Num),
+                    ),
+                    ("backfilled", Json::Bool(r.backfilled)),
+                    ("ok", Json::Bool(r.ok())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("policy", Json::str(self.policy.as_str())),
+            ("total_nodes", Json::Num(f64::from(self.total_nodes))),
+            ("completed", Json::Num(self.completed() as f64)),
+            ("failed", Json::Num(self.failed() as f64)),
+            ("makespan_secs", Json::Num(self.makespan_secs)),
+            ("busy_node_secs", Json::Num(self.busy_node_secs)),
+            ("utilization", Json::Num(self.utilization())),
+            ("backfilled_jobs", Json::Num(self.backfilled_jobs as f64)),
+            ("max_stretch", Json::Num(self.max_stretch())),
+            ("unique_images", Json::Num(self.unique_images as f64)),
+            (
+                "coalescing",
+                Json::obj(vec![
+                    (
+                        "requests",
+                        Json::Num(self.coalescing.requests as f64),
+                    ),
+                    ("jobs", Json::Num(self.coalescing.jobs as f64)),
+                    ("ratio", Json::Num(self.coalescing.ratio())),
+                ]),
+            ),
+            (
+                "pull_queue_wait",
+                self.pull_queue_wait
+                    .as_ref()
+                    .map_or(Json::Null, |s| s.to_json()),
+            ),
+            (
+                "node_caches",
+                Json::obj(vec![
+                    ("nodes", Json::Num(self.cache.nodes as f64)),
+                    ("hits", Json::Num(self.cache.hits as f64)),
+                    ("misses", Json::Num(self.cache.misses as f64)),
+                    ("evictions", Json::Num(self.cache.evictions as f64)),
+                ]),
+            ),
+            ("tenants", Json::Arr(tenants)),
+            ("jobs", Json::Arr(jobs)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(
+        id: u32,
+        tenant: &str,
+        width: u32,
+        arrival: f64,
+        start: f64,
+        service: f64,
+    ) -> JobRecord {
+        JobRecord {
+            id,
+            tenant: tenant.to_string(),
+            tenant_idx: 0,
+            class: JobClass::Cpu,
+            image: "ubuntu:xenial".to_string(),
+            width,
+            arrival_secs: arrival,
+            start_secs: start,
+            end_secs: start + service,
+            service_secs: service,
+            wait_secs: start - arrival,
+            backfilled: false,
+            failed_slots: 0,
+            error: None,
+        }
+    }
+
+    fn report(records: Vec<JobRecord>) -> TenancyReport {
+        TenancyReport::from_records(
+            "fair-share",
+            16,
+            records,
+            CoalescingStats {
+                requests: 24,
+                jobs: 1,
+            },
+            None,
+            CacheStats::default(),
+        )
+    }
+
+    #[test]
+    fn utilization_and_stretch_roll_up() {
+        // two jobs: 8 nodes x 100s back to back on a 16-node cluster
+        let rep = report(vec![
+            record(0, "a", 8, 0.0, 0.0, 100.0),
+            record(1, "b", 8, 0.0, 100.0, 100.0),
+        ]);
+        assert_eq!(rep.completed(), 2);
+        assert_eq!(rep.makespan_secs, 200.0);
+        // 1600 busy node-secs over 16 * 200 available
+        assert!((rep.utilization() - 0.5).abs() < 1e-12);
+        // job 1 waited 100s for a 100s job: stretch 2.0
+        assert!((rep.max_stretch() - 2.0).abs() < 1e-12);
+        assert_eq!(rep.tenants.len(), 2);
+        assert!(rep.starved_tenants(10.0).is_empty());
+        assert_eq!(rep.starved_tenants(1.5), vec!["b".to_string()]);
+    }
+
+    #[test]
+    fn failed_jobs_are_excluded_from_aggregates() {
+        let mut bad = record(2, "a", 4, 0.0, 0.0, 0.0);
+        bad.error = Some("pull failed".to_string());
+        let rep = report(vec![record(0, "a", 8, 0.0, 0.0, 100.0), bad]);
+        assert_eq!(rep.completed(), 1);
+        assert_eq!(rep.failed(), 1);
+        assert_eq!(rep.tenants[0].jobs, 1);
+        assert_eq!(rep.makespan_secs, 100.0);
+        assert!(rep.render().contains("1 failed"));
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let rep = report(vec![record(0, "a", 8, 0.0, 5.0, 100.0)]);
+        let json = rep.to_json();
+        assert_eq!(json.get("completed").unwrap().as_u64(), Some(1));
+        assert_eq!(
+            json.at(&["coalescing", "jobs"]).unwrap().as_u64(),
+            Some(1)
+        );
+        let back = Json::parse(&json.to_string()).unwrap();
+        assert_eq!(
+            back.get("policy").unwrap().as_str(),
+            Some("fair-share")
+        );
+        assert_eq!(back.get("jobs").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,666 @@
+//! The multi-tenant fair-share backfill scheduler (DESIGN.md S20): a
+//! discrete-event simulation that drives the re-entrant
+//! [`LaunchScheduler`] with a whole stream of competing jobs over one
+//! shared [`DistributionFabric`].
+//!
+//! Event loop: arrivals and completions advance simulated time; at every
+//! event the queue is re-ordered by policy and a scheduling pass decides
+//! who starts *now*:
+//!
+//! * [`SchedulingPolicy::Fifo`] — strict arrival order with head-of-line
+//!   blocking: when the oldest job does not fit, nothing behind it may
+//!   start (the baseline the storm bench compares against).
+//! * [`SchedulingPolicy::FairShare`] — queue ordered by the
+//!   [`ShareLedger`] priority (SLURM-style `2^(-U/S)` fair-share factor
+//!   plus linear aging), with **conservative backfill**: every queued job
+//!   gets a reservation on a count-based availability timeline, and a
+//!   lower-priority job may start early only if its reservation already
+//!   begins now — so backfilling never delays any higher-priority
+//!   reservation. Aging bounds starvation: a waiting job's priority grows
+//!   without bound, while the share term is capped at 1.0.
+//!
+//! Jobs that start in the same pass batch-prefetch their images through
+//! the fabric first, so concurrent distinct references queue behind each
+//! other on the gateway shards (pull-storm interference), while identical
+//! references coalesce into the one existing pull job.
+
+use std::collections::BTreeSet;
+
+use crate::distrib::DistributionFabric;
+use crate::launch::{LaunchCluster, LaunchScheduler, RetryPolicy};
+use crate::registry::Registry;
+use crate::wlm::fairshare::ShareLedger;
+
+use super::report::{JobRecord, TenancyReport};
+use super::traffic::TenantJob;
+
+/// Time-comparison slack for coincident events.
+const EPS: f64 = 1e-9;
+
+/// One blocking drain of the gateway cluster per start batch (same
+/// convention as `DistributionFabric::pull_blocking`).
+const PREFETCH_DRAIN_SECS: f64 = 1e9;
+
+/// Queue-ordering and hole-filling discipline for the storm simulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulingPolicy {
+    /// Strict arrival order, head-of-line blocking, no backfill.
+    Fifo,
+    /// Fair-share + aging priority with conservative backfill.
+    FairShare,
+}
+
+impl SchedulingPolicy {
+    /// Stable name for reports and JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulingPolicy::Fifo => "fifo",
+            SchedulingPolicy::FairShare => "fair-share",
+        }
+    }
+}
+
+/// A job currently occupying nodes.
+struct Running {
+    idx: usize,
+    nodes: Vec<u32>,
+    end_secs: f64,
+}
+
+/// A reservation (or running occupancy) on the count-based availability
+/// timeline: `width` nodes busy over `[start, end)`.
+#[derive(Clone, Copy)]
+struct Interval {
+    start: f64,
+    end: f64,
+    width: u32,
+}
+
+/// The multi-tenant storm scheduler — the `tenancy` entry point.
+///
+/// ```
+/// use shifter_rs::distrib::DistributionFabric;
+/// use shifter_rs::launch::LaunchCluster;
+/// use shifter_rs::pfs::LustreFs;
+/// use shifter_rs::tenancy::{FairShareScheduler, TrafficModel};
+/// use shifter_rs::{Registry, SystemProfile};
+///
+/// let cluster = LaunchCluster::homogeneous(&SystemProfile::piz_daint(), 8);
+/// let registry = Registry::dockerhub();
+/// let mut fabric = DistributionFabric::new(2, LustreFs::piz_daint());
+/// let jobs = TrafficModel {
+///     tenants: 2,
+///     jobs: 5,
+///     max_width: 4,
+///     ..TrafficModel::default()
+/// }
+/// .generate(&cluster);
+/// let report = FairShareScheduler::new(&cluster, &registry)
+///     .run(&mut fabric, &jobs);
+/// assert_eq!(report.completed(), jobs.len());
+/// assert!(report.utilization() > 0.0);
+/// ```
+pub struct FairShareScheduler<'a> {
+    cluster: &'a LaunchCluster,
+    registry: &'a Registry,
+    policy: SchedulingPolicy,
+    aging_per_hour: f64,
+    retry: RetryPolicy,
+}
+
+impl<'a> FairShareScheduler<'a> {
+    /// Fair-share scheduler over `cluster` with default knobs
+    /// (fair-share + backfill policy, aging weight 2.0/hour, strict
+    /// launch retry policy for deterministic per-node timings).
+    pub fn new(
+        cluster: &'a LaunchCluster,
+        registry: &'a Registry,
+    ) -> FairShareScheduler<'a> {
+        FairShareScheduler {
+            cluster,
+            registry,
+            policy: SchedulingPolicy::FairShare,
+            aging_per_hour: 2.0,
+            retry: RetryPolicy::strict(),
+        }
+    }
+
+    /// Select the queue policy (the storm bench runs both on the same
+    /// stream and compares utilization).
+    pub fn with_policy(
+        mut self,
+        policy: SchedulingPolicy,
+    ) -> FairShareScheduler<'a> {
+        self.policy = policy;
+        self
+    }
+
+    /// Priority points one hour of queue wait is worth (only meaningful
+    /// under [`SchedulingPolicy::FairShare`]; must be positive for the
+    /// bounded-starvation guarantee).
+    pub fn with_aging_per_hour(mut self, aging: f64) -> FairShareScheduler<'a> {
+        assert!(aging > 0.0, "aging must be positive to bound starvation");
+        self.aging_per_hour = aging;
+        self
+    }
+
+    /// Straggler/retry policy forwarded to every per-job launch.
+    pub fn with_retry_policy(
+        mut self,
+        retry: RetryPolicy,
+    ) -> FairShareScheduler<'a> {
+        self.retry = retry;
+        self
+    }
+
+    /// Run the whole `jobs` stream to completion over `fabric` and
+    /// aggregate the outcome. Jobs may arrive in any order; the stream is
+    /// processed by arrival time.
+    pub fn run(
+        &self,
+        fabric: &mut DistributionFabric,
+        jobs: &[TenantJob],
+    ) -> TenancyReport {
+        let launcher = LaunchScheduler::new(self.cluster, self.registry)
+            .with_policy(self.retry);
+        let mut order: Vec<usize> = (0..jobs.len()).collect();
+        order.sort_by(|&a, &b| {
+            jobs[a]
+                .arrival_secs
+                .total_cmp(&jobs[b].arrival_secs)
+                .then(a.cmp(&b))
+        });
+
+        let mut next_arrival = 0usize;
+        let mut queue: Vec<usize> = Vec::new();
+        let mut running: Vec<Running> = Vec::new();
+        let mut free: BTreeSet<u32> =
+            (0..self.cluster.total_nodes()).collect();
+        let mut ledger = ShareLedger::new();
+        for j in jobs {
+            ledger.ensure(&j.tenant);
+        }
+        let mut records: Vec<Option<JobRecord>> = vec![None; jobs.len()];
+
+        let mut t = 0.0;
+        while next_arrival < order.len()
+            || !queue.is_empty()
+            || !running.is_empty()
+        {
+            // -- advance to the next event --------------------------------
+            let arrival = (next_arrival < order.len())
+                .then(|| jobs[order[next_arrival]].arrival_secs);
+            let completion = running
+                .iter()
+                .map(|r| r.end_secs)
+                .min_by(f64::total_cmp);
+            t = match (arrival, completion) {
+                (Some(a), Some(c)) => a.min(c),
+                (Some(a), None) => a,
+                (None, Some(c)) => c,
+                // nothing arrives and nothing runs, yet jobs queue: they
+                // can never start (wider than the cluster) — fail them
+                (None, None) => {
+                    for idx in queue.drain(..) {
+                        records[idx] = Some(failed_record(
+                            &jobs[idx],
+                            t,
+                            "unschedulable: wider than the cluster",
+                        ));
+                    }
+                    break;
+                }
+            };
+
+            // -- completions at t -----------------------------------------
+            let mut i = 0;
+            while i < running.len() {
+                if running[i].end_secs <= t + EPS {
+                    let done = running.swap_remove(i);
+                    free.extend(done.nodes);
+                } else {
+                    i += 1;
+                }
+            }
+            // -- arrivals at t --------------------------------------------
+            while next_arrival < order.len()
+                && jobs[order[next_arrival]].arrival_secs <= t + EPS
+            {
+                queue.push(order[next_arrival]);
+                next_arrival += 1;
+            }
+            // -- scheduling pass ------------------------------------------
+            self.schedule_pass(
+                t,
+                jobs,
+                &launcher,
+                fabric,
+                &mut queue,
+                &mut running,
+                &mut free,
+                &mut ledger,
+                &mut records,
+            );
+        }
+
+        let records: Vec<JobRecord> = records
+            .into_iter()
+            .enumerate()
+            .map(|(idx, r)| {
+                r.unwrap_or_else(|| {
+                    failed_record(&jobs[idx], t, "never scheduled")
+                })
+            })
+            .collect();
+        TenancyReport::from_records(
+            self.policy.name(),
+            self.cluster.total_nodes(),
+            records,
+            fabric.coalescing(),
+            fabric.queue_wait_stats(),
+            fabric.cache_stats(),
+        )
+    }
+
+    /// Order the queue by the active policy: FIFO by arrival, fair-share
+    /// by descending ledger priority (ties: older first, then id).
+    fn ordered_queue(
+        &self,
+        t: f64,
+        queue: &[usize],
+        jobs: &[TenantJob],
+        ledger: &ShareLedger,
+    ) -> Vec<usize> {
+        let mut keyed: Vec<(f64, f64, u32, usize)> = queue
+            .iter()
+            .map(|&idx| {
+                let j = &jobs[idx];
+                let prio = match self.policy {
+                    SchedulingPolicy::Fifo => 0.0,
+                    SchedulingPolicy::FairShare => ledger.priority(
+                        &j.tenant,
+                        t - j.arrival_secs,
+                        self.aging_per_hour,
+                    ),
+                };
+                (prio, j.arrival_secs, j.id, idx)
+            })
+            .collect();
+        keyed.sort_by(|a, b| {
+            b.0.total_cmp(&a.0)
+                .then(a.1.total_cmp(&b.1))
+                .then(a.2.cmp(&b.2))
+        });
+        keyed.into_iter().map(|(_, _, _, idx)| idx).collect()
+    }
+
+    /// Decide who starts at time `t` and execute those launches.
+    #[allow(clippy::too_many_arguments)]
+    fn schedule_pass(
+        &self,
+        t: f64,
+        jobs: &[TenantJob],
+        launcher: &LaunchScheduler<'_>,
+        fabric: &mut DistributionFabric,
+        queue: &mut Vec<usize>,
+        running: &mut Vec<Running>,
+        free: &mut BTreeSet<u32>,
+        ledger: &mut ShareLedger,
+        records: &mut [Option<JobRecord>],
+    ) {
+        let capacity = self.cluster.total_nodes();
+        let ordered = self.ordered_queue(t, queue, jobs, ledger);
+
+        // drop jobs that can never run anywhere
+        let mut dropped: BTreeSet<usize> = BTreeSet::new();
+        for &idx in &ordered {
+            if jobs[idx].spec.nodes > capacity {
+                records[idx] = Some(failed_record(
+                    &jobs[idx],
+                    t,
+                    "unschedulable: wider than the cluster",
+                ));
+                dropped.insert(idx);
+            }
+        }
+
+        // plan: who starts now, and was it a backfill?
+        let mut to_start: Vec<(usize, bool)> = Vec::new();
+        match self.policy {
+            SchedulingPolicy::Fifo => {
+                let mut avail = free.len() as u32;
+                for &idx in &ordered {
+                    if dropped.contains(&idx) {
+                        continue;
+                    }
+                    let width = jobs[idx].spec.nodes;
+                    if width > avail {
+                        break; // head-of-line blocking
+                    }
+                    avail -= width;
+                    to_start.push((idx, false));
+                }
+            }
+            SchedulingPolicy::FairShare => {
+                // count-based availability timeline seeded with the
+                // currently running jobs
+                let mut resv: Vec<Interval> = running
+                    .iter()
+                    .map(|r| Interval {
+                        start: t,
+                        end: r.end_secs,
+                        width: jobs[r.idx].spec.nodes,
+                    })
+                    .collect();
+                let mut blocked_seen = false;
+                for &idx in &ordered {
+                    if dropped.contains(&idx) {
+                        continue;
+                    }
+                    let width = jobs[idx].spec.nodes;
+                    // estimated occupancy: the synthetic runtime (launch
+                    // overhead is seconds against minutes and every pass
+                    // recomputes from actual completions)
+                    let est = jobs[idx].runtime_secs.max(1.0);
+                    let tau = earliest_start(t, est, width, capacity, &resv);
+                    resv.push(Interval {
+                        start: tau,
+                        end: tau + est,
+                        width,
+                    });
+                    if tau <= t + EPS {
+                        to_start.push((idx, blocked_seen));
+                    } else {
+                        blocked_seen = true;
+                    }
+                }
+            }
+        }
+        queue.retain(|idx| {
+            !dropped.contains(idx)
+                && !to_start.iter().any(|(s, _)| s == idx)
+        });
+        if to_start.is_empty() {
+            return;
+        }
+
+        // batch-prefetch every image starting this pass, so concurrent
+        // distinct references contend on the shard queues while identical
+        // ones coalesce — then drain once
+        for &(idx, _) in &to_start {
+            let j = &jobs[idx];
+            let _ = fabric.request(
+                self.registry,
+                &j.spec.image,
+                &format!("{}-job-{:04}", j.tenant, j.id),
+            );
+        }
+        fabric.tick(self.registry, PREFETCH_DRAIN_SECS);
+
+        // execute the launches on explicit node sets
+        for (idx, backfilled) in to_start {
+            let j = &jobs[idx];
+            let width = j.spec.nodes as usize;
+            let nodes: Vec<u32> = free.iter().copied().take(width).collect();
+            debug_assert_eq!(nodes.len(), width, "planner over-committed");
+            for n in &nodes {
+                free.remove(n);
+            }
+            match launcher.launch_on(fabric, &j.spec, &nodes) {
+                Ok(launch) => {
+                    let overhead =
+                        launch.total_stats().map_or(0.0, |s| s.worst);
+                    let service = j.runtime_secs + overhead;
+                    ledger.charge(&j.tenant, f64::from(j.spec.nodes) * service);
+                    records[idx] = Some(JobRecord {
+                        id: j.id,
+                        tenant: j.tenant.clone(),
+                        tenant_idx: j.tenant_idx,
+                        class: j.class,
+                        image: j.spec.image.clone(),
+                        width: j.spec.nodes,
+                        arrival_secs: j.arrival_secs,
+                        start_secs: t,
+                        end_secs: t + service,
+                        service_secs: service,
+                        wait_secs: t - j.arrival_secs,
+                        backfilled,
+                        failed_slots: launch.failed(),
+                        error: None,
+                    });
+                    running.push(Running {
+                        idx,
+                        nodes,
+                        end_secs: t + service,
+                    });
+                }
+                Err(e) => {
+                    free.extend(nodes);
+                    records[idx] =
+                        Some(failed_record(j, t, &e.to_string()));
+                }
+            }
+        }
+    }
+}
+
+/// Earliest `tau >= t` at which `width` nodes are continuously free for
+/// `est` seconds, given the reservation timeline. Candidates are `t` and
+/// every reservation end; after the last reservation the cluster is
+/// empty, so a fitting candidate always exists (given `width <=
+/// capacity`).
+fn earliest_start(
+    t: f64,
+    est: f64,
+    width: u32,
+    capacity: u32,
+    resv: &[Interval],
+) -> f64 {
+    let mut candidates: Vec<f64> = vec![t];
+    candidates.extend(resv.iter().map(|r| r.end).filter(|e| *e > t));
+    candidates.sort_by(f64::total_cmp);
+    let used_at = |p: f64| -> u32 {
+        resv.iter()
+            .filter(|r| r.start <= p + EPS && r.end > p + EPS)
+            .map(|r| r.width)
+            .sum()
+    };
+    candidates
+        .into_iter()
+        .find(|&tau| {
+            let window_end = tau + est;
+            let mut points: Vec<f64> = vec![tau];
+            points.extend(
+                resv.iter()
+                    .map(|r| r.start)
+                    .filter(|s| *s > tau && *s < window_end),
+            );
+            points.into_iter().all(|p| used_at(p) + width <= capacity)
+        })
+        .expect("the empty tail of the timeline always fits")
+}
+
+/// A record for a job that never launched.
+fn failed_record(job: &TenantJob, t: f64, reason: &str) -> JobRecord {
+    JobRecord {
+        id: job.id,
+        tenant: job.tenant.clone(),
+        tenant_idx: job.tenant_idx,
+        class: job.class,
+        image: job.spec.image.clone(),
+        width: job.spec.nodes,
+        arrival_secs: job.arrival_secs,
+        start_secs: t,
+        end_secs: t,
+        service_secs: 0.0,
+        wait_secs: t - job.arrival_secs,
+        backfilled: false,
+        failed_slots: job.spec.nodes as usize,
+        error: Some(reason.to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hostenv::SystemProfile;
+    use crate::launch::JobSpec;
+    use crate::pfs::LustreFs;
+    use crate::tenancy::traffic::JobClass;
+
+    fn job(
+        id: u32,
+        tenant: u32,
+        arrival: f64,
+        width: u32,
+        runtime: f64,
+    ) -> TenantJob {
+        TenantJob {
+            id,
+            tenant: format!("tenant-{tenant:02}"),
+            tenant_idx: tenant,
+            arrival_secs: arrival,
+            runtime_secs: runtime,
+            class: JobClass::Cpu,
+            spec: JobSpec::new("ubuntu:xenial", &["true"], width),
+        }
+    }
+
+    fn setup(nodes: u32) -> (LaunchCluster, Registry, DistributionFabric) {
+        (
+            LaunchCluster::homogeneous(&SystemProfile::piz_daint(), nodes),
+            Registry::dockerhub(),
+            DistributionFabric::new(2, LustreFs::piz_daint()),
+        )
+    }
+
+    #[test]
+    fn empty_stream_yields_empty_report() {
+        let (cluster, registry, mut fabric) = setup(4);
+        let report = FairShareScheduler::new(&cluster, &registry)
+            .run(&mut fabric, &[]);
+        assert_eq!(report.completed(), 0);
+        assert_eq!(report.utilization(), 0.0);
+    }
+
+    #[test]
+    fn uncontended_jobs_start_on_arrival() {
+        let (cluster, registry, mut fabric) = setup(16);
+        let jobs =
+            vec![job(0, 0, 0.0, 4, 100.0), job(1, 1, 10.0, 4, 100.0)];
+        let report = FairShareScheduler::new(&cluster, &registry)
+            .run(&mut fabric, &jobs);
+        assert_eq!(report.completed(), 2);
+        for r in &report.records {
+            assert!(r.wait_secs < EPS, "job {} waited {}", r.id, r.wait_secs);
+            assert!(!r.backfilled);
+        }
+        assert!((report.max_stretch() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fifo_blocks_head_of_line_but_backfill_fills_the_hole() {
+        // 8 nodes. Job 0 takes 6 of them for 1000s. Job 1 (width 8) must
+        // wait for the whole machine. Job 2 (width 2, 100s) arrives last:
+        // FIFO blocks it behind job 1; conservative backfill starts it in
+        // the 2-node hole immediately, because it finishes long before
+        // job 1's reservation and so cannot delay it.
+        let jobs = vec![
+            job(0, 0, 0.0, 6, 1000.0),
+            job(1, 1, 1.0, 8, 1000.0),
+            job(2, 2, 2.0, 2, 100.0),
+        ];
+        let run = |policy: SchedulingPolicy| {
+            let (cluster, registry, mut fabric) = setup(8);
+            FairShareScheduler::new(&cluster, &registry)
+                .with_policy(policy)
+                .run(&mut fabric, &jobs)
+        };
+        let fifo = run(SchedulingPolicy::Fifo);
+        let fair = run(SchedulingPolicy::FairShare);
+        assert_eq!(fifo.completed(), 3);
+        assert_eq!(fair.completed(), 3);
+
+        let fifo_j2 = &fifo.records[2];
+        let fair_j2 = &fair.records[2];
+        // FIFO: job 2 waits for both wide jobs
+        assert!(fifo_j2.start_secs > 1900.0, "{}", fifo_j2.start_secs);
+        assert!(!fifo_j2.backfilled);
+        assert_eq!(fifo.backfilled_jobs, 0);
+        // backfill: job 2 rides along during job 0 or job 1, well before
+        // the second wide job completes
+        assert!(fair_j2.start_secs < 1100.0, "{}", fair_j2.start_secs);
+        assert!(fair_j2.backfilled);
+        assert_eq!(fair.backfilled_jobs, 1);
+        // and the backfilled run never delays the reserved wide job
+        assert!(
+            fair.records[1].start_secs <= fifo.records[1].start_secs + 1.0
+        );
+        // total work is identical, so the shorter makespan means higher
+        // utilization
+        assert!(fair.makespan_secs <= fifo.makespan_secs + EPS);
+        assert!(fair.utilization() >= fifo.utilization() - 1e-12);
+    }
+
+    #[test]
+    fn fair_share_prefers_the_light_tenant() {
+        // tenant 0 hogs the machine first; then one job from the hog and
+        // one from an idle tenant wait together — the idle tenant's job
+        // must start first even though it arrived later
+        let jobs = vec![
+            job(0, 0, 0.0, 8, 500.0),
+            job(1, 0, 1.0, 8, 100.0),
+            job(2, 1, 2.0, 8, 100.0),
+        ];
+        let (cluster, registry, mut fabric) = setup(8);
+        let report = FairShareScheduler::new(&cluster, &registry)
+            .run(&mut fabric, &jobs);
+        assert_eq!(report.completed(), 3);
+        let hog_second = &report.records[1];
+        let light = &report.records[2];
+        assert!(
+            light.start_secs < hog_second.start_secs,
+            "light tenant {} must beat the hog's second job {}",
+            light.start_secs,
+            hog_second.start_secs
+        );
+    }
+
+    #[test]
+    fn impossible_width_fails_instead_of_wedging() {
+        let (cluster, registry, mut fabric) = setup(4);
+        let jobs = vec![job(0, 0, 0.0, 64, 100.0), job(1, 1, 1.0, 2, 50.0)];
+        let report = FairShareScheduler::new(&cluster, &registry)
+            .run(&mut fabric, &jobs);
+        assert_eq!(report.completed(), 1);
+        assert_eq!(report.failed(), 1);
+        let wide = &report.records[0];
+        assert!(wide
+            .error
+            .as_deref()
+            .unwrap()
+            .contains("wider than the cluster"));
+    }
+
+    #[test]
+    fn shared_images_coalesce_across_concurrent_jobs() {
+        // four jobs, two distinct images, all start in the same pass
+        let (cluster, registry, mut fabric) = setup(16);
+        let mut jobs: Vec<TenantJob> = (0..4)
+            .map(|i| job(i, i, 0.0, 4, 100.0))
+            .collect();
+        jobs[1].spec.image = "pyfr-image:1.5.0".to_string();
+        jobs[3].spec.image = "pyfr-image:1.5.0".to_string();
+        let report = FairShareScheduler::new(&cluster, &registry)
+            .run(&mut fabric, &jobs);
+        assert_eq!(report.completed(), 4);
+        assert_eq!(report.unique_images, 2);
+        assert_eq!(
+            report.coalescing.jobs, 2,
+            "exactly one pull job per unique image reference"
+        );
+        // exact request accounting: one batch-prefetch per job plus one
+        // request per node slot (4 jobs x 4 slots), all onto two jobs
+        assert_eq!(report.coalescing.requests, 4 + 16);
+    }
+}

@@ -1,0 +1,411 @@
+//! Synthetic multi-tenant traffic (DESIGN.md S20): Poisson job arrivals
+//! from a population of simulated tenants, with a configurable mix of
+//! GPU/MPI/CPU job classes, Zipf-skewed tenant activity (a few heavy
+//! users, a long tail), and Zipf-skewed image popularity — the shape that
+//! actually stresses the distribution fabric's dedup and coalescing.
+//!
+//! Everything is keyed on the deterministic [`crate::util::prng::Rng`], so
+//! a `(TrafficModel, seed)` pair regenerates the identical job stream on
+//! every run — the property the FIFO-vs-backfill comparison in
+//! `benches/tenancy_storm.rs` depends on.
+
+use std::collections::BTreeSet;
+
+use crate::launch::{JobSpec, LaunchCluster};
+use crate::util::prng::Rng;
+
+/// Workload class of a synthesized job — decides the image catalog and
+/// the GPU/MPI launch flags.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobClass {
+    /// Plain CPU container (no GRES, no MPI swap).
+    Cpu,
+    /// CUDA container launched with `--gres=gpu:1` (§IV.A).
+    Gpu,
+    /// MPI container launched with `--mpi` (§IV.B ABI swap).
+    Mpi,
+}
+
+impl JobClass {
+    /// Stable lowercase name for reports and JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobClass::Cpu => "cpu",
+            JobClass::Gpu => "gpu",
+            JobClass::Mpi => "mpi",
+        }
+    }
+}
+
+/// Images each class draws from, most popular rank first. Every entry is
+/// in `Registry::dockerhub()` and launches cleanly on both stock
+/// partitions (the MPI entries are all MPICH-ABI members, so the §IV.B
+/// swap succeeds against Cray MPT and MVAPICH2 hosts alike).
+const CPU_IMAGES: [&str; 3] =
+    ["ubuntu:xenial", "pynamic:1.3", "pyfr-image:1.5.0"];
+const GPU_IMAGES: [&str; 2] = [
+    "nvidia/cuda-image:8.0",
+    "tensorflow/tensorflow:1.0.0-devel-gpu-py3",
+];
+const MPI_IMAGES: [&str; 3] = [
+    "osu-benchmarks:mpich-3.1.4",
+    "osu-benchmarks:mvapich2-2.2",
+    "osu-benchmarks:intelmpi-2017.1",
+];
+
+/// Zipf(s) sampler over ranks `0..n`: rank `r` is drawn with probability
+/// proportional to `1/(r+1)^s`. `s = 0` is uniform; larger `s`
+/// concentrates mass on the low ranks.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Sampler over `n >= 1` ranks with skew exponent `s >= 0`.
+    pub fn new(n: usize, s: f64) -> Zipf {
+        assert!(n >= 1, "zipf needs at least one rank");
+        assert!(s >= 0.0, "zipf skew must be non-negative");
+        let weights: Vec<f64> =
+            (0..n).map(|r| 1.0 / ((r + 1) as f64).powf(s)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        let cdf = weights
+            .iter()
+            .map(|w| {
+                acc += w / total;
+                acc
+            })
+            .collect();
+        Zipf { cdf }
+    }
+
+    /// Number of ranks.
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Always false (the constructor requires at least one rank).
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Draw one rank in `0..len()`.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.uniform();
+        self.cdf
+            .iter()
+            .position(|c| u < *c)
+            .unwrap_or(self.cdf.len() - 1)
+    }
+}
+
+/// One synthesized job: who submits it, when, and what it launches.
+#[derive(Debug, Clone)]
+pub struct TenantJob {
+    /// Submission-order id, unique within one generated stream.
+    pub id: u32,
+    /// Owning tenant name (`tenant-00` …).
+    pub tenant: String,
+    /// Owning tenant index in `0..TrafficModel::tenants`.
+    pub tenant_idx: u32,
+    /// Simulated submission time, seconds from the start of the storm.
+    pub arrival_secs: f64,
+    /// Application runtime once the container is up (the scheduler adds
+    /// the measured launch overhead on top).
+    pub runtime_secs: f64,
+    /// Workload class the job was drawn from.
+    pub class: JobClass,
+    /// The launchable spec: image, command, width, GPU/MPI flags.
+    pub spec: JobSpec,
+}
+
+/// Generator for a multi-tenant job stream.
+///
+/// All fields are public so call sites can literal-update a default
+/// (`TrafficModel { tenants: 16, ..TrafficModel::default() }`).
+#[derive(Debug, Clone)]
+pub struct TrafficModel {
+    /// Number of simulated tenants.
+    pub tenants: u32,
+    /// Number of jobs to synthesize (the stream may stop earlier if
+    /// `duration_secs` is exceeded first).
+    pub jobs: u32,
+    /// Aggregate Poisson arrival rate, jobs per minute.
+    pub arrival_rate_per_min: f64,
+    /// Stop generating once arrivals pass this horizon (seconds).
+    /// `f64::INFINITY` disables the cap.
+    pub duration_secs: f64,
+    /// Zipf skew over tenant activity (0 = all tenants equally active).
+    pub tenant_skew: f64,
+    /// Zipf skew over each class's image catalog (0 = uniform).
+    pub image_skew: f64,
+    /// Widths are powers of two in `1..=max_width` (clamped to the
+    /// cluster size at generation time).
+    pub max_width: u32,
+    /// Mean application runtime in seconds (lognormal around this).
+    pub mean_runtime_secs: f64,
+    /// Floor on the sampled runtime.
+    pub min_runtime_secs: f64,
+    /// Lognormal sigma of the runtime distribution.
+    pub runtime_sigma: f64,
+    /// Relative weight of CPU-class jobs in the mix.
+    pub cpu_weight: f64,
+    /// Relative weight of GPU-class jobs in the mix.
+    pub gpu_weight: f64,
+    /// Relative weight of MPI-class jobs in the mix.
+    pub mpi_weight: f64,
+    /// PRNG seed: same seed, same stream.
+    pub seed: u64,
+}
+
+impl Default for TrafficModel {
+    fn default() -> TrafficModel {
+        TrafficModel {
+            tenants: 8,
+            jobs: 64,
+            arrival_rate_per_min: 2.4,
+            duration_secs: f64::INFINITY,
+            tenant_skew: 1.0,
+            image_skew: 1.1,
+            max_width: 512,
+            mean_runtime_secs: 600.0,
+            min_runtime_secs: 60.0,
+            runtime_sigma: 0.6,
+            cpu_weight: 0.5,
+            gpu_weight: 0.3,
+            mpi_weight: 0.2,
+            seed: 7,
+        }
+    }
+}
+
+impl TrafficModel {
+    /// Synthesize the job stream for `cluster`, sorted by arrival time.
+    ///
+    /// Widths are clamped so every job fits the cluster; the per-class
+    /// image catalogs only name images that launch successfully on the
+    /// stock profiles, so a generated stream runs to completion.
+    pub fn generate(&self, cluster: &LaunchCluster) -> Vec<TenantJob> {
+        assert!(self.tenants >= 1, "need at least one tenant");
+        assert!(
+            self.arrival_rate_per_min > 0.0,
+            "arrival rate must be positive"
+        );
+        let class_total = self.cpu_weight + self.gpu_weight + self.mpi_weight;
+        assert!(class_total > 0.0, "job mix weights must sum positive");
+
+        let mut rng =
+            Rng::from_tags(&["tenancy-traffic", &self.seed.to_string()]);
+        let tenant_zipf = Zipf::new(self.tenants as usize, self.tenant_skew);
+        let cpu_zipf = Zipf::new(CPU_IMAGES.len(), self.image_skew);
+        let gpu_zipf = Zipf::new(GPU_IMAGES.len(), self.image_skew);
+        let mpi_zipf = Zipf::new(MPI_IMAGES.len(), self.image_skew);
+
+        let max_width = self.max_width.min(cluster.total_nodes()).max(1);
+        let log2_max = 31 - max_width.leading_zeros(); // floor(log2)
+        let rate_per_sec = self.arrival_rate_per_min / 60.0;
+
+        let mut t = 0.0;
+        let mut out: Vec<TenantJob> = Vec::with_capacity(self.jobs as usize);
+        for id in 0..self.jobs {
+            // exponential inter-arrival; 1 - U is in (0, 1]
+            t += -(1.0 - rng.uniform()).ln() / rate_per_sec;
+            if t > self.duration_secs {
+                break;
+            }
+            let tenant_idx = tenant_zipf.sample(&mut rng) as u32;
+            let class = {
+                let x = rng.uniform() * class_total;
+                if x < self.cpu_weight {
+                    JobClass::Cpu
+                } else if x < self.cpu_weight + self.gpu_weight {
+                    JobClass::Gpu
+                } else {
+                    JobClass::Mpi
+                }
+            };
+            let image = match class {
+                JobClass::Cpu => CPU_IMAGES[cpu_zipf.sample(&mut rng)],
+                JobClass::Gpu => GPU_IMAGES[gpu_zipf.sample(&mut rng)],
+                JobClass::Mpi => MPI_IMAGES[mpi_zipf.sample(&mut rng)],
+            };
+            let width = 1u32 << rng.below(u64::from(log2_max) + 1);
+            let runtime = (self.mean_runtime_secs
+                * rng.lognormal_noise(self.runtime_sigma))
+            .max(self.min_runtime_secs);
+            let mut spec = match class {
+                JobClass::Cpu => JobSpec::new(image, &["true"], width),
+                JobClass::Gpu => {
+                    JobSpec::new(image, &["deviceQuery"], width).with_gpus(1)
+                }
+                JobClass::Mpi => {
+                    JobSpec::new(image, &["true"], width).with_mpi()
+                }
+            };
+            spec.invoking_uid = 1000 + tenant_idx;
+            spec.invoking_gid = 1000 + tenant_idx;
+            out.push(TenantJob {
+                id,
+                tenant: format!("tenant-{tenant_idx:02}"),
+                tenant_idx,
+                arrival_secs: t,
+                runtime_secs: runtime,
+                class,
+                spec,
+            });
+        }
+        out
+    }
+}
+
+/// Distinct image references a job stream pulls — the denominator of the
+/// "exactly one pull job per unique reference" acceptance check.
+pub fn unique_image_refs(jobs: &[TenantJob]) -> BTreeSet<String> {
+    jobs.iter().map(|j| j.spec.image.clone()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hostenv::SystemProfile;
+
+    fn cluster() -> LaunchCluster {
+        LaunchCluster::homogeneous(&SystemProfile::piz_daint(), 64)
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let model = TrafficModel::default();
+        let a = model.generate(&cluster());
+        let b = model.generate(&cluster());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.spec.image, y.spec.image);
+            assert_eq!(x.arrival_secs, y.arrival_secs);
+            assert_eq!(x.runtime_secs, y.runtime_secs);
+        }
+        // a different seed produces a different stream
+        let c = TrafficModel {
+            seed: 8,
+            ..TrafficModel::default()
+        }
+        .generate(&cluster());
+        assert!(a
+            .iter()
+            .zip(&c)
+            .any(|(x, y)| x.arrival_secs != y.arrival_secs));
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_widths_fit() {
+        let jobs = TrafficModel::default().generate(&cluster());
+        assert_eq!(jobs.len(), 64);
+        let mut last = 0.0;
+        for j in &jobs {
+            assert!(j.arrival_secs >= last);
+            last = j.arrival_secs;
+            assert!((1..=64).contains(&j.spec.nodes));
+            assert!(j.spec.nodes.is_power_of_two());
+            assert!(j.runtime_secs >= 60.0);
+        }
+    }
+
+    #[test]
+    fn class_flags_match_the_class() {
+        let jobs = TrafficModel {
+            jobs: 200,
+            ..TrafficModel::default()
+        }
+        .generate(&cluster());
+        let mut seen = [false; 3];
+        for j in &jobs {
+            match j.class {
+                JobClass::Cpu => {
+                    seen[0] = true;
+                    assert_eq!(j.spec.gpus_per_node, 0);
+                    assert!(!j.spec.mpi);
+                }
+                JobClass::Gpu => {
+                    seen[1] = true;
+                    assert_eq!(j.spec.gpus_per_node, 1);
+                    assert!(!j.spec.mpi);
+                }
+                JobClass::Mpi => {
+                    seen[2] = true;
+                    assert!(j.spec.mpi);
+                    assert!(j.spec.image.starts_with("osu-benchmarks:"));
+                }
+            }
+            // tenant identity propagates into the launch credentials
+            assert_eq!(j.spec.invoking_uid, 1000 + j.tenant_idx);
+        }
+        assert!(seen.iter().all(|s| *s), "200 jobs must hit every class");
+    }
+
+    #[test]
+    fn tenant_skew_concentrates_activity() {
+        let jobs = TrafficModel {
+            jobs: 300,
+            tenant_skew: 1.2,
+            ..TrafficModel::default()
+        }
+        .generate(&cluster());
+        let count = |idx: u32| {
+            jobs.iter().filter(|j| j.tenant_idx == idx).count()
+        };
+        assert!(
+            count(0) > count(7) * 2,
+            "rank-0 tenant must dominate the tail: {} vs {}",
+            count(0),
+            count(7)
+        );
+    }
+
+    #[test]
+    fn image_popularity_is_skewed_for_dedup() {
+        let jobs = TrafficModel {
+            jobs: 300,
+            ..TrafficModel::default()
+        }
+        .generate(&cluster());
+        let unique = unique_image_refs(&jobs);
+        assert!(unique.len() >= 4, "the mix must exercise several images");
+        assert!(
+            (unique.len() as u32) < 300,
+            "many jobs share few images — dedup is exercised"
+        );
+    }
+
+    #[test]
+    fn duration_cap_truncates_the_stream() {
+        let full = TrafficModel::default().generate(&cluster());
+        let capped = TrafficModel {
+            duration_secs: full[10].arrival_secs,
+            ..TrafficModel::default()
+        }
+        .generate(&cluster());
+        assert_eq!(capped.len(), 11, "arrivals after the horizon are cut");
+    }
+
+    #[test]
+    fn zipf_rank_zero_dominates() {
+        let z = Zipf::new(10, 1.0);
+        assert_eq!(z.len(), 10);
+        let mut rng = Rng::new(3);
+        let mut counts = [0usize; 10];
+        for _ in 0..10_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[9] * 3);
+        // uniform when s = 0
+        let u = Zipf::new(4, 0.0);
+        let mut counts = [0usize; 4];
+        for _ in 0..10_000 {
+            counts[u.sample(&mut rng)] += 1;
+        }
+        assert!(counts.iter().all(|c| *c > 2000));
+    }
+}

@@ -1,0 +1,212 @@
+//! Fair-share accounting (DESIGN.md S20): the per-tenant usage ledger and
+//! priority function the multi-tenant scheduler (`crate::tenancy`) orders
+//! its queue with.
+//!
+//! The model is SLURM's classic fair-share formula: each tenant holds a
+//! configured number of *shares*; consumed node-seconds accumulate as
+//! *usage*; the fair-share factor is `2^(-U/S)` where `U` is the tenant's
+//! fraction of total usage and `S` its fraction of total shares. A tenant
+//! consuming exactly its share sits at 0.5, an idle tenant at 1.0, a hog
+//! decays toward 0. Priority adds a linear *aging* term on top, so a job
+//! that has waited long enough always overtakes any share imbalance —
+//! the bounded-starvation guarantee `benches/tenancy_storm.rs` asserts.
+
+use std::collections::BTreeMap;
+
+/// One tenant's row in the ledger.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShareEntry {
+    /// Configured share weight (relative to the sum over all tenants).
+    pub shares: f64,
+    /// Node-seconds charged to this tenant so far.
+    pub usage_node_secs: f64,
+}
+
+/// Per-tenant share and usage accounting.
+///
+/// Tenants are keyed by name; unknown tenants are created on first touch
+/// with a default share weight of 1.0 (equal shares).
+#[derive(Debug, Clone, Default)]
+pub struct ShareLedger {
+    entries: BTreeMap<String, ShareEntry>,
+}
+
+impl ShareLedger {
+    /// Empty ledger.
+    pub fn new() -> ShareLedger {
+        ShareLedger::default()
+    }
+
+    /// Register `tenant` with an explicit share weight (builder-style).
+    pub fn with_tenant(mut self, tenant: &str, shares: f64) -> ShareLedger {
+        assert!(shares > 0.0, "shares must be positive");
+        self.entries.insert(
+            tenant.to_string(),
+            ShareEntry {
+                shares,
+                usage_node_secs: 0.0,
+            },
+        );
+        self
+    }
+
+    /// Make sure `tenant` exists (default weight 1.0).
+    pub fn ensure(&mut self, tenant: &str) {
+        self.entries
+            .entry(tenant.to_string())
+            .or_insert(ShareEntry {
+                shares: 1.0,
+                usage_node_secs: 0.0,
+            });
+    }
+
+    /// Charge `node_secs` of cluster time to `tenant`.
+    pub fn charge(&mut self, tenant: &str, node_secs: f64) {
+        self.ensure(tenant);
+        self.entries
+            .get_mut(tenant)
+            .expect("ensured above")
+            .usage_node_secs += node_secs;
+    }
+
+    /// Node-seconds charged to `tenant` so far (0.0 if unknown).
+    pub fn usage(&self, tenant: &str) -> f64 {
+        self.entries
+            .get(tenant)
+            .map_or(0.0, |e| e.usage_node_secs)
+    }
+
+    /// Number of tenants the ledger knows about.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no tenant is registered.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// `tenant`'s fraction of the total configured shares (0.0 if the
+    /// ledger is empty or the tenant unknown).
+    pub fn share_fraction(&self, tenant: &str) -> f64 {
+        let total: f64 = self.entries.values().map(|e| e.shares).sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.entries
+            .get(tenant)
+            .map_or(0.0, |e| e.shares / total)
+    }
+
+    /// `tenant`'s fraction of the total charged usage (0.0 while nothing
+    /// has been charged anywhere — everyone starts even).
+    pub fn usage_fraction(&self, tenant: &str) -> f64 {
+        let total: f64 =
+            self.entries.values().map(|e| e.usage_node_secs).sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.entries
+            .get(tenant)
+            .map_or(0.0, |e| e.usage_node_secs / total)
+    }
+
+    /// SLURM-style fair-share factor `2^(-U/S)` in (0, 1]: 1.0 for an
+    /// idle tenant, 0.5 for one consuming exactly its share, decaying
+    /// toward 0 for a hog.
+    pub fn fair_share_factor(&self, tenant: &str) -> f64 {
+        let share = self.share_fraction(tenant);
+        if share <= 0.0 {
+            // a tenant with no shares configured ranks below everyone
+            return 0.0;
+        }
+        let ratio = self.usage_fraction(tenant) / share;
+        (-ratio).exp2()
+    }
+
+    /// Queue priority for a job of `tenant` that has waited `age_secs`:
+    /// fair-share factor plus linear aging (`aging_per_hour` priority
+    /// points per hour of wait). Because the share term is bounded by 1.0
+    /// while aging grows without bound, any positive `aging_per_hour`
+    /// guarantees a waiting job eventually outranks every fresher job.
+    pub fn priority(
+        &self,
+        tenant: &str,
+        age_secs: f64,
+        aging_per_hour: f64,
+    ) -> f64 {
+        self.fair_share_factor(tenant)
+            + aging_per_hour * age_secs.max(0.0) / 3600.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_ledger_starts_even() {
+        let mut l = ShareLedger::new();
+        l.ensure("a");
+        l.ensure("b");
+        assert_eq!(l.len(), 2);
+        assert!((l.share_fraction("a") - 0.5).abs() < 1e-12);
+        assert_eq!(l.usage_fraction("a"), 0.0);
+        assert!((l.fair_share_factor("a") - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hog_decays_below_light_user() {
+        let mut l = ShareLedger::new();
+        l.ensure("hog");
+        l.ensure("light");
+        l.charge("hog", 9000.0);
+        l.charge("light", 1000.0);
+        let hog = l.fair_share_factor("hog");
+        let light = l.fair_share_factor("light");
+        assert!(hog < light, "hog {hog} must rank below light {light}");
+        // consuming exactly your share sits at 0.5
+        let mut even = ShareLedger::new();
+        even.ensure("a");
+        even.ensure("b");
+        even.charge("a", 500.0);
+        even.charge("b", 500.0);
+        assert!((even.fair_share_factor("a") - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_shares_shift_the_factor() {
+        let mut l = ShareLedger::new()
+            .with_tenant("big", 3.0)
+            .with_tenant("small", 1.0);
+        // both consume the same absolute usage; "big" is entitled to 3x,
+        // so its factor must stay higher
+        l.charge("big", 500.0);
+        l.charge("small", 500.0);
+        assert!(l.fair_share_factor("big") > l.fair_share_factor("small"));
+    }
+
+    #[test]
+    fn aging_overtakes_any_share_gap() {
+        let mut l = ShareLedger::new();
+        l.ensure("hog");
+        l.ensure("idle");
+        l.charge("hog", 1e9); // factor ~ 0
+        let fresh_idle = l.priority("idle", 0.0, 2.0);
+        // after half an hour of waiting, the hog's job outranks a fresh
+        // job from the fully idle tenant (factor gap is at most 1.0)
+        let aged_hog = l.priority("hog", 1800.0, 2.0);
+        assert!(aged_hog > fresh_idle);
+        // with zero age both orderings follow the factor alone
+        assert!(l.priority("hog", 0.0, 2.0) < fresh_idle);
+    }
+
+    #[test]
+    fn unknown_tenant_is_created_on_charge() {
+        let mut l = ShareLedger::new();
+        assert!(l.is_empty());
+        l.charge("new", 10.0);
+        assert_eq!(l.usage("new"), 10.0);
+        assert_eq!(l.len(), 1);
+    }
+}

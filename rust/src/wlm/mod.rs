@@ -5,8 +5,10 @@
 //! made available inside compute nodes".
 
 pub mod alps;
+pub mod fairshare;
 
 pub use alps::{Alps, AprunRequest, SlurmWlm, WorkloadManager};
+pub use fairshare::{ShareEntry, ShareLedger};
 
 use std::collections::BTreeMap;
 
