@@ -1,11 +1,13 @@
 //! End-to-end driver (DESIGN.md's required full-stack validation):
 //!
 //!   laptop: build the TensorFlow image  →  push to the registry
-//!   Piz Daint: `shifterimg pull`  →  SLURM allocates a hybrid node with
-//!   `--gres=gpu:1` (GRES sets CUDA_VISIBLE_DEVICES)  →  Shifter prepares
-//!   the container with GPU support  →  the containerized trainer runs
-//!   REAL training steps through the AOT-compiled `mnist_train` artifact
-//!   on the PJRT CPU client, logging the loss curve.
+//!   Piz Daint: the site (declared once via `SiteBuilder`, resolving
+//!   against that registry) pulls the image  →  SLURM allocates a hybrid
+//!   node with `--gres=gpu:1` (GRES sets CUDA_VISIBLE_DEVICES)  →
+//!   `site.run` prepares the container with GPU support  →  the
+//!   containerized trainer runs REAL training steps through the
+//!   AOT-compiled `mnist_train` artifact on the PJRT CPU client, logging
+//!   the loss curve.
 //!
 //! The same artifact is then executed "natively" (no container) and the
 //! two loss curves are compared bit-for-bit — the paper's portability
@@ -16,9 +18,9 @@
 use shifter_rs::apps::tf_trainer::{self, TfWorkload};
 use shifter_rs::gpu::GpuModel;
 use shifter_rs::runtime::Executor;
-use shifter_rs::shifter::{RunOptions, ShifterRuntime};
+use shifter_rs::shifter::RunOptions;
 use shifter_rs::wlm::{GresRequest, Slurm};
-use shifter_rs::{ImageGateway, Registry, SystemProfile};
+use shifter_rs::{Registry, Site, SystemProfile};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let steps: u32 = std::env::args()
@@ -38,18 +40,22 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut registry = Registry::dockerhub();
     registry.push(image);
 
-    // ---- HPC side: pull through the gateway ------------------------------
+    // ---- HPC side: one site, wired against that registry -----------------
     println!("\n== Piz Daint: shifterimg pull ==");
     let daint = SystemProfile::piz_daint();
-    let mut gateway = ImageGateway::new(daint.pfs.clone().unwrap());
-    let rep = gateway.pull(&registry, "tensorflow/tensorflow:1.0.0-devel-gpu-py3")?;
+    let mut site = Site::builder()
+        .profile(daint.clone())
+        .nodes(1)
+        .registry(registry)
+        .build()?;
+    let pull = site.pull("tensorflow/tensorflow:1.0.0-devel-gpu-py3")?;
     println!(
         "pulled in {:.1}s (download {:.1}s, expand {:.1}s, squashfs {:.1}s, store {:.1}s)",
-        rep.total_secs(),
-        rep.download_secs,
-        rep.expand_secs,
-        rep.convert_secs,
-        rep.store_secs
+        pull.turnaround_secs,
+        pull.download_secs,
+        pull.expand_secs,
+        pull.convert_secs,
+        pull.store_secs
     );
 
     // ---- SLURM: allocate a hybrid node with one GPU ----------------------
@@ -65,14 +71,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
 
     // ---- Shifter: container with GPU support ------------------------------
-    let runtime = ShifterRuntime::new(&daint);
     let mut opts = RunOptions::new(
         "tensorflow/tensorflow:1.0.0-devel-gpu-py3",
         &["python3", "mnist_train.py"],
     );
     opts.env = rank0.env.clone();
     opts.node = rank0.node as usize;
-    let container = runtime.run(&gateway, &opts)?;
+    let container = site.run(&opts)?;
     let gpus = container.visible_gpus(&daint, rank0.node as usize);
     println!(
         "container up in {:.1} ms; GPU support: {:?} -> {}",

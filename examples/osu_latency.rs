@@ -1,14 +1,15 @@
 //! OSU latency walkthrough (§V.C.1): the same three OSU containers
 //! (A: MPICH 3.1.4, B: MVAPICH2 2.2, C: Intel MPI 2017) deployed on both
-//! HPC systems, with Shifter MPI support enabled and disabled, against the
-//! native baseline — the mechanism behind Tables III and IV.
+//! HPC systems — each declared as a `Site` — with Shifter MPI support
+//! enabled and disabled, against the native baseline: the mechanism
+//! behind Tables III and IV.
 //!
 //! Run: `cargo run --release --example osu_latency`
 
 use shifter_rs::apps::osu;
 use shifter_rs::fabric::OSU_SIZES;
-use shifter_rs::shifter::{RunOptions, ShifterRuntime};
-use shifter_rs::{ImageGateway, Registry, SystemProfile};
+use shifter_rs::shifter::RunOptions;
+use shifter_rs::{Site, SystemProfile};
 
 const CONTAINERS: [(&str, &str); 3] = [
     ("A (MPICH 3.1.4)", "osu-benchmarks:mpich-3.1.4"),
@@ -17,8 +18,6 @@ const CONTAINERS: [(&str, &str); 3] = [
 ];
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    let registry = Registry::dockerhub();
-
     for profile in [SystemProfile::linux_cluster(), SystemProfile::piz_daint()] {
         println!(
             "== {} — native {} over {} ==",
@@ -26,23 +25,23 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             profile.host_mpi.version_string(),
             profile.fabric.name()
         );
-        let mut gateway = ImageGateway::new(profile.pfs.clone().unwrap());
+        let mut site = Site::builder()
+            .profile(profile.clone())
+            .nodes(2)
+            .gateway_shards(1)
+            .build()?;
         for (_, image) in CONTAINERS {
-            gateway.pull(&registry, image)?;
+            site.pull(image)?;
         }
-        let runtime = ShifterRuntime::new(&profile);
         let native = osu::run_native(&profile);
 
         for (label, image) in CONTAINERS {
             // enabled: shifter --mpi
-            let c_on = runtime.run(
-                &gateway,
-                &RunOptions::new(image, &["osu_latency"]).with_mpi(),
-            )?;
+            let c_on = site
+                .run(&RunOptions::new(image, &["osu_latency"]).with_mpi())?;
             let on = osu::run_container(&profile, &c_on, &format!("{image}-on"));
             // disabled: no --mpi flag, container keeps its own MPI
-            let c_off = runtime
-                .run(&gateway, &RunOptions::new(image, &["osu_latency"]))?;
+            let c_off = site.run(&RunOptions::new(image, &["osu_latency"]))?;
             let off =
                 osu::run_container(&profile, &c_off, &format!("{image}-off"));
 

@@ -1,19 +1,18 @@
 //! PyFR multi-GPU scaling (the paper's §V.B.2 scenario): the same
-//! container image deployed across the Linux Cluster and Piz Daint with
-//! GPU + MPI support, scaling from 1 to 8 GPUs — plus a real
-//! flux-reconstruction integration through the `pyfr_step` artifact.
+//! container image deployed across the Linux Cluster and Piz Daint —
+//! each declared as a `Site` — with GPU + MPI support, scaling from 1 to
+//! 8 GPUs, plus a real flux-reconstruction integration through the
+//! `pyfr_step` artifact.
 //!
 //! Run: `make artifacts && cargo run --release --example pyfr_scaling`
 
 use shifter_rs::apps::pyfr::{self, PyfrRun};
 use shifter_rs::runtime::Executor;
-use shifter_rs::shifter::{RunOptions, ShifterRuntime};
+use shifter_rs::shifter::RunOptions;
 use shifter_rs::wlm::{GresRequest, Slurm};
-use shifter_rs::{ImageGateway, Registry, SystemProfile};
+use shifter_rs::{Site, SystemProfile};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    let registry = Registry::dockerhub();
-
     println!("T106D turbine blade: {} cells, {} iterations, dt = {:.4e}\n",
         pyfr::T106D_CELLS, pyfr::T106D_ITERS, pyfr::T106D_DT);
 
@@ -22,9 +21,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         (SystemProfile::piz_daint(), vec![1, 2, 4, 8]),
     ] {
         println!("== {} ==", profile.name);
-        let mut gateway = ImageGateway::new(profile.pfs.clone().unwrap());
-        gateway.pull(&registry, "pyfr-image:1.5.0")?;
-        let runtime = ShifterRuntime::new(&profile);
+        let mut site = Site::builder()
+            .profile(profile.clone())
+            .nodes(8)
+            .gateway_shards(1)
+            .build()?;
+        site.pull("pyfr-image:1.5.0")?;
         let mut slurm = Slurm::new(&profile);
 
         for gpus in configs {
@@ -48,7 +50,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     .with_mpi();
             opts.env = ranks[0].env.clone();
             opts.concurrent_nodes = nodes;
-            let container = runtime.run(&gateway, &opts)?;
+            let container = site.run(&opts)?;
             let mpi = container
                 .effective_mpi(&profile)
                 .expect("pyfr image has MPI");

@@ -1,9 +1,11 @@
 //! Pynamic at scale (§V.C.3 / Fig. 3) — the full deployment story for a
-//! >3000-process Python application on Piz Daint, using the asynchronous
-//! Image Gateway pull queue and the ALPS workload manager:
+//! >3000-process Python application on Piz Daint, declared as a 256-node
+//! `Site` and using the asynchronous pull lifecycle plus the ALPS
+//! workload manager:
 //!
 //!   1. `shifterimg pull pynamic:1.3` goes through the gateway daemon's
-//!      job lifecycle (ENQUEUED → PULLING → … → READY);
+//!      job lifecycle (ENQUEUED → PULLING → … → READY), driven via
+//!      `site.request` / `site.tick` / `site.pull_status`;
 //!   2. ALPS places 3072 ranks (256 nodes × 12);
 //!   3. every node starts the same loop-mounted container;
 //!   4. the import storm that crushes the Lustre MDS natively is served
@@ -12,10 +14,10 @@
 //! Run: `cargo run --release --example pynamic_at_scale`
 
 use shifter_rs::apps::pynamic::{self, Mode};
-use shifter_rs::gateway::{PullQueue, PullState};
-use shifter_rs::shifter::{preflight, RunOptions, ShifterRuntime};
+use shifter_rs::gateway::PullState;
+use shifter_rs::shifter::{preflight, RunOptions};
 use shifter_rs::wlm::{Alps, AprunRequest};
-use shifter_rs::{ImageGateway, Registry, SystemProfile};
+use shifter_rs::{Site, SystemProfile};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let daint = SystemProfile::piz_daint();
@@ -30,18 +32,25 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         pf.ok()
     );
 
+    let mut site = Site::builder()
+        .profile(daint.clone())
+        .nodes(256)
+        .gateway_shards(1)
+        .build()?;
+
     // -- 1. async pull through the gateway daemon -------------------------
-    let registry = Registry::dockerhub();
-    let mut gateway = ImageGateway::new(daint.pfs.clone().unwrap());
-    let mut queue = PullQueue::new();
-    queue.request(&gateway, &registry, "pynamic:1.3", "cscs-user")?;
+    site.request("pynamic:1.3", "cscs-user")?;
     println!("\nshifterimg pull pynamic:1.3 (async):");
     let mut last = PullState::Enqueued;
-    while !queue.status("pynamic:1.3").unwrap().state.terminal() {
-        queue.tick(&mut gateway, &registry, 2.0);
-        let st = queue.status("pynamic:1.3").unwrap().state;
+    while !site.pull_status("pynamic:1.3").unwrap().state.terminal() {
+        site.tick(2.0);
+        let st = site.pull_status("pynamic:1.3").unwrap().state;
         if st != last {
-            println!("  t={:>5.0}s  {}", queue.now(), st.name());
+            println!(
+                "  t={:>5.0}s  {}",
+                site.fabric().cluster().now(),
+                st.name()
+            );
             last = st;
         }
     }
@@ -57,11 +66,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("\naprun -n 3072 -N 12: {} ranks on {} nodes", ranks.len(), nodes);
 
     // -- 3. one container start per node ------------------------------------
-    let runtime = ShifterRuntime::new(&daint);
     let mut opts = RunOptions::new("pynamic:1.3", &["./pynamic-pyMPI"]);
     opts.env = ranks[0].env.clone();
     opts.concurrent_nodes = nodes;
-    let container = runtime.run(&gateway, &opts)?;
+    let container = site.run(&opts)?;
     println!(
         "container environment on each node: {} mounts, start-up {:.0} ms \
          (incl. image fetch shared by {} nodes)",

@@ -1,15 +1,21 @@
-//! Quickstart — the paper's §III.B end-user workflow, end to end:
+//! Quickstart — the paper's §III.B end-user workflow, end to end, on the
+//! `Site` facade (DESIGN.md S21). A site operator declares the system
+//! once with `SiteBuilder`; every user workflow then goes through the
+//! one typed handle:
 //!
-//!   1. `shifterimg pull docker:ubuntu:xenial`
-//!   2. `shifter --image=ubuntu:xenial cat /etc/os-release`
+//!   1. `shifterimg pull docker:ubuntu:xenial`  →  `site.pull(..)`
+//!   2. `shifter --image=ubuntu:xenial cat /etc/os-release`  →
+//!      `site.run(..)`
 //!   3. a CUDA container with GPU support triggered via
-//!      `CUDA_VISIBLE_DEVICES`, showing device renumbering, and
-//!   4. an MPI container with the §IV.B library swap.
+//!      `CUDA_VISIBLE_DEVICES`, showing device renumbering,
+//!   4. an MPI container with the §IV.B library swap, and
+//!   5. one cluster-scale launch across all four nodes  →
+//!      `site.launch(..)`.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use shifter_rs::shifter::{RunOptions, ShifterRuntime};
-use shifter_rs::{ImageGateway, Registry, SystemProfile};
+use shifter_rs::shifter::RunOptions;
+use shifter_rs::{JobSpec, Site, SystemProfile};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let daint = SystemProfile::piz_daint();
@@ -17,30 +23,29 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("host MPI    : {}", daint.host_mpi.version_string());
     println!("fabric      : {}\n", daint.fabric.name());
 
-    // -- 1. pull --------------------------------------------------------
-    let registry = Registry::dockerhub();
-    let mut gateway = ImageGateway::new(daint.pfs.clone().unwrap());
+    // -- 0. the site operator wires the stack exactly once ---------------
+    let mut site = Site::builder()
+        .profile(daint.clone())
+        .nodes(4)
+        .gateway_shards(2)
+        .build()?;
+
+    // -- 1. pull ----------------------------------------------------------
     for image in ["docker:ubuntu:xenial", "nvidia/cuda-image:8.0", "osu-benchmarks:mpich-3.1.4"] {
-        let rep = gateway.pull(&registry, image)?;
+        let pull = site.pull(image)?;
         println!(
             "shifterimg pull {image}: {:.1}s (download {:.1}s, squashfs {:.1}s)",
-            rep.total_secs(),
-            rep.download_secs,
-            rep.convert_secs
+            pull.turnaround_secs, pull.download_secs, pull.convert_secs
         );
     }
     println!("\nshifterimg images:");
-    for i in gateway.list() {
+    for i in site.images() {
         println!("  {i}");
     }
 
     // -- 2. the paper's os-release example --------------------------------
-    let runtime = ShifterRuntime::new(&daint);
     println!("\n$ shifter --image=ubuntu:xenial cat /etc/os-release");
-    let c = runtime.run(
-        &gateway,
-        &RunOptions::new("ubuntu:xenial", &["cat", "/etc/os-release"]),
-    )?;
+    let c = site.run(&RunOptions::new("ubuntu:xenial", &["cat", "/etc/os-release"]))?;
     print!("{}", c.exec(&["cat", "/etc/os-release"])?);
     println!(
         "(container start-up overhead: {:.1} ms)\n",
@@ -50,8 +55,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     // -- 3. GPU support ----------------------------------------------------
     println!("$ export CUDA_VISIBLE_DEVICES=0");
     println!("$ shifter --image=cuda-image ./deviceQuery");
-    let c = runtime.run(
-        &gateway,
+    let c = site.run(
         &RunOptions::new("nvidia/cuda-image:8.0", &["./deviceQuery"])
             .with_env("CUDA_VISIBLE_DEVICES", "0"),
     )?;
@@ -78,8 +82,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     // -- 4. MPI swap ----------------------------------------------------------
     println!("$ srun -n 2 --mpi=pmi2 shifter --mpi --image=mpich-image osu_latency");
-    let c = runtime.run(
-        &gateway,
+    let c = site.run(
         &RunOptions::new("osu-benchmarks:mpich-3.1.4", &["osu_latency"]).with_mpi(),
     )?;
     let mpi = c.mpi.as_ref().expect("MPI support activated");
@@ -92,5 +95,17 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     println!("\nstage log of the last run:");
     print!("{}", c.stage_log.render());
+
+    // -- 5. one cluster-scale job across the whole site ----------------------
+    println!("\n$ shifterimg --nodes=4 launch ubuntu:xenial true");
+    let report = site.launch(&JobSpec::new("ubuntu:xenial", &["true"], 4))?;
+    let total = report.total_stats().expect("launch totals");
+    println!(
+        "  {} / {} nodes up, one coalesced pull for {} requesters, p99 start-up {:.1} ms",
+        report.succeeded(),
+        report.nodes_requested,
+        report.pull.as_ref().map_or(0, |p| p.requesters),
+        total.p99 * 1e3,
+    );
     Ok(())
 }

@@ -3,7 +3,9 @@
 //! nodes through the full orchestrator — WLM allocation, one coalesced
 //! gateway pull, per-node Shifter stage execution on a thread pool —
 //! for homogeneous (Piz Daint) and heterogeneous (Piz Daint + Linux
-//! Cluster) partitions, cold vs warm node caches.
+//! Cluster) partitions, cold vs warm node caches. Each configuration is
+//! one `SiteBuilder` declaration (DESIGN.md S21); launches go through
+//! `Site::launch`.
 //!
 //! Reported (and asserted, like the paper-table benches):
 //!   * per-node launch percentiles (p50/p95/p99) per configuration;
@@ -16,14 +18,10 @@
 //! the perf trajectory per PR. Set `LAUNCH_SCALE_NODES` to cap the storm
 //! width (the CI bench-smoke job runs with a reduced cap).
 
-use shifter_rs::distrib::DistributionFabric;
-use shifter_rs::launch::{
-    JobSpec, LaunchCluster, LaunchReport, LaunchScheduler,
-};
+use shifter_rs::launch::{JobSpec, LaunchReport};
 use shifter_rs::metrics::Table;
-use shifter_rs::pfs::LustreFs;
 use shifter_rs::util::json::Json;
-use shifter_rs::{Registry, SystemProfile};
+use shifter_rs::{Site, SystemProfile};
 
 /// The §IV.A-style job every configuration launches: the CUDA image with
 /// one GPU per node (CUDA_VISIBLE_DEVICES injected via GRES).
@@ -39,12 +37,14 @@ fn max_nodes() -> u32 {
         .max(1)
 }
 
-fn cluster_for(hetero: bool, nodes: u32) -> LaunchCluster {
-    if hetero && nodes >= 2 {
-        LaunchCluster::daint_linux_split(nodes)
+fn site_for(hetero: bool, nodes: u32) -> Site {
+    let builder = Site::builder().gateway_shards(SHARDS);
+    let builder = if hetero && nodes >= 2 {
+        builder.hetero_daint_linux(nodes)
     } else {
-        LaunchCluster::homogeneous(&SystemProfile::piz_daint(), nodes)
-    }
+        builder.profile(SystemProfile::piz_daint()).nodes(nodes)
+    };
+    builder.build().expect("valid bench site")
 }
 
 fn fmt_secs(v: f64) -> String {
@@ -79,7 +79,6 @@ fn main() {
     if node_counts.is_empty() || *node_counts.last().unwrap() < cap {
         node_counts.push(cap);
     }
-    let registry = Registry::dockerhub();
 
     let mut table = Table::new(
         &format!("launch storm, {SHARDS}-shard fabric, image {IMAGE}"),
@@ -97,20 +96,13 @@ fn main() {
             if hetero && nodes < 2 {
                 continue;
             }
-            let cluster = cluster_for(hetero, nodes);
-            let mut fabric =
-                DistributionFabric::new(SHARDS, LustreFs::piz_daint());
-            let scheduler = LaunchScheduler::new(&cluster, &registry);
+            let mut site = site_for(hetero, nodes);
             let spec = JobSpec::new(IMAGE, &["deviceQuery"], nodes).with_gpus(1);
 
             // cold: every node cache is empty, the broadcast storm runs
-            let cold = scheduler
-                .launch(&mut fabric, &spec)
-                .expect("cold launch failed");
-            // warm: same fabric, every node already holds the squashfs
-            let warm = scheduler
-                .launch(&mut fabric, &spec)
-                .expect("warm launch failed");
+            let cold = site.launch(&spec).expect("cold launch failed");
+            // warm: same site, every node already holds the squashfs
+            let warm = site.launch(&spec).expect("warm launch failed");
 
             for (phase, report) in [("cold", &cold), ("warm", &warm)] {
                 assert_eq!(

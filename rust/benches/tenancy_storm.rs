@@ -2,7 +2,8 @@
 //! synthesize a Poisson stream of competing GPU/MPI/CPU jobs from many
 //! tenants, run it twice over a 1024-node heterogeneous cluster — once
 //! under strict FIFO, once under fair-share + conservative backfill —
-//! and compare.
+//! and compare. The cluster is one `SiteBuilder` declaration (DESIGN.md
+//! S21); each policy runs via `Site::storm_with` on a fresh site.
 //!
 //! Asserted (the ISSUE 3 acceptance criteria):
 //!   * every job completes and **no tenant starves**: the worst stretch
@@ -19,15 +20,12 @@
 //! trajectory per PR. Knobs: `TENANCY_STORM_JOBS` caps the stream length,
 //! `TENANCY_STORM_NODES` the cluster width (CI runs reduced values).
 
-use shifter_rs::distrib::DistributionFabric;
-use shifter_rs::launch::LaunchCluster;
-use shifter_rs::pfs::LustreFs;
 use shifter_rs::tenancy::{
-    unique_image_refs, FairShareScheduler, SchedulingPolicy, TenancyReport,
+    unique_image_refs, FairShare, Fifo, SchedulingPolicy, TenancyReport,
     TrafficModel,
 };
 use shifter_rs::util::json::Json;
-use shifter_rs::Registry;
+use shifter_rs::Site;
 
 const SHARDS: usize = 8;
 const TENANTS: u32 = 8;
@@ -49,16 +47,28 @@ fn main() {
     let jobs = env_u32("TENANCY_STORM_JOBS", FULL_JOBS);
 
     // one stream, scheduled twice — the comparison below is only valid
-    // because both policies see the identical jobs
-    let cluster = LaunchCluster::daint_linux_split(nodes);
-    let registry = Registry::dockerhub();
-    let stream = TrafficModel {
-        tenants: TENANTS,
-        jobs,
-        max_width: nodes / 2,
-        ..TrafficModel::default()
-    }
-    .generate(&cluster);
+    // because both policies see the identical jobs. Each policy run gets
+    // a fresh site (same declaration) so the fabrics start cold.
+    let make_site = || -> Site {
+        Site::builder()
+            .hetero_daint_linux(nodes)
+            .gateway_shards(SHARDS)
+            // strict retry: exact pull/coalescing accounting, no
+            // straggler noise in the policy comparison
+            .retry_policy(shifter_rs::launch::RetryPolicy::strict())
+            .build()
+            .expect("valid bench site")
+    };
+    let stream = {
+        let site = make_site();
+        TrafficModel {
+            tenants: TENANTS,
+            jobs,
+            max_width: nodes / 2,
+            ..TrafficModel::default()
+        }
+        .generate(site.cluster())
+    };
     assert_eq!(stream.len() as u32, jobs, "uncapped stream generates all");
     let unique = unique_image_refs(&stream);
     assert!(
@@ -69,15 +79,11 @@ fn main() {
         unique.len()
     );
 
-    let run = |policy: SchedulingPolicy| -> TenancyReport {
-        let mut fabric =
-            DistributionFabric::new(SHARDS, LustreFs::piz_daint());
-        FairShareScheduler::new(&cluster, &registry)
-            .with_policy(policy)
-            .run(&mut fabric, &stream)
+    let run = |policy: &dyn SchedulingPolicy| -> TenancyReport {
+        make_site().storm_with(&stream, policy)
     };
-    let fifo = run(SchedulingPolicy::Fifo);
-    let fair = run(SchedulingPolicy::FairShare);
+    let fifo = run(&Fifo);
+    let fair = run(&FairShare::default());
 
     for (name, report) in [("fifo", &fifo), ("fair-share", &fair)] {
         print!("{}", report.render());

@@ -1,9 +1,13 @@
-//! `shifterimg` — the Image Gateway CLI (§III.B).
+//! `shifterimg` — the Image Gateway CLI (§III.B), built entirely on the
+//! [`Site`] facade (DESIGN.md S21): every subcommand declares the site
+//! once through `SiteBuilder` and goes through the typed `Site`
+//! operations — no hand-wired fabric/scheduler stacks.
 //!
 //! ```text
 //! shifterimg [--system=daint] pull docker:ubuntu:xenial
 //! shifterimg [--system=daint] images
 //! shifterimg [--system=daint] lookup docker:ubuntu:xenial
+//! shifterimg [--system=daint] [--mpi] [--gpus=LIST] run <ref> [cmd...]
 //! shifterimg [--system=daint] [--shards=4] cluster-status
 //! shifterimg [--system=daint] [--shards=4] [--nodes=64] [--gpus=1] \
 //!     [--mpi] [--hetero] launch <ref> [cmd...]
@@ -12,39 +16,32 @@
 //!     [--policy=fair|fifo] [--seed=N] storm
 //! ```
 //!
-//! `cluster-status` drives the distributed fabric (DESIGN.md S18): it
-//! pulls the full registry catalog through a sharded gateway cluster and
-//! prints the per-shard queue/image state plus the content-addressed
-//! store's dedup accounting.
-//!
-//! `launch` drives the full cluster-scale job orchestrator (DESIGN.md
-//! S19): WLM allocation, one coalesced pull, per-node stage execution on
-//! a worker pool, and the percentile launch report. `--hetero` splits the
-//! node range into a Piz Daint partition and a Linux Cluster partition
-//! (different GPU generations, driver versions and host MPIs).
-//!
-//! `storm` drives the multi-tenant traffic simulator (DESIGN.md S20): a
-//! Poisson stream of competing GPU/MPI/CPU jobs from `--tenants`
-//! simulated users, scheduled with fair-share + conservative backfill
-//! (`--policy=fair`, the default) or strict FIFO (`--policy=fifo`), over
-//! one shared distribution fabric. Prints the per-tenant queue-wait and
-//! stretch percentiles plus the gateway interference summary.
+//! `pull`/`lookup`/`images`/`run` are the paper's §III.B end-user
+//! workflow. `cluster-status` drives the full registry catalog through
+//! the sharded fabric (DESIGN.md S18) and prints per-shard queue/image
+//! state plus the CAS dedup accounting. `launch` runs one cluster-scale
+//! job through the orchestrator (S19); `storm` runs the multi-tenant
+//! traffic simulation (S20) under a pluggable scheduling policy.
+//! `--hetero` splits the node range into a Piz Daint partition and a
+//! Linux Cluster partition (different GPU generations, driver versions
+//! and host MPIs).
 
-use shifter_rs::distrib::DistributionFabric;
-use shifter_rs::launch::{JobSpec, LaunchCluster, LaunchScheduler};
+use shifter_rs::launch::JobSpec;
 use shifter_rs::metrics::Table;
-use shifter_rs::tenancy::{FairShareScheduler, SchedulingPolicy, TrafficModel};
-use shifter_rs::util::cli::CliSpec;
-use shifter_rs::{ImageGateway, Registry, SystemProfile};
+use shifter_rs::shifter::RunOptions;
+use shifter_rs::tenancy::{policy_by_name, TrafficModel};
+use shifter_rs::util::cli::{CliSpec, ParsedArgs};
+use shifter_rs::{Site, SiteBuilder, SystemProfile};
 
 fn usage() -> ! {
     eprintln!(
         "usage: shifterimg [options] <subcommand>\n\
          \n\
          subcommands:\n\
-         \x20 pull <ref>            pull an image through the gateway\n\
-         \x20 images                list registry and gateway images\n\
+         \x20 pull <ref>            pull an image through the site fabric\n\
+         \x20 images                list registry and site images\n\
          \x20 lookup <ref>          pull (if needed) and print the PFS path\n\
+         \x20 run <ref> [cmd..]     run one container on node 0\n\
          \x20 cluster-status        drive the catalog through the sharded\n\
          \x20                       fabric and print per-shard state\n\
          \x20 launch <ref> [cmd..]  one cluster-scale containerized job\n\
@@ -57,6 +54,10 @@ fn usage() -> ! {
          \x20                                 storm: 256)\n\
          \x20 --hetero                        split nodes into Piz Daint +\n\
          \x20                                 Linux Cluster partitions\n\
+         \n\
+         run options:\n\
+         \x20 --gpus=LIST           set CUDA_VISIBLE_DEVICES (GPU support)\n\
+         \x20 --mpi                 activate the MPI ABI swap\n\
          \n\
          launch options:\n\
          \x20 --gpus=N              request --gres=gpu:N per node\n\
@@ -106,27 +107,24 @@ fn main() {
         "daint" => SystemProfile::piz_daint(),
         _ => usage(),
     };
-    let pfs = profile
-        .pfs
-        .clone()
-        .unwrap_or_else(shifter_rs::pfs::LustreFs::piz_daint);
-    let registry = Registry::dockerhub();
-    let mut gateway = ImageGateway::new(pfs.clone());
 
     match parsed.positionals.as_slice() {
         [cmd, reference] if cmd == "pull" => {
-            match gateway.pull(&registry, reference) {
-                Ok(rep) => {
+            let mut site = build_site(site_builder(&profile, &parsed, parse_nodes(&parsed, 1), false));
+            match site.pull(reference) {
+                Ok(pull) => {
                     println!(
-                        "{}: pulled in {:.1}s (download {:.1}s, expand {:.1}s, \
-                         squashfs {:.1}s, store {:.1}s){}",
-                        rep.reference,
-                        rep.total_secs(),
-                        rep.download_secs,
-                        rep.expand_secs,
-                        rep.convert_secs,
-                        rep.store_secs,
-                        if rep.cached { " [cached]" } else { "" }
+                        "{}: READY in {:.1}s (queue wait {:.1}s, download \
+                         {:.1}s, expand {:.1}s, squashfs {:.1}s, store \
+                         {:.1}s)\n  -> {}",
+                        pull.reference,
+                        pull.turnaround_secs,
+                        pull.queue_wait_secs,
+                        pull.download_secs,
+                        pull.expand_secs,
+                        pull.convert_secs,
+                        pull.store_secs,
+                        pull.pfs_path,
                     );
                 }
                 Err(e) => {
@@ -136,23 +134,62 @@ fn main() {
             }
         }
         [cmd] if cmd == "images" => {
-            // a fresh gateway has nothing pulled; list the registry too so
+            let site = build_site(site_builder(&profile, &parsed, parse_nodes(&parsed, 1), false));
+            // a fresh site has nothing pulled; list the registry too so
             // the demo binary is useful on its own
+            let registry = site.registry().list();
             println!("registry ({}):", registry.len());
-            for r in registry.list() {
+            for r in registry {
                 println!("  {r}");
             }
-            println!("gateway ({}):", gateway.list().len());
-            for r in gateway.list() {
+            let images = site.images();
+            println!("site ({}):", images.len());
+            for r in images {
                 println!("  {r}");
             }
         }
         [cmd, reference] if cmd == "lookup" => {
-            match gateway
-                .pull(&registry, reference)
-                .and_then(|_| gateway.lookup(reference).map(|g| g.pfs_path.clone()))
-            {
-                Ok(path) => println!("{reference} -> {path}"),
+            let mut site = build_site(site_builder(&profile, &parsed, parse_nodes(&parsed, 1), false));
+            match site.pull(reference) {
+                Ok(pull) => println!("{reference} -> {}", pull.pfs_path),
+                Err(e) => {
+                    eprintln!("shifterimg: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        [cmd, rest @ ..] if cmd == "run" && !rest.is_empty() => {
+            let reference = &rest[0];
+            let command: Vec<&str> = if rest.len() > 1 {
+                rest[1..].iter().map(|s| s.as_str()).collect()
+            } else {
+                vec!["true"]
+            };
+            let mut site = build_site(site_builder(&profile, &parsed, parse_nodes(&parsed, 1), false));
+            let mut opts = RunOptions::new(reference, &command);
+            if parsed.has("mpi") {
+                opts = opts.with_mpi();
+            }
+            if let Some(gpus) = parsed.get("gpus") {
+                opts = opts.with_env("CUDA_VISIBLE_DEVICES", gpus);
+            }
+            match site.run(&opts) {
+                Ok(container) => match container.exec(&command) {
+                    Ok(out) => {
+                        print!("{out}");
+                        if !out.is_empty() && !out.ends_with('\n') {
+                            println!();
+                        }
+                        eprintln!(
+                            "(container start-up overhead: {:.1} ms)",
+                            container.startup_overhead_secs() * 1e3
+                        );
+                    }
+                    Err(e) => {
+                        eprintln!("shifterimg: {e}");
+                        std::process::exit(1);
+                    }
+                },
                 Err(e) => {
                     eprintln!("shifterimg: {e}");
                     std::process::exit(1);
@@ -160,17 +197,15 @@ fn main() {
             }
         }
         [cmd] if cmd == "cluster-status" => {
-            let shards = parse_shards(&parsed);
-            let mut fabric = DistributionFabric::new(shards, pfs);
+            let mut site = build_site(site_builder(&profile, &parsed, parse_nodes(&parsed, 1), false));
             // drive the whole catalog through the cluster, as a site's
             // nightly sync would
-            for reference in registry.list() {
-                if let Err(e) = fabric.request(&registry, &reference, "admin") {
-                    eprintln!("shifterimg: {reference}: {e}");
-                }
+            let refs = site.registry().list();
+            for (reference, e) in site.prefetch(&refs) {
+                eprintln!("shifterimg: {reference}: {e}");
             }
-            fabric.tick(&registry, 1e9);
 
+            let shards = site.fabric().cluster().shard_count();
             let mut table = Table::new(
                 &format!("cluster status ({shards} shards)"),
                 &[
@@ -178,7 +213,7 @@ fn main() {
                     "max-wait", "active",
                 ],
             );
-            for s in fabric.cluster().cluster_status() {
+            for s in site.fabric().cluster().cluster_status() {
                 table.row(&[
                     s.shard.to_string(),
                     s.backlog.to_string(),
@@ -191,18 +226,18 @@ fn main() {
             }
             print!("{}", table.render());
 
-            let cas = fabric.cluster().cas();
             println!(
                 "storm drained in {:.1}s (makespan across shards)",
-                fabric.cluster().makespan_secs()
+                site.fabric().cluster().makespan_secs()
             );
-            if let Some(wait) = fabric.queue_wait_stats() {
+            if let Some(wait) = site.fabric().queue_wait_stats() {
                 println!(
                     "queue wait across {} jobs: p50 {:.1}s, p95 {:.1}s, \
                      p99 {:.1}s, worst {:.1}s",
                     wait.n, wait.p50, wait.p95, wait.p99, wait.worst
                 );
             }
+            let cas = site.fabric().cluster().cas();
             println!(
                 "cas: {} blobs, {:.1} MB stored / {:.1} MB logical \
                  (dedup {:.2}x, {:.1} MB saved)",
@@ -220,14 +255,7 @@ fn main() {
             } else {
                 vec!["true"]
             };
-            let shards = parse_shards(&parsed);
-            let nodes: u32 = match parsed.get("nodes").unwrap_or("64").parse() {
-                Ok(n) if n >= 1 => n,
-                _ => {
-                    eprintln!("shifterimg: --nodes must be a positive integer");
-                    usage();
-                }
-            };
+            let nodes = parse_nodes(&parsed, 64);
             let gpus: u32 = match parsed.get("gpus").unwrap_or("0").parse() {
                 Ok(n) => n,
                 _ => {
@@ -235,16 +263,12 @@ fn main() {
                     usage();
                 }
             };
-            let cluster = if parsed.has("hetero") {
-                if nodes < 2 {
-                    eprintln!("shifterimg: --hetero needs --nodes >= 2");
-                    usage();
-                }
-                LaunchCluster::daint_linux_split(nodes)
-            } else {
-                LaunchCluster::homogeneous(&profile, nodes)
-            };
-            let mut fabric = DistributionFabric::new(shards, pfs);
+            let mut site = build_site(site_builder(
+                &profile,
+                &parsed,
+                nodes,
+                parsed.has("hetero"),
+            ));
             let mut job = JobSpec::new(reference, &command, nodes);
             if gpus > 0 {
                 job = job.with_gpus(gpus);
@@ -252,8 +276,7 @@ fn main() {
             if parsed.has("mpi") {
                 job = job.with_mpi();
             }
-            let scheduler = LaunchScheduler::new(&cluster, &registry);
-            match scheduler.launch(&mut fabric, &job) {
+            match site.launch(&job) {
                 Ok(report) => {
                     print!("{}", report.render());
                     if report.failed() > 0 {
@@ -267,15 +290,7 @@ fn main() {
             }
         }
         [cmd] if cmd == "storm" => {
-            let shards = parse_shards(&parsed);
-            let nodes: u32 = match parsed.get("nodes").unwrap_or("256").parse()
-            {
-                Ok(n) if n >= 1 => n,
-                _ => {
-                    eprintln!("shifterimg: --nodes must be a positive integer");
-                    usage();
-                }
-            };
+            let nodes = parse_nodes(&parsed, 256);
             let tenants: u32 =
                 match parsed.get("tenants").unwrap_or("8").parse() {
                     Ok(n) if n >= 1 => n,
@@ -313,13 +328,11 @@ fn main() {
                     }
                 },
             };
-            let policy = match parsed.get("policy").unwrap_or("fair") {
-                "fair" | "fair-share" => SchedulingPolicy::FairShare,
-                "fifo" => SchedulingPolicy::Fifo,
-                _ => {
-                    eprintln!("shifterimg: --policy must be fair or fifo");
-                    usage();
-                }
+            let Some(policy) =
+                policy_by_name(parsed.get("policy").unwrap_or("fair"))
+            else {
+                eprintln!("shifterimg: --policy must be fair or fifo");
+                usage();
             };
             let seed: u64 = match parsed.get("seed").unwrap_or("7").parse() {
                 Ok(s) => s,
@@ -328,29 +341,22 @@ fn main() {
                     usage();
                 }
             };
-            let cluster = if parsed.has("hetero") {
-                if nodes < 2 {
-                    eprintln!("shifterimg: --hetero needs --nodes >= 2");
-                    usage();
-                }
-                LaunchCluster::daint_linux_split(nodes)
-            } else {
-                LaunchCluster::homogeneous(&profile, nodes)
-            };
+            let mut site = build_site(
+                site_builder(&profile, &parsed, nodes, parsed.has("hetero"))
+                    .scheduling_policy(policy)
+                    // strict retry: deterministic storm timings (the
+                    // multi-tenant scheduler's own default)
+                    .retry_policy(shifter_rs::launch::RetryPolicy::strict())
+                    .seed(seed),
+            );
             let model = TrafficModel {
                 tenants,
                 jobs,
                 arrival_rate_per_min: arrival_rate,
                 duration_secs: duration,
-                max_width: (nodes / 2).max(1),
-                seed,
-                ..TrafficModel::default()
+                ..site.default_traffic()
             };
-            let stream = model.generate(&cluster);
-            let mut fabric = DistributionFabric::new(shards, pfs);
-            let report = FairShareScheduler::new(&cluster, &registry)
-                .with_policy(policy)
-                .run(&mut fabric, &stream);
+            let report = site.storm(&model);
             print!("{}", report.render());
             if report.failed() > 0 {
                 std::process::exit(1);
@@ -360,12 +366,58 @@ fn main() {
     }
 }
 
-fn parse_shards(parsed: &shifter_rs::util::cli::ParsedArgs) -> usize {
+/// The common site declaration every subcommand shares: profile (or,
+/// when the subcommand honors `--hetero`, the two-partition split),
+/// node count, shard count. Single-node subcommands pass `hetero:
+/// false` — they ignore the flag exactly as they did before the facade.
+fn site_builder(
+    profile: &SystemProfile,
+    parsed: &ParsedArgs,
+    nodes: u32,
+    hetero: bool,
+) -> SiteBuilder {
+    let builder = Site::builder().gateway_shards(parse_shards(parsed));
+    if hetero {
+        if nodes < 2 {
+            eprintln!("shifterimg: --hetero needs --nodes >= 2");
+            usage();
+        }
+        builder.hetero_daint_linux(nodes)
+    } else {
+        builder.profile(profile.clone()).nodes(nodes)
+    }
+}
+
+/// Build the site, or exit with the builder's typed validation error.
+fn build_site(builder: SiteBuilder) -> Site {
+    match builder.build() {
+        Ok(site) => site,
+        Err(e) => {
+            eprintln!("shifterimg: invalid site: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse_shards(parsed: &ParsedArgs) -> usize {
     match parsed.get("shards").unwrap_or("4").parse() {
         Ok(n) if n >= 1 => n,
         _ => {
             eprintln!("shifterimg: --shards must be a positive integer");
             usage();
         }
+    }
+}
+
+fn parse_nodes(parsed: &ParsedArgs, default: u32) -> u32 {
+    match parsed.get("nodes") {
+        None => default,
+        Some(v) => match v.parse() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                eprintln!("shifterimg: --nodes must be a positive integer");
+                usage();
+            }
+        },
     }
 }

@@ -10,13 +10,22 @@
 
 use crate::hostenv::SystemProfile;
 
+/// One site-configured bind mount grafted into every container
+/// (`siteFs = /host:/container:rw|ro` in `udiRoot.conf`).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SiteMount {
+    /// Host directory to bind.
     pub host_path: String,
+    /// Mount target inside every container.
     pub container_path: String,
+    /// Whether the bind is read-only.
     pub read_only: bool,
 }
 
+/// The site runtime configuration — the `udiRoot.conf` a site
+/// administrator writes once (§IV.A/§IV.B site parameters), and the
+/// config input of the [`crate::Site`] facade
+/// ([`crate::SiteBuilder::config`] / [`crate::SiteBuilder::config_conf`]).
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct UdiRootConfig {
     /// Where the container root is assembled on each compute node.
@@ -39,10 +48,15 @@ pub struct UdiRootConfig {
     pub host_env_allowlist: Vec<String>,
 }
 
+/// `udiRoot.conf` parse failures, with 1-based line numbers.
 #[derive(Debug, thiserror::Error)]
+#[non_exhaustive]
 pub enum ConfigError {
+    /// The line is neither `key = value`, a comment, nor blank — or a
+    /// structured value (`siteFs`) is missing required fields.
     #[error("config line {0}: expected 'key = value'")]
     BadLine(usize),
+    /// The key is not part of the `udiRoot.conf` schema.
     #[error("unknown config key: {0}")]
     UnknownKey(String),
 }
@@ -135,16 +149,22 @@ impl UdiRootConfig {
             match k {
                 "udiMount" => cfg.udi_mount_point = v.to_string(),
                 "siteFs" => {
-                    let mut parts = v.split(':');
-                    let host = parts.next().unwrap_or("").to_string();
-                    let cont = parts.next().unwrap_or("").to_string();
-                    let ro = parts.next() == Some("ro");
+                    // strict: exactly host:container with an optional
+                    // ro/rw mode — a typoed mode flag must not silently
+                    // downgrade a read-only mount to read-write
+                    let parts: Vec<&str> = v.split(':').collect();
+                    let (host, cont, ro) = match parts.as_slice() {
+                        [h, c] => (*h, *c, false),
+                        [h, c, "ro"] => (*h, *c, true),
+                        [h, c, "rw"] => (*h, *c, false),
+                        _ => return Err(ConfigError::BadLine(i + 1)),
+                    };
                     if host.is_empty() || cont.is_empty() {
                         return Err(ConfigError::BadLine(i + 1));
                     }
                     cfg.site_mounts.push(SiteMount {
-                        host_path: host,
-                        container_path: cont,
+                        host_path: host.to_string(),
+                        container_path: cont.to_string(),
                         read_only: ro,
                     });
                 }
@@ -185,6 +205,117 @@ mod tests {
         let text = cfg.to_conf();
         let back = UdiRootConfig::from_conf(&text).unwrap();
         assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn parse_emit_parse_is_a_fixpoint_for_every_profile() {
+        // the facade's config input: parse -> emit -> parse must agree
+        // both structurally and textually for all three §V.A profiles
+        for profile in [
+            SystemProfile::laptop(),
+            SystemProfile::linux_cluster(),
+            SystemProfile::piz_daint(),
+        ] {
+            let cfg = UdiRootConfig::for_profile(&profile);
+            let text = cfg.to_conf();
+            let parsed = UdiRootConfig::from_conf(&text).unwrap();
+            assert_eq!(cfg, parsed, "{}", profile.name);
+            assert_eq!(
+                text,
+                parsed.to_conf(),
+                "{}: emit must be a fixpoint",
+                profile.name
+            );
+        }
+    }
+
+    #[test]
+    fn read_only_site_mounts_round_trip() {
+        let mut cfg = UdiRootConfig::for_profile(&SystemProfile::laptop());
+        cfg.site_mounts.push(SiteMount {
+            host_path: "/opt/site-tools".into(),
+            container_path: "/opt/tools".into(),
+            read_only: true,
+        });
+        let back = UdiRootConfig::from_conf(&cfg.to_conf()).unwrap();
+        assert_eq!(cfg, back);
+        let ro = back
+            .site_mounts
+            .iter()
+            .find(|m| m.container_path == "/opt/tools")
+            .unwrap();
+        assert!(ro.read_only);
+        // and the emitted line carries the flag explicitly
+        assert!(cfg.to_conf().contains("/opt/site-tools:/opt/tools:ro"));
+    }
+
+    #[test]
+    fn whitespace_and_inline_spacing_are_tolerated() {
+        let cfg = UdiRootConfig::from_conf(
+            "  udiMount   =   /var/udiMount  \n\
+             \tsiteFs = /scratch:/scratch:rw\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.udi_mount_point, "/var/udiMount");
+        assert_eq!(cfg.site_mounts.len(), 1);
+        assert!(!cfg.site_mounts[0].read_only);
+    }
+
+    #[test]
+    fn malformed_lines_report_their_line_number() {
+        // a bad line after valid ones must name its own (1-based) line
+        let text = "udiMount = /var/udiMount\n# fine\n\nnot a pair\n";
+        match UdiRootConfig::from_conf(text) {
+            Err(ConfigError::BadLine(4)) => {}
+            other => panic!("wrong: {other:?}"),
+        }
+        // a siteFs missing its container half is a bad line, not a
+        // silently half-parsed mount
+        match UdiRootConfig::from_conf("siteFs = /scratch") {
+            Err(ConfigError::BadLine(1)) => {}
+            other => panic!("wrong: {other:?}"),
+        }
+        // a typoed mode flag must be rejected, not silently parsed as rw
+        for bad in [
+            "siteFs = /a:/b:readonly",
+            "siteFs = /a:/b:r0",
+            "siteFs = /a:/b:ro:extra",
+        ] {
+            match UdiRootConfig::from_conf(bad) {
+                Err(ConfigError::BadLine(1)) => {}
+                other => panic!("{bad}: wrong: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_keys_name_the_offender() {
+        match UdiRootConfig::from_conf("udiRoot = /x") {
+            Err(ConfigError::UnknownKey(k)) => assert_eq!(k, "udiRoot"),
+            other => panic!("wrong: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn repeated_list_keys_accumulate_and_scalar_keys_overwrite() {
+        let cfg = UdiRootConfig::from_conf(
+            "hostEnv = A\nhostEnv = B\nudiMount = /first\nudiMount = /second\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.host_env_allowlist, vec!["A", "B"]);
+        assert_eq!(cfg.udi_mount_point, "/second");
+    }
+
+    #[test]
+    fn config_error_chains_through_the_site_facade() {
+        // ConfigError implements std::error::Error and surfaces as the
+        // source() of the facade's SiteError::Config wrapper
+        use std::error::Error as _;
+        let err = crate::Site::builder()
+            .config_conf("bogusKey = 1")
+            .unwrap_err();
+        let source = err.source().expect("SiteError::Config chains");
+        assert!(source.to_string().contains("bogusKey"), "{source}");
     }
 
     #[test]

@@ -22,6 +22,7 @@ use crate::image::Image;
 use crate::vfs::{MountTable, VirtualFs};
 
 #[derive(Debug, thiserror::Error)]
+#[non_exhaustive]
 pub enum DockerError {
     #[error("docker daemon not running")]
     DaemonDown,

@@ -17,6 +17,7 @@ use crate::vfs::SquashFs;
 
 /// What can go wrong between a pull request and a runnable image.
 #[derive(Debug, thiserror::Error)]
+#[non_exhaustive]
 pub enum GatewayError {
     /// The remote registry rejected the request (unknown image, …).
     #[error(transparent)]

@@ -75,6 +75,7 @@ pub fn daint_catalog() -> Vec<ModuleDef> {
 }
 
 #[derive(Debug, thiserror::Error, PartialEq)]
+#[non_exhaustive]
 pub enum ModuleError {
     #[error("module not found: {0}")]
     NotFound(String),

@@ -28,7 +28,9 @@ pub use scheduler::{LaunchError, LaunchScheduler, RetryPolicy};
 
 use std::sync::Arc;
 
+use crate::config::UdiRootConfig;
 use crate::hostenv::SystemProfile;
+use crate::shifter::ShifterRuntime;
 
 /// What the user hands to `shifterimg launch` / the batch system: one
 /// containerized job spanning `nodes` compute nodes.
@@ -122,6 +124,20 @@ impl Partition {
     pub fn shared_profile(&self) -> Arc<SystemProfile> {
         Arc::clone(&self.profile)
     }
+
+    /// A runtime for this partition: configured with the site
+    /// `udiRoot.conf` when one is given, else with the stock per-profile
+    /// config — the single wiring point the launch scheduler and the
+    /// `Site` facade share.
+    pub fn runtime(&self, config: Option<&UdiRootConfig>) -> ShifterRuntime {
+        match config {
+            Some(c) => ShifterRuntime::shared_with_config(
+                self.shared_profile(),
+                c.clone(),
+            ),
+            None => ShifterRuntime::shared(self.shared_profile()),
+        }
+    }
 }
 
 /// The whole machine a job launches onto: partitions in node-id order.
@@ -170,23 +186,35 @@ impl LaunchCluster {
         LaunchCluster::new().with_partition(base.name, base, nodes)
     }
 
-    /// The stock heterogeneous machine the CLI's `--hetero` flag and the
-    /// `launch_scale` bench share: half Piz Daint (P100, driver 375.66,
-    /// Cray MPT), half Linux Cluster (K40m/K80, driver 367.48, MVAPICH2).
+    /// The stock heterogeneous split as `(name, profile, nodes)` triples
+    /// — the single source of truth [`LaunchCluster::daint_linux_split`]
+    /// and `SiteBuilder::hetero_daint_linux` share: half Piz Daint (P100,
+    /// driver 375.66, Cray MPT), half Linux Cluster (K40m/K80, driver
+    /// 367.48, MVAPICH2).
+    pub fn daint_linux_partitions(
+        nodes: u32,
+    ) -> [(&'static str, SystemProfile, u32); 2] {
+        let daint_share = nodes / 2;
+        [
+            ("daint-xc50", SystemProfile::piz_daint(), daint_share),
+            (
+                "linux-cluster",
+                SystemProfile::linux_cluster(),
+                nodes - daint_share,
+            ),
+        ]
+    }
+
+    /// The stock heterogeneous machine built from
+    /// [`LaunchCluster::daint_linux_partitions`] (panics below 2 nodes;
+    /// the `Site` facade surfaces the same condition as a typed error).
     pub fn daint_linux_split(nodes: u32) -> LaunchCluster {
         assert!(nodes >= 2, "a two-partition split needs at least 2 nodes");
-        let daint_share = nodes / 2;
-        LaunchCluster::new()
-            .with_partition(
-                "daint-xc50",
-                &SystemProfile::piz_daint(),
-                daint_share,
-            )
-            .with_partition(
-                "linux-cluster",
-                &SystemProfile::linux_cluster(),
-                nodes - daint_share,
-            )
+        let mut cluster = LaunchCluster::new();
+        for (name, profile, share) in Self::daint_linux_partitions(nodes) {
+            cluster = cluster.with_partition(name, &profile, share);
+        }
+        cluster
     }
 
     /// Total nodes across all partitions.

@@ -21,6 +21,7 @@
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use crate::config::UdiRootConfig;
 use crate::distrib::{DistributionFabric, NodeCache};
 use crate::gateway::{ImageSource, PullState};
 use crate::registry::Registry;
@@ -39,6 +40,7 @@ const PULL_DRAIN_SECS: f64 = 1e9;
 /// slots can be planned. Per-slot failures land in
 /// [`super::report::NodeResult::error`] instead.
 #[derive(Debug, thiserror::Error)]
+#[non_exhaustive]
 pub enum LaunchError {
     /// The WLM rejected the job outright (e.g. more nodes than exist).
     #[error(transparent)]
@@ -121,6 +123,7 @@ pub struct LaunchScheduler<'a> {
     registry: &'a Registry,
     policy: RetryPolicy,
     workers: usize,
+    config: Option<UdiRootConfig>,
 }
 
 impl<'a> LaunchScheduler<'a> {
@@ -138,6 +141,7 @@ impl<'a> LaunchScheduler<'a> {
             registry,
             policy: RetryPolicy::default(),
             workers,
+            config: None,
         }
     }
 
@@ -151,6 +155,17 @@ impl<'a> LaunchScheduler<'a> {
     /// Cap the worker-pool width (clamped to at least 1).
     pub fn with_workers(mut self, workers: usize) -> LaunchScheduler<'a> {
         self.workers = workers.max(1);
+        self
+    }
+
+    /// Run every per-partition runtime with this site `udiRoot.conf`
+    /// instead of the stock per-profile config — the knob
+    /// [`crate::SiteBuilder::config`] plumbs down to node execution.
+    pub fn with_config(
+        mut self,
+        config: UdiRootConfig,
+    ) -> LaunchScheduler<'a> {
+        self.config = Some(config);
         self
     }
 
@@ -216,7 +231,7 @@ impl<'a> LaunchScheduler<'a> {
             .cluster
             .partitions()
             .iter()
-            .map(|p| ShifterRuntime::shared(p.shared_profile()))
+            .map(|p| p.runtime(self.config.as_ref()))
             .collect();
         let fabric_ref: &DistributionFabric = fabric;
         let next = AtomicUsize::new(0);

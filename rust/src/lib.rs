@@ -22,18 +22,24 @@
 //! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and the
 //! containerized applications execute the identical compiled bits natively
 //! and inside Shifter — the paper's performance-portability claim,
-//! reproduced end to end. Repo-level docs: `README.md` (orientation and
-//! quickstart), `DESIGN.md` (S1–S20 architecture), `EXPERIMENTS.md`
-//! (bench → paper-table matrix, knobs, artifacts).
+//! reproduced end to end.
+//!
+//! The typed entry point over the whole stack is the [`Site`] facade
+//! (`site::`): a [`SiteBuilder`] validates the operator's knobs once and
+//! returns a handle with `pull` / `run` / `launch` / `storm` operations,
+//! so user workflows never hand-wire the layers. Repo-level docs:
+//! `README.md` (orientation and quickstart), `DESIGN.md` (S1–S21
+//! architecture), `EXPERIMENTS.md` (bench → paper-table matrix, knobs,
+//! artifacts).
 
-// The rustdoc pass (ISSUE 3) proceeds module by module: `launch`,
-// `distrib`, `gateway` and `tenancy` are fully documented and enforced;
-// the substrate modules below opt out until their own pass lands.
+// The rustdoc pass proceeds module by module: `launch`, `distrib`,
+// `gateway`, `tenancy`, `site`, `shifter` and `config` are fully
+// documented and enforced; the substrate modules below opt out until
+// their own pass lands.
 #![warn(missing_docs)]
 
 #[allow(missing_docs)]
 pub mod apps;
-#[allow(missing_docs)]
 pub mod config;
 pub mod distrib;
 #[allow(missing_docs)]
@@ -58,8 +64,8 @@ pub mod pfs;
 pub mod registry;
 #[allow(missing_docs)]
 pub mod runtime;
-#[allow(missing_docs)]
 pub mod shifter;
+pub mod site;
 pub mod tenancy;
 #[allow(missing_docs)]
 pub mod util;
@@ -74,4 +80,7 @@ pub use hostenv::SystemProfile;
 pub use launch::{JobSpec, LaunchCluster, LaunchReport, LaunchScheduler};
 pub use registry::Registry;
 pub use shifter::{Container, RunOptions, ShifterRuntime};
-pub use tenancy::{FairShareScheduler, TenancyReport, TrafficModel};
+pub use site::{PullOutcome, Site, SiteBuilder, SiteError};
+pub use tenancy::{
+    FairShareScheduler, SchedulingPolicy, TenancyReport, TrafficModel,
+};

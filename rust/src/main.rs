@@ -9,9 +9,9 @@
 //! `--system` selects one of the three §V.A host profiles (we are not
 //! actually on a Cray); the rest is the real Shifter surface.
 
-use shifter_rs::shifter::{RunOptions, ShifterRuntime};
+use shifter_rs::shifter::RunOptions;
 use shifter_rs::util::cli::CliSpec;
-use shifter_rs::{ImageGateway, Registry, SystemProfile};
+use shifter_rs::{Site, SystemProfile};
 
 fn usage() -> ! {
     eprintln!(
@@ -59,19 +59,15 @@ fn main() {
         }
     };
 
-    // gateway with the image pre-pulled (one-command demo convenience;
-    // `shifterimg` is the real pull interface)
-    let registry = Registry::dockerhub();
-    let mut gateway = ImageGateway::new(
-        profile
-            .pfs
-            .clone()
-            .unwrap_or_else(shifter_rs::pfs::LustreFs::piz_daint),
-    );
-    if let Err(e) = gateway.pull(&registry, image) {
-        eprintln!("shifter: image error: {e}");
-        std::process::exit(1);
-    }
+    // a single-node site wired through the facade — `Site::run` pulls
+    // the image on demand (`shifterimg` is the real pull interface)
+    let mut site = match Site::builder().profile(profile).nodes(1).build() {
+        Ok(site) => site,
+        Err(e) => {
+            eprintln!("shifter: invalid site: {e}");
+            std::process::exit(2);
+        }
+    };
 
     let cmd: Vec<&str> = parsed.positionals.iter().map(|s| s.as_str()).collect();
     let mut opts = RunOptions::new(image, &cmd);
@@ -89,8 +85,7 @@ fn main() {
         }
     }
 
-    let runtime = ShifterRuntime::new(&profile);
-    match runtime.run(&gateway, &opts) {
+    match site.run(&opts) {
         Ok(container) => {
             if parsed.has("verbose") {
                 eprint!("{}", container.stage_log.render());

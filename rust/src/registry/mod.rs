@@ -8,6 +8,7 @@ use std::collections::BTreeMap;
 use crate::image::{builder, Image, ImageRef};
 
 #[derive(Debug, thiserror::Error)]
+#[non_exhaustive]
 pub enum RegistryError {
     #[error("image not found in registry: {0}")]
     NotFound(String),

@@ -57,6 +57,7 @@ pub struct ArtifactSpec {
 }
 
 #[derive(Debug, thiserror::Error)]
+#[non_exhaustive]
 pub enum ArtifactError {
     #[error("cannot read {0}: {1}")]
     Io(PathBuf, std::io::Error),

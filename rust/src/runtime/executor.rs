@@ -22,6 +22,7 @@ use super::artifact::{ArtifactCatalog, ArtifactError, ArtifactSpec, Dtype};
 use super::xla_shim as xla;
 
 #[derive(Debug, thiserror::Error)]
+#[non_exhaustive]
 pub enum ExecError {
     #[error(transparent)]
     Artifact(#[from] ArtifactError),

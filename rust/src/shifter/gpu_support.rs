@@ -22,24 +22,38 @@ use crate::vfs::{MountTable, VNode, VirtualFs};
 /// Where driver libraries land inside the container (prepended to the
 /// container's library search path via ld.so.conf injection).
 pub const CONTAINER_GPU_LIB_DIR: &str = "/usr/lib64/shifter-gpu";
+/// Where NVIDIA binaries (nvidia-smi) land inside the container.
 pub const CONTAINER_GPU_BIN_DIR: &str = "/usr/bin";
 
+/// Failures of the §IV.A GPU support procedure (the trigger variable was
+/// present and valid, but activation could not complete).
 #[derive(Debug, thiserror::Error, PartialEq)]
+#[non_exhaustive]
 pub enum GpuSupportError {
+    /// The host has no loaded nvidia-uvm kernel driver.
     #[error("nvidia-uvm driver is not loaded on the host")]
     DriverNotLoaded,
+    /// CUDA_VISIBLE_DEVICES named a device id the host does not have.
     #[error("CUDA_VISIBLE_DEVICES requests device {0} but host has {1} devices")]
     DeviceOutOfRange(u32, u32),
+    /// The container's CUDA toolkit is newer than the host driver
+    /// supports (§II-B2 PTX forward-compatibility).
     #[error(
         "container was built for CUDA {wanted_major}.{wanted_minor} but host \
          driver {driver_major}.{driver_minor} is too old"
     )]
     CudaIncompatible {
+        /// CUDA major version the image was built for.
         wanted_major: u32,
+        /// CUDA minor version the image was built for.
         wanted_minor: u32,
+        /// Host driver major version.
         driver_major: u32,
+        /// Host driver minor version.
         driver_minor: u32,
     },
+    /// A driver library or binary named by the config is absent on the
+    /// host filesystem.
     #[error("host driver library missing: {0}")]
     MissingHostLibrary(String),
 }

@@ -15,22 +15,32 @@ use crate::image::builder::{LABEL_MPI_ABI, LABEL_MPI_VENDOR, LABEL_MPI_VERSION};
 use crate::mpi::{LibtoolAbi, MpiImpl, MpiVendor, MPICH_ABI_SONAME};
 use crate::vfs::{MountTable, VirtualFs};
 
+/// Failures of the §IV.B MPI library swap.
 #[derive(Debug, thiserror::Error, PartialEq)]
+#[non_exhaustive]
 pub enum MpiSupportError {
+    /// `--mpi` was passed but the image carries no MPI library.
     #[error("--mpi requested but the image contains no MPI library")]
     NoMpiInImage,
+    /// The image's MPI ABI labels could not be parsed.
     #[error("container MPI has unparsable ABI metadata: {0}")]
     BadAbiMetadata(String),
+    /// The libtool ABI-string comparison refused the swap.
     #[error(
         "container MPI ({container}) is not ABI-compatible with host MPI \
          ({host}): libtool strings {container_abi} vs {host_abi}"
     )]
     AbiIncompatible {
+        /// The container MPI's version string.
         container: String,
+        /// The host MPI's version string.
         host: String,
+        /// The container MPI's libtool ABI string.
         container_abi: String,
+        /// The host MPI's libtool ABI string.
         host_abi: String,
     },
+    /// A host MPI library/config path named by `udiRoot.conf` is absent.
     #[error("host MPI library missing on this system: {0}")]
     MissingHostLibrary(String),
 }
@@ -38,11 +48,15 @@ pub enum MpiSupportError {
 /// What the MPI swap did.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MpiSupportReport {
+    /// The container's own MPI (version string).
     pub container_mpi: String,
+    /// The host MPI swapped in (version string).
     pub host_mpi: String,
     /// (container path shadowed, host path mounted over it)
     pub swapped: Vec<(String, String)>,
+    /// Host transport libraries mounted at their host paths.
     pub dependencies: Vec<String>,
+    /// Host MPI configuration files/folders mounted in.
     pub config_files: Vec<String>,
 }
 

@@ -13,12 +13,16 @@ use crate::hostenv::SystemProfile;
 /// A kernel version, parsed from "3.12.60"-style strings.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub struct KernelVersion {
+    /// Major version (the `3` in 3.12.60).
     pub major: u32,
+    /// Minor version (the `12` in 3.12.60).
     pub minor: u32,
+    /// Patch level (the `60` in 3.12.60; 0 when absent).
     pub patch: u32,
 }
 
 impl KernelVersion {
+    /// Parse a `3.12.60` / `3.10.0-514`-style version string.
     pub fn parse(s: &str) -> Option<KernelVersion> {
         let mut it = s.split(['.', '-']).map(|p| p.parse::<u32>().ok());
         Some(KernelVersion {
@@ -28,6 +32,7 @@ impl KernelVersion {
         })
     }
 
+    /// Build a version literal.
     pub const fn new(major: u32, minor: u32, patch: u32) -> KernelVersion {
         KernelVersion {
             major,
@@ -81,14 +86,19 @@ pub const DOCKER_REQUIREMENTS: [KernelFeature; 4] = [
     KernelFeature::OverlayFs,
 ];
 
+/// Outcome of checking a requirement set against a host kernel.
 #[derive(Debug, Clone)]
 pub struct PreflightReport {
+    /// The host kernel that was checked.
     pub kernel: KernelVersion,
+    /// Requirements the kernel provides.
     pub satisfied: Vec<KernelFeature>,
+    /// Requirements the kernel lacks (empty means the host can run).
     pub missing: Vec<KernelFeature>,
 }
 
 impl PreflightReport {
+    /// Whether every requirement is satisfied.
     pub fn ok(&self) -> bool {
         self.missing.is_empty()
     }

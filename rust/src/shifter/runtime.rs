@@ -20,18 +20,28 @@ use super::mpi_support::{self, MpiSupportError, MpiSupportReport};
 use super::stages::{PrivilegeState, Stage, StageError, StageLog};
 use super::volume::{VolumeError, VolumeSpec, TMPFS_DIRS};
 
+/// Everything that can fail between `shifter --image=<ref> <cmd>` and a
+/// prepared container: image resolution, the support extensions, the
+/// stage machine, volume policy, or in-container execution.
 #[derive(Debug, thiserror::Error)]
+#[non_exhaustive]
 pub enum ShifterError {
+    /// Image resolution against the gateway/fabric failed.
     #[error(transparent)]
     Gateway(#[from] GatewayError),
+    /// The §IV.A GPU support procedure failed.
     #[error(transparent)]
     Gpu(#[from] GpuSupportError),
+    /// The §IV.B MPI library swap failed.
     #[error(transparent)]
     Mpi(#[from] MpiSupportError),
+    /// The §III.A stage machine rejected an execution step.
     #[error(transparent)]
     Stage(#[from] StageError),
+    /// A user volume violated site policy.
     #[error(transparent)]
     Volume(#[from] VolumeError),
+    /// The containerized command itself failed.
     #[error("command failed in container: {0}")]
     Exec(String),
 }
@@ -39,11 +49,15 @@ pub enum ShifterError {
 /// `shifter --image=<image> [--mpi] <command…>` plus launch context.
 #[derive(Debug, Clone)]
 pub struct RunOptions {
+    /// Image reference to run.
     pub image: String,
+    /// Command executed inside the container.
     pub command: Vec<String>,
     /// `--mpi`: activate the §IV.B library swap.
     pub mpi: bool,
+    /// Numeric uid of the invoking user (privileges drop to this).
     pub invoking_uid: u32,
+    /// Numeric gid of the invoking user.
     pub invoking_gid: u32,
     /// Process environment at launch (user shell or WLM-injected).
     pub env: BTreeMap<String, String>,
@@ -57,6 +71,8 @@ pub struct RunOptions {
 }
 
 impl RunOptions {
+    /// Options for `shifter --image=<image> <command…>` with default
+    /// credentials (uid/gid 1000), no extensions, node 0.
     pub fn new(image: &str, command: &[&str]) -> RunOptions {
         RunOptions {
             image: image.to_string(),
@@ -78,16 +94,21 @@ impl RunOptions {
         self
     }
 
+    /// `--mpi`: activate the §IV.B library swap.
     pub fn with_mpi(mut self) -> RunOptions {
         self.mpi = true;
         self
     }
 
+    /// Set one launch-environment variable (e.g. `CUDA_VISIBLE_DEVICES`,
+    /// the §IV.A GPU-support trigger).
     pub fn with_env(mut self, k: &str, v: &str) -> RunOptions {
         self.env.insert(k.to_string(), v.to_string());
         self
     }
 
+    /// Place the run on node `node` with `concurrent` peers starting the
+    /// same container simultaneously (drives the PFS contention model).
     pub fn on_nodes(mut self, node: usize, concurrent: u32) -> RunOptions {
         self.node = node;
         self.concurrent_nodes = concurrent;
@@ -98,14 +119,24 @@ impl RunOptions {
 /// A fully prepared container, post-Execute stage.
 #[derive(Debug, Clone)]
 pub struct Container {
+    /// Canonical reference of the image this container runs.
     pub image: String,
+    /// The container's filesystem tree after all grafts and mounts.
     pub rootfs: VirtualFs,
+    /// Every mount the preparation stage performed, with its origin.
     pub mounts: MountTable,
+    /// The exported container environment (image env + allowlisted host
+    /// vars).
     pub env: BTreeMap<String, String>,
+    /// §IV.A GPU-support report, when the trigger variable activated it.
     pub gpu: Option<GpuSupportReport>,
+    /// §IV.B MPI-swap report, when `--mpi` activated it.
     pub mpi: Option<MpiSupportReport>,
+    /// Docker-style manifest carried over from the image.
     pub manifest: ImageManifest,
+    /// Auditable log of the executed §III.A stages with simulated costs.
     pub stage_log: StageLog,
+    /// Final uid/gid state (privileges dropped to the invoking user).
     pub privileges: PrivilegeState,
 }
 
@@ -250,6 +281,7 @@ impl Container {
 #[derive(Clone)]
 pub struct ShifterRuntime {
     profile: Arc<SystemProfile>,
+    /// The site `udiRoot.conf` this runtime was configured with.
     pub config: UdiRootConfig,
     host_fs: VirtualFs,
 }
@@ -266,10 +298,12 @@ const CLEANUP_SECS: f64 = 8e-3;
 const LOCAL_DISK_BYTES_PER_SEC: f64 = 500e6;
 
 impl ShifterRuntime {
+    /// Runtime for `profile` with the stock per-profile `udiRoot.conf`.
     pub fn new(profile: &SystemProfile) -> ShifterRuntime {
         Self::shared(Arc::new(profile.clone()))
     }
 
+    /// Runtime for `profile` with an explicit site `udiRoot.conf`.
     pub fn with_config(
         profile: &SystemProfile,
         config: UdiRootConfig,
@@ -284,6 +318,7 @@ impl ShifterRuntime {
         Self::shared_with_config(profile, config)
     }
 
+    /// [`ShifterRuntime::shared`] with an explicit site `udiRoot.conf`.
     pub fn shared_with_config(
         profile: Arc<SystemProfile>,
         config: UdiRootConfig,
@@ -296,10 +331,13 @@ impl ShifterRuntime {
         }
     }
 
+    /// The host profile this runtime executes on.
     pub fn profile(&self) -> &SystemProfile {
         &self.profile
     }
 
+    /// The host filesystem model site mounts and support libraries come
+    /// from.
     pub fn host_fs(&self) -> &VirtualFs {
         &self.host_fs
     }

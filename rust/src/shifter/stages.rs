@@ -10,6 +10,7 @@
 
 use std::fmt;
 
+/// One of the §III.A execution stages, in pipeline order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Stage {
     /// Runtime entry: resolve image on the gateway.
@@ -41,6 +42,7 @@ impl Stage {
         Stage::Cleanup,
     ];
 
+    /// Stable kebab-case stage name for logs and reports.
     pub fn name(&self) -> &'static str {
         match self {
             Stage::ResolveImage => "resolve-image",
@@ -78,9 +80,13 @@ impl fmt::Display for Stage {
 /// starts with euid 0 and must drop to the invoking user before Execute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PrivilegeState {
+    /// Real uid of the invoking user.
     pub real_uid: u32,
+    /// Real gid of the invoking user.
     pub real_gid: u32,
+    /// Effective uid (0 until the DropPrivileges stage).
     pub effective_uid: u32,
+    /// Effective gid (0 until the DropPrivileges stage).
     pub effective_gid: u32,
 }
 
@@ -95,6 +101,8 @@ impl PrivilegeState {
         }
     }
 
+    /// Whether the process still runs with the setuid-root euid while
+    /// invoked by a non-root user.
     pub fn is_elevated(&self) -> bool {
         self.effective_uid == 0 && self.real_uid != 0
     }
@@ -110,8 +118,11 @@ impl PrivilegeState {
 /// One executed stage with its audit detail and simulated wall-clock cost.
 #[derive(Debug, Clone)]
 pub struct StageRecord {
+    /// Which stage ran.
     pub stage: Stage,
+    /// Audit detail (what the stage actually did).
     pub detail: String,
+    /// Simulated wall-clock cost of the stage in seconds.
     pub sim_secs: f64,
 }
 
@@ -121,17 +132,28 @@ pub struct StageLog {
     records: Vec<StageRecord>,
 }
 
+/// Violations of the §III.A stage order or the privilege discipline.
 #[derive(Debug, thiserror::Error)]
+#[non_exhaustive]
 pub enum StageError {
+    /// A stage ran outside the §III.A pipeline order.
     #[error("stage {got} executed out of order (expected {expected})")]
-    OutOfOrder { got: Stage, expected: Stage },
+    OutOfOrder {
+        /// The stage that was attempted.
+        got: Stage,
+        /// The stage the pipeline order expected next.
+        expected: Stage,
+    },
+    /// A root-only stage ran after privileges were already dropped.
     #[error("stage {0} requires privileges but effective uid is {1}")]
     NotPrivileged(Stage, u32),
+    /// A user stage ran while the effective uid was still 0.
     #[error("stage {0} must not run with elevated privileges")]
     StillPrivileged(Stage),
 }
 
 impl StageLog {
+    /// An empty stage log.
     pub fn new() -> StageLog {
         StageLog::default()
     }
@@ -171,18 +193,22 @@ impl StageLog {
         Ok(())
     }
 
+    /// The executed stages, in order.
     pub fn records(&self) -> &[StageRecord] {
         &self.records
     }
 
+    /// Total simulated cost across all recorded stages.
     pub fn total_sim_secs(&self) -> f64 {
         self.records.iter().map(|r| r.sim_secs).sum()
     }
 
+    /// Whether every §III.A stage ran (the container reached Cleanup).
     pub fn completed(&self) -> bool {
         self.records.len() == Stage::ORDER.len()
     }
 
+    /// Human-readable audit table (`shifter --verbose`).
     pub fn render(&self) -> String {
         let mut s = String::new();
         for r in &self.records {

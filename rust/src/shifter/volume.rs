@@ -8,21 +8,31 @@
 
 use crate::vfs::{normalize, VirtualFs};
 
+/// One parsed `--volume=/host:/container[:ro]` user mount request.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct VolumeSpec {
+    /// Host directory to bind into the container.
     pub host_path: String,
+    /// Mount target inside the container.
     pub container_path: String,
+    /// Whether the bind is read-only (`:ro`).
     pub read_only: bool,
 }
 
+/// User-volume parse and site-policy failures.
 #[derive(Debug, thiserror::Error, PartialEq)]
+#[non_exhaustive]
 pub enum VolumeError {
+    /// The spec did not match `/host:/container[:ro|:rw]`.
     #[error("malformed volume spec '{0}' (expected /host:/container[:ro])")]
     Malformed(String),
+    /// The named host directory does not exist.
     #[error("volume host path does not exist: {0}")]
     HostPathMissing(String),
+    /// The target would shadow a system-critical container path.
     #[error("volume target {0} is reserved and cannot be mounted over")]
     ReservedTarget(String),
+    /// A path was relative or not normalizable.
     #[error("volume path is not absolute or not normalized: {0}")]
     BadPath(String),
 }

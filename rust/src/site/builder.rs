@@ -1,0 +1,400 @@
+//! The declarative site builder: every operator knob in one place,
+//! validated once at [`SiteBuilder::build`].
+
+use crate::config::UdiRootConfig;
+use crate::distrib::{DistributionFabric, DEFAULT_NODE_CACHE_BYTES};
+use crate::hostenv::SystemProfile;
+use crate::launch::{LaunchCluster, RetryPolicy};
+use crate::pfs::LustreFs;
+use crate::registry::Registry;
+use crate::shifter::ShifterRuntime;
+use crate::tenancy::{FairShare, SchedulingPolicy};
+
+use super::error::SiteError;
+use super::Site;
+
+/// Floor on the per-node squashfs cache: below this not even the
+/// smallest catalog image fits, and every container start would thrash
+/// the cache ([`SiteError::NodeCacheTooSmall`]).
+pub const MIN_NODE_CACHE_BYTES: u64 = 50_000_000;
+
+/// Declares a [`Site`]: the host profile or explicit partitions, the
+/// gateway shard count, node-cache capacity, `udiRoot.conf`, the
+/// launch retry policy, the storm scheduling policy, and the workload
+/// seed. `build()` validates the combination and wires the full stack —
+/// fabric, launch cluster, per-partition runtimes — exactly once.
+///
+/// ```
+/// use shifter_rs::shifter::RunOptions;
+/// use shifter_rs::{JobSpec, Site, SystemProfile};
+///
+/// let mut site = Site::builder()
+///     .profile(SystemProfile::piz_daint())
+///     .nodes(4)
+///     .gateway_shards(2)
+///     .build()
+///     .unwrap();
+///
+/// // §III.B end-user workflow, all through the one handle:
+/// let pull = site.pull("ubuntu:xenial").unwrap();
+/// assert!(pull.turnaround_secs > 0.0);
+/// let container = site
+///     .run(&RunOptions::new("ubuntu:xenial", &["cat", "/etc/os-release"]))
+///     .unwrap();
+/// assert!(container.read_file("/etc/os-release").is_some());
+/// let report = site
+///     .launch(&JobSpec::new("ubuntu:xenial", &["true"], 4))
+///     .unwrap();
+/// assert_eq!(report.succeeded(), 4);
+/// ```
+pub struct SiteBuilder {
+    base_profile: SystemProfile,
+    nodes: u32,
+    partitions: Vec<(String, SystemProfile, u32)>,
+    shards: usize,
+    node_cache_bytes: u64,
+    config: Option<UdiRootConfig>,
+    retry: Option<RetryPolicy>,
+    policy: Box<dyn SchedulingPolicy>,
+    registry: Option<Registry>,
+    pfs: Option<LustreFs>,
+    seed: u64,
+    workers: Option<usize>,
+}
+
+impl Default for SiteBuilder {
+    fn default() -> SiteBuilder {
+        SiteBuilder::new()
+    }
+}
+
+impl SiteBuilder {
+    /// A single-node Piz Daint site with stock knobs: 4 gateway shards,
+    /// the default node-cache capacity, per-profile `udiRoot.conf`, the
+    /// default launch retry policy, fair-share + backfill scheduling,
+    /// seed 7.
+    pub fn new() -> SiteBuilder {
+        SiteBuilder {
+            base_profile: SystemProfile::piz_daint(),
+            nodes: 1,
+            partitions: Vec::new(),
+            shards: 4,
+            node_cache_bytes: DEFAULT_NODE_CACHE_BYTES,
+            config: None,
+            retry: None,
+            policy: Box::new(FairShare::default()),
+            registry: None,
+            pfs: None,
+            seed: 7,
+            workers: None,
+        }
+    }
+
+    /// Base host profile for a homogeneous site (ignored once explicit
+    /// [`SiteBuilder::partition`]s are declared).
+    pub fn profile(mut self, profile: SystemProfile) -> SiteBuilder {
+        self.base_profile = profile;
+        self
+    }
+
+    /// Node count of the homogeneous site (ignored once explicit
+    /// [`SiteBuilder::partition`]s are declared).
+    pub fn nodes(mut self, nodes: u32) -> SiteBuilder {
+        self.nodes = nodes;
+        self
+    }
+
+    /// Append an explicit partition of `nodes` identical nodes modeled
+    /// on `base` — call repeatedly to describe a heterogeneous machine.
+    pub fn partition(
+        mut self,
+        name: &str,
+        base: &SystemProfile,
+        nodes: u32,
+    ) -> SiteBuilder {
+        self.partitions
+            .push((name.to_string(), base.clone(), nodes));
+        self
+    }
+
+    /// The stock heterogeneous split the CLI's `--hetero` flag and the
+    /// scale benches share — [`LaunchCluster::daint_linux_partitions`] is
+    /// the single definition: half Piz Daint (P100, driver 375.66, Cray
+    /// MPT), half Linux Cluster (K40m/K80, driver 367.48, MVAPICH2). A
+    /// width below 2 surfaces as [`SiteError::EmptyPartition`] at
+    /// `build()`, not a panic.
+    pub fn hetero_daint_linux(mut self, nodes: u32) -> SiteBuilder {
+        for (name, profile, share) in
+            LaunchCluster::daint_linux_partitions(nodes)
+        {
+            self = self.partition(name, &profile, share);
+        }
+        self
+    }
+
+    /// Gateway shard count of the distribution fabric (>= 1).
+    pub fn gateway_shards(mut self, shards: usize) -> SiteBuilder {
+        self.shards = shards;
+        self
+    }
+
+    /// Per-node squashfs cache capacity in bytes (>=
+    /// [`MIN_NODE_CACHE_BYTES`]).
+    pub fn node_cache_bytes(mut self, bytes: u64) -> SiteBuilder {
+        self.node_cache_bytes = bytes;
+        self
+    }
+
+    /// Site `udiRoot.conf` applied to every runtime and launch (the
+    /// default derives one per partition from its profile).
+    pub fn config(mut self, config: UdiRootConfig) -> SiteBuilder {
+        self.config = Some(config);
+        self
+    }
+
+    /// Parse a `udiRoot.conf` text (the `key = value` format a site
+    /// administrator writes) and apply it like [`SiteBuilder::config`].
+    pub fn config_conf(self, text: &str) -> Result<SiteBuilder, SiteError> {
+        let config = UdiRootConfig::from_conf(text)?;
+        Ok(self.config(config))
+    }
+
+    /// Straggler/retry policy for every launch and storm this site runs.
+    /// When unset, each layer keeps its historical default: launches use
+    /// `RetryPolicy::default()` (jitter + straggler relaunch), storms use
+    /// `RetryPolicy::strict()` (deterministic per-node timings).
+    pub fn retry_policy(mut self, retry: RetryPolicy) -> SiteBuilder {
+        self.retry = Some(retry);
+        self
+    }
+
+    /// Queue policy storms run under ([`crate::tenancy::FairShare`] by
+    /// default; any [`SchedulingPolicy`] object plugs in).
+    pub fn scheduling_policy(
+        mut self,
+        policy: Box<dyn SchedulingPolicy>,
+    ) -> SiteBuilder {
+        self.policy = policy;
+        self
+    }
+
+    /// Resolve images against this registry instead of the stock Docker
+    /// Hub catalog (e.g. after `registry.push(image)` of a locally built
+    /// image).
+    pub fn registry(mut self, registry: Registry) -> SiteBuilder {
+        self.registry = Some(registry);
+        self
+    }
+
+    /// Parallel filesystem the gateway shards store to (default: the
+    /// primary partition profile's PFS, else the Piz Daint model).
+    pub fn pfs(mut self, pfs: LustreFs) -> SiteBuilder {
+        self.pfs = Some(pfs);
+        self
+    }
+
+    /// Deterministic seed for synthesized workloads
+    /// ([`Site::default_traffic`]).
+    pub fn seed(mut self, seed: u64) -> SiteBuilder {
+        self.seed = seed;
+        self
+    }
+
+    /// Cap the launch worker-pool width (default: one per host core).
+    pub fn workers(mut self, workers: usize) -> SiteBuilder {
+        self.workers = Some(workers);
+        self
+    }
+
+    /// Validate the declared knobs and wire the stack. Conflicting or
+    /// impossible combinations return typed [`SiteError`] variants —
+    /// never panics.
+    pub fn build(self) -> Result<Site, SiteError> {
+        if self.shards == 0 {
+            return Err(SiteError::NoShards);
+        }
+        if self.node_cache_bytes < MIN_NODE_CACHE_BYTES {
+            return Err(SiteError::NodeCacheTooSmall {
+                bytes: self.node_cache_bytes,
+                floor: MIN_NODE_CACHE_BYTES,
+            });
+        }
+        if self.retry.is_some_and(|r| r.max_attempts == 0) {
+            return Err(SiteError::BadRetryPolicy);
+        }
+
+        // -- partitions ---------------------------------------------------
+        let cluster = if self.partitions.is_empty() {
+            if self.nodes == 0 {
+                return Err(SiteError::EmptyCluster);
+            }
+            if self.base_profile.nodes.is_empty() {
+                return Err(SiteError::NoNodeSpec(
+                    self.base_profile.name.to_string(),
+                ));
+            }
+            LaunchCluster::homogeneous(&self.base_profile, self.nodes)
+        } else {
+            let mut cluster = LaunchCluster::new();
+            for (name, profile, nodes) in &self.partitions {
+                if *nodes == 0 {
+                    return Err(SiteError::EmptyPartition(name.clone()));
+                }
+                if profile.nodes.is_empty() {
+                    return Err(SiteError::NoNodeSpec(
+                        profile.name.to_string(),
+                    ));
+                }
+                cluster = cluster.with_partition(name, profile, *nodes);
+            }
+            cluster
+        };
+
+        // -- fabric -------------------------------------------------------
+        let pfs = self.pfs.unwrap_or_else(|| {
+            cluster.partitions()[0]
+                .profile()
+                .pfs
+                .clone()
+                .unwrap_or_else(LustreFs::piz_daint)
+        });
+        let fabric = DistributionFabric::new(self.shards, pfs)
+            .with_node_cache_bytes(self.node_cache_bytes);
+
+        // -- per-partition runtimes ---------------------------------------
+        let runtimes: Vec<ShifterRuntime> = cluster
+            .partitions()
+            .iter()
+            .map(|p| p.runtime(self.config.as_ref()))
+            .collect();
+
+        Ok(Site {
+            cluster,
+            registry: self.registry.unwrap_or_else(Registry::dockerhub),
+            fabric,
+            runtimes,
+            config_override: self.config,
+            retry: self.retry,
+            policy: self.policy,
+            seed: self.seed,
+            workers: self.workers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::launch::JobSpec;
+
+    #[test]
+    fn zero_shards_is_typed() {
+        assert!(matches!(
+            Site::builder().gateway_shards(0).build(),
+            Err(SiteError::NoShards)
+        ));
+    }
+
+    #[test]
+    fn zero_nodes_is_typed() {
+        assert!(matches!(
+            Site::builder().nodes(0).build(),
+            Err(SiteError::EmptyCluster)
+        ));
+        assert!(matches!(
+            Site::builder()
+                .partition("empty", &SystemProfile::piz_daint(), 0)
+                .build(),
+            Err(SiteError::EmptyPartition(_))
+        ));
+    }
+
+    #[test]
+    fn tiny_node_cache_is_typed() {
+        match Site::builder().node_cache_bytes(1_000).build() {
+            Err(SiteError::NodeCacheTooSmall { bytes, floor }) => {
+                assert_eq!(bytes, 1_000);
+                assert_eq!(floor, MIN_NODE_CACHE_BYTES);
+            }
+            _ => panic!("expected NodeCacheTooSmall"),
+        }
+    }
+
+    #[test]
+    fn zero_attempt_retry_is_typed() {
+        let retry = RetryPolicy {
+            max_attempts: 0,
+            ..RetryPolicy::default()
+        };
+        assert!(matches!(
+            Site::builder().retry_policy(retry).build(),
+            Err(SiteError::BadRetryPolicy)
+        ));
+    }
+
+    #[test]
+    fn gpu_job_on_gpuless_site_is_typed() {
+        let mut gpuless = SystemProfile::linux_cluster();
+        gpuless.nodes[0].gpus.clear();
+        let mut site = Site::builder()
+            .profile(gpuless)
+            .nodes(2)
+            .build()
+            .unwrap();
+        let spec =
+            JobSpec::new("nvidia/cuda-image:8.0", &["deviceQuery"], 2)
+                .with_gpus(1);
+        match site.launch(&spec) {
+            Err(SiteError::GpuUnavailable { gpus_per_node }) => {
+                assert_eq!(gpus_per_node, 1)
+            }
+            _ => panic!("expected GpuUnavailable"),
+        }
+        // CPU jobs on the same site are fine
+        let cpu = JobSpec::new("ubuntu:xenial", &["true"], 2);
+        assert_eq!(site.launch(&cpu).unwrap().succeeded(), 2);
+    }
+
+    #[test]
+    fn bad_conf_text_is_typed() {
+        assert!(matches!(
+            Site::builder().config_conf("bogusKey = 1"),
+            Err(SiteError::Config(_))
+        ));
+    }
+
+    #[test]
+    fn custom_conf_reaches_the_runtime() {
+        let mut config =
+            UdiRootConfig::for_profile(&SystemProfile::piz_daint());
+        config.udi_mount_point = "/var/siteMount".to_string();
+        let site = Site::builder()
+            .config(config)
+            .nodes(2)
+            .build()
+            .unwrap();
+        assert_eq!(site.config().udi_mount_point, "/var/siteMount");
+    }
+
+    #[test]
+    fn hetero_split_builds_both_partitions() {
+        let site = Site::builder()
+            .hetero_daint_linux(8)
+            .build()
+            .unwrap();
+        let names: Vec<&str> = site
+            .cluster()
+            .partitions()
+            .iter()
+            .map(|p| p.name())
+            .collect();
+        assert_eq!(names, ["daint-xc50", "linux-cluster"]);
+        assert_eq!(site.cluster().total_nodes(), 8);
+        // an odd split below 2 nodes degenerates to a typed error, not a
+        // panic
+        assert!(matches!(
+            Site::builder().hetero_daint_linux(1).build(),
+            Err(SiteError::EmptyPartition(_))
+        ));
+    }
+}

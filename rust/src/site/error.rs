@@ -1,0 +1,118 @@
+//! The single error surface of the [`crate::Site`] facade.
+//!
+//! Every operation on a `Site` returns [`SiteError`]. Builder-validation
+//! failures get their own typed variants (so a misconfigured site is a
+//! matchable error, not a panic); failures from the layers underneath —
+//! runtime, gateway, launch, config — are wrapped with their cause
+//! preserved, so `std::error::Error::source()` walks the full chain:
+//!
+//! ```
+//! use std::error::Error as _;
+//! use shifter_rs::{JobSpec, Site};
+//!
+//! let mut site = Site::builder().nodes(2).build().unwrap();
+//! // 99 nodes on a 2-node site: rejected by the WLM layer
+//! let err = site
+//!     .launch(&JobSpec::new("ubuntu:xenial", &["true"], 99))
+//!     .unwrap_err();
+//! let cause = err.source().expect("SiteError chains its cause");
+//! assert!(cause.to_string().contains("99"));
+//! ```
+
+use crate::config::ConfigError;
+use crate::gateway::GatewayError;
+use crate::launch::LaunchError;
+use crate::shifter::ShifterError;
+
+/// Everything that can go wrong configuring or operating a [`crate::Site`].
+///
+/// Wrapping variants preserve their cause: `Error::source()` returns the
+/// underlying `ShifterError` / `GatewayError` / `LaunchError` /
+/// `ConfigError`, whose own `source()` chains continue downward.
+#[derive(Debug, thiserror::Error)]
+#[non_exhaustive]
+pub enum SiteError {
+    /// Builder: `gateway_shards(0)` — the distribution fabric needs at
+    /// least one gateway shard.
+    #[error("a site needs at least one gateway shard")]
+    NoShards,
+
+    /// Builder: the site describes zero compute nodes overall.
+    #[error("a site needs at least one compute node")]
+    EmptyCluster,
+
+    /// Builder: a named partition was declared with zero nodes.
+    #[error("partition '{0}' has zero nodes")]
+    EmptyPartition(String),
+
+    /// Builder: a partition's base profile carries no node spec to
+    /// replicate.
+    #[error("profile '{0}' has no node spec to build a partition from")]
+    NoNodeSpec(String),
+
+    /// Builder: the per-node squashfs cache is too small to hold any
+    /// catalog image, so every container start would thrash the cache.
+    #[error(
+        "node-cache capacity {bytes} B is below the {floor} B floor \
+         (must hold at least one catalog squashfs)"
+    )]
+    NodeCacheTooSmall {
+        /// The capacity that was requested.
+        bytes: u64,
+        /// The smallest capacity the builder accepts.
+        floor: u64,
+    },
+
+    /// Builder: a retry policy that allows zero attempts can never run a
+    /// node slot.
+    #[error("retry policy must allow at least one attempt per slot")]
+    BadRetryPolicy,
+
+    /// Launch-time: the job requests GPUs but no partition of this site
+    /// has GPU-capable nodes — failing fast here beats burning a WLM
+    /// round trip per partition.
+    #[error(
+        "job requests {gpus_per_node} GPU(s) per node but no partition \
+         of this site has GPU-capable nodes"
+    )]
+    GpuUnavailable {
+        /// GPUs per node the job's GRES request asked for.
+        gpus_per_node: u32,
+    },
+
+    /// An operation named a node id outside every partition.
+    #[error("node {0} is outside every partition of this site")]
+    UnknownNode(u32),
+
+    /// The site `udiRoot.conf` text failed to parse.
+    #[error("invalid udiRoot.conf")]
+    Config(#[from] ConfigError),
+
+    /// Enqueuing a pull on the distribution fabric failed.
+    #[error("pull failed for {reference}")]
+    Pull {
+        /// The image reference whose pull failed.
+        reference: String,
+        /// The gateway-layer cause (chained via `source()`).
+        #[source]
+        source: GatewayError,
+    },
+
+    /// A pull ran but ended in the terminal FAILED state (the gateway
+    /// job's own error text is carried verbatim).
+    #[error("pull failed for {reference}: {detail}")]
+    PullFailed {
+        /// The image reference whose pull failed.
+        reference: String,
+        /// Terminal gateway-job error, verbatim.
+        detail: String,
+    },
+
+    /// The container runtime failed on this node.
+    #[error("shifter runtime failed")]
+    Runtime(#[from] ShifterError),
+
+    /// The cluster-scale launch orchestrator rejected or aborted the job.
+    #[error("cluster launch failed")]
+    Launch(#[from] LaunchError),
+}

@@ -1,0 +1,524 @@
+//! The `Site` facade (DESIGN.md S21): one typed entry point over the
+//! whole stack.
+//!
+//! The paper's deployment model is that a *site operator* configures
+//! Shifter once — `udiRoot.conf`, the host profiles of §V.A, the Image
+//! Gateway — and every user workflow (`shifterimg pull`, `shifter
+//! --image`, an `srun`-wide batch launch) goes through that one
+//! configured surface. This module is that surface for the simulation:
+//! a declarative [`SiteBuilder`] validates the operator's knobs once and
+//! wires profile → [`crate::distrib::DistributionFabric`] →
+//! [`crate::launch::LaunchCluster`] → [`crate::ShifterRuntime`] /
+//! [`crate::tenancy::FairShareScheduler`], returning a [`Site`] handle
+//! whose typed operations replace the hand-wiring every caller used to
+//! repeat:
+//!
+//! * [`Site::pull`] — synchronous image pull through the sharded fabric
+//!   (plus [`Site::request`] / [`Site::tick`] / [`Site::pull_status`]
+//!   for the asynchronous gateway-daemon lifecycle);
+//! * [`Site::run`] — one container on one node, §III.B style;
+//! * [`Site::launch`] / [`Site::launch_on`] — a cluster-scale job
+//!   through the launch orchestrator;
+//! * [`Site::storm`] / [`Site::storm_with`] — a multi-tenant job storm
+//!   under the site's (pluggable) [`SchedulingPolicy`].
+//!
+//! Every operation reports through the single [`SiteError`] enum, whose
+//! `std::error::Error::source()` chain preserves the layer-level cause.
+
+mod builder;
+mod error;
+
+pub use builder::{SiteBuilder, MIN_NODE_CACHE_BYTES};
+pub use error::SiteError;
+
+use crate::config::UdiRootConfig;
+use crate::distrib::DistributionFabric;
+use crate::gateway::{PullJob, PullState};
+use crate::launch::{
+    JobSpec, LaunchCluster, LaunchReport, LaunchScheduler, RetryPolicy,
+};
+use crate::registry::Registry;
+use crate::shifter::{Container, RunOptions, ShifterRuntime};
+use crate::tenancy::{
+    FairShareScheduler, SchedulingPolicy, TenancyReport, TenantJob,
+    TrafficModel,
+};
+
+/// One blocking drain of the gateway cluster (same convention as
+/// `DistributionFabric::pull_blocking`).
+const DRAIN_SECS: f64 = 1e9;
+
+/// What [`Site::pull`] reports back: the terminal gateway-job timings of
+/// a successful pull, shaped like the classic `shifterimg pull` output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PullOutcome {
+    /// Canonical reference that was pulled.
+    pub reference: String,
+    /// PFS path of the materialized squashfs.
+    pub pfs_path: String,
+    /// Enqueue → worker-pickup wait on the owning shard.
+    pub queue_wait_secs: f64,
+    /// Enqueue → READY end-to-end latency.
+    pub turnaround_secs: f64,
+    /// Registry download time.
+    pub download_secs: f64,
+    /// Tar expansion + flatten time.
+    pub expand_secs: f64,
+    /// mksquashfs conversion time.
+    pub convert_secs: f64,
+    /// PFS store time.
+    pub store_secs: f64,
+    /// Users/nodes whose requests coalesced onto this pull job so far.
+    pub requesters: usize,
+}
+
+/// A fully wired, validated site — the one handle user workflows need.
+///
+/// Built exclusively through [`Site::builder`]; see [`SiteBuilder`] for
+/// the knobs and a runnable end-to-end example.
+pub struct Site {
+    pub(crate) cluster: LaunchCluster,
+    pub(crate) registry: Registry,
+    pub(crate) fabric: DistributionFabric,
+    /// One runtime per partition, index-aligned with
+    /// `cluster.partitions()` — [`Site::run`] dispatches on the
+    /// partition owning the requested node.
+    pub(crate) runtimes: Vec<ShifterRuntime>,
+    pub(crate) config_override: Option<UdiRootConfig>,
+    /// `None` keeps the historical per-layer defaults: launches retry
+    /// with `RetryPolicy::default()`, storms run strict.
+    pub(crate) retry: Option<RetryPolicy>,
+    pub(crate) policy: Box<dyn SchedulingPolicy>,
+    pub(crate) seed: u64,
+    pub(crate) workers: Option<usize>,
+}
+
+impl Site {
+    /// Start declaring a site. See [`SiteBuilder`].
+    pub fn builder() -> SiteBuilder {
+        SiteBuilder::new()
+    }
+
+    // -- introspection ----------------------------------------------------
+
+    /// The machine this site launches onto (partitions in node-id order).
+    pub fn cluster(&self) -> &LaunchCluster {
+        &self.cluster
+    }
+
+    /// The image registry this site resolves references against.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// The distribution fabric behind the facade (shards, CAS, caches).
+    pub fn fabric(&self) -> &DistributionFabric {
+        &self.fabric
+    }
+
+    /// Mutable fabric access, for driving the asynchronous pull queue
+    /// directly (most callers want [`Site::request`] / [`Site::tick`]).
+    pub fn fabric_mut(&mut self) -> &mut DistributionFabric {
+        &mut self.fabric
+    }
+
+    /// The effective `udiRoot.conf` of the site's primary partition.
+    pub fn config(&self) -> &UdiRootConfig {
+        &self.runtimes[0].config
+    }
+
+    /// The scheduling policy storms run under by default.
+    pub fn policy(&self) -> &dyn SchedulingPolicy {
+        self.policy.as_ref()
+    }
+
+    /// The site's deterministic seed for synthesized workloads.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Canonical references of every image materialized on any gateway
+    /// shard, in sorted order (`shifterimg images`).
+    pub fn images(&self) -> Vec<String> {
+        let mut refs: Vec<String> = self
+            .fabric
+            .cluster()
+            .shards()
+            .flat_map(|s| s.gateway.list())
+            .collect();
+        refs.sort();
+        refs
+    }
+
+    /// A traffic model shaped to this site: the site's seed, and a
+    /// maximum job width of half the cluster (the storm default the CLI
+    /// and benches share).
+    pub fn default_traffic(&self) -> TrafficModel {
+        TrafficModel {
+            max_width: (self.cluster.total_nodes() / 2).max(1),
+            seed: self.seed,
+            ..TrafficModel::default()
+        }
+    }
+
+    // -- pull -------------------------------------------------------------
+
+    /// `shifterimg pull <ref>` — synchronous pull through the sharded
+    /// fabric: enqueue, drain the shard workers to a terminal state, and
+    /// report the job's timing breakdown. Re-pulling a READY reference
+    /// is idempotent: the request coalesces onto the existing job and
+    /// the shard clocks do not advance (same short-circuit as
+    /// `DistributionFabric::pull_blocking`).
+    pub fn pull(&mut self, reference: &str) -> Result<PullOutcome, SiteError> {
+        let (_, state) = self
+            .fabric
+            .request(&self.registry, reference, "site-operator")
+            .map_err(|e| SiteError::Pull {
+                reference: reference.to_string(),
+                source: e,
+            })?;
+        if !state.terminal() {
+            self.fabric.tick(&self.registry, DRAIN_SECS);
+        }
+
+        let Some(job) = self.fabric.cluster().status(reference) else {
+            return Err(SiteError::PullFailed {
+                reference: reference.to_string(),
+                detail: "pull was never enqueued".to_string(),
+            });
+        };
+        if job.state != PullState::Ready {
+            return Err(SiteError::PullFailed {
+                reference: reference.to_string(),
+                detail: job
+                    .error
+                    .clone()
+                    .unwrap_or_else(|| {
+                        format!("terminal state {}", job.state.name())
+                    }),
+            });
+        }
+        let durations = *job.stage_durations();
+        let (queue_wait, turnaround, requesters) = (
+            job.queue_wait_secs().unwrap_or(0.0),
+            job.turnaround_secs().unwrap_or(0.0),
+            job.requesters.len(),
+        );
+        let image =
+            self.fabric.cluster().lookup(reference).map_err(|e| {
+                SiteError::Pull {
+                    reference: reference.to_string(),
+                    source: e,
+                }
+            })?;
+        Ok(PullOutcome {
+            reference: image.reference.canonical(),
+            pfs_path: image.pfs_path.clone(),
+            queue_wait_secs: queue_wait,
+            turnaround_secs: turnaround,
+            download_secs: durations[0],
+            expand_secs: durations[1],
+            convert_secs: durations[2],
+            store_secs: durations[3],
+            requesters,
+        })
+    }
+
+    /// Enqueue an asynchronous pull (the gateway-daemon lifecycle):
+    /// returns the job state as observed by this requester; advance the
+    /// workers with [`Site::tick`] and poll [`Site::pull_status`].
+    pub fn request(
+        &mut self,
+        reference: &str,
+        user: &str,
+    ) -> Result<PullState, SiteError> {
+        let (_, state) = self
+            .fabric
+            .request(&self.registry, reference, user)
+            .map_err(|e| SiteError::Pull {
+                reference: reference.to_string(),
+                source: e,
+            })?;
+        Ok(state)
+    }
+
+    /// Advance every gateway shard worker by `dt` simulated seconds.
+    pub fn tick(&mut self, dt: f64) {
+        self.fabric.tick(&self.registry, dt);
+    }
+
+    /// Status of the pull job for `reference`, if one was ever requested.
+    pub fn pull_status(&self, reference: &str) -> Option<&PullJob> {
+        self.fabric.cluster().status(reference)
+    }
+
+    /// Enqueue a pull for every reference in `refs` (a site's nightly
+    /// catalog sync), then drain the shard workers once so distinct
+    /// references contend on the shard queues exactly as a storm would.
+    /// Returns the references whose *enqueue* failed; terminal pull
+    /// failures are visible per job via [`Site::pull_status`].
+    pub fn prefetch(
+        &mut self,
+        refs: &[String],
+    ) -> Vec<(String, SiteError)> {
+        let mut failures = Vec::new();
+        for reference in refs {
+            if let Err(e) =
+                self.fabric
+                    .request(&self.registry, reference, "site-operator")
+            {
+                failures.push((
+                    reference.clone(),
+                    SiteError::Pull {
+                        reference: reference.clone(),
+                        source: e,
+                    },
+                ));
+            }
+        }
+        self.fabric.tick(&self.registry, DRAIN_SECS);
+        failures
+    }
+
+    // -- run --------------------------------------------------------------
+
+    /// `shifter --image=<ref> <cmd…>` — run one container on the node
+    /// named by `opts.node`, pulling the image through the fabric first
+    /// if no shard holds it yet.
+    pub fn run(
+        &mut self,
+        opts: &RunOptions,
+    ) -> Result<Container, SiteError> {
+        if self.fabric.cluster().lookup(&opts.image).is_err() {
+            self.pull(&opts.image)?;
+        }
+        let node = opts.node as u32;
+        let pidx = self
+            .cluster
+            .partitions()
+            .iter()
+            .position(|p| p.contains(node))
+            .ok_or(SiteError::UnknownNode(node))?;
+        Ok(self.runtimes[pidx].run(&self.fabric, opts)?)
+    }
+
+    // -- launch -----------------------------------------------------------
+
+    /// One cluster-scale containerized job, end to end: WLM allocation,
+    /// one coalesced pull, per-node stage execution, percentile report.
+    /// Slots fill from the lowest global node id upward.
+    pub fn launch(
+        &mut self,
+        spec: &JobSpec,
+    ) -> Result<LaunchReport, SiteError> {
+        self.check_gpus(spec)?;
+        let scheduler = wired_launch_scheduler(
+            &self.cluster,
+            &self.registry,
+            self.retry.unwrap_or_default(),
+            &self.config_override,
+            self.workers,
+        );
+        Ok(scheduler.launch(&mut self.fabric, spec)?)
+    }
+
+    /// Like [`Site::launch`], but place the job on an explicit (possibly
+    /// partition-spanning) set of global node ids.
+    pub fn launch_on(
+        &mut self,
+        spec: &JobSpec,
+        nodes: &[u32],
+    ) -> Result<LaunchReport, SiteError> {
+        self.check_gpus(spec)?;
+        let scheduler = wired_launch_scheduler(
+            &self.cluster,
+            &self.registry,
+            self.retry.unwrap_or_default(),
+            &self.config_override,
+            self.workers,
+        );
+        Ok(scheduler.launch_on(&mut self.fabric, spec, nodes)?)
+    }
+
+    // -- storm ------------------------------------------------------------
+
+    /// Synthesize `traffic` against this site's cluster and run the
+    /// whole multi-tenant storm under the site's configured
+    /// [`SchedulingPolicy`].
+    pub fn storm(&mut self, traffic: &TrafficModel) -> TenancyReport {
+        let jobs = traffic.generate(&self.cluster);
+        self.run_storm(&jobs, None)
+    }
+
+    /// Run an explicit pre-generated job stream under an explicit
+    /// policy — the form the benches use to schedule the *same* stream
+    /// under two policies and compare.
+    pub fn storm_with(
+        &mut self,
+        jobs: &[TenantJob],
+        policy: &dyn SchedulingPolicy,
+    ) -> TenancyReport {
+        self.run_storm(jobs, Some(policy))
+    }
+
+    // -- internals --------------------------------------------------------
+
+    fn run_storm(
+        &mut self,
+        jobs: &[TenantJob],
+        policy: Option<&dyn SchedulingPolicy>,
+    ) -> TenancyReport {
+        let policy = match policy {
+            Some(p) => p,
+            None => self.policy.as_ref(),
+        };
+        // storms default to strict retry — the multi-tenant scheduler's
+        // own deterministic default — unless the site set the knob
+        let mut scheduler =
+            FairShareScheduler::new(&self.cluster, &self.registry)
+                .with_policy(policy)
+                .with_retry_policy(
+                    self.retry.unwrap_or_else(RetryPolicy::strict),
+                );
+        if let Some(config) = &self.config_override {
+            scheduler = scheduler.with_config(config.clone());
+        }
+        scheduler.run(&mut self.fabric, jobs)
+    }
+
+    fn check_gpus(&self, spec: &JobSpec) -> Result<(), SiteError> {
+        if spec.gpus_per_node > 0
+            && !self
+                .cluster
+                .partitions()
+                .iter()
+                .any(|p| p.profile().gpu_capable())
+        {
+            return Err(SiteError::GpuUnavailable {
+                gpus_per_node: spec.gpus_per_node,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Assemble a launch scheduler from a site's knobs. A free function (not
+/// a `&self` method) so callers can keep `&mut self.fabric` available:
+/// direct field borrows split, a whole-`self` borrow would not.
+fn wired_launch_scheduler<'a>(
+    cluster: &'a LaunchCluster,
+    registry: &'a Registry,
+    retry: RetryPolicy,
+    config: &Option<UdiRootConfig>,
+    workers: Option<usize>,
+) -> LaunchScheduler<'a> {
+    let mut scheduler =
+        LaunchScheduler::new(cluster, registry).with_policy(retry);
+    if let Some(config) = config {
+        scheduler = scheduler.with_config(config.clone());
+    }
+    if let Some(workers) = workers {
+        scheduler = scheduler.with_workers(workers);
+    }
+    scheduler
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hostenv::SystemProfile;
+
+    #[test]
+    fn pull_run_launch_through_one_handle() {
+        let mut site = Site::builder()
+            .profile(SystemProfile::piz_daint())
+            .nodes(4)
+            .gateway_shards(2)
+            .build()
+            .unwrap();
+        let pull = site.pull("ubuntu:xenial").unwrap();
+        assert_eq!(pull.reference, "ubuntu:xenial");
+        assert!(pull.turnaround_secs > 0.0);
+        assert!(pull.pfs_path.contains("squashfs"));
+        assert_eq!(site.images(), vec!["ubuntu:xenial".to_string()]);
+
+        let c = site
+            .run(&RunOptions::new("ubuntu:xenial", &["true"]))
+            .unwrap();
+        assert!(c.stage_log.completed());
+
+        let report = site
+            .launch(&JobSpec::new("ubuntu:xenial", &["true"], 4))
+            .unwrap();
+        assert_eq!(report.succeeded(), 4);
+    }
+
+    #[test]
+    fn run_auto_pulls_once_and_coalesces() {
+        let mut site = Site::builder().nodes(2).build().unwrap();
+        // no explicit pull: run must materialize the image itself
+        site.run(&RunOptions::new("ubuntu:xenial", &["true"]))
+            .unwrap();
+        let before = site.fabric().coalescing();
+        assert_eq!(before.jobs, 1);
+        // a second run coalesces onto the existing READY job
+        site.run(&RunOptions::new("ubuntu:xenial", &["true"]))
+            .unwrap();
+        assert_eq!(site.fabric().coalescing().jobs, 1);
+    }
+
+    #[test]
+    fn pull_of_missing_image_is_a_typed_failure() {
+        let mut site = Site::builder().nodes(1).build().unwrap();
+        let err = site.pull("nope:missing").unwrap_err();
+        match err {
+            SiteError::PullFailed { reference, detail } => {
+                assert_eq!(reference, "nope:missing");
+                assert!(detail.contains("not found"), "{detail}");
+            }
+            other => panic!("wrong error: {other}"),
+        }
+    }
+
+    #[test]
+    fn run_on_unknown_node_is_rejected() {
+        let mut site = Site::builder().nodes(2).build().unwrap();
+        site.pull("ubuntu:xenial").unwrap();
+        let opts =
+            RunOptions::new("ubuntu:xenial", &["true"]).on_nodes(99, 1);
+        assert!(matches!(
+            site.run(&opts).unwrap_err(),
+            SiteError::UnknownNode(99)
+        ));
+    }
+
+    #[test]
+    fn async_pull_lifecycle_via_the_facade() {
+        let mut site = Site::builder().nodes(1).build().unwrap();
+        let state = site.request("pynamic:1.3", "cscs-user").unwrap();
+        assert_eq!(state, PullState::Enqueued);
+        let mut ticks = 0;
+        while !site.pull_status("pynamic:1.3").unwrap().state.terminal() {
+            site.tick(2.0);
+            ticks += 1;
+            assert!(ticks < 10_000, "pull must terminate");
+        }
+        assert_eq!(
+            site.pull_status("pynamic:1.3").unwrap().state,
+            PullState::Ready
+        );
+        assert!(ticks > 1, "a real pull takes multiple worker ticks");
+    }
+
+    #[test]
+    fn prefetch_drives_the_whole_catalog_once() {
+        let mut site =
+            Site::builder().nodes(1).gateway_shards(4).build().unwrap();
+        let refs = site.registry().list();
+        let failures = site.prefetch(&refs);
+        assert!(failures.is_empty());
+        let coalescing = site.fabric().coalescing();
+        assert_eq!(coalescing.jobs, refs.len());
+        assert!(site.images().len() <= refs.len());
+    }
+}

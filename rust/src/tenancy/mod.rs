@@ -16,7 +16,10 @@
 //!   conservative backfill over the partition slot map, dispatching each
 //!   placed job through the re-entrant
 //!   [`crate::launch::LaunchScheduler::launch_on`] against one shared
-//!   [`crate::distrib::DistributionFabric`].
+//!   [`crate::distrib::DistributionFabric`]. The queue discipline is a
+//!   pluggable [`policy::SchedulingPolicy`] trait object ([`policy::Fifo`]
+//!   and [`policy::FairShare`] are the builtins; sites select one via
+//!   [`crate::SiteBuilder::scheduling_policy`]).
 //! * [`report::TenancyReport`] — per-tenant queue-wait/stretch
 //!   percentiles, starvation detection, backfill and cross-job pull
 //!   coalescing accounting, cluster utilization; serialized to
@@ -24,10 +27,12 @@
 //!
 //! CLI: `shifterimg storm --tenants=8 --jobs=64 --arrival-rate=2.4`.
 
+pub mod policy;
 pub mod report;
 pub mod scheduler;
 pub mod traffic;
 
+pub use policy::{policy_by_name, FairShare, Fifo, SchedulingPolicy};
 pub use report::{JobRecord, TenancyReport, TenantStats};
-pub use scheduler::{FairShareScheduler, SchedulingPolicy};
+pub use scheduler::FairShareScheduler;
 pub use traffic::{unique_image_refs, JobClass, TenantJob, TrafficModel, Zipf};

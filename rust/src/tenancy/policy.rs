@@ -1,0 +1,210 @@
+//! Pluggable queue-ordering policies for the multi-tenant scheduler.
+//!
+//! PR 3 hard-wired the scheduling discipline as a two-variant enum
+//! matched inside [`super::scheduler::FairShareScheduler`]; this module
+//! extracts that decision into a trait so a policy is an *object* a site
+//! can configure (`SiteBuilder::scheduling_policy(Box<dyn
+//! SchedulingPolicy>)`) and third-party scenarios can implement without
+//! touching the scheduler's event loop.
+//!
+//! A policy answers exactly two questions:
+//!
+//! * **Ordering** — [`SchedulingPolicy::priority`]: the sort key of a
+//!   queued job at the current scheduling pass (higher starts first;
+//!   ties break by arrival time, then job id — the scheduler owns the
+//!   tie-break so every policy is deterministic).
+//! * **Hole-filling** — [`SchedulingPolicy::backfill`]: whether a
+//!   lower-priority job may start ahead of a blocked higher-priority one
+//!   through the conservative-backfill reservation timeline (`true`), or
+//!   head-of-line blocking applies (`false`).
+//!
+//! The two builtins reproduce PR 3's behavior exactly: [`Fifo`] (strict
+//! arrival order, head-of-line blocking) and [`FairShare`] (SLURM-style
+//! `2^(-U/S)` fair-share factor plus linear aging, with conservative
+//! backfill).
+
+use crate::wlm::fairshare::ShareLedger;
+
+use super::traffic::TenantJob;
+
+/// A queue-ordering and hole-filling discipline for the storm scheduler.
+///
+/// Implementations must be deterministic: the scheduler calls
+/// [`Self::priority`] once per queued job per scheduling pass and sorts
+/// by the returned key (descending), breaking ties by arrival time and
+/// job id. `Send + Sync` so a boxed policy can live inside a
+/// [`crate::Site`] that is shared across launch worker threads.
+pub trait SchedulingPolicy: Send + Sync {
+    /// Stable lowercase policy name for reports and JSON artifacts
+    /// (e.g. `"fifo"`, `"fair-share"`).
+    fn name(&self) -> &str;
+
+    /// Sort key (descending — higher starts first) for `job`, which has
+    /// been queued for `wait_secs` simulated seconds. `ledger` carries
+    /// the per-tenant share accounting the fair-share factor reads;
+    /// policies that do not care about tenancy may ignore it.
+    fn priority(
+        &self,
+        job: &TenantJob,
+        wait_secs: f64,
+        ledger: &ShareLedger,
+    ) -> f64;
+
+    /// Whether lower-priority jobs may start ahead of a blocked
+    /// higher-priority job via conservative backfill (`true`), or strict
+    /// head-of-line blocking applies (`false`). Backfill never delays a
+    /// higher-priority reservation either way — the scheduler enforces
+    /// that invariant, the policy only opts in.
+    fn backfill(&self) -> bool;
+}
+
+/// Strict arrival order with head-of-line blocking: when the oldest job
+/// does not fit, nothing behind it may start. The baseline the storm
+/// bench compares against.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fifo;
+
+impl SchedulingPolicy for Fifo {
+    fn name(&self) -> &str {
+        "fifo"
+    }
+
+    /// All jobs share priority 0.0 — the scheduler's arrival-time
+    /// tie-break then yields exact submission order.
+    fn priority(&self, _: &TenantJob, _: f64, _: &ShareLedger) -> f64 {
+        0.0
+    }
+
+    fn backfill(&self) -> bool {
+        false
+    }
+}
+
+/// SLURM-style fair-share priority with linear aging and conservative
+/// backfill (see [`ShareLedger::priority`]): the share term is capped at
+/// 1.0 while the aging term grows without bound, so no waiting job
+/// starves.
+#[derive(Debug, Clone, Copy)]
+pub struct FairShare {
+    // private: positivity is the bounded-starvation invariant, and only
+    // [`FairShare::new`] / [`Default`] can construct the policy
+    aging_per_hour: f64,
+}
+
+impl FairShare {
+    /// Fair-share policy with an explicit aging weight (> 0 — the
+    /// bounded-starvation guarantee needs the aging term to grow).
+    pub fn new(aging_per_hour: f64) -> FairShare {
+        assert!(
+            aging_per_hour > 0.0,
+            "aging must be positive to bound starvation"
+        );
+        FairShare { aging_per_hour }
+    }
+
+    /// Priority points one hour of queue wait is worth.
+    pub fn aging_per_hour(&self) -> f64 {
+        self.aging_per_hour
+    }
+}
+
+impl Default for FairShare {
+    /// The stock aging weight (2.0 priority points per queued hour).
+    fn default() -> FairShare {
+        FairShare { aging_per_hour: 2.0 }
+    }
+}
+
+/// The scheduler's default policy instance (fair-share, stock aging).
+pub(crate) static DEFAULT_POLICY: FairShare = FairShare { aging_per_hour: 2.0 };
+
+impl SchedulingPolicy for FairShare {
+    fn name(&self) -> &str {
+        "fair-share"
+    }
+
+    fn priority(
+        &self,
+        job: &TenantJob,
+        wait_secs: f64,
+        ledger: &ShareLedger,
+    ) -> f64 {
+        ledger.priority(&job.tenant, wait_secs, self.aging_per_hour)
+    }
+
+    fn backfill(&self) -> bool {
+        true
+    }
+}
+
+/// Resolve a CLI policy name (`fifo`, `fair`, `fair-share`) to a boxed
+/// builtin policy. Returns `None` for unknown names.
+pub fn policy_by_name(name: &str) -> Option<Box<dyn SchedulingPolicy>> {
+    match name {
+        "fifo" => Some(Box::new(Fifo)),
+        "fair" | "fair-share" => Some(Box::new(FairShare::default())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::launch::JobSpec;
+    use crate::tenancy::traffic::JobClass;
+
+    fn job(tenant: u32, runtime: f64) -> TenantJob {
+        TenantJob {
+            id: 0,
+            tenant: format!("tenant-{tenant:02}"),
+            tenant_idx: tenant,
+            arrival_secs: 0.0,
+            runtime_secs: runtime,
+            class: JobClass::Cpu,
+            spec: JobSpec::new("ubuntu:xenial", &["true"], 1),
+        }
+    }
+
+    #[test]
+    fn fifo_is_flat_and_blocking() {
+        let ledger = ShareLedger::new();
+        assert_eq!(Fifo.priority(&job(0, 10.0), 1e6, &ledger), 0.0);
+        assert!(!Fifo.backfill());
+        assert_eq!(Fifo.name(), "fifo");
+    }
+
+    #[test]
+    fn fair_share_ages_and_backfills() {
+        let mut ledger = ShareLedger::new();
+        ledger.ensure("tenant-00");
+        let fair = FairShare::default();
+        let fresh = fair.priority(&job(0, 10.0), 0.0, &ledger);
+        let aged = fair.priority(&job(0, 10.0), 3600.0, &ledger);
+        assert!(
+            (aged - fresh - fair.aging_per_hour()).abs() < 1e-12,
+            "one queued hour is worth exactly the aging weight"
+        );
+        assert!(fair.backfill());
+        assert_eq!(fair.name(), "fair-share");
+    }
+
+    #[test]
+    fn heavy_tenant_ranks_below_idle_tenant() {
+        let mut ledger = ShareLedger::new();
+        ledger.ensure("tenant-00");
+        ledger.ensure("tenant-01");
+        ledger.charge("tenant-00", 1e6);
+        let fair = FairShare::default();
+        let hog = fair.priority(&job(0, 10.0), 0.0, &ledger);
+        let idle = fair.priority(&job(1, 10.0), 0.0, &ledger);
+        assert!(idle > hog);
+    }
+
+    #[test]
+    fn builtin_policies_resolve_by_name() {
+        assert_eq!(policy_by_name("fifo").unwrap().name(), "fifo");
+        assert_eq!(policy_by_name("fair").unwrap().name(), "fair-share");
+        assert_eq!(policy_by_name("fair-share").unwrap().name(), "fair-share");
+        assert!(policy_by_name("srtf").is_none());
+    }
+}

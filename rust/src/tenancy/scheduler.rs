@@ -4,20 +4,24 @@
 //! shared [`DistributionFabric`].
 //!
 //! Event loop: arrivals and completions advance simulated time; at every
-//! event the queue is re-ordered by policy and a scheduling pass decides
-//! who starts *now*:
+//! event the queue is re-ordered by the active
+//! [`SchedulingPolicy`] (a pluggable trait object — see
+//! [`super::policy`]) and a scheduling pass decides who starts *now*:
 //!
-//! * [`SchedulingPolicy::Fifo`] — strict arrival order with head-of-line
-//!   blocking: when the oldest job does not fit, nothing behind it may
-//!   start (the baseline the storm bench compares against).
-//! * [`SchedulingPolicy::FairShare`] — queue ordered by the
-//!   [`ShareLedger`] priority (SLURM-style `2^(-U/S)` fair-share factor
-//!   plus linear aging), with **conservative backfill**: every queued job
+//! * priorities come from [`SchedulingPolicy::priority`] (the builtin
+//!   [`super::policy::Fifo`] keeps strict arrival order; the builtin
+//!   [`super::policy::FairShare`] uses the [`ShareLedger`]'s SLURM-style
+//!   `2^(-U/S)` fair-share factor plus linear aging);
+//! * when [`SchedulingPolicy::backfill`] is `false`, head-of-line
+//!   blocking applies: if the highest-priority job does not fit, nothing
+//!   behind it may start;
+//! * when it is `true`, **conservative backfill** runs: every queued job
 //!   gets a reservation on a count-based availability timeline, and a
 //!   lower-priority job may start early only if its reservation already
 //!   begins now — so backfilling never delays any higher-priority
-//!   reservation. Aging bounds starvation: a waiting job's priority grows
-//!   without bound, while the share term is capped at 1.0.
+//!   reservation. With the fair-share builtin, aging bounds starvation:
+//!   a waiting job's priority grows without bound, while the share term
+//!   is capped at 1.0.
 //!
 //! Jobs that start in the same pass batch-prefetch their images through
 //! the fabric first, so concurrent distinct references queue behind each
@@ -26,11 +30,13 @@
 
 use std::collections::BTreeSet;
 
+use crate::config::UdiRootConfig;
 use crate::distrib::DistributionFabric;
 use crate::launch::{LaunchCluster, LaunchScheduler, RetryPolicy};
 use crate::registry::Registry;
 use crate::wlm::fairshare::ShareLedger;
 
+use super::policy::{SchedulingPolicy, DEFAULT_POLICY};
 use super::report::{JobRecord, TenancyReport};
 use super::traffic::TenantJob;
 
@@ -40,25 +46,6 @@ const EPS: f64 = 1e-9;
 /// One blocking drain of the gateway cluster per start batch (same
 /// convention as `DistributionFabric::pull_blocking`).
 const PREFETCH_DRAIN_SECS: f64 = 1e9;
-
-/// Queue-ordering and hole-filling discipline for the storm simulation.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum SchedulingPolicy {
-    /// Strict arrival order, head-of-line blocking, no backfill.
-    Fifo,
-    /// Fair-share + aging priority with conservative backfill.
-    FairShare,
-}
-
-impl SchedulingPolicy {
-    /// Stable name for reports and JSON.
-    pub fn name(&self) -> &'static str {
-        match self {
-            SchedulingPolicy::Fifo => "fifo",
-            SchedulingPolicy::FairShare => "fair-share",
-        }
-    }
-}
 
 /// A job currently occupying nodes.
 struct Running {
@@ -103,14 +90,14 @@ struct Interval {
 pub struct FairShareScheduler<'a> {
     cluster: &'a LaunchCluster,
     registry: &'a Registry,
-    policy: SchedulingPolicy,
-    aging_per_hour: f64,
+    policy: &'a dyn SchedulingPolicy,
     retry: RetryPolicy,
+    config: Option<UdiRootConfig>,
 }
 
 impl<'a> FairShareScheduler<'a> {
     /// Fair-share scheduler over `cluster` with default knobs
-    /// (fair-share + backfill policy, aging weight 2.0/hour, strict
+    /// (fair-share + backfill policy with the stock aging weight, strict
     /// launch retry policy for deterministic per-node timings).
     pub fn new(
         cluster: &'a LaunchCluster,
@@ -119,28 +106,20 @@ impl<'a> FairShareScheduler<'a> {
         FairShareScheduler {
             cluster,
             registry,
-            policy: SchedulingPolicy::FairShare,
-            aging_per_hour: 2.0,
+            policy: &DEFAULT_POLICY,
             retry: RetryPolicy::strict(),
+            config: None,
         }
     }
 
-    /// Select the queue policy (the storm bench runs both on the same
-    /// stream and compares utilization).
+    /// Select the queue policy — any [`SchedulingPolicy`] object (the
+    /// storm bench runs the two builtins on the same stream and compares
+    /// utilization; custom policies plug in the same way).
     pub fn with_policy(
         mut self,
-        policy: SchedulingPolicy,
+        policy: &'a dyn SchedulingPolicy,
     ) -> FairShareScheduler<'a> {
         self.policy = policy;
-        self
-    }
-
-    /// Priority points one hour of queue wait is worth (only meaningful
-    /// under [`SchedulingPolicy::FairShare`]; must be positive for the
-    /// bounded-starvation guarantee).
-    pub fn with_aging_per_hour(mut self, aging: f64) -> FairShareScheduler<'a> {
-        assert!(aging > 0.0, "aging must be positive to bound starvation");
-        self.aging_per_hour = aging;
         self
     }
 
@@ -153,6 +132,16 @@ impl<'a> FairShareScheduler<'a> {
         self
     }
 
+    /// Site `udiRoot.conf` forwarded to every per-job launch (otherwise
+    /// each partition derives its stock config from its profile).
+    pub fn with_config(
+        mut self,
+        config: UdiRootConfig,
+    ) -> FairShareScheduler<'a> {
+        self.config = Some(config);
+        self
+    }
+
     /// Run the whole `jobs` stream to completion over `fabric` and
     /// aggregate the outcome. Jobs may arrive in any order; the stream is
     /// processed by arrival time.
@@ -161,8 +150,11 @@ impl<'a> FairShareScheduler<'a> {
         fabric: &mut DistributionFabric,
         jobs: &[TenantJob],
     ) -> TenancyReport {
-        let launcher = LaunchScheduler::new(self.cluster, self.registry)
+        let mut launcher = LaunchScheduler::new(self.cluster, self.registry)
             .with_policy(self.retry);
+        if let Some(config) = &self.config {
+            launcher = launcher.with_config(config.clone());
+        }
         let mut order: Vec<usize> = (0..jobs.len()).collect();
         order.sort_by(|&a, &b| {
             jobs[a]
@@ -275,14 +267,8 @@ impl<'a> FairShareScheduler<'a> {
             .iter()
             .map(|&idx| {
                 let j = &jobs[idx];
-                let prio = match self.policy {
-                    SchedulingPolicy::Fifo => 0.0,
-                    SchedulingPolicy::FairShare => ledger.priority(
-                        &j.tenant,
-                        t - j.arrival_secs,
-                        self.aging_per_hour,
-                    ),
-                };
+                let prio =
+                    self.policy.priority(j, t - j.arrival_secs, ledger);
                 (prio, j.arrival_secs, j.id, idx)
             })
             .collect();
@@ -326,53 +312,50 @@ impl<'a> FairShareScheduler<'a> {
 
         // plan: who starts now, and was it a backfill?
         let mut to_start: Vec<(usize, bool)> = Vec::new();
-        match self.policy {
-            SchedulingPolicy::Fifo => {
-                let mut avail = free.len() as u32;
-                for &idx in &ordered {
-                    if dropped.contains(&idx) {
-                        continue;
-                    }
-                    let width = jobs[idx].spec.nodes;
-                    if width > avail {
-                        break; // head-of-line blocking
-                    }
-                    avail -= width;
-                    to_start.push((idx, false));
+        if !self.policy.backfill() {
+            let mut avail = free.len() as u32;
+            for &idx in &ordered {
+                if dropped.contains(&idx) {
+                    continue;
                 }
+                let width = jobs[idx].spec.nodes;
+                if width > avail {
+                    break; // head-of-line blocking
+                }
+                avail -= width;
+                to_start.push((idx, false));
             }
-            SchedulingPolicy::FairShare => {
-                // count-based availability timeline seeded with the
-                // currently running jobs
-                let mut resv: Vec<Interval> = running
-                    .iter()
-                    .map(|r| Interval {
-                        start: t,
-                        end: r.end_secs,
-                        width: jobs[r.idx].spec.nodes,
-                    })
-                    .collect();
-                let mut blocked_seen = false;
-                for &idx in &ordered {
-                    if dropped.contains(&idx) {
-                        continue;
-                    }
-                    let width = jobs[idx].spec.nodes;
-                    // estimated occupancy: the synthetic runtime (launch
-                    // overhead is seconds against minutes and every pass
-                    // recomputes from actual completions)
-                    let est = jobs[idx].runtime_secs.max(1.0);
-                    let tau = earliest_start(t, est, width, capacity, &resv);
-                    resv.push(Interval {
-                        start: tau,
-                        end: tau + est,
-                        width,
-                    });
-                    if tau <= t + EPS {
-                        to_start.push((idx, blocked_seen));
-                    } else {
-                        blocked_seen = true;
-                    }
+        } else {
+            // count-based availability timeline seeded with the
+            // currently running jobs
+            let mut resv: Vec<Interval> = running
+                .iter()
+                .map(|r| Interval {
+                    start: t,
+                    end: r.end_secs,
+                    width: jobs[r.idx].spec.nodes,
+                })
+                .collect();
+            let mut blocked_seen = false;
+            for &idx in &ordered {
+                if dropped.contains(&idx) {
+                    continue;
+                }
+                let width = jobs[idx].spec.nodes;
+                // estimated occupancy: the synthetic runtime (launch
+                // overhead is seconds against minutes and every pass
+                // recomputes from actual completions)
+                let est = jobs[idx].runtime_secs.max(1.0);
+                let tau = earliest_start(t, est, width, capacity, &resv);
+                resv.push(Interval {
+                    start: tau,
+                    end: tau + est,
+                    width,
+                });
+                if tau <= t + EPS {
+                    to_start.push((idx, blocked_seen));
+                } else {
+                    blocked_seen = true;
                 }
             }
         }
@@ -506,6 +489,7 @@ mod tests {
     use crate::hostenv::SystemProfile;
     use crate::launch::JobSpec;
     use crate::pfs::LustreFs;
+    use crate::tenancy::policy::{FairShare, Fifo};
     use crate::tenancy::traffic::JobClass;
 
     fn job(
@@ -570,14 +554,14 @@ mod tests {
             job(1, 1, 1.0, 8, 1000.0),
             job(2, 2, 2.0, 2, 100.0),
         ];
-        let run = |policy: SchedulingPolicy| {
+        let run = |policy: &dyn SchedulingPolicy| {
             let (cluster, registry, mut fabric) = setup(8);
             FairShareScheduler::new(&cluster, &registry)
                 .with_policy(policy)
                 .run(&mut fabric, &jobs)
         };
-        let fifo = run(SchedulingPolicy::Fifo);
-        let fair = run(SchedulingPolicy::FairShare);
+        let fifo = run(&Fifo);
+        let fair = run(&FairShare::default());
         assert_eq!(fifo.completed(), 3);
         assert_eq!(fair.completed(), 3);
 

@@ -15,6 +15,7 @@ pub struct ParsedArgs {
 }
 
 #[derive(Debug, thiserror::Error)]
+#[non_exhaustive]
 pub enum CliError {
     #[error("unknown option --{0}")]
     UnknownOption(String),

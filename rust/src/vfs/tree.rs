@@ -83,6 +83,7 @@ fn parent(path: &str) -> Option<String> {
 }
 
 #[derive(Debug, thiserror::Error, Clone, PartialEq)]
+#[non_exhaustive]
 pub enum VfsError {
     #[error("path is not absolute: {0}")]
     NotAbsolute(String),

@@ -15,6 +15,7 @@ use std::collections::BTreeMap;
 use crate::hostenv::SystemProfile;
 
 #[derive(Debug, thiserror::Error)]
+#[non_exhaustive]
 pub enum WlmError {
     #[error("requested {requested} nodes but only {available} available")]
     NotEnoughNodes { requested: u32, available: u32 },

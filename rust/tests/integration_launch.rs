@@ -1,22 +1,20 @@
-//! Integration: the cluster-scale launch orchestrator (DESIGN.md S19) —
+//! Integration: the cluster-scale launch orchestrator (DESIGN.md S19),
+//! exercised exclusively through the `Site` facade (DESIGN.md S21) —
 //! heterogeneous partitions get per-node correct injected driver stacks,
 //! an unsatisfiable MPI ABI fails only its own launch slots, the pull
 //! storm coalesces into one gateway job, and queue-wait surfaces in the
 //! report.
 
-use shifter_rs::distrib::DistributionFabric;
-use shifter_rs::launch::{
-    JobSpec, LaunchCluster, LaunchScheduler, RetryPolicy,
-};
+use shifter_rs::launch::{JobSpec, RetryPolicy};
 use shifter_rs::mpi::MpiImpl;
-use shifter_rs::pfs::LustreFs;
-use shifter_rs::{Registry, SystemProfile};
+use shifter_rs::{Site, SiteBuilder, SystemProfile};
 
-fn strict_scheduler<'a>(
-    cluster: &'a LaunchCluster,
-    registry: &'a Registry,
-) -> LaunchScheduler<'a> {
-    LaunchScheduler::new(cluster, registry).with_policy(RetryPolicy::strict())
+fn strict(builder: SiteBuilder) -> Site {
+    builder
+        .retry_policy(RetryPolicy::strict())
+        .gateway_shards(4)
+        .build()
+        .expect("valid test site")
 }
 
 #[test]
@@ -24,15 +22,14 @@ fn heterogeneous_partitions_inject_their_own_driver_stacks() {
     // §IV.A across generations: P100 nodes run a 375.66 driver, the
     // K40m/K80 nodes a 367.48 driver — one job spanning both partitions
     // must see the right stack bind-mounted on every node
-    let cluster = LaunchCluster::new()
-        .with_partition("daint-xc50", &SystemProfile::piz_daint(), 4)
-        .with_partition("linux-cluster", &SystemProfile::linux_cluster(), 4);
-    let registry = Registry::dockerhub();
-    let mut fabric = DistributionFabric::new(4, LustreFs::piz_daint());
-    let scheduler = strict_scheduler(&cluster, &registry);
+    let mut site = strict(
+        Site::builder()
+            .partition("daint-xc50", &SystemProfile::piz_daint(), 4)
+            .partition("linux-cluster", &SystemProfile::linux_cluster(), 4),
+    );
     let spec =
         JobSpec::new("nvidia/cuda-image:8.0", &["deviceQuery"], 8).with_gpus(1);
-    let report = scheduler.launch(&mut fabric, &spec).unwrap();
+    let report = site.launch(&spec).unwrap();
 
     assert_eq!(report.succeeded(), 8);
     assert_eq!(report.failed(), 0);
@@ -66,15 +63,14 @@ fn unsatisfiable_mpi_abi_fails_its_slots_without_poisoning_others() {
     // the Cray MPT swap intact
     let mut openmpi_host = SystemProfile::linux_cluster();
     openmpi_host.host_mpi = MpiImpl::openmpi_2_0();
-    let cluster = LaunchCluster::new()
-        .with_partition("daint-xc50", &SystemProfile::piz_daint(), 3)
-        .with_partition("openmpi-island", &openmpi_host, 3);
-    let registry = Registry::dockerhub();
-    let mut fabric = DistributionFabric::new(4, LustreFs::piz_daint());
-    let scheduler = strict_scheduler(&cluster, &registry);
+    let mut site = strict(
+        Site::builder()
+            .partition("daint-xc50", &SystemProfile::piz_daint(), 3)
+            .partition("openmpi-island", &openmpi_host, 3),
+    );
     let spec =
         JobSpec::new("osu-benchmarks:mpich-3.1.4", &["true"], 6).with_mpi();
-    let report = scheduler.launch(&mut fabric, &spec).unwrap();
+    let report = site.launch(&spec).unwrap();
 
     assert_eq!(report.succeeded(), 3);
     assert_eq!(report.failed(), 3);
@@ -102,15 +98,16 @@ fn unsatisfiable_mpi_abi_fails_its_slots_without_poisoning_others() {
 fn gres_shortfall_kills_only_the_gpuless_partition() {
     let mut gpuless = SystemProfile::linux_cluster();
     gpuless.nodes[0].gpus.clear();
-    let cluster = LaunchCluster::new()
-        .with_partition("daint-xc50", &SystemProfile::piz_daint(), 2)
-        .with_partition("cpu-only", &gpuless, 2);
-    let registry = Registry::dockerhub();
-    let mut fabric = DistributionFabric::new(4, LustreFs::piz_daint());
-    let scheduler = strict_scheduler(&cluster, &registry);
+    let mut site = strict(
+        Site::builder()
+            .partition("daint-xc50", &SystemProfile::piz_daint(), 2)
+            .partition("cpu-only", &gpuless, 2),
+    );
     let spec =
         JobSpec::new("nvidia/cuda-image:8.0", &["deviceQuery"], 4).with_gpus(1);
-    let report = scheduler.launch(&mut fabric, &spec).unwrap();
+    // the daint partition is GPU-capable, so the facade's fail-fast
+    // check passes and the per-partition WLM shortfall surfaces per slot
+    let report = site.launch(&spec).unwrap();
     assert_eq!(report.succeeded(), 2);
     assert_eq!(report.failed(), 2);
     for r in &report.node_results {
@@ -129,14 +126,13 @@ fn gres_shortfall_kills_only_the_gpuless_partition() {
 fn ancient_kernel_partition_fails_preflight_only_for_itself() {
     let mut ancient = SystemProfile::piz_daint();
     ancient.kernel = "2.6.18"; // predates squashfs (mainlined 2.6.29)
-    let cluster = LaunchCluster::new()
-        .with_partition("modern", &SystemProfile::piz_daint(), 2)
-        .with_partition("museum", &ancient, 2);
-    let registry = Registry::dockerhub();
-    let mut fabric = DistributionFabric::new(4, LustreFs::piz_daint());
-    let scheduler = strict_scheduler(&cluster, &registry);
+    let mut site = strict(
+        Site::builder()
+            .partition("modern", &SystemProfile::piz_daint(), 2)
+            .partition("museum", &ancient, 2),
+    );
     let spec = JobSpec::new("ubuntu:xenial", &["true"], 4);
-    let report = scheduler.launch(&mut fabric, &spec).unwrap();
+    let report = site.launch(&spec).unwrap();
     assert_eq!(report.succeeded(), 2);
     assert_eq!(report.failed(), 2);
     for r in &report.node_results {
@@ -150,12 +146,9 @@ fn ancient_kernel_partition_fails_preflight_only_for_itself() {
 
 #[test]
 fn launch_storm_coalesces_into_one_pull_job() {
-    let cluster = LaunchCluster::daint_linux_split(64);
-    let registry = Registry::dockerhub();
-    let mut fabric = DistributionFabric::new(4, LustreFs::piz_daint());
-    let scheduler = strict_scheduler(&cluster, &registry);
+    let mut site = strict(Site::builder().hetero_daint_linux(64));
     let spec = JobSpec::new("ubuntu:xenial", &["true"], 64);
-    let report = scheduler.launch(&mut fabric, &spec).unwrap();
+    let report = site.launch(&spec).unwrap();
     assert_eq!(report.succeeded(), 64);
     let pull = report.pull.unwrap();
     assert_eq!(pull.jobs_total, 1, "64 nodes, one gateway job");
@@ -168,19 +161,37 @@ fn launch_storm_coalesces_into_one_pull_job() {
 }
 
 #[test]
+fn launch_on_places_an_explicit_node_set_through_the_facade() {
+    let mut site = strict(
+        Site::builder().profile(SystemProfile::piz_daint()).nodes(16),
+    );
+    let spec = JobSpec::new("ubuntu:xenial", &["true"], 4);
+    let nodes = [3u32, 7, 8, 15];
+    let report = site.launch_on(&spec, &nodes).unwrap();
+    assert_eq!(report.succeeded(), 4);
+    let got: Vec<u32> =
+        report.node_results.iter().map(|r| r.node).collect();
+    assert_eq!(got, nodes);
+    // the same nodes relaunch warm — their caches are keyed on the
+    // global ids the explicit set named
+    let warm = site.launch_on(&spec, &nodes).unwrap();
+    assert_eq!(warm.cache.hits, 4);
+}
+
+#[test]
 fn launch_report_surfaces_queue_wait_behind_a_backlog() {
     // a huge unrelated pull is already queued on the (single) shard; the
     // job's coalesced pull must wait behind it and the report must say so
-    let cluster =
-        LaunchCluster::homogeneous(&SystemProfile::piz_daint(), 4);
-    let registry = Registry::dockerhub();
-    let mut fabric = DistributionFabric::new(1, LustreFs::piz_daint());
-    fabric
-        .request(&registry, "pynamic:1.3", "nightly-sync")
+    let mut site = Site::builder()
+        .profile(SystemProfile::piz_daint())
+        .nodes(4)
+        .gateway_shards(1)
+        .retry_policy(RetryPolicy::strict())
+        .build()
         .unwrap();
-    let scheduler = strict_scheduler(&cluster, &registry);
+    site.request("pynamic:1.3", "nightly-sync").unwrap();
     let spec = JobSpec::new("ubuntu:xenial", &["true"], 4);
-    let report = scheduler.launch(&mut fabric, &spec).unwrap();
+    let report = site.launch(&spec).unwrap();
     assert_eq!(report.succeeded(), 4);
     let pull = report.pull.unwrap();
     assert!(
@@ -190,6 +201,6 @@ fn launch_report_surfaces_queue_wait_behind_a_backlog() {
     );
     assert!(pull.turnaround_secs > pull.queue_wait_secs);
     // the fabric-level stats agree
-    let wait = fabric.queue_wait_stats().unwrap();
+    let wait = site.fabric().queue_wait_stats().unwrap();
     assert!((wait.worst - pull.queue_wait_secs).abs() < 1e-6);
 }

@@ -1,24 +1,26 @@
-//! Integration: the multi-tenant workload layer (DESIGN.md S20) — a
-//! synthesized tenant storm runs end to end over the hetero cluster and
-//! the shared fabric, fair-share + backfill beats FIFO under contention,
-//! cross-job pulls coalesce, warm caches survive across jobs, and the
-//! whole simulation is deterministic.
+//! Integration: the multi-tenant workload layer (DESIGN.md S20), driven
+//! through the `Site` facade (DESIGN.md S21) — a synthesized tenant
+//! storm runs end to end over the hetero cluster and the shared fabric,
+//! fair-share + backfill beats FIFO under contention, cross-job pulls
+//! coalesce, warm caches survive across jobs, and the whole simulation
+//! is deterministic.
 
-use shifter_rs::distrib::DistributionFabric;
-use shifter_rs::launch::{JobSpec, LaunchCluster};
-use shifter_rs::pfs::LustreFs;
+use shifter_rs::launch::{JobSpec, RetryPolicy};
 use shifter_rs::tenancy::{
-    unique_image_refs, FairShareScheduler, JobClass, SchedulingPolicy,
+    unique_image_refs, FairShare, Fifo, JobClass, SchedulingPolicy,
     TenantJob, TrafficModel,
 };
-use shifter_rs::Registry;
+use shifter_rs::Site;
 
-fn hetero(nodes: u32) -> (LaunchCluster, Registry, DistributionFabric) {
-    (
-        LaunchCluster::daint_linux_split(nodes),
-        Registry::dockerhub(),
-        DistributionFabric::new(4, LustreFs::piz_daint()),
-    )
+fn hetero_site(nodes: u32) -> Site {
+    // strict retry: deterministic per-node timings and exact cache/pull
+    // accounting, matching the scheduler's own default
+    Site::builder()
+        .hetero_daint_linux(nodes)
+        .gateway_shards(4)
+        .retry_policy(RetryPolicy::strict())
+        .build()
+        .expect("valid test site")
 }
 
 fn small_storm(jobs: u32) -> TrafficModel {
@@ -50,11 +52,10 @@ fn cpu_job(
 
 #[test]
 fn tenant_storm_runs_end_to_end_on_the_hetero_cluster() {
-    let (cluster, registry, mut fabric) = hetero(64);
-    let stream = small_storm(24).generate(&cluster);
+    let mut site = hetero_site(64);
+    let stream = small_storm(24).generate(site.cluster());
     assert_eq!(stream.len(), 24);
-    let report = FairShareScheduler::new(&cluster, &registry)
-        .run(&mut fabric, &stream);
+    let report = site.storm_with(&stream, &FairShare::default());
 
     assert_eq!(report.completed(), 24, "every job must complete");
     assert_eq!(report.failed(), 0);
@@ -99,14 +100,11 @@ fn backfill_beats_fifo_on_a_contended_stream() {
         cpu_job(3, 3, 3.0, 4, 60.0),
         cpu_job(4, 0, 4.0, 2, 120.0),
     ];
-    let run = |policy| {
-        let (cluster, registry, mut fabric) = hetero(16);
-        FairShareScheduler::new(&cluster, &registry)
-            .with_policy(policy)
-            .run(&mut fabric, &jobs)
+    let run = |policy: &dyn SchedulingPolicy| {
+        hetero_site(16).storm_with(&jobs, policy)
     };
-    let fifo = run(SchedulingPolicy::Fifo);
-    let fair = run(SchedulingPolicy::FairShare);
+    let fifo = run(&Fifo);
+    let fair = run(&FairShare::default());
     assert_eq!(fifo.completed(), 5);
     assert_eq!(fair.completed(), 5);
     assert_eq!(fifo.backfilled_jobs, 0, "fifo never backfills");
@@ -144,9 +142,8 @@ fn aging_keeps_the_heavy_tenants_from_starving_anyone() {
         .map(|i| cpu_job(i, 0, f64::from(i) * 5.0, 16, 300.0))
         .collect();
     jobs.push(cpu_job(8, 1, 45.0, 4, 60.0));
-    let (cluster, registry, mut fabric) = hetero(16);
-    let report = FairShareScheduler::new(&cluster, &registry)
-        .run(&mut fabric, &jobs);
+    let mut site = hetero_site(16);
+    let report = site.storm_with(&jobs, &FairShare::default());
     assert_eq!(report.completed(), 9);
     let light = &report.records[8];
     // the flood takes 8 * ~300s serially; the light job must cut far
@@ -167,9 +164,8 @@ fn warm_node_caches_survive_across_jobs_in_one_storm() {
         cpu_job(0, 0, 0.0, 8, 100.0),
         cpu_job(1, 0, 500.0, 8, 100.0),
     ];
-    let (cluster, registry, mut fabric) = hetero(16);
-    let report = FairShareScheduler::new(&cluster, &registry)
-        .run(&mut fabric, &jobs);
+    let mut site = hetero_site(16);
+    let report = site.storm_with(&jobs, &FairShare::default());
     assert_eq!(report.completed(), 2);
     // first job cold-fills 8 nodes; the second starts on the same free
     // prefix and hits all 8 caches
@@ -182,10 +178,9 @@ fn warm_node_caches_survive_across_jobs_in_one_storm() {
 #[test]
 fn storm_simulation_is_deterministic() {
     let run = || {
-        let (cluster, registry, mut fabric) = hetero(32);
-        let stream = small_storm(12).generate(&cluster);
-        FairShareScheduler::new(&cluster, &registry)
-            .run(&mut fabric, &stream)
+        let mut site = hetero_site(32);
+        let stream = small_storm(12).generate(site.cluster());
+        site.storm_with(&stream, &FairShare::default())
     };
     let a = run();
     let b = run();
@@ -197,4 +192,27 @@ fn storm_simulation_is_deterministic() {
         assert_eq!(x.end_secs, y.end_secs);
         assert_eq!(x.wait_secs, y.wait_secs);
     }
+}
+
+#[test]
+fn site_default_policy_drives_storm_via_traffic_model() {
+    // `Site::storm` uses the builder's policy and synthesizes the stream
+    // from the model against the site's own cluster
+    let mut site = Site::builder()
+        .hetero_daint_linux(32)
+        .gateway_shards(4)
+        .scheduling_policy(Box::new(Fifo))
+        .seed(11)
+        .build()
+        .unwrap();
+    let model = TrafficModel {
+        tenants: 3,
+        jobs: 8,
+        ..site.default_traffic()
+    };
+    assert_eq!(model.seed, 11, "the site seed feeds the default traffic");
+    let report = site.storm(&model);
+    assert_eq!(report.completed(), 8);
+    assert_eq!(report.policy, "fifo");
+    assert_eq!(report.backfilled_jobs, 0);
 }
