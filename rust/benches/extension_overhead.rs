@@ -1,0 +1,145 @@
+//! Extension-overhead bench (DESIGN.md S22): what each host extension
+//! costs at container start, and what the specialized-network extension
+//! buys at the wire.
+//!
+//! Part 1 — per-extension inject cost: run the same image at widths
+//! 1/64/1024 concurrent nodes with exactly one extension triggered at a
+//! time, and charge each extension the start-up delta over a bare run at
+//! the same width (the fetch/mount baseline cancels out — the delta is
+//! purely the extension's bind mounts).
+//!
+//! Part 2 — host-fabric vs TCP-fallback ablation: the same OSU message
+//! sizes Tables III/IV report, priced on the Aries link model through
+//! `Container::effective_transport()` — `SHIFTER_NET=host` puts the
+//! container on the native path, `SHIFTER_NET_FALLBACK=1` forces TCP.
+//!
+//! Writes `BENCH_extensions.json` (CI bench-smoke artifact). Knobs:
+//! `EXTENSION_OVERHEAD_NODES` caps the width sweep,
+//! `BENCH_EXTENSIONS_JSON` overrides the artifact path.
+
+use shifter_rs::fabric::{link_for, Transport, OSU_SIZES};
+use shifter_rs::shifter::RunOptions;
+use shifter_rs::util::json::Json;
+use shifter_rs::{ImageGateway, Registry, ShifterRuntime, SystemProfile};
+
+const IMAGE: &str = "osu-benchmarks:mpich-3.1.4";
+const WIDTHS: [u32; 3] = [1, 64, 1024];
+
+fn main() {
+    let cap: u32 = std::env::var("EXTENSION_OVERHEAD_NODES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1024);
+    let widths: Vec<u32> =
+        WIDTHS.iter().copied().filter(|w| *w <= cap.max(1)).collect();
+
+    let profile = SystemProfile::piz_daint();
+    let registry = Registry::dockerhub();
+    let mut gateway = ImageGateway::new(profile.pfs.clone().unwrap());
+    gateway.pull(&registry, IMAGE).unwrap();
+    let runtime = ShifterRuntime::new(&profile);
+
+    // -- part 1: per-extension inject cost over the bare baseline --------
+    println!("per-extension inject cost on {} ({IMAGE})", profile.name);
+    let mut inject_rows: Vec<Json> = Vec::new();
+    for &width in &widths {
+        let base_opts =
+            RunOptions::new(IMAGE, &["osu_latency"]).on_nodes(0, width);
+        let base = runtime.run(&gateway, &base_opts).unwrap();
+        assert!(base.extensions.is_empty());
+        let base_secs = base.startup_overhead_secs();
+
+        let variants: [(&str, RunOptions); 3] = [
+            (
+                "gpu",
+                base_opts.clone().with_env("CUDA_VISIBLE_DEVICES", "0"),
+            ),
+            ("mpi", base_opts.clone().with_mpi()),
+            ("net", base_opts.clone().with_env("SHIFTER_NET", "host")),
+        ];
+        for (name, opts) in variants {
+            let c = runtime.run(&gateway, &opts).unwrap();
+            assert_eq!(c.extensions.len(), 1, "{name} must trigger alone");
+            assert_eq!(c.extensions[0].extension, name);
+            let delta = c.startup_overhead_secs() - base_secs;
+            assert!(
+                delta > 0.0,
+                "{name} inject must cost time at width {width}"
+            );
+            println!(
+                "  {name:<4} @ {width:>4} node(s): +{:.1} µs \
+                 ({} mounts)",
+                delta * 1e6,
+                c.extensions[0].mounts_added,
+            );
+            inject_rows.push(Json::obj(vec![
+                ("extension", Json::str(name)),
+                ("nodes", Json::Num(width as f64)),
+                ("inject_secs", Json::Num(delta)),
+                (
+                    "mounts",
+                    Json::Num(c.extensions[0].mounts_added as f64),
+                ),
+            ]));
+        }
+    }
+
+    // -- part 2: host-fabric vs TCP-fallback OSU latency split -----------
+    let host_opts = RunOptions::new(IMAGE, &["osu_latency"])
+        .with_env("SHIFTER_NET", "host");
+    let host_run = runtime.run(&gateway, &host_opts).unwrap();
+    assert_eq!(host_run.effective_transport(), Transport::Native);
+
+    let fallback_opts = RunOptions::new(IMAGE, &["osu_latency"])
+        .with_env("SHIFTER_NET", "host")
+        .with_env("SHIFTER_NET_FALLBACK", "1");
+    let fallback_run = runtime.run(&gateway, &fallback_opts).unwrap();
+    assert_eq!(fallback_run.effective_transport(), Transport::TcpFallback);
+
+    let native_link =
+        link_for(profile.fabric, host_run.effective_transport());
+    let tcp_link =
+        link_for(profile.fabric, fallback_run.effective_transport());
+    println!(
+        "osu_latency ablation on {} ({}): host-fabric vs TCP fallback",
+        profile.name,
+        profile.fabric.name()
+    );
+    let mut osu_rows: Vec<Json> = Vec::new();
+    for size in OSU_SIZES {
+        let native_us = native_link.latency_us(size);
+        let tcp_us = tcp_link.latency_us(size);
+        let ratio = tcp_us / native_us;
+        // the Daint band of Table IV: the fallback must be measurably
+        // slower at every size
+        assert!(
+            ratio > 1.2,
+            "fallback must be slower at size {size}: {ratio}"
+        );
+        println!(
+            "  {size:>8} B: native {native_us:>8.2} µs, \
+             tcp {tcp_us:>8.2} µs ({ratio:.2}x)"
+        );
+        osu_rows.push(Json::obj(vec![
+            ("size_bytes", Json::Num(size as f64)),
+            ("host_fabric_us", Json::Num(native_us)),
+            ("tcp_fallback_us", Json::Num(tcp_us)),
+            ("ratio", Json::Num(ratio)),
+        ]));
+    }
+
+    // -- artifact ---------------------------------------------------------
+    let doc = Json::obj(vec![
+        ("bench", Json::str("extension_overhead")),
+        ("image", Json::str(IMAGE)),
+        ("system", Json::str(profile.name)),
+        ("max_nodes", Json::Num(cap as f64)),
+        ("inject_cost", Json::Arr(inject_rows)),
+        ("osu_net_split", Json::Arr(osu_rows)),
+    ]);
+    let path = std::env::var("BENCH_EXTENSIONS_JSON")
+        .unwrap_or_else(|_| "BENCH_extensions.json".to_string());
+    std::fs::write(&path, doc.to_string())
+        .expect("write BENCH_extensions.json");
+    println!("wrote {path}");
+}

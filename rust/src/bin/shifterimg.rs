@@ -19,12 +19,14 @@
 //! `pull`/`lookup`/`images`/`run` are the paper's §III.B end-user
 //! workflow. `cluster-status` drives the full registry catalog through
 //! the sharded fabric (DESIGN.md S18) and prints per-shard queue/image
-//! state plus the CAS dedup accounting. `launch` runs one cluster-scale
-//! job through the orchestrator (S19); `storm` runs the multi-tenant
-//! traffic simulation (S20) under a pluggable scheduling policy.
-//! `--hetero` splits the node range into a Piz Daint partition and a
-//! Linux Cluster partition (different GPU generations, driver versions
-//! and host MPIs).
+//! state, the CAS dedup accounting, and the per-partition host-extension
+//! capability vectors (S22). `launch` runs one cluster-scale job through
+//! the orchestrator (S19); `storm` runs the multi-tenant traffic
+//! simulation (S20) under a pluggable scheduling policy. `--hetero`
+//! splits the node range into a Piz Daint partition and a Linux Cluster
+//! partition (different GPU generations, driver versions, host MPIs and
+//! fabric transports). `--net` requests the host fabric via the
+//! specialized-network extension (`SHIFTER_NET=host`).
 
 use shifter_rs::launch::JobSpec;
 use shifter_rs::metrics::Table;
@@ -58,10 +60,12 @@ fn usage() -> ! {
          run options:\n\
          \x20 --gpus=LIST           set CUDA_VISIBLE_DEVICES (GPU support)\n\
          \x20 --mpi                 activate the MPI ABI swap\n\
+         \x20 --net                 request the host fabric (SHIFTER_NET)\n\
          \n\
          launch options:\n\
          \x20 --gpus=N              request --gres=gpu:N per node\n\
          \x20 --mpi                 activate the MPI ABI swap\n\
+         \x20 --net                 request the host fabric on every node\n\
          \n\
          storm options:\n\
          \x20 --tenants=N           simulated tenants (default 8)\n\
@@ -74,6 +78,13 @@ fn usage() -> ! {
     std::process::exit(2);
 }
 
+/// Print a typed error with its full `source()` chain and exit nonzero —
+/// every operational failure routes through here, so a user always sees
+/// the `SiteError` (and its layer-level cause) rather than a panic.
+fn die(err: &dyn std::error::Error) -> ! {
+    shifter_rs::util::cli::die("shifterimg", err)
+}
+
 fn main() {
     let spec = CliSpec::new(
         &[
@@ -82,6 +93,7 @@ fn main() {
             ("nodes", true),
             ("gpus", true),
             ("mpi", false),
+            ("net", false),
             ("hetero", false),
             ("tenants", true),
             ("jobs", true),
@@ -127,10 +139,7 @@ fn main() {
                         pull.pfs_path,
                     );
                 }
-                Err(e) => {
-                    eprintln!("shifterimg: {e}");
-                    std::process::exit(1);
-                }
+                Err(e) => die(&e),
             }
         }
         [cmd] if cmd == "images" => {
@@ -152,10 +161,7 @@ fn main() {
             let mut site = build_site(site_builder(&profile, &parsed, parse_nodes(&parsed, 1), false));
             match site.pull(reference) {
                 Ok(pull) => println!("{reference} -> {}", pull.pfs_path),
-                Err(e) => {
-                    eprintln!("shifterimg: {e}");
-                    std::process::exit(1);
-                }
+                Err(e) => die(&e),
             }
         }
         [cmd, rest @ ..] if cmd == "run" && !rest.is_empty() => {
@@ -169,6 +175,9 @@ fn main() {
             let mut opts = RunOptions::new(reference, &command);
             if parsed.has("mpi") {
                 opts = opts.with_mpi();
+            }
+            if parsed.has("net") {
+                opts = opts.with_env("SHIFTER_NET", "host");
             }
             if let Some(gpus) = parsed.get("gpus") {
                 opts = opts.with_env("CUDA_VISIBLE_DEVICES", gpus);
@@ -185,15 +194,9 @@ fn main() {
                             container.startup_overhead_secs() * 1e3
                         );
                     }
-                    Err(e) => {
-                        eprintln!("shifterimg: {e}");
-                        std::process::exit(1);
-                    }
+                    Err(e) => die(&e),
                 },
-                Err(e) => {
-                    eprintln!("shifterimg: {e}");
-                    std::process::exit(1);
-                }
+                Err(e) => die(&e),
             }
         }
         [cmd] if cmd == "cluster-status" => {
@@ -247,6 +250,24 @@ fn main() {
                 cas.dedup_ratio(),
                 cas.saved_bytes() as f64 / 1e6,
             );
+
+            // per-partition host-extension capability vectors (S22)
+            let mut ext_table = Table::new(
+                "extension capabilities",
+                &["partition", "extension", "available", "detail"],
+            );
+            for (partition, caps) in site.capabilities() {
+                for cap in caps {
+                    let verdict = if cap.available { "yes" } else { "no" };
+                    ext_table.row(&[
+                        partition.clone(),
+                        cap.extension.to_string(),
+                        verdict.to_string(),
+                        cap.detail.clone(),
+                    ]);
+                }
+            }
+            print!("{}", ext_table.render());
         }
         [cmd, rest @ ..] if cmd == "launch" && !rest.is_empty() => {
             let reference = &rest[0];
@@ -276,6 +297,9 @@ fn main() {
             if parsed.has("mpi") {
                 job = job.with_mpi();
             }
+            if parsed.has("net") {
+                job = job.with_env("SHIFTER_NET", "host");
+            }
             match site.launch(&job) {
                 Ok(report) => {
                     print!("{}", report.render());
@@ -283,10 +307,7 @@ fn main() {
                         std::process::exit(1);
                     }
                 }
-                Err(e) => {
-                    eprintln!("shifterimg: {e}");
-                    std::process::exit(1);
-                }
+                Err(e) => die(&e),
             }
         }
         [cmd] if cmd == "storm" => {

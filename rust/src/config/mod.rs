@@ -39,6 +39,12 @@ pub struct UdiRootConfig {
     pub mpi_dependency_paths: Vec<String>,
     /// Host MPI config files/folders.
     pub mpi_config_paths: Vec<String>,
+    /// Host fabric transport libraries the specialized-network extension
+    /// bind-mounts (uGNI/DMAPP on Aries, verbs/RDMA on InfiniBand).
+    pub net_transport_paths: Vec<String>,
+    /// Fabric device files the specialized-network extension grafts
+    /// (`/dev/kgni0`, `/dev/hugepages`, `/dev/infiniband/*`).
+    pub net_device_paths: Vec<String>,
     /// Host directory with NVIDIA driver libraries.
     pub gpu_lib_dir: String,
     /// Host directory with NVIDIA binaries (nvidia-smi).
@@ -92,10 +98,13 @@ impl UdiRootConfig {
                 .collect(),
             mpi_dependency_paths: profile.mpi_dependency_libs(),
             mpi_config_paths: profile.mpi_config_paths(),
+            net_transport_paths: profile.net_transport_libs(),
+            net_device_paths: profile.net_device_files(),
             gpu_lib_dir: profile.gpu_lib_dir.to_string(),
             gpu_bin_dir: profile.gpu_bin_dir.to_string(),
             host_env_allowlist: vec![
                 "CUDA_VISIBLE_DEVICES".into(),
+                "SHIFTER_NET".into(),
                 "SLURM_JOB_ID".into(),
                 "SLURM_PROCID".into(),
                 "SLURM_NTASKS".into(),
@@ -125,6 +134,12 @@ impl UdiRootConfig {
         }
         for p in &self.mpi_config_paths {
             out.push_str(&format!("mpiConfig = {p}\n"));
+        }
+        for p in &self.net_transport_paths {
+            out.push_str(&format!("netTransport = {p}\n"));
+        }
+        for p in &self.net_device_paths {
+            out.push_str(&format!("netDevice = {p}\n"));
         }
         out.push_str(&format!("gpuLibDir = {}\n", self.gpu_lib_dir));
         out.push_str(&format!("gpuBinDir = {}\n", self.gpu_bin_dir));
@@ -171,6 +186,10 @@ impl UdiRootConfig {
                 "mpiFrontend" => cfg.mpi_frontend_paths.push(v.to_string()),
                 "mpiDependency" => cfg.mpi_dependency_paths.push(v.to_string()),
                 "mpiConfig" => cfg.mpi_config_paths.push(v.to_string()),
+                "netTransport" => {
+                    cfg.net_transport_paths.push(v.to_string())
+                }
+                "netDevice" => cfg.net_device_paths.push(v.to_string()),
                 "gpuLibDir" => cfg.gpu_lib_dir = v.to_string(),
                 "gpuBinDir" => cfg.gpu_bin_dir = v.to_string(),
                 "hostEnv" => cfg.host_env_allowlist.push(v.to_string()),

@@ -10,6 +10,7 @@ pub use modules::{daint_catalog, ModuleDef, ModuleError, ModuleSystem};
 use crate::fabric::FabricKind;
 use crate::gpu::{GpuModel, NvidiaDriver};
 use crate::mpi::MpiImpl;
+use crate::netfab::NetAbi;
 use crate::pfs::LustreFs;
 use crate::vfs::{VNode, VirtualFs};
 
@@ -229,7 +230,73 @@ impl SystemProfile {
         for cfg in self.mpi_config_paths() {
             fs.add_file(&cfg, 2_000, 0x50).unwrap();
         }
+
+        // specialized-network transport stack (netfab): user-space
+        // transport libraries plus the fabric device files NetworkSupport
+        // grafts. Some transport libraries double as MPI dependencies
+        // (libugni on Aries, libibverbs on the cluster) — keep the node
+        // the MPI section already added.
+        for lib in self.net_transport_libs() {
+            if !fs.exists(&lib) {
+                fs.add_file(&lib, 900_000, 0x60 ^ lib.len() as u64).unwrap();
+            }
+        }
+        for (i, dev) in self.net_device_files().iter().enumerate() {
+            if dev.ends_with("hugepages") {
+                fs.mkdir_p(dev).unwrap();
+            } else if !fs.exists(dev) {
+                let major = if dev.contains("kgni") { 249 } else { 231 };
+                fs.insert(dev, VNode::Device { major, minor: i as u32 })
+                    .unwrap();
+            }
+        }
         fs
+    }
+
+    /// User-space transport libraries of the host fabric (the netfab
+    /// analog of [`SystemProfile::mpi_dependency_libs`]): the uGNI/DMAPP
+    /// stack on Cray Aries, the verbs/RDMA stack on InfiniBand.
+    pub fn net_transport_libs(&self) -> Vec<String> {
+        match self.fabric {
+            FabricKind::InfinibandEdr => vec![
+                "/usr/lib64/libibverbs.so.1".to_string(),
+                "/usr/lib64/librdmacm.so.1".to_string(),
+                "/usr/lib64/libmlx5.so.1".to_string(),
+            ],
+            FabricKind::CrayAries => vec![
+                "/opt/cray/ugni/default/lib64/libugni.so.0".to_string(),
+                "/opt/cray/dmapp/default/lib64/libdmapp.so.1".to_string(),
+                "/opt/cray/xpmem/default/lib64/libxpmem.so.0".to_string(),
+            ],
+            FabricKind::Loopback => vec![],
+        }
+    }
+
+    /// Fabric device files the transport libraries open: `/dev/kgni0` +
+    /// `/dev/hugepages` on Aries, the `/dev/infiniband/*` nodes on
+    /// InfiniBand.
+    pub fn net_device_files(&self) -> Vec<String> {
+        match self.fabric {
+            FabricKind::InfinibandEdr => vec![
+                "/dev/infiniband/uverbs0".to_string(),
+                "/dev/infiniband/rdma_cm".to_string(),
+            ],
+            FabricKind::CrayAries => vec![
+                "/dev/kgni0".to_string(),
+                "/dev/hugepages".to_string(),
+            ],
+            FabricKind::Loopback => vec![],
+        }
+    }
+
+    /// The host's transport ABI (the netfab analog of the host MPI's
+    /// libtool string); None on fabric-less hosts.
+    pub fn net_abi(&self) -> Option<NetAbi> {
+        match self.fabric {
+            FabricKind::InfinibandEdr => Some(NetAbi::new("verbs", 17)),
+            FabricKind::CrayAries => Some(NetAbi::new("gni", 5)),
+            FabricKind::Loopback => None,
+        }
     }
 
     /// Host-specific shared libraries the vendor MPI depends on (§IV.B:
@@ -317,6 +384,28 @@ mod tests {
         assert!(fs.exists("/opt/cray/ugni/default/lib64/libugni.so.0"));
         assert!(fs.exists("/dev/nvidia0"));
         assert!(fs.exists("/dev/nvidia-uvm"));
+    }
+
+    #[test]
+    fn net_inventory_matches_fabric() {
+        let pd = SystemProfile::piz_daint();
+        assert_eq!(pd.net_abi().unwrap().abi_string(), "gni:5");
+        let fs = pd.host_fs();
+        assert!(fs.exists("/opt/cray/dmapp/default/lib64/libdmapp.so.1"));
+        assert!(fs.exists("/dev/kgni0"));
+        assert!(fs.is_dir("/dev/hugepages"));
+
+        let cl = SystemProfile::linux_cluster();
+        assert_eq!(cl.net_abi().unwrap().abi_string(), "verbs:17");
+        let fs = cl.host_fs();
+        assert!(fs.exists("/usr/lib64/libmlx5.so.1"));
+        assert!(fs.exists("/dev/infiniband/uverbs0"));
+        assert!(fs.exists("/dev/infiniband/rdma_cm"));
+
+        let lap = SystemProfile::laptop();
+        assert!(lap.net_abi().is_none());
+        assert!(lap.net_transport_libs().is_empty());
+        assert!(lap.net_device_files().is_empty());
     }
 
     #[test]

@@ -19,6 +19,12 @@ pub const LABEL_MPI_VENDOR: &str = "org.shifter.mpi.vendor";
 pub const LABEL_MPI_VERSION: &str = "org.shifter.mpi.version";
 pub const LABEL_MPI_ABI: &str = "org.shifter.mpi.abi";
 pub const LABEL_CUDA_VERSION: &str = "org.shifter.cuda.version";
+/// Transport family a fabric-aware image was built against ("gni",
+/// "verbs"); portable TCP builds carry no label.
+pub const LABEL_NET_FABRIC: &str = "org.shifter.net.fabric";
+/// Transport ABI string (`transport:major`) of a fabric-aware build —
+/// gated against the host by `netfab::check`.
+pub const LABEL_NET_ABI: &str = "org.shifter.net.abi";
 pub const LABEL_APP: &str = "org.shifter.app";
 
 pub struct ImageBuilder {
@@ -183,6 +189,15 @@ impl ImageBuilder {
             .label(LABEL_MPI_VERSION, &version)
             .label(LABEL_MPI_ABI, &abi)
             .commit_layer()
+    }
+
+    /// Declare the specialized-network transport this image was built
+    /// against (a fabric-aware build, e.g. an MPI compiled with uGNI
+    /// support); triggers and gates `netfab` injection.
+    pub fn with_net_transport(self, transport: &str, abi_major: u32) -> Self {
+        let abi = format!("{transport}:{abi_major}");
+        self.label(LABEL_NET_FABRIC, transport)
+            .label(LABEL_NET_ABI, &abi)
     }
 
     /// Install a CUDA toolkit (container side: toolkit + stubs, NOT the

@@ -26,11 +26,12 @@ pub mod scheduler;
 pub use report::{LaunchReport, NodeResult, PullSummary};
 pub use scheduler::{LaunchError, LaunchScheduler, RetryPolicy};
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::config::UdiRootConfig;
 use crate::hostenv::SystemProfile;
-use crate::shifter::ShifterRuntime;
+use crate::shifter::{ExtensionRegistry, ShifterRuntime};
 
 /// What the user hands to `shifterimg launch` / the batch system: one
 /// containerized job spanning `nodes` compute nodes.
@@ -47,6 +48,10 @@ pub struct JobSpec {
     pub gpus_per_node: u32,
     /// `--mpi`: activate the §IV.B library swap on every node.
     pub mpi: bool,
+    /// Extra launch-environment variables exported on every node (e.g.
+    /// `SHIFTER_NET=host` to request the host fabric). WLM-injected
+    /// variables (`CUDA_VISIBLE_DEVICES`, SLURM ids) win on conflicts.
+    pub env: BTreeMap<String, String>,
     /// Numeric uid of the submitting user (drops privileges to this).
     pub invoking_uid: u32,
     /// Numeric gid of the submitting user.
@@ -62,6 +67,7 @@ impl JobSpec {
             nodes,
             gpus_per_node: 0,
             mpi: false,
+            env: BTreeMap::new(),
             invoking_uid: 1000,
             invoking_gid: 1000,
         }
@@ -76,6 +82,13 @@ impl JobSpec {
     /// Activate the §IV.B MPI library swap on every node.
     pub fn with_mpi(mut self) -> JobSpec {
         self.mpi = true;
+        self
+    }
+
+    /// Export one launch-environment variable on every node of the job
+    /// (extension triggers like `SHIFTER_NET`, `SHIFTER_NET_FALLBACK`).
+    pub fn with_env(mut self, k: &str, v: &str) -> JobSpec {
+        self.env.insert(k.to_string(), v.to_string());
         self
     }
 }
@@ -137,6 +150,17 @@ impl Partition {
             ),
             None => ShifterRuntime::shared(self.shared_profile()),
         }
+    }
+
+    /// [`Partition::runtime`] with an explicit host-extension registry —
+    /// the wiring point `SiteBuilder::with_extension` reaches node
+    /// execution through.
+    pub fn runtime_with_extensions(
+        &self,
+        config: Option<&UdiRootConfig>,
+        extensions: Arc<ExtensionRegistry>,
+    ) -> ShifterRuntime {
+        self.runtime(config).with_extensions(extensions)
     }
 }
 

@@ -29,6 +29,9 @@ pub struct NodeResult {
     pub gpu_libraries: Vec<String>,
     /// Host MPI the container was swapped to, when `--mpi` succeeded.
     pub host_mpi: Option<String>,
+    /// Host extensions that injected on this node, in registry order
+    /// (`"gpu"`, `"mpi"`, `"net"`, plus any site-defined extension).
+    pub extensions: Vec<&'static str>,
     /// Why the slot failed; None = the container launched.
     pub error: Option<String>,
 }
@@ -149,6 +152,22 @@ impl LaunchReport {
         ok
     }
 
+    /// Nodes per activated host extension across successful slots, in
+    /// first-seen order — the aggregated `ExtensionReport` view of the
+    /// whole launch.
+    pub fn extension_counts(&self) -> Vec<(&'static str, usize)> {
+        let mut out: Vec<(&'static str, usize)> = Vec::new();
+        for r in self.node_results.iter().filter(|r| r.ok()) {
+            for ext in &r.extensions {
+                match out.iter_mut().find(|(name, _)| name == ext) {
+                    Some((_, n)) => *n += 1,
+                    None => out.push((*ext, 1)),
+                }
+            }
+        }
+        out
+    }
+
     /// Distinct failure reasons with their node counts (deduplicated so a
     /// 4096-node report stays readable).
     pub fn failure_summary(&self) -> Vec<(String, usize)> {
@@ -212,6 +231,14 @@ impl LaunchReport {
                 fmt_secs(pull.turnaround_secs),
             ));
         }
+        let ext_counts = self.extension_counts();
+        if !ext_counts.is_empty() {
+            let parts: Vec<String> = ext_counts
+                .iter()
+                .map(|(name, n)| format!("{name} on {n} node(s)"))
+                .collect();
+            out.push_str(&format!("extensions: {}\n", parts.join(", ")));
+        }
         out.push_str(&format!(
             "retries: {} ({} straggler slot(s)); node caches: {} hits / {} \
              misses / {} evictions on {} nodes; cas dedup {:.2}x\n",
@@ -271,6 +298,20 @@ impl LaunchReport {
             ("cache_misses", Json::Num(self.cache.misses as f64)),
             ("cas_dedup_ratio", Json::Num(self.cas_dedup_ratio)),
             ("stages", Json::Arr(stages)),
+            (
+                "extensions",
+                Json::Arr(
+                    self.extension_counts()
+                        .iter()
+                        .map(|&(name, n)| {
+                            Json::obj(vec![
+                                ("extension", Json::str(name)),
+                                ("nodes", Json::Num(n as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ];
         if let Some(total) = self.total_stats() {
             fields.push((
@@ -315,6 +356,7 @@ mod tests {
             ],
             gpu_libraries: vec![],
             host_mpi: None,
+            extensions: vec!["gpu"],
             error: err.map(|e| e.to_string()),
         }
     }
@@ -356,6 +398,8 @@ mod tests {
         assert_eq!(slowest[0].node, 2);
         assert_eq!(slowest.len(), 2);
         assert_eq!(rep.failure_summary(), vec![("boom".to_string(), 1)]);
+        // only the 3 successful slots count toward the aggregation
+        assert_eq!(rep.extension_counts(), vec![("gpu", 3)]);
     }
 
     #[test]
@@ -365,8 +409,11 @@ mod tests {
         assert!(text.contains("launch ubuntu:xenial on 2 nodes"));
         assert!(text.contains("p99"));
         assert!(text.contains("coalesced job"));
+        assert!(text.contains("extensions: gpu on 2 node(s)"));
         let json = rep.to_json();
         assert_eq!(json.get("succeeded").unwrap().as_u64(), Some(2));
+        let exts = json.get("extensions").unwrap().as_arr().unwrap();
+        assert_eq!(exts[0].get("nodes").and_then(|v| v.as_u64()), Some(2));
         assert_eq!(
             json.at(&["pull", "jobs_total"]).unwrap().as_u64(),
             Some(1)

@@ -20,12 +20,15 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use crate::config::UdiRootConfig;
 use crate::distrib::{DistributionFabric, NodeCache};
 use crate::gateway::{ImageSource, PullState};
 use crate::registry::Registry;
-use crate::shifter::{preflight, RunOptions, ShifterRuntime};
+use crate::shifter::{
+    preflight, ExtensionRegistry, RunOptions, ShifterRuntime,
+};
 use crate::util::prng::Rng;
 use crate::wlm::{GresRequest, Slurm, WlmError};
 
@@ -124,6 +127,7 @@ pub struct LaunchScheduler<'a> {
     policy: RetryPolicy,
     workers: usize,
     config: Option<UdiRootConfig>,
+    extensions: Option<Arc<ExtensionRegistry>>,
 }
 
 impl<'a> LaunchScheduler<'a> {
@@ -142,6 +146,7 @@ impl<'a> LaunchScheduler<'a> {
             policy: RetryPolicy::default(),
             workers,
             config: None,
+            extensions: None,
         }
     }
 
@@ -166,6 +171,18 @@ impl<'a> LaunchScheduler<'a> {
         config: UdiRootConfig,
     ) -> LaunchScheduler<'a> {
         self.config = Some(config);
+        self
+    }
+
+    /// Drive every per-partition runtime with this host-extension
+    /// registry instead of the stock GPU/MPI/network set — the knob
+    /// [`crate::SiteBuilder::with_extension`] plumbs down to node
+    /// execution.
+    pub fn with_extensions(
+        mut self,
+        extensions: Arc<ExtensionRegistry>,
+    ) -> LaunchScheduler<'a> {
+        self.extensions = Some(extensions);
         self
     }
 
@@ -231,7 +248,13 @@ impl<'a> LaunchScheduler<'a> {
             .cluster
             .partitions()
             .iter()
-            .map(|p| p.runtime(self.config.as_ref()))
+            .map(|p| match &self.extensions {
+                Some(ext) => p.runtime_with_extensions(
+                    self.config.as_ref(),
+                    Arc::clone(ext),
+                ),
+                None => p.runtime(self.config.as_ref()),
+            })
             .collect();
         let fabric_ref: &DistributionFabric = fabric;
         let next = AtomicUsize::new(0);
@@ -463,6 +486,7 @@ impl<'a> LaunchScheduler<'a> {
             stage_secs: Vec::new(),
             gpu_libraries: Vec::new(),
             host_mpi: None,
+            extensions: Vec::new(),
             error: None,
         };
         if let Some(reason) = &slot.dead {
@@ -477,7 +501,10 @@ impl<'a> LaunchScheduler<'a> {
         opts.invoking_uid = spec.invoking_uid;
         opts.invoking_gid = spec.invoking_gid;
         opts.mpi = spec.mpi;
-        opts.env = slot.env.clone();
+        // job-level env first, then the WLM's per-rank variables — the
+        // WLM wins on conflicts (it owns CUDA_VISIBLE_DEVICES)
+        opts.env = spec.env.clone();
+        opts.env.extend(slot.env.clone());
 
         loop {
             result.attempts += 1;
@@ -529,6 +556,11 @@ impl<'a> LaunchScheduler<'a> {
                     if let Some(mpi) = &container.mpi {
                         result.host_mpi = Some(mpi.host_mpi.clone());
                     }
+                    result.extensions = container
+                        .extensions
+                        .iter()
+                        .map(|r| r.extension)
+                        .collect();
                     return result;
                 }
                 Err(e) => {

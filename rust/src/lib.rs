@@ -5,8 +5,10 @@
 //! Rust + JAX + Pallas stack:
 //!
 //! * **Layer 3 (this crate)** — the Shifter container runtime with the
-//!   paper's native GPU-support (§IV.A) and MPI ABI-swap (§IV.B)
-//!   extensions, plus every substrate the evaluation depends on: Docker
+//!   paper's host-resource injections — native GPU support (§IV.A), MPI
+//!   ABI-swap (§IV.B), and specialized networking (`netfab`) — behind
+//!   one pluggable [`HostExtension`] registry, plus every substrate the
+//!   evaluation depends on: Docker
 //!   images/registry, the Image Gateway, a virtual filesystem with
 //!   squashfs loop mounts, a Lustre-like parallel filesystem, InfiniBand
 //!   EDR / Cray Aries fabric models, an MPI implementation catalog with
@@ -28,7 +30,7 @@
 //! (`site::`): a [`SiteBuilder`] validates the operator's knobs once and
 //! returns a handle with `pull` / `run` / `launch` / `storm` operations,
 //! so user workflows never hand-wire the layers. Repo-level docs:
-//! `README.md` (orientation and quickstart), `DESIGN.md` (S1–S21
+//! `README.md` (orientation and quickstart), `DESIGN.md` (S1–S22
 //! architecture), `EXPERIMENTS.md` (bench → paper-table matrix, knobs,
 //! artifacts).
 
@@ -58,6 +60,7 @@ pub mod launch;
 pub mod metrics;
 #[allow(missing_docs)]
 pub mod mpi;
+pub mod netfab;
 #[allow(missing_docs)]
 pub mod pfs;
 #[allow(missing_docs)]
@@ -74,12 +77,17 @@ pub mod vfs;
 #[allow(missing_docs)]
 pub mod wlm;
 
+pub use config::UdiRootConfig;
 pub use distrib::DistributionFabric;
 pub use gateway::{ImageGateway, ImageSource};
 pub use hostenv::SystemProfile;
 pub use launch::{JobSpec, LaunchCluster, LaunchReport, LaunchScheduler};
+pub use netfab::NetworkSupport;
 pub use registry::Registry;
-pub use shifter::{Container, RunOptions, ShifterRuntime};
+pub use shifter::{
+    Capability, Container, ExtensionRegistry, HostExtension, RunOptions,
+    ShifterRuntime,
+};
 pub use site::{PullOutcome, Site, SiteBuilder, SiteError};
 pub use tenancy::{
     FairShareScheduler, SchedulingPolicy, TenancyReport, TrafficModel,

@@ -5,20 +5,31 @@
 //! shifter --system=daint --image=ubuntu:xenial cat /etc/os-release
 //! shifter --system=daint --image=cuda-image --gpus=0,2 ./deviceQuery
 //! shifter --system=daint --image=osu --mpi osu_latency
+//! shifter --system=daint --image=osu --net osu_latency
+//! shifter --system=daint --extensions
 //! ```
 //! `--system` selects one of the three §V.A host profiles (we are not
 //! actually on a Cray); the rest is the real Shifter surface.
+//! `--extensions` lists the registered host extensions with their
+//! triggers and this system's capability verdict, then exits.
 
-use shifter_rs::shifter::RunOptions;
+use shifter_rs::config::UdiRootConfig;
+use shifter_rs::shifter::{preflight, ExtensionRegistry, RunOptions};
 use shifter_rs::util::cli::CliSpec;
 use shifter_rs::{Site, SystemProfile};
 
 fn usage() -> ! {
     eprintln!(
         "usage: shifter [--system=laptop|cluster|daint] --image=<ref> \
-         [--mpi] [--gpus=LIST] [--verbose] <command…>"
+         [--mpi] [--net] [--gpus=LIST] [--verbose] <command…>\n\
+         \x20      shifter [--system=...] --extensions"
     );
     std::process::exit(2);
+}
+
+/// Print a typed error with its full `source()` chain and exit nonzero.
+fn die(err: &dyn std::error::Error) -> ! {
+    shifter_rs::util::cli::die("shifter", err)
 }
 
 fn main() {
@@ -27,9 +38,11 @@ fn main() {
             ("system", true),
             ("image", true),
             ("mpi", false),
+            ("net", false),
             ("gpus", true),
             ("volume", true),
             ("verbose", false),
+            ("extensions", false),
         ],
         true,
     );
@@ -40,14 +53,6 @@ fn main() {
             usage();
         }
     };
-    let Some(image) = parsed.get("image") else {
-        eprintln!("shifter: --image is required");
-        usage();
-    };
-    if parsed.positionals.is_empty() {
-        eprintln!("shifter: no command given");
-        usage();
-    }
 
     let profile = match parsed.get("system").unwrap_or("daint") {
         "laptop" => SystemProfile::laptop(),
@@ -58,6 +63,46 @@ fn main() {
             usage();
         }
     };
+
+    // `--extensions`: the full host preflight — kernel facilities plus
+    // the extension capability vector — and exit (no image needed)
+    if parsed.has("extensions") {
+        let registry = ExtensionRegistry::defaults();
+        let config = UdiRootConfig::for_profile(&profile);
+        let host = preflight::preflight_with_extensions(
+            &profile, &config, &registry,
+        );
+        println!(
+            "host preflight on {}: kernel {} ({})",
+            profile.name,
+            profile.kernel,
+            if host.kernel.ok() { "ok" } else { "missing features" },
+        );
+        println!("extensions (injection order):");
+        for (ext, cap) in registry.iter().zip(&host.capabilities) {
+            let verdict = if cap.available {
+                "available"
+            } else {
+                "unavailable"
+            };
+            println!(
+                "  {:<6} {verdict:<12} {}\n         trigger: {}",
+                ext.name(),
+                cap.detail,
+                ext.trigger_description(),
+            );
+        }
+        return;
+    }
+
+    let Some(image) = parsed.get("image") else {
+        eprintln!("shifter: --image is required");
+        usage();
+    };
+    if parsed.positionals.is_empty() {
+        eprintln!("shifter: no command given");
+        usage();
+    }
 
     // a single-node site wired through the facade — `Site::run` pulls
     // the image on demand (`shifterimg` is the real pull interface)
@@ -72,6 +117,9 @@ fn main() {
     let cmd: Vec<&str> = parsed.positionals.iter().map(|s| s.as_str()).collect();
     let mut opts = RunOptions::new(image, &cmd);
     opts.mpi = parsed.has("mpi");
+    if parsed.has("net") {
+        opts = opts.with_env("SHIFTER_NET", "host");
+    }
     if let Some(gpus) = parsed.get("gpus") {
         opts = opts.with_env("CUDA_VISIBLE_DEVICES", gpus);
     }
@@ -100,15 +148,9 @@ fn main() {
                         println!();
                     }
                 }
-                Err(e) => {
-                    eprintln!("shifter: {e}");
-                    std::process::exit(1);
-                }
+                Err(e) => die(&e),
             }
         }
-        Err(e) => {
-            eprintln!("shifter: {e}");
-            std::process::exit(1);
-        }
+        Err(e) => die(&e),
     }
 }

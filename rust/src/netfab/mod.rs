@@ -1,0 +1,101 @@
+//! Specialized-network injection substrate (DESIGN.md S22) — the paper's
+//! *third* host resource.
+//!
+//! The paper's abstract promises "a mechanism to access GPU accelerators
+//! **and specialized networking** from the host system"; §IV delivers the
+//! GPU and MPI halves and leaves the interconnect to the MPI swap. This
+//! module completes the triad: it models the host's fabric *transport
+//! stack* — the uGNI/DMAPP user-space libraries and `/dev/kgni0` +
+//! `/dev/hugepages` device files on a Cray Aries machine, the verbs/RDMA
+//! libraries and `/dev/infiniband/*` nodes on an InfiniBand cluster — and
+//! grafts it into containers the same way §IV.A grafts the NVIDIA driver
+//! stack.
+//!
+//! Like the §IV.B MPI swap, injection is gated by an ABI comparison: a
+//! fabric-aware image declares the transport it was built against via
+//! OCI-style labels (`org.shifter.net.fabric`, `org.shifter.net.abi`),
+//! and the host refuses to serve an incompatible build instead of letting
+//! it crash at first RDMA. Portable TCP-only images carry no labels and
+//! opt in at run time through `SHIFTER_NET=host`; `SHIFTER_NET_FALLBACK`
+//! vetoes injection for ablations (EXPERIMENTS.md knob table) — note
+//! that a `--mpi`-swapped container stays on the native path regardless,
+//! since the §IV.B swap itself brings the fabric-capable host MPI.
+//!
+//! The [`NetworkSupport`] type plugs this substrate into the runtime's
+//! [`crate::shifter::HostExtension`] registry alongside the GPU and MPI
+//! extensions.
+
+mod support;
+
+pub use support::{
+    check, inject, NetSupportError, NetSupportReport, NetworkSupport,
+};
+
+/// A fabric transport ABI: the user-space transport family plus its
+/// interface major version — the netfab analog of the §IV.B libtool
+/// string. `"gni:5"` reads "uGNI interface generation 5".
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetAbi {
+    /// Transport family ("gni" on Cray Aries, "verbs" on InfiniBand).
+    pub transport: String,
+    /// Interface major version of the transport library.
+    pub major: u32,
+}
+
+impl NetAbi {
+    /// Build an ABI literal.
+    pub fn new(transport: &str, major: u32) -> NetAbi {
+        NetAbi {
+            transport: transport.to_string(),
+            major,
+        }
+    }
+
+    /// Parse a `transport:major` label value (e.g. `gni:5`).
+    pub fn parse(s: &str) -> Option<NetAbi> {
+        let (transport, major) = s.split_once(':')?;
+        if transport.is_empty() {
+            return None;
+        }
+        Some(NetAbi {
+            transport: transport.to_string(),
+            major: major.parse().ok()?,
+        })
+    }
+
+    /// The `transport:major` string form (inverse of [`NetAbi::parse`]).
+    pub fn abi_string(&self) -> String {
+        format!("{}:{}", self.transport, self.major)
+    }
+
+    /// Mirror of the §IV.B libtool rule: the host transport can serve a
+    /// container built against `container` iff the families match and the
+    /// host's interface generation is at least as new.
+    pub fn host_can_serve(&self, container: &NetAbi) -> bool {
+        self.transport == container.transport && self.major >= container.major
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn abi_string_roundtrip() {
+        for abi in [NetAbi::new("gni", 5), NetAbi::new("verbs", 17)] {
+            assert_eq!(NetAbi::parse(&abi.abi_string()), Some(abi));
+        }
+        assert_eq!(NetAbi::parse("gni"), None);
+        assert_eq!(NetAbi::parse(":5"), None);
+        assert_eq!(NetAbi::parse("gni:x"), None);
+    }
+
+    #[test]
+    fn host_serves_same_or_older_containers_only() {
+        let host = NetAbi::new("gni", 5);
+        assert!(host.host_can_serve(&NetAbi::new("gni", 5)));
+        assert!(host.host_can_serve(&NetAbi::new("gni", 3)));
+        assert!(!host.host_can_serve(&NetAbi::new("gni", 6)));
+        assert!(!host.host_can_serve(&NetAbi::new("verbs", 5)));
+    }
+}

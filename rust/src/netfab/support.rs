@@ -1,0 +1,516 @@
+//! Native specialized-network support — the third host-resource injection
+//! alongside §IV.A (GPU) and §IV.B (MPI).
+//!
+//! Activation trigger (see [`NetworkSupport::trigger`]): the
+//! `SHIFTER_NET` launch variable (`host`/`native`/`1`), or a fabric label
+//! on the image itself; `SHIFTER_NET_FALLBACK` vetoes both and keeps the
+//! container on the TCP path. When triggered, two operations run:
+//!
+//!   1. bind mount the host's fabric transport libraries at their host
+//!      paths (uGNI/DMAPP on Aries, verbs/RDMA on InfiniBand) — mirroring
+//!      how §IV.B mounts the host MPI's transport dependencies;
+//!   2. graft the fabric device files into the container (`/dev/kgni0` +
+//!      `/dev/hugepages` on Aries, `/dev/infiniband/*` on InfiniBand) —
+//!      mirroring how §IV.A grafts `/dev/nvidia*`.
+//!
+//! The compatibility gate ([`check`]) mirrors the §IV.B libtool ABI
+//! comparison via [`NetAbi`].
+
+use std::collections::BTreeMap;
+
+use crate::config::UdiRootConfig;
+use crate::hostenv::SystemProfile;
+use crate::image::builder::{LABEL_NET_ABI, LABEL_NET_FABRIC};
+use crate::shifter::extension::{
+    Activation, Capability, ExtensionContext, ExtensionError,
+    ExtensionPayload, ExtensionReport, HostExtension,
+};
+use crate::vfs::{MountTable, VirtualFs};
+
+use super::NetAbi;
+
+/// Failures of the specialized-network support procedure.
+#[derive(Debug, thiserror::Error, Clone, PartialEq)]
+#[non_exhaustive]
+pub enum NetSupportError {
+    /// The host has no specialized fabric to expose (loopback only).
+    #[error("host system has no specialized network fabric (loopback only)")]
+    NoHostFabric,
+    /// The image was built for a different transport family than the
+    /// host fabric provides.
+    #[error(
+        "container was built for transport '{container}' but the host \
+         fabric provides '{host}'"
+    )]
+    FabricMismatch {
+        /// Transport family the image declares.
+        container: String,
+        /// Transport family the host fabric provides.
+        host: String,
+    },
+    /// The transport ABI comparison refused the injection (same rule
+    /// shape as the §IV.B libtool check).
+    #[error(
+        "container transport ABI {container_abi} is newer than the host's \
+         {host_abi}"
+    )]
+    AbiIncompatible {
+        /// The container's declared transport ABI string.
+        container_abi: String,
+        /// The host's transport ABI string.
+        host_abi: String,
+    },
+    /// The image's net ABI label could not be parsed.
+    #[error("container net ABI label is unparsable: {0}")]
+    BadAbiMetadata(String),
+    /// A host transport library named by `udiRoot.conf` is absent on
+    /// the host filesystem.
+    #[error("host transport library missing: {0}")]
+    MissingHostLibrary(String),
+    /// A fabric device file named by `udiRoot.conf` is absent on the
+    /// host filesystem.
+    #[error("host fabric device missing: {0}")]
+    MissingHostDevice(String),
+}
+
+/// What specialized-network support did to the container.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetSupportReport {
+    /// Host fabric name (e.g. "Cray Aries").
+    pub fabric: String,
+    /// Transport family injected ("gni" / "verbs").
+    pub transport: String,
+    /// The host's transport ABI string.
+    pub host_abi: String,
+    /// Transport libraries bind-mounted at their host paths.
+    pub libraries: Vec<String>,
+    /// Fabric device files grafted into the container.
+    pub device_files: Vec<String>,
+}
+
+/// The compatibility gate: resolve the host's transport ABI and compare
+/// it against the image's declared transport labels (when present — a
+/// portable TCP build carries none and passes vacuously). Mirrors the
+/// §IV.B libtool ABI-string comparison.
+pub fn check(
+    image_labels: &BTreeMap<String, String>,
+    profile: &SystemProfile,
+) -> Result<NetAbi, NetSupportError> {
+    let host_abi = profile.net_abi().ok_or(NetSupportError::NoHostFabric)?;
+    if let Some(fabric) = image_labels.get(LABEL_NET_FABRIC) {
+        if *fabric != host_abi.transport {
+            return Err(NetSupportError::FabricMismatch {
+                container: fabric.clone(),
+                host: host_abi.transport.clone(),
+            });
+        }
+    }
+    if let Some(abi_str) = image_labels.get(LABEL_NET_ABI) {
+        let container = NetAbi::parse(abi_str)
+            .ok_or_else(|| NetSupportError::BadAbiMetadata(abi_str.clone()))?;
+        if container.transport != host_abi.transport {
+            return Err(NetSupportError::FabricMismatch {
+                container: container.transport,
+                host: host_abi.transport.clone(),
+            });
+        }
+        if !host_abi.host_can_serve(&container) {
+            return Err(NetSupportError::AbiIncompatible {
+                container_abi: container.abi_string(),
+                host_abi: host_abi.abi_string(),
+            });
+        }
+    }
+    Ok(host_abi)
+}
+
+/// Perform the injection during environment preparation: transport
+/// libraries at their host paths, fabric device files into `/dev`.
+/// Idempotent — re-running overwrites the same nodes with identical
+/// content and re-binds the same targets.
+pub fn inject(
+    profile: &SystemProfile,
+    config: &UdiRootConfig,
+    host_fs: &VirtualFs,
+    rootfs: &mut VirtualFs,
+    mounts: &mut MountTable,
+) -> Result<NetSupportReport, NetSupportError> {
+    let host_abi = profile.net_abi().ok_or(NetSupportError::NoHostFabric)?;
+
+    // 1. bind mount the transport libraries at their host paths
+    let mut libraries = Vec::new();
+    for lib in &config.net_transport_paths {
+        let node = host_fs
+            .get(lib)
+            .cloned()
+            .ok_or_else(|| NetSupportError::MissingHostLibrary(lib.clone()))?;
+        rootfs.insert(lib, node).expect("transport lib insert");
+        mounts.bind(lib, lib, true, "net support");
+        libraries.push(lib.clone());
+    }
+
+    // 2. graft the fabric device files (directories like /dev/hugepages
+    // come along as directories, device nodes as device nodes)
+    let mut device_files = Vec::new();
+    for dev in &config.net_device_paths {
+        if host_fs.is_dir(dev) {
+            rootfs.mkdir_p(dev).ok();
+        } else {
+            let node = host_fs.get(dev).cloned().ok_or_else(|| {
+                NetSupportError::MissingHostDevice(dev.clone())
+            })?;
+            rootfs.insert(dev, node).expect("device file insert");
+        }
+        mounts.bind(dev, dev, false, "net support");
+        device_files.push(dev.clone());
+    }
+
+    Ok(NetSupportReport {
+        fabric: profile.fabric.name().to_string(),
+        transport: host_abi.transport.clone(),
+        host_abi: host_abi.abi_string(),
+        libraries,
+        device_files,
+    })
+}
+
+/// The specialized-networking [`HostExtension`] — the paper's missing
+/// third resource, registered by default after GPU and MPI support.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NetworkSupport;
+
+/// `SHIFTER_NET` values that request the host fabric.
+const NET_TRIGGER_VALUES: [&str; 3] = ["host", "native", "1"];
+
+impl HostExtension for NetworkSupport {
+    fn name(&self) -> &'static str {
+        "net"
+    }
+
+    fn trigger_description(&self) -> String {
+        format!(
+            "SHIFTER_NET={} in the launch env, or image label {} \
+             (SHIFTER_NET_FALLBACK vetoes)",
+            NET_TRIGGER_VALUES.join("|"),
+            LABEL_NET_FABRIC
+        )
+    }
+
+    fn trigger(&self, ctx: &ExtensionContext<'_>) -> Activation {
+        // the veto is value-aware, like SHIFTER_NET itself: "0"/"false"/
+        // empty mean "no veto", so `SHIFTER_NET_FALLBACK=0` cannot
+        // silently force the TCP path
+        let vetoed = matches!(
+            ctx.env().get("SHIFTER_NET_FALLBACK"),
+            Some(v) if !v.is_empty() && v != "0" && v != "false"
+        );
+        if vetoed {
+            return Activation::Skipped(
+                "SHIFTER_NET_FALLBACK forces the TCP path".to_string(),
+            );
+        }
+        if let Some(v) = ctx.env().get("SHIFTER_NET") {
+            if NET_TRIGGER_VALUES.contains(&v.as_str()) {
+                return Activation::Triggered(format!("SHIFTER_NET={v}"));
+            }
+            // mirror §IV.A: an invalid value does not trigger the env
+            // path — but it must NOT bypass the label path below, or an
+            // unrelated env value would skip the ABI gate a fabric-aware
+            // image's label enforces
+        }
+        if let Some(fabric) = ctx.manifest.labels.get(LABEL_NET_FABRIC) {
+            return Activation::Triggered(format!(
+                "image label {LABEL_NET_FABRIC}={fabric}"
+            ));
+        }
+        Activation::Skipped(
+            "no valid SHIFTER_NET request and the image carries no fabric \
+             label"
+                .to_string(),
+        )
+    }
+
+    fn check(
+        &self,
+        ctx: &ExtensionContext<'_>,
+    ) -> Result<Capability, ExtensionError> {
+        let host_abi = check(&ctx.manifest.labels, ctx.profile)
+            .map_err(ExtensionError::Net)?;
+        Ok(Capability {
+            extension: self.name(),
+            available: true,
+            detail: format!(
+                "{} via {} (host ABI {})",
+                ctx.profile.fabric.name(),
+                host_abi.transport,
+                host_abi.abi_string()
+            ),
+        })
+    }
+
+    fn capability(
+        &self,
+        profile: &SystemProfile,
+        config: &UdiRootConfig,
+    ) -> Capability {
+        match profile.net_abi() {
+            Some(abi) => Capability {
+                extension: self.name(),
+                available: true,
+                detail: format!(
+                    "{} via {} (host ABI {}, {} transport libs)",
+                    profile.fabric.name(),
+                    abi.transport,
+                    abi.abi_string(),
+                    config.net_transport_paths.len()
+                ),
+            },
+            None => Capability {
+                extension: self.name(),
+                available: false,
+                detail: "no specialized fabric (loopback host)".to_string(),
+            },
+        }
+    }
+
+    fn inject(
+        &self,
+        ctx: &ExtensionContext<'_>,
+        rootfs: &mut VirtualFs,
+        mounts: &mut MountTable,
+        env: &mut BTreeMap<String, String>,
+    ) -> Result<ExtensionReport, ExtensionError> {
+        let before = mounts.len();
+        let report =
+            inject(ctx.profile, ctx.config, ctx.host_fs, rootfs, mounts)
+                .map_err(ExtensionError::Net)?;
+        env.insert(
+            "SHIFTER_NET_TRANSPORT".to_string(),
+            report.transport.clone(),
+        );
+        Ok(ExtensionReport {
+            extension: self.name(),
+            detail: format!(
+                "{} via {}: {} transport libs, {} device files",
+                report.fabric,
+                report.transport,
+                report.libraries.len(),
+                report.device_files.len()
+            ),
+            mounts_added: mounts.len() - before,
+            env_added: 1,
+            payload: ExtensionPayload::Net(report),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(
+        profile: &SystemProfile,
+    ) -> (UdiRootConfig, VirtualFs, VirtualFs, MountTable) {
+        (
+            UdiRootConfig::for_profile(profile),
+            profile.host_fs(),
+            VirtualFs::new(),
+            MountTable::new(),
+        )
+    }
+
+    #[test]
+    fn daint_injection_grafts_gni_stack() {
+        let pd = SystemProfile::piz_daint();
+        let (cfg, host_fs, mut rootfs, mut mounts) = setup(&pd);
+        let rep =
+            inject(&pd, &cfg, &host_fs, &mut rootfs, &mut mounts).unwrap();
+        assert_eq!(rep.transport, "gni");
+        assert_eq!(rep.fabric, "Cray Aries");
+        assert!(rootfs.exists("/opt/cray/ugni/default/lib64/libugni.so.0"));
+        assert!(rootfs.exists("/opt/cray/dmapp/default/lib64/libdmapp.so.1"));
+        assert!(rootfs.exists("/dev/kgni0"));
+        assert!(rootfs.is_dir("/dev/hugepages"));
+        assert_eq!(
+            mounts.by_origin("net support").len(),
+            rep.libraries.len() + rep.device_files.len()
+        );
+    }
+
+    #[test]
+    fn cluster_injection_grafts_verbs_stack() {
+        let cl = SystemProfile::linux_cluster();
+        let (cfg, host_fs, mut rootfs, mut mounts) = setup(&cl);
+        let rep =
+            inject(&cl, &cfg, &host_fs, &mut rootfs, &mut mounts).unwrap();
+        assert_eq!(rep.transport, "verbs");
+        assert!(rootfs.exists("/usr/lib64/libibverbs.so.1"));
+        assert!(rootfs.exists("/dev/infiniband/uverbs0"));
+    }
+
+    #[test]
+    fn loopback_host_refused() {
+        let lap = SystemProfile::laptop();
+        let (cfg, host_fs, mut rootfs, mut mounts) = setup(&lap);
+        assert_eq!(
+            inject(&lap, &cfg, &host_fs, &mut rootfs, &mut mounts)
+                .unwrap_err(),
+            NetSupportError::NoHostFabric
+        );
+        assert_eq!(
+            check(&BTreeMap::new(), &lap).unwrap_err(),
+            NetSupportError::NoHostFabric
+        );
+    }
+
+    #[test]
+    fn abi_gate_mirrors_libtool_rules() {
+        let pd = SystemProfile::piz_daint();
+        let mut labels = BTreeMap::new();
+        // unlabeled (portable TCP build): passes vacuously
+        assert!(check(&labels, &pd).is_ok());
+        // matching family, older interface: served
+        labels.insert(LABEL_NET_ABI.to_string(), "gni:3".to_string());
+        assert!(check(&labels, &pd).is_ok());
+        // newer than the host: refused
+        labels.insert(LABEL_NET_ABI.to_string(), "gni:99".to_string());
+        assert!(matches!(
+            check(&labels, &pd).unwrap_err(),
+            NetSupportError::AbiIncompatible { .. }
+        ));
+        // wrong family: refused
+        labels.insert(LABEL_NET_ABI.to_string(), "verbs:17".to_string());
+        assert!(matches!(
+            check(&labels, &pd).unwrap_err(),
+            NetSupportError::FabricMismatch { .. }
+        ));
+        // unparsable metadata: refused
+        labels.insert(LABEL_NET_ABI.to_string(), "gni-five".to_string());
+        assert!(matches!(
+            check(&labels, &pd).unwrap_err(),
+            NetSupportError::BadAbiMetadata(_)
+        ));
+    }
+
+    #[test]
+    fn fabric_label_alone_gates_too() {
+        let pd = SystemProfile::piz_daint();
+        let mut labels = BTreeMap::new();
+        labels.insert(LABEL_NET_FABRIC.to_string(), "verbs".to_string());
+        assert!(matches!(
+            check(&labels, &pd).unwrap_err(),
+            NetSupportError::FabricMismatch { .. }
+        ));
+        labels.insert(LABEL_NET_FABRIC.to_string(), "gni".to_string());
+        assert!(check(&labels, &pd).is_ok());
+    }
+
+    #[test]
+    fn missing_host_transport_library_reported() {
+        let pd = SystemProfile::piz_daint();
+        let (cfg, mut host_fs, mut rootfs, mut mounts) = setup(&pd);
+        host_fs
+            .remove("/opt/cray/dmapp/default/lib64/libdmapp.so.1")
+            .unwrap();
+        assert!(matches!(
+            inject(&pd, &cfg, &host_fs, &mut rootfs, &mut mounts)
+                .unwrap_err(),
+            NetSupportError::MissingHostLibrary(_)
+        ));
+    }
+
+    #[test]
+    fn missing_fabric_device_named_as_a_device() {
+        let pd = SystemProfile::piz_daint();
+        let (cfg, mut host_fs, mut rootfs, mut mounts) = setup(&pd);
+        host_fs.remove("/dev/kgni0").unwrap();
+        let err = inject(&pd, &cfg, &host_fs, &mut rootfs, &mut mounts)
+            .unwrap_err();
+        assert_eq!(
+            err,
+            NetSupportError::MissingHostDevice("/dev/kgni0".to_string())
+        );
+        assert!(err.to_string().contains("device"), "{err}");
+    }
+
+    #[test]
+    fn falsy_fallback_values_do_not_veto() {
+        use crate::shifter::RunOptions;
+
+        let pd = SystemProfile::piz_daint();
+        let config = UdiRootConfig::for_profile(&pd);
+        let host_fs = pd.host_fs();
+        let manifest = crate::image::builder::ubuntu_xenial().manifest;
+        let ext = NetworkSupport;
+        for (fallback, triggered) in
+            [("0", true), ("false", true), ("", true), ("1", false)]
+        {
+            let opts = RunOptions::new("ubuntu:xenial", &["true"])
+                .with_env("SHIFTER_NET", "host")
+                .with_env("SHIFTER_NET_FALLBACK", fallback);
+            let ctx = ExtensionContext {
+                opts: &opts,
+                manifest: &manifest,
+                profile: &pd,
+                config: &config,
+                host_fs: &host_fs,
+            };
+            assert_eq!(
+                ext.trigger(&ctx).is_triggered(),
+                triggered,
+                "SHIFTER_NET_FALLBACK={fallback:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn invalid_shifter_net_does_not_bypass_the_label_gate() {
+        use crate::image::builder::ImageBuilder;
+        use crate::shifter::RunOptions;
+
+        let pd = SystemProfile::piz_daint();
+        let config = UdiRootConfig::for_profile(&pd);
+        let host_fs = pd.host_fs();
+        let manifest = ImageBuilder::new("fabric-app:verbs")
+            .exe("/usr/bin/app", 1_000)
+            .with_net_transport("verbs", 17)
+            .build()
+            .manifest;
+        let ext = NetworkSupport;
+
+        let opts = RunOptions::new("fabric-app:verbs", &["true"])
+            .with_env("SHIFTER_NET", "tcp");
+        let ctx = ExtensionContext {
+            opts: &opts,
+            manifest: &manifest,
+            profile: &pd,
+            config: &config,
+            host_fs: &host_fs,
+        };
+        // an unrecognized env value falls through to the label trigger…
+        assert!(ext.trigger(&ctx).is_triggered());
+        // …and the label's fabric gate still refuses the run
+        assert!(ext.check(&ctx).is_err());
+
+        // the explicit veto remains the only bypass
+        let opts = opts.with_env("SHIFTER_NET_FALLBACK", "1");
+        let ctx = ExtensionContext {
+            opts: &opts,
+            manifest: &manifest,
+            profile: &pd,
+            config: &config,
+            host_fs: &host_fs,
+        };
+        assert!(!ext.trigger(&ctx).is_triggered());
+    }
+
+    #[test]
+    fn injection_is_idempotent_on_the_rootfs() {
+        let pd = SystemProfile::piz_daint();
+        let (cfg, host_fs, mut rootfs, mut mounts) = setup(&pd);
+        inject(&pd, &cfg, &host_fs, &mut rootfs, &mut mounts).unwrap();
+        let snapshot = rootfs.clone();
+        inject(&pd, &cfg, &host_fs, &mut rootfs, &mut mounts).unwrap();
+        assert_eq!(rootfs, snapshot);
+    }
+}

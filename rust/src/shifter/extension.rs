@@ -1,0 +1,649 @@
+//! The pluggable `HostExtension` API (DESIGN.md S22): one trait for every
+//! host-resource injection the runtime performs.
+//!
+//! The paper's contribution is "an extension to the container runtime …
+//! that provides containerized applications with a mechanism to access
+//! GPU accelerators and specialized networking from the host system".
+//! Instead of hard-coding each resource as an ad-hoc call inside
+//! [`super::ShifterRuntime::run`], every injection — §IV.A GPU support,
+//! §IV.B MPI swap, the specialized-network graft
+//! ([`crate::netfab::NetworkSupport`]), and any site-defined addition —
+//! implements [`HostExtension`] and registers in an ordered
+//! [`ExtensionRegistry`]. The runtime then drives one uniform lifecycle
+//! per run:
+//!
+//! 1. **trigger** — after image resolution, each extension inspects the
+//!    run (launch env, CLI flags, image labels) and declares whether it
+//!    activates. Absent or invalid triggers skip silently (§IV.A: an
+//!    invalid `CUDA_VISIBLE_DEVICES` "does not trigger" support).
+//! 2. **check** — every triggered extension's compatibility gate runs
+//!    *before environment preparation begins*: driver versions, libtool
+//!    ABI strings, fabric transport ABIs. An incompatible run fails in
+//!    preflight, before a single mount happens.
+//! 3. **inject** — inside `Stage::PrepareEnvironment`, each triggered
+//!    extension grafts its host resources into the container rootfs,
+//!    records its mounts, and may export environment variables. Each
+//!    returns an [`ExtensionReport`] aggregated into the
+//!    [`super::StageLog`], the [`super::Container`], and the launch
+//!    orchestrator's per-node results.
+//!
+//! ```
+//! use shifter_rs::shifter::ExtensionRegistry;
+//! use shifter_rs::{SystemProfile, UdiRootConfig};
+//!
+//! let registry = ExtensionRegistry::defaults();
+//! assert_eq!(registry.names(), ["gpu", "mpi", "net"]);
+//! let profile = SystemProfile::laptop();
+//! let config = UdiRootConfig::for_profile(&profile);
+//! let caps = registry.capabilities(&profile, &config);
+//! // the laptop has a GPU and an ABI-compatible MPI, but no fabric
+//! assert!(caps[0].available && caps[1].available && !caps[2].available);
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::config::UdiRootConfig;
+use crate::hostenv::SystemProfile;
+use crate::image::ImageManifest;
+use crate::netfab::{NetSupportError, NetSupportReport, NetworkSupport};
+use crate::vfs::{MountTable, VirtualFs};
+
+use super::gpu_support::{self, GpuSupportError, GpuSupportReport};
+use super::mpi_support::{self, MpiSupportError, MpiSupportReport};
+use super::runtime::RunOptions;
+
+/// Everything an extension may inspect when deciding to trigger, gating
+/// compatibility, or injecting: the run request, the resolved image's
+/// manifest, and the host side (profile, site config, host filesystem).
+pub struct ExtensionContext<'a> {
+    /// The run being prepared (flags, launch env, target node).
+    pub opts: &'a RunOptions,
+    /// Manifest of the resolved image — labels drive triggers and ABI
+    /// gates (the simulation's stand-in for reading ELF metadata).
+    pub manifest: &'a ImageManifest,
+    /// Host profile of the partition this run executes on.
+    pub profile: &'a SystemProfile,
+    /// The site `udiRoot.conf` (host library/device paths).
+    pub config: &'a UdiRootConfig,
+    /// Host filesystem extensions bind-mount resources from.
+    pub host_fs: &'a VirtualFs,
+}
+
+impl ExtensionContext<'_> {
+    /// The launch environment (trigger variables live here).
+    pub fn env(&self) -> &BTreeMap<String, String> {
+        &self.opts.env
+    }
+
+    /// The node this run executes on (drives per-node driver lookup).
+    pub fn node(&self) -> usize {
+        self.opts.node
+    }
+}
+
+/// Outcome of an extension's activation trigger.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Activation {
+    /// The extension activates for this run; the detail names the
+    /// trigger that fired (env var, CLI flag, image label).
+    Triggered(String),
+    /// The extension stays inactive; the detail explains why (for the
+    /// audit trail — a skip is never an error).
+    Skipped(String),
+}
+
+impl Activation {
+    /// Whether the trigger fired.
+    pub fn is_triggered(&self) -> bool {
+        matches!(self, Activation::Triggered(_))
+    }
+}
+
+/// A host-side compatibility verdict: can this host provide the
+/// extension's resource at all? Feeds preflight, `shifter --extensions`
+/// and the per-partition capability vectors of `shifterimg
+/// cluster-status`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Capability {
+    /// The extension this verdict is about.
+    pub extension: &'static str,
+    /// Whether the host can provide the resource.
+    pub available: bool,
+    /// Human-readable justification (driver/ABI/fabric inventory).
+    pub detail: String,
+}
+
+/// One typed error surface for every host-resource injection: the
+/// formerly free-standing GPU/MPI error enums become sourced variants,
+/// and the network extension joins them.
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[non_exhaustive]
+pub enum ExtensionError {
+    /// The §IV.A GPU support procedure failed.
+    #[error(transparent)]
+    Gpu(#[from] GpuSupportError),
+    /// The §IV.B MPI library swap failed.
+    #[error(transparent)]
+    Mpi(#[from] MpiSupportError),
+    /// The specialized-network injection failed.
+    #[error(transparent)]
+    Net(#[from] NetSupportError),
+    /// A (possibly site-defined) extension rejected the run.
+    #[error("extension '{extension}' rejected this run: {reason}")]
+    Incompatible {
+        /// Which extension refused.
+        extension: &'static str,
+        /// Why it refused.
+        reason: String,
+    },
+}
+
+/// The extension-specific half of an [`ExtensionReport`]: the typed
+/// reports the GPU/MPI/network procedures always produced, preserved
+/// bit-for-bit behind the uniform API.
+#[derive(Debug, Clone, PartialEq)]
+#[non_exhaustive]
+pub enum ExtensionPayload {
+    /// §IV.A GPU support report.
+    Gpu(GpuSupportReport),
+    /// §IV.B MPI swap report.
+    Mpi(MpiSupportReport),
+    /// Specialized-network injection report.
+    Net(NetSupportReport),
+    /// A site-defined extension without a typed report.
+    Custom,
+}
+
+/// What one extension's injection did to the container — aggregated into
+/// the [`super::StageLog`], the [`super::Container`], and the launch
+/// report's per-node results.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExtensionReport {
+    /// Which extension ran.
+    pub extension: &'static str,
+    /// Human-readable summary of the injection.
+    pub detail: String,
+    /// Mounts the injection added to the mount table.
+    pub mounts_added: usize,
+    /// Environment variables the injection exported into the container.
+    pub env_added: usize,
+    /// The extension-specific typed report.
+    pub payload: ExtensionPayload,
+}
+
+/// A pluggable host-resource injection. Implementations must be
+/// stateless with respect to individual runs (the same registry is
+/// shared across worker threads by the launch orchestrator) and fully
+/// deterministic: trigger/check/inject may depend only on the
+/// [`ExtensionContext`].
+pub trait HostExtension: Send + Sync {
+    /// Stable short name ("gpu", "mpi", "net") used in logs, reports and
+    /// error messages.
+    fn name(&self) -> &'static str;
+
+    /// One-line description of the activation trigger, for the
+    /// `shifter --extensions` listing.
+    fn trigger_description(&self) -> String {
+        "extension-specific trigger".to_string()
+    }
+
+    /// Decide whether this extension activates for the run. Absent or
+    /// invalid triggers return [`Activation::Skipped`] — never an error.
+    fn trigger(&self, ctx: &ExtensionContext<'_>) -> Activation;
+
+    /// Compatibility gate for a triggered run, executed in preflight
+    /// *before* `Stage::PrepareEnvironment`: driver/ABI/fabric checks
+    /// that must refuse the run before any mount happens.
+    fn check(
+        &self,
+        ctx: &ExtensionContext<'_>,
+    ) -> Result<Capability, ExtensionError>;
+
+    /// Host-side capability probe without a concrete run — what a
+    /// partition can provide in principle. Feeds preflight listings and
+    /// `shifterimg cluster-status`.
+    fn capability(
+        &self,
+        profile: &SystemProfile,
+        config: &UdiRootConfig,
+    ) -> Capability;
+
+    /// Graft the host resources into the container during
+    /// `Stage::PrepareEnvironment`: mutate the rootfs, record mounts,
+    /// optionally export environment variables.
+    fn inject(
+        &self,
+        ctx: &ExtensionContext<'_>,
+        rootfs: &mut VirtualFs,
+        mounts: &mut MountTable,
+        env: &mut BTreeMap<String, String>,
+    ) -> Result<ExtensionReport, ExtensionError>;
+}
+
+/// The ordered set of extensions a runtime applies. Order is the
+/// injection order (later extensions may shadow earlier mounts, exactly
+/// like the mount table itself); the stock order is GPU, MPI, network.
+#[derive(Default)]
+pub struct ExtensionRegistry {
+    extensions: Vec<Box<dyn HostExtension>>,
+}
+
+impl ExtensionRegistry {
+    /// An empty registry (pair with
+    /// [`crate::SiteBuilder::without_default_extensions`] to opt out of
+    /// the stock set).
+    pub fn empty() -> ExtensionRegistry {
+        ExtensionRegistry::default()
+    }
+
+    /// The stock registry: §IV.A GPU support, §IV.B MPI swap, and the
+    /// specialized-network injection, in that order.
+    pub fn defaults() -> ExtensionRegistry {
+        ExtensionRegistry::empty()
+            .with(Box::new(GpuExtension))
+            .with(Box::new(MpiExtension))
+            .with(Box::new(NetworkSupport))
+    }
+
+    /// Append an extension to the injection order.
+    pub fn register(&mut self, extension: Box<dyn HostExtension>) {
+        self.extensions.push(extension);
+    }
+
+    /// Builder-style [`ExtensionRegistry::register`].
+    pub fn with(mut self, extension: Box<dyn HostExtension>) -> Self {
+        self.register(extension);
+        self
+    }
+
+    /// The extensions in injection order.
+    pub fn iter(&self) -> impl Iterator<Item = &dyn HostExtension> {
+        self.extensions.iter().map(|e| e.as_ref())
+    }
+
+    /// Number of registered extensions.
+    pub fn len(&self) -> usize {
+        self.extensions.len()
+    }
+
+    /// Whether no extensions are registered.
+    pub fn is_empty(&self) -> bool {
+        self.extensions.is_empty()
+    }
+
+    /// Extension names in injection order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.extensions.iter().map(|e| e.name()).collect()
+    }
+
+    /// The host-side capability vector of this registry on a given
+    /// profile — one [`Capability`] per extension, in injection order.
+    pub fn capabilities(
+        &self,
+        profile: &SystemProfile,
+        config: &UdiRootConfig,
+    ) -> Vec<Capability> {
+        self.extensions
+            .iter()
+            .map(|e| e.capability(profile, config))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// §IV.A GPU support behind the trait
+// ---------------------------------------------------------------------------
+
+/// §IV.A native GPU support as a [`HostExtension`]: triggered by a valid
+/// `CUDA_VISIBLE_DEVICES`, gated on the host driver and PTX forward
+/// compatibility, injecting device files + driver libraries + binaries.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GpuExtension;
+
+impl GpuExtension {
+    fn requested(ctx: &ExtensionContext<'_>) -> Option<Vec<u32>> {
+        ctx.env()
+            .get("CUDA_VISIBLE_DEVICES")
+            .and_then(|v| crate::gpu::parse_cuda_visible_devices(v))
+    }
+}
+
+impl HostExtension for GpuExtension {
+    fn name(&self) -> &'static str {
+        "gpu"
+    }
+
+    fn trigger_description(&self) -> String {
+        "CUDA_VISIBLE_DEVICES=<list> in the launch env (WLM GRES export)"
+            .to_string()
+    }
+
+    fn trigger(&self, ctx: &ExtensionContext<'_>) -> Activation {
+        match ctx.env().get("CUDA_VISIBLE_DEVICES") {
+            None => Activation::Skipped(
+                "CUDA_VISIBLE_DEVICES not set".to_string(),
+            ),
+            Some(v) => match crate::gpu::parse_cuda_visible_devices(v) {
+                Some(devs) => Activation::Triggered(format!(
+                    "CUDA_VISIBLE_DEVICES={v} ({} device(s))",
+                    devs.len()
+                )),
+                None => Activation::Skipped(format!(
+                    "CUDA_VISIBLE_DEVICES={v} is invalid — support not \
+                     triggered"
+                )),
+            },
+        }
+    }
+
+    fn check(
+        &self,
+        ctx: &ExtensionContext<'_>,
+    ) -> Result<Capability, ExtensionError> {
+        let Some(requested) = Self::requested(ctx) else {
+            // not triggered: report the host-side capability only
+            return Ok(self.capability(ctx.profile, ctx.config));
+        };
+        let driver = ctx.profile.driver(ctx.node());
+        let driver = gpu_support::check(
+            &requested,
+            driver.as_ref(),
+            &ctx.manifest.labels,
+        )
+        .map_err(ExtensionError::Gpu)?;
+        Ok(Capability {
+            extension: self.name(),
+            available: true,
+            detail: format!(
+                "driver {}.{}, {} of {} device(s) requested",
+                driver.version.0,
+                driver.version.1,
+                requested.len(),
+                driver.cuda_device_count()
+            ),
+        })
+    }
+
+    fn capability(
+        &self,
+        profile: &SystemProfile,
+        _config: &UdiRootConfig,
+    ) -> Capability {
+        match profile.driver(0) {
+            Some(d) if d.uvm_loaded => Capability {
+                extension: self.name(),
+                available: true,
+                detail: format!(
+                    "driver {}.{}, {} CUDA device(s)/node",
+                    d.version.0,
+                    d.version.1,
+                    d.cuda_device_count()
+                ),
+            },
+            _ => Capability {
+                extension: self.name(),
+                available: false,
+                detail: "no loaded NVIDIA driver".to_string(),
+            },
+        }
+    }
+
+    fn inject(
+        &self,
+        ctx: &ExtensionContext<'_>,
+        rootfs: &mut VirtualFs,
+        mounts: &mut MountTable,
+        _env: &mut BTreeMap<String, String>,
+    ) -> Result<ExtensionReport, ExtensionError> {
+        let before = mounts.len();
+        let requested = Self::requested(ctx).ok_or_else(|| {
+            ExtensionError::Incompatible {
+                extension: self.name(),
+                reason: "inject called without an active trigger"
+                    .to_string(),
+            }
+        })?;
+        // the preflight gate already ran; re-validate cheaply so a direct
+        // inject call outside the runtime lifecycle cannot index a device
+        // the host does not have
+        let driver = ctx.profile.driver(ctx.node());
+        let driver = gpu_support::check(
+            &requested,
+            driver.as_ref(),
+            &ctx.manifest.labels,
+        )
+        .map_err(ExtensionError::Gpu)?;
+        let report = gpu_support::inject(
+            &requested,
+            driver,
+            ctx.config,
+            ctx.host_fs,
+            rootfs,
+            mounts,
+        )
+        .map_err(ExtensionError::Gpu)?;
+        Ok(ExtensionReport {
+            extension: self.name(),
+            detail: format!(
+                "{} device(s), {} driver libraries, {} binaries",
+                report.host_devices.len(),
+                report.libraries.len(),
+                report.binaries.len()
+            ),
+            mounts_added: mounts.len() - before,
+            env_added: 0,
+            payload: ExtensionPayload::Gpu(report),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// §IV.B MPI swap behind the trait
+// ---------------------------------------------------------------------------
+
+/// §IV.B MPI ABI-swap support as a [`HostExtension`]: triggered by the
+/// `--mpi` flag, gated on the libtool ABI-string comparison, swapping the
+/// container's MPI frontends for the host's fabric-capable build.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MpiExtension;
+
+impl HostExtension for MpiExtension {
+    fn name(&self) -> &'static str {
+        "mpi"
+    }
+
+    fn trigger_description(&self) -> String {
+        "--mpi CLI flag (JobSpec::with_mpi at launch scale)".to_string()
+    }
+
+    fn trigger(&self, ctx: &ExtensionContext<'_>) -> Activation {
+        if ctx.opts.mpi {
+            Activation::Triggered("--mpi flag".to_string())
+        } else {
+            Activation::Skipped("--mpi not requested".to_string())
+        }
+    }
+
+    fn check(
+        &self,
+        ctx: &ExtensionContext<'_>,
+    ) -> Result<Capability, ExtensionError> {
+        if !ctx.opts.mpi {
+            return Ok(self.capability(ctx.profile, ctx.config));
+        }
+        let container =
+            mpi_support::check(&ctx.manifest.labels, &ctx.profile.host_mpi)
+                .map_err(ExtensionError::Mpi)?;
+        Ok(Capability {
+            extension: self.name(),
+            available: true,
+            detail: format!(
+                "{} -> {} (libtool {} -> {})",
+                container.version_string(),
+                ctx.profile.host_mpi.version_string(),
+                container.abi.abi_string(),
+                ctx.profile.host_mpi.abi.abi_string()
+            ),
+        })
+    }
+
+    fn capability(
+        &self,
+        profile: &SystemProfile,
+        _config: &UdiRootConfig,
+    ) -> Capability {
+        let host = &profile.host_mpi;
+        if host.mpich_abi_member() {
+            Capability {
+                extension: self.name(),
+                available: true,
+                detail: format!(
+                    "{} (libtool ABI {})",
+                    host.version_string(),
+                    host.abi.abi_string()
+                ),
+            }
+        } else {
+            Capability {
+                extension: self.name(),
+                available: false,
+                detail: format!(
+                    "{} predates the MPICH ABI initiative",
+                    host.version_string()
+                ),
+            }
+        }
+    }
+
+    fn inject(
+        &self,
+        ctx: &ExtensionContext<'_>,
+        rootfs: &mut VirtualFs,
+        mounts: &mut MountTable,
+        _env: &mut BTreeMap<String, String>,
+    ) -> Result<ExtensionReport, ExtensionError> {
+        let before = mounts.len();
+        // re-derive the container identity (cheap label parse; the ABI
+        // gate already passed in preflight) and run the mutation half
+        let container =
+            mpi_support::check(&ctx.manifest.labels, &ctx.profile.host_mpi)
+                .map_err(ExtensionError::Mpi)?;
+        let report = mpi_support::inject(
+            &container,
+            &ctx.profile.host_mpi,
+            ctx.config,
+            ctx.host_fs,
+            rootfs,
+            mounts,
+        )
+        .map_err(ExtensionError::Mpi)?;
+        Ok(ExtensionReport {
+            extension: self.name(),
+            detail: format!(
+                "{} -> {}",
+                report.container_mpi, report.host_mpi
+            ),
+            mounts_added: mounts.len() - before,
+            env_added: 0,
+            payload: ExtensionPayload::Mpi(report),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::builder;
+
+    fn manifest_of(image: crate::image::Image) -> ImageManifest {
+        image.manifest
+    }
+
+    #[test]
+    fn default_registry_order_is_gpu_mpi_net() {
+        let reg = ExtensionRegistry::defaults();
+        assert_eq!(reg.names(), ["gpu", "mpi", "net"]);
+        assert_eq!(reg.len(), 3);
+        assert!(!reg.is_empty());
+        assert!(ExtensionRegistry::empty().is_empty());
+    }
+
+    #[test]
+    fn capability_matrix_matches_the_three_hosts() {
+        let reg = ExtensionRegistry::defaults();
+        for (profile, expect_net) in [
+            (SystemProfile::piz_daint(), true),
+            (SystemProfile::linux_cluster(), true),
+            (SystemProfile::laptop(), false),
+        ] {
+            let config = UdiRootConfig::for_profile(&profile);
+            let caps = reg.capabilities(&profile, &config);
+            assert_eq!(caps.len(), 3, "{}", profile.name);
+            assert!(caps[0].available, "{} gpu", profile.name);
+            assert!(caps[1].available, "{} mpi", profile.name);
+            assert_eq!(caps[2].available, expect_net, "{} net", profile.name);
+        }
+    }
+
+    #[test]
+    fn gpu_trigger_mirrors_cvd_semantics() {
+        let profile = SystemProfile::piz_daint();
+        let config = UdiRootConfig::for_profile(&profile);
+        let host_fs = profile.host_fs();
+        let manifest = manifest_of(builder::ubuntu_xenial());
+        let mut opts = RunOptions::new("ubuntu:xenial", &["true"]);
+        let ext = GpuExtension;
+
+        let ctx = ExtensionContext {
+            opts: &opts,
+            manifest: &manifest,
+            profile: &profile,
+            config: &config,
+            host_fs: &host_fs,
+        };
+        assert!(!ext.trigger(&ctx).is_triggered());
+
+        opts = opts.with_env("CUDA_VISIBLE_DEVICES", "NoDevFiles");
+        let ctx = ExtensionContext {
+            opts: &opts,
+            manifest: &manifest,
+            profile: &profile,
+            config: &config,
+            host_fs: &host_fs,
+        };
+        assert!(!ext.trigger(&ctx).is_triggered());
+
+        opts = opts.with_env("CUDA_VISIBLE_DEVICES", "0");
+        let ctx = ExtensionContext {
+            opts: &opts,
+            manifest: &manifest,
+            profile: &profile,
+            config: &config,
+            host_fs: &host_fs,
+        };
+        assert!(ext.trigger(&ctx).is_triggered());
+        assert!(ext.check(&ctx).unwrap().available);
+    }
+
+    #[test]
+    fn mpi_check_fails_preflight_on_unlabeled_image() {
+        let profile = SystemProfile::piz_daint();
+        let config = UdiRootConfig::for_profile(&profile);
+        let host_fs = profile.host_fs();
+        let manifest = manifest_of(builder::ubuntu_xenial());
+        let opts = RunOptions::new("ubuntu:xenial", &["true"]).with_mpi();
+        let ctx = ExtensionContext {
+            opts: &opts,
+            manifest: &manifest,
+            profile: &profile,
+            config: &config,
+            host_fs: &host_fs,
+        };
+        let ext = MpiExtension;
+        assert!(ext.trigger(&ctx).is_triggered());
+        assert_eq!(
+            ext.check(&ctx).unwrap_err(),
+            ExtensionError::Mpi(MpiSupportError::NoMpiInImage)
+        );
+    }
+}

@@ -73,7 +73,48 @@ pub struct GpuSupportReport {
     pub device_files: Vec<String>,
 }
 
-/// Attempt GPU support activation during environment preparation.
+/// The §IV.A compatibility gate, separated from the mutation so the
+/// `HostExtension` lifecycle can refuse a run in preflight, before any
+/// mount happens: nvidia-uvm must be loaded, every requested device must
+/// exist, and the container's CUDA toolkit must be within the host
+/// driver's PTX forward-compatibility window. Returns the validated
+/// driver.
+pub fn check<'d>(
+    requested: &[u32],
+    driver: Option<&'d NvidiaDriver>,
+    image_labels: &BTreeMap<String, String>,
+) -> Result<&'d NvidiaDriver, GpuSupportError> {
+    // prerequisites (§IV.A.1): CUDA-capable host with nvidia-uvm loaded
+    let driver = match driver {
+        Some(d) if d.uvm_loaded => d,
+        _ => return Err(GpuSupportError::DriverNotLoaded),
+    };
+    let have = driver.cuda_device_count();
+    for &d in requested {
+        if d >= have {
+            return Err(GpuSupportError::DeviceOutOfRange(d, have));
+        }
+    }
+
+    // PTX forward-compatibility: a container built against a newer CUDA
+    // toolkit than the host driver supports cannot run (§II-B2).
+    if let Some(cuda) = image_labels.get(LABEL_CUDA_VERSION) {
+        let mut it = cuda.split('.').map(|p| p.parse::<u32>().unwrap_or(0));
+        let wanted = (it.next().unwrap_or(0), it.next().unwrap_or(0));
+        if !driver.supports_cuda(wanted) {
+            return Err(GpuSupportError::CudaIncompatible {
+                wanted_major: wanted.0,
+                wanted_minor: wanted.1,
+                driver_major: driver.version.0,
+                driver_minor: driver.version.1,
+            });
+        }
+    }
+    Ok(driver)
+}
+
+/// Attempt GPU support activation during environment preparation:
+/// trigger validation, the [`check`] gate, then the [`inject`] mutation.
 ///
 /// Returns Ok(None) when the trigger condition is absent or invalid —
 /// §IV.A: "If, for any reason, the workload manager does not set
@@ -98,35 +139,23 @@ pub fn activate(
         None => return Ok(None), // invalid value -> not triggered
     };
 
-    // prerequisites (§IV.A.1): CUDA-capable host with nvidia-uvm loaded
-    let driver = match driver {
-        Some(d) if d.uvm_loaded => d,
-        _ => return Err(GpuSupportError::DriverNotLoaded),
-    };
-    let have = driver.cuda_device_count();
-    for &d in &requested {
-        if d >= have {
-            return Err(GpuSupportError::DeviceOutOfRange(d, have));
-        }
-    }
+    let driver = check(&requested, driver, image_labels)?;
+    inject(&requested, driver, config, host_fs, rootfs, mounts).map(Some)
+}
 
-    // PTX forward-compatibility: a container built against a newer CUDA
-    // toolkit than the host driver supports cannot run (§II-B2).
-    if let Some(cuda) = image_labels.get(LABEL_CUDA_VERSION) {
-        let mut it = cuda.split('.').map(|p| p.parse::<u32>().unwrap_or(0));
-        let wanted = (it.next().unwrap_or(0), it.next().unwrap_or(0));
-        if !driver.supports_cuda(wanted) {
-            return Err(GpuSupportError::CudaIncompatible {
-                wanted_major: wanted.0,
-                wanted_minor: wanted.1,
-                driver_major: driver.version.0,
-                driver_minor: driver.version.1,
-            });
-        }
-    }
-
+/// The §IV.A mutation: add device files, bind mount the driver
+/// libraries and NVIDIA binaries. `requested` and `driver` must already
+/// have passed [`check`].
+pub fn inject(
+    requested: &[u32],
+    driver: &NvidiaDriver,
+    config: &UdiRootConfig,
+    host_fs: &VirtualFs,
+    rootfs: &mut VirtualFs,
+    mounts: &mut MountTable,
+) -> Result<GpuSupportReport, GpuSupportError> {
     // 2. add GPU device files
-    let device_files = driver.device_files(&requested);
+    let device_files = driver.device_files(requested);
     for f in &device_files {
         let node = host_fs
             .get(f)
@@ -176,13 +205,13 @@ pub fn activate(
     }
 
     let n = requested.len() as u32;
-    Ok(Some(GpuSupportReport {
-        host_devices: requested,
+    Ok(GpuSupportReport {
+        host_devices: requested.to_vec(),
         container_devices: (0..n).collect(),
         libraries,
         binaries,
         device_files,
-    }))
+    })
 }
 
 #[cfg(test)]

@@ -1,7 +1,10 @@
-//! The paper's system contribution (DESIGN.md S1–S3): the Shifter Runtime
-//! stage machine with user-transparent native GPU support (§IV.A) and MPI
-//! ABI-swap support (§IV.B).
+//! The paper's system contribution (DESIGN.md S1–S3, S22): the Shifter
+//! Runtime stage machine with user-transparent host-resource injection —
+//! native GPU support (§IV.A), MPI ABI-swap support (§IV.B) and
+//! specialized networking (`crate::netfab`) — behind the pluggable
+//! [`HostExtension`] registry.
 
+pub mod extension;
 pub mod gpu_support;
 pub mod mpi_support;
 pub mod preflight;
@@ -9,6 +12,11 @@ pub mod runtime;
 pub mod stages;
 pub mod volume;
 
+pub use extension::{
+    Activation, Capability, ExtensionContext, ExtensionError,
+    ExtensionPayload, ExtensionRegistry, ExtensionReport, GpuExtension,
+    HostExtension, MpiExtension,
+};
 pub use gpu_support::{GpuSupportError, GpuSupportReport, CONTAINER_GPU_LIB_DIR};
 pub use mpi_support::{MpiSupportError, MpiSupportReport};
 pub use runtime::{Container, RunOptions, ShifterError, ShifterRuntime};

@@ -101,16 +101,16 @@ pub fn container_mpi_from_labels(
     }))
 }
 
-/// Perform the §IV.B swap during environment preparation. Only invoked
-/// when the user passed `--mpi`.
-pub fn activate(
+/// The §IV.B compatibility gate, separated from the mutation so the
+/// `HostExtension` lifecycle can refuse a run in preflight, before
+/// `Stage::PrepareEnvironment` begins: the image must carry an MPI, its
+/// ABI metadata must parse, and the libtool ABI-string comparison (plus
+/// MPICH-ABI-initiative membership) must accept the swap. Returns the
+/// container's MPI identity.
+pub fn check(
     image_labels: &BTreeMap<String, String>,
     host_mpi: &MpiImpl,
-    config: &UdiRootConfig,
-    host_fs: &VirtualFs,
-    rootfs: &mut VirtualFs,
-    mounts: &mut MountTable,
-) -> Result<MpiSupportReport, MpiSupportError> {
+) -> Result<MpiImpl, MpiSupportError> {
     let container_mpi = container_mpi_from_labels(image_labels)?
         .ok_or(MpiSupportError::NoMpiInImage)?;
 
@@ -127,7 +127,35 @@ pub fn activate(
             host_abi: host_mpi.abi.abi_string(),
         });
     }
+    Ok(container_mpi)
+}
 
+/// Perform the §IV.B swap during environment preparation ([`check`]
+/// followed by the [`inject`] mutation). Only invoked when the user
+/// passed `--mpi`.
+pub fn activate(
+    image_labels: &BTreeMap<String, String>,
+    host_mpi: &MpiImpl,
+    config: &UdiRootConfig,
+    host_fs: &VirtualFs,
+    rootfs: &mut VirtualFs,
+    mounts: &mut MountTable,
+) -> Result<MpiSupportReport, MpiSupportError> {
+    let container_mpi = check(image_labels, host_mpi)?;
+    inject(&container_mpi, host_mpi, config, host_fs, rootfs, mounts)
+}
+
+/// The §IV.B mutation: shadow the container's MPI frontends with the
+/// host's, then mount the host MPI's transport dependencies and config
+/// files. `container_mpi` must already have passed [`check`].
+pub fn inject(
+    container_mpi: &MpiImpl,
+    host_mpi: &MpiImpl,
+    config: &UdiRootConfig,
+    host_fs: &VirtualFs,
+    rootfs: &mut VirtualFs,
+    mounts: &mut MountTable,
+) -> Result<MpiSupportReport, MpiSupportError> {
     // locate the container's frontend libraries in the image rootfs.
     // §Perf L3-2: one pass over the (large) rootfs path set matching all
     // three names, instead of one full scan per library.

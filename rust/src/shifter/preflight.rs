@@ -8,7 +8,10 @@
 //! that requirement set and explains what a newer-kernel runtime (Docker)
 //! would additionally demand.
 
+use crate::config::UdiRootConfig;
 use crate::hostenv::SystemProfile;
+
+use super::extension::{Capability, ExtensionRegistry};
 
 /// A kernel version, parsed from "3.12.60"-style strings.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -126,6 +129,34 @@ pub fn preflight(profile: &SystemProfile) -> PreflightReport {
     check(kernel, &SHIFTER_REQUIREMENTS)
 }
 
+/// Kernel preflight plus the host-extension capability vector: what a
+/// host can run (kernel facilities) and what it can *offer* (S22
+/// `HostExtension::capability` per registered extension).
+#[derive(Debug, Clone)]
+pub struct HostPreflight {
+    /// The kernel-facility check.
+    pub kernel: PreflightReport,
+    /// One capability verdict per registered extension, in registry
+    /// order.
+    pub capabilities: Vec<Capability>,
+}
+
+/// Preflight a profile against both the kernel requirement set and an
+/// extension registry's capability checks — the full host verdict
+/// `shifter --extensions` prints (`shifterimg cluster-status` surfaces
+/// the same capability vector per partition via
+/// [`crate::Site::capabilities`]).
+pub fn preflight_with_extensions(
+    profile: &SystemProfile,
+    config: &UdiRootConfig,
+    registry: &ExtensionRegistry,
+) -> HostPreflight {
+    HostPreflight {
+        kernel: preflight(profile),
+        capabilities: registry.capabilities(profile, config),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,6 +207,24 @@ mod tests {
                 profile.name
             );
         }
+    }
+
+    #[test]
+    fn extension_capabilities_ride_along_with_preflight() {
+        let profile = SystemProfile::piz_daint();
+        let config = UdiRootConfig::for_profile(&profile);
+        let registry = ExtensionRegistry::defaults();
+        let full = preflight_with_extensions(&profile, &config, &registry);
+        assert!(full.kernel.ok());
+        assert_eq!(full.capabilities.len(), 3);
+        assert!(full.capabilities.iter().all(|c| c.available));
+
+        let laptop = SystemProfile::laptop();
+        let config = UdiRootConfig::for_profile(&laptop);
+        let full = preflight_with_extensions(&laptop, &config, &registry);
+        assert!(full.kernel.ok());
+        // the laptop can run shifter but offers no fabric transport
+        assert!(!full.capabilities[2].available);
     }
 
     #[test]

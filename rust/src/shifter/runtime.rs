@@ -1,27 +1,35 @@
 //! The Shifter Runtime (§III.A, §IV): orchestrates the execution stages,
 //! building a container environment from "the user-specified image and the
-//! parts of the host system Shifter has been configured to source", with
-//! the paper's GPU/MPI support extensions applied during environment
-//! preparation.
+//! parts of the host system Shifter has been configured to source". The
+//! paper's GPU/MPI/network support runs through the ordered
+//! [`ExtensionRegistry`] (see [`super::extension`]): every triggered
+//! extension is compatibility-checked in preflight and injected during
+//! environment preparation.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::config::UdiRootConfig;
+use crate::fabric::Transport;
 use crate::gateway::{GatewayError, ImageSource};
 use crate::gpu::GpuModel;
 use crate::hostenv::SystemProfile;
 use crate::image::ImageManifest;
 use crate::mpi::MpiImpl;
+use crate::netfab::NetSupportReport;
 use crate::vfs::{Mount, MountKind, MountTable, VirtualFs};
 
-use super::gpu_support::{self, GpuSupportError, GpuSupportReport};
-use super::mpi_support::{self, MpiSupportError, MpiSupportReport};
+use super::extension::{
+    Activation, ExtensionContext, ExtensionError, ExtensionPayload,
+    ExtensionRegistry, ExtensionReport, HostExtension,
+};
+use super::gpu_support::GpuSupportReport;
+use super::mpi_support::{self, MpiSupportReport};
 use super::stages::{PrivilegeState, Stage, StageError, StageLog};
 use super::volume::{VolumeError, VolumeSpec, TMPFS_DIRS};
 
 /// Everything that can fail between `shifter --image=<ref> <cmd>` and a
-/// prepared container: image resolution, the support extensions, the
+/// prepared container: image resolution, the host extensions, the
 /// stage machine, volume policy, or in-container execution.
 #[derive(Debug, thiserror::Error)]
 #[non_exhaustive]
@@ -29,12 +37,22 @@ pub enum ShifterError {
     /// Image resolution against the gateway/fabric failed.
     #[error(transparent)]
     Gateway(#[from] GatewayError),
-    /// The §IV.A GPU support procedure failed.
+    /// A triggered extension's compatibility gate refused the run in
+    /// preflight — before `Stage::PrepareEnvironment` performed a single
+    /// mount (driver/ABI/fabric incompatibility).
+    #[error("extension '{extension}' failed preflight: {source}")]
+    ExtensionCheck {
+        /// Which extension refused.
+        extension: &'static str,
+        /// The typed cause (chained via `source()`).
+        #[source]
+        source: ExtensionError,
+    },
+    /// A host extension failed while injecting its resources during
+    /// `Stage::PrepareEnvironment` (e.g. a host library named by the
+    /// site config is missing).
     #[error(transparent)]
-    Gpu(#[from] GpuSupportError),
-    /// The §IV.B MPI library swap failed.
-    #[error(transparent)]
-    Mpi(#[from] MpiSupportError),
+    Extension(#[from] ExtensionError),
     /// The §III.A stage machine rejected an execution step.
     #[error(transparent)]
     Stage(#[from] StageError),
@@ -132,6 +150,12 @@ pub struct Container {
     pub gpu: Option<GpuSupportReport>,
     /// §IV.B MPI-swap report, when `--mpi` activated it.
     pub mpi: Option<MpiSupportReport>,
+    /// Specialized-network report, when the net extension activated.
+    pub net: Option<NetSupportReport>,
+    /// Every extension that injected into this container, in registry
+    /// order (includes site-defined extensions the typed fields above
+    /// cannot name).
+    pub extensions: Vec<ExtensionReport>,
     /// Docker-style manifest carried over from the image.
     pub manifest: ImageManifest,
     /// Auditable log of the executed §III.A stages with simulated costs.
@@ -233,6 +257,19 @@ impl Container {
         }
     }
 
+    /// The transport path this container's communication actually uses:
+    /// the native fabric when the network extension grafted the host
+    /// transport stack in (or the §IV.B swap brought the fabric-capable
+    /// host MPI), the TCP fallback otherwise — the knob behind the
+    /// paper's enabled/disabled OSU latency split.
+    pub fn effective_transport(&self) -> Transport {
+        if self.net.is_some() || self.mpi.is_some() {
+            Transport::Native
+        } else {
+            Transport::TcpFallback
+        }
+    }
+
     /// GPU chips visible inside the container, in container-id order
     /// (resolved through the node's driver enumeration).
     pub fn visible_gpus(&self, profile: &SystemProfile, node: usize) -> Vec<GpuModel> {
@@ -284,6 +321,10 @@ pub struct ShifterRuntime {
     /// The site `udiRoot.conf` this runtime was configured with.
     pub config: UdiRootConfig,
     host_fs: VirtualFs,
+    /// The ordered host-extension registry `run` drives (stock set:
+    /// GPU, MPI, network; replaceable via
+    /// [`ShifterRuntime::with_extensions`]).
+    extensions: Arc<ExtensionRegistry>,
 }
 
 // stage cost constants (seconds) — calibrated to typical mount/namespace
@@ -328,7 +369,26 @@ impl ShifterRuntime {
             profile,
             config,
             host_fs,
+            extensions: Arc::new(ExtensionRegistry::defaults()),
         }
+    }
+
+    /// Replace the host-extension registry this runtime drives — the
+    /// wiring point [`crate::SiteBuilder::with_extension`] /
+    /// [`crate::SiteBuilder::without_default_extensions`] reach node
+    /// execution through. The registry lives behind an `Arc` so a launch
+    /// orchestrator's per-partition runtimes share one instance.
+    pub fn with_extensions(
+        mut self,
+        extensions: Arc<ExtensionRegistry>,
+    ) -> ShifterRuntime {
+        self.extensions = extensions;
+        self
+    }
+
+    /// The host-extension registry this runtime drives.
+    pub fn extensions(&self) -> &ExtensionRegistry {
+        &self.extensions
     }
 
     /// The host profile this runtime executes on.
@@ -364,6 +424,30 @@ impl ShifterRuntime {
             format!("{} on {}", gw_image.reference.canonical(), gw_image.pfs_path),
             source.resolve_latency_secs(),
         )?;
+
+        // -- extension preflight -------------------------------------------
+        // trigger + check every registered extension BEFORE environment
+        // preparation begins: an incompatible driver, MPI ABI or fabric
+        // transport refuses the run here, before a single mount happens
+        let ctx = ExtensionContext {
+            opts,
+            manifest: &gw_image.manifest,
+            profile: &self.profile,
+            config: &self.config,
+            host_fs: &self.host_fs,
+        };
+        let mut triggered: Vec<&dyn HostExtension> = Vec::new();
+        for ext in self.extensions.iter() {
+            if let Activation::Triggered(_) = ext.trigger(&ctx) {
+                ext.check(&ctx).map_err(|source| {
+                    ShifterError::ExtensionCheck {
+                        extension: ext.name(),
+                        source,
+                    }
+                })?;
+                triggered.push(ext);
+            }
+        }
 
         // -- prepare environment -------------------------------------------
         let mut mounts = MountTable::new();
@@ -437,53 +521,45 @@ impl ShifterRuntime {
             prepare_secs += BIND_MOUNT_SECS;
         }
 
-        // §IV.A GPU support (trigger: CUDA_VISIBLE_DEVICES in the env)
-        let gpu = gpu_support::activate(
-            &opts.env,
-            self.profile.driver(opts.node).as_ref(),
-            &self.config,
-            &self.host_fs,
-            &gw_image.manifest.labels,
-            &mut rootfs,
-            &mut mounts,
-        )?;
-        if let Some(ref rep) = gpu {
-            prepare_secs += BIND_MOUNT_SECS
-                * (rep.libraries.len()
-                    + rep.binaries.len()
-                    + rep.device_files.len()) as f64;
+        // host-extension injection, in registry order (§IV.A GPU support,
+        // §IV.B MPI swap, specialized networking, site-defined additions)
+        let mut ext_env: BTreeMap<String, String> = BTreeMap::new();
+        let mut ext_reports: Vec<ExtensionReport> = Vec::new();
+        for ext in &triggered {
+            let before = mounts.len();
+            let report = ext
+                .inject(&ctx, &mut rootfs, &mut mounts, &mut ext_env)
+                .map_err(ShifterError::Extension)?;
+            prepare_secs +=
+                BIND_MOUNT_SECS * (mounts.len() - before) as f64;
+            ext_reports.push(report);
         }
-
-        // §IV.B MPI support (trigger: --mpi flag)
-        let mpi = if opts.mpi {
-            let rep = mpi_support::activate(
-                &gw_image.manifest.labels,
-                &self.profile.host_mpi,
-                &self.config,
-                &self.host_fs,
-                &mut rootfs,
-                &mut mounts,
-            )?;
-            prepare_secs += BIND_MOUNT_SECS
-                * (rep.swapped.len()
-                    + rep.dependencies.len()
-                    + rep.config_files.len()) as f64;
-            Some(rep)
-        } else {
-            None
-        };
+        let gpu = ext_reports.iter().find_map(|r| match &r.payload {
+            ExtensionPayload::Gpu(rep) => Some(rep.clone()),
+            _ => None,
+        });
+        let mpi = ext_reports.iter().find_map(|r| match &r.payload {
+            ExtensionPayload::Mpi(rep) => Some(rep.clone()),
+            _ => None,
+        });
+        let net = ext_reports.iter().find_map(|r| match &r.payload {
+            ExtensionPayload::Net(rep) => Some(rep.clone()),
+            _ => None,
+        });
 
         log.record(
             Stage::PrepareEnvironment,
             &privs,
             format!(
-                "{} mounts (gpu: {}, mpi: {})",
+                "{} mounts (gpu: {}, mpi: {}, net: {})",
                 mounts.len(),
                 gpu.is_some(),
-                mpi.is_some()
+                mpi.is_some(),
+                net.is_some()
             ),
             prepare_secs,
         )?;
+        log.attach_extensions(&ext_reports);
 
         // -- chroot jail ---------------------------------------------------
         log.record(
@@ -507,9 +583,11 @@ impl ShifterRuntime {
 
         // -- export environment ----------------------------------------------
         // image env first, then the allowlisted host variables (§III.A:
-        // "selected variables from the host system are also added")
+        // "selected variables from the host system are also added"), then
+        // whatever the extensions exported during injection
         let mut env: BTreeMap<String, String> =
             gw_image.manifest.env.iter().cloned().collect();
+        let image_vars = env.len();
         let mut exported = 0u32;
         for key in &self.config.host_env_allowlist {
             if let Some(v) = opts.env.get(key) {
@@ -517,10 +595,15 @@ impl ShifterRuntime {
                 exported += 1;
             }
         }
+        let ext_vars = ext_env.len();
+        env.extend(ext_env);
         log.record(
             Stage::ExportEnvironment,
             &privs,
-            format!("{} image vars + {exported} host vars", env.len() as u32 - exported),
+            format!(
+                "{image_vars} image vars + {exported} host vars + \
+                 {ext_vars} extension vars"
+            ),
             env.len() as f64 * ENV_VAR_SECS,
         )?;
 
@@ -542,6 +625,8 @@ impl ShifterRuntime {
             env,
             gpu,
             mpi,
+            net,
+            extensions: ext_reports,
             manifest: gw_image.manifest.clone(),
             stage_log: log,
             privileges: privs,
@@ -639,6 +724,36 @@ mod tests {
         let eff = c.effective_mpi(&profile).unwrap();
         assert_eq!(eff.version_string(), "MPICH 3.1.4");
         assert!(!eff.supports_fabric(crate::fabric::FabricKind::CrayAries));
+    }
+
+    #[test]
+    fn net_support_activates_via_env() {
+        let (profile, gw) = daint_setup();
+        let rt = ShifterRuntime::new(&profile);
+        let opts = RunOptions::new("ubuntu:xenial", &["true"])
+            .with_env("SHIFTER_NET", "host");
+        let c = rt.run(&gw, &opts).unwrap();
+        let net = c.net.as_ref().expect("net support triggered");
+        assert_eq!(net.transport, "gni");
+        assert!(c.rootfs.exists("/dev/kgni0"));
+        assert!(c.rootfs.is_dir("/dev/hugepages"));
+        assert_eq!(c.env.get("SHIFTER_NET_TRANSPORT").unwrap(), "gni");
+        assert_eq!(c.effective_transport(), Transport::Native);
+        assert_eq!(c.extensions.len(), 1);
+        assert_eq!(c.extensions[0].extension, "net");
+        assert_eq!(c.stage_log.extensions().len(), 1);
+    }
+
+    #[test]
+    fn plain_container_falls_back_to_tcp() {
+        let (profile, gw) = daint_setup();
+        let rt = ShifterRuntime::new(&profile);
+        let c = rt
+            .run(&gw, &RunOptions::new("ubuntu:xenial", &["true"]))
+            .unwrap();
+        assert!(c.net.is_none());
+        assert!(c.extensions.is_empty());
+        assert_eq!(c.effective_transport(), Transport::TcpFallback);
     }
 
     #[test]

@@ -10,6 +10,8 @@
 
 use std::fmt;
 
+use super::extension::ExtensionReport;
+
 /// One of the §III.A execution stages, in pipeline order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Stage {
@@ -126,10 +128,13 @@ pub struct StageRecord {
     pub sim_secs: f64,
 }
 
-/// Ordered log of executed stages.
+/// Ordered log of executed stages, plus the host-extension reports of
+/// the PrepareEnvironment stage (so a stage audit names exactly which
+/// injections ran and what they mounted).
 #[derive(Debug, Clone, Default)]
 pub struct StageLog {
     records: Vec<StageRecord>,
+    extensions: Vec<ExtensionReport>,
 }
 
 /// Violations of the §III.A stage order or the privilege discipline.
@@ -198,6 +203,18 @@ impl StageLog {
         &self.records
     }
 
+    /// Attach the host-extension reports of the PrepareEnvironment stage
+    /// (called once by the runtime after injection).
+    pub fn attach_extensions(&mut self, reports: &[ExtensionReport]) {
+        self.extensions = reports.to_vec();
+    }
+
+    /// The host extensions that injected into this container, in
+    /// registry order (empty when none triggered).
+    pub fn extensions(&self) -> &[ExtensionReport] {
+        &self.extensions
+    }
+
     /// Total simulated cost across all recorded stages.
     pub fn total_sim_secs(&self) -> f64 {
         self.records.iter().map(|r| r.sim_secs).sum()
@@ -217,6 +234,13 @@ impl StageLog {
                 r.stage.name(),
                 r.detail,
                 r.sim_secs * 1e3
+            ));
+        }
+        for e in &self.extensions {
+            let tag = format!("ext:{}", e.extension);
+            s.push_str(&format!(
+                "[{tag:>20}] {:<40} +{} mounts, +{} env\n",
+                e.detail, e.mounts_added, e.env_added,
             ));
         }
         s

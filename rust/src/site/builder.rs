@@ -1,13 +1,15 @@
 //! The declarative site builder: every operator knob in one place,
 //! validated once at [`SiteBuilder::build`].
 
+use std::sync::Arc;
+
 use crate::config::UdiRootConfig;
 use crate::distrib::{DistributionFabric, DEFAULT_NODE_CACHE_BYTES};
 use crate::hostenv::SystemProfile;
 use crate::launch::{LaunchCluster, RetryPolicy};
 use crate::pfs::LustreFs;
 use crate::registry::Registry;
-use crate::shifter::ShifterRuntime;
+use crate::shifter::{ExtensionRegistry, HostExtension, ShifterRuntime};
 use crate::tenancy::{FairShare, SchedulingPolicy};
 
 use super::error::SiteError;
@@ -60,6 +62,8 @@ pub struct SiteBuilder {
     pfs: Option<LustreFs>,
     seed: u64,
     workers: Option<usize>,
+    extensions: Vec<Box<dyn HostExtension>>,
+    default_extensions: bool,
 }
 
 impl Default for SiteBuilder {
@@ -87,6 +91,8 @@ impl SiteBuilder {
             pfs: None,
             seed: 7,
             workers: None,
+            extensions: Vec::new(),
+            default_extensions: true,
         }
     }
 
@@ -206,6 +212,26 @@ impl SiteBuilder {
         self
     }
 
+    /// Register an additional [`HostExtension`] after the stock
+    /// GPU/MPI/network set (or after nothing, when
+    /// [`SiteBuilder::without_default_extensions`] was called). Order of
+    /// registration is injection order; the registry reaches every
+    /// `run`, `launch` and `storm` this site executes.
+    pub fn with_extension(
+        mut self,
+        extension: Box<dyn HostExtension>,
+    ) -> SiteBuilder {
+        self.extensions.push(extension);
+        self
+    }
+
+    /// Drop the stock GPU/MPI/network extensions — the registry then
+    /// contains only what [`SiteBuilder::with_extension`] adds.
+    pub fn without_default_extensions(mut self) -> SiteBuilder {
+        self.default_extensions = false;
+        self
+    }
+
     /// Validate the declared knobs and wire the stack. Conflicting or
     /// impossible combinations return typed [`SiteError`] variants —
     /// never panics.
@@ -261,11 +287,27 @@ impl SiteBuilder {
         let fabric = DistributionFabric::new(self.shards, pfs)
             .with_node_cache_bytes(self.node_cache_bytes);
 
+        // -- extension registry -------------------------------------------
+        let mut registry = if self.default_extensions {
+            ExtensionRegistry::defaults()
+        } else {
+            ExtensionRegistry::empty()
+        };
+        for extension in self.extensions {
+            registry.register(extension);
+        }
+        let extensions = Arc::new(registry);
+
         // -- per-partition runtimes ---------------------------------------
         let runtimes: Vec<ShifterRuntime> = cluster
             .partitions()
             .iter()
-            .map(|p| p.runtime(self.config.as_ref()))
+            .map(|p| {
+                p.runtime_with_extensions(
+                    self.config.as_ref(),
+                    Arc::clone(&extensions),
+                )
+            })
             .collect();
 
         Ok(Site {
@@ -278,6 +320,7 @@ impl SiteBuilder {
             policy: self.policy,
             seed: self.seed,
             workers: self.workers,
+            extensions,
         })
     }
 }

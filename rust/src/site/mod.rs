@@ -31,6 +31,8 @@ mod error;
 pub use builder::{SiteBuilder, MIN_NODE_CACHE_BYTES};
 pub use error::SiteError;
 
+use std::sync::Arc;
+
 use crate::config::UdiRootConfig;
 use crate::distrib::DistributionFabric;
 use crate::gateway::{PullJob, PullState};
@@ -38,7 +40,9 @@ use crate::launch::{
     JobSpec, LaunchCluster, LaunchReport, LaunchScheduler, RetryPolicy,
 };
 use crate::registry::Registry;
-use crate::shifter::{Container, RunOptions, ShifterRuntime};
+use crate::shifter::{
+    Capability, Container, ExtensionRegistry, RunOptions, ShifterRuntime,
+};
 use crate::tenancy::{
     FairShareScheduler, SchedulingPolicy, TenancyReport, TenantJob,
     TrafficModel,
@@ -91,6 +95,10 @@ pub struct Site {
     pub(crate) policy: Box<dyn SchedulingPolicy>,
     pub(crate) seed: u64,
     pub(crate) workers: Option<usize>,
+    /// The ordered host-extension registry every run/launch/storm of
+    /// this site drives (stock GPU/MPI/network plus
+    /// [`SiteBuilder::with_extension`] additions).
+    pub(crate) extensions: Arc<ExtensionRegistry>,
 }
 
 impl Site {
@@ -130,6 +138,28 @@ impl Site {
     /// The scheduling policy storms run under by default.
     pub fn policy(&self) -> &dyn SchedulingPolicy {
         self.policy.as_ref()
+    }
+
+    /// The host-extension registry this site drives (injection order).
+    pub fn extensions(&self) -> &ExtensionRegistry {
+        &self.extensions
+    }
+
+    /// Per-partition extension capability vectors: for every partition,
+    /// each registered extension's host-compatibility verdict — what
+    /// `shifterimg cluster-status` prints.
+    pub fn capabilities(&self) -> Vec<(String, Vec<Capability>)> {
+        self.cluster
+            .partitions()
+            .iter()
+            .zip(&self.runtimes)
+            .map(|(p, rt)| {
+                (
+                    p.name().to_string(),
+                    self.extensions.capabilities(p.profile(), &rt.config),
+                )
+            })
+            .collect()
     }
 
     /// The site's deterministic seed for synthesized workloads.
@@ -318,6 +348,7 @@ impl Site {
             self.retry.unwrap_or_default(),
             &self.config_override,
             self.workers,
+            &self.extensions,
         );
         Ok(scheduler.launch(&mut self.fabric, spec)?)
     }
@@ -336,6 +367,7 @@ impl Site {
             self.retry.unwrap_or_default(),
             &self.config_override,
             self.workers,
+            &self.extensions,
         );
         Ok(scheduler.launch_on(&mut self.fabric, spec, nodes)?)
     }
@@ -379,7 +411,8 @@ impl Site {
                 .with_policy(policy)
                 .with_retry_policy(
                     self.retry.unwrap_or_else(RetryPolicy::strict),
-                );
+                )
+                .with_extensions(Arc::clone(&self.extensions));
         if let Some(config) = &self.config_override {
             scheduler = scheduler.with_config(config.clone());
         }
@@ -411,9 +444,11 @@ fn wired_launch_scheduler<'a>(
     retry: RetryPolicy,
     config: &Option<UdiRootConfig>,
     workers: Option<usize>,
+    extensions: &Arc<ExtensionRegistry>,
 ) -> LaunchScheduler<'a> {
-    let mut scheduler =
-        LaunchScheduler::new(cluster, registry).with_policy(retry);
+    let mut scheduler = LaunchScheduler::new(cluster, registry)
+        .with_policy(retry)
+        .with_extensions(Arc::clone(extensions));
     if let Some(config) = config {
         scheduler = scheduler.with_config(config.clone());
     }

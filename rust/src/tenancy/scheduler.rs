@@ -29,11 +29,13 @@
 //! references coalesce into the one existing pull job.
 
 use std::collections::BTreeSet;
+use std::sync::Arc;
 
 use crate::config::UdiRootConfig;
 use crate::distrib::DistributionFabric;
 use crate::launch::{LaunchCluster, LaunchScheduler, RetryPolicy};
 use crate::registry::Registry;
+use crate::shifter::ExtensionRegistry;
 use crate::wlm::fairshare::ShareLedger;
 
 use super::policy::{SchedulingPolicy, DEFAULT_POLICY};
@@ -93,6 +95,7 @@ pub struct FairShareScheduler<'a> {
     policy: &'a dyn SchedulingPolicy,
     retry: RetryPolicy,
     config: Option<UdiRootConfig>,
+    extensions: Option<Arc<ExtensionRegistry>>,
 }
 
 impl<'a> FairShareScheduler<'a> {
@@ -109,6 +112,7 @@ impl<'a> FairShareScheduler<'a> {
             policy: &DEFAULT_POLICY,
             retry: RetryPolicy::strict(),
             config: None,
+            extensions: None,
         }
     }
 
@@ -142,6 +146,16 @@ impl<'a> FairShareScheduler<'a> {
         self
     }
 
+    /// Host-extension registry forwarded to every per-job launch (the
+    /// site's GPU/MPI/network set plus any site-defined extensions).
+    pub fn with_extensions(
+        mut self,
+        extensions: Arc<ExtensionRegistry>,
+    ) -> FairShareScheduler<'a> {
+        self.extensions = Some(extensions);
+        self
+    }
+
     /// Run the whole `jobs` stream to completion over `fabric` and
     /// aggregate the outcome. Jobs may arrive in any order; the stream is
     /// processed by arrival time.
@@ -154,6 +168,9 @@ impl<'a> FairShareScheduler<'a> {
             .with_policy(self.retry);
         if let Some(config) = &self.config {
             launcher = launcher.with_config(config.clone());
+        }
+        if let Some(extensions) = &self.extensions {
+            launcher = launcher.with_extensions(Arc::clone(extensions));
         }
         let mut order: Vec<usize> = (0..jobs.len()).collect();
         order.sort_by(|&a, &b| {

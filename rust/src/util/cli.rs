@@ -93,6 +93,19 @@ impl ParsedArgs {
     }
 }
 
+/// Print a typed error and its full `source()` chain prefixed with the
+/// program name, then exit with status 1 — the shared error exit of the
+/// `shifter` and `shifterimg` binaries.
+pub fn die(prog: &str, err: &dyn std::error::Error) -> ! {
+    eprintln!("{prog}: {err}");
+    let mut source = err.source();
+    while let Some(cause) = source {
+        eprintln!("{prog}:   caused by: {cause}");
+        source = cause.source();
+    }
+    std::process::exit(1);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

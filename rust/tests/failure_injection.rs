@@ -4,7 +4,8 @@
 use shifter_rs::config::UdiRootConfig;
 use shifter_rs::hostenv::SystemProfile;
 use shifter_rs::shifter::{
-    GpuSupportError, MpiSupportError, RunOptions, ShifterError, ShifterRuntime,
+    ExtensionError, GpuSupportError, MpiSupportError, RunOptions,
+    ShifterError, ShifterRuntime,
 };
 use shifter_rs::wlm::{GresRequest, Slurm, WlmError};
 use shifter_rs::{ImageGateway, Registry};
@@ -61,8 +62,13 @@ fn out_of_range_device_is_a_hard_error() {
                 .with_env("CUDA_VISIBLE_DEVICES", "0,1"),
         )
         .unwrap_err();
+    // the gate refuses in preflight, before any environment work
     match err {
-        ShifterError::Gpu(GpuSupportError::DeviceOutOfRange(1, 1)) => {}
+        ShifterError::ExtensionCheck {
+            extension: "gpu",
+            source:
+                ExtensionError::Gpu(GpuSupportError::DeviceOutOfRange(1, 1)),
+        } => {}
         other => panic!("wrong error: {other}"),
     }
 }
@@ -86,7 +92,10 @@ fn gpuless_host_cannot_activate_gpu_support() {
         .unwrap_err();
     assert!(matches!(
         err,
-        ShifterError::Gpu(GpuSupportError::DriverNotLoaded)
+        ShifterError::ExtensionCheck {
+            extension: "gpu",
+            source: ExtensionError::Gpu(GpuSupportError::DriverNotLoaded),
+        }
     ));
 }
 
@@ -106,7 +115,12 @@ fn cuda8_container_refused_by_old_driver() {
         .unwrap_err();
     assert!(matches!(
         err,
-        ShifterError::Gpu(GpuSupportError::CudaIncompatible { .. })
+        ShifterError::ExtensionCheck {
+            extension: "gpu",
+            source: ExtensionError::Gpu(
+                GpuSupportError::CudaIncompatible { .. }
+            ),
+        }
     ));
 }
 
@@ -123,10 +137,14 @@ fn openmpi_container_swap_refused() {
         )
         .unwrap_err();
     match err {
-        ShifterError::Mpi(MpiSupportError::AbiIncompatible {
-            container_abi,
-            ..
-        }) => assert_eq!(container_abi, "40:0:20"),
+        ShifterError::ExtensionCheck {
+            extension: "mpi",
+            source:
+                ExtensionError::Mpi(MpiSupportError::AbiIncompatible {
+                    container_abi,
+                    ..
+                }),
+        } => assert_eq!(container_abi, "40:0:20"),
         other => panic!("wrong error: {other}"),
     }
     // without --mpi the same container runs (TCP fallback)
@@ -147,10 +165,16 @@ fn mpi_flag_on_image_without_mpi_fails() {
     let err = rt
         .run(&g, &RunOptions::new("ubuntu:xenial", &["true"]).with_mpi())
         .unwrap_err();
+    // regression (S22): the no-MPI-in-image check moved into
+    // HostExtension::check — it must fail in preflight, not mid-prepare
     assert!(matches!(
         err,
-        ShifterError::Mpi(MpiSupportError::NoMpiInImage)
+        ShifterError::ExtensionCheck {
+            extension: "mpi",
+            source: ExtensionError::Mpi(MpiSupportError::NoMpiInImage),
+        }
     ));
+    assert!(err.to_string().contains("preflight"), "{err}");
 }
 
 #[test]
@@ -172,9 +196,13 @@ fn misconfigured_host_mpi_paths_detected() {
                 .with_mpi(),
         )
         .unwrap_err();
+    // a missing host library only surfaces while injecting (the ABI gate
+    // passed) — so this is an Extension error, not a preflight refusal
     assert!(matches!(
         err,
-        ShifterError::Mpi(MpiSupportError::MissingHostLibrary(_))
+        ShifterError::Extension(ExtensionError::Mpi(
+            MpiSupportError::MissingHostLibrary(_)
+        ))
     ));
 }
 

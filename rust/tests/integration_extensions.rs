@@ -1,14 +1,27 @@
-//! Integration tests for the extension features: user volumes, the ALPS
-//! workload manager, the gateway pull queue, nvidia-docker/Shifter
-//! workflow parity, Environment Modules, and the in-container commands.
+//! Integration tests for the extension features: the pluggable
+//! `HostExtension` registry (trigger/check/inject lifecycle, preflight
+//! ordering, specialized-network injection and its ABI gate), user
+//! volumes, the ALPS workload manager, the gateway pull queue,
+//! nvidia-docker/Shifter workflow parity, Environment Modules, and the
+//! in-container commands.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
+use shifter_rs::config::UdiRootConfig;
 use shifter_rs::docker::DockerRuntime;
+use shifter_rs::fabric::Transport;
 use shifter_rs::gateway::{PullQueue, PullState};
 use shifter_rs::hostenv::{daint_catalog, ModuleSystem};
-use shifter_rs::image::builder;
-use shifter_rs::shifter::{RunOptions, ShifterRuntime, VolumeError, ShifterError};
+use shifter_rs::image::builder::{self, ImageBuilder};
+use shifter_rs::netfab::{self, NetSupportError};
+use shifter_rs::shifter::{
+    Activation, Capability, ExtensionContext, ExtensionError,
+    ExtensionPayload, ExtensionRegistry, ExtensionReport, HostExtension,
+    MpiSupportError, RunOptions, ShifterError, ShifterRuntime, VolumeError,
+};
+use shifter_rs::vfs::{MountTable, VirtualFs};
 use shifter_rs::wlm::{Alps, AprunRequest, SlurmWlm, WorkloadManager};
 use shifter_rs::{ImageGateway, Registry, SystemProfile};
 
@@ -212,4 +225,310 @@ fn nvidia_smi_available_inside_gpu_containers_only() {
         .run(&gw, &RunOptions::new("ubuntu:xenial", &["nvidia-smi"]))
         .unwrap();
     assert!(without.exec(&["nvidia-smi"]).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// HostExtension API (DESIGN.md S22)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn net_support_end_to_end_on_daint() {
+    let (profile, gw) = daint_gw(&["osu-benchmarks:mpich-3.1.4"]);
+    let rt = ShifterRuntime::new(&profile);
+    let opts = RunOptions::new("osu-benchmarks:mpich-3.1.4", &["osu_latency"])
+        .with_env("SHIFTER_NET", "host");
+    let c = rt.run(&gw, &opts).unwrap();
+
+    let net = c.net.as_ref().expect("net support triggered");
+    assert_eq!(net.transport, "gni");
+    assert_eq!(net.fabric, "Cray Aries");
+    assert!(c.rootfs.exists("/dev/kgni0"));
+    assert!(c.rootfs.is_dir("/dev/hugepages"));
+    assert!(c
+        .rootfs
+        .exists("/opt/cray/dmapp/default/lib64/libdmapp.so.1"));
+    let net_mounts = c.mounts.by_origin("net support");
+    assert_eq!(
+        net_mounts.len(),
+        net.libraries.len() + net.device_files.len()
+    );
+    // injection exported the transport into the container env
+    assert_eq!(c.env.get("SHIFTER_NET_TRANSPORT").unwrap(), "gni");
+    // the container now runs host-fabric, without the MPI swap
+    assert!(c.mpi.is_none());
+    assert_eq!(c.effective_transport(), Transport::Native);
+    // the report surfaces in the stage log and the container
+    assert_eq!(c.extensions.len(), 1);
+    assert_eq!(c.stage_log.extensions()[0].extension, "net");
+}
+
+#[test]
+fn net_fallback_knob_forces_tcp_path() {
+    let (profile, gw) = daint_gw(&["osu-benchmarks:mpich-3.1.4"]);
+    let rt = ShifterRuntime::new(&profile);
+    let opts = RunOptions::new("osu-benchmarks:mpich-3.1.4", &["osu_latency"])
+        .with_env("SHIFTER_NET", "host")
+        .with_env("SHIFTER_NET_FALLBACK", "1");
+    let c = rt.run(&gw, &opts).unwrap();
+    assert!(c.net.is_none(), "SHIFTER_NET_FALLBACK must veto injection");
+    assert!(c.extensions.is_empty());
+    assert_eq!(c.effective_transport(), Transport::TcpFallback);
+}
+
+#[test]
+fn loopback_host_refuses_net_request_in_preflight() {
+    let profile = SystemProfile::laptop();
+    let registry = Registry::dockerhub();
+    let mut gw = ImageGateway::new(shifter_rs::pfs::LustreFs::piz_daint());
+    gw.pull(&registry, "ubuntu:xenial").unwrap();
+    let rt = ShifterRuntime::new(&profile);
+    let err = rt
+        .run(
+            &gw,
+            &RunOptions::new("ubuntu:xenial", &["true"])
+                .with_env("SHIFTER_NET", "host"),
+        )
+        .unwrap_err();
+    assert!(matches!(
+        err,
+        ShifterError::ExtensionCheck {
+            extension: "net",
+            source: ExtensionError::Net(NetSupportError::NoHostFabric),
+        }
+    ));
+}
+
+#[test]
+fn abi_incompatible_host_fabric_rejected_full_stack() {
+    // a fabric-aware image built against a uGNI generation the host
+    // cannot serve: the label alone triggers the extension, and the ABI
+    // gate refuses the run in preflight
+    let mut registry = Registry::dockerhub();
+    let too_new = ImageBuilder::new("fabric-app:gni-99")
+        .exe("/usr/bin/fabric-app", 100_000)
+        .with_net_transport("gni", 99)
+        .build();
+    registry.push(too_new);
+    let wrong_family = ImageBuilder::new("fabric-app:verbs")
+        .exe("/usr/bin/fabric-app", 100_000)
+        .with_net_transport("verbs", 17)
+        .build();
+    registry.push(wrong_family);
+
+    let profile = SystemProfile::piz_daint();
+    let mut gw = ImageGateway::new(profile.pfs.clone().unwrap());
+    gw.pull(&registry, "fabric-app:gni-99").unwrap();
+    gw.pull(&registry, "fabric-app:verbs").unwrap();
+    let rt = ShifterRuntime::new(&profile);
+
+    let err = rt
+        .run(&gw, &RunOptions::new("fabric-app:gni-99", &["true"]))
+        .unwrap_err();
+    match err {
+        ShifterError::ExtensionCheck {
+            extension: "net",
+            source:
+                ExtensionError::Net(NetSupportError::AbiIncompatible {
+                    container_abi,
+                    host_abi,
+                }),
+        } => {
+            assert_eq!(container_abi, "gni:99");
+            assert_eq!(host_abi, "gni:5");
+        }
+        other => panic!("wrong error: {other}"),
+    }
+
+    let err = rt
+        .run(&gw, &RunOptions::new("fabric-app:verbs", &["true"]))
+        .unwrap_err();
+    assert!(matches!(
+        err,
+        ShifterError::ExtensionCheck {
+            extension: "net",
+            source: ExtensionError::Net(NetSupportError::FabricMismatch { .. }),
+        }
+    ));
+
+    // a compatible fabric-aware image (gni, older generation) runs and
+    // activates via its label alone — no SHIFTER_NET needed
+    let mut registry2 = Registry::dockerhub();
+    let ok_image = ImageBuilder::new("fabric-app:gni-3")
+        .exe("/usr/bin/fabric-app", 100_000)
+        .with_net_transport("gni", 3)
+        .build();
+    registry2.push(ok_image);
+    let mut gw2 = ImageGateway::new(profile.pfs.clone().unwrap());
+    gw2.pull(&registry2, "fabric-app:gni-3").unwrap();
+    let c = rt
+        .run(&gw2, &RunOptions::new("fabric-app:gni-3", &["true"]))
+        .unwrap();
+    assert!(c.net.is_some());
+}
+
+#[test]
+fn netfab_check_is_the_negative_gate() {
+    // direct negative coverage of the ABI comparison, independent of the
+    // runtime plumbing
+    let pd = SystemProfile::piz_daint();
+    let mut labels = BTreeMap::new();
+    labels.insert(
+        "org.shifter.net.abi".to_string(),
+        "gni:6".to_string(),
+    );
+    assert!(matches!(
+        netfab::check(&labels, &pd).unwrap_err(),
+        NetSupportError::AbiIncompatible { .. }
+    ));
+    labels.insert("org.shifter.net.abi".to_string(), "gni:5".to_string());
+    assert_eq!(netfab::check(&labels, &pd).unwrap().abi_string(), "gni:5");
+    assert!(matches!(
+        netfab::check(&labels, &SystemProfile::laptop()).unwrap_err(),
+        NetSupportError::NoHostFabric
+    ));
+}
+
+/// A probe extension that counts lifecycle calls — used to pin the
+/// trigger → check → inject ordering across the §III.A stages.
+struct ProbeExtension {
+    checks: Arc<AtomicUsize>,
+    injects: Arc<AtomicUsize>,
+}
+
+impl HostExtension for ProbeExtension {
+    fn name(&self) -> &'static str {
+        "probe"
+    }
+
+    fn trigger(&self, _ctx: &ExtensionContext<'_>) -> Activation {
+        Activation::Triggered("always on".to_string())
+    }
+
+    fn check(
+        &self,
+        ctx: &ExtensionContext<'_>,
+    ) -> Result<Capability, ExtensionError> {
+        self.checks.fetch_add(1, Ordering::SeqCst);
+        Ok(self.capability(ctx.profile, ctx.config))
+    }
+
+    fn capability(
+        &self,
+        _profile: &SystemProfile,
+        _config: &UdiRootConfig,
+    ) -> Capability {
+        Capability {
+            extension: "probe",
+            available: true,
+            detail: "test probe".to_string(),
+        }
+    }
+
+    fn inject(
+        &self,
+        _ctx: &ExtensionContext<'_>,
+        rootfs: &mut VirtualFs,
+        mounts: &mut MountTable,
+        _env: &mut BTreeMap<String, String>,
+    ) -> Result<ExtensionReport, ExtensionError> {
+        self.injects.fetch_add(1, Ordering::SeqCst);
+        rootfs.mkdir_p("/opt/probe").ok();
+        mounts.bind("/opt/probe", "/opt/probe", true, "probe");
+        Ok(ExtensionReport {
+            extension: "probe",
+            detail: "probe injected".to_string(),
+            mounts_added: 1,
+            env_added: 0,
+            payload: ExtensionPayload::Custom,
+        })
+    }
+}
+
+#[test]
+fn failed_mpi_check_precedes_every_injection() {
+    // regression for the S22 satellite: `--mpi` on an image with no MPI
+    // labels must fail in preflight, BEFORE Stage::PrepareEnvironment —
+    // a probe registered after mpi proves no injection ever started
+    let (profile, gw) = daint_gw(&["ubuntu:xenial"]);
+    let checks = Arc::new(AtomicUsize::new(0));
+    let injects = Arc::new(AtomicUsize::new(0));
+    let registry = ExtensionRegistry::defaults().with(Box::new(
+        ProbeExtension {
+            checks: Arc::clone(&checks),
+            injects: Arc::clone(&injects),
+        },
+    ));
+    let rt = ShifterRuntime::new(&profile)
+        .with_extensions(Arc::new(registry));
+
+    let err = rt
+        .run(&gw, &RunOptions::new("ubuntu:xenial", &["true"]).with_mpi())
+        .unwrap_err();
+    assert!(matches!(
+        err,
+        ShifterError::ExtensionCheck {
+            extension: "mpi",
+            source: ExtensionError::Mpi(MpiSupportError::NoMpiInImage),
+        }
+    ));
+    assert_eq!(
+        injects.load(Ordering::SeqCst),
+        0,
+        "the mpi preflight failure must abort before any inject runs"
+    );
+
+    // the successful path pins the stage log: the probe injects during
+    // PrepareEnvironment and its report lands on the log
+    let c = rt
+        .run(&gw, &RunOptions::new("ubuntu:xenial", &["true"]))
+        .unwrap();
+    assert_eq!(injects.load(Ordering::SeqCst), 1);
+    // the probe's own check ran exactly once (on the successful run; the
+    // failed run aborted at mpi, before the probe's turn)
+    assert_eq!(checks.load(Ordering::SeqCst), 1);
+    let prepare = &c.stage_log.records()[1];
+    assert_eq!(prepare.stage.name(), "prepare-environment");
+    let names: Vec<&str> = c
+        .stage_log
+        .extensions()
+        .iter()
+        .map(|r| r.extension)
+        .collect();
+    assert_eq!(names, ["probe"]);
+    assert!(c.rootfs.is_dir("/opt/probe"));
+    assert_eq!(c.mounts.by_origin("probe").len(), 1);
+}
+
+#[test]
+fn runtime_without_extensions_never_injects() {
+    let (profile, gw) = daint_gw(&["nvidia/cuda-image:8.0"]);
+    let rt = ShifterRuntime::new(&profile)
+        .with_extensions(Arc::new(ExtensionRegistry::empty()));
+    // CVD set, but no gpu extension registered: nothing triggers
+    let c = rt
+        .run(
+            &gw,
+            &RunOptions::new("nvidia/cuda-image:8.0", &["true"])
+                .with_env("CUDA_VISIBLE_DEVICES", "0"),
+        )
+        .unwrap();
+    assert!(c.gpu.is_none());
+    assert!(c.extensions.is_empty());
+    assert!(c.mounts.by_origin("gpu support").is_empty());
+}
+
+#[test]
+fn capability_vectors_match_the_paper_inventory() {
+    let registry = ExtensionRegistry::defaults();
+    assert_eq!(registry.names(), ["gpu", "mpi", "net"]);
+    for (profile, net_available) in [
+        (SystemProfile::piz_daint(), true),
+        (SystemProfile::linux_cluster(), true),
+        (SystemProfile::laptop(), false),
+    ] {
+        let config = UdiRootConfig::for_profile(&profile);
+        let caps = registry.capabilities(&profile, &config);
+        assert!(caps[0].available && caps[1].available, "{}", profile.name);
+        assert_eq!(caps[2].available, net_available, "{}", profile.name);
+    }
 }

@@ -1,17 +1,23 @@
-//! Integration: the `Site` facade (DESIGN.md S21) — builder validation
-//! returns typed errors instead of panicking, `SiteError` chains its
-//! layer-level causes via `std::error::Error::source()`, the facade's
-//! config knob reaches node execution, and a third-party
-//! `SchedulingPolicy` implementation plugs into the storm scheduler.
+//! Integration: the `Site` facade (DESIGN.md S21/S22) — builder
+//! validation returns typed errors instead of panicking, `SiteError`
+//! chains its layer-level causes via `std::error::Error::source()`, the
+//! facade's config knob reaches node execution, and third-party
+//! `SchedulingPolicy` / `HostExtension` implementations plug into the
+//! storm scheduler and the runtime's injection registry.
 
+use std::collections::BTreeMap;
 use std::error::Error as _;
 
 use shifter_rs::config::UdiRootConfig;
 use shifter_rs::launch::{JobSpec, RetryPolicy};
-use shifter_rs::shifter::RunOptions;
+use shifter_rs::shifter::{
+    Activation, Capability, ExtensionContext, ExtensionError,
+    ExtensionPayload, ExtensionReport, HostExtension, RunOptions,
+};
 use shifter_rs::tenancy::{
     FairShare, JobClass, SchedulingPolicy, TenantJob,
 };
+use shifter_rs::vfs::{MountTable, VirtualFs};
 use shifter_rs::wlm::ShareLedger;
 use shifter_rs::{Site, SiteError, SystemProfile};
 
@@ -267,4 +273,143 @@ fn a_custom_policy_plugs_into_the_storm_scheduler() {
     let via_builder = site.storm(&model);
     assert_eq!(via_builder.policy, "shortest-first");
     assert_eq!(via_builder.completed(), 4);
+}
+
+// -- third-party host extensions (S22) ------------------------------------
+
+/// A site-defined extension: graft the site's licensed tool tree into
+/// every container (the kind of injection a real center bolts on).
+struct SiteToolsExtension;
+
+impl HostExtension for SiteToolsExtension {
+    fn name(&self) -> &'static str {
+        "site-tools"
+    }
+
+    fn trigger(&self, _ctx: &ExtensionContext<'_>) -> Activation {
+        Activation::Triggered("site policy: always on".to_string())
+    }
+
+    fn check(
+        &self,
+        ctx: &ExtensionContext<'_>,
+    ) -> Result<Capability, ExtensionError> {
+        Ok(self.capability(ctx.profile, ctx.config))
+    }
+
+    fn capability(
+        &self,
+        _profile: &SystemProfile,
+        _config: &UdiRootConfig,
+    ) -> Capability {
+        Capability {
+            extension: "site-tools",
+            available: true,
+            detail: "licensed tool tree".to_string(),
+        }
+    }
+
+    fn inject(
+        &self,
+        _ctx: &ExtensionContext<'_>,
+        rootfs: &mut VirtualFs,
+        mounts: &mut MountTable,
+        env: &mut BTreeMap<String, String>,
+    ) -> Result<ExtensionReport, ExtensionError> {
+        rootfs.mkdir_p("/opt/site-tools").ok();
+        mounts.bind("/opt/site-tools", "/opt/site-tools", true, "site-tools");
+        env.insert("SITE_TOOLS".to_string(), "/opt/site-tools".to_string());
+        Ok(ExtensionReport {
+            extension: "site-tools",
+            detail: "tool tree grafted".to_string(),
+            mounts_added: 1,
+            env_added: 1,
+            payload: ExtensionPayload::Custom,
+        })
+    }
+}
+
+#[test]
+fn third_party_extension_reaches_stage_log_and_launch_report() {
+    let mut site = Site::builder()
+        .profile(SystemProfile::piz_daint())
+        .nodes(4)
+        .with_extension(Box::new(SiteToolsExtension))
+        .build()
+        .unwrap();
+    assert_eq!(
+        site.extensions().names(),
+        ["gpu", "mpi", "net", "site-tools"]
+    );
+
+    // single-node run: the extension shows up in the StageLog and the
+    // container surface
+    let c = site
+        .run(&RunOptions::new("ubuntu:xenial", &["true"]))
+        .unwrap();
+    let logged: Vec<&str> = c
+        .stage_log
+        .extensions()
+        .iter()
+        .map(|r| r.extension)
+        .collect();
+    assert_eq!(logged, ["site-tools"]);
+    assert!(c.rootfs.is_dir("/opt/site-tools"));
+    assert_eq!(c.env.get("SITE_TOOLS").unwrap(), "/opt/site-tools");
+    assert_eq!(c.mounts.by_origin("site-tools").len(), 1);
+
+    // cluster-scale launch: every node's result carries the extension,
+    // and the report aggregates it
+    let report = site
+        .launch(&JobSpec::new("ubuntu:xenial", &["true"], 4))
+        .unwrap();
+    assert_eq!(report.succeeded(), 4);
+    assert!(report
+        .node_results
+        .iter()
+        .all(|r| r.extensions.contains(&"site-tools")));
+    assert_eq!(report.extension_counts(), vec![("site-tools", 4)]);
+    assert!(report.render().contains("site-tools on 4 node(s)"));
+
+    // and the per-partition capability vector lists it
+    let caps = site.capabilities();
+    assert_eq!(caps.len(), 1);
+    assert!(caps[0]
+        .1
+        .iter()
+        .any(|c| c.extension == "site-tools" && c.available));
+}
+
+#[test]
+fn without_default_extensions_disables_stock_injection() {
+    let mut site = Site::builder()
+        .profile(SystemProfile::piz_daint())
+        .nodes(1)
+        .without_default_extensions()
+        .build()
+        .unwrap();
+    assert!(site.extensions().is_empty());
+    // CUDA_VISIBLE_DEVICES set, but no gpu extension registered
+    let c = site
+        .run(
+            &RunOptions::new("nvidia/cuda-image:8.0", &["true"])
+                .with_env("CUDA_VISIBLE_DEVICES", "0"),
+        )
+        .unwrap();
+    assert!(c.gpu.is_none());
+    assert!(c.extensions.is_empty());
+}
+
+#[test]
+fn net_extension_flows_through_site_launch() {
+    let mut site = Site::builder()
+        .profile(SystemProfile::piz_daint())
+        .nodes(2)
+        .build()
+        .unwrap();
+    let spec = JobSpec::new("osu-benchmarks:mpich-3.1.4", &["osu_latency"], 2)
+        .with_env("SHIFTER_NET", "host");
+    let report = site.launch(&spec).unwrap();
+    assert_eq!(report.succeeded(), 2);
+    assert_eq!(report.extension_counts(), vec![("net", 2)]);
 }

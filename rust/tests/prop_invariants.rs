@@ -312,3 +312,159 @@ fn prop_kernel_version_ordering_total() {
         assert_eq!(KernelVersion::parse(&s), Some(a));
     }
 }
+
+// ---------------------------------------------------------------------------
+// HostExtension invariants (DESIGN.md S22)
+// ---------------------------------------------------------------------------
+
+mod ext_props {
+    use std::collections::BTreeSet;
+    use std::sync::Arc;
+
+    use shifter_rs::netfab::NetworkSupport;
+    use shifter_rs::shifter::{
+        ExtensionRegistry, GpuExtension, HostExtension, MpiExtension,
+        RunOptions, ShifterRuntime,
+    };
+    use shifter_rs::util::prng::Rng;
+    use shifter_rs::vfs::VirtualFs;
+    use shifter_rs::{ImageGateway, Registry, SystemProfile};
+
+    const IMAGE: &str = "osu-benchmarks:mpich-3.1.4";
+
+    fn daint_gw() -> (SystemProfile, ImageGateway) {
+        let profile = SystemProfile::piz_daint();
+        let registry = Registry::dockerhub();
+        let mut gw = ImageGateway::new(profile.pfs.clone().unwrap());
+        gw.pull(&registry, IMAGE).unwrap();
+        (profile, gw)
+    }
+
+    /// Randomize the trigger surface: CVD value, --mpi flag, SHIFTER_NET
+    /// value, fallback veto.
+    fn random_opts(rng: &mut Rng) -> RunOptions {
+        let mut opts = RunOptions::new(IMAGE, &["osu_latency"]);
+        match rng.below(4) {
+            0 => {}
+            1 => opts = opts.with_env("CUDA_VISIBLE_DEVICES", "0"),
+            2 => opts = opts.with_env("CUDA_VISIBLE_DEVICES", "NoDevFiles"),
+            _ => opts = opts.with_env("CUDA_VISIBLE_DEVICES", ""),
+        }
+        if rng.below(2) == 0 {
+            opts = opts.with_mpi();
+        }
+        match rng.below(3) {
+            0 => {}
+            1 => opts = opts.with_env("SHIFTER_NET", "host"),
+            _ => opts = opts.with_env("SHIFTER_NET", "bogus"),
+        }
+        if rng.below(3) == 0 {
+            opts = opts.with_env("SHIFTER_NET_FALLBACK", "1");
+        }
+        opts
+    }
+
+    #[test]
+    fn prop_extension_activation_deterministic_per_seed() {
+        let (profile, gw) = daint_gw();
+        let rt = ShifterRuntime::new(&profile);
+        let mut rng = Rng::new(1414);
+        for case in 0..60 {
+            let opts = random_opts(&mut rng);
+            let a = rt.run(&gw, &opts);
+            let b = rt.run(&gw, &opts);
+            match (a, b) {
+                (Ok(ca), Ok(cb)) => {
+                    assert_eq!(ca.mounts, cb.mounts, "case {case}");
+                    assert_eq!(ca.env, cb.env, "case {case}");
+                    assert_eq!(ca.extensions, cb.extensions, "case {case}");
+                    assert_eq!(ca.gpu, cb.gpu, "case {case}");
+                    assert_eq!(ca.mpi, cb.mpi, "case {case}");
+                    assert_eq!(ca.net, cb.net, "case {case}");
+                }
+                (Err(ea), Err(eb)) => {
+                    assert_eq!(
+                        ea.to_string(),
+                        eb.to_string(),
+                        "case {case}"
+                    );
+                }
+                (a, b) => panic!(
+                    "case {case}: runs disagree: {:?} vs {:?}",
+                    a.is_ok(),
+                    b.is_ok()
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn prop_injection_idempotent_on_rerun() {
+        // running the same fully-loaded request repeatedly must converge:
+        // identical rootfs, identical mount multiset, identical reports
+        let (profile, gw) = daint_gw();
+        let rt = ShifterRuntime::new(&profile);
+        let opts = RunOptions::new(IMAGE, &["osu_latency"])
+            .with_mpi()
+            .with_env("CUDA_VISIBLE_DEVICES", "0")
+            .with_env("SHIFTER_NET", "host");
+        let first = rt.run(&gw, &opts).unwrap();
+        for _ in 0..3 {
+            let again = rt.run(&gw, &opts).unwrap();
+            assert_eq!(again.rootfs, first.rootfs);
+            assert_eq!(again.mounts, first.mounts);
+            assert_eq!(again.extensions, first.extensions);
+        }
+    }
+
+    fn ext_by_index(i: usize) -> Box<dyn HostExtension> {
+        match i {
+            0 => Box::new(GpuExtension),
+            1 => Box::new(MpiExtension),
+            _ => Box::new(NetworkSupport),
+        }
+    }
+
+    #[test]
+    fn prop_registry_order_never_changes_the_mount_set() {
+        // all 3! injection orders of {gpu, mpi, net}: the resulting mount
+        // SET (source, target, origin) and the rootfs must be identical —
+        // extension resources are disjoint, so order cannot matter
+        let (profile, gw) = daint_gw();
+        let opts = RunOptions::new(IMAGE, &["osu_latency"])
+            .with_mpi()
+            .with_env("CUDA_VISIBLE_DEVICES", "0")
+            .with_env("SHIFTER_NET", "host");
+        type MountSet = BTreeSet<(String, String, &'static str)>;
+        let mut reference: Option<(MountSet, VirtualFs)> = None;
+        for perm in [
+            [0usize, 1, 2],
+            [0, 2, 1],
+            [1, 0, 2],
+            [1, 2, 0],
+            [2, 0, 1],
+            [2, 1, 0],
+        ] {
+            let mut registry = ExtensionRegistry::empty();
+            for i in perm {
+                registry.register(ext_by_index(i));
+            }
+            let rt = ShifterRuntime::new(&profile)
+                .with_extensions(Arc::new(registry));
+            let c = rt.run(&gw, &opts).unwrap();
+            assert_eq!(c.extensions.len(), 3, "{perm:?}");
+            let mounts: MountSet = c
+                .mounts
+                .iter()
+                .map(|m| (m.source.clone(), m.target.clone(), m.origin))
+                .collect();
+            match &reference {
+                None => reference = Some((mounts, c.rootfs.clone())),
+                Some((ref_mounts, ref_rootfs)) => {
+                    assert_eq!(&mounts, ref_mounts, "order {perm:?}");
+                    assert_eq!(&c.rootfs, ref_rootfs, "order {perm:?}");
+                }
+            }
+        }
+    }
+}
