@@ -17,10 +17,14 @@
 //! `EXTENSION_OVERHEAD_NODES` caps the width sweep,
 //! `BENCH_EXTENSIONS_JSON` overrides the artifact path.
 
+use std::sync::Arc;
+
 use shifter_rs::fabric::{link_for, Transport, OSU_SIZES};
 use shifter_rs::shifter::RunOptions;
 use shifter_rs::util::json::Json;
-use shifter_rs::{ImageGateway, Registry, ShifterRuntime, SystemProfile};
+use shifter_rs::{
+    ImageGateway, Registry, ShifterRuntime, SystemProfile, Telemetry,
+};
 
 const IMAGE: &str = "osu-benchmarks:mpich-3.1.4";
 const WIDTHS: [u32; 3] = [1, 64, 1024];
@@ -37,7 +41,10 @@ fn main() {
     let registry = Registry::dockerhub();
     let mut gateway = ImageGateway::new(profile.pfs.clone().unwrap());
     gateway.pull(&registry, IMAGE).unwrap();
-    let runtime = ShifterRuntime::new(&profile);
+    // recording on: the artifact embeds the run/extension counters
+    let recorder = Arc::new(Telemetry::new(true));
+    let runtime = ShifterRuntime::new(&profile)
+        .with_telemetry(Arc::clone(&recorder));
 
     // -- part 1: per-extension inject cost over the bare baseline --------
     println!("per-extension inject cost on {} ({IMAGE})", profile.name);
@@ -136,6 +143,7 @@ fn main() {
         ("max_nodes", Json::Num(cap as f64)),
         ("inject_cost", Json::Arr(inject_rows)),
         ("osu_net_split", Json::Arr(osu_rows)),
+        ("telemetry", recorder.snapshot_json()),
     ]);
     let path = std::env::var("BENCH_EXTENSIONS_JSON")
         .unwrap_or_else(|_| "BENCH_extensions.json".to_string());

@@ -3,12 +3,13 @@
 //! PJRT dispatch overhead. Criterion is not in the offline vendor set, so
 //! this uses a median-of-N protocol with warmup (same discipline).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use shifter_rs::runtime::{Executor, TensorValue};
 use shifter_rs::shifter::{RunOptions, ShifterRuntime};
 use shifter_rs::util::json::Json;
-use shifter_rs::{ImageGateway, Registry, SystemProfile};
+use shifter_rs::{ImageGateway, Registry, SystemProfile, Telemetry};
 
 /// Median-of-N timing with warmup.
 fn time_op<F: FnMut()>(name: &str, n: usize, mut f: F) -> f64 {
@@ -63,6 +64,46 @@ fn main() {
         let c = runtime.run(&gateway, &mpi).unwrap();
         std::hint::black_box(c.mpi.is_some());
     });
+
+    // telemetry tax on the container hot path (DESIGN.md S23): a
+    // disabled recorder must be free, an enabled one must stay in the
+    // single-digit-percent range
+    let off = ShifterRuntime::new(&daint)
+        .with_telemetry(Arc::new(Telemetry::disabled()));
+    let t_off = time_op("runtime.run: telemetry disabled", 30, || {
+        let c = off.run(&gateway, &plain).unwrap();
+        std::hint::black_box(c.mounts.len());
+    });
+    let recorder = Arc::new(Telemetry::new(true));
+    let on = ShifterRuntime::new(&daint)
+        .with_telemetry(Arc::clone(&recorder));
+    let t_on = time_op("runtime.run: telemetry enabled", 30, || {
+        let c = on.run(&gateway, &plain).unwrap();
+        std::hint::black_box(c.mounts.len());
+    });
+    assert!(recorder.span_count() > 0, "enabled recorder captured spans");
+    let disabled_tax = (t_off / t_plain - 1.0) * 100.0;
+    let enabled_tax = (t_on / t_plain - 1.0) * 100.0;
+    println!(
+        "  telemetry tax vs baseline: disabled {disabled_tax:+.1}%, \
+         enabled {enabled_tax:+.1}%"
+    );
+    // generous bounds — this is a wall-clock bench on shared hardware,
+    // so the assert catches regressions in kind, not scheduler jitter
+    assert!(
+        t_off < t_plain * 1.5 + 100e-6,
+        "a disabled recorder must cost ~nothing (baseline {:.1}µs, \
+         disabled {:.1}µs)",
+        t_plain * 1e6,
+        t_off * 1e6
+    );
+    assert!(
+        t_on < t_plain * 2.0 + 200e-6,
+        "an enabled recorder must stay far below 2x (baseline {:.1}µs, \
+         enabled {:.1}µs)",
+        t_plain * 1e6,
+        t_on * 1e6
+    );
 
     // gateway pull cache hit (idempotence path)
     time_op("gateway.pull: digest-cache hit", 100, || {

@@ -38,7 +38,9 @@ fn max_nodes() -> u32 {
 }
 
 fn site_for(hetero: bool, nodes: u32) -> Site {
-    let builder = Site::builder().gateway_shards(SHARDS);
+    // telemetry on: the artifact embeds the counter/histogram snapshot
+    // of the largest configuration (DESIGN.md S23)
+    let builder = Site::builder().gateway_shards(SHARDS).telemetry(true);
     let builder = if hetero && nodes >= 2 {
         builder.hetero_daint_linux(nodes)
     } else {
@@ -89,6 +91,7 @@ fn main() {
     );
     let mut json_configs: Vec<Json> = Vec::new();
     let mut largest_hetero: Option<(u32, LaunchReport, LaunchReport)> = None;
+    let mut telemetry_snapshot = Json::Null;
 
     for hetero in [false, true] {
         let partitions = if hetero { "hetero" } else { "homog" };
@@ -129,6 +132,8 @@ fn main() {
                 ]);
                 json_configs.push(config_json(partitions, nodes, phase, report));
             }
+            // last (largest) configuration wins: cold + warm counters
+            telemetry_snapshot = site.telemetry().snapshot_json();
             if hetero && nodes == *node_counts.last().unwrap() {
                 largest_hetero = Some((nodes, cold, warm));
             }
@@ -140,7 +145,7 @@ fn main() {
     let Some((nodes, cold, warm)) = largest_hetero else {
         // only reachable with LAUNCH_SCALE_NODES=1 (no room for two
         // partitions); the storm assertions need at least 2 nodes
-        write_artifact(cap, json_configs);
+        write_artifact(cap, json_configs, telemetry_snapshot);
         return;
     };
     let pull = cold.pull.expect("pull summary");
@@ -198,17 +203,18 @@ fn main() {
         fmt_secs(pull.queue_wait_secs),
     );
 
-    write_artifact(cap, json_configs);
+    write_artifact(cap, json_configs, telemetry_snapshot);
 }
 
 /// Write the perf-trajectory artifact CI uploads per PR.
-fn write_artifact(cap: u32, json_configs: Vec<Json>) {
+fn write_artifact(cap: u32, json_configs: Vec<Json>, telemetry: Json) {
     let doc = Json::obj(vec![
         ("bench", Json::str("launch_scale")),
         ("image", Json::str(IMAGE)),
         ("shards", Json::Num(SHARDS as f64)),
         ("max_nodes", Json::Num(cap as f64)),
         ("configs", Json::Arr(json_configs)),
+        ("telemetry", telemetry),
     ]);
     let path = std::env::var("BENCH_LAUNCH_JSON")
         .unwrap_or_else(|_| "BENCH_launch.json".to_string());

@@ -56,6 +56,8 @@ fn main() {
             // strict retry: exact pull/coalescing accounting, no
             // straggler noise in the policy comparison
             .retry_policy(shifter_rs::launch::RetryPolicy::strict())
+            // the artifact embeds the fair-share run's counter snapshot
+            .telemetry(true)
             .build()
             .expect("valid bench site")
     };
@@ -79,11 +81,13 @@ fn main() {
         unique.len()
     );
 
-    let run = |policy: &dyn SchedulingPolicy| -> TenancyReport {
-        make_site().storm_with(&stream, policy)
+    let run = |policy: &dyn SchedulingPolicy| -> (TenancyReport, Json) {
+        let mut site = make_site();
+        let report = site.storm_with(&stream, policy);
+        (report, site.telemetry().snapshot_json())
     };
-    let fifo = run(&Fifo);
-    let fair = run(&FairShare::default());
+    let (fifo, _) = run(&Fifo);
+    let (fair, fair_telemetry) = run(&FairShare::default());
 
     for (name, report) in [("fifo", &fifo), ("fair-share", &fair)] {
         print!("{}", report.render());
@@ -175,6 +179,7 @@ fn main() {
         ("shards", Json::Num(SHARDS as f64)),
         ("fifo", fifo.to_json()),
         ("fair_share", fair.to_json()),
+        ("telemetry", fair_telemetry),
     ]);
     let path = std::env::var("BENCH_TENANCY_JSON")
         .unwrap_or_else(|_| "BENCH_tenancy.json".to_string());

@@ -14,6 +14,8 @@
 //! shifterimg [--system=daint] [--shards=4] [--nodes=256] [--hetero] \
 //!     [--tenants=8] [--jobs=64] [--arrival-rate=2.4] [--duration=S] \
 //!     [--policy=fair|fifo] [--seed=N] storm
+//! shifterimg [--nodes=64] [--tenants=4] [--jobs=32] \
+//!     [--trace=shifter_trace.jsonl] trace
 //! ```
 //!
 //! `pull`/`lookup`/`images`/`run` are the paper's §III.B end-user
@@ -27,11 +29,19 @@
 //! partition (different GPU generations, driver versions, host MPIs and
 //! fabric transports). `--net` requests the host fabric via the
 //! specialized-network extension (`SHIFTER_NET=host`).
+//!
+//! Every subcommand honors `--trace=<path>` (or `SHIFTER_TRACE=<path>`):
+//! the site records structured telemetry (DESIGN.md S23) and dumps the
+//! span tree as Chrome trace-event JSONL for Perfetto. `trace` is the
+//! one-shot profiling subcommand: it replays a deterministic job storm
+//! with telemetry forced on and writes the trace (default
+//! `shifter_trace.jsonl`) plus a counter summary. `cluster-status`
+//! likewise always records, so its per-shard counter table is live.
 
 use shifter_rs::launch::JobSpec;
 use shifter_rs::metrics::Table;
 use shifter_rs::shifter::RunOptions;
-use shifter_rs::tenancy::{policy_by_name, TrafficModel};
+use shifter_rs::tenancy::{policy_by_name, SchedulingPolicy, TrafficModel};
 use shifter_rs::util::cli::{CliSpec, ParsedArgs};
 use shifter_rs::{Site, SiteBuilder, SystemProfile};
 
@@ -48,14 +58,19 @@ fn usage() -> ! {
          \x20                       fabric and print per-shard state\n\
          \x20 launch <ref> [cmd..]  one cluster-scale containerized job\n\
          \x20 storm                 multi-tenant job-storm simulation\n\
+         \x20 trace                 replay a storm with telemetry on and\n\
+         \x20                       dump a Chrome/Perfetto trace\n\
          \n\
          common options:\n\
          \x20 --system=laptop|cluster|daint   host profile (default daint)\n\
          \x20 --shards=N                      gateway shards (default 4)\n\
          \x20 --nodes=N                       cluster width (launch: 64,\n\
-         \x20                                 storm: 256)\n\
+         \x20                                 storm: 256, trace: 64)\n\
          \x20 --hetero                        split nodes into Piz Daint +\n\
          \x20                                 Linux Cluster partitions\n\
+         \x20 --trace=PATH          record telemetry and write the span\n\
+         \x20                       tree as Chrome trace-event JSONL\n\
+         \x20                       (SHIFTER_TRACE=PATH does the same)\n\
          \n\
          run options:\n\
          \x20 --gpus=LIST           set CUDA_VISIBLE_DEVICES (GPU support)\n\
@@ -73,7 +88,10 @@ fn usage() -> ! {
          \x20 --arrival-rate=R      aggregate arrivals per minute (2.4)\n\
          \x20 --duration=SECS       stop generating arrivals after SECS\n\
          \x20 --policy=fair|fifo    queue policy (default fair)\n\
-         \x20 --seed=N              traffic PRNG seed (default 7)"
+         \x20 --seed=N              traffic PRNG seed (default 7)\n\
+         \n\
+         trace options: storm knobs (defaults --tenants=4 --jobs=32)\n\
+         \x20 plus --trace=PATH for the output (shifter_trace.jsonl)"
     );
     std::process::exit(2);
 }
@@ -101,6 +119,7 @@ fn main() {
             ("duration", true),
             ("policy", true),
             ("seed", true),
+            ("trace", true),
         ],
         // stop option parsing at the subcommand, so a containerized
         // command like `launch <ref> ls --color` keeps its own flags
@@ -138,6 +157,7 @@ fn main() {
                         pull.store_secs,
                         pull.pfs_path,
                     );
+                    maybe_write_trace(&site, &parsed, None);
                 }
                 Err(e) => die(&e),
             }
@@ -193,6 +213,7 @@ fn main() {
                             "(container start-up overhead: {:.1} ms)",
                             container.startup_overhead_secs() * 1e3
                         );
+                        maybe_write_trace(&site, &parsed, None);
                     }
                     Err(e) => die(&e),
                 },
@@ -200,7 +221,12 @@ fn main() {
             }
         }
         [cmd] if cmd == "cluster-status" => {
-            let mut site = build_site(site_builder(&profile, &parsed, parse_nodes(&parsed, 1), false));
+            // always record: the per-shard telemetry table below is part
+            // of the status report
+            let mut site = build_site(
+                site_builder(&profile, &parsed, parse_nodes(&parsed, 1), false)
+                    .telemetry(true),
+            );
             // drive the whole catalog through the cluster, as a site's
             // nightly sync would
             let refs = site.registry().list();
@@ -251,6 +277,33 @@ fn main() {
                 cas.saved_bytes() as f64 / 1e6,
             );
 
+            // per-shard telemetry counters (S23): request routing,
+            // coalescing wins, and observed pull-queue depth
+            let tel = site.telemetry();
+            let mut tel_table = Table::new(
+                "shard telemetry",
+                &["shard", "requests", "coalesced", "queue-p95"],
+            );
+            for s in 0..shards {
+                let depth = tel
+                    .histogram(&format!("shard.{s}.queue_depth"))
+                    .map(|h| format!("{:.0}", h.p95))
+                    .unwrap_or_else(|| "-".to_string());
+                tel_table.row(&[
+                    s.to_string(),
+                    tel.counter(&format!("shard.{s}.requests")).to_string(),
+                    tel.counter(&format!("shard.{s}.coalesced")).to_string(),
+                    depth,
+                ]);
+            }
+            print!("{}", tel_table.render());
+            println!(
+                "node caches: {} hits, {} cold fills, {} evictions",
+                tel.counter("fabric.cache_hits"),
+                tel.counter("fabric.cold_fills"),
+                tel.counter("fabric.evictions"),
+            );
+
             // per-partition host-extension capability vectors (S22)
             let mut ext_table = Table::new(
                 "extension capabilities",
@@ -268,6 +321,7 @@ fn main() {
                 }
             }
             print!("{}", ext_table.render());
+            maybe_write_trace(&site, &parsed, None);
         }
         [cmd, rest @ ..] if cmd == "launch" && !rest.is_empty() => {
             let reference = &rest[0];
@@ -303,6 +357,7 @@ fn main() {
             match site.launch(&job) {
                 Ok(report) => {
                     print!("{}", report.render());
+                    maybe_write_trace(&site, &parsed, None);
                     if report.failed() > 0 {
                         std::process::exit(1);
                     }
@@ -312,73 +367,60 @@ fn main() {
         }
         [cmd] if cmd == "storm" => {
             let nodes = parse_nodes(&parsed, 256);
-            let tenants: u32 =
-                match parsed.get("tenants").unwrap_or("8").parse() {
-                    Ok(n) if n >= 1 => n,
-                    _ => {
-                        eprintln!(
-                            "shifterimg: --tenants must be a positive integer"
-                        );
-                        usage();
-                    }
-                };
-            let jobs: u32 = match parsed.get("jobs").unwrap_or("64").parse() {
-                Ok(n) if n >= 1 => n,
-                _ => {
-                    eprintln!("shifterimg: --jobs must be a positive integer");
-                    usage();
-                }
-            };
-            let arrival_rate: f64 =
-                match parsed.get("arrival-rate").unwrap_or("2.4").parse() {
-                    Ok(r) if r > 0.0 => r,
-                    _ => {
-                        eprintln!(
-                            "shifterimg: --arrival-rate must be positive"
-                        );
-                        usage();
-                    }
-                };
-            let duration: f64 = match parsed.get("duration") {
-                None => f64::INFINITY,
-                Some(v) => match v.parse() {
-                    Ok(d) if d > 0.0 => d,
-                    _ => {
-                        eprintln!("shifterimg: --duration must be positive");
-                        usage();
-                    }
-                },
-            };
-            let Some(policy) =
-                policy_by_name(parsed.get("policy").unwrap_or("fair"))
-            else {
-                eprintln!("shifterimg: --policy must be fair or fifo");
-                usage();
-            };
-            let seed: u64 = match parsed.get("seed").unwrap_or("7").parse() {
-                Ok(s) => s,
-                _ => {
-                    eprintln!("shifterimg: --seed must be an integer");
-                    usage();
-                }
-            };
+            let knobs = parse_storm_knobs(&parsed, "8", "64");
             let mut site = build_site(
                 site_builder(&profile, &parsed, nodes, parsed.has("hetero"))
-                    .scheduling_policy(policy)
+                    .scheduling_policy(knobs.policy)
                     // strict retry: deterministic storm timings (the
                     // multi-tenant scheduler's own default)
                     .retry_policy(shifter_rs::launch::RetryPolicy::strict())
-                    .seed(seed),
+                    .seed(knobs.seed),
             );
             let model = TrafficModel {
-                tenants,
-                jobs,
-                arrival_rate_per_min: arrival_rate,
-                duration_secs: duration,
+                tenants: knobs.tenants,
+                jobs: knobs.jobs,
+                arrival_rate_per_min: knobs.arrival_rate,
+                duration_secs: knobs.duration,
                 ..site.default_traffic()
             };
             let report = site.storm(&model);
             print!("{}", report.render());
+            maybe_write_trace(&site, &parsed, None);
+            if report.failed() > 0 {
+                std::process::exit(1);
+            }
+        }
+        [cmd] if cmd == "trace" => {
+            // one-shot profiling: replay a deterministic storm with
+            // telemetry forced on and dump the Chrome/Perfetto trace
+            let nodes = parse_nodes(&parsed, 64);
+            let knobs = parse_storm_knobs(&parsed, "4", "32");
+            let mut site = build_site(
+                site_builder(&profile, &parsed, nodes, parsed.has("hetero"))
+                    .scheduling_policy(knobs.policy)
+                    .retry_policy(shifter_rs::launch::RetryPolicy::strict())
+                    .seed(knobs.seed)
+                    .telemetry(true),
+            );
+            let model = TrafficModel {
+                tenants: knobs.tenants,
+                jobs: knobs.jobs,
+                arrival_rate_per_min: knobs.arrival_rate,
+                duration_secs: knobs.duration,
+                ..site.default_traffic()
+            };
+            let report = site.storm(&model);
+            print!("{}", report.render());
+            let tel = site.telemetry();
+            let mut counters = Table::new(
+                &format!("telemetry ({} spans)", tel.span_count()),
+                &["counter", "value"],
+            );
+            for (name, value) in tel.counters() {
+                counters.row(&[name, value.to_string()]);
+            }
+            print!("{}", counters.render());
+            maybe_write_trace(&site, &parsed, Some("shifter_trace.jsonl"));
             if report.failed() > 0 {
                 std::process::exit(1);
             }
@@ -397,7 +439,11 @@ fn site_builder(
     nodes: u32,
     hetero: bool,
 ) -> SiteBuilder {
-    let builder = Site::builder().gateway_shards(parse_shards(parsed));
+    let builder = Site::builder()
+        .gateway_shards(parse_shards(parsed))
+        // telemetry turns on whenever a trace destination is requested
+        // (subcommands that always record chain `.telemetry(true)`)
+        .telemetry(trace_path(parsed).is_some());
     if hetero {
         if nodes < 2 {
             eprintln!("shifterimg: --hetero needs --nodes >= 2");
@@ -406,6 +452,113 @@ fn site_builder(
         builder.hetero_daint_linux(nodes)
     } else {
         builder.profile(profile.clone()).nodes(nodes)
+    }
+}
+
+/// The requested trace destination: `--trace=<path>` wins over the
+/// `SHIFTER_TRACE` environment knob; `None` means no trace.
+fn trace_path(parsed: &ParsedArgs) -> Option<String> {
+    parsed
+        .get("trace")
+        .map(String::from)
+        .or_else(|| std::env::var("SHIFTER_TRACE").ok())
+}
+
+/// Dump the site's span tree as Chrome trace-event JSONL if the user
+/// asked for a trace (explicitly, or — for the `trace` subcommand — via
+/// `default`), and say where it went.
+fn maybe_write_trace(
+    site: &Site,
+    parsed: &ParsedArgs,
+    default: Option<&str>,
+) {
+    let Some(path) =
+        trace_path(parsed).or_else(|| default.map(String::from))
+    else {
+        return;
+    };
+    if let Err(e) = std::fs::write(&path, site.telemetry().chrome_trace_jsonl())
+    {
+        eprintln!("shifterimg: cannot write trace {path}: {e}");
+        std::process::exit(1);
+    }
+    eprintln!(
+        "trace: {} spans -> {path} (open in Perfetto or chrome://tracing)",
+        site.telemetry().span_count()
+    );
+}
+
+/// The storm-shaped knobs `storm` and `trace` share; the two
+/// subcommands differ only in their tenant/job defaults.
+struct StormKnobs {
+    tenants: u32,
+    jobs: u32,
+    arrival_rate: f64,
+    duration: f64,
+    policy: Box<dyn SchedulingPolicy>,
+    seed: u64,
+}
+
+fn parse_storm_knobs(
+    parsed: &ParsedArgs,
+    default_tenants: &str,
+    default_jobs: &str,
+) -> StormKnobs {
+    let tenants: u32 =
+        match parsed.get("tenants").unwrap_or(default_tenants).parse() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                eprintln!(
+                    "shifterimg: --tenants must be a positive integer"
+                );
+                usage();
+            }
+        };
+    let jobs: u32 = match parsed.get("jobs").unwrap_or(default_jobs).parse()
+    {
+        Ok(n) if n >= 1 => n,
+        _ => {
+            eprintln!("shifterimg: --jobs must be a positive integer");
+            usage();
+        }
+    };
+    let arrival_rate: f64 =
+        match parsed.get("arrival-rate").unwrap_or("2.4").parse() {
+            Ok(r) if r > 0.0 => r,
+            _ => {
+                eprintln!("shifterimg: --arrival-rate must be positive");
+                usage();
+            }
+        };
+    let duration: f64 = match parsed.get("duration") {
+        None => f64::INFINITY,
+        Some(v) => match v.parse() {
+            Ok(d) if d > 0.0 => d,
+            _ => {
+                eprintln!("shifterimg: --duration must be positive");
+                usage();
+            }
+        },
+    };
+    let Some(policy) = policy_by_name(parsed.get("policy").unwrap_or("fair"))
+    else {
+        eprintln!("shifterimg: --policy must be fair or fifo");
+        usage();
+    };
+    let seed: u64 = match parsed.get("seed").unwrap_or("7").parse() {
+        Ok(s) => s,
+        _ => {
+            eprintln!("shifterimg: --seed must be an integer");
+            usage();
+        }
+    };
+    StormKnobs {
+        tenants,
+        jobs,
+        arrival_rate,
+        duration,
+        policy,
+        seed,
     }
 }
 

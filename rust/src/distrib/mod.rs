@@ -28,12 +28,13 @@ pub use cluster::{CoalescingStats, GatewayCluster, GatewayShard, ShardStatus};
 pub use node_cache::{CacheOutcome, NodeCache};
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::gateway::{GatewayError, GatewayImage, ImageSource, PullState};
 use crate::metrics::Stats;
 use crate::pfs::LustreFs;
 use crate::registry::Registry;
+use crate::telemetry::Telemetry;
 
 /// Default per-node squashfs cache: 32 GB of node-local storage (the
 /// RAM-backed tmpfs / local SSD slice sites give Shifter).
@@ -81,6 +82,10 @@ pub struct DistributionFabric {
     caches: Mutex<BTreeMap<usize, NodeCache>>,
     node_cache_bytes: u64,
     pfs: LustreFs,
+    /// Shared recorder (disabled by default): counts every request per
+    /// shard, coalescing hits, cache hits / cold fills / evictions, and
+    /// samples shard queue depth + node fetch times. See DESIGN.md S23.
+    telemetry: Arc<Telemetry>,
 }
 
 impl DistributionFabric {
@@ -92,6 +97,7 @@ impl DistributionFabric {
             caches: Mutex::new(BTreeMap::new()),
             node_cache_bytes: DEFAULT_NODE_CACHE_BYTES,
             pfs,
+            telemetry: Arc::new(Telemetry::disabled()),
         }
     }
 
@@ -99,6 +105,22 @@ impl DistributionFabric {
     pub fn with_node_cache_bytes(mut self, bytes: u64) -> DistributionFabric {
         self.node_cache_bytes = bytes;
         self
+    }
+
+    /// Share a telemetry recorder with the fabric (see DESIGN.md S23);
+    /// [`crate::SiteBuilder`] wires the site-wide recorder here.
+    pub fn with_telemetry(
+        mut self,
+        telemetry: Arc<Telemetry>,
+    ) -> DistributionFabric {
+        self.telemetry = telemetry;
+        self
+    }
+
+    /// The recorder the fabric reports into (disabled unless installed
+    /// via [`DistributionFabric::with_telemetry`]).
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.telemetry
     }
 
     /// The sharded gateway cluster behind the facade.
@@ -118,7 +140,35 @@ impl DistributionFabric {
         reference: &str,
         user: &str,
     ) -> Result<(usize, PullState), GatewayError> {
-        self.cluster.request(registry, reference, user)
+        // A request is a coalescing hit when the owning shard already
+        // tracks a job for this reference (the new requester is absorbed
+        // into it). Checked before the request mutates shard state, and
+        // only while recording — the extra status probe costs nothing
+        // when telemetry is off.
+        let coalesced = self.telemetry.enabled()
+            && self.cluster.status(reference).is_some();
+        let result = self.cluster.request(registry, reference, user);
+        if self.telemetry.enabled() {
+            if let Ok((shard_id, _)) = &result {
+                self.telemetry.count("fabric.requests", 1);
+                self.telemetry
+                    .count(&format!("shard.{shard_id}.requests"), 1);
+                if coalesced {
+                    self.telemetry.count("fabric.coalesced_hits", 1);
+                    self.telemetry
+                        .count(&format!("shard.{shard_id}.coalesced"), 1);
+                }
+                if let Some(shard) =
+                    self.cluster.shards().find(|s| s.id == *shard_id)
+                {
+                    self.telemetry.observe(
+                        &format!("shard.{shard_id}.queue_depth"),
+                        shard.queue.backlog() as f64,
+                    );
+                }
+            }
+        }
+        result
     }
 
     /// Advance all shard workers by `dt` simulated seconds.
@@ -208,12 +258,19 @@ impl ImageSource for DistributionFabric {
             .entry(node)
             .or_insert_with(|| NodeCache::new(self.node_cache_bytes));
         let bytes = image.squashfs.compressed_bytes;
-        Some(match cache.fetch(image.squashfs.digest, bytes) {
-            CacheOutcome::Hit => cache.warm_hit_secs(),
-            CacheOutcome::Miss { .. } => {
+        let secs = match cache.fetch(image.squashfs.digest, bytes) {
+            CacheOutcome::Hit => {
+                self.telemetry.count("fabric.cache_hits", 1);
+                cache.warm_hit_secs()
+            }
+            CacheOutcome::Miss { evicted } => {
+                self.telemetry.count("fabric.cold_fills", 1);
+                self.telemetry.count("fabric.evictions", evicted as u64);
                 NodeCache::cold_fill_secs(&self.pfs, bytes, concurrent_nodes)
             }
-        })
+        };
+        self.telemetry.observe("fabric.fetch_secs", secs);
+        Some(secs)
     }
 }
 
@@ -298,5 +355,32 @@ mod tests {
         let stats = f.cache_stats();
         assert_eq!(stats.misses, 2);
         assert_eq!(stats.evictions, 1);
+    }
+
+    #[test]
+    fn telemetry_counts_requests_coalescing_and_cache_traffic() {
+        let tel = Arc::new(Telemetry::new(true));
+        let reg = Registry::dockerhub();
+        let mut f = DistributionFabric::new(4, LustreFs::piz_daint())
+            .with_telemetry(Arc::clone(&tel));
+        f.request(&reg, "ubuntu:xenial", "a").unwrap();
+        f.request(&reg, "ubuntu:xenial", "b").unwrap();
+        f.tick(&reg, DRAIN_TICK_SECS);
+        let image = f.resolve("ubuntu:xenial").unwrap().clone();
+        f.node_fetch_secs(&image, 0, 1);
+        f.node_fetch_secs(&image, 0, 1);
+
+        assert_eq!(tel.counter("fabric.requests"), 2);
+        assert_eq!(tel.counter("fabric.coalesced_hits"), 1);
+        assert_eq!(tel.counter("fabric.cold_fills"), 1);
+        assert_eq!(tel.counter("fabric.cache_hits"), 1);
+        let fetch = tel.histogram("fabric.fetch_secs").unwrap();
+        assert_eq!(fetch.count, 2);
+        // exactly one shard owns the reference and saw both requests
+        let shard_counts: Vec<u64> = (0..4)
+            .map(|s| tel.counter(&format!("shard.{s}.requests")))
+            .collect();
+        assert_eq!(shard_counts.iter().sum::<u64>(), 2);
+        assert!(shard_counts.contains(&2));
     }
 }

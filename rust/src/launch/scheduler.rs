@@ -29,6 +29,7 @@ use crate::registry::Registry;
 use crate::shifter::{
     preflight, ExtensionRegistry, RunOptions, ShifterRuntime,
 };
+use crate::telemetry::{SpanDraft, Telemetry, TraceCtx};
 use crate::util::prng::Rng;
 use crate::wlm::{GresRequest, Slurm, WlmError};
 
@@ -128,6 +129,7 @@ pub struct LaunchScheduler<'a> {
     workers: usize,
     config: Option<UdiRootConfig>,
     extensions: Option<Arc<ExtensionRegistry>>,
+    telemetry: Option<Arc<Telemetry>>,
 }
 
 impl<'a> LaunchScheduler<'a> {
@@ -147,6 +149,7 @@ impl<'a> LaunchScheduler<'a> {
             workers,
             config: None,
             extensions: None,
+            telemetry: None,
         }
     }
 
@@ -186,6 +189,18 @@ impl<'a> LaunchScheduler<'a> {
         self
     }
 
+    /// Share a telemetry recorder (see DESIGN.md S23): launches emit a
+    /// `job` root span, a `pull` child, one `node` span per slot (with
+    /// per-attempt `run`/`stage`/`ext` children from the runtime, which
+    /// inherits this recorder), and the `launch.*` counters.
+    pub fn with_telemetry(
+        mut self,
+        telemetry: Arc<Telemetry>,
+    ) -> LaunchScheduler<'a> {
+        self.telemetry = Some(telemetry);
+        self
+    }
+
     /// Drive `spec` across the cluster end to end, filling slots from the
     /// lowest global node id upward (the classic single-job path).
     pub fn launch(
@@ -203,7 +218,7 @@ impl<'a> LaunchScheduler<'a> {
             }));
         }
         let slots = self.plan_slots(spec);
-        self.run_planned(fabric, spec, slots)
+        self.run_planned(fabric, spec, slots, None)
     }
 
     /// Drive `spec` on an explicit set of global node ids — the
@@ -229,31 +244,98 @@ impl<'a> LaunchScheduler<'a> {
             )));
         }
         let slots = self.plan_slots_on(spec, nodes)?;
-        self.run_planned(fabric, spec, slots)
+        self.run_planned(fabric, spec, slots, None)
     }
 
-    /// Shared back half of [`Self::launch`] / [`Self::launch_on`]: one
-    /// coalesced pull, then per-node stage execution and aggregation.
+    /// [`Self::launch_on`] with an explicit trace placement: node spans
+    /// parent under `ctx.parent` and start at `ctx.start_secs` on the
+    /// caller's timeline, instead of a fresh `job` root at t=0. This is
+    /// how the multi-tenant scheduler (`crate::tenancy`) stitches each
+    /// job's node execution into its own arrival→completion span.
+    pub fn launch_on_traced(
+        &self,
+        fabric: &mut DistributionFabric,
+        spec: &JobSpec,
+        nodes: &[u32],
+        ctx: TraceCtx,
+    ) -> Result<LaunchReport, LaunchError> {
+        if spec.nodes == 0 || nodes.is_empty() {
+            return Err(LaunchError::EmptyJob);
+        }
+        if nodes.len() != spec.nodes as usize {
+            return Err(LaunchError::BadNodeSet(format!(
+                "spec requests {} nodes but {} were supplied",
+                spec.nodes,
+                nodes.len()
+            )));
+        }
+        let slots = self.plan_slots_on(spec, nodes)?;
+        self.run_planned(fabric, spec, slots, Some(ctx))
+    }
+
+    /// Shared back half of [`Self::launch`] / [`Self::launch_on`] /
+    /// [`Self::launch_on_traced`]: one coalesced pull, then per-node
+    /// stage execution and aggregation. `ctx` is the caller-provided
+    /// trace placement; `None` means a standalone launch, which (when
+    /// tracing) gets its own `job` root span at t=0 with the pull as its
+    /// first child and node spans offset by the pull turnaround.
     fn run_planned(
         &self,
         fabric: &mut DistributionFabric,
         spec: &JobSpec,
         slots: Vec<SlotPlan>,
+        ctx: Option<TraceCtx>,
     ) -> Result<LaunchReport, LaunchError> {
         // -- one coalesced pull for the whole job -------------------------
         let pull = self.pull_once(fabric, spec, &slots)?;
+
+        // trace placement for node spans: a traced caller dictates parent
+        // and start; a standalone launch roots its own tree at t=0 and
+        // places node execution after the coalesced pull completes
+        let tel = self.telemetry.as_ref().filter(|t| t.enabled());
+        let (root, node_ctx) = match (tel, ctx) {
+            (Some(t), None) => {
+                let root = t.reserve_id();
+                let turnaround = pull
+                    .as_ref()
+                    .map_or(0.0, |p: &PullSummary| p.turnaround_secs);
+                t.span(SpanDraft {
+                    parent: root,
+                    category: "pull",
+                    name: &format!("pull:{}", spec.image),
+                    track: "gateway",
+                    start_secs: 0.0,
+                    dur_secs: turnaround,
+                });
+                (
+                    root,
+                    TraceCtx {
+                        parent: root,
+                        start_secs: turnaround,
+                    },
+                )
+            }
+            (_, Some(c)) => (None, c),
+            (None, None) => (None, TraceCtx::default()),
+        };
 
         // -- per-node stage execution on the worker pool ------------------
         let runtimes: Vec<ShifterRuntime> = self
             .cluster
             .partitions()
             .iter()
-            .map(|p| match &self.extensions {
-                Some(ext) => p.runtime_with_extensions(
-                    self.config.as_ref(),
-                    Arc::clone(ext),
-                ),
-                None => p.runtime(self.config.as_ref()),
+            .map(|p| {
+                let rt = match &self.extensions {
+                    Some(ext) => p.runtime_with_extensions(
+                        self.config.as_ref(),
+                        Arc::clone(ext),
+                    ),
+                    None => p.runtime(self.config.as_ref()),
+                };
+                match &self.telemetry {
+                    Some(t) => rt.with_telemetry(Arc::clone(t)),
+                    None => rt,
+                }
             })
             .collect();
         let fabric_ref: &DistributionFabric = fabric;
@@ -273,6 +355,7 @@ impl<'a> LaunchScheduler<'a> {
                                 i,
                                 self.run_slot(
                                     &runtimes, fabric_ref, spec, &slots[i],
+                                    node_ctx,
                                 ),
                             ));
                         }
@@ -293,6 +376,25 @@ impl<'a> LaunchScheduler<'a> {
             .into_iter()
             .map(|r| r.expect("every slot produces a result"))
             .collect();
+
+        // close the standalone root around whatever its children (pull +
+        // node spans) actually covered
+        if let (Some(t), Some(root_id)) = (tel, root) {
+            let end = t
+                .child_span_end(root_id)
+                .unwrap_or(node_ctx.start_secs);
+            t.span_as(
+                root_id,
+                SpanDraft {
+                    parent: None,
+                    category: "job",
+                    name: &format!("job:{}", spec.image),
+                    track: "jobs",
+                    start_secs: 0.0,
+                    dur_secs: end,
+                },
+            );
+        }
 
         let cas = fabric.cluster().cas();
         Ok(LaunchReport {
@@ -468,14 +570,24 @@ impl<'a> LaunchScheduler<'a> {
         }
     }
 
-    /// Execute one node slot, retrying per policy.
+    /// Execute one node slot, retrying per policy. `node_ctx` is the
+    /// trace placement node spans land under (ignored unless a recorder
+    /// is installed and enabled). The attempt cursor advances by at
+    /// least each attempt's stage-sum so the runtime's per-attempt spans
+    /// stay contained even when the charged (jittered) time is shorter.
     fn run_slot(
         &self,
         runtimes: &[ShifterRuntime],
         fabric: &DistributionFabric,
         spec: &JobSpec,
         slot: &SlotPlan,
+        node_ctx: TraceCtx,
     ) -> NodeResult {
+        let tel = self.telemetry.as_ref().filter(|t| t.enabled());
+        let node_span = tel.and_then(|t| t.reserve_id());
+        let track = format!("node-{:05}", slot.node);
+        let base = node_ctx.start_secs;
+        let mut cursor = base;
         let part = &self.cluster.partitions()[slot.partition];
         let mut result = NodeResult {
             node: slot.node,
@@ -491,6 +603,10 @@ impl<'a> LaunchScheduler<'a> {
         };
         if let Some(reason) = &slot.dead {
             result.error = Some(reason.clone());
+            if let Some(t) = tel {
+                t.count("launch.slots", 1);
+                t.count("launch.failed_slots", 1);
+            }
             return result;
         }
         let rt = &runtimes[slot.partition];
@@ -505,6 +621,7 @@ impl<'a> LaunchScheduler<'a> {
         // WLM wins on conflicts (it owns CUDA_VISIBLE_DEVICES)
         opts.env = spec.env.clone();
         opts.env.extend(slot.env.clone());
+        opts.trace_parent = node_span;
 
         loop {
             result.attempts += 1;
@@ -519,23 +636,38 @@ impl<'a> LaunchScheduler<'a> {
             {
                 // the broadcast read ran (and failed) — its time is spent,
                 // and nothing was admitted to the node cache
-                result.total_secs += self.fill_penalty_secs(fabric, spec)
+                let wasted = self.fill_penalty_secs(fabric, spec)
                     * rng.lognormal_noise(self.policy.jitter_sigma);
+                result.total_secs += wasted;
+                if let Some(t) = tel {
+                    t.span(SpanDraft {
+                        parent: node_span,
+                        category: "fault",
+                        name: "cold-fill-fault",
+                        track: &track,
+                        start_secs: cursor,
+                        dur_secs: wasted,
+                    });
+                    t.count("launch.cold_fill_faults", 1);
+                }
+                cursor += wasted;
                 if result.attempts >= self.policy.max_attempts {
                     result.error = Some(
                         "transient cold-fill I/O error (attempts exhausted)"
                             .to_string(),
                     );
-                    return result;
+                    break;
                 }
                 continue;
             }
+            opts.trace_start_secs = cursor;
             match rt.run(fabric, &opts) {
                 Ok(container) => {
                     let noise =
                         rng.lognormal_noise(self.policy.jitter_sigma);
-                    result.total_secs +=
-                        container.startup_overhead_secs() * noise;
+                    let overhead = container.startup_overhead_secs();
+                    result.total_secs += overhead * noise;
+                    cursor += (overhead * noise).max(overhead);
                     if noise > self.policy.straggler_threshold {
                         result.straggler = true;
                         if result.attempts < self.policy.max_attempts {
@@ -561,17 +693,46 @@ impl<'a> LaunchScheduler<'a> {
                         .iter()
                         .map(|r| r.extension)
                         .collect();
-                    return result;
+                    break;
                 }
                 Err(e) => {
                     // container-side errors are permanent for this job:
                     // an ABI mismatch or GPU incompatibility will not heal
                     // on retry, and must only fail this slot
                     result.error = Some(e.to_string());
-                    return result;
+                    break;
                 }
             }
         }
+        if let Some(t) = tel {
+            if let Some(id) = node_span {
+                t.span_as(
+                    id,
+                    SpanDraft {
+                        parent: node_ctx.parent,
+                        category: "node",
+                        name: &format!("node:{:05}", slot.node),
+                        track: &track,
+                        start_secs: base,
+                        dur_secs: cursor - base,
+                    },
+                );
+                t.annotate(id, "attempts", &result.attempts.to_string());
+                t.annotate(id, "partition", &result.partition);
+            }
+            t.count("launch.slots", 1);
+            t.count(
+                "launch.retries",
+                u64::from(result.attempts.saturating_sub(1)),
+            );
+            if result.straggler {
+                t.count("launch.stragglers", 1);
+            }
+            if result.error.is_some() {
+                t.count("launch.failed_slots", 1);
+            }
+        }
+        result
     }
 
     /// Time a failed broadcast fill wastes before the retry.
@@ -777,6 +938,51 @@ mod tests {
             parts,
             ["daint-xc50", "daint-xc50", "linux-cluster", "linux-cluster"]
         );
+    }
+
+    #[test]
+    fn telemetry_roots_one_job_span_over_pull_and_nodes() {
+        let (cluster, registry, _) = setup(4);
+        let tel = Arc::new(Telemetry::new(true));
+        let mut fabric = DistributionFabric::new(4, LustreFs::piz_daint())
+            .with_telemetry(Arc::clone(&tel));
+        let scheduler = LaunchScheduler::new(&cluster, &registry)
+            .with_telemetry(Arc::clone(&tel));
+        let spec = JobSpec::new("ubuntu:xenial", &["true"], 4);
+        let report = scheduler.launch(&mut fabric, &spec).unwrap();
+        assert_eq!(report.succeeded(), 4);
+
+        let spans = tel.spans();
+        let roots: Vec<_> =
+            spans.iter().filter(|s| s.category == "job").collect();
+        assert_eq!(roots.len(), 1);
+        let root = roots[0];
+        assert_eq!(root.parent, None);
+        assert_eq!(root.start_secs, 0.0);
+        let pull = spans.iter().find(|s| s.category == "pull").unwrap();
+        assert_eq!(pull.parent, Some(root.id));
+        let nodes: Vec<_> =
+            spans.iter().filter(|s| s.category == "node").collect();
+        assert_eq!(nodes.len(), 4);
+        for n in &nodes {
+            assert_eq!(n.parent, Some(root.id));
+            // node execution starts where the coalesced pull ends
+            assert!((n.start_secs - pull.end_secs()).abs() < 1e-9);
+            assert!(n.end_secs() <= root.end_secs() + 1e-9);
+        }
+        // every non-root span's parent exists, and children stay inside
+        // their parent's interval (default policy: jitter can shrink the
+        // charged time, never the span envelope)
+        for s in spans.iter().filter(|s| s.parent.is_some()) {
+            let p = spans
+                .iter()
+                .find(|c| Some(c.id) == s.parent)
+                .expect("parent span recorded");
+            assert!(s.start_secs >= p.start_secs - 1e-9);
+            assert!(s.end_secs() <= p.end_secs() + 1e-9);
+        }
+        assert_eq!(tel.counter("launch.slots"), 4);
+        assert!(tel.counter("runtime.runs") >= 4);
     }
 
     #[test]

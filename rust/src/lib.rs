@@ -35,9 +35,9 @@
 //! artifacts).
 
 // The rustdoc pass proceeds module by module: `launch`, `distrib`,
-// `gateway`, `tenancy`, `site`, `shifter` and `config` are fully
-// documented and enforced; the substrate modules below opt out until
-// their own pass lands.
+// `gateway`, `tenancy`, `site`, `shifter`, `telemetry` and `config` are
+// fully documented and enforced; the substrate modules below opt out
+// until their own pass lands.
 #![warn(missing_docs)]
 
 #[allow(missing_docs)]
@@ -69,6 +69,7 @@ pub mod registry;
 pub mod runtime;
 pub mod shifter;
 pub mod site;
+pub mod telemetry;
 pub mod tenancy;
 #[allow(missing_docs)]
 pub mod util;
@@ -89,6 +90,7 @@ pub use shifter::{
     ShifterRuntime,
 };
 pub use site::{PullOutcome, Site, SiteBuilder, SiteError};
+pub use telemetry::{Telemetry, TraceCtx};
 pub use tenancy::{
     FairShareScheduler, SchedulingPolicy, TenancyReport, TrafficModel,
 };

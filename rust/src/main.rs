@@ -12,6 +12,9 @@
 //! actually on a Cray); the rest is the real Shifter surface.
 //! `--extensions` lists the registered host extensions with their
 //! triggers and this system's capability verdict, then exits.
+//! `--trace=<path>` (or `SHIFTER_TRACE=<path>`) records the run's span
+//! tree and writes it as Chrome trace-event JSONL — load it in
+//! Perfetto / `chrome://tracing` (DESIGN.md S23).
 
 use shifter_rs::config::UdiRootConfig;
 use shifter_rs::shifter::{preflight, ExtensionRegistry, RunOptions};
@@ -21,7 +24,8 @@ use shifter_rs::{Site, SystemProfile};
 fn usage() -> ! {
     eprintln!(
         "usage: shifter [--system=laptop|cluster|daint] --image=<ref> \
-         [--mpi] [--net] [--gpus=LIST] [--verbose] <command…>\n\
+         [--mpi] [--net] [--gpus=LIST] [--verbose] \
+         [--trace=<trace.jsonl>] <command…>\n\
          \x20      shifter [--system=...] --extensions"
     );
     std::process::exit(2);
@@ -43,6 +47,7 @@ fn main() {
             ("volume", true),
             ("verbose", false),
             ("extensions", false),
+            ("trace", true),
         ],
         true,
     );
@@ -104,9 +109,20 @@ fn main() {
         usage();
     }
 
+    // `--trace=<path>` wins over the SHIFTER_TRACE environment knob
+    let trace = parsed
+        .get("trace")
+        .map(String::from)
+        .or_else(|| std::env::var("SHIFTER_TRACE").ok());
+
     // a single-node site wired through the facade — `Site::run` pulls
     // the image on demand (`shifterimg` is the real pull interface)
-    let mut site = match Site::builder().profile(profile).nodes(1).build() {
+    let mut site = match Site::builder()
+        .profile(profile)
+        .nodes(1)
+        .telemetry(trace.is_some())
+        .build()
+    {
         Ok(site) => site,
         Err(e) => {
             eprintln!("shifter: invalid site: {e}");
@@ -149,6 +165,17 @@ fn main() {
                     }
                 }
                 Err(e) => die(&e),
+            }
+            if let Some(path) = trace {
+                let jsonl = site.telemetry().chrome_trace_jsonl();
+                if let Err(e) = std::fs::write(&path, jsonl) {
+                    eprintln!("shifter: cannot write trace {path}: {e}");
+                    std::process::exit(1);
+                }
+                eprintln!(
+                    "trace: {} spans -> {path} (open in Perfetto)",
+                    site.telemetry().span_count()
+                );
             }
         }
         Err(e) => die(&e),

@@ -224,4 +224,124 @@ mod tests {
         let mut t = Table::new("T", &["a", "b"]);
         t.row(&["x".into()]);
     }
+
+    // -- property tests (deterministic PRNG, no external crates) ----------
+
+    use crate::util::prng::Rng;
+
+    /// Fisher–Yates with the repo PRNG — permutation-invariance driver.
+    fn shuffled(samples: &[f64], rng: &mut Rng) -> Vec<f64> {
+        let mut v = samples.to_vec();
+        for i in (1..v.len()).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            v.swap(i, j);
+        }
+        v
+    }
+
+    #[test]
+    fn prop_stats_are_permutation_invariant() {
+        let mut rng = Rng::from_tags(&["metrics", "prop", "perm"]);
+        for case in 0..50 {
+            let n = 1 + rng.below(40) as usize;
+            let samples: Vec<f64> =
+                (0..n).map(|_| rng.range(-1e3, 1e3)).collect();
+            let reference = Stats::from_samples(&samples);
+            for _ in 0..4 {
+                let permuted = shuffled(&samples, &mut rng);
+                let s = Stats::from_samples(&permuted);
+                // order statistics are exact under permutation; mean and
+                // std only up to summation-order rounding
+                for (got, want) in [
+                    (s.best, reference.best),
+                    (s.worst, reference.worst),
+                    (s.p50, reference.p50),
+                    (s.p95, reference.p95),
+                    (s.p99, reference.p99),
+                ] {
+                    assert_eq!(
+                        got, want,
+                        "case {case}: order statistics must not depend \
+                         on sample order"
+                    );
+                }
+                assert_eq!(s.n, reference.n);
+                assert!(
+                    (s.mean - reference.mean).abs()
+                        <= 1e-9 * (1.0 + reference.mean.abs()),
+                    "case {case}: mean drifted past rounding"
+                );
+                assert!(
+                    (s.std - reference.std).abs()
+                        <= 1e-9 * (1.0 + reference.std),
+                    "case {case}: std drifted past rounding"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_percentile_is_monotone_in_q_and_bounded() {
+        let mut rng = Rng::from_tags(&["metrics", "prop", "mono"]);
+        for _ in 0..50 {
+            let n = 1 + rng.below(60) as usize;
+            let mut sorted: Vec<f64> =
+                (0..n).map(|_| rng.range(-50.0, 50.0)).collect();
+            sorted.sort_by(f64::total_cmp);
+            let qs: Vec<f64> = (0..=20).map(|i| i as f64 / 20.0).collect();
+            let mut last = f64::NEG_INFINITY;
+            for &q in &qs {
+                let p = percentile_sorted(&sorted, q);
+                assert!(p >= last, "percentile must be monotone in q");
+                assert!(p >= sorted[0] && p <= sorted[n - 1]);
+                last = p;
+            }
+            // the boundaries are the extremes, never an out-of-range rank
+            assert_eq!(percentile_sorted(&sorted, 0.0), sorted[0]);
+            assert_eq!(percentile_sorted(&sorted, 1.0), sorted[n - 1]);
+        }
+    }
+
+    #[test]
+    fn prop_single_sample_is_every_statistic() {
+        let mut rng = Rng::from_tags(&["metrics", "prop", "single"]);
+        for _ in 0..20 {
+            let x = rng.range(-1e6, 1e6);
+            let s = Stats::from_samples(&[x]);
+            assert_eq!(s.n, 1);
+            assert_eq!(s.std, 0.0);
+            for v in [s.mean, s.best, s.worst, s.p50, s.p95, s.p99] {
+                assert_eq!(v, x);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_order_statistics_agree_with_sorted_ranks() {
+        // best/worst/p50 must be exact order statistics of the input
+        let mut rng = Rng::from_tags(&["metrics", "prop", "ranks"]);
+        for _ in 0..50 {
+            let n = 1 + rng.below(30) as usize;
+            let samples: Vec<f64> =
+                (0..n).map(|_| rng.range(0.0, 10.0)).collect();
+            let mut sorted = samples.clone();
+            sorted.sort_by(f64::total_cmp);
+            let s = Stats::from_samples(&samples);
+            assert_eq!(s.best, sorted[0]);
+            assert_eq!(s.worst, sorted[n - 1]);
+            let rank = (0.5 * n as f64).ceil() as usize;
+            assert_eq!(s.p50, sorted[rank.clamp(1, n) - 1]);
+        }
+    }
+
+    #[test]
+    fn total_cmp_orders_negatives_and_signed_zero() {
+        // total_cmp gives a NaN-free total order: -0.0 sorts before 0.0
+        // and negatives sort below, so percentiles stay well-defined
+        let s = Stats::from_samples(&[0.0, -1.5, -0.0, 2.5, -3.25]);
+        assert_eq!(s.best, -3.25);
+        assert_eq!(s.worst, 2.5);
+        assert_eq!(s.p50, -0.0);
+        assert!(s.p50.is_sign_negative(), "-0.0 ranks below +0.0");
+    }
 }

@@ -27,6 +27,7 @@ use super::gpu_support::GpuSupportReport;
 use super::mpi_support::{self, MpiSupportReport};
 use super::stages::{PrivilegeState, Stage, StageError, StageLog};
 use super::volume::{VolumeError, VolumeSpec, TMPFS_DIRS};
+use crate::telemetry::{SpanDraft, Telemetry};
 
 /// Everything that can fail between `shifter --image=<ref> <cmd>` and a
 /// prepared container: image resolution, the host extensions, the
@@ -86,6 +87,14 @@ pub struct RunOptions {
     pub concurrent_nodes: u32,
     /// Which node of the system we execute on.
     pub node: usize,
+    /// Telemetry span this run's spans parent under, when the caller
+    /// (the launch orchestrator's node slot) is tracing. See
+    /// [`crate::telemetry`] / DESIGN.md S23.
+    pub trace_parent: Option<u64>,
+    /// Absolute simulated second this run starts at on the caller's
+    /// timeline; the runtime only knows relative stage costs, so span
+    /// placement is offset from here.
+    pub trace_start_secs: f64,
 }
 
 impl RunOptions {
@@ -102,7 +111,18 @@ impl RunOptions {
             volumes: Vec::new(),
             concurrent_nodes: 1,
             node: 0,
+            trace_parent: None,
+            trace_start_secs: 0.0,
         }
+    }
+
+    /// Place this run on the caller's trace timeline (see
+    /// [`crate::TraceCtx`]): spans parent under `ctx.parent` and start
+    /// at `ctx.start_secs`.
+    pub fn traced(mut self, ctx: crate::telemetry::TraceCtx) -> RunOptions {
+        self.trace_parent = ctx.parent;
+        self.trace_start_secs = ctx.start_secs;
+        self
     }
 
     /// Add a `--volume` mount (parsed and validated at run time).
@@ -325,6 +345,9 @@ pub struct ShifterRuntime {
     /// GPU, MPI, network; replaceable via
     /// [`ShifterRuntime::with_extensions`]).
     extensions: Arc<ExtensionRegistry>,
+    /// Shared recorder (disabled by default): `run` emits one span per
+    /// stage and per extension check/inject. See DESIGN.md S23.
+    telemetry: Arc<Telemetry>,
 }
 
 // stage cost constants (seconds) — calibrated to typical mount/namespace
@@ -370,7 +393,19 @@ impl ShifterRuntime {
             config,
             host_fs,
             extensions: Arc::new(ExtensionRegistry::defaults()),
+            telemetry: Arc::new(Telemetry::disabled()),
         }
+    }
+
+    /// Share a telemetry recorder with this runtime (see DESIGN.md S23);
+    /// [`crate::SiteBuilder`] and the launch orchestrator wire the
+    /// site-wide recorder here so every node run reports into one trace.
+    pub fn with_telemetry(
+        mut self,
+        telemetry: Arc<Telemetry>,
+    ) -> ShifterRuntime {
+        self.telemetry = telemetry;
+        self
     }
 
     /// Replace the host-extension registry this runtime drives — the
@@ -618,6 +653,8 @@ impl ShifterRuntime {
         // -- cleanup ------------------------------------------------------------
         log.record(Stage::Cleanup, &privs, "release mounts", CLEANUP_SECS)?;
 
+        self.emit_run_spans(opts, &log, &triggered, &ext_reports);
+
         Ok(Container {
             image: gw_image.reference.canonical(),
             rootfs,
@@ -631,6 +668,90 @@ impl ShifterRuntime {
             stage_log: log,
             privileges: privs,
         })
+    }
+
+    /// Reconstruct the run's span tree after the stage pipeline
+    /// completes (see DESIGN.md S23): the pipeline is strictly
+    /// sequential, so absolute placement is the running prefix sum of
+    /// stage costs from `opts.trace_start_secs`. Extension checks land
+    /// as instants at the preflight point (end of resolve); injections
+    /// fill the tail of prepare-environment, each `BIND_MOUNT_SECS` per
+    /// mount it added. No-op unless a recorder is installed and enabled.
+    fn emit_run_spans(
+        &self,
+        opts: &RunOptions,
+        log: &StageLog,
+        triggered: &[&dyn HostExtension],
+        ext_reports: &[ExtensionReport],
+    ) {
+        let tel = &self.telemetry;
+        if !tel.enabled() {
+            return;
+        }
+        let track = format!("node-{:05}", opts.node);
+        let base = opts.trace_start_secs;
+        let total = log.total_sim_secs();
+        let run_id = tel.span(SpanDraft {
+            parent: opts.trace_parent,
+            category: "run",
+            name: &format!("run:{}", opts.image),
+            track: &track,
+            start_secs: base,
+            dur_secs: total,
+        });
+        let mut cursor = base;
+        let mut resolve_end = base;
+        let mut prepare = (base, 0.0);
+        for rec in log.records() {
+            tel.span(SpanDraft {
+                parent: run_id,
+                category: "stage",
+                name: rec.stage.name(),
+                track: &track,
+                start_secs: cursor,
+                dur_secs: rec.sim_secs,
+            });
+            cursor += rec.sim_secs;
+            match rec.stage {
+                Stage::ResolveImage => resolve_end = cursor,
+                Stage::PrepareEnvironment => {
+                    prepare = (cursor - rec.sim_secs, rec.sim_secs);
+                }
+                _ => {}
+            }
+        }
+        for ext in triggered {
+            tel.span(SpanDraft {
+                parent: run_id,
+                category: "ext",
+                name: &format!("ext:{}:check", ext.name()),
+                track: &track,
+                start_secs: resolve_end,
+                dur_secs: 0.0,
+            });
+        }
+        let inject_total: f64 = ext_reports
+            .iter()
+            .map(|r| BIND_MOUNT_SECS * r.mounts_added as f64)
+            .sum();
+        let (prep_start, prep_dur) = prepare;
+        let mut inject_cursor =
+            (prep_start + prep_dur - inject_total).max(prep_start);
+        for report in ext_reports {
+            let dur = BIND_MOUNT_SECS * report.mounts_added as f64;
+            tel.span(SpanDraft {
+                parent: run_id,
+                category: "ext",
+                name: &format!("ext:{}:inject", report.extension),
+                track: &track,
+                start_secs: inject_cursor,
+                dur_secs: dur,
+            });
+            inject_cursor += dur;
+        }
+        tel.count("runtime.runs", 1);
+        tel.count("runtime.extensions_injected", ext_reports.len() as u64);
+        tel.observe("runtime.startup_secs", total);
     }
 }
 
@@ -776,6 +897,43 @@ mod tests {
             .unwrap();
         let t = c.startup_overhead_secs();
         assert!(t > 0.0 && t < 5.0, "overhead={t}");
+    }
+
+    #[test]
+    fn telemetry_records_stage_and_extension_spans() {
+        use crate::telemetry::{Telemetry, TraceCtx};
+        let (profile, gw) = daint_setup();
+        let tel = Arc::new(Telemetry::new(true));
+        let rt =
+            ShifterRuntime::new(&profile).with_telemetry(Arc::clone(&tel));
+        let opts = RunOptions::new("nvidia/cuda-image:8.0", &["true"])
+            .with_env("CUDA_VISIBLE_DEVICES", "0")
+            .traced(TraceCtx {
+                parent: None,
+                start_secs: 10.0,
+            });
+        let c = rt.run(&gw, &opts).unwrap();
+
+        let spans = tel.spans();
+        let run = spans.iter().find(|s| s.category == "run").unwrap();
+        assert_eq!(run.start_secs, 10.0);
+        assert!((run.dur_secs - c.startup_overhead_secs()).abs() < 1e-12);
+        // the seven §III.A stages tile the run span exactly
+        let stages: Vec<_> =
+            spans.iter().filter(|s| s.category == "stage").collect();
+        assert_eq!(stages.len(), 7);
+        let sum: f64 = stages.iter().map(|s| s.dur_secs).sum();
+        assert!((sum - run.dur_secs).abs() < 1e-12);
+        assert!(stages.iter().all(|s| s.parent == Some(run.id)));
+        // one check + one inject span for the activated gpu extension
+        assert!(spans.iter().any(|s| s.name == "ext:gpu:check"));
+        let inject =
+            spans.iter().find(|s| s.name == "ext:gpu:inject").unwrap();
+        assert_eq!(inject.parent, Some(run.id));
+        assert!(inject.dur_secs > 0.0);
+        assert!(inject.end_secs() <= run.end_secs() + 1e-12);
+        assert_eq!(tel.counter("runtime.runs"), 1);
+        assert_eq!(tel.counter("runtime.extensions_injected"), 1);
     }
 
     #[test]

@@ -10,6 +10,7 @@ use crate::launch::{LaunchCluster, RetryPolicy};
 use crate::pfs::LustreFs;
 use crate::registry::Registry;
 use crate::shifter::{ExtensionRegistry, HostExtension, ShifterRuntime};
+use crate::telemetry::Telemetry;
 use crate::tenancy::{FairShare, SchedulingPolicy};
 
 use super::error::SiteError;
@@ -64,6 +65,7 @@ pub struct SiteBuilder {
     workers: Option<usize>,
     extensions: Vec<Box<dyn HostExtension>>,
     default_extensions: bool,
+    telemetry: bool,
 }
 
 impl Default for SiteBuilder {
@@ -93,6 +95,7 @@ impl SiteBuilder {
             workers: None,
             extensions: Vec::new(),
             default_extensions: true,
+            telemetry: false,
         }
     }
 
@@ -232,6 +235,18 @@ impl SiteBuilder {
         self
     }
 
+    /// Record structured spans, counters, and histograms for every
+    /// operation this site runs (DESIGN.md S23). Off by default: a
+    /// disabled [`Telemetry`] recorder is a single branch on the hot
+    /// path and allocates nothing. When enabled, [`Site::telemetry`]
+    /// exposes the recorder — Chrome-trace export via
+    /// [`Telemetry::chrome_trace_jsonl`], counter/histogram snapshots
+    /// via [`Telemetry::snapshot_json`].
+    pub fn telemetry(mut self, enabled: bool) -> SiteBuilder {
+        self.telemetry = enabled;
+        self
+    }
+
     /// Validate the declared knobs and wire the stack. Conflicting or
     /// impossible combinations return typed [`SiteError`] variants —
     /// never panics.
@@ -284,8 +299,10 @@ impl SiteBuilder {
                 .clone()
                 .unwrap_or_else(LustreFs::piz_daint)
         });
+        let telemetry = Arc::new(Telemetry::new(self.telemetry));
         let fabric = DistributionFabric::new(self.shards, pfs)
-            .with_node_cache_bytes(self.node_cache_bytes);
+            .with_node_cache_bytes(self.node_cache_bytes)
+            .with_telemetry(Arc::clone(&telemetry));
 
         // -- extension registry -------------------------------------------
         let mut registry = if self.default_extensions {
@@ -307,6 +324,7 @@ impl SiteBuilder {
                     self.config.as_ref(),
                     Arc::clone(&extensions),
                 )
+                .with_telemetry(Arc::clone(&telemetry))
             })
             .collect();
 
@@ -321,6 +339,7 @@ impl SiteBuilder {
             seed: self.seed,
             workers: self.workers,
             extensions,
+            telemetry,
         })
     }
 }

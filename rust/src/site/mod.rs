@@ -43,6 +43,7 @@ use crate::registry::Registry;
 use crate::shifter::{
     Capability, Container, ExtensionRegistry, RunOptions, ShifterRuntime,
 };
+use crate::telemetry::{SpanDraft, Telemetry};
 use crate::tenancy::{
     FairShareScheduler, SchedulingPolicy, TenancyReport, TenantJob,
     TrafficModel,
@@ -99,6 +100,9 @@ pub struct Site {
     /// this site drives (stock GPU/MPI/network plus
     /// [`SiteBuilder::with_extension`] additions).
     pub(crate) extensions: Arc<ExtensionRegistry>,
+    /// The telemetry recorder shared by every layer of this site
+    /// (disabled — a no-op — unless [`SiteBuilder::telemetry`] was set).
+    pub(crate) telemetry: Arc<Telemetry>,
 }
 
 impl Site {
@@ -165,6 +169,14 @@ impl Site {
     /// The site's deterministic seed for synthesized workloads.
     pub fn seed(&self) -> u64 {
         self.seed
+    }
+
+    /// The telemetry recorder behind every operation this site runs —
+    /// spans, counters, and histograms accumulate across `pull` / `run`
+    /// / `launch` / `storm` calls (DESIGN.md S23). Disabled (and empty)
+    /// unless the site was built with [`SiteBuilder::telemetry`].
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.telemetry
     }
 
     /// Canonical references of every image materialized on any gateway
@@ -241,6 +253,23 @@ impl Site {
                     source: e,
                 }
             })?;
+        if self.telemetry.enabled() {
+            let span = self.telemetry.span(SpanDraft {
+                parent: None,
+                category: "pull",
+                name: &format!("pull:{reference}"),
+                track: "gateway",
+                start_secs: 0.0,
+                dur_secs: turnaround,
+            });
+            if let Some(id) = span {
+                self.telemetry.annotate(
+                    id,
+                    "requesters",
+                    &requesters.to_string(),
+                );
+            }
+        }
         Ok(PullOutcome {
             reference: image.reference.canonical(),
             pfs_path: image.pfs_path.clone(),
@@ -349,6 +378,7 @@ impl Site {
             &self.config_override,
             self.workers,
             &self.extensions,
+            &self.telemetry,
         );
         Ok(scheduler.launch(&mut self.fabric, spec)?)
     }
@@ -368,6 +398,7 @@ impl Site {
             &self.config_override,
             self.workers,
             &self.extensions,
+            &self.telemetry,
         );
         Ok(scheduler.launch_on(&mut self.fabric, spec, nodes)?)
     }
@@ -412,7 +443,8 @@ impl Site {
                 .with_retry_policy(
                     self.retry.unwrap_or_else(RetryPolicy::strict),
                 )
-                .with_extensions(Arc::clone(&self.extensions));
+                .with_extensions(Arc::clone(&self.extensions))
+                .with_telemetry(Arc::clone(&self.telemetry));
         if let Some(config) = &self.config_override {
             scheduler = scheduler.with_config(config.clone());
         }
@@ -438,6 +470,7 @@ impl Site {
 /// Assemble a launch scheduler from a site's knobs. A free function (not
 /// a `&self` method) so callers can keep `&mut self.fabric` available:
 /// direct field borrows split, a whole-`self` borrow would not.
+#[allow(clippy::too_many_arguments)]
 fn wired_launch_scheduler<'a>(
     cluster: &'a LaunchCluster,
     registry: &'a Registry,
@@ -445,10 +478,12 @@ fn wired_launch_scheduler<'a>(
     config: &Option<UdiRootConfig>,
     workers: Option<usize>,
     extensions: &Arc<ExtensionRegistry>,
+    telemetry: &Arc<Telemetry>,
 ) -> LaunchScheduler<'a> {
     let mut scheduler = LaunchScheduler::new(cluster, registry)
         .with_policy(retry)
-        .with_extensions(Arc::clone(extensions));
+        .with_extensions(Arc::clone(extensions))
+        .with_telemetry(Arc::clone(telemetry));
     if let Some(config) = config {
         scheduler = scheduler.with_config(config.clone());
     }
@@ -543,6 +578,42 @@ mod tests {
             PullState::Ready
         );
         assert!(ticks > 1, "a real pull takes multiple worker ticks");
+    }
+
+    #[test]
+    fn telemetry_is_off_by_default_and_wired_when_enabled() {
+        let mut quiet = Site::builder().nodes(2).build().unwrap();
+        quiet.pull("ubuntu:xenial").unwrap();
+        quiet
+            .launch(&JobSpec::new("ubuntu:xenial", &["true"], 2))
+            .unwrap();
+        assert!(!quiet.telemetry().enabled());
+        assert_eq!(quiet.telemetry().span_count(), 0);
+        assert_eq!(quiet.telemetry().counters().len(), 0);
+
+        let mut traced =
+            Site::builder().nodes(2).telemetry(true).build().unwrap();
+        let pull = traced.pull("ubuntu:xenial").unwrap();
+        let spans = traced.telemetry().spans();
+        let pull_span = spans
+            .iter()
+            .find(|s| s.category == "pull")
+            .expect("pull span");
+        assert_eq!(pull_span.name, "pull:ubuntu:xenial");
+        assert!(
+            (pull_span.dur_secs - pull.turnaround_secs).abs() < 1e-9
+        );
+        traced
+            .launch(&JobSpec::new("ubuntu:xenial", &["true"], 2))
+            .unwrap();
+        let tel = traced.telemetry();
+        assert!(tel.counter("fabric.requests") >= 1);
+        assert_eq!(tel.counter("launch.slots"), 2);
+        assert_eq!(tel.counter("runtime.runs"), 2);
+        assert!(tel
+            .spans()
+            .iter()
+            .any(|s| s.category == "job" && s.parent.is_none()));
     }
 
     #[test]

@@ -1,0 +1,714 @@
+//! End-to-end telemetry (DESIGN.md S23): structured spans, monotonic
+//! counters, and bounded histograms across pull → stage → launch →
+//! tenancy.
+//!
+//! Every per-subsystem report struct (`LaunchReport`, `TenancyReport`,
+//! `StageLog`) hand-rolls its own timing, which answers "how long did
+//! stage X take on average" but not "where did *this* job's 4.2 s go" —
+//! the cross-layer attribution question the paper's performance-
+//! portability claim ultimately rests on. This module is the shared
+//! instrumentation substrate: one [`Telemetry`] recorder, created by
+//! [`crate::SiteBuilder::telemetry`] and threaded (behind an `Arc`)
+//! through the [`crate::distrib::DistributionFabric`], every
+//! [`crate::ShifterRuntime`], the [`crate::launch::LaunchScheduler`] and
+//! the [`crate::tenancy::FairShareScheduler`], so one recording covers a
+//! whole storm.
+//!
+//! Three primitives:
+//!
+//! * **Spans** — hierarchical intervals in *simulated* seconds
+//!   ([`SpanRecord`]: id, optional parent, name, category, track, attrs,
+//!   start + duration). Layers that know an operation's wall placement
+//!   emit them post-hoc; layers that only know relative costs receive
+//!   their placement through a [`TraceCtx`] (tenancy → launch) or the
+//!   trace fields on `RunOptions` (launch → runtime).
+//! * **Counters** — monotonic `u64` event counts (`fabric.requests`,
+//!   `launch.retries`, `tenancy.backfills`, …).
+//! * **Histograms** — bounded sample reservoirs with percentile
+//!   snapshots (queue depths, fetch times, waits), sharing the
+//!   nearest-rank [`crate::metrics::percentile_sorted`] path the report
+//!   structs use.
+//!
+//! Export surfaces: [`Telemetry::chrome_trace_jsonl`] writes Chrome
+//! trace-event JSONL loadable in Perfetto / `chrome://tracing` (the
+//! `--trace <path>` flag on both CLIs and the `shifterimg trace`
+//! subcommand), and [`Telemetry::snapshot_json`] serializes the
+//! counter/histogram state into the `BENCH_*` artifacts.
+//!
+//! The recorder is `Sync` (spans/counters behind a `Mutex`, ids from an
+//! `AtomicU64`) because the launch orchestrator's worker threads record
+//! concurrently. A disabled recorder (the default) rejects every record
+//! with a single branch and no allocation, so instrumented hot paths pay
+//! ~nothing when tracing is off.
+//!
+//! ```
+//! use shifter_rs::telemetry::{SpanDraft, Telemetry};
+//!
+//! let tel = Telemetry::new(true);
+//! let job = tel.span(SpanDraft {
+//!     parent: None,
+//!     category: "job",
+//!     name: "job:ubuntu:xenial",
+//!     track: "jobs",
+//!     start_secs: 0.0,
+//!     dur_secs: 4.2,
+//! });
+//! tel.span(SpanDraft {
+//!     parent: job,
+//!     category: "pull",
+//!     name: "pull:ubuntu:xenial",
+//!     track: "gateway",
+//!     start_secs: 0.0,
+//!     dur_secs: 3.1,
+//! });
+//! tel.count("fabric.requests", 1);
+//! assert_eq!(tel.spans().len(), 2);
+//! assert!(tel.chrome_trace_jsonl().lines().count() >= 3);
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::metrics::percentile_sorted;
+use crate::util::json::Json;
+
+/// Cap on retained histogram samples: the first this many observations
+/// are kept for percentile snapshots (count/sum/min/max stay exact
+/// beyond it). Deterministic — no reservoir randomness.
+pub const HISTOGRAM_SAMPLE_CAP: usize = 2048;
+
+/// One recorded span: a named interval of simulated time, optionally
+/// parented into a tree.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRecord {
+    /// Recorder-unique id (dense, allocation order).
+    pub id: u64,
+    /// Parent span id, `None` for a root.
+    pub parent: Option<u64>,
+    /// Taxonomy bucket (`"job"`, `"pull"`, `"node"`, `"run"`,
+    /// `"stage"`, `"ext"`, `"wait"`, `"app"`, `"sched"`, `"fault"`).
+    pub category: &'static str,
+    /// Human-readable span name (`"job:ubuntu:xenial"`,
+    /// `"ext:gpu:inject"`, …).
+    pub name: String,
+    /// Display lane the Chrome export maps to a thread
+    /// (`"node-00042"`, `"tenant:tenant-03"`, `"gateway"`, …).
+    pub track: String,
+    /// Simulated start time, in seconds.
+    pub start_secs: f64,
+    /// Simulated duration, in seconds (0 for instant events).
+    pub dur_secs: f64,
+    /// Key/value annotations, in insertion order.
+    pub attrs: Vec<(String, String)>,
+}
+
+impl SpanRecord {
+    /// Simulated end time (`start + dur`).
+    pub fn end_secs(&self) -> f64 {
+        self.start_secs + self.dur_secs
+    }
+}
+
+/// The borrowed form a caller hands to [`Telemetry::span`] /
+/// [`Telemetry::span_as`]. Building one allocates nothing, so a
+/// disabled recorder can reject it for the cost of a branch.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanDraft<'a> {
+    /// Parent span id, `None` for a root.
+    pub parent: Option<u64>,
+    /// Taxonomy bucket (see [`SpanRecord::category`]).
+    pub category: &'static str,
+    /// Span name.
+    pub name: &'a str,
+    /// Display lane (see [`SpanRecord::track`]).
+    pub track: &'a str,
+    /// Simulated start time, in seconds.
+    pub start_secs: f64,
+    /// Simulated duration, in seconds.
+    pub dur_secs: f64,
+}
+
+/// The trace placement one layer hands the next when the callee only
+/// knows *relative* costs: the parent span to attach to, and the
+/// absolute simulated time the callee's work begins. The tenancy
+/// scheduler passes one to
+/// [`crate::launch::LaunchScheduler::launch_on_traced`]; the launch
+/// scheduler forwards the same idea to the runtime through the
+/// `trace_parent` / `trace_start_secs` fields on
+/// [`crate::RunOptions`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TraceCtx {
+    /// Span the callee's spans should parent under.
+    pub parent: Option<u64>,
+    /// Absolute simulated second the callee's interval starts at.
+    pub start_secs: f64,
+}
+
+/// A bounded histogram: exact count/sum/min/max plus the first
+/// [`HISTOGRAM_SAMPLE_CAP`] samples for percentile snapshots.
+#[derive(Debug, Clone, Default)]
+struct Histogram {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    samples: Vec<f64>,
+}
+
+impl Histogram {
+    fn observe(&mut self, sample: f64) {
+        if self.count == 0 {
+            self.min = sample;
+            self.max = sample;
+        } else {
+            self.min = self.min.min(sample);
+            self.max = self.max.max(sample);
+        }
+        self.count += 1;
+        self.sum += sample;
+        if self.samples.len() < HISTOGRAM_SAMPLE_CAP {
+            self.samples.push(sample);
+        }
+    }
+
+    fn snapshot(&self) -> HistogramSnapshot {
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(f64::total_cmp);
+        let pct = |q: f64| -> f64 {
+            if sorted.is_empty() {
+                0.0
+            } else {
+                percentile_sorted(&sorted, q)
+            }
+        };
+        HistogramSnapshot {
+            count: self.count,
+            sum: self.sum,
+            min: self.min,
+            max: self.max,
+            mean: if self.count > 0 {
+                self.sum / self.count as f64
+            } else {
+                0.0
+            },
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            retained: self.samples.len(),
+        }
+    }
+}
+
+/// Point-in-time view of one histogram (see [`Telemetry::histogram`]).
+/// Percentiles are nearest-rank over the retained sample prefix;
+/// count/sum/min/max/mean are exact over every observation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    /// Observations ever recorded.
+    pub count: u64,
+    /// Sum of every observation.
+    pub sum: f64,
+    /// Smallest observation.
+    pub min: f64,
+    /// Largest observation.
+    pub max: f64,
+    /// Mean over every observation.
+    pub mean: f64,
+    /// Median over the retained samples.
+    pub p50: f64,
+    /// 95th percentile over the retained samples.
+    pub p95: f64,
+    /// 99th percentile over the retained samples.
+    pub p99: f64,
+    /// Samples retained for the percentile estimates (capped at
+    /// [`HISTOGRAM_SAMPLE_CAP`]).
+    pub retained: usize,
+}
+
+impl HistogramSnapshot {
+    /// JSON object for the `BENCH_*` artifacts.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("sum", Json::Num(self.sum)),
+            ("min", Json::Num(self.min)),
+            ("max", Json::Num(self.max)),
+            ("mean", Json::Num(self.mean)),
+            ("p50", Json::Num(self.p50)),
+            ("p95", Json::Num(self.p95)),
+            ("p99", Json::Num(self.p99)),
+        ])
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    spans: Vec<SpanRecord>,
+    counters: BTreeMap<String, u64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+/// The recorder: one per [`crate::Site`], shared by every layer behind
+/// an `Arc`. See the [module docs](self) for the data model and an
+/// example.
+pub struct Telemetry {
+    enabled: bool,
+    next_id: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+impl Default for Telemetry {
+    /// A disabled recorder (every record call is a no-op).
+    fn default() -> Telemetry {
+        Telemetry::new(false)
+    }
+}
+
+impl Telemetry {
+    /// A recorder; when `enabled` is false every record call no-ops at
+    /// the cost of one branch.
+    pub fn new(enabled: bool) -> Telemetry {
+        Telemetry {
+            enabled,
+            next_id: AtomicU64::new(1),
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// A permanently disabled recorder.
+    pub fn disabled() -> Telemetry {
+        Telemetry::new(false)
+    }
+
+    /// Whether record calls do anything.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Allocate a span id *without* recording anything yet — for layers
+    /// that must hand the id to children before the parent's duration
+    /// is known (record it later with [`Telemetry::span_as`]). `None`
+    /// when disabled.
+    pub fn reserve_id(&self) -> Option<u64> {
+        self.enabled
+            .then(|| self.next_id.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// Record a span with a fresh id; returns the id, or `None` when
+    /// disabled.
+    pub fn span(&self, draft: SpanDraft<'_>) -> Option<u64> {
+        let id = self.reserve_id()?;
+        self.span_as(id, draft);
+        Some(id)
+    }
+
+    /// Record a span under a previously [reserved](Telemetry::reserve_id)
+    /// id. No-op when disabled.
+    pub fn span_as(&self, id: u64, draft: SpanDraft<'_>) {
+        if !self.enabled {
+            return;
+        }
+        let record = SpanRecord {
+            id,
+            parent: draft.parent,
+            category: draft.category,
+            name: draft.name.to_string(),
+            track: draft.track.to_string(),
+            start_secs: draft.start_secs,
+            dur_secs: draft.dur_secs,
+            attrs: Vec::new(),
+        };
+        self.inner
+            .lock()
+            .expect("telemetry lock poisoned")
+            .spans
+            .push(record);
+    }
+
+    /// Attach a key/value annotation to an already recorded span.
+    /// No-op when disabled or when `id` was never recorded.
+    pub fn annotate(&self, id: u64, key: &str, value: &str) {
+        if !self.enabled {
+            return;
+        }
+        let mut inner = self.inner.lock().expect("telemetry lock poisoned");
+        if let Some(span) = inner.spans.iter_mut().rev().find(|s| s.id == id)
+        {
+            span.attrs.push((key.to_string(), value.to_string()));
+        }
+    }
+
+    /// Add `delta` to the monotonic counter `name` (created at 0 on
+    /// first touch). No-op when disabled.
+    pub fn count(&self, name: &str, delta: u64) {
+        if !self.enabled {
+            return;
+        }
+        let mut inner = self.inner.lock().expect("telemetry lock poisoned");
+        *inner.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Record one observation into the histogram `name` (created on
+    /// first touch). No-op when disabled.
+    pub fn observe(&self, name: &str, sample: f64) {
+        if !self.enabled {
+            return;
+        }
+        let mut inner = self.inner.lock().expect("telemetry lock poisoned");
+        inner
+            .histograms
+            .entry(name.to_string())
+            .or_default()
+            .observe(sample);
+    }
+
+    /// Current value of counter `name` (0 if never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .expect("telemetry lock poisoned")
+            .counters
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Every counter, in name order.
+    pub fn counters(&self) -> Vec<(String, u64)> {
+        self.inner
+            .lock()
+            .expect("telemetry lock poisoned")
+            .counters
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect()
+    }
+
+    /// Snapshot of histogram `name`, if it was ever observed.
+    pub fn histogram(&self, name: &str) -> Option<HistogramSnapshot> {
+        self.inner
+            .lock()
+            .expect("telemetry lock poisoned")
+            .histograms
+            .get(name)
+            .map(Histogram::snapshot)
+    }
+
+    /// Every recorded span, sorted by `(start_secs, id)` — worker
+    /// threads record concurrently, so raw insertion order is not
+    /// deterministic but this view is.
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        let mut spans = self
+            .inner
+            .lock()
+            .expect("telemetry lock poisoned")
+            .spans
+            .clone();
+        spans.sort_by(|a, b| {
+            a.start_secs.total_cmp(&b.start_secs).then(a.id.cmp(&b.id))
+        });
+        spans
+    }
+
+    /// Number of spans recorded so far.
+    pub fn span_count(&self) -> usize {
+        self.inner.lock().expect("telemetry lock poisoned").spans.len()
+    }
+
+    /// Latest end time (`start + dur`) over the recorded spans whose
+    /// `parent` is `parent` — how a caller closes a parent span around
+    /// children emitted by deeper layers. `None` when no child exists.
+    pub fn child_span_end(&self, parent: u64) -> Option<f64> {
+        self.inner
+            .lock()
+            .expect("telemetry lock poisoned")
+            .spans
+            .iter()
+            .filter(|s| s.parent == Some(parent))
+            .map(SpanRecord::end_secs)
+            .max_by(f64::total_cmp)
+    }
+
+    /// Serialize the whole recording as Chrome trace-event JSONL: one
+    /// JSON event per line — `ph:"M"` thread-name metadata per track,
+    /// `ph:"X"` complete events per span (`ts`/`dur` in microseconds of
+    /// simulated time), and `ph:"C"` counter events at the trace end.
+    /// Load the file in Perfetto (<https://ui.perfetto.dev>) or
+    /// `chrome://tracing`.
+    pub fn chrome_trace_jsonl(&self) -> String {
+        let spans = self.spans();
+        let mut tracks: Vec<&str> = Vec::new();
+        for s in &spans {
+            if !tracks.contains(&s.track.as_str()) {
+                tracks.push(&s.track);
+            }
+        }
+        tracks.sort_unstable();
+        let tid_of = |track: &str| -> f64 {
+            (tracks.iter().position(|t| *t == track).unwrap_or(0) + 1)
+                as f64
+        };
+        let mut out = String::new();
+        for track in &tracks {
+            let meta = Json::obj(vec![
+                ("name", Json::str("thread_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(tid_of(track))),
+                ("args", Json::obj(vec![("name", Json::str(*track))])),
+            ]);
+            out.push_str(&meta.to_string());
+            out.push('\n');
+        }
+        let mut trace_end_us = 0.0f64;
+        for s in &spans {
+            trace_end_us = trace_end_us.max(s.end_secs() * 1e6);
+            let mut args = vec![
+                ("id", Json::Num(s.id as f64)),
+                (
+                    "parent",
+                    s.parent.map_or(Json::Null, |p| Json::Num(p as f64)),
+                ),
+            ];
+            for (k, v) in &s.attrs {
+                args.push((k.as_str(), Json::str(v.as_str())));
+            }
+            let event = Json::obj(vec![
+                ("name", Json::str(s.name.as_str())),
+                ("cat", Json::str(s.category)),
+                ("ph", Json::str("X")),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(tid_of(&s.track))),
+                ("ts", Json::Num(s.start_secs * 1e6)),
+                ("dur", Json::Num(s.dur_secs * 1e6)),
+                ("args", Json::obj(args)),
+            ]);
+            out.push_str(&event.to_string());
+            out.push('\n');
+        }
+        for (name, value) in self.counters() {
+            let event = Json::obj(vec![
+                ("name", Json::str(name.as_str())),
+                ("ph", Json::str("C")),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(0.0)),
+                ("ts", Json::Num(trace_end_us)),
+                (
+                    "args",
+                    Json::obj(vec![("value", Json::Num(value as f64))]),
+                ),
+            ]);
+            out.push_str(&event.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Counter + histogram state as one JSON object — the shape the
+    /// `BENCH_*` artifacts embed under their `"telemetry"` key:
+    /// `{"spans": N, "counters": {...}, "histograms": {name: {...}}}`.
+    pub fn snapshot_json(&self) -> Json {
+        let inner = self.inner.lock().expect("telemetry lock poisoned");
+        let counters = Json::Obj(
+            inner
+                .counters
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                .collect(),
+        );
+        let histograms = Json::Obj(
+            inner
+                .histograms
+                .iter()
+                .map(|(k, h)| (k.clone(), h.snapshot().to_json()))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("spans", Json::Num(inner.spans.len() as f64)),
+            ("counters", counters),
+            ("histograms", histograms),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn draft<'a>(
+        parent: Option<u64>,
+        name: &'a str,
+        start: f64,
+        dur: f64,
+    ) -> SpanDraft<'a> {
+        SpanDraft {
+            parent,
+            category: "test",
+            name,
+            track: "t0",
+            start_secs: start,
+            dur_secs: dur,
+        }
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let tel = Telemetry::disabled();
+        assert!(!tel.enabled());
+        assert_eq!(tel.reserve_id(), None);
+        assert_eq!(tel.span(draft(None, "x", 0.0, 1.0)), None);
+        tel.count("c", 3);
+        tel.observe("h", 1.0);
+        assert_eq!(tel.span_count(), 0);
+        assert_eq!(tel.counter("c"), 0);
+        assert!(tel.histogram("h").is_none());
+        assert_eq!(tel.chrome_trace_jsonl(), "");
+    }
+
+    #[test]
+    fn span_tree_and_child_end() {
+        let tel = Telemetry::new(true);
+        let root = tel.reserve_id().unwrap();
+        let a = tel.span(draft(Some(root), "a", 0.0, 2.0)).unwrap();
+        let b = tel.span(draft(Some(root), "b", 2.0, 3.0)).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(tel.child_span_end(root), Some(5.0));
+        tel.span_as(root, draft(None, "root", 0.0, 5.0));
+        tel.annotate(root, "k", "v");
+        let spans = tel.spans();
+        assert_eq!(spans.len(), 3);
+        // sorted by (start, id): root and a start together, root has the
+        // smaller id because it was reserved first
+        assert_eq!(spans[0].name, "root");
+        assert_eq!(spans[0].attrs, vec![("k".into(), "v".into())]);
+        assert_eq!(spans[2].parent, Some(root));
+        assert_eq!(tel.child_span_end(a), None);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let tel = Telemetry::new(true);
+        tel.count("fabric.requests", 1);
+        tel.count("fabric.requests", 2);
+        tel.count("other", 0);
+        assert_eq!(tel.counter("fabric.requests"), 3);
+        assert_eq!(tel.counter("other"), 0);
+        assert_eq!(
+            tel.counters(),
+            vec![
+                ("fabric.requests".to_string(), 3),
+                ("other".to_string(), 0)
+            ]
+        );
+    }
+
+    #[test]
+    fn histogram_snapshot_percentiles() {
+        let tel = Telemetry::new(true);
+        for i in 1..=100 {
+            tel.observe("h", f64::from(i));
+        }
+        let snap = tel.histogram("h").unwrap();
+        assert_eq!(snap.count, 100);
+        assert_eq!(snap.min, 1.0);
+        assert_eq!(snap.max, 100.0);
+        assert_eq!(snap.p50, 50.0);
+        assert_eq!(snap.p99, 99.0);
+        assert!((snap.mean - 50.5).abs() < 1e-12);
+        assert_eq!(snap.retained, 100);
+    }
+
+    #[test]
+    fn histogram_caps_retained_samples_but_counts_all() {
+        let tel = Telemetry::new(true);
+        for i in 0..(HISTOGRAM_SAMPLE_CAP + 100) {
+            tel.observe("h", i as f64);
+        }
+        let snap = tel.histogram("h").unwrap();
+        assert_eq!(snap.count as usize, HISTOGRAM_SAMPLE_CAP + 100);
+        assert_eq!(snap.retained, HISTOGRAM_SAMPLE_CAP);
+        assert_eq!(snap.max, (HISTOGRAM_SAMPLE_CAP + 99) as f64);
+    }
+
+    #[test]
+    fn chrome_trace_lines_parse_and_carry_the_tree() {
+        let tel = Telemetry::new(true);
+        let root = tel.span(draft(None, "root", 0.0, 4.0)).unwrap();
+        tel.span(draft(Some(root), "child", 1.0, 2.0));
+        tel.count("launch.slots", 4);
+        let jsonl = tel.chrome_trace_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        // 1 thread-name metadata + 2 spans + 1 counter
+        assert_eq!(lines.len(), 4);
+        for line in &lines {
+            Json::parse(line).expect("every line is one JSON event");
+        }
+        let child = Json::parse(lines[2]).unwrap();
+        assert_eq!(child.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(child.get("ts").unwrap().as_f64(), Some(1e6));
+        assert_eq!(child.get("dur").unwrap().as_f64(), Some(2e6));
+        assert_eq!(
+            child.at(&["args", "parent"]).unwrap().as_u64(),
+            Some(root)
+        );
+        let counter = Json::parse(lines[3]).unwrap();
+        assert_eq!(counter.get("ph").unwrap().as_str(), Some("C"));
+        assert_eq!(
+            counter.at(&["args", "value"]).unwrap().as_u64(),
+            Some(4)
+        );
+    }
+
+    #[test]
+    fn snapshot_json_round_trips() {
+        let tel = Telemetry::new(true);
+        tel.span(draft(None, "s", 0.0, 1.0));
+        tel.count("c", 7);
+        tel.observe("h", 2.0);
+        let snap = tel.snapshot_json();
+        assert_eq!(snap.get("spans").unwrap().as_u64(), Some(1));
+        assert_eq!(
+            snap.at(&["counters", "c"]).unwrap().as_u64(),
+            Some(7)
+        );
+        assert_eq!(
+            snap.at(&["histograms", "h", "count"]).unwrap().as_u64(),
+            Some(1)
+        );
+        let back = Json::parse(&snap.to_string()).unwrap();
+        assert_eq!(back.at(&["counters", "c"]).unwrap().as_u64(), Some(7));
+    }
+
+    #[test]
+    fn recorder_is_shareable_across_threads() {
+        use std::sync::Arc;
+        let tel = Arc::new(Telemetry::new(true));
+        std::thread::scope(|scope| {
+            for w in 0..4 {
+                let tel = Arc::clone(&tel);
+                scope.spawn(move || {
+                    for i in 0..25 {
+                        tel.span(SpanDraft {
+                            parent: None,
+                            category: "test",
+                            name: &format!("w{w}-{i}"),
+                            track: "t",
+                            start_secs: f64::from(i),
+                            dur_secs: 1.0,
+                        });
+                        tel.count("n", 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(tel.span_count(), 100);
+        assert_eq!(tel.counter("n"), 100);
+        // ids are unique
+        let mut ids: Vec<u64> =
+            tel.spans().iter().map(|s| s.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 100);
+    }
+}

@@ -36,6 +36,7 @@ use crate::distrib::DistributionFabric;
 use crate::launch::{LaunchCluster, LaunchScheduler, RetryPolicy};
 use crate::registry::Registry;
 use crate::shifter::ExtensionRegistry;
+use crate::telemetry::{SpanDraft, Telemetry, TraceCtx};
 use crate::wlm::fairshare::ShareLedger;
 
 use super::policy::{SchedulingPolicy, DEFAULT_POLICY};
@@ -96,6 +97,7 @@ pub struct FairShareScheduler<'a> {
     retry: RetryPolicy,
     config: Option<UdiRootConfig>,
     extensions: Option<Arc<ExtensionRegistry>>,
+    telemetry: Option<Arc<Telemetry>>,
 }
 
 impl<'a> FairShareScheduler<'a> {
@@ -113,6 +115,7 @@ impl<'a> FairShareScheduler<'a> {
             retry: RetryPolicy::strict(),
             config: None,
             extensions: None,
+            telemetry: None,
         }
     }
 
@@ -156,6 +159,21 @@ impl<'a> FairShareScheduler<'a> {
         self
     }
 
+    /// Share a telemetry recorder (see DESIGN.md S23): the storm emits
+    /// one `job` root span per tenant job (arrival → completion) with
+    /// `wait`/`node`/`app` children, instant `pass` spans on the
+    /// scheduler track, and the `tenancy.*` decision counters
+    /// (starts, backfills, starvation, wait histogram). The recorder is
+    /// forwarded to the per-job launches, so node/stage/extension spans
+    /// stitch under each job's root.
+    pub fn with_telemetry(
+        mut self,
+        telemetry: Arc<Telemetry>,
+    ) -> FairShareScheduler<'a> {
+        self.telemetry = Some(telemetry);
+        self
+    }
+
     /// Run the whole `jobs` stream to completion over `fabric` and
     /// aggregate the outcome. Jobs may arrive in any order; the stream is
     /// processed by arrival time.
@@ -171,6 +189,9 @@ impl<'a> FairShareScheduler<'a> {
         }
         if let Some(extensions) = &self.extensions {
             launcher = launcher.with_extensions(Arc::clone(extensions));
+        }
+        if let Some(telemetry) = &self.telemetry {
+            launcher = launcher.with_telemetry(Arc::clone(telemetry));
         }
         let mut order: Vec<usize> = (0..jobs.len()).collect();
         order.sort_by(|&a, &b| {
@@ -312,6 +333,18 @@ impl<'a> FairShareScheduler<'a> {
         records: &mut [Option<JobRecord>],
     ) {
         let capacity = self.cluster.total_nodes();
+        let tele = self.telemetry.as_ref().filter(|x| x.enabled());
+        if let Some(x) = tele {
+            x.count("tenancy.passes", 1);
+            x.span(SpanDraft {
+                parent: None,
+                category: "sched",
+                name: "pass",
+                track: "scheduler",
+                start_secs: t,
+                dur_secs: 0.0,
+            });
+        }
         let ordered = self.ordered_queue(t, queue, jobs, ledger);
 
         // drop jobs that can never run anywhere
@@ -406,7 +439,21 @@ impl<'a> FairShareScheduler<'a> {
             for n in &nodes {
                 free.remove(n);
             }
-            match launcher.launch_on(fabric, &j.spec, &nodes) {
+            // the job's root span is reserved up front so the launch's
+            // node spans (and the runtime's stage spans below them)
+            // parent under it; it is recorded once the completion time
+            // is known
+            let root = tele.and_then(|x| x.reserve_id());
+            let launched = launcher.launch_on_traced(
+                fabric,
+                &j.spec,
+                &nodes,
+                TraceCtx {
+                    parent: root,
+                    start_secs: t,
+                },
+            );
+            match launched {
                 Ok(launch) => {
                     let overhead =
                         launch.total_stats().map_or(0.0, |s| s.worst);
@@ -428,6 +475,11 @@ impl<'a> FairShareScheduler<'a> {
                         failed_slots: launch.failed(),
                         error: None,
                     });
+                    if let (Some(x), Some(root_id)) = (tele, root) {
+                        self.emit_job_spans(
+                            x, root_id, j, t, overhead, service, backfilled,
+                        );
+                    }
                     running.push(Running {
                         idx,
                         nodes,
@@ -436,10 +488,77 @@ impl<'a> FairShareScheduler<'a> {
                 }
                 Err(e) => {
                     free.extend(nodes);
+                    if let Some(x) = tele {
+                        x.count("tenancy.failed_jobs", 1);
+                    }
                     records[idx] =
                         Some(failed_record(j, t, &e.to_string()));
                 }
             }
+        }
+    }
+
+    /// Record one started job's span family: the `job` root spanning
+    /// arrival → completion on its tenant's track, a `wait` child over
+    /// the queueing interval, and an `app` child over the application's
+    /// own runtime (which begins once the worst node finished its stage
+    /// pipeline) — together with the launch's node spans these tile the
+    /// root, so trace coverage of reported wall time is complete.
+    #[allow(clippy::too_many_arguments)]
+    fn emit_job_spans(
+        &self,
+        tele: &Telemetry,
+        root_id: u64,
+        j: &TenantJob,
+        t: f64,
+        overhead: f64,
+        service: f64,
+        backfilled: bool,
+    ) {
+        let track = format!("tenant:{}", j.tenant);
+        let wait = t - j.arrival_secs;
+        tele.span_as(
+            root_id,
+            SpanDraft {
+                parent: None,
+                category: "job",
+                name: &format!("job:{}/{:04}", j.tenant, j.id),
+                track: &track,
+                start_secs: j.arrival_secs,
+                dur_secs: wait + service,
+            },
+        );
+        tele.annotate(root_id, "image", &j.spec.image);
+        tele.annotate(root_id, "width", &j.spec.nodes.to_string());
+        if backfilled {
+            tele.annotate(root_id, "backfilled", "true");
+        }
+        if wait > EPS {
+            tele.span(SpanDraft {
+                parent: Some(root_id),
+                category: "wait",
+                name: "wait",
+                track: &track,
+                start_secs: j.arrival_secs,
+                dur_secs: wait,
+            });
+        }
+        tele.span(SpanDraft {
+            parent: Some(root_id),
+            category: "app",
+            name: &format!("app:{}", j.spec.image),
+            track: &track,
+            start_secs: t + overhead,
+            dur_secs: service - overhead,
+        });
+        tele.count("tenancy.starts", 1);
+        if backfilled {
+            tele.count("tenancy.backfills", 1);
+        }
+        tele.observe("tenancy.wait_secs", wait);
+        // SLURM-style starvation signal: stretch = turnaround / service
+        if service > EPS && (wait + service) / service > 10.0 {
+            tele.count("tenancy.starvation", 1);
         }
     }
 }
@@ -641,6 +760,63 @@ mod tests {
             .as_deref()
             .unwrap()
             .contains("wider than the cluster"));
+    }
+
+    #[test]
+    fn telemetry_stitches_job_wait_node_and_app_spans() {
+        let (cluster, registry, _) = setup(8);
+        let tel = Arc::new(Telemetry::new(true));
+        let mut fabric = DistributionFabric::new(2, LustreFs::piz_daint())
+            .with_telemetry(Arc::clone(&tel));
+        // same contention shape as the backfill test: job 2 backfills
+        let jobs = vec![
+            job(0, 0, 0.0, 6, 1000.0),
+            job(1, 1, 1.0, 8, 1000.0),
+            job(2, 2, 2.0, 2, 100.0),
+        ];
+        let report = FairShareScheduler::new(&cluster, &registry)
+            .with_telemetry(Arc::clone(&tel))
+            .run(&mut fabric, &jobs);
+        assert_eq!(report.completed(), 3);
+
+        let spans = tel.spans();
+        let roots: Vec<_> =
+            spans.iter().filter(|s| s.category == "job").collect();
+        assert_eq!(roots.len(), 3, "exactly one root span per tenant job");
+        for rec in &report.records {
+            let root = roots
+                .iter()
+                .find(|s| s.name == format!("job:{}/{:04}", rec.tenant, rec.id))
+                .expect("root span for every record");
+            assert_eq!(root.parent, None);
+            assert!((root.start_secs - rec.arrival_secs).abs() < 1e-9);
+            assert!((root.end_secs() - rec.end_secs).abs() < 1e-6);
+            let children: Vec<_> = spans
+                .iter()
+                .filter(|s| s.parent == Some(root.id))
+                .collect();
+            // node spans for every slot, an app span, and (for queued
+            // jobs) a wait span
+            assert_eq!(
+                children.iter().filter(|s| s.category == "node").count(),
+                rec.width as usize
+            );
+            assert_eq!(
+                children.iter().filter(|s| s.category == "app").count(),
+                1
+            );
+            if rec.wait_secs > 1.0 {
+                assert!(children.iter().any(|s| s.category == "wait"));
+            }
+        }
+        assert_eq!(tel.counter("tenancy.starts"), 3);
+        assert_eq!(tel.counter("tenancy.backfills"), 1);
+        assert!(tel.counter("tenancy.passes") >= 3);
+        assert_eq!(tel.histogram("tenancy.wait_secs").unwrap().count, 3);
+        // scheduler decisions land on their own track as instant spans
+        assert!(spans
+            .iter()
+            .any(|s| s.category == "sched" && s.track == "scheduler"));
     }
 
     #[test]

@@ -1,0 +1,302 @@
+//! Integration: end-to-end telemetry (DESIGN.md S23) — a heterogeneous
+//! `Site::launch` emits exactly one `job`-rooted span tree with
+//! parent-child time containment and one injection span per activated
+//! host extension; a multi-tenant storm's Chrome trace-event JSONL
+//! parses line by line and its span tree covers >= 95% of every job's
+//! reported wall time; a site built without telemetry records nothing.
+
+use std::collections::BTreeMap;
+
+use shifter_rs::launch::{JobSpec, RetryPolicy};
+use shifter_rs::telemetry::SpanRecord;
+use shifter_rs::tenancy::TrafficModel;
+use shifter_rs::util::json::Json;
+use shifter_rs::{Site, SystemProfile};
+
+const EPS: f64 = 1e-6;
+
+/// Index spans by id and assert the tree invariants every trace must
+/// hold: unique ids, existing parents, and child intervals contained in
+/// their parent's interval.
+fn assert_well_formed_tree(spans: &[SpanRecord]) {
+    let mut by_id: BTreeMap<u64, &SpanRecord> = BTreeMap::new();
+    for s in spans {
+        assert!(
+            by_id.insert(s.id, s).is_none(),
+            "span id {} recorded twice",
+            s.id
+        );
+    }
+    for s in spans {
+        let Some(pid) = s.parent else { continue };
+        let parent = by_id
+            .get(&pid)
+            .unwrap_or_else(|| panic!("span {} orphaned: no parent {pid}", s.id));
+        assert!(
+            s.start_secs >= parent.start_secs - EPS,
+            "span {} ({}) starts at {} before its parent {} ({}) at {}",
+            s.id,
+            s.name,
+            s.start_secs,
+            parent.id,
+            parent.name,
+            parent.start_secs
+        );
+        assert!(
+            s.end_secs() <= parent.end_secs() + EPS,
+            "span {} ({}) ends at {} after its parent {} ({}) at {}",
+            s.id,
+            s.name,
+            s.end_secs(),
+            parent.id,
+            parent.name,
+            parent.end_secs()
+        );
+    }
+}
+
+#[test]
+fn hetero_launch_emits_one_rooted_contained_span_tree() {
+    let mut site = Site::builder()
+        .hetero_daint_linux(8)
+        .telemetry(true)
+        .build()
+        .unwrap();
+    let spec =
+        JobSpec::new("nvidia/cuda-image:8.0", &["./deviceQuery"], 8)
+            .with_gpus(1);
+    let report = site.launch(&spec).unwrap();
+    assert_eq!(report.succeeded(), 8);
+
+    let spans = site.telemetry().spans();
+    assert_well_formed_tree(&spans);
+
+    // exactly one root, and it is the job span
+    let roots: Vec<&SpanRecord> =
+        spans.iter().filter(|s| s.parent.is_none()).collect();
+    assert_eq!(roots.len(), 1, "one launch => one root span");
+    assert_eq!(roots[0].category, "job");
+    assert!(roots[0].name.contains("cuda-image"));
+
+    // the pull rides on the gateway track under the job root
+    let pull = spans
+        .iter()
+        .find(|s| s.category == "pull")
+        .expect("pull span");
+    assert_eq!(pull.parent, Some(roots[0].id));
+    assert_eq!(pull.track, "gateway");
+    assert!(pull.dur_secs > 0.0);
+
+    // one node span per slot, each parented on the job root
+    let nodes: Vec<&SpanRecord> =
+        spans.iter().filter(|s| s.category == "node").collect();
+    assert_eq!(nodes.len(), 8);
+    for n in &nodes {
+        assert_eq!(n.parent, Some(roots[0].id));
+        assert!(
+            n.start_secs >= pull.end_secs() - EPS,
+            "node execution begins after the coalesced pull"
+        );
+    }
+
+    // one injection span per activated extension, launch-report-exact
+    for (ext, activations) in report.extension_counts() {
+        let injects = spans
+            .iter()
+            .filter(|s| {
+                s.category == "ext"
+                    && s.name == format!("ext:{ext}:inject")
+            })
+            .count();
+        assert_eq!(
+            injects, activations,
+            "extension {ext}: one inject span per activation"
+        );
+    }
+    // the GPU extension really activated on every node of this job
+    assert!(report
+        .extension_counts()
+        .iter()
+        .any(|(ext, n)| *ext == "gpu" && *n == 8));
+}
+
+/// Sorted-merge union length of `intervals` clipped to `[lo, hi]`.
+fn union_len(intervals: &[(f64, f64)], lo: f64, hi: f64) -> f64 {
+    let mut clipped: Vec<(f64, f64)> = intervals
+        .iter()
+        .map(|&(a, b)| (a.max(lo), b.min(hi)))
+        .filter(|&(a, b)| b > a)
+        .collect();
+    clipped.sort_by(|x, y| x.0.total_cmp(&y.0));
+    let mut total = 0.0;
+    let mut cur: Option<(f64, f64)> = None;
+    for (a, b) in clipped {
+        match cur {
+            Some((cs, ce)) if a <= ce => cur = Some((cs, ce.max(b))),
+            Some((cs, ce)) => {
+                total += ce - cs;
+                cur = Some((a, b));
+            }
+            None => cur = Some((a, b)),
+        }
+    }
+    if let Some((cs, ce)) = cur {
+        total += ce - cs;
+    }
+    total
+}
+
+#[test]
+fn storm_trace_jsonl_covers_95_percent_of_every_job() {
+    // the same shape `shifterimg trace --tenants 4 --jobs 32` replays
+    let mut site = Site::builder()
+        .profile(SystemProfile::piz_daint())
+        .nodes(64)
+        .telemetry(true)
+        .retry_policy(RetryPolicy::strict())
+        .build()
+        .unwrap();
+    let model = TrafficModel {
+        tenants: 4,
+        jobs: 32,
+        ..site.default_traffic()
+    };
+    let report = site.storm(&model);
+    assert_eq!(report.failed(), 0);
+    assert_well_formed_tree(&site.telemetry().spans());
+
+    let jsonl = site.telemetry().chrome_trace_jsonl();
+    struct Ev {
+        ts: f64,
+        dur: f64,
+        parent: Option<u64>,
+        cat: String,
+    }
+    let mut events: BTreeMap<u64, Ev> = BTreeMap::new();
+    let (mut meta_lines, mut counter_lines) = (0usize, 0usize);
+    for line in jsonl.lines() {
+        let v = Json::parse(line).expect("every trace line is valid JSON");
+        match v.get("ph").and_then(Json::as_str) {
+            Some("M") => {
+                meta_lines += 1;
+                assert_eq!(
+                    v.get("name").and_then(Json::as_str),
+                    Some("thread_name")
+                );
+                assert!(v
+                    .at(&["args", "name"])
+                    .and_then(Json::as_str)
+                    .is_some_and(|n| !n.is_empty()));
+            }
+            Some("C") => {
+                counter_lines += 1;
+                assert!(v
+                    .at(&["args", "value"])
+                    .and_then(Json::as_f64)
+                    .is_some());
+            }
+            Some("X") => {
+                let id = v
+                    .at(&["args", "id"])
+                    .and_then(Json::as_u64)
+                    .expect("span event carries its id");
+                let parent = match v.at(&["args", "parent"]) {
+                    Some(Json::Null) | None => None,
+                    Some(p) => Some(p.as_u64().expect("numeric parent")),
+                };
+                events.insert(
+                    id,
+                    Ev {
+                        ts: v
+                            .get("ts")
+                            .and_then(Json::as_f64)
+                            .expect("ts"),
+                        dur: v
+                            .get("dur")
+                            .and_then(Json::as_f64)
+                            .expect("dur"),
+                        parent,
+                        cat: v
+                            .get("cat")
+                            .and_then(Json::as_str)
+                            .expect("cat")
+                            .to_string(),
+                    },
+                );
+            }
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+    assert!(meta_lines > 0, "thread_name metadata present");
+    assert!(counter_lines > 0, "counter events present");
+
+    // transitive children of each job root (spans nest at most a few
+    // levels: job -> pull/wait/node/app -> run -> stage/ext)
+    let mut children: BTreeMap<u64, Vec<u64>> = BTreeMap::new();
+    for (id, e) in &events {
+        if let Some(p) = e.parent {
+            children.entry(p).or_default().push(*id);
+        }
+    }
+    let roots: Vec<u64> = events
+        .iter()
+        .filter(|(_, e)| e.parent.is_none() && e.cat == "job")
+        .map(|(id, _)| *id)
+        .collect();
+    assert_eq!(roots.len(), 32, "one root span per storm job");
+
+    for root in roots {
+        let job = &events[&root];
+        assert!(job.dur > 0.0, "job {root} has wall time");
+        let mut intervals: Vec<(f64, f64)> = Vec::new();
+        let mut stack: Vec<u64> = children
+            .get(&root)
+            .cloned()
+            .unwrap_or_default();
+        while let Some(id) = stack.pop() {
+            let e = &events[&id];
+            intervals.push((e.ts, e.ts + e.dur));
+            if let Some(kids) = children.get(&id) {
+                stack.extend(kids.iter().copied());
+            }
+        }
+        assert!(
+            !intervals.is_empty(),
+            "job {root} has descendant spans"
+        );
+        let covered = union_len(&intervals, job.ts, job.ts + job.dur);
+        let coverage = covered / job.dur;
+        assert!(
+            coverage >= 0.95,
+            "job {root}: descendants cover {:.1}% of its wall time",
+            coverage * 100.0
+        );
+    }
+}
+
+#[test]
+fn disabled_telemetry_records_nothing_across_the_stack() {
+    let mut site = Site::builder()
+        .profile(SystemProfile::piz_daint())
+        .nodes(8)
+        .build()
+        .unwrap();
+    site.pull("ubuntu:xenial").unwrap();
+    site.launch(&JobSpec::new("ubuntu:xenial", &["true"], 8))
+        .unwrap();
+    let model = TrafficModel {
+        tenants: 2,
+        jobs: 4,
+        ..site.default_traffic()
+    };
+    let report = site.storm(&model);
+    assert_eq!(report.failed(), 0);
+
+    let tel = site.telemetry();
+    assert!(!tel.enabled());
+    assert_eq!(tel.span_count(), 0);
+    assert!(tel.counters().is_empty());
+    assert_eq!(tel.chrome_trace_jsonl(), "");
+    let snap = tel.snapshot_json();
+    assert_eq!(snap.get("spans").and_then(Json::as_u64), Some(0));
+}

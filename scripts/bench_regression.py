@@ -1,0 +1,173 @@
+#!/usr/bin/env python3
+"""Bench regression gate: compare fresh BENCH_* artifacts to baselines.
+
+The simulation metrics in the bench artifacts are deterministic per
+(seed, knobs): identical inputs produce identical timings, so any drift
+is a real behavioral change. This script compares an allowlist of
+hot-path metrics in freshly produced artifacts (``rust/BENCH_launch.json``,
+``rust/BENCH_extensions.json``) against checked-in baselines under
+``rust/bench_baselines/`` and fails when a metric regressed (grew) past
+the tolerance (default 15%). Improvements and sub-tolerance jitter pass,
+with a note.
+
+Baselines must be produced with the same knobs CI uses (see
+.github/workflows/ci.yml bench-smoke: LAUNCH_SCALE_NODES=256,
+EXTENSION_OVERHEAD_NODES=64); artifacts whose ``max_nodes`` differs from
+the baseline are skipped with a notice instead of mis-compared.
+
+Usage:
+    python3 scripts/bench_regression.py [--tolerance 0.15] \
+        [--baseline-dir rust/bench_baselines] [--update] ARTIFACT...
+
+``--update`` records the current artifacts as the new baselines (run it
+locally with the CI env knobs, then commit the result). A missing
+baseline is a bootstrap, not a failure: the gate passes with a notice
+asking for ``--update``.
+"""
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+
+def fmt(v):
+    return f"{v:.6g}"
+
+
+def launch_metrics(doc):
+    """(config key, metric name) -> value for BENCH_launch.json."""
+    out = {}
+    for cfg in doc.get("configs", []):
+        key = "{}/{}/{}".format(
+            cfg.get("partitions"), int(cfg.get("nodes", 0)), cfg.get("phase")
+        )
+        report = cfg.get("report", {})
+        total = report.get("total", {})
+        for metric in ("p50_secs", "p95_secs", "p99_secs", "worst_secs"):
+            if metric in total:
+                out[f"{key}.total.{metric}"] = total[metric]
+        pull = report.get("pull", {})
+        for metric in ("queue_wait_secs", "turnaround_secs"):
+            if metric in pull:
+                out[f"{key}.pull.{metric}"] = pull[metric]
+    return out
+
+
+def extensions_metrics(doc):
+    """(row key, metric name) -> value for BENCH_extensions.json."""
+    out = {}
+    for row in doc.get("inject_cost", []):
+        key = "inject/{}/{}".format(
+            row.get("extension"), int(row.get("nodes", 0))
+        )
+        out[f"{key}.inject_secs"] = row.get("inject_secs", 0.0)
+    for row in doc.get("osu_net_split", []):
+        key = "osu/{}B".format(int(row.get("size_bytes", 0)))
+        out[f"{key}.host_fabric_us"] = row.get("host_fabric_us", 0.0)
+        out[f"{key}.tcp_fallback_us"] = row.get("tcp_fallback_us", 0.0)
+    return out
+
+
+EXTRACTORS = {
+    "launch_scale": launch_metrics,
+    "extension_overhead": extensions_metrics,
+}
+
+
+def compare(name, fresh, base, tolerance):
+    """Return a list of failure strings for one artifact pair."""
+    extractor = EXTRACTORS.get(fresh.get("bench"))
+    if extractor is None:
+        print(f"  {name}: no allowlist for bench "
+              f"'{fresh.get('bench')}', skipping")
+        return []
+    if fresh.get("max_nodes") != base.get("max_nodes"):
+        print(f"  {name}: knob mismatch (max_nodes {fresh.get('max_nodes')} "
+              f"vs baseline {base.get('max_nodes')}), skipping — regenerate "
+              f"the baseline with the CI knobs")
+        return []
+
+    fresh_m, base_m = extractor(fresh), extractor(base)
+    failures = []
+    regressions = improvements = stable = 0
+    for key, expected in sorted(base_m.items()):
+        if key not in fresh_m:
+            failures.append(f"{name}: metric {key} disappeared")
+            continue
+        actual = fresh_m[key]
+        if expected <= 0.0:
+            # a zero-cost baseline only regresses by becoming nonzero
+            if actual > 0.0:
+                failures.append(
+                    f"{name}: {key} was free, now {fmt(actual)}"
+                )
+            continue
+        rel = (actual - expected) / expected
+        if rel > tolerance:
+            regressions += 1
+            failures.append(
+                f"{name}: {key} regressed {rel * 100.0:+.1f}% "
+                f"({fmt(expected)} -> {fmt(actual)}, "
+                f"tolerance {tolerance * 100.0:.0f}%)"
+            )
+        elif rel < -tolerance:
+            improvements += 1
+        else:
+            stable += 1
+    print(f"  {name}: {len(base_m)} metrics — {stable} stable, "
+          f"{improvements} improved, {regressions} regressed")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="compare BENCH_* artifacts against checked-in baselines"
+    )
+    ap.add_argument("artifacts", nargs="+",
+                    help="fresh artifact paths (e.g. rust/BENCH_launch.json)")
+    ap.add_argument("--baseline-dir", default="rust/bench_baselines")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="relative growth allowed before failing (0.15 = 15%%)")
+    ap.add_argument("--update", action="store_true",
+                    help="record the current artifacts as the new baselines")
+    args = ap.parse_args()
+
+    failures = []
+    bootstrap = []
+    for artifact in args.artifacts:
+        name = os.path.basename(artifact)
+        baseline = os.path.join(args.baseline_dir, name)
+        if not os.path.exists(artifact):
+            failures.append(f"{name}: fresh artifact {artifact} not found "
+                            f"(did the bench run?)")
+            continue
+        if args.update:
+            os.makedirs(args.baseline_dir, exist_ok=True)
+            shutil.copyfile(artifact, baseline)
+            print(f"  {name}: baseline updated -> {baseline}")
+            continue
+        if not os.path.exists(baseline):
+            bootstrap.append(name)
+            continue
+        with open(artifact) as f:
+            fresh = json.load(f)
+        with open(baseline) as f:
+            base = json.load(f)
+        failures.extend(compare(name, fresh, base, args.tolerance))
+
+    if bootstrap:
+        print(f"bootstrap: no baseline yet for {', '.join(bootstrap)} — "
+              f"run scripts/bench_regression.py --update with the CI env "
+              f"knobs and commit {args.baseline_dir}/")
+    if failures:
+        print("\nbench regression gate FAILED:")
+        for f in failures:
+            print(f"  {f}")
+        sys.exit(1)
+    print("bench regression gate passed")
+
+
+if __name__ == "__main__":
+    main()
