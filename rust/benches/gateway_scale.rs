@@ -129,7 +129,8 @@ fn main() {
     fabric.tick(&registry, 1e9);
     let job = fabric.cluster().status("mega-app:1.0").unwrap();
     assert_eq!(job.requesters.len(), nodes, "storm coalesces into one job");
-    let ready_secs = job.completed_at.expect("storm job completed");
+    let ready_secs =
+        job.completed_at.expect("storm job completed").as_secs_f64();
     let image = fabric.resolve("mega-app:1.0").unwrap();
 
     let node_latencies = |mode: &str, queue_secs: f64| -> Stats {

@@ -1,0 +1,199 @@
+//! sim_scale — the virtual-time kernel scale proof (DESIGN.md S24):
+//! schedule a week-long, million-job storm over a 100k-node cluster
+//! entirely in virtual time and demand it completes in *seconds* of
+//! wall time. This is the acceptance bench of the discrete-event
+//! kernel: the old wall-clock worker pool could never replay a week of
+//! cluster time faster than real time, the event queue replays it at
+//! whatever rate the host can pop events.
+//!
+//! Asserted:
+//!   * every synthesized job completes — the kernel drains the full
+//!     arrival/completion event stream with nothing stranded;
+//!   * the virtual horizon really is week-scale while wall time stays
+//!     under `SIM_SCALE_BUDGET_SECS` (default 60 s);
+//!   * the virtual-over-wall speedup is large (> 1000x) — the bench is
+//!     meaningless if the simulation merely keeps pace with reality.
+//!
+//! Artifacts land in `BENCH_simkernel.json`: wait/turnaround latency
+//! percentiles plus binned utilization and throughput curves over the
+//! week, computed directly from the job records (a million-record JSON
+//! tree would dwarf the numbers we care about). Knobs:
+//! `SIM_SCALE_NODES`, `SIM_SCALE_JOBS`, `SIM_SCALE_BUDGET_SECS` (CI
+//! runs a reduced job count under the same node scale).
+
+use std::time::Instant;
+
+use shifter_rs::tenancy::TrafficModel;
+use shifter_rs::util::json::Json;
+use shifter_rs::{Site, StormSpec};
+
+const SHARDS: usize = 8;
+const TENANTS: u32 = 32;
+const FULL_NODES: u32 = 100_000;
+const FULL_JOBS: u32 = 1_000_000;
+/// The nominal virtual horizon: one week of cluster time.
+const WEEK_SECS: f64 = 604_800.0;
+/// Widest synthesized job. Small widths keep the storm arrival-bound
+/// (~4k busy nodes of 100k), which is exactly the regime that stresses
+/// the event queue rather than the packing heuristics.
+const MAX_WIDTH: u32 = 4;
+/// Utilization/throughput curve resolution.
+const BINS: usize = 56;
+
+fn env_u32(name: &str, full: u32) -> u32 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(full)
+        .max(1)
+}
+
+fn env_f64(name: &str, full: f64) -> f64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(full)
+}
+
+/// Percentile of a pre-sorted sample (nearest-rank).
+fn pctl(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((sorted.len() as f64) * q).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+fn pctl_json(sorted: &[f64]) -> Json {
+    Json::obj(vec![
+        ("p50_secs", Json::Num(pctl(sorted, 0.50))),
+        ("p90_secs", Json::Num(pctl(sorted, 0.90))),
+        ("p99_secs", Json::Num(pctl(sorted, 0.99))),
+        ("worst_secs", Json::Num(sorted.last().copied().unwrap_or(0.0))),
+    ])
+}
+
+fn main() {
+    let nodes = env_u32("SIM_SCALE_NODES", FULL_NODES).max(MAX_WIDTH);
+    let jobs = env_u32("SIM_SCALE_JOBS", FULL_JOBS);
+    let budget = env_f64("SIM_SCALE_BUDGET_SECS", 60.0);
+    // spread the whole stream over the week: ~99.2 jobs/min at full scale
+    let rate_per_min = f64::from(jobs) / (WEEK_SECS / 60.0);
+
+    let mut site = Site::builder()
+        .nodes(nodes)
+        .gateway_shards(SHARDS)
+        // strict retry: the bench compares against a fixed budget, so
+        // per-slot timings must be deterministic
+        .retry_policy(shifter_rs::launch::RetryPolicy::strict())
+        .build()
+        .expect("valid bench site");
+
+    let spec = StormSpec::new().traffic(TrafficModel {
+        tenants: TENANTS,
+        jobs,
+        arrival_rate_per_min: rate_per_min,
+        max_width: MAX_WIDTH,
+        ..TrafficModel::default()
+    });
+
+    let wall_start = Instant::now();
+    let report = site.run_storm(&spec).expect("storm runs");
+    let wall_secs = wall_start.elapsed().as_secs_f64();
+
+    assert_eq!(
+        report.completed() as u32,
+        jobs,
+        "the kernel must drain every job's arrival and completion"
+    );
+    let virtual_secs = report.makespan_secs;
+    // the arrival rate spreads any job count over the week, so the
+    // horizon is week-scale at every knob setting
+    assert!(
+        virtual_secs > WEEK_SECS * 0.5,
+        "the virtual horizon must be commensurate with the configured \
+         week ({virtual_secs:.0}s simulated)"
+    );
+    assert!(
+        wall_secs < budget,
+        "virtual-time replay must fit the wall budget: {wall_secs:.1}s \
+         wall vs {budget:.0}s allowed ({jobs} jobs / {nodes} nodes)"
+    );
+    let speedup = virtual_secs / wall_secs.max(1e-9);
+    assert!(
+        speedup > 1000.0,
+        "simulating slower than 1000x real time defeats the kernel: \
+         {speedup:.0}x"
+    );
+
+    // latency curves, straight from the records
+    let mut waits: Vec<f64> = Vec::with_capacity(report.records.len());
+    let mut turnarounds: Vec<f64> = Vec::with_capacity(report.records.len());
+    for r in report.records.iter().filter(|r| r.ok()) {
+        waits.push(r.wait_secs);
+        turnarounds.push(r.end_secs - r.arrival_secs);
+    }
+    waits.sort_by(f64::total_cmp);
+    turnarounds.sort_by(f64::total_cmp);
+
+    // binned utilization (busy node-seconds / capacity) and completion
+    // throughput over the virtual horizon
+    let bin_w = (virtual_secs / BINS as f64).max(1e-9);
+    let mut busy = vec![0.0f64; BINS];
+    let mut done = vec![0u32; BINS];
+    for r in report.records.iter().filter(|r| r.ok()) {
+        let (s, e) = (r.start_secs, r.end_secs);
+        let first = ((s / bin_w) as usize).min(BINS - 1);
+        let last = ((e / bin_w) as usize).min(BINS - 1);
+        for (b, slot) in busy.iter_mut().enumerate().take(last + 1).skip(first)
+        {
+            let lo = s.max(b as f64 * bin_w);
+            let hi = e.min((b + 1) as f64 * bin_w);
+            if hi > lo {
+                *slot += f64::from(r.width) * (hi - lo);
+            }
+        }
+        done[last] += 1;
+    }
+    let capacity_per_bin = f64::from(nodes) * bin_w;
+    let utilization: Vec<Json> = busy
+        .iter()
+        .map(|b| Json::Num(b / capacity_per_bin))
+        .collect();
+    let throughput: Vec<Json> = done
+        .iter()
+        .map(|d| Json::Num(f64::from(*d) / (bin_w / 3600.0)))
+        .collect();
+
+    println!(
+        "sim_scale: {jobs} jobs / {nodes} nodes — {virtual_secs:.0}s \
+         virtual in {wall_secs:.2}s wall ({speedup:.0}x), wait p50 \
+         {:.1}s p99 {:.1}s, utilization {:.2}%",
+        pctl(&waits, 0.50),
+        pctl(&waits, 0.99),
+        report.utilization() * 100.0,
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("sim_scale")),
+        ("nodes", Json::Num(f64::from(nodes))),
+        ("jobs", Json::Num(f64::from(jobs))),
+        ("tenants", Json::Num(f64::from(TENANTS))),
+        ("shards", Json::Num(SHARDS as f64)),
+        ("virtual_secs", Json::Num(virtual_secs)),
+        ("wall_secs", Json::Num(wall_secs)),
+        ("budget_secs", Json::Num(budget)),
+        ("speedup", Json::Num(speedup)),
+        ("utilization_overall", Json::Num(report.utilization())),
+        ("wait", pctl_json(&waits)),
+        ("turnaround", pctl_json(&turnarounds)),
+        ("bin_secs", Json::Num(bin_w)),
+        ("utilization_curve", Json::Arr(utilization)),
+        ("throughput_jobs_per_hour", Json::Arr(throughput)),
+    ]);
+    let path = std::env::var("BENCH_SIMKERNEL_JSON")
+        .unwrap_or_else(|_| "BENCH_simkernel.json".to_string());
+    std::fs::write(&path, doc.to_string())
+        .expect("write BENCH_simkernel.json");
+    println!("wrote {path}");
+}

@@ -3,7 +3,8 @@
 //! tenants, run it twice over a 1024-node heterogeneous cluster — once
 //! under strict FIFO, once under fair-share + conservative backfill —
 //! and compare. The cluster is one `SiteBuilder` declaration (DESIGN.md
-//! S21); each policy runs via `Site::storm_with` on a fresh site.
+//! S21); each policy runs via `Site::run_storm` (one `StormSpec`
+//! replaying the same explicit stream) on a fresh site.
 //!
 //! Asserted (the ISSUE 3 acceptance criteria):
 //!   * every job completes and **no tenant starves**: the worst stretch
@@ -22,10 +23,10 @@
 
 use shifter_rs::tenancy::{
     unique_image_refs, FairShare, Fifo, SchedulingPolicy, TenancyReport,
-    TrafficModel,
+    TenantJob, TrafficModel,
 };
 use shifter_rs::util::json::Json;
-use shifter_rs::Site;
+use shifter_rs::{Site, StormSpec};
 
 const SHARDS: usize = 8;
 const TENANTS: u32 = 8;
@@ -42,27 +43,43 @@ fn env_u32(name: &str, full: u32) -> u32 {
         .max(1)
 }
 
+fn make_site(nodes: u32) -> Site {
+    Site::builder()
+        .hetero_daint_linux(nodes)
+        .gateway_shards(SHARDS)
+        // strict retry: exact pull/coalescing accounting, no
+        // straggler noise in the policy comparison
+        .retry_policy(shifter_rs::launch::RetryPolicy::strict())
+        // the artifact embeds the fair-share run's counter snapshot
+        .telemetry(true)
+        .build()
+        .expect("valid bench site")
+}
+
+/// Replay `stream` under `policy` on a fresh site (same declaration, so
+/// the fabrics start cold).
+fn run_policy(
+    nodes: u32,
+    stream: &[TenantJob],
+    policy: impl SchedulingPolicy + 'static,
+) -> (TenancyReport, Json) {
+    let mut site = make_site(nodes);
+    let report = site
+        .run_storm(
+            &StormSpec::new().job_stream(stream.to_vec()).policy(policy),
+        )
+        .expect("storm runs");
+    (report, site.telemetry().snapshot_json())
+}
+
 fn main() {
     let nodes = env_u32("TENANCY_STORM_NODES", FULL_NODES).max(2);
     let jobs = env_u32("TENANCY_STORM_JOBS", FULL_JOBS);
 
     // one stream, scheduled twice — the comparison below is only valid
-    // because both policies see the identical jobs. Each policy run gets
-    // a fresh site (same declaration) so the fabrics start cold.
-    let make_site = || -> Site {
-        Site::builder()
-            .hetero_daint_linux(nodes)
-            .gateway_shards(SHARDS)
-            // strict retry: exact pull/coalescing accounting, no
-            // straggler noise in the policy comparison
-            .retry_policy(shifter_rs::launch::RetryPolicy::strict())
-            // the artifact embeds the fair-share run's counter snapshot
-            .telemetry(true)
-            .build()
-            .expect("valid bench site")
-    };
+    // because both policies see the identical jobs.
     let stream = {
-        let site = make_site();
+        let site = make_site(nodes);
         TrafficModel {
             tenants: TENANTS,
             jobs,
@@ -81,13 +98,9 @@ fn main() {
         unique.len()
     );
 
-    let run = |policy: &dyn SchedulingPolicy| -> (TenancyReport, Json) {
-        let mut site = make_site();
-        let report = site.storm_with(&stream, policy);
-        (report, site.telemetry().snapshot_json())
-    };
-    let (fifo, _) = run(&Fifo);
-    let (fair, fair_telemetry) = run(&FairShare::default());
+    let (fifo, _) = run_policy(nodes, &stream, Fifo);
+    let (fair, fair_telemetry) =
+        run_policy(nodes, &stream, FairShare::default());
 
     for (name, report) in [("fifo", &fifo), ("fair-share", &fair)] {
         print!("{}", report.render());

@@ -41,9 +41,9 @@
 use shifter_rs::launch::JobSpec;
 use shifter_rs::metrics::Table;
 use shifter_rs::shifter::RunOptions;
-use shifter_rs::tenancy::{policy_by_name, SchedulingPolicy, TrafficModel};
+use shifter_rs::tenancy::{policy_by_name, SchedulingPolicy};
 use shifter_rs::util::cli::{CliSpec, ParsedArgs};
-use shifter_rs::{Site, SiteBuilder, SystemProfile};
+use shifter_rs::{Site, SiteBuilder, StormSpec, SystemProfile};
 
 fn usage() -> ! {
     eprintln!(
@@ -376,14 +376,13 @@ fn main() {
                     .retry_policy(shifter_rs::launch::RetryPolicy::strict())
                     .seed(knobs.seed),
             );
-            let model = TrafficModel {
-                tenants: knobs.tenants,
-                jobs: knobs.jobs,
-                arrival_rate_per_min: knobs.arrival_rate,
-                duration_secs: knobs.duration,
-                ..site.default_traffic()
-            };
-            let report = site.storm(&model);
+            let spec = StormSpec::new()
+                .tenants(knobs.tenants)
+                .jobs(knobs.jobs)
+                .arrival_rate_per_min(knobs.arrival_rate)
+                .duration_secs(knobs.duration);
+            // infallible here: the spec writes no trace artifact
+            let report = site.run_storm(&spec).expect("storm runs");
             print!("{}", report.render());
             maybe_write_trace(&site, &parsed, None);
             if report.failed() > 0 {
@@ -402,14 +401,13 @@ fn main() {
                     .seed(knobs.seed)
                     .telemetry(true),
             );
-            let model = TrafficModel {
-                tenants: knobs.tenants,
-                jobs: knobs.jobs,
-                arrival_rate_per_min: knobs.arrival_rate,
-                duration_secs: knobs.duration,
-                ..site.default_traffic()
-            };
-            let report = site.storm(&model);
+            let spec = StormSpec::new()
+                .tenants(knobs.tenants)
+                .jobs(knobs.jobs)
+                .arrival_rate_per_min(knobs.arrival_rate)
+                .duration_secs(knobs.duration);
+            // infallible here: the spec writes no trace artifact
+            let report = site.run_storm(&spec).expect("storm runs");
             print!("{}", report.render());
             let tel = site.telemetry();
             let mut counters = Table::new(

@@ -15,6 +15,7 @@ use crate::image::ImageRef;
 use crate::metrics::Stats;
 use crate::pfs::LustreFs;
 use crate::registry::Registry;
+use crate::sim::SimTime;
 use crate::util::prng::Rng;
 
 use super::cas::ContentStore;
@@ -174,6 +175,16 @@ impl GatewayCluster {
         self.shards.iter().all(|s| s.queue.drained())
     }
 
+    /// Exact simulated seconds until every shard's backlog is terminal
+    /// — the shards tick in lockstep (parallel workers), so the cluster
+    /// drains in the time of its most-loaded shard.
+    pub fn pending_secs(&self) -> f64 {
+        self.shards
+            .iter()
+            .map(|s| s.queue.pending_secs())
+            .fold(0.0, f64::max)
+    }
+
     /// Simulated time when the last completed job finished — the storm
     /// makespan once `drained()`.
     pub fn makespan_secs(&self) -> f64 {
@@ -181,12 +192,16 @@ impl GatewayCluster {
             .iter()
             .flat_map(|s| s.queue.jobs())
             .filter_map(|j| j.completed_at)
+            .map(SimTime::as_secs_f64)
             .fold(0.0, f64::max)
     }
 
-    /// Current simulated clock (all shard queues tick in lockstep).
-    pub fn now(&self) -> f64 {
-        self.shards.first().map_or(0.0, |s| s.queue.now())
+    /// Current simulated clock instant (all shard queues tick in
+    /// lockstep).
+    pub fn now(&self) -> SimTime {
+        self.shards
+            .first()
+            .map_or(SimTime::ZERO, |s| s.queue.now())
     }
 
     /// Job status for a reference (routed to the owning shard).

@@ -34,15 +34,12 @@ use crate::gateway::{GatewayError, GatewayImage, ImageSource, PullState};
 use crate::metrics::Stats;
 use crate::pfs::LustreFs;
 use crate::registry::Registry;
+use crate::sim::SimTime;
 use crate::telemetry::Telemetry;
 
 /// Default per-node squashfs cache: 32 GB of node-local storage (the
 /// RAM-backed tmpfs / local SSD slice sites give Shifter).
 pub const DEFAULT_NODE_CACHE_BYTES: u64 = 32_000_000_000;
-
-/// One blocking drain: far longer than any storm, small enough that
-/// completion timestamps keep sub-microsecond precision.
-const DRAIN_TICK_SECS: f64 = 1e9;
 
 /// Aggregated node-cache counters across every node the fabric has seen.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -176,6 +173,36 @@ impl DistributionFabric {
         self.cluster.tick(registry, dt);
     }
 
+    /// Current instant of the fabric's virtual clock (the lockstep
+    /// shard-queue clock).
+    pub fn now(&self) -> SimTime {
+        self.cluster.now()
+    }
+
+    /// Advance the fabric's clock to the absolute instant `t` — how a
+    /// virtual-time client (the tenancy kernel) aligns the shard clocks
+    /// with its own before enqueuing work. A target at or before `now`
+    /// is a no-op (clocks never move backward).
+    pub fn advance_to(&mut self, registry: &Registry, t: SimTime) {
+        let dt = t - self.now();
+        if dt > 0.0 {
+            self.tick(registry, dt);
+        }
+    }
+
+    /// Run every shard worker until its backlog is terminal, ticking by
+    /// the *exact* pending work (no magic huge-constant drains): shard
+    /// clocks end at the true completion instant, so queue-wait and
+    /// turnaround accounting stay on the one kernel timeline.
+    pub fn drain(&mut self, registry: &Registry) {
+        while !self.cluster.drained() {
+            // f64 residue can leave a sliver of a stage behind; the
+            // loop re-measures and finishes it on the next pass.
+            let dt = self.cluster.pending_secs().max(f64::EPSILON);
+            self.tick(registry, dt);
+        }
+    }
+
     /// Request and run the cluster until the job is terminal — the
     /// synchronous convenience the CLI uses. Returns the final state.
     pub fn pull_blocking(
@@ -188,7 +215,7 @@ impl DistributionFabric {
         if state.terminal() {
             return Ok(state);
         }
-        self.tick(registry, DRAIN_TICK_SECS);
+        self.drain(registry);
         Ok(self
             .cluster
             .status(reference)
@@ -258,7 +285,9 @@ impl ImageSource for DistributionFabric {
             .entry(node)
             .or_insert_with(|| NodeCache::new(self.node_cache_bytes));
         let bytes = image.squashfs.compressed_bytes;
-        let secs = match cache.fetch(image.squashfs.digest, bytes) {
+        // stamp fills/evictions with the fabric's kernel-clock instant
+        let now = self.cluster.now();
+        let secs = match cache.fetch_at(image.squashfs.digest, bytes, now) {
             CacheOutcome::Hit => {
                 self.telemetry.count("fabric.cache_hits", 1);
                 cache.warm_hit_secs()
@@ -365,7 +394,7 @@ mod tests {
             .with_telemetry(Arc::clone(&tel));
         f.request(&reg, "ubuntu:xenial", "a").unwrap();
         f.request(&reg, "ubuntu:xenial", "b").unwrap();
-        f.tick(&reg, DRAIN_TICK_SECS);
+        f.drain(&reg);
         let image = f.resolve("ubuntu:xenial").unwrap().clone();
         f.node_fetch_secs(&image, 0, 1);
         f.node_fetch_secs(&image, 0, 1);

@@ -7,6 +7,7 @@
 use std::collections::BTreeMap;
 
 use crate::pfs::{LustreFs, NodeLocalFs};
+use crate::sim::SimTime;
 
 /// Outcome of asking the cache for a squashfs blob.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -25,6 +26,8 @@ pub enum CacheOutcome {
 struct CacheEntry {
     bytes: u64,
     last_used: u64,
+    /// Virtual-time instant of the cold fill that admitted this blob.
+    filled_at: SimTime,
 }
 
 /// One node's cache.
@@ -42,6 +45,9 @@ pub struct NodeCache {
     pub misses: u64,
     /// Entries evicted to make room.
     pub evictions: u64,
+    /// Virtual-time instant of the most recent eviction, if any — the
+    /// unified kernel clock, not a private counter (DESIGN.md S24).
+    last_eviction_at: Option<SimTime>,
 }
 
 impl NodeCache {
@@ -56,6 +62,7 @@ impl NodeCache {
             hits: 0,
             misses: 0,
             evictions: 0,
+            last_eviction_at: None,
         }
     }
 
@@ -86,8 +93,23 @@ impl NodeCache {
 
     /// Look up `digest`, admitting it on miss. A blob larger than the whole
     /// cache is streamed, never admitted (it would evict everything for a
-    /// single use).
+    /// single use). Fill/eviction instants stamp as virtual time zero —
+    /// callers on the unified kernel clock use [`NodeCache::fetch_at`].
     pub fn fetch(&mut self, digest: u64, bytes: u64) -> CacheOutcome {
+        self.fetch_at(digest, bytes, SimTime::ZERO)
+    }
+
+    /// [`NodeCache::fetch`] with the fabric's virtual-time instant, so
+    /// cold fills and evictions are stamped on the one kernel clock
+    /// every other layer schedules on. LRU *ordering* still uses the
+    /// access counter (strictly monotone — simultaneous virtual-time
+    /// accesses would tie).
+    pub fn fetch_at(
+        &mut self,
+        digest: u64,
+        bytes: u64,
+        now: SimTime,
+    ) -> CacheOutcome {
         self.clock += 1;
         if let Some(entry) = self.entries.get_mut(&digest) {
             entry.last_used = self.clock;
@@ -115,11 +137,27 @@ impl NodeCache {
             CacheEntry {
                 bytes,
                 last_used: self.clock,
+                filled_at: now,
             },
         );
         self.used_bytes += bytes;
         self.evictions += evicted as u64;
+        if evicted > 0 {
+            self.last_eviction_at = Some(now);
+        }
         CacheOutcome::Miss { evicted }
+    }
+
+    /// Virtual-time instant the resident blob `digest` was cold-filled
+    /// at, if resident.
+    pub fn filled_at(&self, digest: u64) -> Option<SimTime> {
+        self.entries.get(&digest).map(|e| e.filled_at)
+    }
+
+    /// Virtual-time instant of the most recent eviction, if any ever
+    /// happened.
+    pub fn last_eviction_at(&self) -> Option<SimTime> {
+        self.last_eviction_at
     }
 
     /// Cost of a warm start: the squashfs is already local, so resolution
@@ -164,11 +202,19 @@ mod tests {
         c.fetch(2, 10 * MB);
         c.fetch(3, 10 * MB);
         c.fetch(1, 10 * MB); // touch 1 -> 2 is now the LRU
-        assert_eq!(c.fetch(4, 10 * MB), CacheOutcome::Miss { evicted: 1 });
+        assert_eq!(
+            c.fetch_at(4, 10 * MB, SimTime::from_secs(7.5)),
+            CacheOutcome::Miss { evicted: 1 }
+        );
         assert!(!c.contains(2), "LRU entry should be evicted");
         assert!(c.contains(1) && c.contains(3) && c.contains(4));
         assert_eq!(c.evictions, 1);
         assert_eq!(c.used_bytes(), 30 * MB);
+        // fills and evictions are stamped on the kernel clock
+        assert_eq!(c.filled_at(4), Some(SimTime::from_secs(7.5)));
+        assert_eq!(c.filled_at(1), Some(SimTime::ZERO));
+        assert_eq!(c.last_eviction_at(), Some(SimTime::from_secs(7.5)));
+        assert_eq!(c.filled_at(2), None);
     }
 
     #[test]

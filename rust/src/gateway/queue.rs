@@ -12,6 +12,7 @@ use std::collections::{BTreeMap, BTreeSet};
 
 use crate::image::ImageRef;
 use crate::registry::Registry;
+use crate::sim::{SimClock, SimTime};
 
 use super::{GatewayError, ImageGateway};
 
@@ -73,14 +74,15 @@ pub struct PullJob {
     durations: [f64; 4], // pulling, expanding, converting, transferring
     /// Why the job failed, when terminal-failed.
     pub error: Option<String>,
-    /// Queue clock when the job was first requested.
-    pub enqueued_at: f64,
-    /// Queue clock when the worker picked the job up (Enqueued → Pulling
-    /// transition; exact within a tick). Fast-failed jobs never wait.
-    pub started_at: Option<f64>,
-    /// Queue clock when the job reached a terminal state (exact within a
-    /// tick — the transition moment, not the tick boundary).
-    pub completed_at: Option<f64>,
+    /// Queue clock instant when the job was first requested.
+    pub enqueued_at: SimTime,
+    /// Queue clock instant when the worker picked the job up (Enqueued →
+    /// Pulling transition; exact within a tick). Fast-failed jobs never
+    /// wait.
+    pub started_at: Option<SimTime>,
+    /// Queue clock instant when the job reached a terminal state (exact
+    /// within a tick — the transition moment, not the tick boundary).
+    pub completed_at: Option<SimTime>,
 }
 
 impl PullJob {
@@ -108,7 +110,7 @@ impl PullJob {
 pub struct PullQueue {
     jobs: BTreeMap<ImageRef, PullJob>,
     fifo: Vec<ImageRef>,
-    clock: f64,
+    clock: SimClock,
     /// Every `request()` ever made (absorbed ones included) — the
     /// numerator of the coalescing ratio.
     requests: u64,
@@ -126,14 +128,42 @@ impl PullQueue {
         PullQueue {
             jobs: BTreeMap::new(),
             fifo: Vec::new(),
-            clock: 0.0,
+            clock: SimClock::new(),
             requests: 0,
         }
     }
 
-    /// Current simulated clock.
-    pub fn now(&self) -> f64 {
-        self.clock
+    /// Current simulated clock instant.
+    pub fn now(&self) -> SimTime {
+        self.clock.now()
+    }
+
+    /// Exact simulated seconds of worker time left until every queued
+    /// job is terminal (one FIFO worker: the sum over non-terminal
+    /// jobs of their remaining stage work). This is the drain size the
+    /// virtual-time kernel ticks by instead of a magic huge constant.
+    pub fn pending_secs(&self) -> f64 {
+        self.fifo
+            .iter()
+            .map(|r| {
+                let j = &self.jobs[r];
+                match j.state {
+                    PullState::Enqueued => j.durations.iter().sum(),
+                    PullState::Pulling => {
+                        j.remaining
+                            + j.durations[1]
+                            + j.durations[2]
+                            + j.durations[3]
+                    }
+                    PullState::Expanding => {
+                        j.remaining + j.durations[2] + j.durations[3]
+                    }
+                    PullState::Converting => j.remaining + j.durations[3],
+                    PullState::Transferring => j.remaining,
+                    PullState::Ready | PullState::Failed => 0.0,
+                }
+            })
+            .sum()
     }
 
     /// Enqueue a pull request from `user`. Dedup: an in-flight or READY
@@ -166,9 +196,9 @@ impl PullQueue {
                     remaining: 0.0,
                     durations: [0.0; 4],
                     error: Some(e.to_string()),
-                    enqueued_at: self.clock,
-                    started_at: Some(self.clock),
-                    completed_at: Some(self.clock),
+                    enqueued_at: self.clock.now(),
+                    started_at: Some(self.clock.now()),
+                    completed_at: Some(self.clock.now()),
                 };
                 self.jobs.insert(r.clone(), job);
                 return Ok(PullState::Failed);
@@ -194,7 +224,7 @@ impl PullQueue {
             remaining: 0.0,
             durations,
             error: None,
-            enqueued_at: self.clock,
+            enqueued_at: self.clock.now(),
             started_at: None,
             completed_at: None,
         };
@@ -212,7 +242,7 @@ impl PullQueue {
         registry: &Registry,
         mut dt: f64,
     ) {
-        self.clock += dt;
+        self.clock.advance(dt);
         while dt > 0.0 {
             // find the first non-terminal job in FIFO order
             let Some(r) = self
@@ -229,7 +259,7 @@ impl PullQueue {
                 job.remaining = job.durations[0];
                 // `dt` of the tick budget is unspent, so the worker picked
                 // the job up exactly at clock - dt.
-                job.started_at = Some(self.clock - dt);
+                job.started_at = Some(self.clock.now() - dt);
             }
             if dt < job.remaining {
                 job.remaining -= dt;
@@ -254,7 +284,7 @@ impl PullQueue {
                     // materialize on the gateway; `dt` of the budget is
                     // still unspent, so the transition happened exactly at
                     // clock - dt.
-                    job.completed_at = Some(self.clock - dt);
+                    job.completed_at = Some(self.clock.now() - dt);
                     match gateway.pull(registry, &r.canonical()) {
                         Ok(_) => PullState::Ready,
                         Err(e) => {
@@ -433,12 +463,12 @@ mod tests {
         q.tick(&mut gw, &reg, 1e6);
         let job = q.status("ubuntu:xenial").unwrap();
         let expected: f64 = job.stage_durations().iter().sum();
-        let got = job.completed_at.unwrap();
+        let got = job.completed_at.unwrap().as_secs_f64();
         assert!(
             (got - expected).abs() < 1e-6,
             "completed_at={got} expected={expected}"
         );
-        assert_eq!(q.now(), 1e6);
+        assert_eq!(q.now().as_secs_f64(), 1e6);
     }
 
     #[test]

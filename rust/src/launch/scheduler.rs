@@ -1,13 +1,15 @@
 //! The launch scheduler (DESIGN.md S19): WLM allocation → one coalesced
-//! pull → per-node stage execution on a worker pool → aggregation.
+//! pull → per-node stage execution on the virtual-time kernel →
+//! aggregation.
 //!
-//! Concurrency model: the `DistributionFabric` is `Sync` (its node caches
-//! live behind a `Mutex`) and `ShifterRuntime::run` takes `&self`, so one
-//! runtime per partition is shared by every worker thread. Workers pull
-//! slot indices from an atomic counter; results are keyed by slot index,
-//! so the report is deterministic regardless of thread interleaving (the
-//! per-node caches are independent, and all jitter is PRNG-keyed on
-//! `(image, node, attempt)`).
+//! Execution model (DESIGN.md S24): node slots are events on a
+//! [`crate::sim::SimKernel`], not tasks on a thread pool. Every slot's
+//! start is scheduled at the caller's trace instant; popping a start
+//! event runs the slot's attempt sequence and schedules its completion
+//! at `start + total_secs` in virtual time. Events pop in deterministic
+//! `(time, seq)` order, so reports and telemetry are bit-identical
+//! across runs and host thread counts — there is no interleaving to be
+//! robust against. All jitter is PRNG-keyed on `(image, node, attempt)`.
 //!
 //! Straggler/retry policy: each attempt draws a lognormal jitter
 //! multiplier. A multiplier above `RetryPolicy::straggler_threshold`
@@ -18,9 +20,8 @@
 //! and retry; container-side errors (MPI ABI mismatch, GPU incompat,
 //! missing host libraries) are permanent and fail only their own slot.
 
-use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
 
 use crate::config::UdiRootConfig;
 use crate::distrib::{DistributionFabric, NodeCache};
@@ -29,6 +30,7 @@ use crate::registry::Registry;
 use crate::shifter::{
     preflight, ExtensionRegistry, RunOptions, ShifterRuntime,
 };
+use crate::sim::{SimKernel, SimTime};
 use crate::telemetry::{SpanDraft, Telemetry, TraceCtx};
 use crate::util::prng::Rng;
 use crate::wlm::{GresRequest, Slurm, WlmError};
@@ -36,9 +38,66 @@ use crate::wlm::{GresRequest, Slurm, WlmError};
 use super::report::{LaunchReport, NodeResult, PullSummary};
 use super::{JobSpec, LaunchCluster};
 
-/// One blocking drain of the gateway cluster (same convention as
-/// `DistributionFabric::pull_blocking`).
-const PULL_DRAIN_SECS: f64 = 1e9;
+/// Events the per-job launch kernel schedules (DESIGN.md S24): one
+/// start/done pair per node slot.
+enum SlotEvent {
+    /// Begin slot `i`'s attempt sequence at the scheduled instant.
+    Start(usize),
+    /// Slot `i` reached its terminal state (success or per-slot error).
+    Done(usize),
+}
+
+/// Identity of a slot class for the template fast path: partition,
+/// image, and the launch-environment fingerprint.
+type TemplateKey = (usize, String, Vec<(String, Option<String>)>);
+
+/// Cached outcome of the first full stage-pipeline run of a slot class:
+/// everything but the squashfs fetch is identical across the class, so
+/// replays recompute only the fetch term.
+struct SlotTemplate {
+    /// Startup overhead of the seeding run (its fetch included).
+    overhead_secs: f64,
+    /// Fetch component the seeding run was charged.
+    fetch_secs: f64,
+    /// Index of the prepare-environment entry in `stage_secs` (the one
+    /// stage whose cost embeds the fetch).
+    prepare_idx: usize,
+    stage_secs: Vec<(&'static str, f64)>,
+    gpu_libraries: Vec<String>,
+    host_mpi: Option<String>,
+    extensions: Vec<&'static str>,
+}
+
+/// What one attempt produced, template-replayed or fully run.
+struct AttemptRun {
+    overhead_secs: f64,
+    stage_secs: Vec<(&'static str, f64)>,
+    gpu_libraries: Vec<String>,
+    host_mpi: Option<String>,
+    extensions: Vec<&'static str>,
+}
+
+/// Env fingerprint for the slot-template cache: rank-varying WLM ids
+/// contribute their key only — their values never change stage costs
+/// (export cost is per-variable, not per-byte) and the stock extension
+/// triggers ignore them — while every other variable contributes key
+/// and value, so anything trigger-relevant (`CUDA_VISIBLE_DEVICES`,
+/// `SHIFTER_NET`, `--mpi` labels) keys its own template.
+fn env_fingerprint(
+    env: &BTreeMap<String, String>,
+) -> Vec<(String, Option<String>)> {
+    const RANK_VARYING: [&str; 4] =
+        ["ALPS_APP_PE", "PMI_RANK", "SLURM_LOCALID", "SLURM_PROCID"];
+    env.iter()
+        .map(|(k, v)| {
+            if RANK_VARYING.contains(&k.as_str()) {
+                (k.clone(), None)
+            } else {
+                (k.clone(), Some(v.clone()))
+            }
+        })
+        .collect()
+}
 
 /// Whole-job failures: anything that kills the launch before (or while)
 /// slots can be planned. Per-slot failures land in
@@ -126,30 +185,30 @@ pub struct LaunchScheduler<'a> {
     cluster: &'a LaunchCluster,
     registry: &'a Registry,
     policy: RetryPolicy,
-    workers: usize,
     config: Option<UdiRootConfig>,
     extensions: Option<Arc<ExtensionRegistry>>,
     telemetry: Option<Arc<Telemetry>>,
+    /// Slot-template cache for the fast path (lives for the scheduler's
+    /// lifetime: a storm builds one scheduler, so templates amortize
+    /// across every job it launches).
+    templates: Mutex<HashMap<TemplateKey, SlotTemplate>>,
 }
 
 impl<'a> LaunchScheduler<'a> {
     /// Scheduler over `cluster`, resolving images against `registry`,
-    /// with the default retry policy and one worker per host core.
+    /// with the default retry policy.
     pub fn new(
         cluster: &'a LaunchCluster,
         registry: &'a Registry,
     ) -> LaunchScheduler<'a> {
-        let workers = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(4);
         LaunchScheduler {
             cluster,
             registry,
             policy: RetryPolicy::default(),
-            workers,
             config: None,
             extensions: None,
             telemetry: None,
+            templates: Mutex::new(HashMap::new()),
         }
     }
 
@@ -160,9 +219,11 @@ impl<'a> LaunchScheduler<'a> {
         self
     }
 
-    /// Cap the worker-pool width (clamped to at least 1).
-    pub fn with_workers(mut self, workers: usize) -> LaunchScheduler<'a> {
-        self.workers = workers.max(1);
+    /// Retained for API compatibility; a no-op since slot execution
+    /// moved onto the deterministic virtual-time kernel (DESIGN.md S24)
+    /// — there is no worker pool to size, and results are identical at
+    /// any width.
+    pub fn with_workers(self, _workers: usize) -> LaunchScheduler<'a> {
         self
     }
 
@@ -248,8 +309,8 @@ impl<'a> LaunchScheduler<'a> {
     }
 
     /// [`Self::launch_on`] with an explicit trace placement: node spans
-    /// parent under `ctx.parent` and start at `ctx.start_secs` on the
-    /// caller's timeline, instead of a fresh `job` root at t=0. This is
+    /// parent under `ctx.parent` and start at the virtual-time instant
+    /// `ctx.start`, instead of a fresh `job` root at t=0. This is
     /// how the multi-tenant scheduler (`crate::tenancy`) stitches each
     /// job's node execution into its own arrival→completion span.
     pub fn launch_on_traced(
@@ -304,14 +365,14 @@ impl<'a> LaunchScheduler<'a> {
                     category: "pull",
                     name: &format!("pull:{}", spec.image),
                     track: "gateway",
-                    start_secs: 0.0,
+                    start: SimTime::ZERO,
                     dur_secs: turnaround,
                 });
                 (
                     root,
                     TraceCtx {
                         parent: root,
-                        start_secs: turnaround,
+                        start: SimTime::from_secs(turnaround),
                     },
                 )
             }
@@ -339,40 +400,35 @@ impl<'a> LaunchScheduler<'a> {
             })
             .collect();
         let fabric_ref: &DistributionFabric = fabric;
-        let next = AtomicUsize::new(0);
-        let n_workers = self.workers.clamp(1, slots.len());
-        let collected = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..n_workers)
-                .map(|_| {
-                    scope.spawn(|| {
-                        let mut out = Vec::new();
-                        loop {
-                            let i = next.fetch_add(1, Ordering::Relaxed);
-                            if i >= slots.len() {
-                                break;
-                            }
-                            out.push((
-                                i,
-                                self.run_slot(
-                                    &runtimes, fabric_ref, spec, &slots[i],
-                                    node_ctx,
-                                ),
-                            ));
-                        }
-                        out
-                    })
-                })
-                .collect();
-            let mut results: Vec<Option<NodeResult>> =
-                slots.iter().map(|_| None).collect();
-            for handle in handles {
-                for (i, r) in handle.join().expect("launch worker panicked") {
+        let mut kernel: SimKernel<SlotEvent> = SimKernel::new();
+        for i in 0..slots.len() {
+            kernel.schedule_at(node_ctx.start, SlotEvent::Start(i));
+        }
+        let mut results: Vec<Option<NodeResult>> =
+            slots.iter().map(|_| None).collect();
+        while let Some((_, event)) = kernel.pop() {
+            match event {
+                SlotEvent::Start(i) => {
+                    let r = self.run_slot(
+                        &runtimes, fabric_ref, spec, &slots[i], node_ctx,
+                    );
+                    // the completion lands on the shared clock, so the
+                    // kernel's final instant is the job makespan
+                    kernel.schedule_in(
+                        r.total_secs.max(0.0),
+                        SlotEvent::Done(i),
+                    );
                     results[i] = Some(r);
                 }
+                SlotEvent::Done(i) => {
+                    debug_assert!(
+                        results[i].is_some(),
+                        "completion event before its slot ran"
+                    );
+                }
             }
-            results
-        });
-        let node_results: Vec<NodeResult> = collected
+        }
+        let node_results: Vec<NodeResult> = results
             .into_iter()
             .map(|r| r.expect("every slot produces a result"))
             .collect();
@@ -382,7 +438,7 @@ impl<'a> LaunchScheduler<'a> {
         if let (Some(t), Some(root_id)) = (tel, root) {
             let end = t
                 .child_span_end(root_id)
-                .unwrap_or(node_ctx.start_secs);
+                .unwrap_or(node_ctx.start_secs());
             t.span_as(
                 root_id,
                 SpanDraft {
@@ -390,7 +446,7 @@ impl<'a> LaunchScheduler<'a> {
                     category: "job",
                     name: &format!("job:{}", spec.image),
                     track: "jobs",
-                    start_secs: 0.0,
+                    start: SimTime::ZERO,
                     dur_secs: end,
                 },
             );
@@ -524,8 +580,8 @@ impl<'a> LaunchScheduler<'a> {
     }
 
     /// Pull phase: every live slot requests the image; the shard queue's
-    /// dedup coalesces the storm into exactly one job, and one drain tick
-    /// runs it to a terminal state.
+    /// dedup coalesces the storm into exactly one job, and an exact
+    /// event-time drain runs it to a terminal state.
     fn pull_once(
         &self,
         fabric: &mut DistributionFabric,
@@ -548,7 +604,7 @@ impl<'a> LaunchScheduler<'a> {
                     detail: e.to_string(),
                 })?;
         }
-        fabric.tick(self.registry, PULL_DRAIN_SECS);
+        fabric.drain(self.registry);
         let job = fabric.cluster().status(&spec.image);
         match job {
             Some(j) if j.state == PullState::Ready => Ok(Some(PullSummary {
@@ -586,7 +642,7 @@ impl<'a> LaunchScheduler<'a> {
         let tel = self.telemetry.as_ref().filter(|t| t.enabled());
         let node_span = tel.and_then(|t| t.reserve_id());
         let track = format!("node-{:05}", slot.node);
-        let base = node_ctx.start_secs;
+        let base = node_ctx.start_secs();
         let mut cursor = base;
         let part = &self.cluster.partitions()[slot.partition];
         let mut result = NodeResult {
@@ -623,6 +679,23 @@ impl<'a> LaunchScheduler<'a> {
         opts.env.extend(slot.env.clone());
         opts.trace_parent = node_span;
 
+        // slot-template fast path (DESIGN.md S24): with telemetry off,
+        // the stock extension set and no user volumes, every slot of one
+        // (partition, image, env-class) runs identical stage costs
+        // except the squashfs fetch, so the first slot's full run seeds
+        // a template the rest replay — recomputing (and charging the
+        // node cache for) only the fetch.
+        let template_key = (tel.is_none()
+            && rt.extensions().is_stock()
+            && opts.volumes.is_empty())
+        .then(|| {
+            (
+                slot.partition,
+                spec.image.clone(),
+                env_fingerprint(&opts.env),
+            )
+        });
+
         loop {
             result.attempts += 1;
             let mut rng = Rng::from_tags(&[
@@ -645,7 +718,7 @@ impl<'a> LaunchScheduler<'a> {
                         category: "fault",
                         name: "cold-fill-fault",
                         track: &track,
-                        start_secs: cursor,
+                        start: SimTime::from_secs(cursor),
                         dur_secs: wasted,
                     });
                     t.count("launch.cold_fill_faults", 1);
@@ -660,12 +733,19 @@ impl<'a> LaunchScheduler<'a> {
                 }
                 continue;
             }
-            opts.trace_start_secs = cursor;
-            match rt.run(fabric, &opts) {
-                Ok(container) => {
+            opts.trace_start = SimTime::from_secs(cursor);
+            match self.run_attempt(
+                rt,
+                fabric,
+                spec,
+                slot,
+                &mut opts,
+                template_key.as_ref(),
+            ) {
+                Ok(attempt) => {
                     let noise =
                         rng.lognormal_noise(self.policy.jitter_sigma);
-                    let overhead = container.startup_overhead_secs();
+                    let overhead = attempt.overhead_secs;
                     result.total_secs += overhead * noise;
                     cursor += (overhead * noise).max(overhead);
                     if noise > self.policy.straggler_threshold {
@@ -676,30 +756,17 @@ impl<'a> LaunchScheduler<'a> {
                             continue;
                         }
                     }
-                    result.stage_secs = container
-                        .stage_log
-                        .records()
-                        .iter()
-                        .map(|r| (r.stage.name(), r.sim_secs))
-                        .collect();
-                    if let Some(gpu) = &container.gpu {
-                        result.gpu_libraries = gpu.libraries.clone();
-                    }
-                    if let Some(mpi) = &container.mpi {
-                        result.host_mpi = Some(mpi.host_mpi.clone());
-                    }
-                    result.extensions = container
-                        .extensions
-                        .iter()
-                        .map(|r| r.extension)
-                        .collect();
+                    result.stage_secs = attempt.stage_secs;
+                    result.gpu_libraries = attempt.gpu_libraries;
+                    result.host_mpi = attempt.host_mpi;
+                    result.extensions = attempt.extensions;
                     break;
                 }
                 Err(e) => {
                     // container-side errors are permanent for this job:
                     // an ABI mismatch or GPU incompatibility will not heal
                     // on retry, and must only fail this slot
-                    result.error = Some(e.to_string());
+                    result.error = Some(e);
                     break;
                 }
             }
@@ -713,7 +780,7 @@ impl<'a> LaunchScheduler<'a> {
                         category: "node",
                         name: &format!("node:{:05}", slot.node),
                         track: &track,
-                        start_secs: base,
+                        start: SimTime::from_secs(base),
                         dur_secs: cursor - base,
                     },
                 );
@@ -733,6 +800,98 @@ impl<'a> LaunchScheduler<'a> {
             }
         }
         result
+    }
+
+    /// One attempt of one slot: replay the class template when the fast
+    /// path holds and a template exists, otherwise drive the full stage
+    /// pipeline (seeding the template for the rest of the class). Either
+    /// way the image source is charged for exactly one node fetch per
+    /// attempt, so cache hit/miss accounting is identical on both paths.
+    fn run_attempt(
+        &self,
+        rt: &ShifterRuntime,
+        fabric: &DistributionFabric,
+        spec: &JobSpec,
+        slot: &SlotPlan,
+        opts: &mut RunOptions,
+        template_key: Option<&TemplateKey>,
+    ) -> Result<AttemptRun, String> {
+        opts.fetch_override = None;
+        let fetch = template_key.and_then(|_| {
+            let gw_image = fabric.resolve(&spec.image).ok()?;
+            fabric.node_fetch_secs(
+                gw_image,
+                slot.node as usize,
+                u64::from(spec.nodes.max(1)),
+            )
+        });
+        if let (Some(key), Some(fetch)) = (template_key, fetch) {
+            let templates =
+                self.templates.lock().expect("template lock poisoned");
+            if let Some(tpl) = templates.get(key) {
+                let mut stage_secs = tpl.stage_secs.clone();
+                stage_secs[tpl.prepare_idx].1 += fetch - tpl.fetch_secs;
+                return Ok(AttemptRun {
+                    overhead_secs: tpl.overhead_secs - tpl.fetch_secs
+                        + fetch,
+                    stage_secs,
+                    gpu_libraries: tpl.gpu_libraries.clone(),
+                    host_mpi: tpl.host_mpi.clone(),
+                    extensions: tpl.extensions.clone(),
+                });
+            }
+            drop(templates);
+            // miss: this attempt's fetch is already charged — hand it to
+            // the runtime so the full run still costs exactly one fetch
+            opts.fetch_override = Some(fetch);
+        }
+        let container = rt.run(fabric, opts).map_err(|e| e.to_string())?;
+        let attempt = AttemptRun {
+            overhead_secs: container.startup_overhead_secs(),
+            stage_secs: container
+                .stage_log
+                .records()
+                .iter()
+                .map(|r| (r.stage.name(), r.sim_secs))
+                .collect(),
+            gpu_libraries: container
+                .gpu
+                .as_ref()
+                .map(|g| g.libraries.clone())
+                .unwrap_or_default(),
+            host_mpi: container.mpi.as_ref().map(|m| m.host_mpi.clone()),
+            extensions: container
+                .extensions
+                .iter()
+                .map(|r| r.extension)
+                .collect(),
+        };
+        if let (Some(key), Some(fetch)) =
+            (template_key, opts.fetch_override)
+        {
+            if let Some(prepare_idx) = attempt
+                .stage_secs
+                .iter()
+                .position(|(name, _)| *name == "prepare-environment")
+            {
+                self.templates
+                    .lock()
+                    .expect("template lock poisoned")
+                    .insert(
+                        key.clone(),
+                        SlotTemplate {
+                            overhead_secs: attempt.overhead_secs,
+                            fetch_secs: fetch,
+                            prepare_idx,
+                            stage_secs: attempt.stage_secs.clone(),
+                            gpu_libraries: attempt.gpu_libraries.clone(),
+                            host_mpi: attempt.host_mpi.clone(),
+                            extensions: attempt.extensions.clone(),
+                        },
+                    );
+            }
+        }
+        Ok(attempt)
     }
 
     /// Time a failed broadcast fill wastes before the retry.
@@ -958,7 +1117,7 @@ mod tests {
         assert_eq!(roots.len(), 1);
         let root = roots[0];
         assert_eq!(root.parent, None);
-        assert_eq!(root.start_secs, 0.0);
+        assert_eq!(root.start_secs(), 0.0);
         let pull = spans.iter().find(|s| s.category == "pull").unwrap();
         assert_eq!(pull.parent, Some(root.id));
         let nodes: Vec<_> =
@@ -967,7 +1126,7 @@ mod tests {
         for n in &nodes {
             assert_eq!(n.parent, Some(root.id));
             // node execution starts where the coalesced pull ends
-            assert!((n.start_secs - pull.end_secs()).abs() < 1e-9);
+            assert!((n.start_secs() - pull.end_secs()).abs() < 1e-9);
             assert!(n.end_secs() <= root.end_secs() + 1e-9);
         }
         // every non-root span's parent exists, and children stay inside
@@ -978,11 +1137,64 @@ mod tests {
                 .iter()
                 .find(|c| Some(c.id) == s.parent)
                 .expect("parent span recorded");
-            assert!(s.start_secs >= p.start_secs - 1e-9);
+            assert!(s.start_secs() >= p.start_secs() - 1e-9);
             assert!(s.end_secs() <= p.end_secs() + 1e-9);
         }
         assert_eq!(tel.counter("launch.slots"), 4);
         assert!(tel.counter("runtime.runs") >= 4);
+    }
+
+    #[test]
+    fn template_fast_path_matches_the_full_pipeline() {
+        use crate::netfab::NetworkSupport;
+        use crate::shifter::extension::{GpuExtension, MpiExtension};
+        let (cluster, registry, mut fast_fabric) = setup(32);
+        let (_, _, mut slow_fabric) = setup(32);
+        // same extension *behavior*, but a hand-registered set clears the
+        // stock flag, forcing the full stage pipeline on every slot
+        let hand_built = Arc::new(
+            ExtensionRegistry::empty()
+                .with(Box::new(GpuExtension))
+                .with(Box::new(MpiExtension))
+                .with(Box::new(NetworkSupport)),
+        );
+        let fast = LaunchScheduler::new(&cluster, &registry);
+        let slow = LaunchScheduler::new(&cluster, &registry)
+            .with_extensions(hand_built);
+        // default policy: jitter + straggler retries exercise the warm
+        // template-replay attempts too
+        let spec = JobSpec::new("ubuntu:xenial", &["true"], 32);
+        let cold = [
+            fast.launch(&mut fast_fabric, &spec).unwrap(),
+            slow.launch(&mut slow_fabric, &spec).unwrap(),
+        ];
+        let warm = [
+            fast.launch(&mut fast_fabric, &spec).unwrap(),
+            slow.launch(&mut slow_fabric, &spec).unwrap(),
+        ];
+        for [a, b] in [cold, warm] {
+            assert_eq!(a.succeeded(), b.succeeded());
+            assert_eq!(a.retries(), b.retries());
+            assert_eq!(a.stragglers(), b.stragglers());
+            assert_eq!(a.cache.hits, b.cache.hits);
+            assert_eq!(a.cache.misses, b.cache.misses);
+            for (x, y) in a.node_results.iter().zip(&b.node_results) {
+                assert_eq!(x.node, y.node);
+                assert_eq!(x.attempts, y.attempts);
+                assert_eq!(x.extensions, y.extensions);
+                // replay recombines the fetch term, so allow float
+                // round-off — the paths must agree to an ulp, not a bit
+                let rel = (x.total_secs - y.total_secs).abs()
+                    / y.total_secs.max(1e-12);
+                assert!(
+                    rel < 1e-9,
+                    "node {}: fast {} vs full {}",
+                    x.node,
+                    x.total_secs,
+                    y.total_secs
+                );
+            }
+        }
     }
 
     #[test]

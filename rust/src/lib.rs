@@ -68,6 +68,7 @@ pub mod registry;
 #[allow(missing_docs)]
 pub mod runtime;
 pub mod shifter;
+pub mod sim;
 pub mod site;
 pub mod telemetry;
 pub mod tenancy;
@@ -89,7 +90,8 @@ pub use shifter::{
     Capability, Container, ExtensionRegistry, HostExtension, RunOptions,
     ShifterRuntime,
 };
-pub use site::{PullOutcome, Site, SiteBuilder, SiteError};
+pub use sim::{SimClock, SimKernel, SimTime};
+pub use site::{PullOutcome, Site, SiteBuilder, SiteError, StormSpec};
 pub use telemetry::{Telemetry, TraceCtx};
 pub use tenancy::{
     FairShareScheduler, SchedulingPolicy, TenancyReport, TrafficModel,

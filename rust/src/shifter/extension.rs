@@ -226,6 +226,11 @@ pub trait HostExtension: Send + Sync {
 #[derive(Default)]
 pub struct ExtensionRegistry {
     extensions: Vec<Box<dyn HostExtension>>,
+    /// True only for the untouched [`ExtensionRegistry::defaults`] set —
+    /// the launch orchestrator's slot-template fast path keys on this
+    /// (stock triggers are rank-invariant within a partition; a
+    /// site-defined extension may not be).
+    stock: bool,
 }
 
 impl ExtensionRegistry {
@@ -239,14 +244,23 @@ impl ExtensionRegistry {
     /// The stock registry: §IV.A GPU support, §IV.B MPI swap, and the
     /// specialized-network injection, in that order.
     pub fn defaults() -> ExtensionRegistry {
-        ExtensionRegistry::empty()
+        let mut reg = ExtensionRegistry::empty()
             .with(Box::new(GpuExtension))
             .with(Box::new(MpiExtension))
-            .with(Box::new(NetworkSupport))
+            .with(Box::new(NetworkSupport));
+        reg.stock = true;
+        reg
+    }
+
+    /// Whether this is the untouched stock GPU/MPI/net set. `false` the
+    /// moment anything registers (or for [`ExtensionRegistry::empty`]).
+    pub fn is_stock(&self) -> bool {
+        self.stock
     }
 
     /// Append an extension to the injection order.
     pub fn register(&mut self, extension: Box<dyn HostExtension>) {
+        self.stock = false;
         self.extensions.push(extension);
     }
 
@@ -566,6 +580,12 @@ mod tests {
         assert_eq!(reg.len(), 3);
         assert!(!reg.is_empty());
         assert!(ExtensionRegistry::empty().is_empty());
+        // stockness tracks registry provenance exactly
+        assert!(reg.is_stock());
+        assert!(!ExtensionRegistry::empty().is_stock());
+        assert!(!ExtensionRegistry::defaults()
+            .with(Box::new(GpuExtension))
+            .is_stock());
     }
 
     #[test]

@@ -27,6 +27,7 @@ use super::gpu_support::GpuSupportReport;
 use super::mpi_support::{self, MpiSupportReport};
 use super::stages::{PrivilegeState, Stage, StageError, StageLog};
 use super::volume::{VolumeError, VolumeSpec, TMPFS_DIRS};
+use crate::sim::SimTime;
 use crate::telemetry::{SpanDraft, Telemetry};
 
 /// Everything that can fail between `shifter --image=<ref> <cmd>` and a
@@ -91,10 +92,16 @@ pub struct RunOptions {
     /// (the launch orchestrator's node slot) is tracing. See
     /// [`crate::telemetry`] / DESIGN.md S23.
     pub trace_parent: Option<u64>,
-    /// Absolute simulated second this run starts at on the caller's
-    /// timeline; the runtime only knows relative stage costs, so span
-    /// placement is offset from here.
-    pub trace_start_secs: f64,
+    /// Virtual-time instant this run starts at on the caller's timeline
+    /// (the unified [`crate::sim`] kernel clock); the runtime only knows
+    /// relative stage costs, so span placement is offset from here.
+    pub trace_start: SimTime,
+    /// Pre-computed node fetch cost, when the caller already charged the
+    /// distribution fabric for this attempt's squashfs fetch (the launch
+    /// orchestrator's slot-template fast path). `None` means the runtime
+    /// asks the image source itself — exactly one fetch per attempt
+    /// either way.
+    pub fetch_override: Option<f64>,
 }
 
 impl RunOptions {
@@ -112,16 +119,17 @@ impl RunOptions {
             concurrent_nodes: 1,
             node: 0,
             trace_parent: None,
-            trace_start_secs: 0.0,
+            trace_start: SimTime::ZERO,
+            fetch_override: None,
         }
     }
 
     /// Place this run on the caller's trace timeline (see
     /// [`crate::TraceCtx`]): spans parent under `ctx.parent` and start
-    /// at `ctx.start_secs`.
+    /// at the virtual-time instant `ctx.start`.
     pub fn traced(mut self, ctx: crate::telemetry::TraceCtx) -> RunOptions {
         self.trace_parent = ctx.parent;
-        self.trace_start_secs = ctx.start_secs;
+        self.trace_start = ctx.start;
         self
     }
 
@@ -493,15 +501,20 @@ impl ShifterRuntime {
         // defers to the host profile's PFS contention model
         let image_bytes = gw_image.squashfs.compressed_bytes;
         let concurrent = opts.concurrent_nodes.max(1) as u64;
-        let fetch_secs = match source.node_fetch_secs(
-            gw_image,
-            opts.node,
-            concurrent,
-        ) {
+        let fetch_secs = match opts.fetch_override {
             Some(secs) => secs,
-            None => match &self.profile.pfs {
-                Some(pfs) => pfs.bulk_read_secs(image_bytes, concurrent),
-                None => image_bytes as f64 / LOCAL_DISK_BYTES_PER_SEC,
+            None => match source.node_fetch_secs(
+                gw_image,
+                opts.node,
+                concurrent,
+            ) {
+                Some(secs) => secs,
+                None => match &self.profile.pfs {
+                    Some(pfs) => {
+                        pfs.bulk_read_secs(image_bytes, concurrent)
+                    }
+                    None => image_bytes as f64 / LOCAL_DISK_BYTES_PER_SEC,
+                },
             },
         };
         prepare_secs += fetch_secs + LOOP_MOUNT_SECS;
@@ -673,7 +686,7 @@ impl ShifterRuntime {
     /// Reconstruct the run's span tree after the stage pipeline
     /// completes (see DESIGN.md S23): the pipeline is strictly
     /// sequential, so absolute placement is the running prefix sum of
-    /// stage costs from `opts.trace_start_secs`. Extension checks land
+    /// stage costs from `opts.trace_start`. Extension checks land
     /// as instants at the preflight point (end of resolve); injections
     /// fill the tail of prepare-environment, each `BIND_MOUNT_SECS` per
     /// mount it added. No-op unless a recorder is installed and enabled.
@@ -689,14 +702,14 @@ impl ShifterRuntime {
             return;
         }
         let track = format!("node-{:05}", opts.node);
-        let base = opts.trace_start_secs;
+        let base = opts.trace_start.as_secs_f64();
         let total = log.total_sim_secs();
         let run_id = tel.span(SpanDraft {
             parent: opts.trace_parent,
             category: "run",
             name: &format!("run:{}", opts.image),
             track: &track,
-            start_secs: base,
+            start: opts.trace_start,
             dur_secs: total,
         });
         let mut cursor = base;
@@ -708,7 +721,7 @@ impl ShifterRuntime {
                 category: "stage",
                 name: rec.stage.name(),
                 track: &track,
-                start_secs: cursor,
+                start: SimTime::from_secs(cursor),
                 dur_secs: rec.sim_secs,
             });
             cursor += rec.sim_secs;
@@ -726,7 +739,7 @@ impl ShifterRuntime {
                 category: "ext",
                 name: &format!("ext:{}:check", ext.name()),
                 track: &track,
-                start_secs: resolve_end,
+                start: SimTime::from_secs(resolve_end),
                 dur_secs: 0.0,
             });
         }
@@ -744,7 +757,7 @@ impl ShifterRuntime {
                 category: "ext",
                 name: &format!("ext:{}:inject", report.extension),
                 track: &track,
-                start_secs: inject_cursor,
+                start: SimTime::from_secs(inject_cursor),
                 dur_secs: dur,
             });
             inject_cursor += dur;
@@ -910,13 +923,13 @@ mod tests {
             .with_env("CUDA_VISIBLE_DEVICES", "0")
             .traced(TraceCtx {
                 parent: None,
-                start_secs: 10.0,
+                start: SimTime::from_secs(10.0),
             });
         let c = rt.run(&gw, &opts).unwrap();
 
         let spans = tel.spans();
         let run = spans.iter().find(|s| s.category == "run").unwrap();
-        assert_eq!(run.start_secs, 10.0);
+        assert_eq!(run.start_secs(), 10.0);
         assert!((run.dur_secs - c.startup_overhead_secs()).abs() < 1e-12);
         // the seven §III.A stages tile the run span exactly
         let stages: Vec<_> =

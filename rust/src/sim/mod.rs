@@ -1,0 +1,418 @@
+//! Virtual-time discrete-event kernel (DESIGN.md S24): one clock for
+//! launch, gateway, and tenancy.
+//!
+//! Every layer of the simulator used to keep its own notion of time —
+//! the gateway shards ticked a private `f64` clock, the launch
+//! orchestrator executed slots on a real `std::thread::scope` worker
+//! pool (so storm width was bounded by host threads), and the tenancy
+//! scheduler hand-rolled a min-of-next-event loop. This module extracts
+//! the one mechanism they all share:
+//!
+//! * [`SimTime`] — a totally ordered newtype over simulated seconds.
+//!   `f64` under the hood (every cost model in the repo produces `f64`
+//!   durations), but `Eq`/`Ord` via `f64::total_cmp`, so it can key a
+//!   binary heap and sort deterministically.
+//! * [`SimClock`] — the single monotonic time authority. Clocks only
+//!   move forward; [`SimClock::advance_to`] debug-asserts monotonicity.
+//! * [`SimKernel`] — a deterministic discrete-event queue: a binary
+//!   heap of events keyed by `(SimTime, seq)`, where `seq` is the
+//!   schedule order. Two events at the same instant pop in the order
+//!   they were scheduled, so a trace replays bit-identically regardless
+//!   of host thread count or `--test-threads` setting.
+//!
+//! The clients (in migration order): the launch scheduler's per-node
+//! slot execution (slot-start/slot-done events replaced its thread
+//! pool), the gateway shard drain path (exact `pending_secs`-sized
+//! ticks instead of a magic `1e9`-second drain), and the
+//! `FairShareScheduler` pass loop (arrival/completion events). See
+//! `benches/sim_scale.rs` for the payoff: a 100k-node, million-job,
+//! week-long trace in seconds of wall time.
+//!
+//! ```
+//! use shifter_rs::sim::{SimKernel, SimTime};
+//!
+//! let mut kernel: SimKernel<&str> = SimKernel::new();
+//! kernel.schedule_at(SimTime::from_secs(2.0), "b");
+//! kernel.schedule_at(SimTime::from_secs(1.0), "a");
+//! kernel.schedule_at(SimTime::from_secs(2.0), "c"); // same instant: FIFO
+//! let order: Vec<&str> = std::iter::from_fn(|| kernel.pop())
+//!     .map(|(_, e)| e)
+//!     .collect();
+//! assert_eq!(order, ["a", "b", "c"]);
+//! assert_eq!(kernel.now(), SimTime::from_secs(2.0));
+//! ```
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::ops::{Add, AddAssign, Sub};
+
+/// An instant in simulated time, in seconds since the start of the
+/// simulation.
+///
+/// A newtype over `f64` so public signatures stop passing ad-hoc
+/// second counts ("is this a duration or a timestamp?"), with total
+/// ordering (`f64::total_cmp`) so instants can key heaps and sorts.
+/// Durations stay plain `f64` seconds: `SimTime - SimTime` yields a
+/// `f64` duration, `SimTime + f64` shifts an instant.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimTime(f64);
+
+impl SimTime {
+    /// The start of simulated time.
+    pub const ZERO: SimTime = SimTime(0.0);
+
+    /// An instant `secs` seconds after time zero.
+    pub fn from_secs(secs: f64) -> SimTime {
+        debug_assert!(secs.is_finite(), "non-finite SimTime: {secs}");
+        SimTime(secs)
+    }
+
+    /// Seconds since time zero — the report/JSON compatibility
+    /// accessor every `*_secs` consumer migrates to.
+    pub fn as_secs_f64(self) -> f64 {
+        self.0
+    }
+
+    /// The later of two instants.
+    pub fn max(self, other: SimTime) -> SimTime {
+        if other > self {
+            other
+        } else {
+            self
+        }
+    }
+}
+
+impl PartialEq for SimTime {
+    fn eq(&self, other: &SimTime) -> bool {
+        self.0.total_cmp(&other.0) == Ordering::Equal
+    }
+}
+
+impl Eq for SimTime {}
+
+impl PartialOrd for SimTime {
+    fn partial_cmp(&self, other: &SimTime) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for SimTime {
+    fn cmp(&self, other: &SimTime) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+impl Add<f64> for SimTime {
+    type Output = SimTime;
+    /// Shift an instant forward by a duration in seconds.
+    fn add(self, secs: f64) -> SimTime {
+        SimTime::from_secs(self.0 + secs)
+    }
+}
+
+impl AddAssign<f64> for SimTime {
+    fn add_assign(&mut self, secs: f64) {
+        *self = *self + secs;
+    }
+}
+
+impl Sub<f64> for SimTime {
+    type Output = SimTime;
+    /// Shift an instant backward by a duration in seconds.
+    fn sub(self, secs: f64) -> SimTime {
+        SimTime::from_secs(self.0 - secs)
+    }
+}
+
+impl Sub<SimTime> for SimTime {
+    type Output = f64;
+    /// The signed duration between two instants, in seconds.
+    fn sub(self, other: SimTime) -> f64 {
+        self.0 - other.0
+    }
+}
+
+impl std::fmt::Display for SimTime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}s", self.0)
+    }
+}
+
+/// The single monotonic time authority of a simulation. Layers that
+/// own a clock (the gateway pull queues, the event kernel) hold one of
+/// these instead of a raw `f64`; time only moves forward.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SimClock {
+    now: SimTime,
+}
+
+impl SimClock {
+    /// A clock at time zero.
+    pub fn new() -> SimClock {
+        SimClock::default()
+    }
+
+    /// The current instant.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Advance the clock by `secs` seconds.
+    pub fn advance(&mut self, secs: f64) -> SimTime {
+        debug_assert!(secs >= 0.0, "clocks only move forward: {secs}");
+        self.now += secs;
+        self.now
+    }
+
+    /// Advance the clock to `t`; a target at or before `now` is a
+    /// no-op (clocks never move backward).
+    pub fn advance_to(&mut self, t: SimTime) -> SimTime {
+        if t > self.now {
+            self.now = t;
+        }
+        self.now
+    }
+}
+
+/// One queued event: the payload plus its `(time, seq)` heap key.
+struct Scheduled<E> {
+    at: SimTime,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Scheduled<E>) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl<E> Eq for Scheduled<E> {}
+
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Scheduled<E>) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Scheduled<E> {
+    /// Inverted so `BinaryHeap` (a max-heap) pops the *earliest*
+    /// `(time, seq)` first.
+    fn cmp(&self, other: &Scheduled<E>) -> Ordering {
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// A deterministic discrete-event kernel: schedule events at absolute
+/// instants (or relative delays), pop them in `(SimTime, seq)` order,
+/// and the kernel's [`SimClock`] advances to each popped event's time.
+///
+/// `seq` is the scheduling order, so simultaneous events pop FIFO —
+/// the property that makes traces bit-identical across runs. See the
+/// [module docs](self) for an example.
+pub struct SimKernel<E> {
+    clock: SimClock,
+    next_seq: u64,
+    heap: BinaryHeap<Scheduled<E>>,
+}
+
+impl<E> Default for SimKernel<E> {
+    fn default() -> SimKernel<E> {
+        SimKernel::new()
+    }
+}
+
+impl<E> SimKernel<E> {
+    /// An empty kernel at time zero.
+    pub fn new() -> SimKernel<E> {
+        SimKernel {
+            clock: SimClock::new(),
+            next_seq: 0,
+            heap: BinaryHeap::new(),
+        }
+    }
+
+    /// The kernel clock's current instant (the time of the last popped
+    /// event).
+    pub fn now(&self) -> SimTime {
+        self.clock.now()
+    }
+
+    /// Schedule `event` at the absolute instant `at`. An instant
+    /// already in the past is clamped to `now` (it will pop next, in
+    /// schedule order).
+    pub fn schedule_at(&mut self, at: SimTime, event: E) {
+        let at = at.max(self.clock.now());
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Scheduled { at, seq, event });
+    }
+
+    /// Schedule `event` `delay` seconds after `now`. Negative delays
+    /// clamp to `now`.
+    pub fn schedule_in(&mut self, delay: f64, event: E) {
+        let at = self.clock.now() + delay.max(0.0);
+        self.schedule_at(at, event);
+    }
+
+    /// The instant of the next event, without popping it.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|s| s.at)
+    }
+
+    /// Pop the earliest event, advancing the kernel clock to its
+    /// instant. `None` when the queue is empty (the simulation is
+    /// over).
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        let s = self.heap.pop()?;
+        self.clock.advance_to(s.at);
+        Some((s.at, s.event))
+    }
+
+    /// Pop every event whose instant is within `eps` seconds of the
+    /// earliest queued event — the simultaneity batch discrete-event
+    /// schedulers process under one scheduling pass. Empty when the
+    /// queue is empty.
+    pub fn pop_batch(&mut self, eps: f64) -> Vec<(SimTime, E)> {
+        let Some(first) = self.peek_time() else {
+            return Vec::new();
+        };
+        let cutoff = first + eps;
+        let mut batch = Vec::new();
+        while self.peek_time().is_some_and(|t| t <= cutoff) {
+            batch.push(self.pop().expect("peeked event exists"));
+        }
+        batch
+    }
+
+    /// Events still queued.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Whether the queue is empty.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simtime_orders_totally_and_does_arithmetic() {
+        let a = SimTime::from_secs(1.5);
+        let b = SimTime::from_secs(2.5);
+        assert!(a < b);
+        assert_eq!(b - a, 1.0);
+        assert_eq!(a + 1.0, b);
+        assert_eq!(b - 1.0, a);
+        let mut c = a;
+        c += 1.0;
+        assert_eq!(c, b);
+        assert_eq!(SimTime::ZERO.as_secs_f64(), 0.0);
+        assert_eq!(SimTime::default(), SimTime::ZERO);
+        assert_eq!(a.max(b), b);
+        assert_eq!(b.max(a), b);
+        assert_eq!(format!("{a}"), "1.5s");
+        // total order handles signed zero
+        assert!(SimTime::from_secs(-0.0) <= SimTime::from_secs(0.0));
+    }
+
+    #[test]
+    fn clock_is_monotonic() {
+        let mut clock = SimClock::new();
+        assert_eq!(clock.now(), SimTime::ZERO);
+        clock.advance(2.0);
+        assert_eq!(clock.now(), SimTime::from_secs(2.0));
+        clock.advance_to(SimTime::from_secs(1.0)); // backward: no-op
+        assert_eq!(clock.now(), SimTime::from_secs(2.0));
+        clock.advance_to(SimTime::from_secs(3.0));
+        assert_eq!(clock.now(), SimTime::from_secs(3.0));
+    }
+
+    #[test]
+    fn events_pop_in_time_then_seq_order() {
+        let mut k: SimKernel<u32> = SimKernel::new();
+        k.schedule_at(SimTime::from_secs(5.0), 50);
+        k.schedule_at(SimTime::from_secs(1.0), 10);
+        k.schedule_at(SimTime::from_secs(5.0), 51); // ties pop FIFO
+        k.schedule_at(SimTime::from_secs(3.0), 30);
+        assert_eq!(k.len(), 4);
+        let popped: Vec<(f64, u32)> = std::iter::from_fn(|| k.pop())
+            .map(|(t, e)| (t.as_secs_f64(), e))
+            .collect();
+        assert_eq!(
+            popped,
+            vec![(1.0, 10), (3.0, 30), (5.0, 50), (5.0, 51)]
+        );
+        assert!(k.is_empty());
+        assert_eq!(k.now(), SimTime::from_secs(5.0));
+    }
+
+    #[test]
+    fn relative_scheduling_follows_the_clock() {
+        let mut k: SimKernel<&str> = SimKernel::new();
+        k.schedule_at(SimTime::from_secs(4.0), "outer");
+        let (t, _) = k.pop().unwrap();
+        assert_eq!(t, SimTime::from_secs(4.0));
+        k.schedule_in(2.0, "inner"); // 4.0 + 2.0
+        k.schedule_in(-1.0, "clamped"); // negative delay clamps to now
+        let (t1, e1) = k.pop().unwrap();
+        assert_eq!((t1, e1), (SimTime::from_secs(4.0), "clamped"));
+        let (t2, e2) = k.pop().unwrap();
+        assert_eq!((t2, e2), (SimTime::from_secs(6.0), "inner"));
+    }
+
+    #[test]
+    fn past_events_clamp_to_now() {
+        let mut k: SimKernel<u8> = SimKernel::new();
+        k.schedule_at(SimTime::from_secs(10.0), 1);
+        k.pop().unwrap();
+        k.schedule_at(SimTime::from_secs(3.0), 2); // in the past
+        let (t, e) = k.pop().unwrap();
+        assert_eq!((t, e), (SimTime::from_secs(10.0), 2));
+        assert_eq!(k.now(), SimTime::from_secs(10.0));
+    }
+
+    #[test]
+    fn pop_batch_takes_the_simultaneity_window() {
+        let mut k: SimKernel<u32> = SimKernel::new();
+        k.schedule_at(SimTime::from_secs(1.0), 1);
+        k.schedule_at(SimTime::from_secs(1.0 + 1e-12), 2);
+        k.schedule_at(SimTime::from_secs(2.0), 3);
+        let batch = k.pop_batch(1e-9);
+        let ids: Vec<u32> = batch.into_iter().map(|(_, e)| e).collect();
+        assert_eq!(ids, vec![1, 2]);
+        assert_eq!(k.len(), 1);
+        let rest = k.pop_batch(1e-9);
+        assert_eq!(rest.len(), 1);
+        assert!(k.pop_batch(1e-9).is_empty());
+    }
+
+    #[test]
+    fn million_event_heap_is_fast_and_ordered() {
+        // the sim_scale workload shape in miniature: interleaved
+        // schedule/pop with adversarial insertion order
+        let mut k: SimKernel<usize> = SimKernel::new();
+        let n = 100_000usize;
+        for i in 0..n {
+            // reversed times: worst case for a naive sorted-vec queue
+            let t = ((n - i) as f64) * 1e-3;
+            k.schedule_at(SimTime::from_secs(t), i);
+        }
+        let mut last = SimTime::ZERO;
+        let mut popped = 0usize;
+        while let Some((t, _)) = k.pop() {
+            assert!(t >= last);
+            last = t;
+            popped += 1;
+        }
+        assert_eq!(popped, n);
+    }
+}

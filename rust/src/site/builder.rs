@@ -202,14 +202,18 @@ impl SiteBuilder {
         self
     }
 
-    /// Deterministic seed for synthesized workloads
-    /// ([`Site::default_traffic`]).
+    /// Deterministic seed for synthesized workloads — the default a
+    /// [`crate::site::StormSpec`] inherits when its own `seed` knob is
+    /// left unset.
     pub fn seed(mut self, seed: u64) -> SiteBuilder {
         self.seed = seed;
         self
     }
 
-    /// Cap the launch worker-pool width (default: one per host core).
+    /// Historical knob from the wall-clock worker-pool era. Launch slots
+    /// now execute on the virtual-time kernel (DESIGN.md S24), where
+    /// results never depend on host parallelism, so this is a no-op kept
+    /// for API compatibility.
     pub fn workers(mut self, workers: usize) -> SiteBuilder {
         self.workers = Some(workers);
         self

@@ -115,4 +115,15 @@ pub enum SiteError {
     /// The cluster-scale launch orchestrator rejected or aborted the job.
     #[error("cluster launch failed")]
     Launch(#[from] LaunchError),
+
+    /// Writing a storm's Chrome trace artifact failed
+    /// (`StormSpec::trace_path`).
+    #[error("failed to write trace artifact to {path}")]
+    Trace {
+        /// The path the trace could not be written to.
+        path: String,
+        /// The filesystem cause (chained via `source()`).
+        #[source]
+        source: std::io::Error,
+    },
 }

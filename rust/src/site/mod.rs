@@ -19,11 +19,18 @@
 //! * [`Site::run`] — one container on one node, §III.B style;
 //! * [`Site::launch`] / [`Site::launch_on`] — a cluster-scale job
 //!   through the launch orchestrator;
-//! * [`Site::storm`] / [`Site::storm_with`] — a multi-tenant job storm
-//!   under the site's (pluggable) [`SchedulingPolicy`].
+//! * [`Site::run_storm`] — a multi-tenant job storm described by one
+//!   typed [`StormSpec`] (traffic knobs, policy override, explicit job
+//!   stream, optional Chrome-trace artifact) under the site's
+//!   (pluggable) [`SchedulingPolicy`]. The positional
+//!   [`Site::storm`] / [`Site::storm_with`] forms are deprecated in its
+//!   favor.
 //!
 //! Every operation reports through the single [`SiteError`] enum, whose
 //! `std::error::Error::source()` chain preserves the layer-level cause.
+//! All timing flows from the virtual-time kernel (`crate::sim`,
+//! DESIGN.md S24): blocking pulls drain the gateway shards event by
+//! event, and storms replay on a deterministic event queue.
 
 mod builder;
 mod error;
@@ -31,6 +38,7 @@ mod error;
 pub use builder::{SiteBuilder, MIN_NODE_CACHE_BYTES};
 pub use error::SiteError;
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::config::UdiRootConfig;
@@ -43,15 +51,12 @@ use crate::registry::Registry;
 use crate::shifter::{
     Capability, Container, ExtensionRegistry, RunOptions, ShifterRuntime,
 };
+use crate::sim::SimTime;
 use crate::telemetry::{SpanDraft, Telemetry};
 use crate::tenancy::{
     FairShareScheduler, SchedulingPolicy, TenancyReport, TenantJob,
     TrafficModel,
 };
-
-/// One blocking drain of the gateway cluster (same convention as
-/// `DistributionFabric::pull_blocking`).
-const DRAIN_SECS: f64 = 1e9;
 
 /// What [`Site::pull`] reports back: the terminal gateway-job timings of
 /// a successful pull, shaped like the classic `shifterimg pull` output.
@@ -75,6 +80,165 @@ pub struct PullOutcome {
     pub store_secs: f64,
     /// Users/nodes whose requests coalesced onto this pull job so far.
     pub requesters: usize,
+}
+
+/// A typed description of one multi-tenant storm, consumed by
+/// [`Site::run_storm`].
+///
+/// This is the one builder that replaces the positional
+/// `storm(&TrafficModel)` / `storm_with(&[TenantJob], &dyn
+/// SchedulingPolicy)` pair and the `default_traffic()` side channel:
+/// every knob those forms spread across call sites lives here, and
+/// every knob left unset inherits the site's shape — `max_width`
+/// defaults to half the cluster, `seed` to the site's seed, the policy
+/// to the site's configured [`SchedulingPolicy`].
+///
+/// ```
+/// use shifter_rs::{Site, StormSpec};
+///
+/// let mut site = Site::builder().nodes(8).build().unwrap();
+/// let report = site
+///     .run_storm(&StormSpec::new().tenants(4).jobs(32).seed(7))
+///     .unwrap();
+/// assert_eq!(report.records.len(), 32);
+/// ```
+#[derive(Default)]
+pub struct StormSpec {
+    /// Full base-model override; unset knobs below fall back to it (or
+    /// to the site-shaped default when it is `None`).
+    traffic: Option<TrafficModel>,
+    tenants: Option<u32>,
+    jobs: Option<u32>,
+    arrival_rate_per_min: Option<f64>,
+    duration_secs: Option<f64>,
+    mean_runtime_secs: Option<f64>,
+    max_width: Option<u32>,
+    seed: Option<u64>,
+    stream: Option<Vec<TenantJob>>,
+    policy: Option<Box<dyn SchedulingPolicy>>,
+    trace_path: Option<PathBuf>,
+}
+
+impl StormSpec {
+    /// An empty spec: synthesize the site's default traffic under the
+    /// site's policy, no trace artifact.
+    pub fn new() -> StormSpec {
+        StormSpec::default()
+    }
+
+    /// Number of competing tenants to synthesize.
+    pub fn tenants(mut self, tenants: u32) -> StormSpec {
+        self.tenants = Some(tenants);
+        self
+    }
+
+    /// Number of jobs in the synthesized stream.
+    pub fn jobs(mut self, jobs: u32) -> StormSpec {
+        self.jobs = Some(jobs);
+        self
+    }
+
+    /// Mean Poisson arrival rate, jobs per simulated minute.
+    pub fn arrival_rate_per_min(mut self, rate: f64) -> StormSpec {
+        self.arrival_rate_per_min = Some(rate);
+        self
+    }
+
+    /// Stop synthesizing arrivals past this horizon (seconds;
+    /// `f64::INFINITY` disables the cap).
+    pub fn duration_secs(mut self, secs: f64) -> StormSpec {
+        self.duration_secs = Some(secs);
+        self
+    }
+
+    /// Mean application runtime (log-normal median), seconds.
+    pub fn mean_runtime_secs(mut self, secs: f64) -> StormSpec {
+        self.mean_runtime_secs = Some(secs);
+        self
+    }
+
+    /// Widest job width to synthesize, in nodes. Defaults to half the
+    /// site's cluster (at least one node).
+    pub fn max_width(mut self, width: u32) -> StormSpec {
+        self.max_width = Some(width);
+        self
+    }
+
+    /// Deterministic seed for the synthesized stream. Defaults to the
+    /// site's seed.
+    pub fn seed(mut self, seed: u64) -> StormSpec {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Replace the whole base [`TrafficModel`] (skew exponents, class
+    /// weights, runtime spread, …). Knob setters above still override
+    /// individual fields on top of it.
+    pub fn traffic(mut self, traffic: TrafficModel) -> StormSpec {
+        self.traffic = Some(traffic);
+        self
+    }
+
+    /// Schedule this explicit pre-generated job stream instead of
+    /// synthesizing one — the form benches use to replay the *same*
+    /// stream under two policies. Synthesis knobs are ignored.
+    pub fn job_stream(mut self, jobs: Vec<TenantJob>) -> StormSpec {
+        self.stream = Some(jobs);
+        self
+    }
+
+    /// Run under this policy instead of the site's configured one.
+    pub fn policy(
+        mut self,
+        policy: impl SchedulingPolicy + 'static,
+    ) -> StormSpec {
+        self.policy = Some(Box::new(policy));
+        self
+    }
+
+    /// After the storm, export the site's telemetry as a Chrome
+    /// trace-event JSONL file at this path (requires the site to be
+    /// built with [`SiteBuilder::telemetry`] for the trace to be
+    /// non-empty).
+    pub fn trace_path(
+        mut self,
+        path: impl Into<PathBuf>,
+    ) -> StormSpec {
+        self.trace_path = Some(path.into());
+        self
+    }
+
+    /// Resolve the synthesis model this spec describes for `site`:
+    /// explicit base model (or the site-shaped default), then the
+    /// individual knob overrides.
+    fn resolve_traffic(&self, site: &Site) -> TrafficModel {
+        let mut t = self
+            .traffic
+            .clone()
+            .unwrap_or_else(|| site.site_traffic());
+        if let Some(tenants) = self.tenants {
+            t.tenants = tenants;
+        }
+        if let Some(jobs) = self.jobs {
+            t.jobs = jobs;
+        }
+        if let Some(rate) = self.arrival_rate_per_min {
+            t.arrival_rate_per_min = rate;
+        }
+        if let Some(secs) = self.duration_secs {
+            t.duration_secs = secs;
+        }
+        if let Some(secs) = self.mean_runtime_secs {
+            t.mean_runtime_secs = secs;
+        }
+        if let Some(width) = self.max_width {
+            t.max_width = width;
+        }
+        if let Some(seed) = self.seed {
+            t.seed = seed;
+        }
+        t
+    }
 }
 
 /// A fully wired, validated site — the one handle user workflows need.
@@ -195,7 +359,18 @@ impl Site {
     /// A traffic model shaped to this site: the site's seed, and a
     /// maximum job width of half the cluster (the storm default the CLI
     /// and benches share).
+    #[deprecated(
+        since = "0.3.0",
+        note = "the site-shaped defaults are applied automatically by \
+                `Site::run_storm`; set overrides on `StormSpec` instead"
+    )]
     pub fn default_traffic(&self) -> TrafficModel {
+        self.site_traffic()
+    }
+
+    /// The site-shaped synthesis defaults (`StormSpec` knobs left unset
+    /// resolve against this).
+    fn site_traffic(&self) -> TrafficModel {
         TrafficModel {
             max_width: (self.cluster.total_nodes() / 2).max(1),
             seed: self.seed,
@@ -220,7 +395,7 @@ impl Site {
                 source: e,
             })?;
         if !state.terminal() {
-            self.fabric.tick(&self.registry, DRAIN_SECS);
+            self.fabric.drain(&self.registry);
         }
 
         let Some(job) = self.fabric.cluster().status(reference) else {
@@ -259,7 +434,7 @@ impl Site {
                 category: "pull",
                 name: &format!("pull:{reference}"),
                 track: "gateway",
-                start_secs: 0.0,
+                start: SimTime::ZERO,
                 dur_secs: turnaround,
             });
             if let Some(id) = span {
@@ -335,7 +510,7 @@ impl Site {
                 ));
             }
         }
-        self.fabric.tick(&self.registry, DRAIN_SECS);
+        self.fabric.drain(&self.registry);
         failures
     }
 
@@ -405,28 +580,65 @@ impl Site {
 
     // -- storm ------------------------------------------------------------
 
+    /// Run the multi-tenant storm described by `spec` (see
+    /// [`StormSpec`]): synthesize or replay the job stream, schedule it
+    /// on the virtual-time kernel under the spec's (or the site's)
+    /// policy, and optionally export the Chrome trace artifact.
+    pub fn run_storm(
+        &mut self,
+        spec: &StormSpec,
+    ) -> Result<TenancyReport, SiteError> {
+        let report = match &spec.stream {
+            Some(jobs) => self.storm_impl(jobs, spec.policy.as_deref()),
+            None => {
+                let jobs =
+                    spec.resolve_traffic(self).generate(&self.cluster);
+                self.storm_impl(&jobs, spec.policy.as_deref())
+            }
+        };
+        if let Some(path) = &spec.trace_path {
+            let trace = self.telemetry.chrome_trace_jsonl();
+            std::fs::write(path, trace).map_err(|source| {
+                SiteError::Trace {
+                    path: path.display().to_string(),
+                    source,
+                }
+            })?;
+        }
+        Ok(report)
+    }
+
     /// Synthesize `traffic` against this site's cluster and run the
     /// whole multi-tenant storm under the site's configured
     /// [`SchedulingPolicy`].
+    #[deprecated(
+        since = "0.3.0",
+        note = "use `Site::run_storm` with `StormSpec::new().traffic(...)`"
+    )]
     pub fn storm(&mut self, traffic: &TrafficModel) -> TenancyReport {
         let jobs = traffic.generate(&self.cluster);
-        self.run_storm(&jobs, None)
+        self.storm_impl(&jobs, None)
     }
 
     /// Run an explicit pre-generated job stream under an explicit
     /// policy — the form the benches use to schedule the *same* stream
     /// under two policies and compare.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use `Site::run_storm` with \
+                `StormSpec::new().job_stream(...).policy(...)`"
+    )]
     pub fn storm_with(
         &mut self,
         jobs: &[TenantJob],
         policy: &dyn SchedulingPolicy,
     ) -> TenancyReport {
-        self.run_storm(jobs, Some(policy))
+        self.storm_impl(jobs, Some(policy))
     }
 
     // -- internals --------------------------------------------------------
 
-    fn run_storm(
+    fn storm_impl(
         &mut self,
         jobs: &[TenantJob],
         policy: Option<&dyn SchedulingPolicy>,
@@ -614,6 +826,52 @@ mod tests {
             .spans()
             .iter()
             .any(|s| s.category == "job" && s.parent.is_none()));
+    }
+
+    #[test]
+    fn storm_spec_replay_matches_the_deprecated_positional_form() {
+        use crate::tenancy::Fifo;
+
+        let build = || {
+            Site::builder().nodes(8).seed(11).build().unwrap()
+        };
+        let mut a = build();
+        let jobs =
+            StormSpec::new().jobs(12).resolve_traffic(&a).generate(a.cluster());
+        let new = a
+            .run_storm(
+                &StormSpec::new().job_stream(jobs.clone()).policy(Fifo),
+            )
+            .unwrap();
+        let mut b = build();
+        #[allow(deprecated)]
+        let old = b.storm_with(&jobs, &Fifo);
+        assert_eq!(new.to_json().to_string(), old.to_json().to_string());
+    }
+
+    #[test]
+    fn storm_spec_knobs_override_the_site_defaults() {
+        let mut site =
+            Site::builder().nodes(8).seed(3).build().unwrap();
+        let resolved = StormSpec::new()
+            .tenants(2)
+            .jobs(9)
+            .max_width(2)
+            .seed(99)
+            .resolve_traffic(&site);
+        assert_eq!(resolved.tenants, 2);
+        assert_eq!(resolved.jobs, 9);
+        assert_eq!(resolved.max_width, 2);
+        assert_eq!(resolved.seed, 99);
+        // unset knobs keep the site shape: width = half of 8 unless set
+        let shaped = StormSpec::new().resolve_traffic(&site);
+        assert_eq!(shaped.max_width, 4);
+        assert_eq!(shaped.seed, 3);
+
+        let report = site
+            .run_storm(&StormSpec::new().tenants(2).jobs(9).seed(99))
+            .unwrap();
+        assert_eq!(report.records.len(), 9);
     }
 
     #[test]

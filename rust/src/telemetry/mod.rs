@@ -41,7 +41,12 @@
 //! with a single branch and no allocation, so instrumented hot paths pay
 //! ~nothing when tracing is off.
 //!
+//! Span starts are [`SimTime`] instants from the virtual-time kernel
+//! (DESIGN.md S24), so a recording is bit-identical across runs and
+//! host thread counts; durations stay `f64` seconds.
+//!
 //! ```
+//! use shifter_rs::sim::SimTime;
 //! use shifter_rs::telemetry::{SpanDraft, Telemetry};
 //!
 //! let tel = Telemetry::new(true);
@@ -50,7 +55,7 @@
 //!     category: "job",
 //!     name: "job:ubuntu:xenial",
 //!     track: "jobs",
-//!     start_secs: 0.0,
+//!     start: SimTime::ZERO,
 //!     dur_secs: 4.2,
 //! });
 //! tel.span(SpanDraft {
@@ -58,7 +63,7 @@
 //!     category: "pull",
 //!     name: "pull:ubuntu:xenial",
 //!     track: "gateway",
-//!     start_secs: 0.0,
+//!     start: SimTime::ZERO,
 //!     dur_secs: 3.1,
 //! });
 //! tel.count("fabric.requests", 1);
@@ -71,6 +76,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::metrics::percentile_sorted;
+use crate::sim::SimTime;
 use crate::util::json::Json;
 
 /// Cap on retained histogram samples: the first this many observations
@@ -95,8 +101,8 @@ pub struct SpanRecord {
     /// Display lane the Chrome export maps to a thread
     /// (`"node-00042"`, `"tenant:tenant-03"`, `"gateway"`, …).
     pub track: String,
-    /// Simulated start time, in seconds.
-    pub start_secs: f64,
+    /// Simulated start instant, from the virtual-time kernel.
+    pub start: SimTime,
     /// Simulated duration, in seconds (0 for instant events).
     pub dur_secs: f64,
     /// Key/value annotations, in insertion order.
@@ -104,9 +110,15 @@ pub struct SpanRecord {
 }
 
 impl SpanRecord {
+    /// Simulated start time, in seconds (JSON/report compatibility
+    /// accessor over [`SpanRecord::start`]).
+    pub fn start_secs(&self) -> f64 {
+        self.start.as_secs_f64()
+    }
+
     /// Simulated end time (`start + dur`).
     pub fn end_secs(&self) -> f64 {
-        self.start_secs + self.dur_secs
+        self.start.as_secs_f64() + self.dur_secs
     }
 }
 
@@ -123,8 +135,8 @@ pub struct SpanDraft<'a> {
     pub name: &'a str,
     /// Display lane (see [`SpanRecord::track`]).
     pub track: &'a str,
-    /// Simulated start time, in seconds.
-    pub start_secs: f64,
+    /// Simulated start instant.
+    pub start: SimTime,
     /// Simulated duration, in seconds.
     pub dur_secs: f64,
 }
@@ -135,14 +147,22 @@ pub struct SpanDraft<'a> {
 /// scheduler passes one to
 /// [`crate::launch::LaunchScheduler::launch_on_traced`]; the launch
 /// scheduler forwards the same idea to the runtime through the
-/// `trace_parent` / `trace_start_secs` fields on
+/// `trace_parent` / `trace_start` fields on
 /// [`crate::RunOptions`].
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct TraceCtx {
     /// Span the callee's spans should parent under.
     pub parent: Option<u64>,
-    /// Absolute simulated second the callee's interval starts at.
-    pub start_secs: f64,
+    /// Absolute simulated instant the callee's interval starts at.
+    pub start: SimTime,
+}
+
+impl TraceCtx {
+    /// The start instant in seconds (compatibility accessor over
+    /// [`TraceCtx::start`]).
+    pub fn start_secs(&self) -> f64 {
+        self.start.as_secs_f64()
+    }
 }
 
 /// A bounded histogram: exact count/sum/min/max plus the first
@@ -315,7 +335,7 @@ impl Telemetry {
             category: draft.category,
             name: draft.name.to_string(),
             track: draft.track.to_string(),
-            start_secs: draft.start_secs,
+            start: draft.start,
             dur_secs: draft.dur_secs,
             attrs: Vec::new(),
         };
@@ -395,9 +415,8 @@ impl Telemetry {
             .map(Histogram::snapshot)
     }
 
-    /// Every recorded span, sorted by `(start_secs, id)` — worker
-    /// threads record concurrently, so raw insertion order is not
-    /// deterministic but this view is.
+    /// Every recorded span, sorted by `(start, id)` — a deterministic
+    /// view regardless of the order layers recorded in.
     pub fn spans(&self) -> Vec<SpanRecord> {
         let mut spans = self
             .inner
@@ -405,9 +424,7 @@ impl Telemetry {
             .expect("telemetry lock poisoned")
             .spans
             .clone();
-        spans.sort_by(|a, b| {
-            a.start_secs.total_cmp(&b.start_secs).then(a.id.cmp(&b.id))
-        });
+        spans.sort_by(|a, b| a.start.cmp(&b.start).then(a.id.cmp(&b.id)));
         spans
     }
 
@@ -480,7 +497,7 @@ impl Telemetry {
                 ("ph", Json::str("X")),
                 ("pid", Json::Num(1.0)),
                 ("tid", Json::Num(tid_of(&s.track))),
-                ("ts", Json::Num(s.start_secs * 1e6)),
+                ("ts", Json::Num(s.start.as_secs_f64() * 1e6)),
                 ("dur", Json::Num(s.dur_secs * 1e6)),
                 ("args", Json::obj(args)),
             ]);
@@ -547,7 +564,7 @@ mod tests {
             category: "test",
             name,
             track: "t0",
-            start_secs: start,
+            start: SimTime::from_secs(start),
             dur_secs: dur,
         }
     }
@@ -694,7 +711,7 @@ mod tests {
                             category: "test",
                             name: &format!("w{w}-{i}"),
                             track: "t",
-                            start_secs: f64::from(i),
+                            start: SimTime::from_secs(f64::from(i)),
                             dur_secs: 1.0,
                         });
                         tel.count("n", 1);

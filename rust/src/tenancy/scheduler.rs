@@ -3,8 +3,11 @@
 //! [`LaunchScheduler`] with a whole stream of competing jobs over one
 //! shared [`DistributionFabric`].
 //!
-//! Event loop: arrivals and completions advance simulated time; at every
-//! event the queue is re-ordered by the active
+//! Event loop (DESIGN.md S24): the storm is the virtual-time kernel's
+//! first native client. Every arrival seeds the [`crate::sim::SimKernel`]
+//! up front, each start schedules its own completion event, and the run
+//! loop is a pure event drain — one scheduling pass per simultaneity
+//! batch. At every batch the queue is re-ordered by the active
 //! [`SchedulingPolicy`] (a pluggable trait object — see
 //! [`super::policy`]) and a scheduling pass decides who starts *now*:
 //!
@@ -36,6 +39,7 @@ use crate::distrib::DistributionFabric;
 use crate::launch::{LaunchCluster, LaunchScheduler, RetryPolicy};
 use crate::registry::Registry;
 use crate::shifter::ExtensionRegistry;
+use crate::sim::{SimKernel, SimTime};
 use crate::telemetry::{SpanDraft, Telemetry, TraceCtx};
 use crate::wlm::fairshare::ShareLedger;
 
@@ -43,12 +47,17 @@ use super::policy::{SchedulingPolicy, DEFAULT_POLICY};
 use super::report::{JobRecord, TenancyReport};
 use super::traffic::TenantJob;
 
-/// Time-comparison slack for coincident events.
+/// Time-comparison slack for coincident events (the simultaneity window
+/// handed to [`SimKernel::pop_batch`]).
 const EPS: f64 = 1e-9;
 
-/// One blocking drain of the gateway cluster per start batch (same
-/// convention as `DistributionFabric::pull_blocking`).
-const PREFETCH_DRAIN_SECS: f64 = 1e9;
+/// Events on the storm kernel (DESIGN.md S24).
+enum StormEvent {
+    /// The stream job at this index joins the queue.
+    Arrival(usize),
+    /// The stream job at this index releases its nodes.
+    Completion(usize),
+}
 
 /// A job currently occupying nodes.
 struct Running {
@@ -201,7 +210,16 @@ impl<'a> FairShareScheduler<'a> {
                 .then(a.cmp(&b))
         });
 
-        let mut next_arrival = 0usize;
+        // seed every arrival as a kernel event; ties pop in stream order
+        // because the seeding follows `order` and seq breaks ties
+        let mut kernel: SimKernel<StormEvent> = SimKernel::new();
+        for &idx in &order {
+            kernel.schedule_at(
+                SimTime::from_secs(jobs[idx].arrival_secs),
+                StormEvent::Arrival(idx),
+            );
+        }
+
         let mut queue: Vec<usize> = Vec::new();
         let mut running: Vec<Running> = Vec::new();
         let mut free: BTreeSet<u32> =
@@ -213,51 +231,22 @@ impl<'a> FairShareScheduler<'a> {
         let mut records: Vec<Option<JobRecord>> = vec![None; jobs.len()];
 
         let mut t = 0.0;
-        while next_arrival < order.len()
-            || !queue.is_empty()
-            || !running.is_empty()
-        {
-            // -- advance to the next event --------------------------------
-            let arrival = (next_arrival < order.len())
-                .then(|| jobs[order[next_arrival]].arrival_secs);
-            let completion = running
-                .iter()
-                .map(|r| r.end_secs)
-                .min_by(f64::total_cmp);
-            t = match (arrival, completion) {
-                (Some(a), Some(c)) => a.min(c),
-                (Some(a), None) => a,
-                (None, Some(c)) => c,
-                // nothing arrives and nothing runs, yet jobs queue: they
-                // can never start (wider than the cluster) — fail them
-                (None, None) => {
-                    for idx in queue.drain(..) {
-                        records[idx] = Some(failed_record(
-                            &jobs[idx],
-                            t,
-                            "unschedulable: wider than the cluster",
-                        ));
+        while !kernel.is_empty() {
+            // -- drain one simultaneity batch -----------------------------
+            let batch = kernel.pop_batch(EPS);
+            t = batch[0].0.as_secs_f64();
+            for (_, event) in batch {
+                match event {
+                    StormEvent::Completion(idx) => {
+                        if let Some(pos) =
+                            running.iter().position(|r| r.idx == idx)
+                        {
+                            let done = running.swap_remove(pos);
+                            free.extend(done.nodes);
+                        }
                     }
-                    break;
+                    StormEvent::Arrival(idx) => queue.push(idx),
                 }
-            };
-
-            // -- completions at t -----------------------------------------
-            let mut i = 0;
-            while i < running.len() {
-                if running[i].end_secs <= t + EPS {
-                    let done = running.swap_remove(i);
-                    free.extend(done.nodes);
-                } else {
-                    i += 1;
-                }
-            }
-            // -- arrivals at t --------------------------------------------
-            while next_arrival < order.len()
-                && jobs[order[next_arrival]].arrival_secs <= t + EPS
-            {
-                queue.push(order[next_arrival]);
-                next_arrival += 1;
             }
             // -- scheduling pass ------------------------------------------
             self.schedule_pass(
@@ -265,12 +254,22 @@ impl<'a> FairShareScheduler<'a> {
                 jobs,
                 &launcher,
                 fabric,
+                &mut kernel,
                 &mut queue,
                 &mut running,
                 &mut free,
                 &mut ledger,
                 &mut records,
             );
+        }
+        // nothing left to fire, yet jobs queue: they can never start
+        // (defensive — the pass drops too-wide jobs itself)
+        for idx in queue.drain(..) {
+            records[idx] = Some(failed_record(
+                &jobs[idx],
+                t,
+                "unschedulable: wider than the cluster",
+            ));
         }
 
         let records: Vec<JobRecord> = records
@@ -318,7 +317,8 @@ impl<'a> FairShareScheduler<'a> {
         keyed.into_iter().map(|(_, _, _, idx)| idx).collect()
     }
 
-    /// Decide who starts at time `t` and execute those launches.
+    /// Decide who starts at time `t` and execute those launches,
+    /// scheduling each start's completion back onto the kernel.
     #[allow(clippy::too_many_arguments)]
     fn schedule_pass(
         &self,
@@ -326,6 +326,7 @@ impl<'a> FairShareScheduler<'a> {
         jobs: &[TenantJob],
         launcher: &LaunchScheduler<'_>,
         fabric: &mut DistributionFabric,
+        kernel: &mut SimKernel<StormEvent>,
         queue: &mut Vec<usize>,
         running: &mut Vec<Running>,
         free: &mut BTreeSet<u32>,
@@ -341,7 +342,7 @@ impl<'a> FairShareScheduler<'a> {
                 category: "sched",
                 name: "pass",
                 track: "scheduler",
-                start_secs: t,
+                start: SimTime::from_secs(t),
                 dur_secs: 0.0,
             });
         }
@@ -417,9 +418,12 @@ impl<'a> FairShareScheduler<'a> {
             return;
         }
 
-        // batch-prefetch every image starting this pass, so concurrent
-        // distinct references contend on the shard queues while identical
-        // ones coalesce — then drain once
+        // align the fabric's shard clocks to storm time so pulls enqueue
+        // at `t` on the one kernel clock, then batch-prefetch every image
+        // starting this pass — concurrent distinct references contend on
+        // the shard queues while identical ones coalesce — and drain the
+        // batch to completion in exact event time
+        fabric.advance_to(self.registry, SimTime::from_secs(t));
         for &(idx, _) in &to_start {
             let j = &jobs[idx];
             let _ = fabric.request(
@@ -428,7 +432,7 @@ impl<'a> FairShareScheduler<'a> {
                 &format!("{}-job-{:04}", j.tenant, j.id),
             );
         }
-        fabric.tick(self.registry, PREFETCH_DRAIN_SECS);
+        fabric.drain(self.registry);
 
         // execute the launches on explicit node sets
         for (idx, backfilled) in to_start {
@@ -450,7 +454,7 @@ impl<'a> FairShareScheduler<'a> {
                 &nodes,
                 TraceCtx {
                     parent: root,
-                    start_secs: t,
+                    start: SimTime::from_secs(t),
                 },
             );
             match launched {
@@ -485,6 +489,10 @@ impl<'a> FairShareScheduler<'a> {
                         nodes,
                         end_secs: t + service,
                     });
+                    kernel.schedule_at(
+                        SimTime::from_secs(t + service),
+                        StormEvent::Completion(idx),
+                    );
                 }
                 Err(e) => {
                     free.extend(nodes);
@@ -524,7 +532,7 @@ impl<'a> FairShareScheduler<'a> {
                 category: "job",
                 name: &format!("job:{}/{:04}", j.tenant, j.id),
                 track: &track,
-                start_secs: j.arrival_secs,
+                start: SimTime::from_secs(j.arrival_secs),
                 dur_secs: wait + service,
             },
         );
@@ -539,7 +547,7 @@ impl<'a> FairShareScheduler<'a> {
                 category: "wait",
                 name: "wait",
                 track: &track,
-                start_secs: j.arrival_secs,
+                start: SimTime::from_secs(j.arrival_secs),
                 dur_secs: wait,
             });
         }
@@ -548,7 +556,7 @@ impl<'a> FairShareScheduler<'a> {
             category: "app",
             name: &format!("app:{}", j.spec.image),
             track: &track,
-            start_secs: t + overhead,
+            start: SimTime::from_secs(t + overhead),
             dur_secs: service - overhead,
         });
         tele.count("tenancy.starts", 1);
@@ -789,7 +797,7 @@ mod tests {
                 .find(|s| s.name == format!("job:{}/{:04}", rec.tenant, rec.id))
                 .expect("root span for every record");
             assert_eq!(root.parent, None);
-            assert!((root.start_secs - rec.arrival_secs).abs() < 1e-9);
+            assert!((root.start_secs() - rec.arrival_secs).abs() < 1e-9);
             assert!((root.end_secs() - rec.end_secs).abs() < 1e-6);
             let children: Vec<_> = spans
                 .iter()

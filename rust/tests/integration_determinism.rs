@@ -1,0 +1,87 @@
+//! Integration: bit-exact determinism of the virtual-time kernel
+//! (DESIGN.md S24) — the same seed must produce byte-identical
+//! `LaunchReport` / `TenancyReport` JSON artifacts and an identical
+//! telemetry event stream on every run, regardless of how many host
+//! threads the test harness uses (`--test-threads=1` and the default
+//! parallel run must agree). Simulated time comes from one event queue,
+//! never from the host clock or scheduler, so the whole trace replays
+//! bit-for-bit.
+
+use shifter_rs::launch::JobSpec;
+use shifter_rs::{Site, StormSpec, SystemProfile};
+
+/// One traced hetero launch on a fresh site: the full pipeline — WLM
+/// allocation, coalesced pull, per-node slot events, MPI swap — under
+/// the *default* retry policy, so the seeded jitter/straggler noise is
+/// exercised too. Returns the report JSON and the Chrome trace.
+fn launch_once() -> (String, String) {
+    let mut site = Site::builder()
+        .hetero_daint_linux(16)
+        .telemetry(true)
+        .build()
+        .unwrap();
+    let spec =
+        JobSpec::new("osu-benchmarks:mpich-3.1.4", &["./osu_bw"], 16)
+            .with_mpi();
+    let report = site.launch(&spec).unwrap();
+    assert_eq!(report.succeeded(), 16);
+    (
+        report.to_json().to_string(),
+        site.telemetry().chrome_trace_jsonl(),
+    )
+}
+
+/// One traced storm on a fresh site: synthesized stream, fair-share
+/// scheduling, completions via kernel events.
+fn storm_once() -> (String, String) {
+    let mut site = Site::builder()
+        .profile(SystemProfile::piz_daint())
+        .nodes(16)
+        .telemetry(true)
+        .seed(13)
+        .build()
+        .unwrap();
+    let report = site
+        .run_storm(&StormSpec::new().tenants(3).jobs(10))
+        .unwrap();
+    assert_eq!(report.failed(), 0);
+    (
+        report.to_json().to_string(),
+        site.telemetry().chrome_trace_jsonl(),
+    )
+}
+
+#[test]
+fn launch_report_and_trace_are_byte_identical_across_runs() {
+    let (report_a, trace_a) = launch_once();
+    let (report_b, trace_b) = launch_once();
+    assert_eq!(report_a, report_b, "LaunchReport JSON must replay");
+    assert_eq!(trace_a, trace_b, "telemetry event order must replay");
+    assert!(!trace_a.is_empty());
+}
+
+#[test]
+fn tenancy_report_and_trace_are_byte_identical_across_runs() {
+    let (report_a, trace_a) = storm_once();
+    let (report_b, trace_b) = storm_once();
+    assert_eq!(report_a, report_b, "TenancyReport JSON must replay");
+    assert_eq!(trace_a, trace_b, "telemetry event order must replay");
+    assert!(!trace_a.is_empty());
+}
+
+#[test]
+fn results_are_independent_of_host_thread_context() {
+    // virtual time never reads the host scheduler: the same storm run
+    // from several OS threads at once — the worst case a parallel test
+    // harness (`--test-threads=N`) can create — must agree byte for
+    // byte with the main-thread run
+    let (report_main, trace_main) = storm_once();
+    let handles: Vec<_> = (0..4)
+        .map(|_| std::thread::spawn(storm_once))
+        .collect();
+    for h in handles {
+        let (report, trace) = h.join().expect("worker run");
+        assert_eq!(report, report_main);
+        assert_eq!(trace, trace_main);
+    }
+}

@@ -19,7 +19,7 @@ use shifter_rs::tenancy::{
 };
 use shifter_rs::vfs::{MountTable, VirtualFs};
 use shifter_rs::wlm::ShareLedger;
-use shifter_rs::{Site, SiteError, SystemProfile};
+use shifter_rs::{Site, SiteError, StormSpec, SystemProfile};
 
 // -- builder validation ---------------------------------------------------
 
@@ -227,16 +227,24 @@ fn a_custom_policy_plugs_into_the_storm_scheduler() {
         cpu_job(1, 1.0, 4, 500.0),
         cpu_job(2, 2.0, 4, 50.0),
     ];
-    let run = |policy: &dyn SchedulingPolicy| {
+    fn run(
+        jobs: &[TenantJob],
+        policy: impl SchedulingPolicy + 'static,
+    ) -> shifter_rs::tenancy::TenancyReport {
         Site::builder()
             .profile(SystemProfile::piz_daint())
             .nodes(4)
             .build()
             .unwrap()
-            .storm_with(&jobs, policy)
-    };
+            .run_storm(
+                &StormSpec::new()
+                    .job_stream(jobs.to_vec())
+                    .policy(policy),
+            )
+            .unwrap()
+    }
 
-    let sjf = run(&ShortestFirst);
+    let sjf = run(&jobs, ShortestFirst);
     assert_eq!(sjf.completed(), 3);
     assert_eq!(sjf.policy, "shortest-first");
     assert!(
@@ -249,7 +257,7 @@ fn a_custom_policy_plugs_into_the_storm_scheduler() {
     // the builtin fair-share policy on the same stream keeps arrival
     // order (equal shares, aging dominated by arrival ties) — the custom
     // policy really changed the schedule
-    let fair = run(&FairShare::default());
+    let fair = run(&jobs, FairShare::default());
     assert!(
         fair.records[1].start_secs < fair.records[2].start_secs,
         "fair-share keeps the earlier arrival first here"
@@ -264,13 +272,11 @@ fn a_custom_policy_plugs_into_the_storm_scheduler() {
         .build()
         .unwrap();
     assert_eq!(site.policy().name(), "shortest-first");
-    let model = shifter_rs::TrafficModel {
-        tenants: 2,
-        jobs: 4,
-        max_width: 2,
-        ..site.default_traffic()
-    };
-    let via_builder = site.storm(&model);
+    let via_builder = site
+        .run_storm(
+            &StormSpec::new().tenants(2).jobs(4).max_width(2),
+        )
+        .unwrap();
     assert_eq!(via_builder.policy, "shortest-first");
     assert_eq!(via_builder.completed(), 4);
 }

@@ -9,9 +9,8 @@ use std::collections::BTreeMap;
 
 use shifter_rs::launch::{JobSpec, RetryPolicy};
 use shifter_rs::telemetry::SpanRecord;
-use shifter_rs::tenancy::TrafficModel;
 use shifter_rs::util::json::Json;
-use shifter_rs::{Site, SystemProfile};
+use shifter_rs::{Site, StormSpec, SystemProfile};
 
 const EPS: f64 = 1e-6;
 
@@ -33,14 +32,14 @@ fn assert_well_formed_tree(spans: &[SpanRecord]) {
             .get(&pid)
             .unwrap_or_else(|| panic!("span {} orphaned: no parent {pid}", s.id));
         assert!(
-            s.start_secs >= parent.start_secs - EPS,
+            s.start_secs() >= parent.start_secs() - EPS,
             "span {} ({}) starts at {} before its parent {} ({}) at {}",
             s.id,
             s.name,
-            s.start_secs,
+            s.start_secs(),
             parent.id,
             parent.name,
-            parent.start_secs
+            parent.start_secs()
         );
         assert!(
             s.end_secs() <= parent.end_secs() + EPS,
@@ -94,7 +93,7 @@ fn hetero_launch_emits_one_rooted_contained_span_tree() {
     for n in &nodes {
         assert_eq!(n.parent, Some(roots[0].id));
         assert!(
-            n.start_secs >= pull.end_secs() - EPS,
+            n.start_secs() >= pull.end_secs() - EPS,
             "node execution begins after the coalesced pull"
         );
     }
@@ -156,12 +155,9 @@ fn storm_trace_jsonl_covers_95_percent_of_every_job() {
         .retry_policy(RetryPolicy::strict())
         .build()
         .unwrap();
-    let model = TrafficModel {
-        tenants: 4,
-        jobs: 32,
-        ..site.default_traffic()
-    };
-    let report = site.storm(&model);
+    let report = site
+        .run_storm(&StormSpec::new().tenants(4).jobs(32))
+        .unwrap();
     assert_eq!(report.failed(), 0);
     assert_well_formed_tree(&site.telemetry().spans());
 
@@ -284,12 +280,9 @@ fn disabled_telemetry_records_nothing_across_the_stack() {
     site.pull("ubuntu:xenial").unwrap();
     site.launch(&JobSpec::new("ubuntu:xenial", &["true"], 8))
         .unwrap();
-    let model = TrafficModel {
-        tenants: 2,
-        jobs: 4,
-        ..site.default_traffic()
-    };
-    let report = site.storm(&model);
+    let report = site
+        .run_storm(&StormSpec::new().tenants(2).jobs(4))
+        .unwrap();
     assert_eq!(report.failed(), 0);
 
     let tel = site.telemetry();

@@ -8,9 +8,9 @@
 use shifter_rs::launch::{JobSpec, RetryPolicy};
 use shifter_rs::tenancy::{
     unique_image_refs, FairShare, Fifo, JobClass, SchedulingPolicy,
-    TenantJob, TrafficModel,
+    TenancyReport, TenantJob, TrafficModel,
 };
-use shifter_rs::Site;
+use shifter_rs::{Site, StormSpec};
 
 fn hetero_site(nodes: u32) -> Site {
     // strict retry: deterministic per-node timings and exact cache/pull
@@ -21,6 +21,19 @@ fn hetero_site(nodes: u32) -> Site {
         .retry_policy(RetryPolicy::strict())
         .build()
         .expect("valid test site")
+}
+
+/// Replay an explicit stream under `policy` on a fresh hetero site.
+fn run_stream(
+    nodes: u32,
+    jobs: &[TenantJob],
+    policy: impl SchedulingPolicy + 'static,
+) -> TenancyReport {
+    hetero_site(nodes)
+        .run_storm(
+            &StormSpec::new().job_stream(jobs.to_vec()).policy(policy),
+        )
+        .expect("storm runs")
 }
 
 fn small_storm(jobs: u32) -> TrafficModel {
@@ -52,10 +65,10 @@ fn cpu_job(
 
 #[test]
 fn tenant_storm_runs_end_to_end_on_the_hetero_cluster() {
-    let mut site = hetero_site(64);
+    let site = hetero_site(64);
     let stream = small_storm(24).generate(site.cluster());
     assert_eq!(stream.len(), 24);
-    let report = site.storm_with(&stream, &FairShare::default());
+    let report = run_stream(64, &stream, FairShare::default());
 
     assert_eq!(report.completed(), 24, "every job must complete");
     assert_eq!(report.failed(), 0);
@@ -100,11 +113,8 @@ fn backfill_beats_fifo_on_a_contended_stream() {
         cpu_job(3, 3, 3.0, 4, 60.0),
         cpu_job(4, 0, 4.0, 2, 120.0),
     ];
-    let run = |policy: &dyn SchedulingPolicy| {
-        hetero_site(16).storm_with(&jobs, policy)
-    };
-    let fifo = run(&Fifo);
-    let fair = run(&FairShare::default());
+    let fifo = run_stream(16, &jobs, Fifo);
+    let fair = run_stream(16, &jobs, FairShare::default());
     assert_eq!(fifo.completed(), 5);
     assert_eq!(fair.completed(), 5);
     assert_eq!(fifo.backfilled_jobs, 0, "fifo never backfills");
@@ -142,8 +152,7 @@ fn aging_keeps_the_heavy_tenants_from_starving_anyone() {
         .map(|i| cpu_job(i, 0, f64::from(i) * 5.0, 16, 300.0))
         .collect();
     jobs.push(cpu_job(8, 1, 45.0, 4, 60.0));
-    let mut site = hetero_site(16);
-    let report = site.storm_with(&jobs, &FairShare::default());
+    let report = run_stream(16, &jobs, FairShare::default());
     assert_eq!(report.completed(), 9);
     let light = &report.records[8];
     // the flood takes 8 * ~300s serially; the light job must cut far
@@ -164,8 +173,7 @@ fn warm_node_caches_survive_across_jobs_in_one_storm() {
         cpu_job(0, 0, 0.0, 8, 100.0),
         cpu_job(1, 0, 500.0, 8, 100.0),
     ];
-    let mut site = hetero_site(16);
-    let report = site.storm_with(&jobs, &FairShare::default());
+    let report = run_stream(16, &jobs, FairShare::default());
     assert_eq!(report.completed(), 2);
     // first job cold-fills 8 nodes; the second starts on the same free
     // prefix and hits all 8 caches
@@ -178,9 +186,9 @@ fn warm_node_caches_survive_across_jobs_in_one_storm() {
 #[test]
 fn storm_simulation_is_deterministic() {
     let run = || {
-        let mut site = hetero_site(32);
+        let site = hetero_site(32);
         let stream = small_storm(12).generate(site.cluster());
-        site.storm_with(&stream, &FairShare::default())
+        run_stream(32, &stream, FairShare::default())
     };
     let a = run();
     let b = run();
@@ -195,9 +203,9 @@ fn storm_simulation_is_deterministic() {
 }
 
 #[test]
-fn site_default_policy_drives_storm_via_traffic_model() {
-    // `Site::storm` uses the builder's policy and synthesizes the stream
-    // from the model against the site's own cluster
+fn site_default_policy_drives_storm_via_storm_spec() {
+    // a `StormSpec` with no policy override runs under the builder's
+    // policy, and unset knobs (seed, max width) inherit the site shape
     let mut site = Site::builder()
         .hetero_daint_linux(32)
         .gateway_shards(4)
@@ -205,13 +213,9 @@ fn site_default_policy_drives_storm_via_traffic_model() {
         .seed(11)
         .build()
         .unwrap();
-    let model = TrafficModel {
-        tenants: 3,
-        jobs: 8,
-        ..site.default_traffic()
-    };
-    assert_eq!(model.seed, 11, "the site seed feeds the default traffic");
-    let report = site.storm(&model);
+    let report = site
+        .run_storm(&StormSpec::new().tenants(3).jobs(8))
+        .unwrap();
     assert_eq!(report.completed(), 8);
     assert_eq!(report.policy, "fifo");
     assert_eq!(report.backfilled_jobs, 0);

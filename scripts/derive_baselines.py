@@ -1,0 +1,159 @@
+#!/usr/bin/env python3
+"""Produce the first checked-in baselines for the bench regression gate.
+
+Two modes:
+
+* **Toolchain mode** (default when ``cargo`` is on PATH): run the two
+  gated benches with the exact CI bench-smoke knobs
+  (``LAUNCH_SCALE_NODES=256``, ``EXTENSION_OVERHEAD_NODES=64``), then
+  record the fresh artifacts via ``bench_regression.py --update``. The
+  result is a full-magnitude baseline — commit ``rust/bench_baselines/``.
+
+* **Provisional mode** (``--provisional``, or automatic when cargo is
+  unavailable): write *schema* baselines that list every metric key the
+  CI-knob runs must produce (derived from the bench config grids), with
+  ``"provisional": true`` and no magnitudes. The gate then enforces
+  metric presence/positivity — a renamed or vanished metric fails CI —
+  but cannot flag magnitude drift until someone promotes the baseline
+  by re-running this script (or ``bench_regression.py --update``) with
+  a real toolchain.
+
+Either way the gate leaves bootstrap mode: a baseline file exists and
+is compared on every PR.
+
+Usage:
+    python3 scripts/derive_baselines.py [--provisional] \
+        [--baseline-dir rust/bench_baselines]
+"""
+
+import argparse
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+# the CI bench-smoke knobs (.github/workflows/ci.yml) — baselines are
+# only comparable when produced at exactly these caps
+LAUNCH_SCALE_NODES = 256
+EXTENSION_OVERHEAD_NODES = 64
+
+# OSU message sizes priced by the net-split table
+# (rust/src/fabric/mod.rs OSU_SIZES)
+OSU_SIZES = [32, 128, 512, 2048, 8192, 32768, 131072, 524288, 2097152]
+
+
+def launch_expected_metrics(cap):
+    """Metric keys launch_scale emits at LAUNCH_SCALE_NODES=cap.
+
+    Mirrors the bench's config grid: widths 1/64/1024/4096 clipped to
+    the cap (the cap itself appended when not already the last width),
+    homogeneous and heterogeneous partitions (hetero needs >= 2 nodes),
+    cold and warm cache phases.
+    """
+    widths = [n for n in (1, 64, 1024, 4096) if n <= cap]
+    if not widths or widths[-1] < cap:
+        widths.append(cap)
+    keys = []
+    for partitions in ("homog", "hetero"):
+        for nodes in widths:
+            if partitions == "hetero" and nodes < 2:
+                continue
+            for phase in ("cold", "warm"):
+                base = f"{partitions}/{nodes}/{phase}"
+                for m in ("p50_secs", "p95_secs", "p99_secs",
+                          "worst_secs"):
+                    keys.append(f"{base}.total.{m}")
+                for m in ("queue_wait_secs", "turnaround_secs"):
+                    keys.append(f"{base}.pull.{m}")
+    return keys
+
+
+def extensions_expected_metrics(cap):
+    """Metric keys extension_overhead emits at the CI cap."""
+    widths = [w for w in (1, 64, 1024) if w <= max(cap, 1)]
+    keys = []
+    for ext in ("gpu", "mpi", "net"):
+        for nodes in widths:
+            keys.append(f"inject/{ext}/{nodes}.inject_secs")
+    for size in OSU_SIZES:
+        keys.append(f"osu/{size}B.host_fabric_us")
+        keys.append(f"osu/{size}B.tcp_fallback_us")
+    return keys
+
+
+PROVISIONAL = [
+    ("BENCH_launch.json", "launch_scale", LAUNCH_SCALE_NODES,
+     launch_expected_metrics),
+    ("BENCH_extensions.json", "extension_overhead",
+     EXTENSION_OVERHEAD_NODES, extensions_expected_metrics),
+]
+
+
+def write_provisional(baseline_dir):
+    os.makedirs(baseline_dir, exist_ok=True)
+    for name, bench, cap, expected in PROVISIONAL:
+        doc = {
+            "bench": bench,
+            "max_nodes": cap,
+            "provisional": True,
+            "note": ("schema baseline: metric keys only; promote to "
+                     "magnitudes with scripts/derive_baselines.py on a "
+                     "machine with a Rust toolchain"),
+            "expected_metrics": expected(cap),
+        }
+        path = os.path.join(baseline_dir, name)
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=False)
+            f.write("\n")
+        print(f"  {name}: provisional baseline "
+              f"({len(doc['expected_metrics'])} metric keys) -> {path}")
+
+
+def run_benches_and_update(baseline_dir):
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    benches = [
+        ("launch_scale", {"LAUNCH_SCALE_NODES": str(LAUNCH_SCALE_NODES)}),
+        ("extension_overhead",
+         {"EXTENSION_OVERHEAD_NODES": str(EXTENSION_OVERHEAD_NODES)}),
+    ]
+    for bench, knobs in benches:
+        print(f"  running cargo bench --bench {bench} ({knobs})")
+        subprocess.run(
+            ["cargo", "bench", "--bench", bench],
+            cwd=os.path.join(root, "rust"),
+            env={**env, **knobs},
+            check=True,
+        )
+    subprocess.run(
+        [sys.executable, os.path.join(root, "scripts",
+                                      "bench_regression.py"),
+         "--update", "--baseline-dir", baseline_dir,
+         os.path.join(root, "rust", "BENCH_launch.json"),
+         os.path.join(root, "rust", "BENCH_extensions.json")],
+        check=True,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="derive first baselines for the bench regression gate"
+    )
+    ap.add_argument("--baseline-dir", default="rust/bench_baselines")
+    ap.add_argument("--provisional", action="store_true",
+                    help="write schema-only baselines without running "
+                         "the benches (automatic when cargo is missing)")
+    args = ap.parse_args()
+
+    if args.provisional or shutil.which("cargo") is None:
+        if not args.provisional:
+            print("cargo not found — falling back to provisional "
+                  "schema baselines")
+        write_provisional(args.baseline_dir)
+        return
+    run_benches_and_update(args.baseline_dir)
+
+
+if __name__ == "__main__":
+    main()
