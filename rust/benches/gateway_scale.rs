@@ -1,6 +1,7 @@
 //! gateway_scale — the distributed image-distribution benchmark
-//! (DESIGN.md S18): a 10 000-concurrent-node pull storm against the
-//! sharded gateway cluster, cold vs warm node caches, at 1/4/16 shards.
+//! (DESIGN.md S18, S25): a 10 000-concurrent-node pull storm against the
+//! sharded gateway cluster, cold vs warm node caches, at 1/4/16 shards,
+//! plus the distribution-fabric mechanisms layered on top.
 //!
 //! Reported (and asserted, like the paper-table benches):
 //!   * cold-storm makespan/throughput for a 32-image catalog at each shard
@@ -8,14 +9,24 @@
 //!   * per-node pull latency percentiles (p50/p95/p99) for cold vs warm
 //!     node caches — warm p99 must be >= 10x lower than cold;
 //!   * content-addressed-store dedup: bytes stored < the sum of per-image
-//!     bytes (the catalog shares one ubuntu base).
+//!     bytes (the catalog shares one ubuntu base);
+//!   * cascade fills: cold pull-storm fill time growing sub-linearly in
+//!     node count vs the linear Lustre broadcast baseline;
+//!   * lazy pull: container start-ready p99 >= 5x below the eager fill;
+//!   * chunked CAS: a derived image re-pull transfers only new chunks.
+//!
+//! The deterministic cascade/lazy/chunk metrics land in
+//! `BENCH_distrib.json` (`BENCH_DISTRIB_JSON` overrides the path) for
+//! the CI regression gate.
 
-use shifter_rs::distrib::DistributionFabric;
+use shifter_rs::distrib::{CascadeConfig, DistributionFabric};
 use shifter_rs::gateway::ImageSource;
 use shifter_rs::image::builder::{self, ImageBuilder};
+use shifter_rs::image::{ImageRef, Layer};
 use shifter_rs::metrics::{Stats, Table};
 use shifter_rs::pfs::LustreFs;
 use shifter_rs::registry::Registry;
+use shifter_rs::util::json::Json;
 use shifter_rs::util::prng::Rng;
 
 /// srun job width of the storm (paper scale: "thousands of compute
@@ -198,4 +209,283 @@ fn main() {
         serial / sharded,
         cold.p99 / warm.p99
     );
+
+    // -- phase 3: cascade fills vs the Lustre broadcast -------------------
+    let cascade_cfg = CascadeConfig {
+        cabinet_nodes: 64,
+        fanout: 3,
+    };
+    let widths = fill_widths(nodes);
+    let mut fill_table = Table::new(
+        "cold pull-storm fill: broadcast vs cascade",
+        &["nodes", "broadcast", "cascade", "gw fills", "peer xfers", "depth"],
+    );
+    let mut fill_rows: Vec<Json> = Vec::new();
+    let mut cascade_makespans: Vec<f64> = Vec::new();
+    let mut broadcast_makespans: Vec<f64> = Vec::new();
+    let mut eager_fills: Vec<f64> = Vec::new();
+    for &w in &widths {
+        let broadcast = storm_fill(&pfs, &registry, None, w);
+        let cascade = storm_fill(&pfs, &registry, Some(cascade_cfg), w);
+        assert_eq!(
+            cascade.stats.gateway_fills, 1,
+            "one gateway read per all-live cascade storm"
+        );
+        assert_eq!(cascade.stats.peer_transfers as usize, w - 1);
+        fill_table.row(&[
+            w.to_string(),
+            format!("{:.1}s", broadcast.makespan_secs),
+            format!("{:.2}s", cascade.makespan_secs),
+            cascade.stats.gateway_fills.to_string(),
+            cascade.stats.peer_transfers.to_string(),
+            cascade.stats.max_depth.to_string(),
+        ]);
+        fill_rows.push(Json::obj(vec![
+            ("nodes", Json::Num(w as f64)),
+            (
+                "broadcast_makespan_secs",
+                Json::num(broadcast.makespan_secs),
+            ),
+            ("cascade_makespan_secs", Json::num(cascade.makespan_secs)),
+            ("gateway_fills", Json::Num(cascade.stats.gateway_fills as f64)),
+            (
+                "peer_transfers",
+                Json::Num(cascade.stats.peer_transfers as f64),
+            ),
+            ("max_depth", Json::Num(cascade.stats.max_depth as f64)),
+        ]));
+        cascade_makespans.push(cascade.makespan_secs);
+        broadcast_makespans.push(broadcast.makespan_secs);
+        if w == nodes {
+            eager_fills = cascade.fills;
+        }
+    }
+    print!("{}", fill_table.render());
+
+    if widths.len() >= 2 {
+        let span = *widths.last().unwrap() as f64 / widths[0] as f64;
+        let (first, last) =
+            (cascade_makespans[0], *cascade_makespans.last().unwrap());
+        assert!(
+            last <= 4.0 * first,
+            "cascade fill must grow sub-linearly: {span:.0}x the nodes \
+             cost {first:.2}s -> {last:.2}s (> 4x)"
+        );
+    }
+    let (b_max, c_max) = (
+        *broadcast_makespans.last().unwrap(),
+        *cascade_makespans.last().unwrap(),
+    );
+    // decisive-win regime: the broadcast shares the OST array's 80 GB/s
+    // aggregate, so it only falls >= 4x behind the tree once the storm
+    // outruns it (~2000 nodes). At the reduced CI cap (500) the tree
+    // merely beats it; below that the regimes cross and no win holds
+    if nodes >= 2000 {
+        assert!(
+            c_max * 4.0 <= b_max,
+            "cascade must beat the broadcast by >= 4x at {nodes} nodes: \
+             cascade={c_max:.2}s broadcast={b_max:.1}s"
+        );
+    } else if nodes >= 500 {
+        assert!(
+            c_max < b_max,
+            "cascade must beat the broadcast at {nodes} nodes: \
+             cascade={c_max:.2}s broadcast={b_max:.1}s"
+        );
+    }
+    println!(
+        "cascade beats the {nodes}-node broadcast {:.1}x ✓",
+        b_max / c_max
+    );
+
+    // -- phase 4: lazy pull + chunked CAS ---------------------------------
+    let eager = Stats::from_samples(&eager_fills);
+    let (lazy_doc, chunks_doc) =
+        lazy_chunk_phase(&pfs, cascade_cfg, nodes, &eager);
+
+    write_artifact(nodes, cascade_cfg, fill_rows, lazy_doc, chunks_doc);
+}
+
+/// Storm widths for the fill-scaling sweep: ~1/16 and ~1/4 of the cap
+/// (floored at 32 nodes), then the cap itself.
+fn fill_widths(nodes: usize) -> Vec<usize> {
+    let step = |div: usize| nodes.div_ceil(div).clamp(32.min(nodes), nodes);
+    let mut widths = vec![step(16), step(4), nodes];
+    widths.dedup();
+    widths
+}
+
+/// One cold fill storm: `width` nodes materialize the flagship squashfs
+/// simultaneously, with or without cascade fills.
+struct StormFill {
+    /// Slowest node's fill — the storm's fill makespan.
+    makespan_secs: f64,
+    /// Per-node fill durations, node order.
+    fills: Vec<f64>,
+    /// Cascade accounting (zeroes for the broadcast baseline).
+    stats: shifter_rs::distrib::CascadeStats,
+}
+
+fn storm_fill(
+    pfs: &LustreFs,
+    registry: &Registry,
+    cascade: Option<CascadeConfig>,
+    width: usize,
+) -> StormFill {
+    let mut fabric = DistributionFabric::new(16, pfs.clone());
+    if let Some(cfg) = cascade {
+        fabric = fabric.with_cascade(cfg);
+    }
+    fabric
+        .pull_blocking(registry, "mega-app:1.0", "storm")
+        .unwrap();
+    let image = fabric.resolve("mega-app:1.0").unwrap();
+    let fills: Vec<f64> = (0..width)
+        .map(|node| {
+            fabric
+                .node_fetch_secs(image, node, width as u64)
+                .expect("fabric always models the node fetch")
+        })
+        .collect();
+    StormFill {
+        makespan_secs: fills.iter().copied().fold(0.0, f64::max),
+        fills,
+        stats: fabric.cascade_stats(),
+    }
+}
+
+/// Phase 4: one fabric with all three S25 mechanisms on. Measures the
+/// lazy start-ready split against the eager cascade fill, then re-pulls
+/// a one-file-changed derivative of the flagship to show chunk-level
+/// dedup collapsing the transfer. Returns the artifact's "lazy" and
+/// "chunks" documents.
+fn lazy_chunk_phase(
+    pfs: &LustreFs,
+    cfg: CascadeConfig,
+    nodes: usize,
+    eager: &Stats,
+) -> (Json, Json) {
+    let (mut registry, _) = storm_registry();
+    // mega-app:2.0 = 1.0 plus one 4 KB config file in the model layer:
+    // a different layer digest, but almost every chunk is unchanged
+    let mut v2 = registry.lookup("mega-app:1.0").unwrap().clone();
+    let mut tree = v2.layers.last().unwrap().tree.clone();
+    tree.add_file("/opt/mega/patch.cfg", 4_096, 0xFEED_FACE)
+        .unwrap();
+    *v2.layers.last_mut().unwrap() = Layer::new(tree, vec![]);
+    v2.reference = ImageRef::parse("mega-app:2.0").unwrap();
+    v2.manifest.layer_digests =
+        v2.layers.iter().map(|l| l.digest).collect();
+    registry.push(v2);
+
+    let mut fabric = DistributionFabric::new(16, pfs.clone())
+        .with_chunking(4 << 20)
+        .with_cascade(cfg)
+        .with_lazy_pull(true);
+    fabric
+        .pull_blocking(&registry, "mega-app:1.0", "storm")
+        .unwrap();
+    let t1 = turnaround_secs(&fabric, "mega-app:1.0");
+
+    let (start, tail) = {
+        let image = fabric.resolve("mega-app:1.0").unwrap();
+        let splits: Vec<(f64, f64)> = (0..nodes)
+            .map(|node| {
+                fabric
+                    .node_fetch_split(image, node, nodes as u64)
+                    .expect("fabric always models the node fetch")
+            })
+            .collect();
+        let starts: Vec<f64> = splits.iter().map(|s| s.0).collect();
+        let tails: Vec<f64> = splits.iter().map(|s| s.1).collect();
+        (Stats::from_samples(&starts), Stats::from_samples(&tails))
+    };
+    let deferred = fabric.cache_stats().lazy_deferred_bytes;
+    assert!(deferred > 0, "lazy pull must defer bytes past start");
+    assert!(
+        start.p99 * 5.0 <= eager.p99,
+        "lazy start-ready p99 must be >= 5x below the eager fill: \
+         lazy={:.3}s eager={:.2}s",
+        start.p99,
+        eager.p99
+    );
+    println!(
+        "lazy pull: start-ready p99 {:.3}s vs eager {:.2}s \
+         ({:.1} MB/node deferred to execution) ✓",
+        start.p99,
+        eager.p99,
+        deferred as f64 / nodes as f64 / 1e6
+    );
+
+    // the derivative re-pull: only new chunks cross the wire
+    fabric
+        .pull_blocking(&registry, "mega-app:2.0", "storm")
+        .unwrap();
+    let t2 = turnaround_secs(&fabric, "mega-app:2.0");
+    let cas = fabric.cluster().cas();
+    assert!(
+        t2 < 0.8 * t1,
+        "chunk dedup must collapse the derivative pull: \
+         v1={t1:.1}s v2={t2:.1}s"
+    );
+    assert!(cas.chunks_shared() > 0, "derivative must share chunks");
+    assert!(cas.stored_bytes() < cas.logical_bytes());
+    println!(
+        "chunked CAS: derivative pull {t2:.1}s vs {t1:.1}s cold \
+         ({} chunks shared, hit ratio {:.2}) ✓",
+        cas.chunks_shared(),
+        cas.chunk_hit_ratio()
+    );
+
+    (
+        Json::obj(vec![
+            ("eager_p99_secs", Json::num(eager.p99)),
+            ("start_ready_p99_secs", Json::num(start.p99)),
+            ("tail_p99_secs", Json::num(tail.p99)),
+            ("deferred_bytes", Json::Num(deferred as f64)),
+        ]),
+        Json::obj(vec![
+            ("v1_turnaround_secs", Json::num(t1)),
+            ("v2_turnaround_secs", Json::num(t2)),
+            ("chunks_new", Json::Num(cas.chunks_new() as f64)),
+            ("chunks_shared", Json::Num(cas.chunks_shared() as f64)),
+            ("chunk_hit_ratio", Json::num(cas.chunk_hit_ratio())),
+            ("stored_bytes", Json::Num(cas.stored_bytes() as f64)),
+            ("logical_bytes", Json::Num(cas.logical_bytes() as f64)),
+            ("dedup_ratio", Json::num(cas.dedup_ratio())),
+        ]),
+    )
+}
+
+/// Enqueue-to-READY turnaround of a completed pull job.
+fn turnaround_secs(fabric: &DistributionFabric, reference: &str) -> f64 {
+    let job = fabric
+        .cluster()
+        .status(reference)
+        .expect("job exists after pull_blocking");
+    job.completed_at.expect("job is terminal") - job.enqueued_at
+}
+
+/// Write the deterministic distribution metrics CI gates on.
+fn write_artifact(
+    nodes: usize,
+    cfg: CascadeConfig,
+    fill: Vec<Json>,
+    lazy: Json,
+    chunks: Json,
+) {
+    let doc = Json::obj(vec![
+        ("bench", Json::str("distrib_cascade")),
+        ("max_nodes", Json::Num(nodes as f64)),
+        ("cabinet_nodes", Json::Num(cfg.cabinet_nodes as f64)),
+        ("fanout", Json::Num(cfg.fanout as f64)),
+        ("fill", Json::Arr(fill)),
+        ("lazy", lazy),
+        ("chunks", chunks),
+    ]);
+    let path = std::env::var("BENCH_DISTRIB_JSON")
+        .unwrap_or_else(|_| "BENCH_distrib.json".to_string());
+    std::fs::write(&path, doc.to_string())
+        .expect("write BENCH_distrib.json");
+    println!("wrote {path}");
 }

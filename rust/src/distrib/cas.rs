@@ -5,10 +5,19 @@
 //! a blob alive as long as any registered image still references it, and
 //! the logical-vs-stored accounting is what the `gateway_scale` bench
 //! reports as the dedup ratio.
+//!
+//! With a [`Chunker`] installed (DESIGN.md S25) the blob granularity
+//! drops below layers: every file of a layer is cut into content-defined
+//! chunks, so a derived image whose layer differs by one file still
+//! shares every chunk of the unchanged files with its parent — the
+//! layer-digest mismatch no longer forces a full re-store.
 
 use std::collections::BTreeMap;
 
-use crate::image::Image;
+use crate::image::{Image, Layer};
+use crate::vfs::tree::VNode;
+
+use super::chunk::Chunker;
 
 /// One stored blob: size plus the number of registered images using it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -32,6 +41,11 @@ pub struct ImageReceipt {
     pub new_bytes: u64,
     /// Bytes satisfied by blobs already present.
     pub shared_bytes: u64,
+    /// Chunks stored for the first time (0 unless chunking is enabled).
+    pub new_chunks: usize,
+    /// Chunks deduplicated against blobs already present (0 unless
+    /// chunking is enabled).
+    pub shared_chunks: usize,
 }
 
 /// The content-addressed store.
@@ -43,12 +57,132 @@ pub struct ContentStore {
     logical_bytes: u64,
     /// Actual bytes on disk (each blob once).
     stored_bytes: u64,
+    /// When set, blobs are content-defined chunks of layer files rather
+    /// than whole layers (DESIGN.md S25).
+    chunker: Option<Chunker>,
+    /// Layer digest → its chunk list as (chunk digest, bytes), computed
+    /// once per distinct layer; chunk lists are derived purely from file
+    /// content identities, so they are stable across images.
+    layer_chunks: BTreeMap<u64, Vec<(u64, u64)>>,
+    /// Layer digest → registered images carrying that layer (chunked
+    /// mode bookkeeping so `remove_image` releases chunks exactly once
+    /// per image).
+    layer_refs: BTreeMap<u64, u32>,
+    /// Chunks stored for the first time, across all registrations.
+    chunks_new: u64,
+    /// Chunk insertions satisfied by an already-stored chunk.
+    chunks_shared: u64,
 }
 
 impl ContentStore {
     /// Empty store.
     pub fn new() -> ContentStore {
         ContentStore::default()
+    }
+
+    /// Switch the store to content-defined chunk granularity. Call
+    /// before any image is registered: existing whole-layer blobs are
+    /// not re-chunked.
+    pub fn with_chunker(mut self, chunker: Chunker) -> ContentStore {
+        self.chunker = Some(chunker);
+        self
+    }
+
+    /// Whether the store dedups at chunk (vs whole-layer) granularity.
+    pub fn chunked(&self) -> bool {
+        self.chunker.is_some()
+    }
+
+    /// Chunks stored for the first time across all registrations
+    /// (0 unless chunking is enabled).
+    pub fn chunks_new(&self) -> u64 {
+        self.chunks_new
+    }
+
+    /// Chunk insertions satisfied by an already-stored chunk.
+    pub fn chunks_shared(&self) -> u64 {
+        self.chunks_shared
+    }
+
+    /// Fraction of chunk insertions that hit an existing chunk
+    /// (0.0 when nothing has been chunked yet).
+    pub fn chunk_hit_ratio(&self) -> f64 {
+        let total = self.chunks_new + self.chunks_shared;
+        if total == 0 {
+            0.0
+        } else {
+            self.chunks_shared as f64 / total as f64
+        }
+    }
+
+    /// The chunk list of one layer: every file in the layer's tree cut
+    /// into content-defined chunks keyed by the file's content digest,
+    /// so identical files in different layers yield identical chunks.
+    fn chunk_layer(chunker: &Chunker, layer: &Layer) -> Vec<(u64, u64)> {
+        let mut chunks = Vec::new();
+        let files = layer.tree.walk("/").unwrap_or_default();
+        for (_, node) in files {
+            let VNode::File { size, digest, .. } = node else {
+                continue;
+            };
+            // chunk the transfer representation of the file
+            let compressed = (size as f64 * 0.5) as u64;
+            if compressed == 0 {
+                continue;
+            }
+            chunks.extend(
+                chunker
+                    .synthetic_chunks(digest, compressed)
+                    .into_iter()
+                    .map(|c| (c.digest, c.length)),
+            );
+        }
+        chunks
+    }
+
+    /// Non-mutating estimate of how much of `image` is already stored:
+    /// the byte fraction its blobs (chunks when chunking is enabled,
+    /// whole layers otherwise) would dedup against the current store.
+    /// The gateway scales the download/PFS stages of a pull by the miss
+    /// fraction.
+    pub fn preview_shared_fraction(&self, image: &Image) -> f64 {
+        let mut total = 0u64;
+        let mut shared = 0u64;
+        match &self.chunker {
+            Some(chunker) => {
+                for layer in &image.layers {
+                    let owned;
+                    let chunks = match self.layer_chunks.get(&layer.digest)
+                    {
+                        Some(known) => known,
+                        None => {
+                            owned = Self::chunk_layer(chunker, layer);
+                            &owned
+                        }
+                    };
+                    for &(digest, bytes) in chunks {
+                        total += bytes;
+                        if self.contains(digest) {
+                            shared += bytes;
+                        }
+                    }
+                }
+            }
+            None => {
+                for layer in &image.layers {
+                    let bytes = layer.compressed_bytes();
+                    total += bytes;
+                    if self.contains(layer.digest) {
+                        shared += bytes;
+                    }
+                }
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            shared as f64 / total as f64
+        }
     }
 
     /// Add one reference to `digest`, storing the blob if it is new.
@@ -102,7 +236,39 @@ impl ContentStore {
             shared_layers: 0,
             new_bytes: 0,
             shared_bytes: 0,
+            new_chunks: 0,
+            shared_chunks: 0,
         };
+        if let Some(chunker) = self.chunker.clone() {
+            for layer in &image.layers {
+                let first = !self.layer_refs.contains_key(&layer.digest);
+                *self.layer_refs.entry(layer.digest).or_insert(0) += 1;
+                if first {
+                    receipt.new_layers += 1;
+                    let chunks = Self::chunk_layer(&chunker, layer);
+                    self.layer_chunks.insert(layer.digest, chunks);
+                } else {
+                    receipt.shared_layers += 1;
+                }
+                let chunks = self
+                    .layer_chunks
+                    .get(&layer.digest)
+                    .cloned()
+                    .unwrap_or_default();
+                for (digest, bytes) in chunks {
+                    if self.insert(digest, bytes) {
+                        receipt.new_chunks += 1;
+                        receipt.new_bytes += bytes;
+                        self.chunks_new += 1;
+                    } else {
+                        receipt.shared_chunks += 1;
+                        receipt.shared_bytes += bytes;
+                        self.chunks_shared += 1;
+                    }
+                }
+            }
+            return receipt;
+        }
         for layer in &image.layers {
             let bytes = layer.compressed_bytes();
             if self.insert(layer.digest, bytes) {
@@ -116,8 +282,29 @@ impl ContentStore {
         receipt
     }
 
-    /// Unregister an image, releasing each of its layers once.
+    /// Unregister an image, releasing each of its layers (or, in chunked
+    /// mode, each of its layers' chunks) once.
     pub fn remove_image(&mut self, image: &Image) {
+        if self.chunked() {
+            for layer in &image.layers {
+                let chunks = self
+                    .layer_chunks
+                    .get(&layer.digest)
+                    .cloned()
+                    .unwrap_or_default();
+                for (digest, _) in chunks {
+                    self.release(digest);
+                }
+                if let Some(refs) = self.layer_refs.get_mut(&layer.digest) {
+                    *refs -= 1;
+                    if *refs == 0 {
+                        self.layer_refs.remove(&layer.digest);
+                        self.layer_chunks.remove(&layer.digest);
+                    }
+                }
+            }
+            return;
+        }
         for layer in &image.layers {
             self.release(layer.digest);
         }
@@ -238,5 +425,98 @@ mod tests {
         assert_eq!(receipt.shared_layers, 0);
         assert!(cas.stored_bytes() > before);
         assert!((cas.dedup_ratio() - 1.0).abs() < 1e-12);
+        assert_eq!((receipt.new_chunks, receipt.shared_chunks), (0, 0));
+        assert!(!cas.chunked());
+        assert_eq!(cas.chunk_hit_ratio(), 0.0);
+    }
+
+    /// Two images whose top layers differ by one small file: the layer
+    /// digests diverge, so whole-layer dedup re-stores everything — but
+    /// chunked dedup shares every chunk of the unchanged files.
+    fn near_identical_pair() -> (crate::image::Image, crate::image::Image) {
+        let base = builder::ubuntu_xenial();
+        let v1 = ImageBuilder::from_image(&base, "app:1.0")
+            .file("/opt/app/bin", 80_000_000)
+            .file("/opt/app/data", 40_000_000)
+            .build();
+        let mut v2 = v1.clone();
+        let mut tree = v2.layers.last().unwrap().tree.clone();
+        tree.add_file("/opt/app/patch.cfg", 4_096, 0xFEED_FACE).unwrap();
+        *v2.layers.last_mut().unwrap() =
+            crate::image::Layer::new(tree, vec![]);
+        v2.reference = crate::image::ImageRef::parse("app:2.0").unwrap();
+        v2.manifest.layer_digests =
+            v2.layers.iter().map(|l| l.digest).collect();
+        (v1, v2)
+    }
+
+    #[test]
+    fn chunked_store_dedups_below_layer_granularity() {
+        let (v1, v2) = near_identical_pair();
+        assert_ne!(
+            v1.layers.last().unwrap().digest,
+            v2.layers.last().unwrap().digest,
+            "the edit must change the layer digest"
+        );
+
+        let mut cas = ContentStore::new()
+            .with_chunker(Chunker::new(1 << 20, 9));
+        let r1 = cas.add_image(&v1);
+        assert!(r1.new_chunks > 0);
+        assert_eq!(r1.shared_layers, 0);
+
+        let r2 = cas.add_image(&v2);
+        // the derived image's top layer is "new" at layer granularity…
+        assert_eq!(r2.new_layers, 1);
+        // …yet almost all of its bytes dedup chunk-by-chunk
+        assert!(
+            r2.shared_bytes > 9 * r2.new_bytes,
+            "shared={} new={}",
+            r2.shared_bytes,
+            r2.new_bytes
+        );
+        assert!(r2.shared_chunks > r2.new_chunks);
+        assert!(cas.chunk_hit_ratio() > 0.4);
+        assert!(cas.stored_bytes() < cas.logical_bytes());
+
+        // the preview the gateway prices dedup with agrees
+        let frac = cas.preview_shared_fraction(&v2);
+        assert!(frac > 0.9, "preview fraction {frac}");
+    }
+
+    #[test]
+    fn chunked_remove_is_symmetric() {
+        let (v1, v2) = near_identical_pair();
+        let mut cas = ContentStore::new()
+            .with_chunker(Chunker::new(1 << 20, 9));
+        cas.add_image(&v1);
+        cas.add_image(&v2);
+        cas.remove_image(&v2);
+        // v1's chunks all survive; the preview sees it fully stored
+        assert!(cas.preview_shared_fraction(&v1) > 0.999);
+        cas.remove_image(&v1);
+        assert_eq!(cas.blob_count(), 0);
+        assert_eq!(cas.stored_bytes(), 0);
+        assert_eq!(cas.logical_bytes(), 0);
+    }
+
+    #[test]
+    fn preview_matches_layer_dedup_when_not_chunked() {
+        let base = builder::ubuntu_xenial();
+        let app = ImageBuilder::from_image(&base, "app:1.0")
+            .file("/opt/app.bin", 10_000_000)
+            .build();
+        let mut cas = ContentStore::new();
+        assert_eq!(cas.preview_shared_fraction(&app), 0.0);
+        cas.add_image(&base);
+        let frac = cas.preview_shared_fraction(&app);
+        // every base layer is present, only the app layer is missing
+        let shared: u64 =
+            base.layers.iter().map(|l| l.compressed_bytes()).sum();
+        let total: u64 =
+            app.layers.iter().map(|l| l.compressed_bytes()).sum();
+        assert!((frac - shared as f64 / total as f64).abs() < 1e-12);
+        cas.add_image(&app);
+        assert!(cas.preview_shared_fraction(&app) > 0.999);
     }
 }

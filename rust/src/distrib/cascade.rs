@@ -1,0 +1,396 @@
+//! Topology-aware cascade fills (DESIGN.md S25): instead of every cold
+//! node paying the Lustre broadcast (`NodeCache::cold_fill_secs` grows
+//! linearly with storm width), nodes are grouped into cabinets and a
+//! spanning tree distributes the squashfs peer-to-peer — one node pays
+//! the gateway read, every other node fetches from an already-warm peer
+//! over the cabinet backplane (or one inter-cabinet hop to seed a new
+//! cabinet). Fill completion times come out of a [`SimKernel`] replay of
+//! the tree, so cascades share the virtual-time model every other layer
+//! schedules on and the storm makespan grows with the *depth* of the
+//! tree (logarithmic in width), not the width itself.
+//!
+//! A dead peer never stalls the tree: children that would have fetched
+//! from it time out ([`PEER_TIMEOUT_SECS`]) and fall back to the
+//! gateway, and any node left stranded when the cascade drains is swept
+//! into a gateway fallback as well.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use crate::pfs::LustreFs;
+use crate::sim::{SimKernel, SimTime};
+
+use super::node_cache::NodeCache;
+
+/// Peer-to-peer bandwidth between nodes of one cabinet (backplane).
+pub const INTRA_CABINET_BYTES_PER_SEC: f64 = 5e9;
+/// Peer-to-peer bandwidth across cabinets (crossing the spine).
+pub const INTER_CABINET_BYTES_PER_SEC: f64 = 1.25e9;
+/// Fixed per-hop setup cost (peer handshake + squashfs open).
+pub const CASCADE_HOP_SETUP_SECS: f64 = 200e-6;
+/// How long a cold node waits on an unresponsive peer before falling
+/// back to the gateway.
+pub const PEER_TIMEOUT_SECS: f64 = 0.5;
+
+/// Cabinet topology + fan-out of the cascade spanning tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CascadeConfig {
+    /// Nodes per cabinet (node `n` lives in cabinet `n / cabinet_nodes`).
+    pub cabinet_nodes: usize,
+    /// Cold peers each warm node serves before going quiet.
+    pub fanout: usize,
+}
+
+/// Aggregated cascade accounting across every plan a fabric has built.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CascadeStats {
+    /// Distinct cascade plans (one per squashfs digest that stormed).
+    pub cascades: u64,
+    /// Fills served by the gateway/PFS (tree seeds + late joiners in
+    /// unseeded cabinets).
+    pub gateway_fills: u64,
+    /// Fills that timed out on a dead peer and fell back to the gateway.
+    pub gateway_fallbacks: u64,
+    /// Fills served peer-to-peer instead of from the gateway.
+    pub peer_transfers: u64,
+    /// Longest peer-hop chain from the gateway seed to any node.
+    pub max_depth: u64,
+}
+
+/// How a planned node receives the image.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Origin {
+    /// The tree seed: a single gateway/PFS read.
+    GatewaySeed,
+    /// Timed out on a dead peer, re-fetched from the gateway.
+    GatewayFallback,
+    /// Served by a warm peer in the same cabinet.
+    Intra,
+    /// Served by a warm peer in another cabinet (seeding this one).
+    Inter,
+}
+
+/// One replayed cascade: per-node fill durations plus the tree's
+/// accounting. Built once per (squashfs digest, storm width) on first
+/// cold miss; later fetches — including late joiners outside the
+/// planned width — are answered from it.
+#[derive(Debug, Clone)]
+pub(crate) struct CascadePlan {
+    cabinet_nodes: usize,
+    /// Node → seconds from storm start until its copy is complete.
+    ready_secs: BTreeMap<usize, f64>,
+    /// Node → peer hops between the gateway seed and this node.
+    depth: BTreeMap<usize, u64>,
+    /// Cabinet → times image data entered it from outside (gateway
+    /// reads + inter-cabinet transfers). 1 everywhere when all peers
+    /// are alive: a cascade never fetches the image twice into one
+    /// cabinet.
+    cabinet_entries: BTreeMap<usize, u64>,
+    pub(crate) gateway_fills: u64,
+    pub(crate) gateway_fallbacks: u64,
+    pub(crate) peer_transfers: u64,
+    pub(crate) max_depth: u64,
+    hop_intra_secs: f64,
+    gateway_single_secs: f64,
+}
+
+impl CascadePlan {
+    /// Fill duration and tree depth for `node`. Nodes inside the
+    /// planned storm answer from the replay; late joiners take one
+    /// intra-cabinet hop when their cabinet is already seeded, else a
+    /// single-reader gateway fill (both recorded in the accounting).
+    pub(crate) fn fill_for(&mut self, node: usize) -> (f64, u64) {
+        if let Some(&secs) = self.ready_secs.get(&node) {
+            return (secs, self.depth.get(&node).copied().unwrap_or(0));
+        }
+        let cabinet = node / self.cabinet_nodes;
+        if self.cabinet_entries.contains_key(&cabinet) {
+            self.peer_transfers += 1;
+            self.max_depth = self.max_depth.max(1);
+            self.ready_secs.insert(node, self.hop_intra_secs);
+            self.depth.insert(node, 1);
+            (self.hop_intra_secs, 1)
+        } else {
+            self.gateway_fills += 1;
+            self.cabinet_entries.insert(cabinet, 1);
+            self.ready_secs.insert(node, self.gateway_single_secs);
+            self.depth.insert(node, 0);
+            (self.gateway_single_secs, 0)
+        }
+    }
+
+    /// Cabinet → outside-data entries (see the field doc).
+    pub(crate) fn cabinet_entries(&self) -> &BTreeMap<usize, u64> {
+        &self.cabinet_entries
+    }
+
+    /// Longest planned fill — the storm's fill makespan.
+    pub(crate) fn makespan_secs(&self) -> f64 {
+        self.ready_secs.values().copied().fold(0.0, f64::max)
+    }
+}
+
+/// Replay one cascade over `width` nodes (ids `0..width`) on a private
+/// [`SimKernel`]: events are "node became warm" pops, each warm node
+/// serves up to `fanout` cold peers (own cabinet first, then the
+/// lowest-indexed cabinet no transfer has entered yet), and dead nodes
+/// turn their would-be children into timed-out gateway fallbacks.
+pub(crate) fn plan(
+    cfg: &CascadeConfig,
+    width: usize,
+    bytes: u64,
+    dead: &BTreeSet<usize>,
+    pfs: &LustreFs,
+) -> CascadePlan {
+    let cabinet_nodes = cfg.cabinet_nodes.max(1);
+    let fanout = cfg.fanout.max(1);
+    let width = width.max(1);
+    let n_cabinets = width.div_ceil(cabinet_nodes);
+    let gateway_single = NodeCache::cold_fill_secs(pfs, bytes, 1);
+    let hop_intra =
+        bytes as f64 / INTRA_CABINET_BYTES_PER_SEC + CASCADE_HOP_SETUP_SECS;
+    let hop_inter =
+        bytes as f64 / INTER_CABINET_BYTES_PER_SEC + CASCADE_HOP_SETUP_SECS;
+
+    let mut plan = CascadePlan {
+        cabinet_nodes,
+        ready_secs: BTreeMap::new(),
+        depth: BTreeMap::new(),
+        cabinet_entries: BTreeMap::new(),
+        gateway_fills: 0,
+        gateway_fallbacks: 0,
+        peer_transfers: 0,
+        max_depth: 0,
+        hop_intra_secs: hop_intra,
+        gateway_single_secs: gateway_single,
+    };
+
+    // cold deques per cabinet, in node order
+    let mut cold: Vec<VecDeque<usize>> = (0..n_cabinets)
+        .map(|c| {
+            (c * cabinet_nodes..((c + 1) * cabinet_nodes).min(width))
+                .collect()
+        })
+        .collect();
+    let mut seeded = vec![false; n_cabinets];
+    let mut origin: BTreeMap<usize, Origin> = BTreeMap::new();
+    let mut depth: BTreeMap<usize, u64> = BTreeMap::new();
+
+    let mut kernel: SimKernel<usize> = SimKernel::new();
+    let seed = cold[0].pop_front().expect("width >= 1");
+    seeded[0] = true;
+    origin.insert(seed, Origin::GatewaySeed);
+    depth.insert(seed, 0);
+    kernel.schedule_at(SimTime::from_secs(gateway_single), seed);
+
+    while let Some((at, node)) = kernel.pop() {
+        let t = at.as_secs_f64();
+        let cabinet = node / cabinet_nodes;
+        if dead.contains(&node) {
+            // the node never answers: the cold peers it would have
+            // served time out and re-fetch from the gateway directly
+            for _ in 0..fanout {
+                let Some(child) = cold[cabinet].pop_front() else {
+                    break;
+                };
+                origin.insert(child, Origin::GatewayFallback);
+                depth.insert(child, 0);
+                kernel.schedule_at(
+                    SimTime::from_secs(
+                        t + PEER_TIMEOUT_SECS + gateway_single,
+                    ),
+                    child,
+                );
+            }
+            continue;
+        }
+        // the node is warm at `t`: book its fill and accounting
+        plan.ready_secs.insert(node, t);
+        let d = depth.get(&node).copied().unwrap_or(0);
+        plan.depth.insert(node, d);
+        plan.max_depth = plan.max_depth.max(d);
+        match origin.get(&node) {
+            Some(Origin::GatewaySeed) => {
+                plan.gateway_fills += 1;
+                *plan.cabinet_entries.entry(cabinet).or_insert(0) += 1;
+            }
+            Some(Origin::GatewayFallback) => {
+                plan.gateway_fills += 1;
+                plan.gateway_fallbacks += 1;
+                *plan.cabinet_entries.entry(cabinet).or_insert(0) += 1;
+            }
+            Some(Origin::Intra) => plan.peer_transfers += 1,
+            Some(Origin::Inter) => {
+                plan.peer_transfers += 1;
+                *plan.cabinet_entries.entry(cabinet).or_insert(0) += 1;
+            }
+            None => {}
+        }
+        // serve up to `fanout` cold peers sequentially
+        let mut cursor = t;
+        for _ in 0..fanout {
+            if let Some(child) = cold[cabinet].pop_front() {
+                cursor += hop_intra;
+                origin.insert(child, Origin::Intra);
+                depth.insert(child, d + 1);
+                kernel.schedule_at(SimTime::from_secs(cursor), child);
+            } else if let Some(target) = (0..n_cabinets)
+                .find(|&c| !seeded[c] && !cold[c].is_empty())
+            {
+                let child = cold[target].pop_front().expect("non-empty");
+                seeded[target] = true;
+                cursor += hop_inter;
+                origin.insert(child, Origin::Inter);
+                depth.insert(child, d + 1);
+                kernel.schedule_at(SimTime::from_secs(cursor), child);
+            } else {
+                break;
+            }
+        }
+    }
+
+    // sweep: nodes stranded by dead peers (never scheduled) fall back
+    // to the gateway after the cascade's horizon — the tree never
+    // stalls waiting on them
+    let horizon = kernel.now().as_secs_f64();
+    for queue in &mut cold {
+        while let Some(node) = queue.pop_front() {
+            let secs = horizon + PEER_TIMEOUT_SECS + gateway_single;
+            plan.ready_secs.insert(node, secs);
+            plan.depth.insert(node, 0);
+            plan.gateway_fills += 1;
+            plan.gateway_fallbacks += 1;
+            *plan
+                .cabinet_entries
+                .entry(node / cabinet_nodes)
+                .or_insert(0) += 1;
+        }
+    }
+    plan
+}
+
+/// Closed-form estimate of one node's cold-fill duration in a
+/// `width`-node cascade storm: the single gateway read plus a
+/// logarithmic number of peer hops. The launch scheduler prices failed
+/// cold fills with this instead of the linear broadcast cost.
+pub(crate) fn estimate_fill_secs(
+    cfg: &CascadeConfig,
+    width: usize,
+    bytes: u64,
+    pfs: &LustreFs,
+) -> f64 {
+    let gateway = NodeCache::cold_fill_secs(pfs, bytes, 1);
+    let hop =
+        bytes as f64 / INTRA_CABINET_BYTES_PER_SEC + CASCADE_HOP_SETUP_SECS;
+    let branching = (cfg.fanout.max(1) + 1) as f64;
+    let depth = (width.max(1) as f64).ln() / branching.ln();
+    gateway + depth.ceil() * hop
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> CascadeConfig {
+        CascadeConfig {
+            cabinet_nodes: 8,
+            fanout: 2,
+        }
+    }
+
+    #[test]
+    fn all_live_tree_covers_every_node_once() {
+        let pfs = LustreFs::piz_daint();
+        let mut p =
+            plan(&cfg(), 64, 1_000_000_000, &BTreeSet::new(), &pfs);
+        assert_eq!(p.ready_secs.len(), 64);
+        assert_eq!(p.gateway_fills, 1, "one gateway read for the storm");
+        assert_eq!(p.peer_transfers, 63);
+        assert_eq!(p.gateway_fallbacks, 0);
+        // data enters each of the 8 cabinets exactly once
+        assert_eq!(p.cabinet_entries.len(), 8);
+        assert!(p.cabinet_entries.values().all(|&e| e == 1));
+        // every fill is at least the seed's gateway read
+        let seed_fill = p.fill_for(0).0;
+        assert!(p.ready_secs.values().all(|&s| s >= seed_fill));
+        assert!(p.max_depth >= 3, "64 nodes at fanout 2: a real tree");
+    }
+
+    #[test]
+    fn makespan_grows_sublinearly_with_width() {
+        let pfs = LustreFs::piz_daint();
+        let bytes = 1_000_000_000;
+        let narrow =
+            plan(&cfg(), 64, bytes, &BTreeSet::new(), &pfs).makespan_secs();
+        let wide = plan(&cfg(), 1024, bytes, &BTreeSet::new(), &pfs)
+            .makespan_secs();
+        assert!(
+            wide < narrow * 4.0,
+            "16x the nodes must cost < 4x the fill: {narrow}s -> {wide}s"
+        );
+        // the broadcast keeps up while the OST array (80 GB/s aggregate)
+        // outruns the storm; the tree merely beats it at 1024 nodes and
+        // wins decisively once the broadcast saturates
+        let broadcast = NodeCache::cold_fill_secs(&pfs, bytes, 1024);
+        assert!(
+            wide < broadcast,
+            "cascade {wide}s vs broadcast {broadcast}s at 1024 nodes"
+        );
+        let storm = plan(&cfg(), 4096, bytes, &BTreeSet::new(), &pfs)
+            .makespan_secs();
+        let saturated = NodeCache::cold_fill_secs(&pfs, bytes, 4096);
+        assert!(
+            storm * 4.0 < saturated,
+            "cascade {storm}s vs saturated broadcast {saturated}s \
+             at 4096 nodes"
+        );
+    }
+
+    #[test]
+    fn dead_seed_falls_back_without_stalling() {
+        let pfs = LustreFs::piz_daint();
+        let dead = BTreeSet::from([0usize, 9]);
+        let p = plan(&cfg(), 32, 500_000_000, &dead, &pfs);
+        // every live node still gets a finite fill
+        for node in 0..32 {
+            if dead.contains(&node) {
+                assert!(!p.ready_secs.contains_key(&node));
+            } else {
+                assert!(p.ready_secs[&node].is_finite());
+            }
+        }
+        assert!(p.gateway_fallbacks >= 1, "dead peers force fallbacks");
+        assert_eq!(p.ready_secs.len(), 30);
+    }
+
+    #[test]
+    fn late_joiner_uses_warm_cabinet_or_gateway() {
+        let pfs = LustreFs::piz_daint();
+        let mut p =
+            plan(&cfg(), 16, 100_000_000, &BTreeSet::new(), &pfs);
+        // node 100 is outside the planned width and its cabinet: a
+        // fresh gateway fill, entering its cabinet once
+        let (gw_fill, d) = p.fill_for(100);
+        assert_eq!(d, 0);
+        assert!((gw_fill - p.gateway_single_secs).abs() < 1e-12);
+        // node 101 shares cabinet 12 with the now-warm node 100: one
+        // intra-cabinet hop, not another gateway read (an uncontended
+        // gateway read is cheaper than a 5 GB/s backplane hop — the
+        // point of the peer fetch is sparing the PFS, not this node)
+        let (peer_fill, d) = p.fill_for(101);
+        assert_eq!(d, 1);
+        assert!((peer_fill - p.hop_intra_secs).abs() < 1e-12);
+        assert_eq!(p.cabinet_entries[&12], 1);
+    }
+
+    #[test]
+    fn estimate_tracks_the_replayed_makespan() {
+        let pfs = LustreFs::piz_daint();
+        let bytes = 1_000_000_000;
+        let replay = plan(&cfg(), 512, bytes, &BTreeSet::new(), &pfs)
+            .makespan_secs();
+        let est = estimate_fill_secs(&cfg(), 512, bytes, &pfs);
+        // same order of magnitude: the estimate is a pricing model,
+        // not a replay
+        assert!(est > replay * 0.1 && est < replay * 10.0);
+    }
+}

@@ -1,0 +1,285 @@
+//! Content-defined chunking (DESIGN.md S25): the sub-layer granularity
+//! of the content-addressed store. A gear rolling hash cuts a byte
+//! stream at content-determined boundaries, so an edit in the middle of
+//! a layer only changes the chunks overlapping the edit — everything
+//! before and after re-aligns to the same cut points and dedups against
+//! the previous version (the eStargz/CDC property lazy pulling builds
+//! on).
+//!
+//! Two entry points share one boundary model:
+//!
+//! * [`Chunker::chunk`] — real byte-level chunking, used by the
+//!   property suite to prove round-trip reassembly, boundary stability
+//!   under edits, and per-seed determinism;
+//! * [`Chunker::synthetic_chunks`] — the simulation-side equivalent:
+//!   given a file's content digest and size it derives the same chunk
+//!   sequence every time, so two images carrying an identical file
+//!   (same digest, same size) produce identical chunk digests and dedup
+//!   below layer granularity in [`super::cas::ContentStore`].
+
+use crate::util::prng::Rng;
+
+/// Smallest chunk-size target the site builder accepts (4 KB — below
+/// this the per-chunk bookkeeping dwarfs the payload).
+pub const MIN_CHUNK_TARGET_BYTES: u64 = 4_096;
+/// Largest chunk-size target the site builder accepts (64 MB — above
+/// this chunking degenerates to whole-layer blobs).
+pub const MAX_CHUNK_TARGET_BYTES: u64 = 67_108_864;
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// One content-defined chunk of a byte stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Chunk {
+    /// Byte offset of the chunk within the stream.
+    pub offset: u64,
+    /// Chunk length in bytes (always > 0).
+    pub length: u64,
+    /// FNV-1a content digest of the chunk's bytes (for synthetic
+    /// chunks: of the owning file's content identity).
+    pub digest: u64,
+}
+
+/// Gear-hash content-defined chunker. Cut points depend only on the
+/// bytes in a 64-byte rolling window, so identical content produces
+/// identical chunks regardless of what surrounds it (after one chunk of
+/// resynchronization). Deterministic per `(target, seed)`.
+#[derive(Clone)]
+pub struct Chunker {
+    target_bytes: u64,
+    min_bytes: u64,
+    max_bytes: u64,
+    /// Boundary mask: a cut where `(hash & mask) == mask`, giving an
+    /// expected spacing of `target` past the minimum length.
+    mask: u64,
+    seed: u64,
+    /// Per-byte gear table derived from the seed.
+    gear: Box<[u64; 256]>,
+}
+
+impl std::fmt::Debug for Chunker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Chunker")
+            .field("target_bytes", &self.target_bytes)
+            .field("min_bytes", &self.min_bytes)
+            .field("max_bytes", &self.max_bytes)
+            .field("seed", &self.seed)
+            .finish()
+    }
+}
+
+impl Chunker {
+    /// A chunker with mean chunk size `target_bytes` (clamped to at
+    /// least 64) and cut points keyed by `seed`. Minimum chunk length is
+    /// `target / 4`, maximum `target * 4`.
+    pub fn new(target_bytes: u64, seed: u64) -> Chunker {
+        let target = target_bytes.max(64);
+        let min = (target / 4).max(1);
+        let max = target.saturating_mul(4);
+        // expected run past `min` before a boundary fires is 2^bits;
+        // aim it at the remaining distance to the target
+        let span = (target - min).max(2);
+        let mask = (1u64 << span.ilog2()) - 1;
+        let mut rng = Rng::new(seed ^ 0x9e3779b97f4a7c15);
+        let mut gear = Box::new([0u64; 256]);
+        for g in gear.iter_mut() {
+            *g = rng.next_u64();
+        }
+        Chunker {
+            target_bytes: target,
+            min_bytes: min,
+            max_bytes: max,
+            mask,
+            seed,
+            gear,
+        }
+    }
+
+    /// Mean chunk size this chunker aims for.
+    pub fn target_bytes(&self) -> u64 {
+        self.target_bytes
+    }
+
+    /// Smallest chunk the boundary model can emit (except a short tail).
+    pub fn min_bytes(&self) -> u64 {
+        self.min_bytes
+    }
+
+    /// Forced-cut ceiling on chunk length.
+    pub fn max_bytes(&self) -> u64 {
+        self.max_bytes
+    }
+
+    /// The seed the gear table and synthetic boundaries derive from.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Chunk `data` at content-defined boundaries. The chunks partition
+    /// the input exactly (offsets are contiguous, lengths sum to
+    /// `data.len()`), so concatenating the slices reassembles the input
+    /// byte for byte. Empty input yields no chunks.
+    pub fn chunk(&self, data: &[u8]) -> Vec<Chunk> {
+        let mut chunks = Vec::new();
+        let mut start = 0usize;
+        let mut hash = 0u64;
+        for (i, &b) in data.iter().enumerate() {
+            // gear roll: old bytes age out of the hash after 64 shifts,
+            // so boundaries depend on a 64-byte window of content only
+            hash = (hash << 1).wrapping_add(self.gear[b as usize]);
+            let len = (i + 1 - start) as u64;
+            let boundary = len >= self.min_bytes
+                && (hash & self.mask) == self.mask;
+            if boundary || len >= self.max_bytes {
+                chunks.push(self.cut(data, start, i + 1));
+                start = i + 1;
+                hash = 0;
+            }
+        }
+        if start < data.len() {
+            chunks.push(self.cut(data, start, data.len()));
+        }
+        chunks
+    }
+
+    fn cut(&self, data: &[u8], start: usize, end: usize) -> Chunk {
+        Chunk {
+            offset: start as u64,
+            length: (end - start) as u64,
+            digest: fnv1a(FNV_OFFSET, &data[start..end]),
+        }
+    }
+
+    /// The simulation-side chunk sequence for a file identified by
+    /// `content_digest` holding `bytes` bytes: chunk lengths are drawn
+    /// deterministically from `(seed, content_digest)` with the same
+    /// min/target spacing the byte-level model produces, and each chunk
+    /// digest mixes the content identity with its position — two files
+    /// with the same content digest and size always yield identical
+    /// chunks, files differing in either never collide.
+    pub fn synthetic_chunks(
+        &self,
+        content_digest: u64,
+        bytes: u64,
+    ) -> Vec<Chunk> {
+        let mut chunks = Vec::new();
+        if bytes == 0 {
+            return chunks;
+        }
+        let mut rng = Rng::from_tags(&[
+            "cdc-synthetic",
+            &self.seed.to_string(),
+            &content_digest.to_string(),
+        ]);
+        let spread = 2 * (self.target_bytes - self.min_bytes) + 1;
+        let mut offset = 0u64;
+        while offset < bytes {
+            let drawn = self.min_bytes + rng.below(spread);
+            let length = drawn.min(bytes - offset);
+            let digest = fnv1a_words(
+                FNV_OFFSET,
+                &[content_digest, offset, length, self.seed],
+            );
+            chunks.push(Chunk {
+                offset,
+                length,
+                digest,
+            });
+            offset += length;
+        }
+        chunks
+    }
+}
+
+/// FNV-1a over raw bytes.
+fn fnv1a(init: u64, data: &[u8]) -> u64 {
+    let mut h = init;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a over the little-endian bytes of each word.
+fn fnv1a_words(init: u64, words: &[u64]) -> u64 {
+    let mut h = init;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data(len: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect()
+    }
+
+    #[test]
+    fn chunks_partition_the_input() {
+        let chunker = Chunker::new(4_096, 7);
+        let buf = data(100_000, 1);
+        let chunks = chunker.chunk(&buf);
+        assert!(chunks.len() > 10, "expected many chunks: {}", chunks.len());
+        let mut cursor = 0u64;
+        for c in &chunks {
+            assert_eq!(c.offset, cursor);
+            assert!(c.length > 0);
+            cursor += c.length;
+        }
+        assert_eq!(cursor, buf.len() as u64);
+    }
+
+    #[test]
+    fn length_bounds_hold() {
+        let chunker = Chunker::new(4_096, 7);
+        let buf = data(300_000, 2);
+        let chunks = chunker.chunk(&buf);
+        for c in &chunks[..chunks.len() - 1] {
+            assert!(c.length >= chunker.min_bytes());
+            assert!(c.length <= chunker.max_bytes());
+        }
+        // mean lands within a factor of 4 of the target
+        let mean = buf.len() as f64 / chunks.len() as f64;
+        assert!(
+            mean > chunker.target_bytes() as f64 / 4.0
+                && mean < chunker.target_bytes() as f64 * 4.0,
+            "mean chunk {mean} vs target {}",
+            chunker.target_bytes()
+        );
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let chunker = Chunker::new(4_096, 7);
+        assert!(chunker.chunk(&[]).is_empty());
+        let one = chunker.chunk(&[42]);
+        assert_eq!(one.len(), 1);
+        assert_eq!((one[0].offset, one[0].length), (0, 1));
+    }
+
+    #[test]
+    fn synthetic_chunks_cover_and_repeat() {
+        let chunker = Chunker::new(1 << 20, 3);
+        let a = chunker.synthetic_chunks(0xABCD, 10_000_000);
+        let b = chunker.synthetic_chunks(0xABCD, 10_000_000);
+        assert_eq!(a, b, "same content identity, same chunks");
+        let total: u64 = a.iter().map(|c| c.length).sum();
+        assert_eq!(total, 10_000_000);
+        let other = chunker.synthetic_chunks(0xABCE, 10_000_000);
+        assert_ne!(
+            a.iter().map(|c| c.digest).collect::<Vec<_>>(),
+            other.iter().map(|c| c.digest).collect::<Vec<_>>(),
+            "different content must not share chunk digests"
+        );
+        assert!(chunker.synthetic_chunks(0xABCD, 0).is_empty());
+    }
+}

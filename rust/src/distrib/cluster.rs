@@ -19,6 +19,7 @@ use crate::sim::SimTime;
 use crate::util::prng::Rng;
 
 use super::cas::ContentStore;
+use super::chunk::Chunker;
 
 /// One gateway worker: a synchronous gateway plus its job queue.
 pub struct GatewayShard {
@@ -105,6 +106,13 @@ impl GatewayCluster {
         self.shards.len()
     }
 
+    /// Switch the cluster's content store to content-defined chunk
+    /// granularity (DESIGN.md S25). Call before the first pull: images
+    /// already registered as whole-layer blobs are not re-chunked.
+    pub fn set_chunker(&mut self, chunker: Chunker) {
+        self.cas = std::mem::take(&mut self.cas).with_chunker(chunker);
+    }
+
     /// Iterate over the shards in id order.
     pub fn shards(&self) -> impl Iterator<Item = &GatewayShard> {
         self.shards.iter()
@@ -141,9 +149,25 @@ impl GatewayCluster {
         let r = ImageRef::parse(reference)
             .ok_or_else(|| GatewayError::NotPulled(reference.to_string()))?;
         let id = self.shard_for(&r);
+        // With a chunked CAS, price the pull by how much of the image is
+        // already stored: only missing chunks pay download/PFS transfer.
+        // Whole-layer mode keeps the classic full-cost pull.
+        let shared = if self.cas.chunked() {
+            registry
+                .lookup(reference)
+                .map(|img| self.cas.preview_shared_fraction(img))
+                .unwrap_or(0.0)
+        } else {
+            0.0
+        };
         let shard = &mut self.shards[id];
-        let state =
-            shard.queue.request(&shard.gateway, registry, reference, user)?;
+        let state = shard.queue.request_with_dedup(
+            &shard.gateway,
+            registry,
+            reference,
+            user,
+            shared,
+        )?;
         Ok((id, state))
     }
 

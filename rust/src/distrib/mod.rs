@@ -14,20 +14,36 @@
 //!   eviction; cold fills pay the Lustre broadcast cost, warm starts a
 //!   local stat.
 //!
+//! Three opt-in mechanisms layer on top (DESIGN.md S25):
+//!
+//! * [`cascade`] — topology-aware cascade fills: cold nodes fetch from
+//!   already-warm cabinet peers spanning-tree-style instead of each
+//!   paying the Lustre broadcast, so storm fill time grows with tree
+//!   depth (logarithmic), not node count.
+//! * lazy pulling — `node_fetch_split` returns (start-ready, streamed
+//!   tail): a container starts once squashfs metadata + first-read
+//!   chunks arrive, and the tail is charged to the job's execute stage.
+//! * [`chunk`] — content-defined chunking in the CAS, so derived images
+//!   dedup below layer granularity and pulls only transfer new chunks.
+//!
 //! The fabric implements `gateway::ImageSource`, so
 //! `ShifterRuntime::run(&fabric, …)` works exactly like the classic
 //! single-gateway path — callers opt into distribution without touching
 //! the stage pipeline.
 
 pub mod cas;
+pub mod cascade;
+pub mod chunk;
 pub mod cluster;
 pub mod node_cache;
 
 pub use cas::{BlobInfo, ContentStore, ImageReceipt};
+pub use cascade::{CascadeConfig, CascadeStats};
+pub use chunk::{Chunk, Chunker};
 pub use cluster::{CoalescingStats, GatewayCluster, GatewayShard, ShardStatus};
 pub use node_cache::{CacheOutcome, NodeCache};
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::{Arc, Mutex};
 
 use crate::gateway::{GatewayError, GatewayImage, ImageSource, PullState};
@@ -41,6 +57,22 @@ use crate::telemetry::Telemetry;
 /// RAM-backed tmpfs / local SSD slice sites give Shifter).
 pub const DEFAULT_NODE_CACHE_BYTES: u64 = 32_000_000_000;
 
+/// Fraction of the cold fill a lazy pull must complete before a
+/// container can start: squashfs superblock + metadata + the first-read
+/// chunks (entrypoint binary, loader, initial libraries).
+pub const LAZY_START_READY_FRACTION: f64 = 0.08;
+
+/// Per-chunk round trip charged while streaming the lazy tail on demand.
+pub const LAZY_CHUNK_RTT_SECS: f64 = 50e-6;
+
+/// Chunk size used to price lazy-tail round trips when no CAS chunker is
+/// installed.
+const DEFAULT_LAZY_CHUNK_BYTES: u64 = 4_000_000;
+
+/// Seed for the CAS chunker — fixed so chunk digests are stable across
+/// runs, hosts, and thread counts (the determinism suite depends on it).
+const CAS_CHUNK_SEED: u64 = 0xC0FFEE;
+
 /// Aggregated node-cache counters across every node the fabric has seen.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct CacheStats {
@@ -52,6 +84,9 @@ pub struct CacheStats {
     pub misses: u64,
     /// Cache entries evicted under capacity pressure.
     pub evictions: u64,
+    /// Bytes lazy pulling deferred past container start (0 when lazy
+    /// pull is off).
+    pub lazy_deferred_bytes: u64,
 }
 
 /// The facade the runtime and CLI talk to.
@@ -83,6 +118,23 @@ pub struct DistributionFabric {
     /// shard, coalescing hits, cache hits / cold fills / evictions, and
     /// samples shard queue depth + node fetch times. See DESIGN.md S23.
     telemetry: Arc<Telemetry>,
+    /// Cabinet topology for cascade fills; `None` keeps the classic
+    /// Lustre broadcast cold-fill model.
+    cascade: Option<CascadeConfig>,
+    /// When true, `node_fetch_split` returns a (start-ready, streamed
+    /// tail) pair instead of charging the whole fill up front.
+    lazy_pull: bool,
+    /// Target chunk size of the CAS chunker, when chunking is enabled.
+    chunk_target_bytes: Option<u64>,
+    /// Replayed cascade plans keyed by squashfs digest (one per image
+    /// that stormed). Mutex for the same reason as `caches`.
+    cascades: Mutex<BTreeMap<u64, cascade::CascadePlan>>,
+    /// Nodes marked unresponsive: cascades route around them and their
+    /// would-be children fall back to the gateway.
+    dead_nodes: Mutex<BTreeSet<usize>>,
+    /// (chunks_new, chunks_shared) already reported to telemetry — tick
+    /// reports CAS chunk-counter deltas, not absolutes.
+    chunk_watermark: Mutex<(u64, u64)>,
 }
 
 impl DistributionFabric {
@@ -95,6 +147,12 @@ impl DistributionFabric {
             node_cache_bytes: DEFAULT_NODE_CACHE_BYTES,
             pfs,
             telemetry: Arc::new(Telemetry::disabled()),
+            cascade: None,
+            lazy_pull: false,
+            chunk_target_bytes: None,
+            cascades: Mutex::new(BTreeMap::new()),
+            dead_nodes: Mutex::new(BTreeSet::new()),
+            chunk_watermark: Mutex::new((0, 0)),
         }
     }
 
@@ -102,6 +160,57 @@ impl DistributionFabric {
     pub fn with_node_cache_bytes(mut self, bytes: u64) -> DistributionFabric {
         self.node_cache_bytes = bytes;
         self
+    }
+
+    /// Enable topology-aware cascade fills (DESIGN.md S25): cold nodes
+    /// fetch from warm cabinet peers spanning-tree-style instead of each
+    /// paying the Lustre broadcast.
+    pub fn with_cascade(mut self, cfg: CascadeConfig) -> DistributionFabric {
+        self.cascade = Some(cfg);
+        self
+    }
+
+    /// Enable lazy pulling: containers start once metadata + first-read
+    /// chunks arrive; the rest of the image streams during execution.
+    pub fn with_lazy_pull(mut self, enabled: bool) -> DistributionFabric {
+        self.lazy_pull = enabled;
+        self
+    }
+
+    /// Enable content-defined chunking in the cluster CAS with the given
+    /// mean chunk size: derived images dedup below layer granularity and
+    /// pulls only transfer chunks the store is missing. Call before the
+    /// first pull.
+    pub fn with_chunking(mut self, target_bytes: u64) -> DistributionFabric {
+        self.chunk_target_bytes = Some(target_bytes);
+        self.cluster
+            .set_chunker(Chunker::new(target_bytes, CAS_CHUNK_SEED));
+        self
+    }
+
+    /// Mark `node` unresponsive: cascade trees route around it and cold
+    /// peers that would have fetched from it time out and fall back to
+    /// the gateway. Affects plans built after the call.
+    pub fn mark_node_dead(&mut self, node: usize) {
+        self.dead_nodes
+            .lock()
+            .expect("dead-node lock poisoned")
+            .insert(node);
+    }
+
+    /// The cascade topology, when cascade fills are enabled.
+    pub fn cascade_config(&self) -> Option<CascadeConfig> {
+        self.cascade
+    }
+
+    /// Whether lazy pulling is enabled.
+    pub fn lazy_pull_enabled(&self) -> bool {
+        self.lazy_pull
+    }
+
+    /// The CAS chunk-size target, when chunking is enabled.
+    pub fn chunk_target(&self) -> Option<u64> {
+        self.chunk_target_bytes
     }
 
     /// Share a telemetry recorder with the fabric (see DESIGN.md S23);
@@ -171,6 +280,22 @@ impl DistributionFabric {
     /// Advance all shard workers by `dt` simulated seconds.
     pub fn tick(&mut self, registry: &Registry, dt: f64) {
         self.cluster.tick(registry, dt);
+        // report CAS chunk-counter deltas (new registrations this tick)
+        if self.telemetry.enabled() && self.cluster.cas().chunked() {
+            let mut mark = self
+                .chunk_watermark
+                .lock()
+                .expect("chunk-watermark lock poisoned");
+            let cas = self.cluster.cas();
+            let (new, shared) = (cas.chunks_new(), cas.chunks_shared());
+            if new > mark.0 {
+                self.telemetry.count("cas.chunks_new", new - mark.0);
+            }
+            if shared > mark.1 {
+                self.telemetry.count("cas.chunks_shared", shared - mark.1);
+            }
+            *mark = (new, shared);
+        }
     }
 
     /// Current instant of the fabric's virtual clock (the lockstep
@@ -258,6 +383,67 @@ impl DistributionFabric {
             hits: caches.values().map(|c| c.hits).sum(),
             misses: caches.values().map(|c| c.misses).sum(),
             evictions: caches.values().map(|c| c.evictions).sum(),
+            lazy_deferred_bytes: caches
+                .values()
+                .map(|c| c.lazy_deferred_bytes)
+                .sum(),
+        }
+    }
+
+    /// Aggregated cascade accounting across every plan the fabric has
+    /// built (one per squashfs digest that stormed cold).
+    pub fn cascade_stats(&self) -> CascadeStats {
+        let plans = self.cascades.lock().expect("cascade lock poisoned");
+        let mut stats = CascadeStats {
+            cascades: plans.len() as u64,
+            ..CascadeStats::default()
+        };
+        for plan in plans.values() {
+            stats.gateway_fills += plan.gateway_fills;
+            stats.gateway_fallbacks += plan.gateway_fallbacks;
+            stats.peer_transfers += plan.peer_transfers;
+            stats.max_depth = stats.max_depth.max(plan.max_depth);
+        }
+        stats
+    }
+
+    /// Cabinet → number of times image data entered it from outside
+    /// (gateway reads + inter-cabinet transfers) for `reference`'s
+    /// cascade, or `None` when no cascade has run for it. 1 everywhere
+    /// when all peers are alive.
+    pub fn cascade_cabinet_entries(
+        &self,
+        reference: &str,
+    ) -> Option<BTreeMap<usize, u64>> {
+        let image = self.cluster.lookup(reference).ok()?;
+        let plans = self.cascades.lock().expect("cascade lock poisoned");
+        plans
+            .get(&image.squashfs.digest)
+            .map(|p| p.cabinet_entries().clone())
+    }
+
+    /// Expected cold-fill seconds for one node of a `width`-node storm
+    /// pulling `reference` — the launch scheduler's pricing hook. Uses
+    /// the linear Lustre broadcast model without cascade fills, the
+    /// logarithmic spanning-tree estimate with them.
+    pub fn cold_fill_estimate_secs(
+        &self,
+        reference: &str,
+        width: u64,
+    ) -> f64 {
+        let bytes = self
+            .cluster
+            .lookup(reference)
+            .map(|img| img.squashfs.compressed_bytes)
+            .unwrap_or(0);
+        match &self.cascade {
+            None => NodeCache::cold_fill_secs(&self.pfs, bytes, width),
+            Some(cfg) => cascade::estimate_fill_secs(
+                cfg,
+                width as usize,
+                bytes,
+                &self.pfs,
+            ),
         }
     }
 }
@@ -273,13 +459,30 @@ impl ImageSource for DistributionFabric {
     }
 
     /// Cache-aware node fetch: a warm node stats its local copy; a cold
-    /// node joins the Lustre broadcast storm and admits the blob.
+    /// node joins the fill storm and admits the blob. The sum of the
+    /// split — one cache access, both halves charged.
     fn node_fetch_secs(
         &self,
         image: &GatewayImage,
         node: usize,
         concurrent_nodes: u64,
     ) -> Option<f64> {
+        self.node_fetch_split(image, node, concurrent_nodes)
+            .map(|(start, tail)| start + tail)
+    }
+
+    /// The fabric's fetch primitive. Warm nodes stat their local copy
+    /// (no tail). Cold fills pay the Lustre broadcast, or — with cascade
+    /// fills enabled — their slot in the spanning tree replayed on the
+    /// sim kernel. With lazy pull enabled the cold cost splits into a
+    /// start-ready head (metadata + first-read chunks) and a streamed
+    /// tail charged to execution.
+    fn node_fetch_split(
+        &self,
+        image: &GatewayImage,
+        node: usize,
+        concurrent_nodes: u64,
+    ) -> Option<(f64, f64)> {
         let mut caches = self.caches.lock().expect("node-cache lock poisoned");
         let cache = caches
             .entry(node)
@@ -287,19 +490,86 @@ impl ImageSource for DistributionFabric {
         let bytes = image.squashfs.compressed_bytes;
         // stamp fills/evictions with the fabric's kernel-clock instant
         let now = self.cluster.now();
-        let secs = match cache.fetch_at(image.squashfs.digest, bytes, now) {
+        let split = match cache.fetch_at(image.squashfs.digest, bytes, now) {
             CacheOutcome::Hit => {
                 self.telemetry.count("fabric.cache_hits", 1);
-                cache.warm_hit_secs()
+                (cache.warm_hit_secs(), 0.0)
             }
             CacheOutcome::Miss { evicted } => {
                 self.telemetry.count("fabric.cold_fills", 1);
                 self.telemetry.count("fabric.evictions", evicted as u64);
-                NodeCache::cold_fill_secs(&self.pfs, bytes, concurrent_nodes)
+                let fill = match &self.cascade {
+                    None => NodeCache::cold_fill_secs(
+                        &self.pfs,
+                        bytes,
+                        concurrent_nodes,
+                    ),
+                    Some(cfg) => {
+                        let mut plans = self
+                            .cascades
+                            .lock()
+                            .expect("cascade lock poisoned");
+                        let plan = plans
+                            .entry(image.squashfs.digest)
+                            .or_insert_with(|| {
+                                let dead = self
+                                    .dead_nodes
+                                    .lock()
+                                    .expect("dead-node lock poisoned")
+                                    .clone();
+                                let plan = cascade::plan(
+                                    cfg,
+                                    concurrent_nodes.max(1) as usize,
+                                    bytes,
+                                    &dead,
+                                    &self.pfs,
+                                );
+                                self.telemetry.count("fabric.cascades", 1);
+                                self.telemetry.count(
+                                    "fabric.cascade_gateway_fills",
+                                    plan.gateway_fills,
+                                );
+                                self.telemetry.count(
+                                    "fabric.cascade_fallbacks",
+                                    plan.gateway_fallbacks,
+                                );
+                                self.telemetry.count(
+                                    "fabric.cascade_peer_transfers",
+                                    plan.peer_transfers,
+                                );
+                                plan
+                            });
+                        let (fill, depth) = plan.fill_for(node);
+                        self.telemetry.count("fabric.cascade_hops", depth);
+                        self.telemetry
+                            .observe("fabric.cascade_depth", depth as f64);
+                        fill
+                    }
+                };
+                if self.lazy_pull {
+                    let start = self.resolve_latency_secs()
+                        + LAZY_START_READY_FRACTION * fill;
+                    let deferred = bytes
+                        - (bytes as f64 * LAZY_START_READY_FRACTION) as u64;
+                    let chunk_bytes = self
+                        .chunk_target_bytes
+                        .unwrap_or(DEFAULT_LAZY_CHUNK_BYTES)
+                        .max(1);
+                    let n_chunks = deferred.div_ceil(chunk_bytes).max(1);
+                    let tail = (1.0 - LAZY_START_READY_FRACTION) * fill
+                        + n_chunks as f64 * LAZY_CHUNK_RTT_SECS;
+                    cache.note_lazy_deferral(deferred);
+                    self.telemetry
+                        .count("fabric.lazy_bytes_deferred", deferred);
+                    (start, tail)
+                } else {
+                    (fill, 0.0)
+                }
             }
         };
-        self.telemetry.observe("fabric.fetch_secs", secs);
-        Some(secs)
+        self.telemetry
+            .observe("fabric.fetch_secs", split.0 + split.1);
+        Some(split)
     }
 }
 

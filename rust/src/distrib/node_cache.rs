@@ -45,6 +45,10 @@ pub struct NodeCache {
     pub misses: u64,
     /// Entries evicted to make room.
     pub evictions: u64,
+    /// Bytes whose transfer was deferred past container start by lazy
+    /// pulling (DESIGN.md S25) — streamed during execution instead of
+    /// blocking the prepare stage.
+    pub lazy_deferred_bytes: u64,
     /// Virtual-time instant of the most recent eviction, if any — the
     /// unified kernel clock, not a private counter (DESIGN.md S24).
     last_eviction_at: Option<SimTime>,
@@ -62,8 +66,15 @@ impl NodeCache {
             hits: 0,
             misses: 0,
             evictions: 0,
+            lazy_deferred_bytes: 0,
             last_eviction_at: None,
         }
+    }
+
+    /// Record that `bytes` of this node's cold fill were deferred past
+    /// container start by lazy pulling.
+    pub fn note_lazy_deferral(&mut self, bytes: u64) {
+        self.lazy_deferred_bytes += bytes;
     }
 
     /// Whether the squashfs blob `digest` is resident.

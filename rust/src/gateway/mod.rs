@@ -92,6 +92,22 @@ pub trait ImageSource {
         node: usize,
         concurrent_nodes: u64,
     ) -> Option<f64>;
+
+    /// Lazy-pull split of the node fetch: `(start_ready_secs,
+    /// streamed_tail_secs)`. The first half blocks the container's
+    /// prepare stage (metadata + first-read chunks); the second streams
+    /// during execution and is charged to the execute stage. Sources
+    /// without lazy pulling charge everything up front — the default
+    /// returns `(node_fetch_secs, 0.0)`.
+    fn node_fetch_split(
+        &self,
+        image: &GatewayImage,
+        node: usize,
+        concurrent_nodes: u64,
+    ) -> Option<(f64, f64)> {
+        self.node_fetch_secs(image, node, concurrent_nodes)
+            .map(|secs| (secs, 0.0))
+    }
 }
 
 /// The single synchronous Image Gateway (§III): pulls, flattens,

@@ -175,6 +175,24 @@ impl PullQueue {
         reference: &str,
         user: &str,
     ) -> Result<PullState, GatewayError> {
+        self.request_with_dedup(gateway, registry, reference, user, 0.0)
+    }
+
+    /// [`PullQueue::request`] with a content-dedup discount: when the
+    /// caller (the sharded cluster's chunked CAS) already stores
+    /// `shared_fraction` of the image's bytes, the registry download and
+    /// the PFS transfer shrink to the miss fraction — only new chunks
+    /// cross the wire. Expansion and conversion still touch every byte
+    /// (the squashfs is rebuilt whole). `shared_fraction` is clamped to
+    /// `[0, 1]`; 0.0 reproduces the classic full-transfer pull exactly.
+    pub fn request_with_dedup(
+        &mut self,
+        gateway: &ImageGateway,
+        registry: &Registry,
+        reference: &str,
+        user: &str,
+        shared_fraction: f64,
+    ) -> Result<PullState, GatewayError> {
         let r = ImageRef::parse(reference)
             .ok_or_else(|| GatewayError::NotPulled(reference.to_string()))?;
         self.requests += 1;
@@ -208,13 +226,15 @@ impl PullQueue {
             .flatten()
             .map(|f| f.total_size())
             .unwrap_or_default();
+        let miss = 1.0 - shared_fraction.clamp(0.0, 1.0);
         let durations = [
-            registry.download_secs(image, &[]),
+            registry.download_secs(image, &[]) * miss,
             flat_bytes as f64 / 300e6,
             flat_bytes as f64 / 150e6,
             gateway
                 .pfs()
-                .bulk_read_secs((flat_bytes as f64 * 0.45) as u64, 1),
+                .bulk_read_secs((flat_bytes as f64 * 0.45) as u64, 1)
+                * miss,
         ];
         let job = PullJob {
             reference: r.clone(),

@@ -24,7 +24,7 @@ use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Mutex};
 
 use crate::config::UdiRootConfig;
-use crate::distrib::{DistributionFabric, NodeCache};
+use crate::distrib::DistributionFabric;
 use crate::gateway::{ImageSource, PullState};
 use crate::registry::Registry;
 use crate::shifter::{
@@ -894,17 +894,15 @@ impl<'a> LaunchScheduler<'a> {
         Ok(attempt)
     }
 
-    /// Time a failed broadcast fill wastes before the retry.
+    /// Time a failed fill wastes before the retry — priced by the
+    /// fabric's active distribution model (linear Lustre broadcast, or
+    /// the spanning-tree estimate when cascade fills are enabled).
     fn fill_penalty_secs(
         &self,
         fabric: &DistributionFabric,
         spec: &JobSpec,
     ) -> f64 {
-        let bytes = fabric
-            .resolve(&spec.image)
-            .map(|img| img.squashfs.compressed_bytes)
-            .unwrap_or(0);
-        NodeCache::cold_fill_secs(fabric.pfs(), bytes, spec.nodes as u64)
+        fabric.cold_fill_estimate_secs(&spec.image, spec.nodes as u64)
     }
 }
 

@@ -498,23 +498,30 @@ impl ShifterRuntime {
 
         // fetch the squashfs to the node and loop mount it; a distributed
         // source answers from its node-cache model, the single gateway
-        // defers to the host profile's PFS contention model
+        // defers to the host profile's PFS contention model. A lazy
+        // source splits the fetch: only the start-ready head blocks
+        // prepare, the streamed tail is charged to execution below.
         let image_bytes = gw_image.squashfs.compressed_bytes;
         let concurrent = opts.concurrent_nodes.max(1) as u64;
-        let fetch_secs = match opts.fetch_override {
-            Some(secs) => secs,
-            None => match source.node_fetch_secs(
+        let (fetch_secs, lazy_tail_secs) = match opts.fetch_override {
+            Some(secs) => (secs, 0.0),
+            None => match source.node_fetch_split(
                 gw_image,
                 opts.node,
                 concurrent,
             ) {
-                Some(secs) => secs,
-                None => match &self.profile.pfs {
-                    Some(pfs) => {
-                        pfs.bulk_read_secs(image_bytes, concurrent)
-                    }
-                    None => image_bytes as f64 / LOCAL_DISK_BYTES_PER_SEC,
-                },
+                Some(split) => split,
+                None => {
+                    let secs = match &self.profile.pfs {
+                        Some(pfs) => {
+                            pfs.bulk_read_secs(image_bytes, concurrent)
+                        }
+                        None => {
+                            image_bytes as f64 / LOCAL_DISK_BYTES_PER_SEC
+                        }
+                    };
+                    (secs, 0.0)
+                }
             },
         };
         prepare_secs += fetch_secs + LOOP_MOUNT_SECS;
@@ -656,11 +663,21 @@ impl ShifterRuntime {
         )?;
 
         // -- execute ----------------------------------------------------------
+        // a lazily pulled image streams its remaining chunks on demand
+        // while the workload runs: the tail lands on the execute stage
+        let exec_detail = if lazy_tail_secs > 0.0 {
+            format!(
+                "exec {:?} as uid {} (streaming {:.3}s lazy tail)",
+                opts.command, privs.effective_uid, lazy_tail_secs
+            )
+        } else {
+            format!("exec {:?} as uid {}", opts.command, privs.effective_uid)
+        };
         log.record(
             Stage::Execute,
             &privs,
-            format!("exec {:?} as uid {}", opts.command, privs.effective_uid),
-            FORK_EXEC_SECS,
+            exec_detail,
+            FORK_EXEC_SECS + lazy_tail_secs,
         )?;
 
         // -- cleanup ------------------------------------------------------------

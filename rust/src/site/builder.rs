@@ -4,7 +4,12 @@
 use std::sync::Arc;
 
 use crate::config::UdiRootConfig;
-use crate::distrib::{DistributionFabric, DEFAULT_NODE_CACHE_BYTES};
+use crate::distrib::chunk::{
+    MAX_CHUNK_TARGET_BYTES, MIN_CHUNK_TARGET_BYTES,
+};
+use crate::distrib::{
+    CascadeConfig, DistributionFabric, DEFAULT_NODE_CACHE_BYTES,
+};
 use crate::hostenv::SystemProfile;
 use crate::launch::{LaunchCluster, RetryPolicy};
 use crate::pfs::LustreFs;
@@ -66,6 +71,9 @@ pub struct SiteBuilder {
     extensions: Vec<Box<dyn HostExtension>>,
     default_extensions: bool,
     telemetry: bool,
+    cascade: Option<(usize, usize)>,
+    chunk_target: Option<u64>,
+    lazy: bool,
 }
 
 impl Default for SiteBuilder {
@@ -96,6 +104,9 @@ impl SiteBuilder {
             extensions: Vec::new(),
             default_extensions: true,
             telemetry: false,
+            cascade: None,
+            chunk_target: None,
+            lazy: false,
         }
     }
 
@@ -239,6 +250,41 @@ impl SiteBuilder {
         self
     }
 
+    /// Enable topology-aware cascade fills (DESIGN.md S25): nodes are
+    /// grouped into cabinets of `cabinet_nodes`, and a cold pull storm
+    /// fills spanning-tree-style — one gateway read per storm, every
+    /// other node fetching from a warm peer, each warm node serving up
+    /// to `fanout` cold peers. `cabinet_nodes` must be >= 1
+    /// ([`SiteError::EmptyCabinet`]), `fanout` >= 1
+    /// ([`SiteError::BadCascadeFanout`]).
+    pub fn cascade(
+        mut self,
+        cabinet_nodes: usize,
+        fanout: usize,
+    ) -> SiteBuilder {
+        self.cascade = Some((cabinet_nodes, fanout));
+        self
+    }
+
+    /// Enable content-defined chunking in the cluster CAS with the given
+    /// mean chunk size: derived images dedup below layer granularity and
+    /// pulls transfer only missing chunks. Accepted range is
+    /// [`MIN_CHUNK_TARGET_BYTES`]..=[`MAX_CHUNK_TARGET_BYTES`]
+    /// ([`SiteError::BadChunkTarget`] otherwise).
+    pub fn chunk_target_bytes(mut self, bytes: u64) -> SiteBuilder {
+        self.chunk_target = Some(bytes);
+        self
+    }
+
+    /// Enable lazy pulling (DESIGN.md S25): containers start once
+    /// squashfs metadata + first-read chunks arrive, and the remaining
+    /// image streams on demand during execution — the streamed tail is
+    /// charged to the job's execute stage, not container start.
+    pub fn lazy_pull(mut self, enabled: bool) -> SiteBuilder {
+        self.lazy = enabled;
+        self
+    }
+
     /// Record structured spans, counters, and histograms for every
     /// operation this site runs (DESIGN.md S23). Off by default: a
     /// disabled [`Telemetry`] recorder is a single branch on the hot
@@ -266,6 +312,25 @@ impl SiteBuilder {
         }
         if self.retry.is_some_and(|r| r.max_attempts == 0) {
             return Err(SiteError::BadRetryPolicy);
+        }
+        if let Some((cabinet_nodes, fanout)) = self.cascade {
+            if cabinet_nodes == 0 {
+                return Err(SiteError::EmptyCabinet);
+            }
+            if fanout == 0 {
+                return Err(SiteError::BadCascadeFanout);
+            }
+        }
+        if let Some(bytes) = self.chunk_target {
+            if !(MIN_CHUNK_TARGET_BYTES..=MAX_CHUNK_TARGET_BYTES)
+                .contains(&bytes)
+            {
+                return Err(SiteError::BadChunkTarget {
+                    bytes,
+                    floor: MIN_CHUNK_TARGET_BYTES,
+                    ceiling: MAX_CHUNK_TARGET_BYTES,
+                });
+            }
         }
 
         // -- partitions ---------------------------------------------------
@@ -304,9 +369,22 @@ impl SiteBuilder {
                 .unwrap_or_else(LustreFs::piz_daint)
         });
         let telemetry = Arc::new(Telemetry::new(self.telemetry));
-        let fabric = DistributionFabric::new(self.shards, pfs)
+        let mut fabric = DistributionFabric::new(self.shards, pfs)
             .with_node_cache_bytes(self.node_cache_bytes)
             .with_telemetry(Arc::clone(&telemetry));
+        // chunking first: the chunker must be installed before any pull
+        if let Some(bytes) = self.chunk_target {
+            fabric = fabric.with_chunking(bytes);
+        }
+        if let Some((cabinet_nodes, fanout)) = self.cascade {
+            fabric = fabric.with_cascade(CascadeConfig {
+                cabinet_nodes,
+                fanout,
+            });
+        }
+        if self.lazy {
+            fabric = fabric.with_lazy_pull(true);
+        }
 
         // -- extension registry -------------------------------------------
         let mut registry = if self.default_extensions {
@@ -396,6 +474,51 @@ mod tests {
             Site::builder().retry_policy(retry).build(),
             Err(SiteError::BadRetryPolicy)
         ));
+    }
+
+    #[test]
+    fn bad_cascade_topology_is_typed() {
+        assert!(matches!(
+            Site::builder().cascade(0, 3).build(),
+            Err(SiteError::EmptyCabinet)
+        ));
+        assert!(matches!(
+            Site::builder().cascade(8, 0).build(),
+            Err(SiteError::BadCascadeFanout)
+        ));
+        // a sane topology builds and reaches the fabric
+        let site = Site::builder().nodes(4).cascade(8, 3).build().unwrap();
+        let cfg = site.fabric().cascade_config().unwrap();
+        assert_eq!((cfg.cabinet_nodes, cfg.fanout), (8, 3));
+    }
+
+    #[test]
+    fn bad_chunk_target_is_typed() {
+        match Site::builder().chunk_target_bytes(128).build() {
+            Err(SiteError::BadChunkTarget {
+                bytes,
+                floor,
+                ceiling,
+            }) => {
+                assert_eq!(bytes, 128);
+                assert_eq!(floor, MIN_CHUNK_TARGET_BYTES);
+                assert_eq!(ceiling, MAX_CHUNK_TARGET_BYTES);
+            }
+            _ => panic!("expected BadChunkTarget"),
+        }
+        assert!(matches!(
+            Site::builder().chunk_target_bytes(1 << 40).build(),
+            Err(SiteError::BadChunkTarget { .. })
+        ));
+        let site = Site::builder()
+            .nodes(2)
+            .chunk_target_bytes(1 << 20)
+            .lazy_pull(true)
+            .build()
+            .unwrap();
+        assert_eq!(site.fabric().chunk_target(), Some(1 << 20));
+        assert!(site.fabric().lazy_pull_enabled());
+        assert!(site.fabric().cluster().cas().chunked());
     }
 
     #[test]

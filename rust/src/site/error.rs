@@ -68,6 +68,34 @@ pub enum SiteError {
     #[error("retry policy must allow at least one attempt per slot")]
     BadRetryPolicy,
 
+    /// Builder: `cascade(0, _)` — a cascade topology needs at least one
+    /// node per cabinet.
+    #[error("cascade cabinets need at least one node each")]
+    EmptyCabinet,
+
+    /// Builder: `cascade(_, 0)` — a spanning tree with fan-out zero
+    /// never propagates past the gateway seed.
+    #[error("cascade fan-out must be at least one")]
+    BadCascadeFanout,
+
+    /// Builder: the CAS chunk-size target is outside the accepted range
+    /// (too small drowns in bookkeeping, too large degenerates to
+    /// whole-layer blobs).
+    #[error(
+        "chunk target {bytes} B is outside the accepted range \
+         [{floor} B, {ceiling} B]"
+    )]
+    BadChunkTarget {
+        /// The chunk-size target that was requested.
+        bytes: u64,
+        /// Smallest accepted target
+        /// ([`crate::distrib::chunk::MIN_CHUNK_TARGET_BYTES`]).
+        floor: u64,
+        /// Largest accepted target
+        /// ([`crate::distrib::chunk::MAX_CHUNK_TARGET_BYTES`]).
+        ceiling: u64,
+    },
+
     /// Launch-time: the job requests GPUs but no partition of this site
     /// has GPU-capable nodes — failing fast here beats burning a WLM
     /// round trip per partition.

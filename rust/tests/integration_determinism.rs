@@ -7,8 +7,12 @@
 //! never from the host clock or scheduler, so the whole trace replays
 //! bit-for-bit.
 
+use shifter_rs::distrib::{CascadeConfig, DistributionFabric};
+use shifter_rs::gateway::ImageSource;
 use shifter_rs::launch::JobSpec;
-use shifter_rs::{Site, StormSpec, SystemProfile};
+use shifter_rs::pfs::LustreFs;
+use shifter_rs::util::json::Json;
+use shifter_rs::{Registry, Site, StormSpec, SystemProfile};
 
 /// One traced hetero launch on a fresh site: the full pipeline — WLM
 /// allocation, coalesced pull, per-node slot events, MPI swap — under
@@ -67,6 +71,100 @@ fn tenancy_report_and_trace_are_byte_identical_across_runs() {
     assert_eq!(report_a, report_b, "TenancyReport JSON must replay");
     assert_eq!(trace_a, trace_b, "telemetry event order must replay");
     assert!(!trace_a.is_empty());
+}
+
+/// One cascade-fill storm with every distribution mechanism on: a raw
+/// fabric (cascade + lazy pull + chunked CAS) filling 48 nodes, then a
+/// site storm with the same knobs through the builder. Returns a
+/// `BENCH_distrib.json`-shaped document concatenated with the tenancy
+/// report, plus the site's Chrome trace.
+fn distrib_once() -> (String, String) {
+    // part 1: the raw fabric — plan replay, lazy splits, chunk counters
+    let registry = Registry::dockerhub();
+    let mut fabric = DistributionFabric::new(4, LustreFs::piz_daint())
+        .with_cascade(CascadeConfig {
+            cabinet_nodes: 8,
+            fanout: 3,
+        })
+        .with_lazy_pull(true)
+        .with_chunking(1 << 20);
+    fabric
+        .pull_blocking(&registry, "ubuntu:xenial", "det")
+        .unwrap();
+    let mut rows = Vec::new();
+    {
+        let image = fabric.resolve("ubuntu:xenial").unwrap();
+        for node in 0..48 {
+            let (start, tail) =
+                fabric.node_fetch_split(image, node, 48).unwrap();
+            rows.push(Json::obj(vec![
+                ("node", Json::Num(node as f64)),
+                ("start_ready_secs", Json::num(start)),
+                ("tail_secs", Json::num(tail)),
+            ]));
+        }
+    }
+    let stats = fabric.cascade_stats();
+    let cas = fabric.cluster().cas();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("distrib_cascade")),
+        ("gateway_fills", Json::Num(stats.gateway_fills as f64)),
+        ("peer_transfers", Json::Num(stats.peer_transfers as f64)),
+        ("max_depth", Json::Num(stats.max_depth as f64)),
+        (
+            "lazy_deferred_bytes",
+            Json::Num(fabric.cache_stats().lazy_deferred_bytes as f64),
+        ),
+        ("chunks_new", Json::Num(cas.chunks_new() as f64)),
+        ("fills", Json::Arr(rows)),
+    ]);
+    let doc_text = doc.to_string();
+
+    // part 2: the same mechanisms through the site builder, stormed
+    let mut site = Site::builder()
+        .profile(SystemProfile::piz_daint())
+        .nodes(16)
+        .cascade(8, 3)
+        .lazy_pull(true)
+        .chunk_target_bytes(1 << 20)
+        .telemetry(true)
+        .seed(17)
+        .build()
+        .unwrap();
+    let report = site
+        .run_storm(&StormSpec::new().tenants(3).jobs(8))
+        .unwrap();
+    assert_eq!(report.failed(), 0);
+    let report_text = report.to_json().to_string();
+    (
+        format!("{doc_text}\n{report_text}"),
+        site.telemetry().chrome_trace_jsonl(),
+    )
+}
+
+#[test]
+fn distrib_artifacts_are_byte_identical_across_runs() {
+    let (doc_a, trace_a) = distrib_once();
+    let (doc_b, trace_b) = distrib_once();
+    assert_eq!(doc_a, doc_b, "distrib artifact + report must replay");
+    assert_eq!(trace_a, trace_b, "telemetry event order must replay");
+    assert!(!trace_a.is_empty());
+}
+
+#[test]
+fn distrib_results_are_independent_of_host_thread_context() {
+    // cascade plans, chunk digests, and lazy splits are keyed by fixed
+    // seeds and replayed on the virtual-time kernel — concurrent host
+    // threads must reproduce the main-thread bytes exactly
+    let (doc_main, trace_main) = distrib_once();
+    let handles: Vec<_> = (0..4)
+        .map(|_| std::thread::spawn(distrib_once))
+        .collect();
+    for h in handles {
+        let (doc, trace) = h.join().expect("worker run");
+        assert_eq!(doc, doc_main);
+        assert_eq!(trace, trace_main);
+    }
 }
 
 #[test]

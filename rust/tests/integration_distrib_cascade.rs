@@ -1,0 +1,139 @@
+//! Integration: the DESIGN.md S25 distribution mechanisms composed end
+//! to end — topology-aware cascade fills never re-fetch into a cabinet,
+//! lazy-start containers observe exactly the filesystem an eager pull
+//! produces, and a dead peer degrades to a gateway fallback instead of
+//! stalling the tree.
+
+use std::collections::BTreeMap;
+
+use shifter_rs::distrib::{CascadeConfig, DistributionFabric};
+use shifter_rs::gateway::ImageSource;
+use shifter_rs::pfs::LustreFs;
+use shifter_rs::shifter::{Container, RunOptions, Stage};
+use shifter_rs::{Registry, Site};
+
+fn cascade_fabric(fanout: usize) -> (DistributionFabric, Registry) {
+    let fabric = DistributionFabric::new(4, LustreFs::piz_daint())
+        .with_cascade(CascadeConfig {
+            cabinet_nodes: 8,
+            fanout,
+        });
+    (fabric, Registry::dockerhub())
+}
+
+#[test]
+fn cascade_fetches_each_image_into_a_cabinet_exactly_once() {
+    let (mut fabric, registry) = cascade_fabric(2);
+    fabric
+        .pull_blocking(&registry, "ubuntu:xenial", "u")
+        .unwrap();
+    {
+        let image = fabric.resolve("ubuntu:xenial").unwrap();
+        for node in 0..64 {
+            fabric.node_fetch_secs(image, node, 64).unwrap();
+        }
+    }
+    let stats = fabric.cascade_stats();
+    assert_eq!(stats.cascades, 1, "one storm, one plan");
+    assert_eq!(stats.gateway_fills, 1, "one gateway read seeds the tree");
+    assert_eq!(stats.gateway_fallbacks, 0, "all peers alive");
+    assert_eq!(stats.peer_transfers, 63, "everyone else fetched a peer");
+    assert!(stats.max_depth >= 3, "64 nodes at fan-out 2 take depth");
+
+    // the cascade invariant: image data enters each cabinet exactly once
+    // (the seed's gateway read, or one inter-cabinet transfer)
+    let entries: BTreeMap<usize, u64> =
+        fabric.cascade_cabinet_entries("ubuntu:xenial").unwrap();
+    assert_eq!(entries.len(), 8, "8 cabinets of 8 nodes each");
+    for (cabinet, n) in &entries {
+        assert_eq!(*n, 1, "cabinet {cabinet} entered {n} times, want 1");
+    }
+}
+
+#[test]
+fn lazy_start_containers_see_the_same_filesystem_as_eager() {
+    let build = |lazy: bool| {
+        Site::builder()
+            .nodes(16)
+            .cascade(8, 3)
+            .chunk_target_bytes(1 << 20)
+            .lazy_pull(lazy)
+            .seed(7)
+            .build()
+            .unwrap()
+    };
+    let opts = RunOptions::new("ubuntu:xenial", &["cat", "/etc/os-release"])
+        .on_nodes(0, 16);
+    let mut eager_site = build(false);
+    let mut lazy_site = build(true);
+    let eager = eager_site.run(&opts).unwrap();
+    let lazy = lazy_site.run(&opts).unwrap();
+
+    // identical observable container state: same rootfs, same env, same
+    // file contents — laziness must never leak into what the app sees
+    assert_eq!(lazy.rootfs, eager.rootfs);
+    assert_eq!(lazy.env, eager.env);
+    assert_eq!(lazy.mounts, eager.mounts);
+    let (a, b) = (
+        lazy.read_file("/etc/os-release").expect("content-backed file"),
+        eager.read_file("/etc/os-release").expect("content-backed file"),
+    );
+    assert_eq!(a, b);
+    assert!(a.contains("Xenial"));
+
+    // the cost moves, the work doesn't: preparation shrinks to the
+    // start-ready head, execution absorbs the streamed tail
+    let stage_secs = |c: &Container, stage: Stage| {
+        c.stage_log
+            .records()
+            .iter()
+            .find(|r| r.stage == stage)
+            .map(|r| r.sim_secs)
+            .expect("stage ran")
+    };
+    assert!(
+        stage_secs(&lazy, Stage::PrepareEnvironment)
+            < stage_secs(&eager, Stage::PrepareEnvironment),
+        "lazy preparation must start before the full image lands"
+    );
+    assert!(
+        stage_secs(&lazy, Stage::Execute) > stage_secs(&eager, Stage::Execute),
+        "the deferred tail must be charged to execution"
+    );
+}
+
+#[test]
+fn dead_peer_falls_back_to_gateway_without_stalling() {
+    let (mut fabric, registry) = cascade_fabric(2);
+    // kill the node the planner would use as the gateway seed
+    fabric.mark_node_dead(0);
+    fabric
+        .pull_blocking(&registry, "ubuntu:xenial", "u")
+        .unwrap();
+    let fills: Vec<f64> = {
+        let image = fabric.resolve("ubuntu:xenial").unwrap();
+        (0..32)
+            .map(|n| fabric.node_fetch_secs(image, n, 32).unwrap())
+            .collect()
+    };
+    for (node, f) in fills.iter().enumerate() {
+        assert!(
+            f.is_finite() && *f >= 0.0,
+            "node {node} stalled on the dead peer: {f}"
+        );
+    }
+    let stats = fabric.cascade_stats();
+    assert!(
+        stats.gateway_fallbacks >= 1,
+        "orphaned children must time out and fall back to the gateway"
+    );
+    assert!(
+        stats.peer_transfers > 0,
+        "the rest of the tree still cascades"
+    );
+
+    // warm refetch: the storm left every cache populated
+    let image = fabric.resolve("ubuntu:xenial").unwrap();
+    let warm = fabric.node_fetch_secs(image, 1, 32).unwrap();
+    assert!(warm < 1e-2, "second fetch must be a warm hit: {warm}s");
+}

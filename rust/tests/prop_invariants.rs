@@ -468,3 +468,124 @@ mod ext_props {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Content-defined chunking invariants (DESIGN.md S25)
+// ---------------------------------------------------------------------------
+
+mod cdc_props {
+    use shifter_rs::distrib::Chunker;
+    use shifter_rs::util::prng::Rng;
+
+    fn rand_bytes(rng: &mut Rng, len: usize) -> Vec<u8> {
+        (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect()
+    }
+
+    #[test]
+    fn prop_chunk_reassembly_roundtrips() {
+        let mut rng = Rng::new(2020);
+        for case in 0..40 {
+            let len = 1 + rng.below(200_000) as usize;
+            let target = 1u64 << (9 + rng.below(5)); // 512 B .. 8 KB
+            let chunker = Chunker::new(target, rng.below(1 << 32));
+            let buf = rand_bytes(&mut rng, len);
+            let chunks = chunker.chunk(&buf);
+            // the chunks partition the input: contiguous offsets, lengths
+            // summing to the buffer, and concatenation reassembles it
+            let mut cursor = 0u64;
+            let mut rebuilt = Vec::with_capacity(len);
+            for c in &chunks {
+                assert_eq!(c.offset, cursor, "case {case}: gap in chunks");
+                assert!(c.length > 0, "case {case}: empty chunk");
+                let (s, e) = (c.offset as usize, (c.offset + c.length) as usize);
+                rebuilt.extend_from_slice(&buf[s..e]);
+                cursor += c.length;
+            }
+            assert_eq!(cursor, len as u64, "case {case}: lengths must cover");
+            assert_eq!(rebuilt, buf, "case {case}: reassembly not byte-identical");
+            // chunk digests are a pure function of the bytes: re-chunking
+            // the reassembled buffer reproduces the exact sequence
+            assert_eq!(chunker.chunk(&rebuilt), chunks, "case {case}");
+        }
+    }
+
+    #[test]
+    fn prop_boundaries_stable_under_midstream_edits() {
+        let mut rng = Rng::new(2121);
+        for case in 0..25u64 {
+            let chunker = Chunker::new(4_096, 31 + case);
+            let len = 300_000 + rng.below(100_000) as usize;
+            let mut buf = rand_bytes(&mut rng, len);
+            let before = chunker.chunk(&buf);
+
+            // a same-length edit somewhere in the middle third
+            let edit_len = 1 + rng.below(2_000) as usize;
+            let start = len / 3 + rng.below((len / 3 - edit_len) as u64) as usize;
+            for b in &mut buf[start..start + edit_len] {
+                *b = b.wrapping_add(1);
+            }
+            let after = chunker.chunk(&buf);
+
+            // cut points are content-local: everything outside a bounded
+            // window around the edit re-aligns to the same chunks (same
+            // offset, length, and digest — the CAS dedups them)
+            let max_shared = before.len().min(after.len());
+            let prefix = before
+                .iter()
+                .zip(&after)
+                .take_while(|(a, b)| a == b)
+                .count();
+            let suffix = before
+                .iter()
+                .rev()
+                .zip(after.iter().rev())
+                .take_while(|(a, b)| a == b)
+                .count()
+                .min(max_shared - prefix);
+            assert!(prefix > 0, "case {case}: no shared prefix chunk");
+            assert!(suffix > 0, "case {case}: no shared suffix chunk");
+            let changed: u64 = before[prefix..before.len() - suffix]
+                .iter()
+                .map(|c| c.length)
+                .sum();
+            let bound = edit_len as u64 + 8 * chunker.max_bytes();
+            assert!(
+                changed <= bound,
+                "case {case}: a {edit_len} B edit rewrote {changed} B of \
+                 chunks (bound {bound} B)"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_chunking_deterministic_per_seed() {
+        let mut rng = Rng::new(2222);
+        let cases = 25;
+        let mut diverged = 0;
+        for case in 0..cases {
+            let buf = rand_bytes(&mut rng, 150_000);
+            let seed = rng.below(1 << 48);
+            let a = Chunker::new(4_096, seed).chunk(&buf);
+            let b = Chunker::new(4_096, seed).chunk(&buf);
+            assert_eq!(a, b, "case {case}: same seed must reproduce cuts");
+            // synthetic chunks share the per-seed determinism guarantee
+            let s1 = Chunker::new(1 << 20, seed)
+                .synthetic_chunks(0xBEEF, 50_000_000);
+            let s2 = Chunker::new(1 << 20, seed)
+                .synthetic_chunks(0xBEEF, 50_000_000);
+            assert_eq!(s1, s2, "case {case}");
+            // a different seed keys a different gear table: cut points move
+            let other = Chunker::new(4_096, seed ^ 0x5bd1_e995).chunk(&buf);
+            let cuts = |v: &[shifter_rs::distrib::Chunk]| {
+                v.iter().map(|c| c.offset).collect::<Vec<_>>()
+            };
+            if cuts(&a) != cuts(&other) {
+                diverged += 1;
+            }
+        }
+        assert!(
+            diverged > cases / 2,
+            "different seeds moved cuts in only {diverged}/{cases} cases"
+        );
+    }
+}

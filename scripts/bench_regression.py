@@ -5,15 +5,16 @@ The simulation metrics in the bench artifacts are deterministic per
 (seed, knobs): identical inputs produce identical timings, so any drift
 is a real behavioral change. This script compares an allowlist of
 hot-path metrics in freshly produced artifacts (``rust/BENCH_launch.json``,
-``rust/BENCH_extensions.json``) against checked-in baselines under
-``rust/bench_baselines/`` and fails when a metric regressed (grew) past
-the tolerance (default 15%). Improvements and sub-tolerance jitter pass,
-with a note.
+``rust/BENCH_extensions.json``, ``rust/BENCH_distrib.json``) against
+checked-in baselines under ``rust/bench_baselines/`` and fails when a
+metric regressed (grew) past the tolerance (default 15%). Improvements
+and sub-tolerance jitter pass, with a note.
 
 Baselines must be produced with the same knobs CI uses (see
 .github/workflows/ci.yml bench-smoke: LAUNCH_SCALE_NODES=256,
-EXTENSION_OVERHEAD_NODES=64); artifacts whose ``max_nodes`` differs from
-the baseline are skipped with a notice instead of mis-compared.
+EXTENSION_OVERHEAD_NODES=64, GATEWAY_SCALE_NODES=500); artifacts whose
+``max_nodes`` differs from the baseline are skipped with a notice
+instead of mis-compared.
 
 Usage:
     python3 scripts/bench_regression.py [--tolerance 0.15] \
@@ -78,9 +79,31 @@ def extensions_metrics(doc):
     return out
 
 
+def distrib_metrics(doc):
+    """(row key, metric name) -> value for BENCH_distrib.json."""
+    out = {}
+    for row in doc.get("fill", []):
+        key = "fill/{}".format(int(row.get("nodes", 0)))
+        out[f"{key}.broadcast_makespan_secs"] = row.get(
+            "broadcast_makespan_secs", 0.0)
+        out[f"{key}.cascade_makespan_secs"] = row.get(
+            "cascade_makespan_secs", 0.0)
+    lazy = doc.get("lazy", {})
+    for metric in ("eager_p99_secs", "start_ready_p99_secs",
+                   "tail_p99_secs"):
+        if metric in lazy:
+            out[f"lazy.{metric}"] = lazy[metric]
+    chunks = doc.get("chunks", {})
+    for metric in ("v1_turnaround_secs", "v2_turnaround_secs"):
+        if metric in chunks:
+            out[f"chunks.{metric}"] = chunks[metric]
+    return out
+
+
 EXTRACTORS = {
     "launch_scale": launch_metrics,
     "extension_overhead": extensions_metrics,
+    "distrib_cascade": distrib_metrics,
 }
 
 

@@ -3,11 +3,12 @@
 
 Two modes:
 
-* **Toolchain mode** (default when ``cargo`` is on PATH): run the two
+* **Toolchain mode** (default when ``cargo`` is on PATH): run the
   gated benches with the exact CI bench-smoke knobs
-  (``LAUNCH_SCALE_NODES=256``, ``EXTENSION_OVERHEAD_NODES=64``), then
-  record the fresh artifacts via ``bench_regression.py --update``. The
-  result is a full-magnitude baseline — commit ``rust/bench_baselines/``.
+  (``LAUNCH_SCALE_NODES=256``, ``EXTENSION_OVERHEAD_NODES=64``,
+  ``GATEWAY_SCALE_NODES=500``), then record the fresh artifacts via
+  ``bench_regression.py --update``. The result is a full-magnitude
+  baseline — commit ``rust/bench_baselines/``.
 
 * **Provisional mode** (``--provisional``, or automatic when cargo is
   unavailable): write *schema* baselines that list every metric key the
@@ -37,6 +38,7 @@ import sys
 # only comparable when produced at exactly these caps
 LAUNCH_SCALE_NODES = 256
 EXTENSION_OVERHEAD_NODES = 64
+GATEWAY_SCALE_NODES = 500
 
 # OSU message sizes priced by the net-split table
 # (rust/src/fabric/mod.rs OSU_SIZES)
@@ -82,11 +84,38 @@ def extensions_expected_metrics(cap):
     return keys
 
 
+def distrib_expected_metrics(cap):
+    """Metric keys gateway_scale's distrib artifact emits at the CI cap.
+
+    Mirrors the bench's ``fill_widths()``: ~1/16 and ~1/4 of the cap,
+    floored at 32 nodes, then the cap itself (deduplicated).
+    """
+    def clamp(w):
+        return min(max(w, min(32, cap)), cap)
+
+    widths = []
+    for w in (clamp(-(-cap // 16)), clamp(-(-cap // 4)), cap):
+        if w not in widths:
+            widths.append(w)
+    keys = []
+    for w in widths:
+        keys.append(f"fill/{w}.broadcast_makespan_secs")
+        keys.append(f"fill/{w}.cascade_makespan_secs")
+    keys += [f"lazy.{m}" for m in ("eager_p99_secs",
+                                   "start_ready_p99_secs",
+                                   "tail_p99_secs")]
+    keys += [f"chunks.{m}" for m in ("v1_turnaround_secs",
+                                     "v2_turnaround_secs")]
+    return keys
+
+
 PROVISIONAL = [
     ("BENCH_launch.json", "launch_scale", LAUNCH_SCALE_NODES,
      launch_expected_metrics),
     ("BENCH_extensions.json", "extension_overhead",
      EXTENSION_OVERHEAD_NODES, extensions_expected_metrics),
+    ("BENCH_distrib.json", "distrib_cascade", GATEWAY_SCALE_NODES,
+     distrib_expected_metrics),
 ]
 
 
@@ -117,6 +146,8 @@ def run_benches_and_update(baseline_dir):
         ("launch_scale", {"LAUNCH_SCALE_NODES": str(LAUNCH_SCALE_NODES)}),
         ("extension_overhead",
          {"EXTENSION_OVERHEAD_NODES": str(EXTENSION_OVERHEAD_NODES)}),
+        ("gateway_scale",
+         {"GATEWAY_SCALE_NODES": str(GATEWAY_SCALE_NODES)}),
     ]
     for bench, knobs in benches:
         print(f"  running cargo bench --bench {bench} ({knobs})")
@@ -131,7 +162,8 @@ def run_benches_and_update(baseline_dir):
                                       "bench_regression.py"),
          "--update", "--baseline-dir", baseline_dir,
          os.path.join(root, "rust", "BENCH_launch.json"),
-         os.path.join(root, "rust", "BENCH_extensions.json")],
+         os.path.join(root, "rust", "BENCH_extensions.json"),
+         os.path.join(root, "rust", "BENCH_distrib.json")],
         check=True,
     )
 
