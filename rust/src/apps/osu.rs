@@ -67,9 +67,9 @@ pub fn run_container(
     container: &Container,
     tag: &str,
 ) -> Vec<LatencyRow> {
-    let mpi = container
-        .effective_mpi(profile)
-        .expect("osu image carries an MPI");
+    let Some(mpi) = container.effective_mpi(profile) else {
+        panic!("osu benchmark container carries no MPI library");
+    };
     osu_latency(profile, &mpi, tag)
 }
 

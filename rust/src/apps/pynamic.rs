@@ -115,7 +115,9 @@ fn phase_model(
 /// Run the Fig. 3 protocol: 30 repetitions with measurement noise,
 /// mean ± std per phase.
 pub fn run(profile: &SystemProfile, ranks: u64, mode: Mode) -> PynamicResult {
-    let pfs = profile.pfs.as_ref().expect("pynamic needs a parallel fs");
+    let Some(pfs) = profile.pfs.as_ref() else {
+        panic!("pynamic needs a profile with a parallel filesystem");
+    };
     let (s0, i0, v0) = phase_model(profile, pfs, ranks, mode);
     let tag = match mode {
         Mode::Native => "native",

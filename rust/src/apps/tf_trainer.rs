@@ -79,11 +79,17 @@ pub struct TrainReport {
 
 impl TrainReport {
     pub fn first_loss(&self) -> f32 {
-        *self.losses.first().unwrap()
+        match self.losses.first() {
+            Some(l) => *l,
+            None => panic!("TrainReport records no losses"),
+        }
     }
 
     pub fn last_loss(&self) -> f32 {
-        *self.losses.last().unwrap()
+        match self.losses.last() {
+            Some(l) => *l,
+            None => panic!("TrainReport records no losses"),
+        }
     }
 
     pub fn loss_decreased(&self) -> bool {

@@ -381,8 +381,10 @@ fn main() {
                 .jobs(knobs.jobs)
                 .arrival_rate_per_min(knobs.arrival_rate)
                 .duration_secs(knobs.duration);
-            // infallible here: the spec writes no trace artifact
-            let report = site.run_storm(&spec).expect("storm runs");
+            let report = match site.run_storm(&spec) {
+                Ok(r) => r,
+                Err(e) => die(&e),
+            };
             print!("{}", report.render());
             maybe_write_trace(&site, &parsed, None);
             if report.failed() > 0 {
@@ -406,8 +408,10 @@ fn main() {
                 .jobs(knobs.jobs)
                 .arrival_rate_per_min(knobs.arrival_rate)
                 .duration_secs(knobs.duration);
-            // infallible here: the spec writes no trace artifact
-            let report = site.run_storm(&spec).expect("storm runs");
+            let report = match site.run_storm(&spec) {
+                Ok(r) => r,
+                Err(e) => die(&e),
+            };
             print!("{}", report.render());
             let tel = site.telemetry();
             let mut counters = Table::new(

@@ -176,7 +176,11 @@ pub(crate) fn plan(
     let mut depth: BTreeMap<usize, u64> = BTreeMap::new();
 
     let mut kernel: SimKernel<usize> = SimKernel::new();
-    let seed = cold[0].pop_front().expect("width >= 1");
+    // width >= 1, so cabinet 0 always has a node to seed from; an empty
+    // deque would mean no nodes at all, where the empty plan is correct.
+    let Some(seed) = cold[0].pop_front() else {
+        return plan;
+    };
     seeded[0] = true;
     origin.insert(seed, Origin::GatewaySeed);
     depth.insert(seed, 0);
@@ -236,7 +240,10 @@ pub(crate) fn plan(
             } else if let Some(target) = (0..n_cabinets)
                 .find(|&c| !seeded[c] && !cold[c].is_empty())
             {
-                let child = cold[target].pop_front().expect("non-empty");
+                // the find above checked !cold[target].is_empty()
+                let Some(child) = cold[target].pop_front() else {
+                    break;
+                };
                 seeded[target] = true;
                 cursor += hop_inter;
                 origin.insert(child, Origin::Inter);

@@ -52,6 +52,7 @@ use crate::pfs::LustreFs;
 use crate::registry::Registry;
 use crate::sim::SimTime;
 use crate::telemetry::Telemetry;
+use crate::util::sync::lock_unpoisoned;
 
 /// Default per-node squashfs cache: 32 GB of node-local storage (the
 /// RAM-backed tmpfs / local SSD slice sites give Shifter).
@@ -192,10 +193,7 @@ impl DistributionFabric {
     /// peers that would have fetched from it time out and fall back to
     /// the gateway. Affects plans built after the call.
     pub fn mark_node_dead(&mut self, node: usize) {
-        self.dead_nodes
-            .lock()
-            .expect("dead-node lock poisoned")
-            .insert(node);
+        lock_unpoisoned(&self.dead_nodes).insert(node);
     }
 
     /// The cascade topology, when cascade fills are enabled.
@@ -282,10 +280,7 @@ impl DistributionFabric {
         self.cluster.tick(registry, dt);
         // report CAS chunk-counter deltas (new registrations this tick)
         if self.telemetry.enabled() && self.cluster.cas().chunked() {
-            let mut mark = self
-                .chunk_watermark
-                .lock()
-                .expect("chunk-watermark lock poisoned");
+            let mut mark = lock_unpoisoned(&self.chunk_watermark);
             let cas = self.cluster.cas();
             let (new, shared) = (cas.chunks_new(), cas.chunks_shared());
             if new > mark.0 {
@@ -353,9 +348,7 @@ impl DistributionFabric {
         let Ok(image) = self.cluster.lookup(reference) else {
             return false;
         };
-        self.caches
-            .lock()
-            .expect("node-cache lock poisoned")
+        lock_unpoisoned(&self.caches)
             .get(&node)
             .is_some_and(|c| c.contains(image.squashfs.digest))
     }
@@ -377,7 +370,7 @@ impl DistributionFabric {
     /// Aggregated node-cache counters across every node cache the fabric
     /// has created.
     pub fn cache_stats(&self) -> CacheStats {
-        let caches = self.caches.lock().expect("node-cache lock poisoned");
+        let caches = lock_unpoisoned(&self.caches);
         CacheStats {
             nodes: caches.len(),
             hits: caches.values().map(|c| c.hits).sum(),
@@ -393,7 +386,7 @@ impl DistributionFabric {
     /// Aggregated cascade accounting across every plan the fabric has
     /// built (one per squashfs digest that stormed cold).
     pub fn cascade_stats(&self) -> CascadeStats {
-        let plans = self.cascades.lock().expect("cascade lock poisoned");
+        let plans = lock_unpoisoned(&self.cascades);
         let mut stats = CascadeStats {
             cascades: plans.len() as u64,
             ..CascadeStats::default()
@@ -416,7 +409,7 @@ impl DistributionFabric {
         reference: &str,
     ) -> Option<BTreeMap<usize, u64>> {
         let image = self.cluster.lookup(reference).ok()?;
-        let plans = self.cascades.lock().expect("cascade lock poisoned");
+        let plans = lock_unpoisoned(&self.cascades);
         plans
             .get(&image.squashfs.digest)
             .map(|p| p.cabinet_entries().clone())
@@ -483,7 +476,7 @@ impl ImageSource for DistributionFabric {
         node: usize,
         concurrent_nodes: u64,
     ) -> Option<(f64, f64)> {
-        let mut caches = self.caches.lock().expect("node-cache lock poisoned");
+        let mut caches = lock_unpoisoned(&self.caches);
         let cache = caches
             .entry(node)
             .or_insert_with(|| NodeCache::new(self.node_cache_bytes));
@@ -505,18 +498,12 @@ impl ImageSource for DistributionFabric {
                         concurrent_nodes,
                     ),
                     Some(cfg) => {
-                        let mut plans = self
-                            .cascades
-                            .lock()
-                            .expect("cascade lock poisoned");
+                        let mut plans = lock_unpoisoned(&self.cascades);
                         let plan = plans
                             .entry(image.squashfs.digest)
                             .or_insert_with(|| {
-                                let dead = self
-                                    .dead_nodes
-                                    .lock()
-                                    .expect("dead-node lock poisoned")
-                                    .clone();
+                                let dead =
+                                    lock_unpoisoned(&self.dead_nodes).clone();
                                 let plan = cascade::plan(
                                     cfg,
                                     concurrent_nodes.max(1) as usize,

@@ -133,12 +133,16 @@ impl NodeCache {
         }
         let mut evicted = 0;
         while self.used_bytes + bytes > self.capacity_bytes {
-            let lru = self
+            // used_bytes > 0 implies entries exist; if the accounting ever
+            // drifted, stopping eviction is safer than panicking.
+            let Some(lru) = self
                 .entries
                 .iter()
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(d, e)| (*d, e.bytes))
-                .expect("used > 0 implies entries");
+            else {
+                break;
+            };
             self.entries.remove(&lru.0);
             self.used_bytes -= lru.1;
             evicted += 1;

@@ -273,7 +273,10 @@ impl PullQueue {
             else {
                 return;
             };
-            let job = self.jobs.get_mut(&r).unwrap();
+            // The find above indexed self.jobs[r], so the key is present.
+            let Some(job) = self.jobs.get_mut(&r) else {
+                return;
+            };
             if job.state == PullState::Enqueued {
                 job.state = PullState::Pulling;
                 job.remaining = job.durations[0];

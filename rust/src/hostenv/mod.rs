@@ -168,11 +168,30 @@ impl SystemProfile {
     /// NVIDIA binaries, the vendor MPI with its dependencies — everything
     /// the Shifter runtime may bind-mount into containers.
     pub fn host_fs(&self) -> VirtualFs {
+        // The host tree is a static literal layout: every path below is
+        // distinct by construction, so a VfsError here is a programming
+        // error in this function — panic explicitly with the path.
+        fn add(fs: &mut VirtualFs, path: &str, bytes: u64, digest: u64) {
+            if let Err(e) = fs.add_file(path, bytes, digest) {
+                unreachable!("host fs construction is static: {path}: {e}");
+            }
+        }
+        fn mkdir(fs: &mut VirtualFs, path: &str) {
+            if let Err(e) = fs.mkdir_p(path) {
+                unreachable!("host fs construction is static: {path}: {e}");
+            }
+        }
+        fn insert(fs: &mut VirtualFs, path: &str, node: VNode) {
+            if let Err(e) = fs.insert(path, node) {
+                unreachable!("host fs construction is static: {path}: {e}");
+            }
+        }
+
         let mut fs = VirtualFs::new();
-        fs.add_file("/etc/os-release", 300, 0x05).unwrap();
-        fs.mkdir_p("/scratch").unwrap();
-        fs.mkdir_p("/home").unwrap();
-        fs.mkdir_p("/var/tmp").unwrap();
+        add(&mut fs, "/etc/os-release", 300, 0x05);
+        mkdir(&mut fs, "/scratch");
+        mkdir(&mut fs, "/home");
+        mkdir(&mut fs, "/var/tmp");
 
         // NVIDIA driver stack
         if let (Some(dv), Some(node)) = (self.driver_version, self.nodes.first())
@@ -180,55 +199,61 @@ impl SystemProfile {
             if !node.gpus.is_empty() {
                 let driver = NvidiaDriver::new(dv, node.gpus.clone());
                 for lib in driver.library_files() {
-                    fs.add_file(
+                    add(
+                        &mut fs,
                         &format!("{}/{lib}", self.gpu_lib_dir),
                         8_000_000,
                         0x10 ^ lib.len() as u64,
-                    )
-                    .unwrap();
+                    );
                 }
                 for bin in crate::gpu::DRIVER_BINARIES {
-                    fs.insert(
+                    insert(
+                        &mut fs,
                         &format!("{}/{bin}", self.gpu_bin_dir),
                         VNode::exe(450_000, 0x20),
-                    )
-                    .unwrap();
+                    );
                 }
                 let mut id = 0;
                 for g in &node.gpus {
                     for _ in 0..g.chips {
-                        fs.insert(
+                        insert(
+                            &mut fs,
                             &format!("/dev/nvidia{id}"),
                             VNode::Device {
                                 major: 195,
                                 minor: id,
                             },
-                        )
-                        .unwrap();
+                        );
                         id += 1;
                     }
                 }
-                fs.insert("/dev/nvidiactl", VNode::Device { major: 195, minor: 255 })
-                    .unwrap();
-                fs.insert("/dev/nvidia-uvm", VNode::Device { major: 243, minor: 0 })
-                    .unwrap();
+                insert(
+                    &mut fs,
+                    "/dev/nvidiactl",
+                    VNode::Device { major: 195, minor: 255 },
+                );
+                insert(
+                    &mut fs,
+                    "/dev/nvidia-uvm",
+                    VNode::Device { major: 243, minor: 0 },
+                );
             }
         }
 
         // host MPI: frontend libs + transport dependencies + config
         for lib in self.host_mpi.frontend_libraries() {
-            fs.add_file(
+            add(
+                &mut fs,
                 &format!("{}/lib/{lib}", self.mpi_prefix),
                 6_000_000,
                 0x30 ^ lib.len() as u64,
-            )
-            .unwrap();
+            );
         }
         for dep in self.mpi_dependency_libs() {
-            fs.add_file(&dep, 1_500_000, 0x40 ^ dep.len() as u64).unwrap();
+            add(&mut fs, &dep, 1_500_000, 0x40 ^ dep.len() as u64);
         }
         for cfg in self.mpi_config_paths() {
-            fs.add_file(&cfg, 2_000, 0x50).unwrap();
+            add(&mut fs, &cfg, 2_000, 0x50);
         }
 
         // specialized-network transport stack (netfab): user-space
@@ -238,16 +263,15 @@ impl SystemProfile {
         // the MPI section already added.
         for lib in self.net_transport_libs() {
             if !fs.exists(&lib) {
-                fs.add_file(&lib, 900_000, 0x60 ^ lib.len() as u64).unwrap();
+                add(&mut fs, &lib, 900_000, 0x60 ^ lib.len() as u64);
             }
         }
         for (i, dev) in self.net_device_files().iter().enumerate() {
             if dev.ends_with("hugepages") {
-                fs.mkdir_p(dev).unwrap();
+                mkdir(&mut fs, dev);
             } else if !fs.exists(dev) {
                 let major = if dev.contains("kgni") { 249 } else { 231 };
-                fs.insert(dev, VNode::Device { major, minor: i as u32 })
-                    .unwrap();
+                insert(&mut fs, dev, VNode::Device { major, minor: i as u32 });
             }
         }
         fs

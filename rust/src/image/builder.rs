@@ -39,10 +39,29 @@ pub struct ImageBuilder {
     rng: Rng,
 }
 
+/// The builder's constructor contract: references are compile-time
+/// literals in the catalog, so a malformed one is a caller bug — panic
+/// with the offending string rather than unwrapping opaquely.
+fn parse_ref(reference: &str) -> ImageRef {
+    match ImageRef::parse(reference) {
+        Some(r) => r,
+        None => panic!("ImageBuilder: invalid image reference {reference:?}"),
+    }
+}
+
+/// Builder staging writes share one failure contract: a path collision in
+/// the pending layer is a bug in the Dockerfile-style recipe driving the
+/// builder — report it with the path, explicitly.
+fn stage(result: Result<(), crate::vfs::VfsError>, path: &str) {
+    if let Err(e) = result {
+        panic!("ImageBuilder: cannot stage {path:?} into the pending layer: {e}");
+    }
+}
+
 impl ImageBuilder {
     pub fn new(reference: &str) -> ImageBuilder {
         ImageBuilder {
-            reference: ImageRef::parse(reference).expect("bad image ref"),
+            reference: parse_ref(reference),
             layers: Vec::new(),
             env: vec![(
                 "PATH".to_string(),
@@ -64,7 +83,7 @@ impl ImageBuilder {
     /// lets the content-addressed store (distrib::cas) dedup them.
     pub fn from_image(base: &Image, reference: &str) -> ImageBuilder {
         ImageBuilder {
-            reference: ImageRef::parse(reference).expect("bad image ref"),
+            reference: parse_ref(reference),
             layers: base.layers.clone(),
             env: base.manifest.env.clone(),
             labels: base.manifest.labels.clone(),
@@ -89,24 +108,23 @@ impl ImageBuilder {
 
     pub fn file(mut self, path: &str, size: u64) -> Self {
         let digest = self.rng.next_u64();
-        self.pending.add_file(path, size, digest).unwrap();
+        stage(self.pending.add_file(path, size, digest), path);
         self
     }
 
     pub fn exe(mut self, path: &str, size: u64) -> Self {
         let digest = self.rng.next_u64();
-        self.pending
-            .insert(path, crate::vfs::VNode::exe(size, digest))
-            .unwrap();
+        stage(
+            self.pending.insert(path, crate::vfs::VNode::exe(size, digest)),
+            path,
+        );
         self
     }
 
     /// Small text file with retrievable content (e.g. /etc/os-release).
     pub fn text_file(mut self, path: &str, content: &str) -> Self {
         let digest = self.rng.next_u64();
-        self.pending
-            .add_file(path, content.len() as u64, digest)
-            .unwrap();
+        stage(self.pending.add_file(path, content.len() as u64, digest), path);
         self.files_content.insert(path.to_string(), content.to_string());
         self
     }
@@ -118,9 +136,8 @@ impl ImageBuilder {
             let size =
                 (avg_size as f64 * self.rng.range(0.5, 1.5)) as u64;
             let digest = self.rng.next_u64();
-            self.pending
-                .add_file(&format!("{dir}/f{i:04}"), size, digest)
-                .unwrap();
+            let path = format!("{dir}/f{i:04}");
+            stage(self.pending.add_file(&path, size, digest), &path);
         }
         self
     }

@@ -189,11 +189,9 @@ impl LaunchCluster {
         assert!(nodes >= 1, "a partition needs at least one node");
         let first_node = self.total_nodes;
         let mut profile = base.clone();
-        let spec = profile
-            .nodes
-            .first()
-            .cloned()
-            .expect("base profile has no node spec");
+        let Some(spec) = profile.nodes.first().cloned() else {
+            panic!("partition {name:?}: base profile has no node spec");
+        };
         profile.nodes = vec![spec; (first_node + nodes) as usize];
         self.partitions.push(Partition {
             name: name.to_string(),

@@ -20,7 +20,7 @@
 //! and retry; container-side errors (MPI ABI mismatch, GPU incompat,
 //! missing host libraries) are permanent and fail only their own slot.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 use crate::config::UdiRootConfig;
@@ -33,6 +33,7 @@ use crate::shifter::{
 use crate::sim::{SimKernel, SimTime};
 use crate::telemetry::{SpanDraft, Telemetry, TraceCtx};
 use crate::util::prng::Rng;
+use crate::util::sync::lock_unpoisoned;
 use crate::wlm::{GresRequest, Slurm, WlmError};
 
 use super::report::{LaunchReport, NodeResult, PullSummary};
@@ -190,8 +191,9 @@ pub struct LaunchScheduler<'a> {
     telemetry: Option<Arc<Telemetry>>,
     /// Slot-template cache for the fast path (lives for the scheduler's
     /// lifetime: a storm builds one scheduler, so templates amortize
-    /// across every job it launches).
-    templates: Mutex<HashMap<TemplateKey, SlotTemplate>>,
+    /// across every job it launches). Ordered so any future iteration
+    /// over the cache is deterministic (S26 `unordered-collection`).
+    templates: Mutex<BTreeMap<TemplateKey, SlotTemplate>>,
 }
 
 impl<'a> LaunchScheduler<'a> {
@@ -208,7 +210,7 @@ impl<'a> LaunchScheduler<'a> {
             config: None,
             extensions: None,
             telemetry: None,
-            templates: Mutex::new(HashMap::new()),
+            templates: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -428,10 +430,14 @@ impl<'a> LaunchScheduler<'a> {
                 }
             }
         }
-        let node_results: Vec<NodeResult> = results
-            .into_iter()
-            .map(|r| r.expect("every slot produces a result"))
-            .collect();
+        // Every Start event filled its slot before its Done event popped;
+        // flatten keeps that invariant checkable without a panic site.
+        let node_results: Vec<NodeResult> = results.into_iter().flatten().collect();
+        debug_assert_eq!(
+            node_results.len(),
+            slots.len(),
+            "every slot produces a result"
+        );
 
         // close the standalone root around whatever its children (pull +
         // node spans) actually covered
@@ -826,8 +832,7 @@ impl<'a> LaunchScheduler<'a> {
             )
         });
         if let (Some(key), Some(fetch)) = (template_key, fetch) {
-            let templates =
-                self.templates.lock().expect("template lock poisoned");
+            let templates = lock_unpoisoned(&self.templates);
             if let Some(tpl) = templates.get(key) {
                 let mut stage_secs = tpl.stage_secs.clone();
                 stage_secs[tpl.prepare_idx].1 += fetch - tpl.fetch_secs;
@@ -874,21 +879,18 @@ impl<'a> LaunchScheduler<'a> {
                 .iter()
                 .position(|(name, _)| *name == "prepare-environment")
             {
-                self.templates
-                    .lock()
-                    .expect("template lock poisoned")
-                    .insert(
-                        key.clone(),
-                        SlotTemplate {
-                            overhead_secs: attempt.overhead_secs,
-                            fetch_secs: fetch,
-                            prepare_idx,
-                            stage_secs: attempt.stage_secs.clone(),
-                            gpu_libraries: attempt.gpu_libraries.clone(),
-                            host_mpi: attempt.host_mpi.clone(),
-                            extensions: attempt.extensions.clone(),
-                        },
-                    );
+                lock_unpoisoned(&self.templates).insert(
+                    key.clone(),
+                    SlotTemplate {
+                        overhead_secs: attempt.overhead_secs,
+                        fetch_secs: fetch,
+                        prepare_idx,
+                        stage_secs: attempt.stage_secs.clone(),
+                        gpu_libraries: attempt.gpu_libraries.clone(),
+                        host_mpi: attempt.host_mpi.clone(),
+                        extensions: attempt.extensions.clone(),
+                    },
+                );
             }
         }
         Ok(attempt)

@@ -71,6 +71,10 @@ pub enum NetSupportError {
     /// host filesystem.
     #[error("host fabric device missing: {0}")]
     MissingHostDevice(String),
+    /// Grafting a host node into the container rootfs failed (path
+    /// conflict inside the image tree).
+    #[error("container rootfs graft failed: {0}")]
+    Rootfs(#[from] crate::vfs::VfsError),
 }
 
 /// What specialized-network support did to the container.
@@ -144,7 +148,7 @@ pub fn inject(
             .get(lib)
             .cloned()
             .ok_or_else(|| NetSupportError::MissingHostLibrary(lib.clone()))?;
-        rootfs.insert(lib, node).expect("transport lib insert");
+        rootfs.insert(lib, node)?;
         mounts.bind(lib, lib, true, "net support");
         libraries.push(lib.clone());
     }
@@ -159,7 +163,7 @@ pub fn inject(
             let node = host_fs.get(dev).cloned().ok_or_else(|| {
                 NetSupportError::MissingHostDevice(dev.clone())
             })?;
-            rootfs.insert(dev, node).expect("device file insert");
+            rootfs.insert(dev, node)?;
         }
         mounts.bind(dev, dev, false, "net support");
         device_files.push(dev.clone());

@@ -11,9 +11,11 @@
 //! 1-tuple (return_tuple=True at lowering) decomposed with `to_tuple`.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
-use std::time::Instant;
+use std::time::Duration;
+
+use crate::sim::{SimClock, SimTime};
 
 use super::artifact::{ArtifactCatalog, ArtifactError, ArtifactSpec, Dtype};
 // Offline builds resolve the `xla` API against the in-crate shim; restoring
@@ -107,26 +109,48 @@ impl TensorValue {
     }
 }
 
-/// One artifact execution's result: decomposed outputs + real wall time.
+/// One artifact execution's result: decomposed outputs + the *virtual*
+/// wall time charged by the S24 cost model (see [`exec_cost_secs`]).
 #[derive(Debug)]
 pub struct ExecResult {
     pub outputs: Vec<TensorValue>,
-    pub wall: std::time::Duration,
+    pub wall: Duration,
     pub flops: u64,
 }
 
 impl ExecResult {
-    /// Achieved GFLOP/s of this real CPU execution.
+    /// Modeled GFLOP/s of this execution (flops over virtual wall time).
     pub fn achieved_gflops(&self) -> f64 {
         self.flops as f64 / self.wall.as_secs_f64() / 1e9
     }
 }
 
+/// Nominal single-core CPU throughput the cost model charges against.
+const NOMINAL_CPU_GFLOPS: f64 = 40.0;
+
+/// Fixed per-dispatch overhead (argument marshalling, PJRT launch).
+const EXEC_DISPATCH_SECS: f64 = 25e-6;
+
+/// Virtual seconds one execution of an artifact with `flops` FLOPs costs.
+///
+/// A pure function of the artifact spec, so executor timing is identical
+/// across runs, hosts and thread counts — the byte-exact report guarantee
+/// (DESIGN.md S24) extends through the execute path. The dispatch floor
+/// keeps the cost strictly positive even for zero-FLOP artifacts.
+pub fn exec_cost_secs(flops: u64) -> f64 {
+    EXEC_DISPATCH_SECS + flops as f64 / (NOMINAL_CPU_GFLOPS * 1e9)
+}
+
 /// The executor: a PJRT CPU client + compile cache over the catalog.
+///
+/// Timing is virtual: executions advance an internal [`SimClock`] by the
+/// [`exec_cost_secs`] cost model instead of reading host clocks, so a
+/// sequence of executions yields a deterministic timeline.
 pub struct Executor {
     client: xla::PjRtClient,
     catalog: ArtifactCatalog,
-    compiled: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    compiled: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
+    clock: RefCell<SimClock>,
 }
 
 impl Executor {
@@ -136,8 +160,14 @@ impl Executor {
         Ok(Executor {
             client,
             catalog,
-            compiled: RefCell::new(HashMap::new()),
+            compiled: RefCell::new(BTreeMap::new()),
+            clock: RefCell::new(SimClock::new()),
         })
+    }
+
+    /// The executor's virtual clock: total modeled execution time so far.
+    pub fn virtual_now(&self) -> SimTime {
+        self.clock.borrow().now()
     }
 
     pub fn catalog(&self) -> &ArtifactCatalog {
@@ -195,7 +225,8 @@ impl Executor {
     }
 
     /// Execute an artifact with validated inputs; returns decomposed
-    /// outputs plus the real wall-clock of the PJRT execution.
+    /// outputs plus the virtual wall time charged by [`exec_cost_secs`]
+    /// (the executor clock advances by the same amount).
     pub fn execute(
         &self,
         name: &str,
@@ -212,11 +243,16 @@ impl Executor {
             .collect::<Result<_, _>>()?;
 
         let compiled = self.compiled.borrow();
-        let exe = compiled.get(name).expect("just compiled");
-        let start = Instant::now();
+        let Some(exe) = compiled.get(name) else {
+            return Err(ExecError::Xla(format!(
+                "artifact {name} vanished from the compile cache"
+            )));
+        };
         let result = exe.execute::<xla::Literal>(&literals)?;
         let tuple = result[0][0].to_literal_sync()?;
-        let wall = start.elapsed();
+        let wall_secs = exec_cost_secs(spec.flops_per_call);
+        self.clock.borrow_mut().advance(wall_secs);
+        let wall = Duration::from_secs_f64(wall_secs);
         drop(compiled);
 
         let parts = tuple.to_tuple()?;
@@ -245,6 +281,18 @@ mod tests {
     fn artifact_dir() -> Option<PathBuf> {
         let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn exec_cost_is_positive_deterministic_and_monotonic() {
+        // The dispatch floor keeps even zero-FLOP artifacts strictly
+        // positive, so `ExecResult::wall` never divides by zero.
+        assert!(exec_cost_secs(0) > 0.0);
+        assert_eq!(exec_cost_secs(1 << 20), exec_cost_secs(1 << 20));
+        assert!(exec_cost_secs(1 << 30) > exec_cost_secs(1 << 20));
+        // A 40-GFLOP artifact models about a second of execution.
+        let one_sec = exec_cost_secs(40_000_000_000);
+        assert!((one_sec - 1.0).abs() < 0.01, "got {one_sec}");
     }
 
     #[test]

@@ -56,6 +56,10 @@ pub enum GpuSupportError {
     /// host filesystem.
     #[error("host driver library missing: {0}")]
     MissingHostLibrary(String),
+    /// Grafting a host node into the container rootfs failed (path
+    /// conflict inside the image tree).
+    #[error("container rootfs graft failed: {0}")]
+    Rootfs(#[from] crate::vfs::VfsError),
 }
 
 /// What GPU support did to the container.
@@ -161,7 +165,7 @@ pub fn inject(
             .get(f)
             .cloned()
             .unwrap_or(VNode::Device { major: 195, minor: 0 });
-        rootfs.insert(f, node).expect("device file insert");
+        rootfs.insert(f, node)?;
         mounts.bind(f, f, false, "gpu support");
     }
 
@@ -176,16 +180,14 @@ pub fn inject(
             .cloned()
             .ok_or_else(|| GpuSupportError::MissingHostLibrary(host_path.clone()))?;
         let target = format!("{CONTAINER_GPU_LIB_DIR}/{versioned}");
-        rootfs.insert(&target, node).expect("lib insert");
+        rootfs.insert(&target, node)?;
         // plus the unversioned dev symlink CUDA apps dlopen
-        rootfs
-            .insert(
-                &format!("{CONTAINER_GPU_LIB_DIR}/{stem}"),
-                VNode::Symlink {
-                    target: target.clone(),
-                },
-            )
-            .expect("symlink insert");
+        rootfs.insert(
+            &format!("{CONTAINER_GPU_LIB_DIR}/{stem}"),
+            VNode::Symlink {
+                target: target.clone(),
+            },
+        )?;
         mounts.bind(&host_path, &target, true, "gpu support");
         libraries.push(versioned);
     }
@@ -199,7 +201,7 @@ pub fn inject(
             .cloned()
             .ok_or_else(|| GpuSupportError::MissingHostLibrary(host_path.clone()))?;
         let target = format!("{CONTAINER_GPU_BIN_DIR}/{bin}");
-        rootfs.insert(&target, node).expect("bin insert");
+        rootfs.insert(&target, node)?;
         mounts.bind(&host_path, &target, true, "gpu support");
         binaries.push(bin.to_string());
     }

@@ -43,6 +43,10 @@ pub enum MpiSupportError {
     /// A host MPI library/config path named by `udiRoot.conf` is absent.
     #[error("host MPI library missing on this system: {0}")]
     MissingHostLibrary(String),
+    /// Grafting a host node into the container rootfs failed (path
+    /// conflict inside the image tree).
+    #[error("container rootfs graft failed: {0}")]
+    Rootfs(#[from] crate::vfs::VfsError),
 }
 
 /// What the MPI swap did.
@@ -191,7 +195,7 @@ pub fn inject(
             .get(&host_path)
             .cloned()
             .ok_or_else(|| MpiSupportError::MissingHostLibrary(host_path.clone()))?;
-        rootfs.insert(container_path, node).expect("swap insert");
+        rootfs.insert(container_path, node)?;
         mounts.bind(&host_path, container_path, true, "mpi swap");
         swapped.push((container_path.clone(), host_path));
     }
@@ -203,7 +207,7 @@ pub fn inject(
             .get(dep)
             .cloned()
             .ok_or_else(|| MpiSupportError::MissingHostLibrary(dep.clone()))?;
-        rootfs.insert(dep, node).expect("dep insert");
+        rootfs.insert(dep, node)?;
         mounts.bind(dep, dep, true, "mpi swap");
         dependencies.push(dep.clone());
     }
@@ -215,7 +219,7 @@ pub fn inject(
             .get(cfg)
             .cloned()
             .ok_or_else(|| MpiSupportError::MissingHostLibrary(cfg.clone()))?;
-        rootfs.insert(cfg, node).expect("cfg insert");
+        rootfs.insert(cfg, node)?;
         mounts.bind(cfg, cfg, true, "mpi swap");
         config_files.push(cfg.clone());
     }

@@ -134,9 +134,17 @@ impl RunOptions {
     }
 
     /// Add a `--volume` mount (parsed and validated at run time).
+    ///
+    /// # Panics
+    ///
+    /// Panics if `spec` is not a valid `--volume` string; builder
+    /// callers pass literals, so a bad spec is a programming error.
     pub fn with_volume(mut self, spec: &str) -> RunOptions {
-        self.volumes
-            .push(VolumeSpec::parse(spec).expect("volume spec"));
+        let parsed = match VolumeSpec::parse(spec) {
+            Ok(v) => v,
+            Err(e) => panic!("with_volume: bad --volume spec {spec:?}: {e}"),
+        };
+        self.volumes.push(parsed);
         self
     }
 

@@ -284,7 +284,8 @@ impl<E> SimKernel<E> {
         let cutoff = first + eps;
         let mut batch = Vec::new();
         while self.peek_time().is_some_and(|t| t <= cutoff) {
-            batch.push(self.pop().expect("peeked event exists"));
+            let Some(next) = self.pop() else { break };
+            batch.push(next);
         }
         batch
     }

@@ -78,6 +78,7 @@ use std::sync::Mutex;
 use crate::metrics::percentile_sorted;
 use crate::sim::SimTime;
 use crate::util::json::Json;
+use crate::util::sync::lock_unpoisoned;
 
 /// Cap on retained histogram samples: the first this many observations
 /// are kept for percentile snapshots (count/sum/min/max stay exact
@@ -339,9 +340,7 @@ impl Telemetry {
             dur_secs: draft.dur_secs,
             attrs: Vec::new(),
         };
-        self.inner
-            .lock()
-            .expect("telemetry lock poisoned")
+        lock_unpoisoned(&self.inner)
             .spans
             .push(record);
     }
@@ -352,7 +351,7 @@ impl Telemetry {
         if !self.enabled {
             return;
         }
-        let mut inner = self.inner.lock().expect("telemetry lock poisoned");
+        let mut inner = lock_unpoisoned(&self.inner);
         if let Some(span) = inner.spans.iter_mut().rev().find(|s| s.id == id)
         {
             span.attrs.push((key.to_string(), value.to_string()));
@@ -365,7 +364,7 @@ impl Telemetry {
         if !self.enabled {
             return;
         }
-        let mut inner = self.inner.lock().expect("telemetry lock poisoned");
+        let mut inner = lock_unpoisoned(&self.inner);
         *inner.counters.entry(name.to_string()).or_insert(0) += delta;
     }
 
@@ -375,7 +374,7 @@ impl Telemetry {
         if !self.enabled {
             return;
         }
-        let mut inner = self.inner.lock().expect("telemetry lock poisoned");
+        let mut inner = lock_unpoisoned(&self.inner);
         inner
             .histograms
             .entry(name.to_string())
@@ -385,9 +384,7 @@ impl Telemetry {
 
     /// Current value of counter `name` (0 if never touched).
     pub fn counter(&self, name: &str) -> u64 {
-        self.inner
-            .lock()
-            .expect("telemetry lock poisoned")
+        lock_unpoisoned(&self.inner)
             .counters
             .get(name)
             .copied()
@@ -396,9 +393,7 @@ impl Telemetry {
 
     /// Every counter, in name order.
     pub fn counters(&self) -> Vec<(String, u64)> {
-        self.inner
-            .lock()
-            .expect("telemetry lock poisoned")
+        lock_unpoisoned(&self.inner)
             .counters
             .iter()
             .map(|(k, v)| (k.clone(), *v))
@@ -407,9 +402,7 @@ impl Telemetry {
 
     /// Snapshot of histogram `name`, if it was ever observed.
     pub fn histogram(&self, name: &str) -> Option<HistogramSnapshot> {
-        self.inner
-            .lock()
-            .expect("telemetry lock poisoned")
+        lock_unpoisoned(&self.inner)
             .histograms
             .get(name)
             .map(Histogram::snapshot)
@@ -418,28 +411,21 @@ impl Telemetry {
     /// Every recorded span, sorted by `(start, id)` — a deterministic
     /// view regardless of the order layers recorded in.
     pub fn spans(&self) -> Vec<SpanRecord> {
-        let mut spans = self
-            .inner
-            .lock()
-            .expect("telemetry lock poisoned")
-            .spans
-            .clone();
+        let mut spans = lock_unpoisoned(&self.inner).spans.clone();
         spans.sort_by(|a, b| a.start.cmp(&b.start).then(a.id.cmp(&b.id)));
         spans
     }
 
     /// Number of spans recorded so far.
     pub fn span_count(&self) -> usize {
-        self.inner.lock().expect("telemetry lock poisoned").spans.len()
+        lock_unpoisoned(&self.inner).spans.len()
     }
 
     /// Latest end time (`start + dur`) over the recorded spans whose
     /// `parent` is `parent` — how a caller closes a parent span around
     /// children emitted by deeper layers. `None` when no child exists.
     pub fn child_span_end(&self, parent: u64) -> Option<f64> {
-        self.inner
-            .lock()
-            .expect("telemetry lock poisoned")
+        lock_unpoisoned(&self.inner)
             .spans
             .iter()
             .filter(|s| s.parent == Some(parent))
@@ -526,7 +512,7 @@ impl Telemetry {
     /// `BENCH_*` artifacts embed under their `"telemetry"` key:
     /// `{"spans": N, "counters": {...}, "histograms": {name: {...}}}`.
     pub fn snapshot_json(&self) -> Json {
-        let inner = self.inner.lock().expect("telemetry lock poisoned");
+        let inner = lock_unpoisoned(&self.inner);
         let counters = Json::Obj(
             inner
                 .counters

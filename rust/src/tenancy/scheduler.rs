@@ -592,8 +592,13 @@ fn earliest_start(
             .map(|r| r.width)
             .sum()
     };
+    // The last candidate is the latest reservation end: past it the
+    // timeline is empty, so that instant always fits and the find below
+    // cannot come back empty.
+    let empty_tail = candidates.last().copied().unwrap_or(t);
     candidates
-        .into_iter()
+        .iter()
+        .copied()
         .find(|&tau| {
             let window_end = tau + est;
             let mut points: Vec<f64> = vec![tau];
@@ -604,7 +609,7 @@ fn earliest_start(
             );
             points.into_iter().all(|p| used_at(p) + width <= capacity)
         })
-        .expect("the empty tail of the timeline always fits")
+        .unwrap_or(empty_tail)
 }
 
 /// A record for a job that never launched.

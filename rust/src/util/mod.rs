@@ -4,6 +4,7 @@
 pub mod cli;
 pub mod json;
 pub mod prng;
+pub mod sync;
 
 /// Format a byte count the way the tables/logs print sizes (powers of two).
 pub fn human_bytes(n: u64) -> String {

@@ -1,0 +1,52 @@
+//! Poison-tolerant locking (the S26 `lock-poison` convention).
+//!
+//! Every shared structure in this crate (telemetry registries, the
+//! scheduler's template cache, distribution caches) is read-mostly and
+//! internally consistent at every instruction boundary: writers mutate a
+//! single field or perform an insert, never a multi-step transaction. A
+//! panic while such a guard is held therefore cannot leave the data in a
+//! half-written state — which means propagating the poison flag to every
+//! *later* reader (what `.lock().unwrap()` does) converts one failed job
+//! into a site-wide cascade for no integrity benefit.
+//!
+//! `lock_unpoisoned` encodes that policy in one place: take the guard,
+//! recovering it from the poison wrapper if a previous holder panicked.
+//! shifter-lint forbids `.lock().unwrap()`/`.expect()` in library code and
+//! points here.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Lock `mutex`, recovering the guard if the mutex was poisoned.
+///
+/// See the module docs for why poison recovery is sound in this crate.
+/// Prefer this over `.lock().unwrap()` everywhere outside tests.
+pub fn lock_unpoisoned<T>(mutex: &Mutex<T>) -> MutexGuard<'_, T> {
+    mutex.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn locks_a_healthy_mutex() {
+        let m = Mutex::new(7u32);
+        assert_eq!(*lock_unpoisoned(&m), 7);
+    }
+
+    #[test]
+    fn recovers_a_poisoned_mutex() {
+        let m = Mutex::new(vec![1u32]);
+        // Poison the mutex: panic while holding the guard.
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = m.lock().expect("first lock is healthy");
+            panic!("poison the guard");
+        }));
+        assert!(caught.is_err());
+        assert!(m.is_poisoned());
+        let mut guard = lock_unpoisoned(&m);
+        guard.push(2);
+        assert_eq!(*guard, vec![1, 2]);
+    }
+}

@@ -62,10 +62,12 @@ impl ShareLedger {
 
     /// Charge `node_secs` of cluster time to `tenant`.
     pub fn charge(&mut self, tenant: &str, node_secs: f64) {
-        self.ensure(tenant);
         self.entries
-            .get_mut(tenant)
-            .expect("ensured above")
+            .entry(tenant.to_string())
+            .or_insert(ShareEntry {
+                shares: 1.0,
+                usage_node_secs: 0.0,
+            })
             .usage_node_secs += node_secs;
     }
 

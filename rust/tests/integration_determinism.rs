@@ -65,6 +65,32 @@ fn launch_report_and_trace_are_byte_identical_across_runs() {
 }
 
 #[test]
+fn repeated_launches_on_one_site_replay_byte_identically() {
+    // regression for the ordered-map migration in the launch scheduler
+    // and executor: slot templates live in a BTreeMap keyed by
+    // (image, config) and per-slot results re-assemble in node order,
+    // so a cold launch AND a warm relaunch (coalesced pull, reused
+    // fabric state) must replay byte-for-byte across fresh sites
+    let once = || {
+        let mut site = Site::builder()
+            .hetero_daint_linux(16)
+            .telemetry(true)
+            .build()
+            .unwrap();
+        let spec =
+            JobSpec::new("osu-benchmarks:mpich-3.1.4", &["./osu_bw"], 16)
+                .with_mpi();
+        let cold = site.launch(&spec).unwrap().to_json().to_string();
+        let warm = site.launch(&spec).unwrap().to_json().to_string();
+        (cold, warm)
+    };
+    let (cold_a, warm_a) = once();
+    let (cold_b, warm_b) = once();
+    assert_eq!(cold_a, cold_b, "cold launch must replay");
+    assert_eq!(warm_a, warm_b, "warm relaunch must replay");
+}
+
+#[test]
 fn tenancy_report_and_trace_are_byte_identical_across_runs() {
     let (report_a, trace_a) = storm_once();
     let (report_b, trace_b) = storm_once();

@@ -30,8 +30,15 @@ A baseline with ``"provisional": true`` (written by
 Rust toolchain) carries metric *keys* but no magnitudes: the gate
 enforces that every expected metric is present, finite, and
 non-negative — a renamed or vanished metric still fails — and prints a
-promotion notice until a full-magnitude baseline is recorded with
-``--update``.
+promotion notice until a full-magnitude baseline is recorded.
+
+``--promote-provisional`` closes that bootstrap from CI itself: when
+the checked-in baseline is provisional and the fresh artifact passes
+the schema check at the CI knobs, the fresh artifact replaces the
+baseline in place. Once a file is promoted the provisional path no
+longer applies to it — every later run takes the full magnitude
+comparison. (CI uploads the promoted directory as an artifact; a
+maintainer commits it, exactly like a local ``--update``.)
 """
 
 import argparse
@@ -195,6 +202,10 @@ def main():
                     help="relative growth allowed before failing (0.15 = 15%%)")
     ap.add_argument("--update", action="store_true",
                     help="record the current artifacts as the new baselines")
+    ap.add_argument("--promote-provisional", action="store_true",
+                    help="replace a provisional baseline with the fresh "
+                         "artifact when it passes the schema check — the "
+                         "file leaves provisional handling for good")
     args = ap.parse_args()
 
     failures = []
@@ -219,7 +230,13 @@ def main():
         with open(baseline) as f:
             base = json.load(f)
         if base.get("provisional"):
-            failures.extend(compare_provisional(name, fresh, base))
+            schema_failures = compare_provisional(name, fresh, base)
+            failures.extend(schema_failures)
+            if args.promote_provisional and not schema_failures \
+                    and fresh.get("max_nodes") == base.get("max_nodes"):
+                shutil.copyfile(artifact, baseline)
+                print(f"  {name}: provisional baseline PROMOTED to full "
+                      f"magnitudes -> {baseline} (commit it)")
         else:
             failures.extend(compare(name, fresh, base, args.tolerance))
 

@@ -15,16 +15,24 @@ Two modes:
   CI-knob runs must produce (derived from the bench config grids), with
   ``"provisional": true`` and no magnitudes. The gate then enforces
   metric presence/positivity — a renamed or vanished metric fails CI —
-  but cannot flag magnitude drift until someone promotes the baseline
-  by re-running this script (or ``bench_regression.py --update``) with
-  a real toolchain.
+  but cannot flag magnitude drift until someone promotes the baseline.
+
+Promotion paths (close the bootstrap for good):
+
+* ``--update``: run the benches locally with the CI knobs and record
+  the magnitudes. Hard error when cargo is missing — a promotion must
+  never silently degrade back to a schema baseline.
+* ``--from-artifacts A.json [B.json ...]``: promote BENCH_* artifacts
+  that already exist (e.g. downloaded from the CI ``bench-smoke``
+  artifact), after validating that they carry the CI knobs and every
+  metric key the provisional schema expects. Needs no toolchain.
 
 Either way the gate leaves bootstrap mode: a baseline file exists and
 is compared on every PR.
 
 Usage:
-    python3 scripts/derive_baselines.py [--provisional] \
-        [--baseline-dir rust/bench_baselines]
+    python3 scripts/derive_baselines.py [--provisional | --update |
+        --from-artifacts ARTIFACT...] [--baseline-dir rust/bench_baselines]
 """
 
 import argparse
@@ -168,16 +176,85 @@ def run_benches_and_update(baseline_dir):
     )
 
 
+def promote_from_artifacts(baseline_dir, artifacts):
+    """Promote existing BENCH_* artifacts to full-magnitude baselines.
+
+    Validates each artifact against the provisional schema (CI knobs +
+    every expected metric key present, finite, non-negative) before
+    copying it over the baseline, so a truncated or wrong-knob artifact
+    can never replace the schema gate.
+    """
+    schema = {name: (bench, cap, expected(cap))
+              for name, bench, cap, expected in PROVISIONAL}
+    errors = []
+    for artifact in artifacts:
+        name = os.path.basename(artifact)
+        if name not in schema:
+            errors.append(f"{name}: not a promotable baseline "
+                          f"(expected one of {sorted(schema)})")
+            continue
+        bench, cap, expected = schema[name]
+        with open(artifact) as f:
+            doc = json.load(f)
+        if doc.get("bench") != bench:
+            errors.append(f"{name}: bench '{doc.get('bench')}' != '{bench}'")
+            continue
+        if doc.get("max_nodes") != cap:
+            errors.append(f"{name}: max_nodes {doc.get('max_nodes')} != "
+                          f"CI knob {cap} — rerun with the CI env knobs")
+            continue
+        sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+        import bench_regression
+        metrics = bench_regression.EXTRACTORS[bench](doc)
+        missing = [k for k in expected if k not in metrics]
+        bad = [k for k, v in metrics.items()
+               if not isinstance(v, (int, float)) or v != v or v < 0.0]
+        if missing or bad:
+            for k in missing:
+                errors.append(f"{name}: expected metric {k} missing")
+            for k in bad:
+                errors.append(f"{name}: metric {k} has invalid value")
+            continue
+        os.makedirs(baseline_dir, exist_ok=True)
+        shutil.copyfile(artifact, os.path.join(baseline_dir, name))
+        print(f"  {name}: promoted to full-magnitude baseline "
+              f"({len(metrics)} metrics) -> {baseline_dir}/{name}")
+    if errors:
+        print("promotion FAILED:")
+        for e in errors:
+            print(f"  {e}")
+        sys.exit(1)
+
+
 def main():
     ap = argparse.ArgumentParser(
         description="derive first baselines for the bench regression gate"
     )
     ap.add_argument("--baseline-dir", default="rust/bench_baselines")
-    ap.add_argument("--provisional", action="store_true",
-                    help="write schema-only baselines without running "
-                         "the benches (automatic when cargo is missing)")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--provisional", action="store_true",
+                      help="write schema-only baselines without running "
+                           "the benches (automatic when cargo is missing)")
+    mode.add_argument("--update", action="store_true",
+                      help="run the benches with the CI knobs and record "
+                           "full-magnitude baselines (requires cargo)")
+    mode.add_argument("--from-artifacts", nargs="+", metavar="ARTIFACT",
+                      help="promote existing BENCH_* artifacts (e.g. the "
+                           "CI bench-smoke upload) to full-magnitude "
+                           "baselines; no toolchain needed")
     args = ap.parse_args()
 
+    if args.from_artifacts:
+        promote_from_artifacts(args.baseline_dir, args.from_artifacts)
+        return
+    if args.update:
+        if shutil.which("cargo") is None:
+            print("error: --update needs a Rust toolchain (cargo not "
+                  "found); either run on a machine with cargo, or promote "
+                  "CI artifacts with --from-artifacts", file=sys.stderr)
+            sys.exit(2)
+        run_benches_and_update(args.baseline_dir)
+        return
     if args.provisional or shutil.which("cargo") is None:
         if not args.provisional:
             print("cargo not found — falling back to provisional "

@@ -1,0 +1,262 @@
+//! The suppression baseline: committed debt, ratcheted down and never up.
+//!
+//! `baseline.toml` holds `[[allow]]` entries keyed by `(rule, file)` with a
+//! `count` of tolerated violations. Counts (not line numbers) make the
+//! baseline robust to unrelated edits shifting code around. Semantics:
+//!
+//! * A run suppresses the first `count` diagnostics of `(rule, file)` in
+//!   source order; anything beyond the count is reported live.
+//! * `--update-baseline` only ever *lowers* counts (to the current live
+//!   total) and drops entries that reach zero. It never adds entries or
+//!   raises counts — new debt must be fixed or explicitly `lint:allow`ed.
+//! * `--init-baseline` bootstraps the file from the current tree; it is a
+//!   one-time escape hatch, not part of the normal workflow.
+//!
+//! The file format is a small TOML subset (tables-of-tables with string and
+//! integer values) so the dependency-free tool can read and write it.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use crate::diag::{Diagnostic, Suppressed};
+
+/// Allowed-violation counts keyed by `(rule, file)`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Baseline {
+    pub entries: BTreeMap<(String, String), u32>,
+}
+
+fn parse_err(path: &Path, line_no: usize, msg: &str) -> io::Error {
+    io::Error::new(
+        io::ErrorKind::InvalidData,
+        format!("{}:{}: {}", path.display(), line_no, msg),
+    )
+}
+
+impl Baseline {
+    /// Load a baseline; a missing file is an empty baseline.
+    pub fn load(path: &Path) -> io::Result<Baseline> {
+        let text = match fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(Baseline::default()),
+            Err(e) => return Err(e),
+        };
+        let mut entries = BTreeMap::new();
+        let mut rule: Option<String> = None;
+        let mut file: Option<String> = None;
+        let mut count: Option<u32> = None;
+        let mut in_entry = false;
+
+        let mut flush = |rule: &mut Option<String>,
+                         file: &mut Option<String>,
+                         count: &mut Option<u32>,
+                         entries: &mut BTreeMap<(String, String), u32>,
+                         line_no: usize|
+         -> io::Result<()> {
+            match (rule.take(), file.take(), count.take()) {
+                (Some(r), Some(f), Some(c)) => {
+                    entries.insert((r, f), c);
+                    Ok(())
+                }
+                (None, None, None) => Ok(()),
+                _ => Err(parse_err(
+                    path,
+                    line_no,
+                    "incomplete [[allow]] entry: need rule, file and count",
+                )),
+            }
+        };
+
+        for (idx, raw) in text.lines().enumerate() {
+            let line_no = idx + 1;
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if line == "[[allow]]" {
+                flush(&mut rule, &mut file, &mut count, &mut entries, line_no)?;
+                in_entry = true;
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return Err(parse_err(path, line_no, "expected `key = value`"));
+            };
+            if !in_entry {
+                return Err(parse_err(path, line_no, "key outside [[allow]] entry"));
+            }
+            let key = key.trim();
+            let value = value.trim();
+            match key {
+                "rule" | "file" => {
+                    let unquoted = value
+                        .strip_prefix('"')
+                        .and_then(|v| v.strip_suffix('"'))
+                        .ok_or_else(|| parse_err(path, line_no, "expected a quoted string"))?;
+                    if key == "rule" {
+                        rule = Some(unquoted.to_string());
+                    } else {
+                        file = Some(unquoted.to_string());
+                    }
+                }
+                "count" => {
+                    let parsed: u32 = value
+                        .parse()
+                        .map_err(|_| parse_err(path, line_no, "count must be an integer"))?;
+                    count = Some(parsed);
+                }
+                other => {
+                    return Err(parse_err(path, line_no, &format!("unknown key `{other}`")));
+                }
+            }
+        }
+        flush(&mut rule, &mut file, &mut count, &mut entries, text.lines().count())?;
+        Ok(Baseline { entries })
+    }
+
+    /// Serialize deterministically (sorted by rule, then file).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str("# shifter-lint suppression baseline (DESIGN.md S26).\n");
+        s.push_str("# Counts only ever ratchet DOWN: `--update-baseline` lowers them as\n");
+        s.push_str("# debt is paid off and never adds entries. New violations are fixed\n");
+        s.push_str("# or carry an inline `lint:allow(rule): reason` directive.\n");
+        for ((rule, file), count) in &self.entries {
+            s.push('\n');
+            s.push_str("[[allow]]\n");
+            s.push_str(&format!("rule = \"{rule}\"\n"));
+            s.push_str(&format!("file = \"{file}\"\n"));
+            s.push_str(&format!("count = {count}\n"));
+        }
+        s
+    }
+
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        fs::write(path, self.render())
+    }
+
+    /// Mark the first `count` diagnostics of each `(rule, file)` group as
+    /// baseline-suppressed. `diags` must already be in canonical order so
+    /// "first" is stable. Inline-suppressed diagnostics don't consume
+    /// baseline budget.
+    pub fn apply(&self, diags: &mut [Diagnostic]) {
+        let mut used: BTreeMap<(String, String), u32> = BTreeMap::new();
+        for d in diags.iter_mut() {
+            if d.suppressed != Suppressed::No {
+                continue;
+            }
+            let key = (d.rule.to_string(), d.file.clone());
+            let budget = self.entries.get(&key).copied().unwrap_or(0);
+            let spent = used.entry(key).or_insert(0);
+            if *spent < budget {
+                *spent += 1;
+                d.suppressed = Suppressed::Baseline;
+            }
+        }
+    }
+
+    /// Live violation counts per `(rule, file)` (inline-suppressed sites
+    /// excluded — they are already individually justified).
+    pub fn current_counts(diags: &[Diagnostic]) -> BTreeMap<(String, String), u32> {
+        let mut counts: BTreeMap<(String, String), u32> = BTreeMap::new();
+        for d in diags {
+            if d.suppressed == Suppressed::Inline {
+                continue;
+            }
+            *counts
+                .entry((d.rule.to_string(), d.file.clone()))
+                .or_insert(0) += 1;
+        }
+        counts
+    }
+
+    /// Ratchet: lower every entry to `min(existing, current)`, dropping
+    /// entries that hit zero. Returns the number of entries changed.
+    pub fn ratchet(&mut self, current: &BTreeMap<(String, String), u32>) -> usize {
+        let mut changed = 0usize;
+        let mut next = BTreeMap::new();
+        for (key, &allowed) in &self.entries {
+            let now = current.get(key).copied().unwrap_or(0);
+            let new = allowed.min(now);
+            if new != allowed {
+                changed += 1;
+            }
+            if new > 0 {
+                next.insert(key.clone(), new);
+            }
+        }
+        self.entries = next;
+        changed
+    }
+
+    /// Bootstrap from the current tree (`--init-baseline`).
+    pub fn init(current: &BTreeMap<(String, String), u32>) -> Baseline {
+        Baseline {
+            entries: current
+                .iter()
+                .filter(|(_, &c)| c > 0)
+                .map(|(k, &c)| (k.clone(), c))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(rule: &str, file: &str, count: u32) -> ((String, String), u32) {
+        ((rule.to_string(), file.to_string()), count)
+    }
+
+    #[test]
+    fn render_parse_round_trip() {
+        let b = Baseline {
+            entries: [entry("unwrap", "launch/mod.rs", 3), entry("thread", "sim/mod.rs", 1)]
+                .into_iter()
+                .collect(),
+        };
+        let dir = std::env::temp_dir().join(format!("shifter-lint-bl-{}", std::process::id()));
+        fs::create_dir_all(&dir).expect("temp dir");
+        let path = dir.join("baseline.toml");
+        b.save(&path).expect("save");
+        let loaded = Baseline::load(&path).expect("load");
+        assert_eq!(b, loaded);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_file_is_empty() {
+        let b = Baseline::load(Path::new("/nonexistent/shifter-lint/baseline.toml"))
+            .expect("missing file is not an error");
+        assert!(b.entries.is_empty());
+    }
+
+    #[test]
+    fn ratchet_only_lowers() {
+        let mut b = Baseline {
+            entries: [entry("unwrap", "a.rs", 5), entry("unwrap", "b.rs", 2)]
+                .into_iter()
+                .collect(),
+        };
+        // a.rs improved to 1 live; b.rs regressed to 7 live.
+        let current: BTreeMap<_, _> =
+            [entry("unwrap", "a.rs", 1), entry("unwrap", "b.rs", 7)].into_iter().collect();
+        let changed = b.ratchet(&current);
+        assert_eq!(changed, 1);
+        assert_eq!(b.entries.get(&("unwrap".into(), "a.rs".into())), Some(&1));
+        // Regression does NOT raise the allowance.
+        assert_eq!(b.entries.get(&("unwrap".into(), "b.rs".into())), Some(&2));
+    }
+
+    #[test]
+    fn ratchet_drops_zeroed_entries() {
+        let mut b = Baseline {
+            entries: [entry("unwrap", "a.rs", 5)].into_iter().collect(),
+        };
+        let current = BTreeMap::new();
+        b.ratchet(&current);
+        assert!(b.entries.is_empty());
+    }
+}

@@ -1,0 +1,180 @@
+//! Diagnostic type and renderers (rustc-style human output + JSON).
+//!
+//! JSON is emitted with a hand-rolled writer because the tool crate is
+//! dependency-free (see Cargo.toml); output key order and diagnostic order
+//! are deterministic so the CI artifact diffs cleanly between runs.
+
+/// How (whether) a diagnostic has been suppressed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Suppressed {
+    /// Live diagnostic: fails the lint run.
+    No,
+    /// Excused by an inline `lint:allow(...)` directive.
+    Inline,
+    /// Absorbed by the committed baseline (`baseline.toml`).
+    Baseline,
+}
+
+/// One lint finding, anchored to a file/line/col in the scanned tree.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Rule identifier, e.g. `wall-clock`.
+    pub rule: &'static str,
+    /// Path relative to the lint root, `/`-separated.
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    /// What was matched, e.g. `Instant::now`.
+    pub message: String,
+    /// The offending source line, for the rustc-style snippet.
+    pub snippet: String,
+    /// Rule-level remediation hint.
+    pub help: &'static str,
+    pub suppressed: Suppressed,
+}
+
+impl Diagnostic {
+    pub fn is_active(&self) -> bool {
+        self.suppressed == Suppressed::No
+    }
+}
+
+/// Sort diagnostics into the canonical (file, line, col, rule) order.
+pub fn sort_canonical(diags: &mut [Diagnostic]) {
+    diags.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.col, a.rule).cmp(&(b.file.as_str(), b.line, b.col, b.rule))
+    });
+}
+
+/// Render one diagnostic in rustc style:
+///
+/// ```text
+/// warning[wall-clock]: host wall-clock read: Instant::now
+///   --> runtime/executor.rs:216:21
+///    |
+/// 216|         let start = Instant::now();
+///    |
+///    = help: route timing through crate::sim::SimClock (DESIGN.md S24)
+/// ```
+pub fn render_human(d: &Diagnostic) -> String {
+    let badge = match d.suppressed {
+        Suppressed::No => "error",
+        Suppressed::Inline => "allowed(inline)",
+        Suppressed::Baseline => "allowed(baseline)",
+    };
+    let line_no = d.line.to_string();
+    let gutter = " ".repeat(line_no.len());
+    let mut s = String::new();
+    s.push_str(&format!("{badge}[{}]: {}\n", d.rule, d.message));
+    s.push_str(&format!("{gutter}--> {}:{}:{}\n", d.file, d.line, d.col));
+    s.push_str(&format!("{gutter} |\n"));
+    s.push_str(&format!("{line_no}| {}\n", d.snippet.trim_end()));
+    s.push_str(&format!("{gutter} |\n"));
+    s.push_str(&format!("{gutter} = help: {}\n", d.help));
+    s
+}
+
+/// Escape a string for embedding in a JSON document.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render the full diagnostic set as a deterministic JSON document.
+pub fn render_json(root: &str, rules: &[&str], diags: &[Diagnostic]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"version\": 1,\n");
+    s.push_str(&format!("  \"root\": \"{}\",\n", json_escape(root)));
+    let rule_list: Vec<String> = rules.iter().map(|r| format!("\"{}\"", json_escape(r))).collect();
+    s.push_str(&format!("  \"rules\": [{}],\n", rule_list.join(", ")));
+    s.push_str("  \"diagnostics\": [");
+    for (i, d) in diags.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let suppressed = match d.suppressed {
+            Suppressed::No => "null".to_string(),
+            Suppressed::Inline => "\"inline\"".to_string(),
+            Suppressed::Baseline => "\"baseline\"".to_string(),
+        };
+        s.push_str(&format!(
+            "\n    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"col\": {}, \
+             \"message\": \"{}\", \"snippet\": \"{}\", \"help\": \"{}\", \"suppressed\": {}}}",
+            json_escape(d.rule),
+            json_escape(&d.file),
+            d.line,
+            d.col,
+            json_escape(&d.message),
+            json_escape(d.snippet.trim_end()),
+            json_escape(d.help),
+            suppressed
+        ));
+    }
+    if !diags.is_empty() {
+        s.push_str("\n  ");
+    }
+    s.push_str("],\n");
+    let active = diags.iter().filter(|d| d.is_active()).count();
+    s.push_str(&format!(
+        "  \"summary\": {{\"total\": {}, \"active\": {}, \"suppressed\": {}}}\n",
+        diags.len(),
+        active,
+        diags.len() - active
+    ));
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Diagnostic {
+        Diagnostic {
+            rule: "wall-clock",
+            file: "runtime/executor.rs".to_string(),
+            line: 216,
+            col: 21,
+            message: "host wall-clock read: Instant::now".to_string(),
+            snippet: "        let start = Instant::now();".to_string(),
+            help: "route timing through crate::sim::SimClock (DESIGN.md S24)",
+            suppressed: Suppressed::No,
+        }
+    }
+
+    #[test]
+    fn human_render_has_location_and_help() {
+        let out = render_human(&sample());
+        assert!(out.contains("error[wall-clock]"));
+        assert!(out.contains("runtime/executor.rs:216:21"));
+        assert!(out.contains("= help:"));
+    }
+
+    #[test]
+    fn json_escapes_and_counts() {
+        let mut d = sample();
+        d.message = "quote \" and backslash \\".to_string();
+        let out = render_json("rust/src", &["wall-clock"], &[d]);
+        assert!(out.contains("quote \\\" and backslash \\\\"));
+        assert!(out.contains("\"active\": 1"));
+    }
+
+    #[test]
+    fn json_empty_set_is_valid() {
+        let out = render_json("rust/src", &["unwrap"], &[]);
+        assert!(out.contains("\"diagnostics\": []"));
+        assert!(out.contains("\"total\": 0"));
+    }
+}

@@ -1,0 +1,437 @@
+//! Minimal Rust token scanner for shifter-lint.
+//!
+//! This is deliberately not a full parser: the lint rules (DESIGN.md S26)
+//! only need a comment/string-free token stream with positions, plus the
+//! inline `lint:allow(...)` directives found in comments. The scanner
+//! handles the lexical constructs that would otherwise produce false
+//! positives — line and nested block comments, regular/raw/byte string
+//! literals, char literals vs. lifetimes, and raw identifiers (`r#type`).
+//!
+//! Kept in lockstep with the rule engine in [`crate::rules`]; any change
+//! here needs matching fixtures under `tests/fixtures/`.
+
+/// Classification of a scanned token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifier or keyword (including raw identifiers, prefix stripped).
+    Ident,
+    /// Numeric literal (integers, floats, suffixed literals).
+    Number,
+    /// Any single punctuation character.
+    Punct,
+}
+
+/// One scanned token with its 1-based source position.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// An inline suppression directive: `// lint:allow(rule-a, rule-b): why`.
+///
+/// Suppresses matching diagnostics on the directive's own line and on the
+/// line immediately following it (so a directive can sit on its own line
+/// above the code it excuses).
+#[derive(Debug, Clone)]
+pub struct InlineAllow {
+    /// Line the directive starts on.
+    pub line: u32,
+    /// Rule names listed inside the parentheses (`all` matches any rule).
+    pub rules: Vec<String>,
+}
+
+/// Output of [`lex`]: the token stream plus inline allow directives.
+#[derive(Debug, Default)]
+pub struct LexOutput {
+    pub tokens: Vec<Token>,
+    pub allows: Vec<InlineAllow>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+struct Cursor {
+    chars: Vec<char>,
+    i: usize,
+    line: u32,
+    col: u32,
+}
+
+impl Cursor {
+    fn new(src: &str) -> Cursor {
+        Cursor {
+            chars: src.chars().collect(),
+            i: 0,
+            line: 1,
+            col: 1,
+        }
+    }
+
+    fn eof(&self) -> bool {
+        self.i >= self.chars.len()
+    }
+
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.i + ahead).copied()
+    }
+
+    fn bump(&mut self) {
+        if let Some(&c) = self.chars.get(self.i) {
+            if c == '\n' {
+                self.line += 1;
+                self.col = 1;
+            } else {
+                self.col += 1;
+            }
+            self.i += 1;
+        }
+    }
+
+    fn bump_n(&mut self, n: usize) {
+        for _ in 0..n {
+            self.bump();
+        }
+    }
+
+    /// Collect chars from the current position while `pred` holds.
+    fn take_while(&mut self, pred: fn(char) -> bool) -> String {
+        let mut s = String::new();
+        while let Some(c) = self.peek(0) {
+            if !pred(c) {
+                break;
+            }
+            s.push(c);
+            self.bump();
+        }
+        s
+    }
+}
+
+/// Extract `lint:allow(rule, ...)` directives from a comment's text.
+fn parse_allow(comment: &str, line: u32, out: &mut Vec<InlineAllow>) {
+    let Some(pos) = comment.find("lint:allow(") else {
+        return;
+    };
+    let rest = &comment[pos + "lint:allow(".len()..];
+    let Some(close) = rest.find(')') else {
+        return;
+    };
+    let rules: Vec<String> = rest[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    if !rules.is_empty() {
+        out.push(InlineAllow { line, rules });
+    }
+}
+
+/// Scan `src` into tokens, skipping trivia that could alias rule patterns.
+pub fn lex(src: &str) -> LexOutput {
+    let mut cur = Cursor::new(src);
+    let mut out = LexOutput::default();
+
+    while !cur.eof() {
+        let c = match cur.peek(0) {
+            Some(c) => c,
+            None => break,
+        };
+
+        if c == ' ' || c == '\t' || c == '\r' || c == '\n' {
+            cur.bump();
+            continue;
+        }
+
+        // Line comment (also covers `///` and `//!` doc comments).
+        if c == '/' && cur.peek(1) == Some('/') {
+            let start_line = cur.line;
+            let mut text = String::new();
+            while let Some(ch) = cur.peek(0) {
+                if ch == '\n' {
+                    break;
+                }
+                text.push(ch);
+                cur.bump();
+            }
+            parse_allow(&text, start_line, &mut out.allows);
+            continue;
+        }
+
+        // Block comment, possibly nested.
+        if c == '/' && cur.peek(1) == Some('*') {
+            let start_line = cur.line;
+            let mut text = String::new();
+            let mut depth = 0usize;
+            while !cur.eof() {
+                if cur.peek(0) == Some('/') && cur.peek(1) == Some('*') {
+                    depth += 1;
+                    text.push_str("/*");
+                    cur.bump_n(2);
+                } else if cur.peek(0) == Some('*') && cur.peek(1) == Some('/') {
+                    depth = depth.saturating_sub(1);
+                    text.push_str("*/");
+                    cur.bump_n(2);
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    if let Some(ch) = cur.peek(0) {
+                        text.push(ch);
+                    }
+                    cur.bump();
+                }
+            }
+            parse_allow(&text, start_line, &mut out.allows);
+            continue;
+        }
+
+        // Raw strings r"..." / r#"..."#, byte-raw br"...", raw idents r#type.
+        if c == 'r' || c == 'b' {
+            // Offset of the char right after the r/br prefix, if this is one.
+            let after_prefix = if c == 'r' {
+                Some(1)
+            } else if cur.peek(1) == Some('r') {
+                Some(2)
+            } else {
+                None
+            };
+            if let Some(off) = after_prefix {
+                let next = cur.peek(off);
+                if next == Some('#') || next == Some('"') {
+                    let mut hashes = 0usize;
+                    while cur.peek(off + hashes) == Some('#') {
+                        hashes += 1;
+                    }
+                    if cur.peek(off + hashes) == Some('"') {
+                        // Raw string: consume through closing quote + hashes.
+                        cur.bump_n(off + hashes + 1);
+                        'scan: while !cur.eof() {
+                            if cur.peek(0) == Some('"') {
+                                let mut k = 0usize;
+                                while k < hashes && cur.peek(1 + k) == Some('#') {
+                                    k += 1;
+                                }
+                                if k == hashes {
+                                    cur.bump_n(1 + hashes);
+                                    break 'scan;
+                                }
+                            }
+                            cur.bump();
+                        }
+                        continue;
+                    }
+                    if c == 'r' && hashes == 1 {
+                        if let Some(first) = cur.peek(off + 1) {
+                            if is_ident_start(first) {
+                                // Raw identifier r#type: token text is the
+                                // bare ident so rules see it normally.
+                                let line = cur.line;
+                                let col = cur.col;
+                                cur.bump_n(off + 1);
+                                let text = cur.take_while(is_ident_cont);
+                                out.tokens.push(Token {
+                                    kind: TokenKind::Ident,
+                                    text,
+                                    line,
+                                    col,
+                                });
+                                continue;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Byte string b"..."
+        if c == 'b' && cur.peek(1) == Some('"') {
+            cur.bump_n(2);
+            while let Some(ch) = cur.peek(0) {
+                if ch == '"' {
+                    break;
+                }
+                if ch == '\\' {
+                    cur.bump_n(2);
+                } else {
+                    cur.bump();
+                }
+            }
+            cur.bump();
+            continue;
+        }
+
+        // Byte char b'x'
+        if c == 'b' && cur.peek(1) == Some('\'') {
+            cur.bump_n(2);
+            if cur.peek(0) == Some('\\') {
+                cur.bump_n(2);
+            } else {
+                cur.bump();
+            }
+            cur.bump(); // closing quote
+            continue;
+        }
+
+        // Regular string literal.
+        if c == '"' {
+            cur.bump();
+            while let Some(ch) = cur.peek(0) {
+                if ch == '"' {
+                    break;
+                }
+                if ch == '\\' {
+                    cur.bump_n(2);
+                } else {
+                    cur.bump();
+                }
+            }
+            cur.bump();
+            continue;
+        }
+
+        // Char literal vs. lifetime.
+        if c == '\'' {
+            if cur.peek(1) == Some('\\') {
+                // Escaped char literal: skip to the closing quote.
+                cur.bump_n(2);
+                while let Some(ch) = cur.peek(0) {
+                    if ch == '\'' {
+                        break;
+                    }
+                    cur.bump();
+                }
+                cur.bump();
+                continue;
+            }
+            if cur.peek(2) == Some('\'') {
+                // Plain char literal 'x'.
+                cur.bump_n(3);
+                continue;
+            }
+            // Lifetime: quote + identifier.
+            cur.bump();
+            cur.take_while(is_ident_cont);
+            continue;
+        }
+
+        if is_ident_start(c) {
+            let line = cur.line;
+            let col = cur.col;
+            let text = cur.take_while(is_ident_cont);
+            out.tokens.push(Token {
+                kind: TokenKind::Ident,
+                text,
+                line,
+                col,
+            });
+            continue;
+        }
+
+        if c.is_ascii_digit() {
+            let line = cur.line;
+            let col = cur.col;
+            let mut text = cur.take_while(is_ident_cont);
+            // Fractional part: only when a digit follows the dot, so method
+            // calls on integers (`1.max(2)`) keep their `.` as punctuation.
+            if cur.peek(0) == Some('.') {
+                if let Some(d) = cur.peek(1) {
+                    if d.is_ascii_digit() {
+                        text.push('.');
+                        cur.bump();
+                        text.push_str(&cur.take_while(is_ident_cont));
+                    }
+                }
+            }
+            out.tokens.push(Token {
+                kind: TokenKind::Number,
+                text,
+                line,
+                col,
+            });
+            continue;
+        }
+
+        out.tokens.push(Token {
+            kind: TokenKind::Punct,
+            text: c.to_string(),
+            line: cur.line,
+            col: cur.col,
+        });
+        cur.bump();
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter(|t| t.kind == TokenKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn skips_comments_and_strings() {
+        let src = r##"
+            // HashMap in a comment
+            /* Instant::now() in /* a nested */ block */
+            let s = "HashMap::new()";
+            let r = r#"SystemTime::now()"#;
+            let x = real_ident;
+        "##;
+        let ids = idents(src);
+        assert!(ids.contains(&"real_ident".to_string()));
+        assert!(!ids.contains(&"HashMap".to_string()));
+        assert!(!ids.contains(&"Instant".to_string()));
+        assert!(!ids.contains(&"SystemTime".to_string()));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { let c = 'x'; x }";
+        let ids = idents(src);
+        assert!(ids.contains(&"str".to_string()));
+        // The lifetime name must not appear as an ident token.
+        assert_eq!(ids.iter().filter(|s| s.as_str() == "a").count(), 0);
+    }
+
+    #[test]
+    fn raw_identifiers_lex_as_bare_idents() {
+        let ids = idents("let r#type = 1; let broadcast = r2d2;");
+        assert!(ids.contains(&"type".to_string()));
+        assert!(ids.contains(&"broadcast".to_string()));
+        assert!(ids.contains(&"r2d2".to_string()));
+    }
+
+    #[test]
+    fn inline_allow_directives_are_collected() {
+        let src = "// lint:allow(unwrap, wall-clock): bench-only scaffolding\nlet x = 1;";
+        let out = lex(src);
+        assert_eq!(out.allows.len(), 1);
+        assert_eq!(out.allows[0].line, 1);
+        assert_eq!(out.allows[0].rules, vec!["unwrap", "wall-clock"]);
+    }
+
+    #[test]
+    fn positions_are_one_based() {
+        let out = lex("ab\n  cd");
+        assert_eq!(out.tokens[0].line, 1);
+        assert_eq!(out.tokens[0].col, 1);
+        assert_eq!(out.tokens[1].line, 2);
+        assert_eq!(out.tokens[1].col, 3);
+    }
+}

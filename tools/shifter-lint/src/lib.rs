@@ -1,0 +1,122 @@
+//! shifter-lint: domain-aware static analysis for the shifter-rs tree.
+//!
+//! Enforces the determinism and error-handling invariants of DESIGN.md S26
+//! over `rust/src/**` — the properties the compiler and clippy cannot
+//! express but the byte-exact report guarantee (S24/S25) depends on:
+//! no host wall-clock, no unordered iteration feeding reports, no
+//! NaN-unsafe float ordering, no bare `unwrap`/`expect` in library code,
+//! no host threads outside the sim, no lock-poison unwraps, and no
+//! ambient-entropy seeds.
+//!
+//! The crate is dependency-free (the CI environment is offline/vendored),
+//! so analysis runs on a hand-rolled token scanner rather than `syn`; see
+//! [`lexer`] for exactly what is and is not understood. Rules are
+//! patterns over that stream ([`rules`]), existing debt lives in a
+//! ratcheted baseline ([`baseline`]), and diagnostics render rustc-style
+//! or as JSON ([`diag`]).
+
+pub mod baseline;
+pub mod diag;
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use baseline::Baseline;
+use diag::Diagnostic;
+use rules::Config;
+
+/// Recursively collect `.rs` files under `dir`, sorted for determinism.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)?
+        .collect::<io::Result<Vec<_>>>()?
+        .into_iter()
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Path relative to `root`, `/`-separated regardless of host OS.
+fn rel_slash(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Lint every `.rs` file under `root`. Diagnostics come back in canonical
+/// (file, line, col, rule) order with inline suppressions already applied;
+/// the baseline has NOT been applied yet (see [`Baseline::apply`]).
+pub fn lint_root(root: &Path, cfg: &Config) -> io::Result<Vec<Diagnostic>> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    let mut diags = Vec::new();
+    for path in &files {
+        let src = fs::read_to_string(path)?;
+        let rel = rel_slash(root, path);
+        diags.extend(rules::check(&rel, &src, cfg));
+    }
+    diag::sort_canonical(&mut diags);
+    Ok(diags)
+}
+
+/// Outcome of a full lint run, post-baseline.
+#[derive(Debug)]
+pub struct RunResult {
+    pub diagnostics: Vec<Diagnostic>,
+    pub active: usize,
+    pub suppressed: usize,
+}
+
+/// Lint `root` and apply `baseline`. The run is clean iff `active == 0`.
+pub fn run(root: &Path, cfg: &Config, baseline: &Baseline) -> io::Result<RunResult> {
+    let mut diagnostics = lint_root(root, cfg)?;
+    baseline.apply(&mut diagnostics);
+    let active = diagnostics.iter().filter(|d| d.is_active()).count();
+    let suppressed = diagnostics.len() - active;
+    Ok(RunResult {
+        diagnostics,
+        active,
+        suppressed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance criterion of ISSUE 9: the swept tree lints clean
+    /// with the committed baseline. Running it as a unit test means
+    /// `cargo test` fails the moment a violation lands, even before the
+    /// dedicated CI `analysis` job runs.
+    #[test]
+    fn swept_tree_is_clean() {
+        let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let root = manifest.join("../../rust/src");
+        let bl = Baseline::load(&manifest.join("baseline.toml")).expect("baseline parses");
+        let result = run(&root, &Config::default_policy(), &bl).expect("lint runs");
+        let live: Vec<String> = result
+            .diagnostics
+            .iter()
+            .filter(|d| d.is_active())
+            .map(|d| format!("{}:{} {} ({})", d.file, d.line, d.rule, d.message))
+            .collect();
+        assert!(
+            live.is_empty(),
+            "shifter-lint found {} live violation(s) in rust/src:\n{}",
+            live.len(),
+            live.join("\n")
+        );
+    }
+}

@@ -1,0 +1,148 @@
+//! CLI for shifter-lint (DESIGN.md S26).
+//!
+//! ```text
+//! cargo run -p shifter-lint -- [--format human|json] [--root PATH]
+//!                              [--baseline PATH] [--update-baseline]
+//!                              [--init-baseline]
+//! ```
+//!
+//! Exit codes: 0 clean, 1 live diagnostics, 2 usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use shifter_lint::baseline::Baseline;
+use shifter_lint::diag;
+use shifter_lint::rules::{Config, RULE_IDS};
+
+const USAGE: &str = "\
+shifter-lint: determinism/error-handling invariants for the shifter-rs tree
+
+USAGE:
+    shifter-lint [OPTIONS]
+
+OPTIONS:
+    --format <human|json>   Diagnostic output format (default: human)
+    --root <PATH>           Tree to lint (default: <workspace>/rust/src)
+    --baseline <PATH>       Suppression baseline (default: <crate>/baseline.toml)
+    --update-baseline       Ratchet baseline counts DOWN to current debt
+    --init-baseline         Bootstrap the baseline from the current tree
+    -h, --help              Show this help
+";
+
+struct Opts {
+    format: String,
+    root: PathBuf,
+    baseline: PathBuf,
+    update_baseline: bool,
+    init_baseline: bool,
+}
+
+fn parse_opts() -> Result<Opts, String> {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut opts = Opts {
+        format: "human".to_string(),
+        root: manifest.join("../../rust/src"),
+        baseline: manifest.join("baseline.toml"),
+        update_baseline: false,
+        init_baseline: false,
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--format" => {
+                let v = args.next().ok_or("--format needs a value")?;
+                if v != "human" && v != "json" {
+                    return Err(format!("unknown format `{v}` (expected human|json)"));
+                }
+                opts.format = v;
+            }
+            "--root" => {
+                opts.root = PathBuf::from(args.next().ok_or("--root needs a value")?);
+            }
+            "--baseline" => {
+                opts.baseline = PathBuf::from(args.next().ok_or("--baseline needs a value")?);
+            }
+            "--update-baseline" => opts.update_baseline = true,
+            "--init-baseline" => opts.init_baseline = true,
+            "-h" | "--help" => {
+                print!("{USAGE}");
+                std::process::exit(0);
+            }
+            other => return Err(format!("unknown argument `{other}`")),
+        }
+    }
+    Ok(opts)
+}
+
+fn main() -> ExitCode {
+    let opts = match parse_opts() {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("shifter-lint: {e}\n\n{USAGE}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let cfg = Config::default_policy();
+    let mut baseline = match Baseline::load(&opts.baseline) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("shifter-lint: failed to load baseline: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let result = match shifter_lint::run(&opts.root, &cfg, &baseline) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("shifter-lint: failed to lint {}: {e}", opts.root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    if opts.init_baseline || opts.update_baseline {
+        let current = Baseline::current_counts(&result.diagnostics);
+        if opts.init_baseline {
+            baseline = Baseline::init(&current);
+            eprintln!(
+                "shifter-lint: baseline initialized with {} entr{}",
+                baseline.entries.len(),
+                if baseline.entries.len() == 1 { "y" } else { "ies" }
+            );
+        } else {
+            let changed = baseline.ratchet(&current);
+            eprintln!(
+                "shifter-lint: baseline ratcheted, {} entr{} lowered or dropped",
+                changed,
+                if changed == 1 { "y" } else { "ies" }
+            );
+        }
+        if let Err(e) = baseline.save(&opts.baseline) {
+            eprintln!("shifter-lint: failed to write baseline: {e}");
+            return ExitCode::from(2);
+        }
+        return ExitCode::SUCCESS;
+    }
+
+    let root_str = opts.root.to_string_lossy().into_owned();
+    if opts.format == "json" {
+        print!("{}", diag::render_json(&root_str, &RULE_IDS, &result.diagnostics));
+    } else {
+        for d in result.diagnostics.iter().filter(|d| d.is_active()) {
+            println!("{}", diag::render_human(d));
+        }
+        println!(
+            "shifter-lint: {} file diagnostics, {} live, {} suppressed",
+            result.diagnostics.len(),
+            result.active,
+            result.suppressed
+        );
+    }
+
+    if result.active > 0 {
+        ExitCode::from(1)
+    } else {
+        ExitCode::SUCCESS
+    }
+}

@@ -1,0 +1,470 @@
+//! The seven shifter-lint rules (DESIGN.md S26).
+//!
+//! Every rule is a token-pattern over the [`crate::lexer`] stream. Items
+//! under a test attribute (`#[test]`, `#[cfg(test)]`, `#[tokio::test]`,
+//! ...) are exempt: the invariants protect *library* determinism, and test
+//! code legitimately unwraps and spawns threads.
+//!
+//! | rule                  | forbids                                               |
+//! |-----------------------|-------------------------------------------------------|
+//! | `wall-clock`          | `Instant::now`, `SystemTime::now`, `UNIX_EPOCH` reads |
+//! | `unordered-collection`| `HashMap`/`HashSet` in library code                   |
+//! | `float-ordering`      | `partial_cmp().unwrap()`, float `sort_by` closures    |
+//! | `unwrap`              | `.unwrap()` / `.expect()` in non-test code            |
+//! | `thread`              | `thread::spawn` / `thread::scope`                     |
+//! | `lock-poison`         | `.lock().unwrap()` — use `util::sync::lock_unpoisoned`|
+//! | `entropy-seed`        | `from_entropy`, `thread_rng`, `RandomState`, ...      |
+
+use std::collections::BTreeMap;
+
+use crate::diag::{Diagnostic, Suppressed};
+use crate::lexer::{lex, LexOutput, Token, TokenKind};
+
+/// Rule identifiers in canonical (sorted) order.
+pub const RULE_IDS: [&str; 7] = [
+    "entropy-seed",
+    "float-ordering",
+    "lock-poison",
+    "thread",
+    "unordered-collection",
+    "unwrap",
+    "wall-clock",
+];
+
+fn help_for(rule: &str) -> &'static str {
+    match rule {
+        "wall-clock" => {
+            "route timing through crate::sim::SimClock / SimTime (DESIGN.md S24); \
+             host clocks make reports non-reproducible"
+        }
+        "unordered-collection" => {
+            "use BTreeMap/BTreeSet (or sort before iterating); HashMap iteration \
+             order feeds reports and must be deterministic"
+        }
+        "float-ordering" => {
+            "use f64::total_cmp for float ordering; partial_cmp panics on NaN and \
+             sort_by(partial_cmp) is not a total order"
+        }
+        "unwrap" => {
+            "propagate a typed error (?) or panic explicitly with a diagnostic \
+             message; bare unwrap/expect hides the failure contract"
+        }
+        "thread" => {
+            "host threads break virtual-time determinism; model concurrency on the \
+             SimKernel (DESIGN.md S24) or add the module to the lint allowlist"
+        }
+        "lock-poison" => {
+            "use crate::util::sync::lock_unpoisoned: a panicked writer must not \
+             cascade into every later reader"
+        }
+        "entropy-seed" => {
+            "seed PRNGs and hashers explicitly (SplitMix/fixed keys); ambient \
+             entropy diverges across runs and hosts"
+        }
+        _ => "see DESIGN.md S26",
+    }
+}
+
+/// Per-rule path allowlist: module path prefixes (relative to the lint
+/// root, `/`-separated) where a rule does not apply.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub allow_paths: BTreeMap<String, Vec<String>>,
+}
+
+impl Config {
+    /// The committed policy for `rust/src` (DESIGN.md S26). All allowlists
+    /// are currently empty: the tree was swept clean when the lint landed,
+    /// and new exemptions should be taken as inline `lint:allow` directives
+    /// with a reason, or (transitionally) as baseline entries — not as
+    /// whole-module waivers.
+    pub fn default_policy() -> Config {
+        let mut allow_paths = BTreeMap::new();
+        for rule in RULE_IDS {
+            allow_paths.insert(rule.to_string(), Vec::new());
+        }
+        Config { allow_paths }
+    }
+
+    fn allowed(&self, rule: &str, relpath: &str) -> bool {
+        match self.allow_paths.get(rule) {
+            Some(prefixes) => prefixes.iter().any(|p| relpath.starts_with(p.as_str())),
+            None => false,
+        }
+    }
+}
+
+/// If `toks[idx]` starts an attribute `#[...]`, return (index past the
+/// closing bracket, idents seen inside).
+fn attr_tokens(toks: &[Token], idx: usize) -> Option<(usize, Vec<&str>)> {
+    if toks.get(idx).map(|t| t.text.as_str()) != Some("#") {
+        return None;
+    }
+    if toks.get(idx + 1).map(|t| t.text.as_str()) != Some("[") {
+        return None;
+    }
+    let mut depth = 0i32;
+    let mut idents = Vec::new();
+    let mut j = idx + 1;
+    while j < toks.len() {
+        let t = &toks[j];
+        match t.text.as_str() {
+            "[" => depth += 1,
+            "]" => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some((j + 1, idents));
+                }
+            }
+            _ => {
+                if t.kind == TokenKind::Ident {
+                    idents.push(t.text.as_str());
+                }
+            }
+        }
+        j += 1;
+    }
+    Some((toks.len(), idents))
+}
+
+/// `#[test]`, `#[cfg(test)]`, `#[cfg(any(test, ...))]`, `#[tokio::test]`.
+fn is_test_attr(idents: &[&str]) -> bool {
+    idents.iter().any(|i| *i == "test")
+}
+
+/// Token-index ranges covered by a test attribute and therefore exempt.
+fn exempt_ranges(toks: &[Token]) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let Some((end_attr, idents)) = attr_tokens(toks, i) else {
+            i += 1;
+            continue;
+        };
+        if !is_test_attr(&idents) {
+            i = end_attr;
+            continue;
+        }
+        // Skip any further attributes on the same item.
+        let mut j = end_attr;
+        while let Some((next, _)) = attr_tokens(toks, j) {
+            j = next;
+        }
+        // The item ends at `;` at brace depth 0, or at the `}` matching the
+        // first `{` opened.
+        let mut depth = 0i32;
+        let mut k = j;
+        while k < toks.len() {
+            match toks[k].text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        k += 1;
+                        break;
+                    }
+                }
+                ";" if depth == 0 => {
+                    k += 1;
+                    break;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        ranges.push((i, k));
+        i = k;
+    }
+    ranges
+}
+
+fn in_ranges(idx: usize, ranges: &[(usize, usize)]) -> bool {
+    ranges.iter().any(|&(a, b)| a <= idx && idx < b)
+}
+
+const WALLCLOCK_TYPES: [&str; 2] = ["Instant", "SystemTime"];
+const UNORDERED: [&str; 2] = ["HashMap", "HashSet"];
+const ENTROPY: [&str; 5] = [
+    "from_entropy",
+    "thread_rng",
+    "RandomState",
+    "DefaultHasher",
+    "getrandom",
+];
+const SORTS: [&str; 5] = [
+    "sort_by",
+    "sort_unstable_by",
+    "min_by",
+    "max_by",
+    "binary_search_by",
+];
+
+/// Find the index of the `)` matching the `(` at `open` (which must point
+/// at a `(` token); returns `toks.len()` if unbalanced.
+fn matching_paren(toks: &[Token], open: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = open;
+    while j < toks.len() {
+        match toks[j].text.as_str() {
+            "(" => depth += 1,
+            ")" => {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    toks.len()
+}
+
+/// Run every rule over one file. `relpath` is `/`-separated and relative to
+/// the lint root; `src` is the file contents.
+pub fn check(relpath: &str, src: &str, cfg: &Config) -> Vec<Diagnostic> {
+    let lexed: LexOutput = lex(src);
+    let toks = &lexed.tokens;
+    let lines: Vec<&str> = src.lines().collect();
+    let snippet = |line: u32| -> String {
+        lines
+            .get(line.saturating_sub(1) as usize)
+            .map(|s| s.to_string())
+            .unwrap_or_default()
+    };
+    let ranges = exempt_ranges(toks);
+    let txt = |j: usize| -> &str { toks.get(j).map(|t| t.text.as_str()).unwrap_or("") };
+    let prev = |j: usize| -> &str {
+        match j.checked_sub(1) {
+            Some(p) => txt(p),
+            None => "",
+        }
+    };
+
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    let mut push = |rule: &'static str, tok: &Token, message: String| {
+        diags.push(Diagnostic {
+            rule,
+            file: relpath.to_string(),
+            line: tok.line,
+            col: tok.col,
+            message,
+            snippet: snippet(tok.line),
+            help: help_for(rule),
+            suppressed: Suppressed::No,
+        });
+    };
+
+    // First pass: lock-poison claims its unwrap/expect token so the same
+    // site is not double-reported by the unwrap rule.
+    let mut claimed: Vec<usize> = Vec::new();
+    for (i, tok) in toks.iter().enumerate() {
+        if tok.kind != TokenKind::Ident || tok.text != "lock" {
+            continue;
+        }
+        if in_ranges(i, &ranges) {
+            continue;
+        }
+        if txt(i + 1) == "("
+            && txt(i + 2) == ")"
+            && txt(i + 3) == "."
+            && (txt(i + 4) == "unwrap" || txt(i + 4) == "expect")
+        {
+            claimed.push(i + 4);
+            if !cfg.allowed("lock-poison", relpath) {
+                push(
+                    "lock-poison",
+                    tok,
+                    format!("mutex guard unwrapped on poison: .lock().{}()", txt(i + 4)),
+                );
+            }
+        }
+    }
+
+    for (i, tok) in toks.iter().enumerate() {
+        if tok.kind != TokenKind::Ident {
+            continue;
+        }
+        if in_ranges(i, &ranges) {
+            continue;
+        }
+        let text = tok.text.as_str();
+
+        // wall-clock: Instant::now / SystemTime::now / SystemTime::UNIX_EPOCH
+        if WALLCLOCK_TYPES.contains(&text)
+            && txt(i + 1) == ":"
+            && txt(i + 2) == ":"
+            && (txt(i + 3) == "now" || txt(i + 3) == "UNIX_EPOCH")
+            && !cfg.allowed("wall-clock", relpath)
+        {
+            push(
+                "wall-clock",
+                tok,
+                format!("host wall-clock read: {text}::{}", txt(i + 3)),
+            );
+        }
+
+        // unordered-collection: the type name anywhere in library code
+        // (imports included — the import is the gateway). `HashMap!` would
+        // be a macro of the same name, not the std type.
+        if UNORDERED.contains(&text)
+            && txt(i + 1) != "!"
+            && !cfg.allowed("unordered-collection", relpath)
+        {
+            push(
+                "unordered-collection",
+                tok,
+                format!("unordered collection in library code: {text}"),
+            );
+        }
+
+        // float-ordering (a): .partial_cmp(...).unwrap() / .expect(...)
+        if text == "partial_cmp" && prev(i) == "." && txt(i + 1) == "(" {
+            let close = matching_paren(toks, i + 1);
+            if txt(close + 1) == "."
+                && (txt(close + 2) == "unwrap" || txt(close + 2) == "expect")
+                && !cfg.allowed("float-ordering", relpath)
+            {
+                push(
+                    "float-ordering",
+                    tok,
+                    format!("partial_cmp().{}() panics on NaN", txt(close + 2)),
+                );
+            }
+        }
+
+        // float-ordering (b): sort_by/min_by/... whose closure calls
+        // partial_cmp.
+        if SORTS.contains(&text) && prev(i) == "." && txt(i + 1) == "(" {
+            let close = matching_paren(toks, i + 1);
+            let uses_partial = toks[i + 1..close.min(toks.len())]
+                .iter()
+                .any(|t| t.kind == TokenKind::Ident && t.text == "partial_cmp");
+            if uses_partial && !cfg.allowed("float-ordering", relpath) {
+                push(
+                    "float-ordering",
+                    tok,
+                    format!("{text} over partial_cmp is not a total order"),
+                );
+            }
+        }
+
+        // unwrap: .unwrap( / .expect( in non-test code, unless the site was
+        // already reported as lock-poison.
+        if (text == "unwrap" || text == "expect")
+            && prev(i) == "."
+            && txt(i + 1) == "("
+            && !claimed.contains(&i)
+            && !cfg.allowed("unwrap", relpath)
+        {
+            push("unwrap", tok, format!(".{text}() in library code"));
+        }
+
+        // thread: thread::spawn / thread::scope
+        if text == "thread"
+            && txt(i + 1) == ":"
+            && txt(i + 2) == ":"
+            && (txt(i + 3) == "spawn" || txt(i + 3) == "scope")
+            && !cfg.allowed("thread", relpath)
+        {
+            push(
+                "thread",
+                tok,
+                format!("host thread primitive: thread::{}", txt(i + 3)),
+            );
+        }
+
+        // entropy-seed: ambient-entropy constructors
+        if ENTROPY.contains(&text) && !cfg.allowed("entropy-seed", relpath) {
+            push(
+                "entropy-seed",
+                tok,
+                format!("nondeterministic seed source: {text}"),
+            );
+        }
+    }
+
+    // Apply inline `lint:allow` directives: a directive excuses matching
+    // diagnostics on its own line and the line immediately below.
+    for d in diags.iter_mut() {
+        let excused = lexed.allows.iter().any(|a| {
+            (a.line == d.line || a.line + 1 == d.line)
+                && a.rules.iter().any(|r| r == d.rule || r == "all")
+        });
+        if excused {
+            d.suppressed = Suppressed::Inline;
+        }
+    }
+
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(src: &str) -> Vec<Diagnostic> {
+        check("some/module.rs", src, &Config::default_policy())
+    }
+
+    fn active_rules(src: &str) -> Vec<&'static str> {
+        run(src)
+            .into_iter()
+            .filter(|d| d.is_active())
+            .map(|d| d.rule)
+            .collect()
+    }
+
+    #[test]
+    fn test_items_are_exempt() {
+        let src = "
+            #[cfg(test)]
+            mod tests {
+                fn helper() { let x = opt.unwrap(); }
+            }
+            fn lib() { let y = opt.unwrap(); }
+        ";
+        let rules = active_rules(src);
+        assert_eq!(rules, vec!["unwrap"]);
+    }
+
+    #[test]
+    fn lock_poison_claims_the_unwrap() {
+        let src = "fn f() { let g = m.lock().unwrap(); }";
+        let rules = active_rules(src);
+        assert_eq!(rules, vec!["lock-poison"]);
+    }
+
+    #[test]
+    fn partial_cmp_definition_is_not_flagged() {
+        let src = "
+            impl PartialOrd for T {
+                fn partial_cmp(&self, other: &T) -> Option<Ordering> { None }
+            }
+        ";
+        assert!(active_rules(src).is_empty());
+    }
+
+    #[test]
+    fn inline_allow_suppresses() {
+        let src = "
+            // lint:allow(unwrap): construction of a static table
+            fn f() { x.unwrap(); }
+        ";
+        let diags = run(src);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].suppressed, Suppressed::Inline);
+    }
+
+    #[test]
+    fn allowlisted_path_is_skipped() {
+        let mut cfg = Config::default_policy();
+        cfg.allow_paths
+            .insert("wall-clock".to_string(), vec!["bench/".to_string()]);
+        let src = "fn f() { let t = Instant::now(); }";
+        let diags = check("bench/timer.rs", src, &cfg);
+        assert!(diags.is_empty());
+        let diags = check("launch/mod.rs", src, &cfg);
+        assert_eq!(diags.len(), 1);
+    }
+}

@@ -1,0 +1,14 @@
+//! Negative fixture: explicit deterministic seeding.
+pub fn seed_from(token: u64) -> SplitMix64 {
+    SplitMix64::new(token ^ 0x9e37_79b9_7f4a_7c15)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::hash_map::RandomState;
+
+    #[test]
+    fn tests_may_use_ambient_entropy() {
+        let _ = RandomState::new();
+    }
+}

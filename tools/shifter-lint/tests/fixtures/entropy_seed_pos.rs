@@ -1,0 +1,11 @@
+//! Positive fixture: ambient-entropy seed sources.
+use std::collections::hash_map::DefaultHasher;
+use std::collections::hash_map::RandomState;
+
+pub fn roll() -> u64 {
+    let h = DefaultHasher::new();
+    let s = RandomState::new();
+    let rng = rand::thread_rng();
+    let _ = (h, s, rng);
+    0
+}

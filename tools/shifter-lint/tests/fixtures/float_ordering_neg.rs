@@ -1,0 +1,19 @@
+//! Negative fixture: total_cmp ordering, and a PartialOrd impl whose
+//! partial_cmp definition (and non-unwrapped use) must not be flagged.
+pub fn rank(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.total_cmp(b));
+}
+
+pub struct Key(pub f64);
+
+impl PartialEq for Key {
+    fn eq(&self, other: &Key) -> bool {
+        self.0 == other.0
+    }
+}
+
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Key) -> Option<std::cmp::Ordering> {
+        self.0.partial_cmp(&other.0)
+    }
+}

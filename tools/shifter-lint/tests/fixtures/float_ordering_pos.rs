@@ -1,0 +1,6 @@
+//! Positive fixture: NaN-unsafe float ordering.
+pub fn rank(xs: &mut Vec<f64>) -> std::cmp::Ordering {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.sort_unstable_by(|a, b| b.partial_cmp(a).expect("no NaN"));
+    xs[0].partial_cmp(&xs[1]).unwrap()
+}

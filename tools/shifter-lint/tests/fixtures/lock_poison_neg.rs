@@ -1,0 +1,5 @@
+//! Negative fixture: poison-tolerant locking (the util::sync pattern).
+pub fn snapshot(m: &std::sync::Mutex<Vec<u32>>) -> usize {
+    let guard = m.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    guard.len()
+}

@@ -1,0 +1,6 @@
+//! Positive fixture: unwrapping a poisoned mutex guard.
+pub fn snapshot(m: &std::sync::Mutex<Vec<u32>>) -> usize {
+    let guard = m.lock().unwrap();
+    let tele = m.lock().expect("telemetry lock poisoned");
+    guard.len() + tele.len()
+}

@@ -1,0 +1,17 @@
+//! Negative fixture: concurrency modeled on the SimKernel; real threads
+//! only inside test items.
+pub fn fan_out(kernel: &mut SimKernel) {
+    kernel.schedule_in(0.5, Event::worker(1));
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn scoped_threads_in_tests() {
+        std::thread::scope(|s| {
+            let _ = s;
+        });
+        let h = std::thread::spawn(|| ());
+        let _ = h.join();
+    }
+}

@@ -1,0 +1,8 @@
+//! Positive fixture: host thread primitives in library code.
+pub fn fan_out() -> u32 {
+    let handle = std::thread::spawn(|| 42);
+    std::thread::scope(|s| {
+        let _ = s;
+    });
+    handle.join().unwrap_or(0)
+}

@@ -1,0 +1,25 @@
+//! Negative fixture: ordered collections, plus HashMap mentions that are
+//! only trivia. A HashMap in a comment or "HashMap in a string" is fine.
+use std::collections::{BTreeMap, BTreeSet};
+
+pub fn build_index(keys: &[String]) -> BTreeMap<String, u32> {
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    let mut index = BTreeMap::new();
+    for (i, k) in keys.iter().enumerate() {
+        if seen.insert(k.as_str()) {
+            index.insert(k.clone(), i as u32);
+        }
+    }
+    index
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn tests_may_use_hash_maps() {
+        let mut m = HashMap::new();
+        m.insert(1, 2);
+    }
+}

@@ -1,0 +1,14 @@
+//! Positive fixture: HashMap/HashSet in library code.
+use std::collections::HashMap;
+use std::collections::HashSet;
+
+pub fn build_index(keys: &[String]) -> HashMap<String, u32> {
+    let mut seen: HashSet<&str> = HashSet::new();
+    let mut index = HashMap::new();
+    for (i, k) in keys.iter().enumerate() {
+        if seen.insert(k.as_str()) {
+            index.insert(k.clone(), i as u32);
+        }
+    }
+    index
+}

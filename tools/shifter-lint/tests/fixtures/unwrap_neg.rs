@@ -1,0 +1,23 @@
+//! Negative fixture: propagation, defaulted unwrap variants, test code,
+//! and a justified inline allow.
+pub fn read_config(path: &str) -> Result<String, std::io::Error> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(text)
+}
+
+pub fn fallback(v: Option<u32>) -> u32 {
+    v.unwrap_or(0).max(v.unwrap_or_else(|| 1))
+}
+
+// lint:allow(unwrap): fixture demonstrating a justified one-off
+pub fn justified(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        assert_eq!(Some(3).unwrap(), 3);
+    }
+}

@@ -1,0 +1,6 @@
+//! Positive fixture: bare unwrap/expect in non-test library code.
+pub fn read_config(path: &str) -> String {
+    let text = std::fs::read_to_string(path).unwrap();
+    let first = text.lines().next().expect("config is non-empty");
+    first.to_string()
+}

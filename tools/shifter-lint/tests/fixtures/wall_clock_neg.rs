@@ -1,0 +1,14 @@
+//! Negative fixture: Instant::now() in comments, strings and tests is fine.
+pub fn virtual_now(clock: &SimClock) -> SimTime {
+    let banner = "SystemTime::now() belongs in strings only";
+    let _ = banner;
+    clock.now()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn wall_clock_is_fine_in_tests() {
+        let _ = std::time::Instant::now();
+    }
+}

@@ -1,0 +1,9 @@
+//! Positive fixture: host wall-clock reads in library code.
+use std::time::Instant;
+
+pub fn elapsed_wall() -> f64 {
+    let start = Instant::now();
+    let epoch = std::time::SystemTime::now();
+    let _ = (start, epoch);
+    0.0
+}

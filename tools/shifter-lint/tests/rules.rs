@@ -1,0 +1,115 @@
+//! Fixture-driven coverage for every shifter-lint rule (ISSUE 9 satellite):
+//! one positive and one negative fixture per rule, plus the baseline
+//! round-trip (`--init`/`--update-baseline` semantics) over a temp tree.
+
+use std::path::{Path, PathBuf};
+
+use shifter_lint::baseline::Baseline;
+use shifter_lint::diag::Diagnostic;
+use shifter_lint::rules::{check, Config, RULE_IDS};
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+fn lint_fixture(name: &str) -> Vec<Diagnostic> {
+    let path = fixture_dir().join(name);
+    let src = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("fixture {name} unreadable: {e}"));
+    check(name, &src, &Config::default_policy())
+}
+
+#[test]
+fn every_rule_has_positive_and_negative_fixtures() {
+    let cases = [
+        ("wall-clock", "wall_clock"),
+        ("unordered-collection", "unordered"),
+        ("float-ordering", "float_ordering"),
+        ("unwrap", "unwrap"),
+        ("thread", "thread"),
+        ("lock-poison", "lock_poison"),
+        ("entropy-seed", "entropy_seed"),
+    ];
+    assert_eq!(cases.len(), RULE_IDS.len(), "a rule is missing fixture coverage");
+    for (rule, stem) in cases {
+        let pos = lint_fixture(&format!("{stem}_pos.rs"));
+        assert!(
+            pos.iter().any(|d| d.rule == rule && d.is_active()),
+            "positive fixture for `{rule}` produced no active diagnostic: {pos:?}"
+        );
+        let neg = lint_fixture(&format!("{stem}_neg.rs"));
+        let bad: Vec<&Diagnostic> =
+            neg.iter().filter(|d| d.rule == rule && d.is_active()).collect();
+        assert!(
+            bad.is_empty(),
+            "negative fixture for `{rule}` produced active diagnostics: {bad:?}"
+        );
+    }
+}
+
+#[test]
+fn lock_poison_claims_its_unwrap_site() {
+    let diags = lint_fixture("lock_poison_pos.rs");
+    assert!(diags.iter().any(|d| d.rule == "lock-poison"));
+    assert!(
+        !diags.iter().any(|d| d.rule == "unwrap"),
+        "a .lock().unwrap() site must be reported once, as lock-poison"
+    );
+}
+
+#[test]
+fn inline_allow_is_suppressed_but_recorded() {
+    let diags = lint_fixture("unwrap_neg.rs");
+    let justified: Vec<&Diagnostic> =
+        diags.iter().filter(|d| d.rule == "unwrap").collect();
+    assert_eq!(justified.len(), 1, "the lint:allow site should still be recorded");
+    assert!(!justified[0].is_active());
+}
+
+/// Source with `n` unwrap sites, used to exercise the ratchet.
+fn debt_module(n: usize) -> String {
+    let mut s = String::from("pub fn drain(v: Vec<Option<u32>>) {\n");
+    for i in 0..n {
+        s.push_str(&format!("    let _x{i} = v[{i}].unwrap();\n"));
+    }
+    s.push_str("}\n");
+    s
+}
+
+#[test]
+fn baseline_round_trip_ratchets_down_never_up() {
+    let dir = std::env::temp_dir().join(format!("shifter-lint-rt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let file = dir.join("mod_a.rs");
+    let bl_path = dir.join("baseline.toml");
+    let cfg = Config::default_policy();
+    let key = ("unwrap".to_string(), "mod_a.rs".to_string());
+
+    // Bootstrap: 3 sites of debt, --init-baseline, clean run.
+    std::fs::write(&file, debt_module(3)).expect("write fixture");
+    let diags = shifter_lint::lint_root(&dir, &cfg).expect("lint");
+    let bl = Baseline::init(&Baseline::current_counts(&diags));
+    bl.save(&bl_path).expect("save baseline");
+    let loaded = Baseline::load(&bl_path).expect("reload baseline");
+    assert_eq!(bl, loaded, "baseline must survive a save/load round trip");
+    let res = shifter_lint::run(&dir, &cfg, &loaded).expect("run");
+    assert_eq!(res.active, 0);
+    assert_eq!(res.suppressed, 3);
+
+    // Pay off one site; --update-baseline lowers the count to 2.
+    std::fs::write(&file, debt_module(2)).expect("write fixture");
+    let diags = shifter_lint::lint_root(&dir, &cfg).expect("lint");
+    let mut bl = loaded;
+    bl.ratchet(&Baseline::current_counts(&diags));
+    bl.save(&bl_path).expect("save baseline");
+    let bl = Baseline::load(&bl_path).expect("reload baseline");
+    assert_eq!(bl.entries.get(&key), Some(&2));
+
+    // Regress to 4 sites: the allowance stays at 2, two diagnostics live.
+    std::fs::write(&file, debt_module(4)).expect("write fixture");
+    let res = shifter_lint::run(&dir, &cfg, &bl).expect("run");
+    assert_eq!(res.active, 2, "new debt must not be absorbed by the baseline");
+    assert_eq!(res.suppressed, 2);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
