@@ -1,0 +1,262 @@
+//! federation_burst — the multi-site federation benchmark (DESIGN.md
+//! S27): replay one Zipf-skewed multi-tenant storm across a federation
+//! of identical 48-node sites under four routing configurations on the
+//! same stream and compare:
+//!
+//!   * **pinned** — `PinnedHome`, overflow disabled: every tenant's
+//!     jobs run at its home site — the no-federation baseline;
+//!   * **burst** — `PinnedHome` plus burst overflow: jobs spill to a
+//!     compatible peer (paying replication first) when the home site's
+//!     queue-wait estimate crosses the threshold;
+//!   * **locality** — `DataLocality` routing: replicas concentrate
+//!     where images already live;
+//!   * **random** — seeded `RandomPlacement`: the scatter-everything
+//!     placement baseline.
+//!
+//! Asserted (the ISSUE 10 acceptance criteria):
+//!   * **burst overflow cuts the aggregate p99 end-to-end wait** versus
+//!     pinned-to-home on the same contended stream, and overflow
+//!     actually fires;
+//!   * **data-locality routing moves fewer WAN replication bytes** than
+//!     random placement;
+//!   * the artifact and the shared Chrome trace are **byte-identical
+//!     across runs** — the federation inherits the stack's determinism.
+//!
+//! All four reports land in `BENCH_federation.json` so CI tracks the
+//! federation trajectory per PR. Knobs: `FEDERATION_JOBS` caps the
+//! stream length, `FEDERATION_SITES` the fleet size (2–4; CI runs
+//! reduced values), `BENCH_FEDERATION_JSON` the artifact path.
+
+use shifter_rs::federation::{
+    DataLocality, PinnedHome, RandomPlacement, RoutingPolicy,
+};
+use shifter_rs::launch::RetryPolicy;
+use shifter_rs::util::json::Json;
+use shifter_rs::{
+    Federation, FederationReport, FederationStorm, SiteBuilder,
+    SystemProfile,
+};
+
+const SHARDS: usize = 4;
+/// Few tenants + Zipf skew 1.0 concentrate ~60% of the stream on the
+/// first tenant's home site — the contended regime burst overflow is
+/// for.
+const TENANTS: u32 = 4;
+const FULL_JOBS: u32 = 96;
+const FULL_SITES: u32 = 3;
+const NODES_PER_SITE: u32 = 48;
+const MAX_WIDTH: u32 = 16;
+const ARRIVAL_RATE_PER_MIN: f64 = 1.8;
+/// Burst threshold: spill when the home queue estimate exceeds this.
+const OVERFLOW_THRESHOLD_SECS: f64 = 120.0;
+const SEED: u64 = 13;
+const SITE_NAMES: [&str; 4] = ["alpha", "bravo", "charlie", "delta"];
+
+fn env_u32(name: &str, full: u32) -> u32 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(full)
+        .max(1)
+}
+
+/// A fleet of `sites` identical GPU-capable member sites (every
+/// generated job class is eligible everywhere, so the routing
+/// comparison is pure placement, not capability filtering).
+fn make_fed(
+    sites: u32,
+    routing: Box<dyn RoutingPolicy>,
+    threshold: Option<f64>,
+) -> Federation {
+    let mut builder = Federation::builder()
+        .routing(routing)
+        .seed(SEED)
+        .telemetry(true);
+    for name in SITE_NAMES.iter().take(sites as usize) {
+        builder = builder.site(
+            name,
+            SiteBuilder::new()
+                .profile(SystemProfile::piz_daint())
+                .nodes(NODES_PER_SITE)
+                .gateway_shards(SHARDS)
+                // strict retry: exact replication/wait accounting, no
+                // straggler noise in the routing comparison
+                .retry_policy(RetryPolicy::strict())
+                .seed(SEED),
+        );
+    }
+    if let Some(secs) = threshold {
+        builder = builder.overflow_threshold_secs(secs);
+    }
+    builder.build().expect("valid bench federation")
+}
+
+fn storm(jobs: u32) -> FederationStorm {
+    FederationStorm::new()
+        .tenants(TENANTS)
+        .jobs(jobs)
+        .arrival_rate_per_min(ARRIVAL_RATE_PER_MIN)
+        .max_width(MAX_WIDTH)
+        .seed(SEED)
+}
+
+/// Run one routing configuration on a fresh federation (same
+/// declaration, same storm seed — every config sees the identical
+/// stream) and return its report plus the shared Chrome trace.
+fn run_config(
+    sites: u32,
+    jobs: u32,
+    routing: Box<dyn RoutingPolicy>,
+    threshold: Option<f64>,
+) -> (FederationReport, String) {
+    let mut fed = make_fed(sites, routing, threshold);
+    let report = fed.run_storm(&storm(jobs)).expect("federation storm runs");
+    let trace = fed.telemetry().chrome_trace_jsonl();
+    (report, trace)
+}
+
+fn p99_wait(report: &FederationReport) -> f64 {
+    report
+        .total_wait_stats()
+        .expect("completed jobs exist")
+        .p99
+}
+
+fn main() {
+    let sites = env_u32("FEDERATION_SITES", FULL_SITES).clamp(2, 4);
+    let jobs = env_u32("FEDERATION_JOBS", FULL_JOBS);
+
+    let pinned_policy = || Box::new(PinnedHome::new(sites as usize));
+    let (pinned, _) = run_config(sites, jobs, pinned_policy(), None);
+    let (burst, burst_trace) = run_config(
+        sites,
+        jobs,
+        pinned_policy(),
+        Some(OVERFLOW_THRESHOLD_SECS),
+    );
+    let (locality, _) =
+        run_config(sites, jobs, Box::new(DataLocality), None);
+    let (random, _) = run_config(
+        sites,
+        jobs,
+        Box::new(RandomPlacement::new(SEED)),
+        None,
+    );
+
+    for (name, report) in [
+        ("pinned", &pinned),
+        ("burst", &burst),
+        ("locality", &locality),
+        ("random", &random),
+    ] {
+        print!("{}", report.render());
+        assert!(
+            report.rejections.is_empty(),
+            "{name}: the uniform GPU fleet accepts every generated job \
+             class, so nothing may be rejected: {:?}",
+            report.rejections
+        );
+        assert_eq!(
+            report.records.len() as u32,
+            jobs,
+            "{name}: every generated job must be routed"
+        );
+        assert_eq!(
+            report.completed() as u32,
+            jobs,
+            "{name}: every routed job must complete on its site"
+        );
+    }
+
+    // data locality vs scatter: both configs replicate over the same
+    // WAN, but locality concentrates each image where it already lives
+    // while random placement copies it to multiple sites.
+    if jobs >= 16 {
+        assert!(
+            locality.replication_bytes() < random.replication_bytes(),
+            "data-locality routing must move fewer WAN bytes than \
+             random placement: {} vs {}",
+            locality.replication_bytes(),
+            random.replication_bytes()
+        );
+    }
+
+    // burst overflow vs pinned-to-home on the same stream. The tail
+    // claim needs the contended regime: at least three sites (so the
+    // overloaded home has idle peers) and enough jobs to build a
+    // queue — a reduced smoke run can land on a stream where spilling
+    // cannot beat staying (and with two sites the pinned split is too
+    // even for overflow to pay for its replication).
+    if sites >= 3 && jobs >= 32 {
+        assert!(
+            burst.overflows > 0,
+            "the contended stream must trigger burst overflow"
+        );
+        assert!(
+            p99_wait(&burst) < p99_wait(&pinned),
+            "burst overflow must cut the aggregate p99 end-to-end wait: \
+             burst {:.0}s vs pinned {:.0}s",
+            p99_wait(&burst),
+            p99_wait(&pinned)
+        );
+    }
+
+    // determinism: an identical second burst run must reproduce both
+    // the artifact document and the shared Chrome trace byte for byte.
+    let (burst2, burst2_trace) = run_config(
+        sites,
+        jobs,
+        pinned_policy(),
+        Some(OVERFLOW_THRESHOLD_SECS),
+    );
+    assert_eq!(
+        burst.to_json().to_string(),
+        burst2.to_json().to_string(),
+        "federation artifact must be byte-identical across runs"
+    );
+    assert_eq!(
+        burst_trace, burst2_trace,
+        "federation Chrome trace must be byte-identical across runs"
+    );
+
+    println!(
+        "federation: {} jobs / {} tenants / {} x {}-node sites — p99 \
+         wait pinned {:.0}s vs burst {:.0}s ({} overflows, {:.1}% rate), \
+         replication locality {} B vs random {} B",
+        jobs,
+        TENANTS,
+        sites,
+        NODES_PER_SITE,
+        p99_wait(&pinned),
+        p99_wait(&burst),
+        burst.overflows,
+        burst.overflow_rate() * 100.0,
+        locality.replication_bytes(),
+        random.replication_bytes(),
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("federation_burst")),
+        ("sites", Json::num(f64::from(sites))),
+        ("nodes_per_site", Json::num(f64::from(NODES_PER_SITE))),
+        (
+            "max_nodes",
+            Json::num(f64::from(sites * NODES_PER_SITE)),
+        ),
+        ("jobs", Json::num(f64::from(jobs))),
+        ("tenants", Json::num(f64::from(TENANTS))),
+        (
+            "overflow_threshold_secs",
+            Json::num(OVERFLOW_THRESHOLD_SECS),
+        ),
+        ("pinned", pinned.to_json()),
+        ("burst", burst.to_json()),
+        ("locality", locality.to_json()),
+        ("random", random.to_json()),
+    ]);
+    let path = std::env::var("BENCH_FEDERATION_JSON")
+        .unwrap_or_else(|_| "BENCH_federation.json".to_string());
+    std::fs::write(&path, doc.to_string())
+        .expect("write BENCH_federation.json");
+    println!("wrote {path}");
+}

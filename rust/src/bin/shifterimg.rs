@@ -16,6 +16,8 @@
 //!     [--policy=fair|fifo] [--seed=N] storm
 //! shifterimg [--nodes=64] [--tenants=4] [--jobs=32] \
 //!     [--trace=shifter_trace.jsonl] trace
+//! shifterimg [--sites=3] [--nodes=64] [--route=data-locality] \
+//!     [--overflow-threshold=300] [--tenants=8] [--jobs=64] federate
 //! ```
 //!
 //! `pull`/`lookup`/`images`/`run` are the paper's §III.B end-user
@@ -24,7 +26,10 @@
 //! state, the CAS dedup accounting, and the per-partition host-extension
 //! capability vectors (S22). `launch` runs one cluster-scale job through
 //! the orchestrator (S19); `storm` runs the multi-tenant traffic
-//! simulation (S20) under a pluggable scheduling policy. `--hetero`
+//! simulation (S20) under a pluggable scheduling policy. `federate`
+//! declares a 2–4 member fleet of heterogeneous sites (DESIGN.md S27)
+//! and drives one storm through capability-aware routing, cross-site
+//! replication, and burst overflow. `--hetero`
 //! splits the node range into a Piz Daint partition and a Linux Cluster
 //! partition (different GPU generations, driver versions, host MPIs and
 //! fabric transports). `--net` requests the host fabric via the
@@ -38,6 +43,9 @@
 //! `shifter_trace.jsonl`) plus a counter summary. `cluster-status`
 //! likewise always records, so its per-shard counter table is live.
 
+use shifter_rs::federation::{
+    routing_policy_by_name, Federation, FederationStorm,
+};
 use shifter_rs::launch::JobSpec;
 use shifter_rs::metrics::Table;
 use shifter_rs::shifter::RunOptions;
@@ -60,6 +68,8 @@ fn usage() -> ! {
          \x20 storm                 multi-tenant job-storm simulation\n\
          \x20 trace                 replay a storm with telemetry on and\n\
          \x20                       dump a Chrome/Perfetto trace\n\
+         \x20 federate              multi-site federation storm (routing,\n\
+         \x20                       replication, burst overflow)\n\
          \n\
          common options:\n\
          \x20 --system=laptop|cluster|daint   host profile (default daint)\n\
@@ -91,7 +101,19 @@ fn usage() -> ! {
          \x20 --seed=N              traffic PRNG seed (default 7)\n\
          \n\
          trace options: storm knobs (defaults --tenants=4 --jobs=32)\n\
-         \x20 plus --trace=PATH for the output (shifter_trace.jsonl)"
+         \x20 plus --trace=PATH for the output (shifter_trace.jsonl)\n\
+         \n\
+         federate options: storm knobs, plus\n\
+         \x20 --sites=N             member sites, 2-4 (default 3); the\n\
+         \x20                       fleet cycles daint/cluster profiles\n\
+         \x20 --nodes=N             width of the first member site;\n\
+         \x20                       later members get N/2 (default 64)\n\
+         \x20 --route=NAME          data-locality | least-loaded |\n\
+         \x20                       capability-first | random |\n\
+         \x20                       pinned-home (default data-locality)\n\
+         \x20 --overflow-threshold=SECS  spill jobs whose queue-wait\n\
+         \x20                       estimate exceeds SECS (default 300;\n\
+         \x20                       0 disables burst overflow)"
     );
     std::process::exit(2);
 }
@@ -120,6 +142,9 @@ fn main() {
             ("policy", true),
             ("seed", true),
             ("trace", true),
+            ("sites", true),
+            ("route", true),
+            ("overflow-threshold", true),
         ],
         // stop option parsing at the subcommand, so a containerized
         // command like `launch <ref> ls --color` keeps its own flags
@@ -427,7 +452,120 @@ fn main() {
                 std::process::exit(1);
             }
         }
+        [cmd] if cmd == "federate" => {
+            // a 2-4 member fleet of heterogeneous sites (DESIGN.md S27):
+            // the first member is the wide "home" center, later members
+            // are half-width peers alternating the two cluster profiles
+            let site_count: usize =
+                match parsed.get("sites").unwrap_or("3").parse() {
+                    Ok(n) if (2..=4).contains(&n) => n,
+                    _ => {
+                        eprintln!("shifterimg: --sites must be 2..=4");
+                        usage();
+                    }
+                };
+            let nodes = parse_nodes(&parsed, 64);
+            let knobs = parse_storm_knobs(&parsed, "8", "64");
+            let route = parsed.get("route").unwrap_or("data-locality");
+            let Some(routing) =
+                routing_policy_by_name(route, knobs.seed, site_count)
+            else {
+                eprintln!(
+                    "shifterimg: --route must be data-locality, \
+                     least-loaded, capability-first, random, or \
+                     pinned-home"
+                );
+                usage();
+            };
+            let threshold: f64 = match parsed
+                .get("overflow-threshold")
+                .unwrap_or("300")
+                .parse()
+            {
+                Ok(t) if t >= 0.0 => t,
+                _ => {
+                    eprintln!(
+                        "shifterimg: --overflow-threshold must be >= 0"
+                    );
+                    usage();
+                }
+            };
+            let policy_name = parsed.get("policy").unwrap_or("fair");
+            let want_trace = trace_path(&parsed).is_some();
+            let mut builder = Federation::builder()
+                .routing(routing)
+                .seed(knobs.seed)
+                .telemetry(want_trace);
+            if threshold > 0.0 {
+                builder = builder.overflow_threshold_secs(threshold);
+            }
+            for i in 0..site_count {
+                let (name, profile) = fleet_member(i);
+                let width = if i == 0 { nodes } else { (nodes / 2).max(1) };
+                let Some(policy) = policy_by_name(policy_name) else {
+                    eprintln!("shifterimg: --policy must be fair or fifo");
+                    usage();
+                };
+                builder = builder.site(
+                    name,
+                    Site::builder()
+                        .profile(profile)
+                        .nodes(width)
+                        .gateway_shards(parse_shards(&parsed))
+                        .scheduling_policy(policy)
+                        .retry_policy(
+                            shifter_rs::launch::RetryPolicy::strict(),
+                        )
+                        .seed(knobs.seed),
+                );
+            }
+            let mut fed = match builder.build() {
+                Ok(fed) => fed,
+                Err(e) => {
+                    eprintln!("shifterimg: invalid federation: {e}");
+                    std::process::exit(2);
+                }
+            };
+            let mut spec = FederationStorm::new()
+                .tenants(knobs.tenants)
+                .jobs(knobs.jobs)
+                .arrival_rate_per_min(knobs.arrival_rate)
+                .duration_secs(knobs.duration)
+                .seed(knobs.seed);
+            if let Some(path) = trace_path(&parsed) {
+                spec = spec.trace_path(path);
+            }
+            let report = match fed.run_storm(&spec) {
+                Ok(r) => r,
+                Err(e) => die(&e),
+            };
+            print!("{}", report.render());
+            if let Some(path) = trace_path(&parsed) {
+                eprintln!(
+                    "trace: {} spans -> {path} (open in Perfetto or \
+                     chrome://tracing)",
+                    fed.telemetry().span_count()
+                );
+            }
+            let failed = report.records.len() - report.completed();
+            if failed > 0 {
+                std::process::exit(1);
+            }
+        }
         _ => usage(),
+    }
+}
+
+/// The federate fleet roster: member `i`'s name and host profile. The
+/// first member is the flagship Cray, later members alternate the two
+/// cluster profiles so capability vectors and fabric transports differ
+/// across the fleet.
+fn fleet_member(i: usize) -> (&'static str, SystemProfile) {
+    match i {
+        0 => ("daint", SystemProfile::piz_daint()),
+        1 => ("cluster", SystemProfile::linux_cluster()),
+        2 => ("alps", SystemProfile::piz_daint()),
+        _ => ("edge", SystemProfile::linux_cluster()),
     }
 }
 

@@ -1,0 +1,251 @@
+//! The declarative federation builder: member sites, WAN topology,
+//! routing policy, and burst-overflow knobs in one place, validated
+//! once at [`FederationBuilder::build`].
+
+use std::sync::Arc;
+
+use crate::distrib::Chunker;
+use crate::site::SiteBuilder;
+use crate::telemetry::Telemetry;
+
+use super::error::FederationError;
+use super::index::ReplicaIndex;
+use super::routing::{DataLocality, RoutingPolicy};
+use super::wan::{WanLink, WanModel};
+use super::{Federation, SiteEntry, FEDERATION_CHUNK_TARGET_BYTES};
+
+/// Chunker seed shared with the S25 CAS so federation manifests and
+/// site-local chunk stores agree on chunk identity.
+const FEDERATION_CHUNK_SEED: u64 = 0xC0FFEE;
+
+/// Declares a [`Federation`]: named member sites (each a full
+/// [`SiteBuilder`]), the WAN topology between them, the routing
+/// policy, and the burst-overflow threshold. `build()` validates the
+/// combination, injects one shared [`Telemetry`] recorder into every
+/// member (so a federation storm produces one coherent Chrome trace),
+/// and wires the replica index — exactly once.
+///
+/// ```
+/// use shifter_rs::{Federation, SiteBuilder, SystemProfile};
+///
+/// let fed = Federation::builder()
+///     .site(
+///         "daint",
+///         SiteBuilder::new()
+///             .profile(SystemProfile::piz_daint())
+///             .nodes(8),
+///     )
+///     .site(
+///         "cluster",
+///         SiteBuilder::new()
+///             .profile(SystemProfile::linux_cluster())
+///             .nodes(8),
+///     )
+///     .overflow_threshold_secs(120.0)
+///     .build()
+///     .unwrap();
+/// assert_eq!(fed.site_names(), vec!["daint", "cluster"]);
+/// ```
+pub struct FederationBuilder {
+    sites: Vec<(String, SiteBuilder)>,
+    links: Vec<(String, String, WanLink)>,
+    default_link: Option<WanLink>,
+    origin_link: Option<WanLink>,
+    routing: Box<dyn RoutingPolicy>,
+    overflow_threshold: Option<f64>,
+    telemetry: bool,
+    seed: u64,
+}
+
+impl Default for FederationBuilder {
+    fn default() -> FederationBuilder {
+        FederationBuilder::new()
+    }
+}
+
+impl FederationBuilder {
+    /// An empty federation: no sites yet, default WAN links,
+    /// [`DataLocality`] routing, overflow disabled, telemetry off,
+    /// seed 7.
+    pub fn new() -> FederationBuilder {
+        FederationBuilder {
+            sites: Vec::new(),
+            links: Vec::new(),
+            default_link: None,
+            origin_link: None,
+            routing: Box::new(DataLocality),
+            overflow_threshold: None,
+            telemetry: false,
+            seed: 7,
+        }
+    }
+
+    /// Add a member site under `name`. Declaration order is federation
+    /// order: site indices, routing tie-breaks, and report rows all
+    /// follow it.
+    pub fn site(
+        mut self,
+        name: &str,
+        builder: SiteBuilder,
+    ) -> FederationBuilder {
+        self.sites.push((name.to_string(), builder));
+        self
+    }
+
+    /// Override the WAN link between two member sites
+    /// (order-insensitive). Pairs without an override use the default
+    /// link.
+    pub fn wan_link(
+        mut self,
+        a: &str,
+        b: &str,
+        latency_secs: f64,
+        bytes_per_sec: f64,
+    ) -> FederationBuilder {
+        self.links.push((
+            a.to_string(),
+            b.to_string(),
+            WanLink {
+                latency_secs,
+                bytes_per_sec,
+            },
+        ));
+        self
+    }
+
+    /// Replace the default site-pair link
+    /// ([`super::wan::DEFAULT_SITE_LINK`]).
+    pub fn default_wan_link(
+        mut self,
+        latency_secs: f64,
+        bytes_per_sec: f64,
+    ) -> FederationBuilder {
+        self.default_link = Some(WanLink {
+            latency_secs,
+            bytes_per_sec,
+        });
+        self
+    }
+
+    /// Replace the origin-registry uplink
+    /// ([`super::wan::DEFAULT_ORIGIN_LINK`]).
+    pub fn origin_wan_link(
+        mut self,
+        latency_secs: f64,
+        bytes_per_sec: f64,
+    ) -> FederationBuilder {
+        self.origin_link = Some(WanLink {
+            latency_secs,
+            bytes_per_sec,
+        });
+        self
+    }
+
+    /// Replace the routing policy (default: [`DataLocality`]).
+    pub fn routing(
+        mut self,
+        policy: Box<dyn RoutingPolicy>,
+    ) -> FederationBuilder {
+        self.routing = policy;
+        self
+    }
+
+    /// Enable burst overflow: when the routed site's queue-wait
+    /// estimate exceeds `secs`, eligible jobs spill to a compatible
+    /// site whose estimated wait plus replication time beats staying.
+    /// Must be positive ([`FederationError::BadOverflowThreshold`]).
+    pub fn overflow_threshold_secs(mut self, secs: f64) -> FederationBuilder {
+        self.overflow_threshold = Some(secs);
+        self
+    }
+
+    /// Record telemetry for the whole federation: one shared recorder
+    /// spans every member site plus the WAN replication lane.
+    pub fn telemetry(mut self, enabled: bool) -> FederationBuilder {
+        self.telemetry = enabled;
+        self
+    }
+
+    /// Traffic seed federation storms inherit unless their spec sets
+    /// its own.
+    pub fn seed(mut self, seed: u64) -> FederationBuilder {
+        self.seed = seed;
+        self
+    }
+
+    /// Validate the declared knobs and wire the federation. Typed
+    /// [`FederationError`] variants on conflict — never panics.
+    pub fn build(self) -> Result<Federation, FederationError> {
+        if self.sites.is_empty() {
+            return Err(FederationError::NoSites);
+        }
+        for (i, (name, _)) in self.sites.iter().enumerate() {
+            if self.sites[..i].iter().any(|(n, _)| n == name) {
+                return Err(FederationError::DuplicateSite(name.clone()));
+            }
+        }
+        if let Some(secs) = self.overflow_threshold {
+            if secs.is_nan() || secs <= 0.0 {
+                return Err(FederationError::BadOverflowThreshold { secs });
+            }
+        }
+
+        let mut wan = WanModel::new();
+        if let Some(link) = self.default_link {
+            wan.set_default(link);
+        }
+        if let Some(link) = self.origin_link {
+            wan.set_origin(link);
+        }
+        for (a, b, link) in &self.links {
+            for site in [a, b] {
+                if !self.sites.iter().any(|(n, _)| n == site) {
+                    return Err(FederationError::UnknownLinkSite {
+                        site: site.clone(),
+                    });
+                }
+            }
+            let bad_latency =
+                link.latency_secs.is_nan() || link.latency_secs < 0.0;
+            let bad_bw =
+                link.bytes_per_sec.is_nan() || link.bytes_per_sec <= 0.0;
+            if bad_latency || bad_bw {
+                return Err(FederationError::BadWanLink {
+                    a: a.clone(),
+                    b: b.clone(),
+                    latency_secs: link.latency_secs,
+                    bytes_per_sec: link.bytes_per_sec,
+                });
+            }
+            wan.set_link(a, b, *link);
+        }
+
+        let telemetry = Arc::new(Telemetry::new(self.telemetry));
+        let mut entries = Vec::with_capacity(self.sites.len());
+        for (name, builder) in self.sites {
+            let site = builder
+                .telemetry_recorder(Arc::clone(&telemetry))
+                .build()
+                .map_err(|source| FederationError::Site {
+                    name: name.clone(),
+                    source,
+                })?;
+            entries.push(SiteEntry::new(name, site));
+        }
+
+        let index = ReplicaIndex::new(
+            entries.len(),
+            Chunker::new(FEDERATION_CHUNK_TARGET_BYTES,
+                         FEDERATION_CHUNK_SEED),
+        );
+        Ok(Federation {
+            sites: entries,
+            wan,
+            routing: self.routing,
+            overflow_threshold: self.overflow_threshold,
+            index,
+            telemetry,
+            seed: self.seed,
+        })
+    }
+}

@@ -1,0 +1,89 @@
+//! Typed errors for federation construction and storms.
+
+use super::super::site::SiteError;
+
+/// Everything that can go wrong building or driving a
+/// [`super::Federation`]. Mirrors the [`SiteError`] idiom: builder
+/// mistakes get their own variants with the offending values, member
+/// site failures wrap the underlying [`SiteError`] with the site name
+/// attached.
+#[derive(Debug, thiserror::Error)]
+#[non_exhaustive]
+pub enum FederationError {
+    /// The builder was asked to build with no member sites.
+    #[error("a federation needs at least one member site")]
+    NoSites,
+
+    /// Two member sites were declared under the same name.
+    #[error("duplicate site name '{0}' — member names must be unique")]
+    DuplicateSite(String),
+
+    /// A WAN link names a site the federation does not contain.
+    #[error("WAN link references unknown site '{site}'")]
+    UnknownLinkSite {
+        /// The name the link referenced.
+        site: String,
+    },
+
+    /// A WAN link with a non-positive bandwidth or negative latency.
+    #[error(
+        "invalid WAN link {a} <-> {b}: latency {latency_secs}s, \
+         bandwidth {bytes_per_sec} B/s (latency must be >= 0, \
+         bandwidth > 0)"
+    )]
+    BadWanLink {
+        /// First endpoint.
+        a: String,
+        /// Second endpoint.
+        b: String,
+        /// Declared one-way latency, seconds.
+        latency_secs: f64,
+        /// Declared bandwidth, bytes per second.
+        bytes_per_sec: f64,
+    },
+
+    /// A non-positive burst-overflow threshold.
+    #[error(
+        "overflow threshold must be positive, got {secs}s \
+         (use None to disable overflow)"
+    )]
+    BadOverflowThreshold {
+        /// The rejected threshold, seconds.
+        secs: f64,
+    },
+
+    /// Building one of the member sites failed.
+    #[error("building member site '{name}' failed")]
+    Site {
+        /// The member site's declared name.
+        name: String,
+        /// The underlying builder error.
+        #[source]
+        source: SiteError,
+    },
+
+    /// A job stream replay referenced a job wider than every member
+    /// site — nothing in the fleet could ever run it.
+    #[error(
+        "job {job} needs {width} nodes but the widest member site \
+         has {widest} — regenerate the stream against the fleet"
+    )]
+    JobTooWide {
+        /// Stream id of the offending job.
+        job: u32,
+        /// Requested node width.
+        width: u32,
+        /// Width of the widest member site.
+        widest: u32,
+    },
+
+    /// Writing the Chrome trace artifact failed.
+    #[error("writing federation trace to {path} failed")]
+    Trace {
+        /// Destination path.
+        path: String,
+        /// The underlying I/O error.
+        #[source]
+        source: std::io::Error,
+    },
+}

@@ -1,0 +1,263 @@
+//! The federation-level replica index: which site holds which chunks,
+//! and what a replication to a given site would cost.
+//!
+//! Reuses the S25 CDC machinery ([`Chunker::synthetic_chunks`]) so two
+//! images sharing layers — or sharing files below layer granularity —
+//! dedup across the WAN exactly as they dedup inside one site's CAS:
+//! a replication moves only the chunks the destination is missing,
+//! each fetched from the cheapest peer that already holds it, falling
+//! through to the origin registry only for chunks no peer has.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::distrib::Chunker;
+use crate::image::Image;
+use crate::vfs::VNode;
+
+use super::wan::WanModel;
+
+/// What one replication would move and how long it would take.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ReplicationPlan {
+    /// Bytes fetched from peer sites over site-pair WAN links.
+    pub peer_bytes: u64,
+    /// Bytes fetched from the origin registry (no peer held them).
+    pub origin_bytes: u64,
+    /// Missing chunks the transfer moves.
+    pub chunks: usize,
+    /// Transfer time: sources stream in parallel, so the max over the
+    /// per-source link times (0.0 when nothing is missing).
+    pub secs: f64,
+    /// Per-peer-source byte counts, by federation site index.
+    pub sources: Vec<(usize, u64)>,
+}
+
+impl ReplicationPlan {
+    /// Total bytes the plan moves over any wire.
+    pub fn total_bytes(&self) -> u64 {
+        self.peer_bytes + self.origin_bytes
+    }
+}
+
+/// Chunk-level CAS index across every member site.
+#[derive(Debug, Clone)]
+pub struct ReplicaIndex {
+    chunker: Chunker,
+    /// Per-site set of held chunk digests.
+    sites: Vec<BTreeSet<u64>>,
+    /// Per-image chunk manifest cache: `(digest, length)` pairs,
+    /// deduplicated within the image.
+    manifests: BTreeMap<String, Vec<(u64, u64)>>,
+}
+
+impl ReplicaIndex {
+    /// An empty index over `sites` member sites — no site holds
+    /// anything until the first replication commits.
+    pub fn new(sites: usize, chunker: Chunker) -> ReplicaIndex {
+        ReplicaIndex {
+            chunker,
+            sites: vec![BTreeSet::new(); sites],
+            manifests: BTreeMap::new(),
+        }
+    }
+
+    /// The image's chunk manifest: every file of every layer cut into
+    /// content-defined chunks keyed by the file's content digest (the
+    /// same derivation the S25 CAS uses), deduplicated by chunk digest
+    /// — a file shared between layers or *images* yields identical
+    /// chunks and is moved across the WAN once. Cached per reference;
+    /// deterministic per chunker seed.
+    pub fn manifest(&mut self, image: &Image) -> Vec<(u64, u64)> {
+        let reference = image.reference.canonical();
+        if let Some(cached) = self.manifests.get(&reference) {
+            return cached.clone();
+        }
+        let mut chunks: BTreeMap<u64, u64> = BTreeMap::new();
+        for layer in &image.layers {
+            let files = layer.tree.walk("/").unwrap_or_default();
+            for (_, node) in files {
+                let VNode::File { size, digest, .. } = node else {
+                    continue;
+                };
+                // chunk the transfer representation of the file
+                let compressed = (size as f64 * 0.5) as u64;
+                if compressed == 0 {
+                    continue;
+                }
+                for chunk in
+                    self.chunker.synthetic_chunks(digest, compressed)
+                {
+                    chunks.insert(chunk.digest, chunk.length);
+                }
+            }
+        }
+        let manifest: Vec<(u64, u64)> = chunks.into_iter().collect();
+        self.manifests.insert(reference, manifest.clone());
+        manifest
+    }
+
+    /// Bytes of `manifest` the site is missing.
+    pub fn missing_bytes(
+        &self,
+        site: usize,
+        manifest: &[(u64, u64)],
+    ) -> u64 {
+        manifest
+            .iter()
+            .filter(|(digest, _)| !self.sites[site].contains(digest))
+            .map(|(_, length)| *length)
+            .sum()
+    }
+
+    /// Price moving `manifest`'s missing chunks to `site`: each missing
+    /// chunk comes from the peer with the cheapest per-byte link (ties
+    /// break on latency, then site index — deterministic), or the
+    /// origin registry when no peer holds it. Sources stream in
+    /// parallel, so the plan's `secs` is the slowest source's time.
+    pub fn plan(
+        &self,
+        site: usize,
+        manifest: &[(u64, u64)],
+        names: &[String],
+        wan: &WanModel,
+    ) -> ReplicationPlan {
+        let mut per_source: BTreeMap<usize, u64> = BTreeMap::new();
+        let mut plan = ReplicationPlan::default();
+        for (digest, length) in manifest {
+            if self.sites[site].contains(digest) {
+                continue;
+            }
+            plan.chunks += 1;
+            let holder = self.cheapest_holder(site, *digest, names, wan);
+            match holder {
+                Some(source) => {
+                    plan.peer_bytes += length;
+                    *per_source.entry(source).or_insert(0) += length;
+                }
+                None => plan.origin_bytes += length,
+            }
+        }
+        let mut secs = wan.origin().transfer_secs(plan.origin_bytes);
+        for (&source, &bytes) in &per_source {
+            let link = wan.link(&names[site], &names[source]);
+            let t = link.transfer_secs(bytes);
+            if t > secs {
+                secs = t;
+            }
+        }
+        plan.secs = secs;
+        plan.sources = per_source.into_iter().collect();
+        plan
+    }
+
+    /// Record that `site` now holds every chunk of `manifest`.
+    pub fn commit(&mut self, site: usize, manifest: &[(u64, u64)]) {
+        for (digest, _) in manifest {
+            self.sites[site].insert(*digest);
+        }
+    }
+
+    /// Distinct chunks the site currently holds.
+    pub fn held_chunks(&self, site: usize) -> usize {
+        self.sites[site].len()
+    }
+
+    fn cheapest_holder(
+        &self,
+        dest: usize,
+        digest: u64,
+        names: &[String],
+        wan: &WanModel,
+    ) -> Option<usize> {
+        let mut best: Option<(f64, f64, usize)> = None;
+        for (idx, held) in self.sites.iter().enumerate() {
+            if idx == dest || !held.contains(&digest) {
+                continue;
+            }
+            let link = wan.link(&names[dest], &names[idx]);
+            // cheaper per byte first, then lower latency, then index
+            let key = (-link.bytes_per_sec, link.latency_secs, idx);
+            let better = match &best {
+                None => true,
+                Some((bw, lat, i)) => {
+                    match key.0.total_cmp(bw).then(key.1.total_cmp(lat)) {
+                        std::cmp::Ordering::Less => true,
+                        std::cmp::Ordering::Greater => false,
+                        std::cmp::Ordering::Equal => idx < *i,
+                    }
+                }
+            };
+            if better {
+                best = Some(key);
+            }
+        }
+        best.map(|(_, _, idx)| idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::registry::Registry;
+
+    fn chunker() -> Chunker {
+        Chunker::new(4 << 20, 0xC0FFEE)
+    }
+
+    fn image(reference: &str) -> Image {
+        Registry::dockerhub()
+            .lookup(reference)
+            .expect("catalog image")
+            .clone()
+    }
+
+    #[test]
+    fn first_copy_comes_from_origin_then_peers_serve() {
+        let names = vec!["a".to_string(), "b".to_string()];
+        let wan = WanModel::new();
+        let mut index = ReplicaIndex::new(2, chunker());
+        let manifest = index.manifest(&image("ubuntu:xenial"));
+        assert!(!manifest.is_empty());
+
+        let cold = index.plan(0, &manifest, &names, &wan);
+        assert_eq!(cold.peer_bytes, 0);
+        assert!(cold.origin_bytes > 0);
+        index.commit(0, &manifest);
+
+        // same image to the second site: all bytes now come from site 0
+        let warm = index.plan(1, &manifest, &names, &wan);
+        assert_eq!(warm.origin_bytes, 0);
+        assert_eq!(warm.peer_bytes, cold.origin_bytes);
+        assert_eq!(warm.sources, vec![(0, warm.peer_bytes)]);
+        // the peer link is far faster than the origin uplink
+        assert!(warm.secs < cold.secs);
+
+        // and once committed, nothing is missing
+        index.commit(1, &manifest);
+        assert_eq!(index.missing_bytes(1, &manifest), 0);
+        assert_eq!(
+            index.plan(1, &manifest, &names, &wan),
+            ReplicationPlan::default()
+        );
+    }
+
+    #[test]
+    fn shared_layers_dedup_across_images() {
+        let names = vec!["a".to_string(), "b".to_string()];
+        let wan = WanModel::new();
+        let mut index = ReplicaIndex::new(2, chunker());
+        // both images are built on the same Ubuntu xenial base files
+        let m_a = index.manifest(&image("ubuntu:xenial"));
+        let m_b = index.manifest(&image("nvidia/cuda-image:8.0"));
+        index.commit(0, &m_a);
+        index.commit(1, &m_a);
+        let full: u64 = m_b.iter().map(|(_, l)| l).sum();
+        let plan = index.plan(1, &m_b, &names, &wan);
+        assert!(
+            plan.total_bytes() < full,
+            "shared chunks should not move again ({} vs {})",
+            plan.total_bytes(),
+            full
+        );
+    }
+}

@@ -1,0 +1,865 @@
+//! Multi-site federation (DESIGN.md S27): one clock, many sites.
+//!
+//! One [`Site`] is one supercomputer; a research community's traffic
+//! spans a *fleet* of heterogeneous centers. The [`Federation`] facade
+//! composes N member sites — each with its own profile, partitions,
+//! fabric, and scheduler — behind four cooperating mechanisms, all
+//! replayed on one shared virtual clock:
+//!
+//! * **Cross-site registry replication** ([`ReplicaIndex`]): a
+//!   federation-level CAS index of which site holds which chunks,
+//!   priced over the [`WanModel`] with chunk-level dedup reusing the
+//!   S25 CDC machinery — a file shared between images crosses the WAN
+//!   once, and peers serve chunks ~15x faster than the origin
+//!   registry.
+//! * **Capability-aware routing** ([`RoutingPolicy`]): a job's
+//!   extension requirements (GPU, MPI ABI, net transport — derived
+//!   from its [`crate::launch::JobSpec`]) are matched against each
+//!   site's advertised capability vectors; jobs no site can satisfy
+//!   are rejected with a per-site reason instead of failing late.
+//! * **Burst overflow**: when the routed site's queue-wait estimate
+//!   crosses the threshold, eligible jobs spill to a compatible site
+//!   whose estimated wait *plus replication time* beats staying —
+//!   the replication cost is paid before the job may start and shows
+//!   up as a `wan` span in the shared trace.
+//! * **Cross-site accounting** ([`FederationReport`]): per-tenant
+//!   wait/stretch across sites plus the federation-specific counters
+//!   (overflow rate, replication bytes, WAN transfer time, routing
+//!   rejections), exported as `BENCH_federation.json` by
+//!   `benches/federation_burst.rs`.
+//!
+//! The storm pipeline is two-phase on the same timeline: a
+//! [`SimKernel`] first replays every arrival — routing it, pricing
+//! replication, and scheduling its *prepared* instant — then each
+//! member site replays its share of the stream (arrivals stamped at
+//! the prepared instant) through the ordinary
+//! [`Site::run_storm`] scheduler. One shared [`Telemetry`] recorder
+//! spans all of it, so the Chrome trace interleaves every site's
+//! pull/stage/job spans with the federation's WAN lane.
+//!
+//! ```
+//! use shifter_rs::federation::{Federation, FederationStorm};
+//! use shifter_rs::{SiteBuilder, SystemProfile};
+//!
+//! let mut fed = Federation::builder()
+//!     .site(
+//!         "daint",
+//!         SiteBuilder::new()
+//!             .profile(SystemProfile::piz_daint())
+//!             .nodes(8),
+//!     )
+//!     .site(
+//!         "cluster",
+//!         SiteBuilder::new()
+//!             .profile(SystemProfile::linux_cluster())
+//!             .nodes(8),
+//!     )
+//!     .build()
+//!     .unwrap();
+//! let report = fed
+//!     .run_storm(&FederationStorm::new().tenants(2).jobs(8))
+//!     .unwrap();
+//! assert_eq!(report.records.len() + report.rejections.len(), 8);
+//! ```
+
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::metrics::Stats;
+use crate::sim::{SimKernel, SimTime};
+use crate::site::{Site, StormSpec};
+use crate::telemetry::{SpanDraft, Telemetry};
+use crate::tenancy::{TenantJob, TenantStats, TrafficModel};
+
+pub mod error;
+pub mod index;
+pub mod report;
+pub mod routing;
+pub mod wan;
+
+mod builder;
+
+pub use builder::FederationBuilder;
+pub use error::FederationError;
+pub use index::{ReplicaIndex, ReplicationPlan};
+pub use report::{
+    FedJobRecord, FederationReport, RoutingRejection, SiteSummary,
+};
+pub use routing::{
+    routing_policy_by_name, CapabilityFirst, DataLocality, LeastLoaded,
+    PinnedHome, RandomPlacement, RoutingPolicy, SiteView,
+};
+pub use wan::{WanLink, WanModel};
+
+/// Target chunk size of the federation replica index (4 MiB — the
+/// same granularity the S25 CAS defaults to for cross-image dedup).
+pub const FEDERATION_CHUNK_TARGET_BYTES: u64 = 4 << 20;
+
+/// One member site plus the routing metadata the federation derives
+/// from it once at build time.
+pub(crate) struct SiteEntry {
+    name: String,
+    site: Site,
+    /// Distinct extensions some partition advertises as available.
+    available: BTreeSet<&'static str>,
+    total_nodes: u32,
+}
+
+impl SiteEntry {
+    pub(crate) fn new(name: String, site: Site) -> SiteEntry {
+        let mut available = BTreeSet::new();
+        for (_, caps) in site.capabilities() {
+            for cap in caps {
+                if cap.available {
+                    available.insert(cap.extension);
+                }
+            }
+        }
+        let total_nodes = site.cluster().total_nodes();
+        SiteEntry {
+            name,
+            site,
+            available,
+            total_nodes,
+        }
+    }
+}
+
+/// Per-site commitment timeline the router estimates queue waits
+/// from: `(release time, width)` pairs of every routed job, walked in
+/// release order until enough nodes free up. Deliberately coarser
+/// than the member sites' real schedulers (no backfill, no launch
+/// overhead) — it is an *estimator*, and both overflow baselines in
+/// `federation_burst` use the same one.
+struct SiteLoad {
+    capacity: u32,
+    commitments: Vec<(f64, u32)>,
+}
+
+impl SiteLoad {
+    fn new(capacity: u32) -> SiteLoad {
+        SiteLoad {
+            capacity,
+            commitments: Vec::new(),
+        }
+    }
+
+    /// Estimated queue wait for a `width`-node job arriving at `now`.
+    fn est_wait(&self, now: f64, width: u32) -> f64 {
+        let need = width.min(self.capacity) as u64;
+        let cap = self.capacity as u64;
+        let mut active: Vec<(f64, u32)> = self
+            .commitments
+            .iter()
+            .filter(|(end, _)| *end > now)
+            .copied()
+            .collect();
+        active.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut used: u64 =
+            active.iter().map(|(_, w)| *w as u64).sum::<u64>().min(cap);
+        if cap - used >= need {
+            return 0.0;
+        }
+        for (end, w) in &active {
+            used = used.saturating_sub(*w as u64);
+            if cap - used >= need {
+                return end - now;
+            }
+        }
+        0.0
+    }
+
+    fn commit(&mut self, end: f64, width: u32) {
+        self.commitments.push((end, width));
+    }
+
+    fn prune(&mut self, now: f64) {
+        self.commitments.retain(|(end, _)| *end > now);
+    }
+}
+
+/// Events of the federation-level arrival replay.
+enum FedEvent {
+    /// Stream job `i` arrives at the federation front door.
+    Arrival(usize),
+    /// Stream job `i`'s image replication to `site` finished; the job
+    /// enters that site's queue now.
+    Prepared { job: usize, site: usize },
+}
+
+/// Where one job ended up, recorded during the arrival replay.
+#[derive(Clone)]
+struct Route {
+    site: usize,
+    overflowed: bool,
+    prepared_secs: f64,
+}
+
+/// Describes a federation storm: either synthesized traffic (the
+/// [`TrafficModel`] defaults, generated against the *narrowest*
+/// member site so every job fits everywhere capability allows) or an
+/// explicit replayed stream, plus an optional Chrome-trace export
+/// path. The mirror of [`StormSpec`] at fleet scope.
+#[derive(Debug, Clone, Default)]
+pub struct FederationStorm {
+    tenants: Option<u32>,
+    jobs: Option<u32>,
+    arrival_rate_per_min: Option<f64>,
+    duration_secs: Option<f64>,
+    mean_runtime_secs: Option<f64>,
+    max_width: Option<u32>,
+    seed: Option<u64>,
+    traffic: Option<TrafficModel>,
+    stream: Option<Vec<TenantJob>>,
+    trace_path: Option<PathBuf>,
+}
+
+impl FederationStorm {
+    /// A storm with the stock [`TrafficModel`] defaults (8 tenants,
+    /// 64 jobs, 2.4 arrivals/min) and the federation's seed.
+    pub fn new() -> FederationStorm {
+        FederationStorm::default()
+    }
+
+    /// Number of simulated tenants.
+    pub fn tenants(mut self, tenants: u32) -> FederationStorm {
+        self.tenants = Some(tenants);
+        self
+    }
+
+    /// Number of jobs to synthesize.
+    pub fn jobs(mut self, jobs: u32) -> FederationStorm {
+        self.jobs = Some(jobs);
+        self
+    }
+
+    /// Aggregate Poisson arrival rate, jobs per minute.
+    pub fn arrival_rate_per_min(mut self, rate: f64) -> FederationStorm {
+        self.arrival_rate_per_min = Some(rate);
+        self
+    }
+
+    /// Stop generating arrivals past this horizon (seconds).
+    pub fn duration_secs(mut self, secs: f64) -> FederationStorm {
+        self.duration_secs = Some(secs);
+        self
+    }
+
+    /// Mean application runtime, seconds.
+    pub fn mean_runtime_secs(mut self, secs: f64) -> FederationStorm {
+        self.mean_runtime_secs = Some(secs);
+        self
+    }
+
+    /// Cap on synthesized job widths (additionally clamped to the
+    /// narrowest member site).
+    pub fn max_width(mut self, width: u32) -> FederationStorm {
+        self.max_width = Some(width);
+        self
+    }
+
+    /// Traffic seed for this storm (default: the federation's seed).
+    pub fn seed(mut self, seed: u64) -> FederationStorm {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Replace the whole synthesized [`TrafficModel`] (the scalar
+    /// knobs above are ignored when set).
+    pub fn traffic(mut self, traffic: TrafficModel) -> FederationStorm {
+        self.traffic = Some(traffic);
+        self
+    }
+
+    /// Replay an explicit job stream instead of synthesizing one —
+    /// the form the benches use to route the *same* stream under two
+    /// federation configurations.
+    pub fn job_stream(mut self, jobs: Vec<TenantJob>) -> FederationStorm {
+        self.stream = Some(jobs);
+        self
+    }
+
+    /// Write the shared recorder's Chrome trace (every site's spans
+    /// plus the WAN lane) to `path` after the storm.
+    pub fn trace_path(
+        mut self,
+        path: impl AsRef<Path>,
+    ) -> FederationStorm {
+        self.trace_path = Some(path.as_ref().to_path_buf());
+        self
+    }
+}
+
+/// A fleet of heterogeneous [`Site`]s behind one storm entry point.
+/// Built by [`FederationBuilder`]; see the [module docs](self) for
+/// the architecture.
+pub struct Federation {
+    pub(crate) sites: Vec<SiteEntry>,
+    pub(crate) wan: WanModel,
+    pub(crate) routing: Box<dyn RoutingPolicy>,
+    pub(crate) overflow_threshold: Option<f64>,
+    pub(crate) index: ReplicaIndex,
+    pub(crate) telemetry: Arc<Telemetry>,
+    pub(crate) seed: u64,
+}
+
+impl Federation {
+    /// Start declaring a federation.
+    pub fn builder() -> FederationBuilder {
+        FederationBuilder::new()
+    }
+
+    /// Member site names, in federation order.
+    pub fn site_names(&self) -> Vec<&str> {
+        self.sites.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// Borrow a member site by name.
+    pub fn site(&self, name: &str) -> Option<&Site> {
+        self.sites
+            .iter()
+            .find(|e| e.name == name)
+            .map(|e| &e.site)
+    }
+
+    /// The WAN topology.
+    pub fn wan(&self) -> &WanModel {
+        &self.wan
+    }
+
+    /// The cross-site replica index (which site holds which chunks).
+    pub fn index(&self) -> &ReplicaIndex {
+        &self.index
+    }
+
+    /// The shared telemetry recorder spanning every member site.
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.telemetry
+    }
+
+    /// The active routing policy's name.
+    pub fn routing_policy(&self) -> &'static str {
+        self.routing.name()
+    }
+
+    /// Sum of member-site node widths.
+    pub fn total_nodes(&self) -> u32 {
+        self.sites.iter().map(|e| e.total_nodes).sum()
+    }
+
+    /// Run a federation storm: replay every arrival on the shared
+    /// virtual clock (route → maybe overflow → replicate → enqueue at
+    /// the member site), then drain each member site's share of the
+    /// stream through its own scheduler, and join the two timelines
+    /// into one [`FederationReport`].
+    ///
+    /// The replica index persists across storms — a second storm sees
+    /// warm replicas, exactly like a second pull sees a warm CAS.
+    pub fn run_storm(
+        &mut self,
+        spec: &FederationStorm,
+    ) -> Result<FederationReport, FederationError> {
+        let jobs = self.resolve_stream(spec)?;
+        let n = self.sites.len();
+
+        // -- phase 1: arrival replay on the shared kernel -----------------
+        let mut kernel: SimKernel<FedEvent> = SimKernel::new();
+        for (i, job) in jobs.iter().enumerate() {
+            kernel.schedule_at(
+                SimTime::from_secs(job.arrival_secs),
+                FedEvent::Arrival(i),
+            );
+        }
+
+        let mut routes: Vec<Option<Route>> = vec![None; jobs.len()];
+        let mut rejections: Vec<RoutingRejection> = Vec::new();
+        let mut streams: Vec<Vec<TenantJob>> = vec![Vec::new(); n];
+        let mut loads: Vec<SiteLoad> = self
+            .sites
+            .iter()
+            .map(|e| SiteLoad::new(e.total_nodes))
+            .collect();
+        // (site, image) -> completion time of an in-flight replication,
+        // so concurrent arrivals of one image coalesce onto one
+        // transfer instead of double-paying the WAN
+        let mut inflight: BTreeMap<(usize, String), f64> = BTreeMap::new();
+        let mut overflows = 0usize;
+        let mut peer_bytes = 0u64;
+        let mut origin_bytes = 0u64;
+        let mut replications = 0usize;
+        let mut wan_transfer_secs = 0.0f64;
+
+        while let Some((t, event)) = kernel.pop() {
+            let now = t.as_secs_f64();
+            match event {
+                FedEvent::Arrival(i) => {
+                    let job = &jobs[i];
+                    for load in &mut loads {
+                        load.prune(now);
+                    }
+                    let (views, reasons) = self.eligible_views(
+                        job, now, &loads,
+                    );
+                    if views.is_empty() {
+                        self.telemetry.count("federation.rejections", 1);
+                        rejections.push(RoutingRejection {
+                            id: job.id,
+                            tenant: job.tenant.clone(),
+                            image: job.spec.image.clone(),
+                            reason: format!(
+                                "no eligible site: {}",
+                                reasons.join("; ")
+                            ),
+                        });
+                        continue;
+                    }
+                    let pick = self.routing.choose(job, &views);
+                    let chosen = views[pick].clone();
+                    let mut dest = chosen.site;
+                    let mut overflowed = false;
+                    if let Some(threshold) = self.overflow_threshold {
+                        if chosen.est_wait_secs > threshold
+                            && views.len() > 1
+                        {
+                            let alt = Self::best_alternative(
+                                &views, chosen.site,
+                            );
+                            if let Some(alt) = alt {
+                                let spill_cost =
+                                    alt.est_wait_secs + alt.wan_secs;
+                                if spill_cost < chosen.est_wait_secs {
+                                    dest = alt.site;
+                                    overflowed = true;
+                                }
+                            }
+                        }
+                    }
+                    if overflowed {
+                        overflows += 1;
+                        self.telemetry.count("federation.overflows", 1);
+                    }
+                    self.telemetry.count("federation.routed", 1);
+
+                    // replicate (or coalesce onto an in-flight copy)
+                    let key = (dest, job.spec.image.clone());
+                    let ready = match inflight.get(&key) {
+                        Some(&r) if r > now => r,
+                        _ => {
+                            let (secs, peer, origin) =
+                                self.replicate(dest, &job.spec.image, now);
+                            if peer + origin > 0 {
+                                replications += 1;
+                                peer_bytes += peer;
+                                origin_bytes += origin;
+                                wan_transfer_secs += secs;
+                            }
+                            let ready = now + secs;
+                            inflight.insert(key, ready);
+                            ready
+                        }
+                    };
+
+                    // commit the estimator: the job should occupy
+                    // [ready + est_wait, + runtime) at the destination
+                    let est_start = ready
+                        + loads[dest].est_wait(ready, job.spec.nodes);
+                    loads[dest].commit(
+                        est_start + job.runtime_secs,
+                        job.spec.nodes,
+                    );
+                    routes[i] = Some(Route {
+                        site: dest,
+                        overflowed,
+                        prepared_secs: ready,
+                    });
+                    kernel.schedule_at(
+                        SimTime::from_secs(ready),
+                        FedEvent::Prepared { job: i, site: dest },
+                    );
+                }
+                FedEvent::Prepared { job, site } => {
+                    let mut queued = jobs[job].clone();
+                    queued.arrival_secs = now;
+                    streams[site].push(queued);
+                }
+            }
+        }
+
+        // -- phase 2: member-site storms on the routed streams ------------
+        let mut site_reports = Vec::with_capacity(n);
+        for (idx, stream) in streams.iter().enumerate() {
+            if stream.is_empty() {
+                site_reports.push(None);
+                continue;
+            }
+            let entry = &mut self.sites[idx];
+            let report = entry
+                .site
+                .run_storm(&StormSpec::new().job_stream(stream.clone()))
+                .map_err(|source| FederationError::Site {
+                    name: entry.name.clone(),
+                    source,
+                })?;
+            site_reports.push(Some(report));
+        }
+
+        // -- join the two timelines into the federation report ------------
+        let report = self.assemble(
+            &jobs,
+            routes,
+            rejections,
+            &streams,
+            &site_reports,
+            overflows,
+            peer_bytes,
+            origin_bytes,
+            replications,
+            wan_transfer_secs,
+        );
+        if let Some(path) = &spec.trace_path {
+            let trace = self.telemetry.chrome_trace_jsonl();
+            std::fs::write(path, trace).map_err(|source| {
+                FederationError::Trace {
+                    path: path.display().to_string(),
+                    source,
+                }
+            })?;
+        }
+        Ok(report)
+    }
+
+    // -- internals --------------------------------------------------------
+
+    /// Synthesize or validate the storm's job stream.
+    fn resolve_stream(
+        &self,
+        spec: &FederationStorm,
+    ) -> Result<Vec<TenantJob>, FederationError> {
+        let widest = self
+            .sites
+            .iter()
+            .map(|e| e.total_nodes)
+            .max()
+            .unwrap_or(0);
+        if let Some(stream) = &spec.stream {
+            for job in stream {
+                if job.spec.nodes > widest {
+                    return Err(FederationError::JobTooWide {
+                        job: job.id,
+                        width: job.spec.nodes,
+                        widest,
+                    });
+                }
+            }
+            return Ok(stream.clone());
+        }
+        let narrowest = match self.sites.iter().min_by_key(|e| e.total_nodes)
+        {
+            Some(entry) => &entry.site,
+            None => unreachable!("builder rejects empty federations"),
+        };
+        let traffic = match &spec.traffic {
+            Some(traffic) => traffic.clone(),
+            None => {
+                let defaults = TrafficModel::default();
+                TrafficModel {
+                    tenants: spec.tenants.unwrap_or(defaults.tenants),
+                    jobs: spec.jobs.unwrap_or(defaults.jobs),
+                    arrival_rate_per_min: spec
+                        .arrival_rate_per_min
+                        .unwrap_or(defaults.arrival_rate_per_min),
+                    duration_secs: spec
+                        .duration_secs
+                        .unwrap_or(defaults.duration_secs),
+                    mean_runtime_secs: spec
+                        .mean_runtime_secs
+                        .unwrap_or(defaults.mean_runtime_secs),
+                    max_width: spec
+                        .max_width
+                        .unwrap_or(defaults.max_width),
+                    seed: spec.seed.unwrap_or(self.seed),
+                    ..defaults
+                }
+            }
+        };
+        // generate against the narrowest member's cluster: widths are
+        // clamped so every synthesized job fits any capability-
+        // compatible site
+        Ok(traffic.generate(narrowest.cluster()))
+    }
+
+    /// Extensions the job's spec requires (the trigger set of the S22
+    /// registry: GRES GPUs, the `--mpi` swap, `SHIFTER_NET=host`).
+    fn requirements(job: &TenantJob) -> Vec<&'static str> {
+        let mut reqs = Vec::new();
+        if job.spec.gpus_per_node > 0 {
+            reqs.push("gpu");
+        }
+        if job.spec.mpi {
+            reqs.push("mpi");
+        }
+        let net = job.spec.env.get("SHIFTER_NET").map(String::as_str);
+        if matches!(net, Some("host") | Some("native") | Some("1")) {
+            reqs.push("net");
+        }
+        reqs
+    }
+
+    /// Build a [`SiteView`] per eligible site; for ineligible sites
+    /// collect a human-readable reason instead.
+    fn eligible_views(
+        &mut self,
+        job: &TenantJob,
+        now: f64,
+        loads: &[SiteLoad],
+    ) -> (Vec<SiteView>, Vec<String>) {
+        let reqs = Self::requirements(job);
+        let names: Vec<String> =
+            self.sites.iter().map(|e| e.name.clone()).collect();
+        let manifest = match self.lookup_image(&job.spec.image) {
+            Some(image) => self.index.manifest(&image),
+            None => Vec::new(),
+        };
+        let mut views = Vec::new();
+        let mut reasons = Vec::new();
+        for (idx, entry) in self.sites.iter().enumerate() {
+            if job.spec.nodes > entry.total_nodes {
+                reasons.push(format!(
+                    "{}: width {} > {} nodes",
+                    entry.name, job.spec.nodes, entry.total_nodes
+                ));
+                continue;
+            }
+            let missing: Vec<&'static str> = reqs
+                .iter()
+                .copied()
+                .filter(|r| !entry.available.contains(r))
+                .collect();
+            if !missing.is_empty() {
+                reasons.push(format!(
+                    "{}: no partition advertises {}",
+                    entry.name,
+                    missing.join("+")
+                ));
+                continue;
+            }
+            let plan =
+                self.index.plan(idx, &manifest, &names, &self.wan);
+            views.push(SiteView {
+                site: idx,
+                name: entry.name.clone(),
+                total_nodes: entry.total_nodes,
+                est_wait_secs: loads[idx].est_wait(now, job.spec.nodes),
+                missing_bytes: plan.total_bytes(),
+                wan_secs: plan.secs,
+                capability_score: entry.available.len() as u32,
+            });
+        }
+        (views, reasons)
+    }
+
+    /// The overflow fallback: the eligible site (≠ `exclude`) with the
+    /// lowest estimated wait plus replication time.
+    fn best_alternative(
+        views: &[SiteView],
+        exclude: usize,
+    ) -> Option<&SiteView> {
+        views
+            .iter()
+            .filter(|v| v.site != exclude)
+            .min_by(|a, b| {
+                (a.est_wait_secs + a.wan_secs)
+                    .total_cmp(&(b.est_wait_secs + b.wan_secs))
+                    .then(a.site.cmp(&b.site))
+            })
+    }
+
+    /// Move the image's missing chunks to `site`, charge the WAN, emit
+    /// the telemetry span, and commit the index. Returns
+    /// `(secs, peer_bytes, origin_bytes)` — all zero when the site
+    /// already holds a full replica.
+    fn replicate(
+        &mut self,
+        site: usize,
+        reference: &str,
+        now: f64,
+    ) -> (f64, u64, u64) {
+        let Some(image) = self.lookup_image(reference) else {
+            // unknown images fail at the member site with the site's
+            // own registry error; nothing to replicate
+            return (0.0, 0, 0);
+        };
+        let names: Vec<String> =
+            self.sites.iter().map(|e| e.name.clone()).collect();
+        let manifest = self.index.manifest(&image);
+        let plan = self.index.plan(site, &manifest, &names, &self.wan);
+        if plan.total_bytes() == 0 {
+            return (0.0, 0, 0);
+        }
+        self.index.commit(site, &manifest);
+        self.telemetry.span(SpanDraft {
+            parent: None,
+            category: "wan",
+            name: &format!(
+                "replicate {} -> {}",
+                reference, self.sites[site].name
+            ),
+            track: "wan",
+            start: SimTime::from_secs(now),
+            dur_secs: plan.secs,
+        });
+        self.telemetry.count("federation.replications", 1);
+        self.telemetry.count("federation.peer_bytes", plan.peer_bytes);
+        self.telemetry
+            .count("federation.origin_bytes", plan.origin_bytes);
+        self.telemetry.observe("federation.wan_secs", plan.secs);
+        (plan.secs, plan.peer_bytes, plan.origin_bytes)
+    }
+
+    fn lookup_image(&self, reference: &str) -> Option<crate::image::Image> {
+        // the origin catalog is shared: any member's registry view of
+        // the reference works, and the first site always exists
+        self.sites
+            .first()
+            .and_then(|e| e.site.registry().lookup(reference).ok())
+            .cloned()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn assemble(
+        &self,
+        jobs: &[TenantJob],
+        routes: Vec<Option<Route>>,
+        rejections: Vec<RoutingRejection>,
+        streams: &[Vec<TenantJob>],
+        site_reports: &[Option<crate::tenancy::TenancyReport>],
+        overflows: usize,
+        peer_bytes: u64,
+        origin_bytes: u64,
+        replications: usize,
+        wan_transfer_secs: f64,
+    ) -> FederationReport {
+        // site-side records by stream id
+        let mut by_id: BTreeMap<u32, (usize, &crate::tenancy::JobRecord)> =
+            BTreeMap::new();
+        for (idx, report) in site_reports.iter().enumerate() {
+            if let Some(report) = report {
+                for record in &report.records {
+                    by_id.insert(record.id, (idx, record));
+                }
+            }
+        }
+
+        let mut records = Vec::new();
+        for (i, job) in jobs.iter().enumerate() {
+            let Some(route) = &routes[i] else { continue };
+            let Some((site_idx, site_record)) = by_id.get(&job.id) else {
+                continue;
+            };
+            debug_assert_eq!(*site_idx, route.site);
+            let wan_wait = route.prepared_secs - job.arrival_secs;
+            records.push(FedJobRecord {
+                id: job.id,
+                tenant: job.tenant.clone(),
+                tenant_idx: job.tenant_idx,
+                image: job.spec.image.clone(),
+                width: job.spec.nodes,
+                arrival_secs: job.arrival_secs,
+                site: self.sites[route.site].name.clone(),
+                overflowed: route.overflowed,
+                wan_wait_secs: wan_wait,
+                site_wait_secs: site_record.wait_secs,
+                total_wait_secs: wan_wait + site_record.wait_secs,
+                service_secs: site_record.service_secs,
+                error: site_record.error.clone(),
+            });
+        }
+
+        // per-site rollups
+        let mut sites = Vec::new();
+        for (idx, entry) in self.sites.iter().enumerate() {
+            let overflow_jobs = records
+                .iter()
+                .filter(|r| r.overflowed && r.site == entry.name)
+                .count();
+            let (completed, makespan, utilization, wait) =
+                match &site_reports[idx] {
+                    Some(report) => (
+                        report.completed(),
+                        report.makespan_secs,
+                        report.utilization(),
+                        report.wait_stats(),
+                    ),
+                    None => (0, 0.0, 0.0, None),
+                };
+            sites.push(SiteSummary {
+                name: entry.name.clone(),
+                total_nodes: entry.total_nodes,
+                jobs: streams[idx].len(),
+                overflow_jobs,
+                completed,
+                makespan_secs: makespan,
+                utilization,
+                wait,
+            });
+        }
+
+        // per-tenant aggregates over completed jobs, end-to-end waits
+        let mut by_tenant: BTreeMap<String, Vec<&FedJobRecord>> =
+            BTreeMap::new();
+        for record in records.iter().filter(|r| r.ok()) {
+            by_tenant
+                .entry(record.tenant.clone())
+                .or_default()
+                .push(record);
+        }
+        let tenants = by_tenant
+            .into_iter()
+            .map(|(tenant, recs)| {
+                let waits: Vec<f64> =
+                    recs.iter().map(|r| r.total_wait_secs).collect();
+                let stretches: Vec<f64> = recs
+                    .iter()
+                    .filter_map(|r| r.stretch())
+                    .collect();
+                TenantStats {
+                    tenant,
+                    jobs: recs.len(),
+                    node_secs: recs
+                        .iter()
+                        .map(|r| r.width as f64 * r.service_secs)
+                        .sum(),
+                    wait: Stats::from_samples(&waits),
+                    stretch: if stretches.is_empty() {
+                        Stats::from_samples(&[0.0])
+                    } else {
+                        Stats::from_samples(&stretches)
+                    },
+                }
+            })
+            .collect();
+
+        let makespan_secs = site_reports
+            .iter()
+            .flatten()
+            .map(|r| r.makespan_secs)
+            .fold(0.0f64, f64::max);
+
+        FederationReport {
+            routing: self.routing.name().to_string(),
+            overflow_threshold_secs: self.overflow_threshold,
+            records,
+            rejections,
+            sites,
+            tenants,
+            overflows,
+            peer_bytes,
+            origin_bytes,
+            replications,
+            wan_transfer_secs,
+            makespan_secs,
+        }
+    }
+}

@@ -1,0 +1,308 @@
+//! Cross-site tenancy accounting: the [`FederationReport`] a
+//! federation storm produces, exported as `BENCH_federation.json`.
+
+use crate::metrics::{Stats, Table};
+use crate::tenancy::TenantStats;
+use crate::util::json::Json;
+
+/// One job's cross-site outcome: where it was routed, what the WAN
+/// charged before it could start, and how the member site's scheduler
+/// treated it.
+#[derive(Debug, Clone)]
+pub struct FedJobRecord {
+    /// Stream id, unique across the federation storm.
+    pub id: u32,
+    /// Owning tenant name.
+    pub tenant: String,
+    /// Owning tenant index.
+    pub tenant_idx: u32,
+    /// Image reference the job launched.
+    pub image: String,
+    /// Node width.
+    pub width: u32,
+    /// Federation arrival time (storm seconds).
+    pub arrival_secs: f64,
+    /// Name of the site the job ran on.
+    pub site: String,
+    /// The job left the site the routing policy first chose because
+    /// that site's queue-wait estimate crossed the burst threshold.
+    pub overflowed: bool,
+    /// Replication delay paid before the job reached the site's queue
+    /// (0.0 when the site already held a full replica).
+    pub wan_wait_secs: f64,
+    /// Queue wait inside the member site.
+    pub site_wait_secs: f64,
+    /// End-to-end wait: `wan_wait_secs + site_wait_secs`.
+    pub total_wait_secs: f64,
+    /// Occupancy duration on the site (0.0 when the job failed).
+    pub service_secs: f64,
+    /// Whole-job failure reported by the member site.
+    pub error: Option<String>,
+}
+
+impl FedJobRecord {
+    /// True when the job launched.
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+    }
+
+    /// Cross-site slowdown `(total_wait + service) / service`; `None`
+    /// for failed jobs.
+    pub fn stretch(&self) -> Option<f64> {
+        (self.ok() && self.service_secs > 0.0).then(|| {
+            (self.total_wait_secs + self.service_secs) / self.service_secs
+        })
+    }
+}
+
+/// A job the router could not place anywhere, and why.
+#[derive(Debug, Clone)]
+pub struct RoutingRejection {
+    /// Stream id of the rejected job.
+    pub id: u32,
+    /// Owning tenant name.
+    pub tenant: String,
+    /// Image reference the job asked for.
+    pub image: String,
+    /// Per-site explanation of why no site qualified.
+    pub reason: String,
+}
+
+/// Per-member-site rollup inside a [`FederationReport`].
+#[derive(Debug, Clone)]
+pub struct SiteSummary {
+    /// The site's declared name.
+    pub name: String,
+    /// Total node width.
+    pub total_nodes: u32,
+    /// Jobs routed to the site (including overflow arrivals).
+    pub jobs: usize,
+    /// Jobs that arrived via burst overflow.
+    pub overflow_jobs: usize,
+    /// Jobs the site completed.
+    pub completed: usize,
+    /// The site storm's makespan, seconds.
+    pub makespan_secs: f64,
+    /// The site storm's node utilization in `[0, 1]`.
+    pub utilization: f64,
+    /// Site-local queue-wait distribution (None when no job ran).
+    pub wait: Option<Stats>,
+}
+
+/// What a federation storm produces: per-job cross-site records,
+/// per-site and per-tenant rollups, and the federation-specific
+/// counters (overflow rate, WAN replication traffic, routing
+/// rejections).
+#[derive(Debug, Clone)]
+pub struct FederationReport {
+    /// Routing policy that placed the stream.
+    pub routing: String,
+    /// Burst-overflow threshold, seconds (`None` = overflow disabled).
+    pub overflow_threshold_secs: Option<f64>,
+    /// Per-job outcomes, in submission order.
+    pub records: Vec<FedJobRecord>,
+    /// Jobs no site could accept, with reasons.
+    pub rejections: Vec<RoutingRejection>,
+    /// Per-site rollups, in federation order.
+    pub sites: Vec<SiteSummary>,
+    /// Per-tenant aggregates over completed jobs (wait = end-to-end
+    /// wait including WAN), in tenant-name order.
+    pub tenants: Vec<TenantStats>,
+    /// Jobs that spilled to a non-home site via burst overflow.
+    pub overflows: usize,
+    /// Replication bytes moved over site-pair WAN links.
+    pub peer_bytes: u64,
+    /// Replication bytes pulled from the origin registry.
+    pub origin_bytes: u64,
+    /// Image replications performed (coalesced arrivals share one).
+    pub replications: usize,
+    /// Total WAN transfer time charged across all replications.
+    pub wan_transfer_secs: f64,
+    /// Time from storm start until the last member site drained.
+    pub makespan_secs: f64,
+}
+
+impl FederationReport {
+    /// Fraction of routed jobs that overflowed (0.0 when nothing was
+    /// routed).
+    pub fn overflow_rate(&self) -> f64 {
+        if self.records.is_empty() {
+            0.0
+        } else {
+            self.overflows as f64 / self.records.len() as f64
+        }
+    }
+
+    /// Jobs that completed on their site.
+    pub fn completed(&self) -> usize {
+        self.records.iter().filter(|r| r.ok()).count()
+    }
+
+    /// End-to-end wait distribution over completed jobs (`None` when
+    /// nothing completed).
+    pub fn total_wait_stats(&self) -> Option<Stats> {
+        let waits: Vec<f64> = self
+            .records
+            .iter()
+            .filter(|r| r.ok())
+            .map(|r| r.total_wait_secs)
+            .collect();
+        (!waits.is_empty()).then(|| Stats::from_samples(&waits))
+    }
+
+    /// WAN replication-delay distribution over routed jobs (`None`
+    /// when nothing was routed).
+    pub fn wan_wait_stats(&self) -> Option<Stats> {
+        let waits: Vec<f64> =
+            self.records.iter().map(|r| r.wan_wait_secs).collect();
+        (!waits.is_empty()).then(|| Stats::from_samples(&waits))
+    }
+
+    /// Total replication bytes over any wire.
+    pub fn replication_bytes(&self) -> u64 {
+        self.peer_bytes + self.origin_bytes
+    }
+
+    /// The artifact document (stable key order via the ordered
+    /// [`Json`] writer): federation counters, per-site and per-tenant
+    /// rollups, and aggregate wait distributions — per-job records are
+    /// summarized, not dumped, to keep `BENCH_federation.json` small.
+    pub fn to_json(&self) -> Json {
+        let sites = self
+            .sites
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::str(&s.name)),
+                    ("total_nodes", Json::num(s.total_nodes as f64)),
+                    ("jobs", Json::num(s.jobs as f64)),
+                    ("overflow_jobs", Json::num(s.overflow_jobs as f64)),
+                    ("completed", Json::num(s.completed as f64)),
+                    ("makespan_secs", Json::num(s.makespan_secs)),
+                    ("utilization", Json::num(s.utilization)),
+                    (
+                        "wait",
+                        match &s.wait {
+                            Some(stats) => stats.to_json(),
+                            None => Json::Null,
+                        },
+                    ),
+                ])
+            })
+            .collect();
+        let tenants = self
+            .tenants
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("tenant", Json::str(&t.tenant)),
+                    ("jobs", Json::num(t.jobs as f64)),
+                    ("node_secs", Json::num(t.node_secs)),
+                    ("wait", t.wait.to_json()),
+                    ("stretch", t.stretch.to_json()),
+                ])
+            })
+            .collect();
+        let rejections = self
+            .rejections
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("id", Json::num(r.id as f64)),
+                    ("tenant", Json::str(&r.tenant)),
+                    ("image", Json::str(&r.image)),
+                    ("reason", Json::str(&r.reason)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("routing", Json::str(&self.routing)),
+            (
+                "overflow_threshold_secs",
+                match self.overflow_threshold_secs {
+                    Some(secs) => Json::num(secs),
+                    None => Json::Null,
+                },
+            ),
+            ("jobs", Json::num(self.records.len() as f64)),
+            ("completed", Json::num(self.completed() as f64)),
+            ("overflows", Json::num(self.overflows as f64)),
+            ("overflow_rate", Json::num(self.overflow_rate())),
+            ("rejected", Json::num(self.rejections.len() as f64)),
+            ("peer_bytes", Json::num(self.peer_bytes as f64)),
+            ("origin_bytes", Json::num(self.origin_bytes as f64)),
+            (
+                "replication_bytes",
+                Json::num(self.replication_bytes() as f64),
+            ),
+            ("replications", Json::num(self.replications as f64)),
+            ("wan_transfer_secs", Json::num(self.wan_transfer_secs)),
+            ("makespan_secs", Json::num(self.makespan_secs)),
+            (
+                "total_wait",
+                match self.total_wait_stats() {
+                    Some(stats) => stats.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "wan_wait",
+                match self.wan_wait_stats() {
+                    Some(stats) => stats.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            ("sites", Json::Arr(sites)),
+            ("tenants", Json::Arr(tenants)),
+            ("rejections", Json::Arr(rejections)),
+        ])
+    }
+
+    /// Human-readable rollup: one row per member site plus the
+    /// federation counters.
+    pub fn render(&self) -> String {
+        let mut table = Table::new(
+            &format!(
+                "federation storm — routing {}, {} jobs, {} overflow, \
+                 {} rejected",
+                self.routing,
+                self.records.len(),
+                self.overflows,
+                self.rejections.len()
+            ),
+            &[
+                "site", "nodes", "jobs", "overflow", "completed",
+                "p50 wait", "p99 wait", "util",
+            ],
+        );
+        for s in &self.sites {
+            let (p50, p99) = match &s.wait {
+                Some(w) => {
+                    (format!("{:.1}s", w.p50), format!("{:.1}s", w.p99))
+                }
+                None => ("-".to_string(), "-".to_string()),
+            };
+            table.row(&[
+                s.name.clone(),
+                s.total_nodes.to_string(),
+                s.jobs.to_string(),
+                s.overflow_jobs.to_string(),
+                s.completed.to_string(),
+                p50,
+                p99,
+                format!("{:.0}%", s.utilization * 100.0),
+            ]);
+        }
+        let mut out = table.render();
+        out.push_str(&format!(
+            "replication: {} peer B + {} origin B over {} transfers, \
+             {:.1}s WAN time; makespan {:.0}s\n",
+            self.peer_bytes,
+            self.origin_bytes,
+            self.replications,
+            self.wan_transfer_secs,
+            self.makespan_secs
+        ));
+        out
+    }
+}

@@ -1,0 +1,287 @@
+//! Capability-aware routing: the pluggable [`RoutingPolicy`] trait and
+//! its builtin policies.
+//!
+//! Mirrors the [`crate::tenancy::SchedulingPolicy`] idiom: a policy is
+//! a small strategy object the federation consults per job, builtins
+//! are zero-config, and [`routing_policy_by_name`] maps CLI names to
+//! boxed instances. A policy only ever sees *eligible* sites — the
+//! federation has already removed sites whose capability vectors miss
+//! a requirement or that are narrower than the job — so every policy
+//! reduces to a deterministic tie-broken argmin over [`SiteView`]s.
+
+use crate::tenancy::TenantJob;
+use crate::util::prng::Rng;
+
+/// What the routing policy knows about one eligible site at decision
+/// time. All estimates are computed at the job's federation arrival
+/// instant.
+#[derive(Debug, Clone)]
+pub struct SiteView {
+    /// Federation site index (stable across the storm).
+    pub site: usize,
+    /// The site's declared name.
+    pub name: String,
+    /// Total node width of the site.
+    pub total_nodes: u32,
+    /// Estimated queue wait for this job's width, seconds, from the
+    /// federation's commitment-timeline load estimator.
+    pub est_wait_secs: f64,
+    /// Bytes of the job's image the site is missing (0 = full replica
+    /// already on site).
+    pub missing_bytes: u64,
+    /// Estimated replication time if routed here, seconds (0 when
+    /// nothing is missing).
+    pub wan_secs: f64,
+    /// Distinct host extensions the site advertises as available
+    /// (gpu/mpi/net) — a coarse "how capable" score beyond the job's
+    /// hard requirements.
+    pub capability_score: u32,
+}
+
+/// Strategy for picking one site out of the eligible set.
+///
+/// `choose` receives the job and a non-empty slice of eligible
+/// [`SiteView`]s (federation order) and returns an *index into that
+/// slice*. Policies may keep state (e.g. a seeded RNG) — the
+/// federation owns the box mutably.
+pub trait RoutingPolicy {
+    /// Stable policy name (`data-locality`, `least-loaded`, ...).
+    fn name(&self) -> &'static str;
+
+    /// Pick a site: an index into `eligible` (non-empty).
+    fn choose(&mut self, job: &TenantJob, eligible: &[SiteView]) -> usize;
+}
+
+/// Route to the site missing the fewest bytes of the job's image —
+/// replicas concentrate where images already live, minimizing WAN
+/// traffic. Ties break on estimated wait, then site index.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DataLocality;
+
+impl RoutingPolicy for DataLocality {
+    fn name(&self) -> &'static str {
+        "data-locality"
+    }
+
+    fn choose(&mut self, _job: &TenantJob, eligible: &[SiteView]) -> usize {
+        argmin(eligible, |v| {
+            (v.missing_bytes as f64, v.est_wait_secs, v.site as f64)
+        })
+    }
+}
+
+/// Route to the site with the lowest estimated queue wait. Ties break
+/// on missing bytes, then site index.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LeastLoaded;
+
+impl RoutingPolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn choose(&mut self, _job: &TenantJob, eligible: &[SiteView]) -> usize {
+        argmin(eligible, |v| {
+            (v.est_wait_secs, v.missing_bytes as f64, v.site as f64)
+        })
+    }
+}
+
+/// Route to the most capable site (highest advertised-extension
+/// score) — the XaaS-style "strongest match" placement. Ties break on
+/// estimated wait, then site index.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CapabilityFirst;
+
+impl RoutingPolicy for CapabilityFirst {
+    fn name(&self) -> &'static str {
+        "capability-first"
+    }
+
+    fn choose(&mut self, _job: &TenantJob, eligible: &[SiteView]) -> usize {
+        argmin(eligible, |v| {
+            (
+                -(v.capability_score as f64),
+                v.est_wait_secs,
+                v.site as f64,
+            )
+        })
+    }
+}
+
+/// Uniform seeded random placement over the eligible set — the
+/// scatter-everything baseline `federation_burst` compares
+/// [`DataLocality`] against. Deterministic per seed.
+#[derive(Debug, Clone)]
+pub struct RandomPlacement {
+    rng: Rng,
+}
+
+impl RandomPlacement {
+    /// A placement stream seeded with `seed`.
+    pub fn new(seed: u64) -> RandomPlacement {
+        RandomPlacement {
+            rng: Rng::from_tags(&["federation-random", &seed.to_string()]),
+        }
+    }
+}
+
+impl RoutingPolicy for RandomPlacement {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn choose(&mut self, _job: &TenantJob, eligible: &[SiteView]) -> usize {
+        self.rng.below(eligible.len() as u64) as usize
+    }
+}
+
+/// Every tenant has a home site (`tenant_idx % n_sites`) and all of
+/// its jobs go there — the no-federation baseline `federation_burst`
+/// measures burst overflow against. Falls back to the first eligible
+/// site when the home is ineligible for a particular job.
+#[derive(Debug, Clone, Copy)]
+pub struct PinnedHome {
+    sites: usize,
+}
+
+impl PinnedHome {
+    /// Pin tenants round-robin across `sites` member sites.
+    pub fn new(sites: usize) -> PinnedHome {
+        PinnedHome { sites: sites.max(1) }
+    }
+}
+
+impl RoutingPolicy for PinnedHome {
+    fn name(&self) -> &'static str {
+        "pinned-home"
+    }
+
+    fn choose(&mut self, job: &TenantJob, eligible: &[SiteView]) -> usize {
+        let home = job.tenant_idx as usize % self.sites;
+        eligible
+            .iter()
+            .position(|v| v.site == home)
+            .unwrap_or(0)
+    }
+}
+
+/// Resolve a CLI policy name to a boxed policy (`data-locality`,
+/// `least-loaded`, `capability-first`, `random`, `pinned-home`).
+/// `seed` feeds [`RandomPlacement`]; `sites` feeds [`PinnedHome`].
+pub fn routing_policy_by_name(
+    name: &str,
+    seed: u64,
+    sites: usize,
+) -> Option<Box<dyn RoutingPolicy>> {
+    match name {
+        "data-locality" => Some(Box::new(DataLocality)),
+        "least-loaded" => Some(Box::new(LeastLoaded)),
+        "capability-first" => Some(Box::new(CapabilityFirst)),
+        "random" => Some(Box::new(RandomPlacement::new(seed))),
+        "pinned-home" => Some(Box::new(PinnedHome::new(sites))),
+        _ => None,
+    }
+}
+
+/// Deterministic argmin over a float key triple: lexicographic
+/// `total_cmp`, so NaN never flips an ordering and ties always break
+/// the same way.
+fn argmin<F>(views: &[SiteView], key: F) -> usize
+where
+    F: Fn(&SiteView) -> (f64, f64, f64),
+{
+    let mut best = 0;
+    let mut best_key = key(&views[0]);
+    for (idx, view) in views.iter().enumerate().skip(1) {
+        let k = key(view);
+        let ord = k
+            .0
+            .total_cmp(&best_key.0)
+            .then(k.1.total_cmp(&best_key.1))
+            .then(k.2.total_cmp(&best_key.2));
+        if ord == std::cmp::Ordering::Less {
+            best = idx;
+            best_key = k;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::launch::JobSpec;
+    use crate::tenancy::JobClass;
+
+    fn job(tenant_idx: u32) -> TenantJob {
+        TenantJob {
+            id: 0,
+            tenant: format!("tenant-{tenant_idx:02}"),
+            tenant_idx,
+            arrival_secs: 0.0,
+            runtime_secs: 60.0,
+            class: JobClass::Cpu,
+            spec: JobSpec::new("ubuntu:xenial", &["true"], 1),
+        }
+    }
+
+    fn view(site: usize, wait: f64, missing: u64, score: u32) -> SiteView {
+        SiteView {
+            site,
+            name: format!("site-{site}"),
+            total_nodes: 64,
+            est_wait_secs: wait,
+            missing_bytes: missing,
+            wan_secs: 0.0,
+            capability_score: score,
+        }
+    }
+
+    #[test]
+    fn builtins_pick_their_dimension() {
+        let views = vec![
+            view(0, 10.0, 0, 2),
+            view(1, 0.0, 500, 2),
+            view(2, 5.0, 200, 3),
+        ];
+        let j = job(0);
+        assert_eq!(DataLocality.choose(&j, &views), 0);
+        assert_eq!(LeastLoaded.choose(&j, &views), 1);
+        assert_eq!(CapabilityFirst.choose(&j, &views), 2);
+    }
+
+    #[test]
+    fn pinned_home_follows_tenant_and_falls_back() {
+        let mut pinned = PinnedHome::new(3);
+        let views = vec![view(0, 0.0, 0, 2), view(2, 0.0, 0, 2)];
+        assert_eq!(pinned.choose(&job(2), &views), 1); // home = 2
+        assert_eq!(pinned.choose(&job(1), &views), 0); // home 1 missing
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed() {
+        let views = vec![view(0, 0.0, 0, 2), view(1, 0.0, 0, 2)];
+        let picks = |seed| {
+            let mut p = RandomPlacement::new(seed);
+            (0..16).map(|_| p.choose(&job(0), &views)).collect::<Vec<_>>()
+        };
+        assert_eq!(picks(7), picks(7));
+        assert_ne!(picks(7), picks(8));
+    }
+
+    #[test]
+    fn names_resolve() {
+        for name in [
+            "data-locality",
+            "least-loaded",
+            "capability-first",
+            "random",
+            "pinned-home",
+        ] {
+            let policy = routing_policy_by_name(name, 7, 3);
+            assert_eq!(policy.map(|p| p.name()), Some(name));
+        }
+        assert!(routing_policy_by_name("nope", 7, 3).is_none());
+    }
+}

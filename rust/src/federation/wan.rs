@@ -1,0 +1,141 @@
+//! The WAN link model: per-site-pair latency/bandwidth plus an origin
+//! registry uplink, pricing every cross-site replication.
+
+use std::collections::BTreeMap;
+
+/// One directionless WAN link: fixed one-way latency plus a shared
+/// bandwidth. Transfers are priced `latency + bytes / bandwidth` —
+/// the same first-order model the registry uses for center uplinks,
+/// deliberately ignoring congestion (replications are rare next to
+/// intra-site traffic and the simulation charges them serially per
+/// image anyway).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WanLink {
+    /// One-way latency, seconds.
+    pub latency_secs: f64,
+    /// Sustained bandwidth, bytes per second.
+    pub bytes_per_sec: f64,
+}
+
+impl WanLink {
+    /// Seconds to move `bytes` over this link.
+    pub fn transfer_secs(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.latency_secs + bytes as f64 / self.bytes_per_sec
+    }
+}
+
+/// Default site-pair link: a dedicated 10 Gbit/s research-network path
+/// with continental latency.
+pub const DEFAULT_SITE_LINK: WanLink = WanLink {
+    latency_secs: 0.045,
+    bytes_per_sec: 1.25e9,
+};
+
+/// Default origin-registry uplink: the public registry's ~640 Mbit/s
+/// ([`crate::registry::Registry::dockerhub`]) with internet latency —
+/// pulling from a peer site is ~15x faster, which is the whole point
+/// of federation-level replication.
+pub const DEFAULT_ORIGIN_LINK: WanLink = WanLink {
+    latency_secs: 0.25,
+    bytes_per_sec: 80e6,
+};
+
+/// Per-site-pair WAN topology. Links are symmetric and keyed by the
+/// *ordered* name pair, so `link("a", "b")` and `link("b", "a")` see
+/// the same path; pairs without an explicit override use the default
+/// link, and pulls that fall through to the origin registry are priced
+/// over the origin uplink.
+#[derive(Debug, Clone)]
+pub struct WanModel {
+    default: WanLink,
+    origin: WanLink,
+    links: BTreeMap<(String, String), WanLink>,
+}
+
+impl Default for WanModel {
+    fn default() -> WanModel {
+        WanModel::new()
+    }
+}
+
+impl WanModel {
+    /// A topology where every pair uses [`DEFAULT_SITE_LINK`] and the
+    /// origin uses [`DEFAULT_ORIGIN_LINK`].
+    pub fn new() -> WanModel {
+        WanModel {
+            default: DEFAULT_SITE_LINK,
+            origin: DEFAULT_ORIGIN_LINK,
+            links: BTreeMap::new(),
+        }
+    }
+
+    /// Replace the default link used by pairs without an override.
+    pub fn set_default(&mut self, link: WanLink) {
+        self.default = link;
+    }
+
+    /// Replace the origin-registry uplink.
+    pub fn set_origin(&mut self, link: WanLink) {
+        self.origin = link;
+    }
+
+    /// Override the link between `a` and `b` (order-insensitive).
+    pub fn set_link(&mut self, a: &str, b: &str, link: WanLink) {
+        self.links.insert(Self::key(a, b), link);
+    }
+
+    /// The link between `a` and `b` (order-insensitive; the default
+    /// when no override exists).
+    pub fn link(&self, a: &str, b: &str) -> WanLink {
+        self.links
+            .get(&Self::key(a, b))
+            .copied()
+            .unwrap_or(self.default)
+    }
+
+    /// The origin-registry uplink any site pays when no peer holds the
+    /// missing chunks.
+    pub fn origin(&self) -> WanLink {
+        self.origin
+    }
+
+    fn key(a: &str, b: &str) -> (String, String) {
+        if a <= b {
+            (a.to_string(), b.to_string())
+        } else {
+            (b.to_string(), a.to_string())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn links_are_symmetric_and_default_fills_gaps() {
+        let mut wan = WanModel::new();
+        let fat = WanLink {
+            latency_secs: 0.002,
+            bytes_per_sec: 1e10,
+        };
+        wan.set_link("b", "a", fat);
+        assert_eq!(wan.link("a", "b"), fat);
+        assert_eq!(wan.link("b", "a"), fat);
+        assert_eq!(wan.link("a", "c"), DEFAULT_SITE_LINK);
+    }
+
+    #[test]
+    fn transfer_time_is_latency_plus_serialization() {
+        let link = WanLink {
+            latency_secs: 0.1,
+            bytes_per_sec: 1000.0,
+        };
+        assert_eq!(link.transfer_secs(0), 0.0);
+        let secs = link.transfer_secs(500);
+        assert!((secs - 0.6).abs() < 1e-12);
+    }
+}

@@ -29,10 +29,12 @@
 //! The typed entry point over the whole stack is the [`Site`] facade
 //! (`site::`): a [`SiteBuilder`] validates the operator's knobs once and
 //! returns a handle with `pull` / `run` / `launch` / `storm` operations,
-//! so user workflows never hand-wire the layers. Repo-level docs:
-//! `README.md` (orientation and quickstart), `DESIGN.md` (S1–S22
-//! architecture), `EXPERIMENTS.md` (bench → paper-table matrix, knobs,
-//! artifacts).
+//! so user workflows never hand-wire the layers; the [`Federation`]
+//! facade (`federation::`) composes many such sites behind cross-site
+//! replication, capability routing, and burst overflow. Repo-level
+//! docs: `README.md` (orientation and quickstart), `DESIGN.md`
+//! (S1–S27 architecture), `EXPERIMENTS.md` (bench → paper-table
+//! matrix, knobs, artifacts).
 
 // The rustdoc pass proceeds module by module: `launch`, `distrib`,
 // `gateway`, `tenancy`, `site`, `shifter`, `telemetry` and `config` are
@@ -48,6 +50,7 @@ pub mod distrib;
 pub mod docker;
 #[allow(missing_docs)]
 pub mod fabric;
+pub mod federation;
 pub mod gateway;
 #[allow(missing_docs)]
 pub mod gpu;
@@ -81,6 +84,10 @@ pub mod wlm;
 
 pub use config::UdiRootConfig;
 pub use distrib::DistributionFabric;
+pub use federation::{
+    Federation, FederationBuilder, FederationError, FederationReport,
+    FederationStorm, RoutingPolicy,
+};
 pub use gateway::{ImageGateway, ImageSource};
 pub use hostenv::SystemProfile;
 pub use launch::{JobSpec, LaunchCluster, LaunchReport, LaunchScheduler};

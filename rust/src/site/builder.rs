@@ -71,6 +71,7 @@ pub struct SiteBuilder {
     extensions: Vec<Box<dyn HostExtension>>,
     default_extensions: bool,
     telemetry: bool,
+    recorder: Option<Arc<Telemetry>>,
     cascade: Option<(usize, usize)>,
     chunk_target: Option<u64>,
     lazy: bool,
@@ -104,6 +105,7 @@ impl SiteBuilder {
             extensions: Vec::new(),
             default_extensions: true,
             telemetry: false,
+            recorder: None,
             cascade: None,
             chunk_target: None,
             lazy: false,
@@ -297,6 +299,21 @@ impl SiteBuilder {
         self
     }
 
+    /// Record into an existing [`Telemetry`] recorder instead of
+    /// allocating a private one. A federation
+    /// ([`crate::federation::Federation`]) passes the same recorder to
+    /// every member site so cross-site storms produce one coherent
+    /// span tree / Chrome trace; a bare site never needs this.
+    /// Overrides [`SiteBuilder::telemetry`] — the shared recorder's
+    /// own enabled/disabled state wins.
+    pub fn telemetry_recorder(
+        mut self,
+        recorder: Arc<Telemetry>,
+    ) -> SiteBuilder {
+        self.recorder = Some(recorder);
+        self
+    }
+
     /// Validate the declared knobs and wire the stack. Conflicting or
     /// impossible combinations return typed [`SiteError`] variants —
     /// never panics.
@@ -368,7 +385,10 @@ impl SiteBuilder {
                 .clone()
                 .unwrap_or_else(LustreFs::piz_daint)
         });
-        let telemetry = Arc::new(Telemetry::new(self.telemetry));
+        let telemetry = match self.recorder {
+            Some(recorder) => recorder,
+            None => Arc::new(Telemetry::new(self.telemetry)),
+        };
         let mut fabric = DistributionFabric::new(self.shards, pfs)
             .with_node_cache_bytes(self.node_cache_bytes)
             .with_telemetry(Arc::clone(&telemetry));

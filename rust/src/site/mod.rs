@@ -22,9 +22,7 @@
 //! * [`Site::run_storm`] — a multi-tenant job storm described by one
 //!   typed [`StormSpec`] (traffic knobs, policy override, explicit job
 //!   stream, optional Chrome-trace artifact) under the site's
-//!   (pluggable) [`SchedulingPolicy`]. The positional
-//!   [`Site::storm`] / [`Site::storm_with`] forms are deprecated in its
-//!   favor.
+//!   (pluggable) [`SchedulingPolicy`].
 //!
 //! Every operation reports through the single [`SiteError`] enum, whose
 //! `std::error::Error::source()` chain preserves the layer-level cause.
@@ -85,13 +83,10 @@ pub struct PullOutcome {
 /// A typed description of one multi-tenant storm, consumed by
 /// [`Site::run_storm`].
 ///
-/// This is the one builder that replaces the positional
-/// `storm(&TrafficModel)` / `storm_with(&[TenantJob], &dyn
-/// SchedulingPolicy)` pair and the `default_traffic()` side channel:
-/// every knob those forms spread across call sites lives here, and
-/// every knob left unset inherits the site's shape — `max_width`
-/// defaults to half the cluster, `seed` to the site's seed, the policy
-/// to the site's configured [`SchedulingPolicy`].
+/// Every storm knob lives here, and every knob left unset inherits
+/// the site's shape — `max_width` defaults to half the cluster, `seed`
+/// to the site's seed, the policy to the site's configured
+/// [`SchedulingPolicy`].
 ///
 /// ```
 /// use shifter_rs::{Site, StormSpec};
@@ -356,18 +351,6 @@ impl Site {
         refs
     }
 
-    /// A traffic model shaped to this site: the site's seed, and a
-    /// maximum job width of half the cluster (the storm default the CLI
-    /// and benches share).
-    #[deprecated(
-        since = "0.3.0",
-        note = "the site-shaped defaults are applied automatically by \
-                `Site::run_storm`; set overrides on `StormSpec` instead"
-    )]
-    pub fn default_traffic(&self) -> TrafficModel {
-        self.site_traffic()
-    }
-
     /// The site-shaped synthesis defaults (`StormSpec` knobs left unset
     /// resolve against this).
     fn site_traffic(&self) -> TrafficModel {
@@ -608,34 +591,6 @@ impl Site {
         Ok(report)
     }
 
-    /// Synthesize `traffic` against this site's cluster and run the
-    /// whole multi-tenant storm under the site's configured
-    /// [`SchedulingPolicy`].
-    #[deprecated(
-        since = "0.3.0",
-        note = "use `Site::run_storm` with `StormSpec::new().traffic(...)`"
-    )]
-    pub fn storm(&mut self, traffic: &TrafficModel) -> TenancyReport {
-        let jobs = traffic.generate(&self.cluster);
-        self.storm_impl(&jobs, None)
-    }
-
-    /// Run an explicit pre-generated job stream under an explicit
-    /// policy — the form the benches use to schedule the *same* stream
-    /// under two policies and compare.
-    #[deprecated(
-        since = "0.3.0",
-        note = "use `Site::run_storm` with \
-                `StormSpec::new().job_stream(...).policy(...)`"
-    )]
-    pub fn storm_with(
-        &mut self,
-        jobs: &[TenantJob],
-        policy: &dyn SchedulingPolicy,
-    ) -> TenancyReport {
-        self.storm_impl(jobs, Some(policy))
-    }
-
     // -- internals --------------------------------------------------------
 
     fn storm_impl(
@@ -829,24 +784,26 @@ mod tests {
     }
 
     #[test]
-    fn storm_spec_replay_matches_the_deprecated_positional_form() {
-        use crate::tenancy::Fifo;
-
+    fn storm_spec_replay_matches_the_synthesized_form() {
+        // replaying the pre-generated stream explicitly must reproduce
+        // the synthesized run exactly — the equivalence the benches
+        // rely on when they schedule one stream under many configs
         let build = || {
             Site::builder().nodes(8).seed(11).build().unwrap()
         };
         let mut a = build();
         let jobs =
             StormSpec::new().jobs(12).resolve_traffic(&a).generate(a.cluster());
-        let new = a
-            .run_storm(
-                &StormSpec::new().job_stream(jobs.clone()).policy(Fifo),
-            )
+        let replayed = a
+            .run_storm(&StormSpec::new().job_stream(jobs))
             .unwrap();
         let mut b = build();
-        #[allow(deprecated)]
-        let old = b.storm_with(&jobs, &Fifo);
-        assert_eq!(new.to_json().to_string(), old.to_json().to_string());
+        let synthesized =
+            b.run_storm(&StormSpec::new().jobs(12)).unwrap();
+        assert_eq!(
+            replayed.to_json().to_string(),
+            synthesized.to_json().to_string()
+        );
     }
 
     #[test]

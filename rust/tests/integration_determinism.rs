@@ -12,7 +12,10 @@ use shifter_rs::gateway::ImageSource;
 use shifter_rs::launch::JobSpec;
 use shifter_rs::pfs::LustreFs;
 use shifter_rs::util::json::Json;
-use shifter_rs::{Registry, Site, StormSpec, SystemProfile};
+use shifter_rs::{
+    Federation, FederationStorm, Registry, Site, SiteBuilder, StormSpec,
+    SystemProfile,
+};
 
 /// One traced hetero launch on a fresh site: the full pipeline — WLM
 /// allocation, coalesced pull, per-node slot events, MPI swap — under
@@ -189,6 +192,62 @@ fn distrib_results_are_independent_of_host_thread_context() {
     for h in handles {
         let (doc, trace) = h.join().expect("worker run");
         assert_eq!(doc, doc_main);
+        assert_eq!(trace, trace_main);
+    }
+}
+
+/// One traced federation storm on a fresh three-site fleet (DESIGN.md
+/// S27) with burst overflow enabled: arrival routing, WAN replication,
+/// and three member-site schedulers all share one virtual clock and
+/// one telemetry recorder. Returns the report JSON and the merged
+/// Chrome trace.
+fn federation_once() -> (String, String) {
+    let member = || {
+        SiteBuilder::new()
+            .profile(SystemProfile::piz_daint())
+            .nodes(16)
+            .seed(13)
+    };
+    let mut fed = Federation::builder()
+        .site("alpha", member())
+        .site("bravo", member())
+        .site("charlie", member())
+        .overflow_threshold_secs(60.0)
+        .telemetry(true)
+        .seed(13)
+        .build()
+        .unwrap();
+    let report = fed
+        .run_storm(&FederationStorm::new().tenants(3).jobs(12))
+        .unwrap();
+    assert_eq!(report.completed(), report.records.len());
+    (
+        report.to_json().to_string(),
+        fed.telemetry().chrome_trace_jsonl(),
+    )
+}
+
+#[test]
+fn federation_artifacts_are_byte_identical_across_runs() {
+    let (report_a, trace_a) = federation_once();
+    let (report_b, trace_b) = federation_once();
+    assert_eq!(report_a, report_b, "FederationReport JSON must replay");
+    assert_eq!(trace_a, trace_b, "merged trace order must replay");
+    assert!(!trace_a.is_empty());
+}
+
+#[test]
+fn federation_results_are_independent_of_host_thread_context() {
+    // the arrival replay, the replica index, and every member site's
+    // scheduler run on seeded virtual time — concurrent host threads
+    // must reproduce the main-thread bytes exactly
+    let (report_main, trace_main) = federation_once();
+    let handles: Vec<_> = (0..4)
+        .map(|_| std::thread::spawn(federation_once))
+        .collect();
+    for h in handles {
+        let (report, trace) = h.join().expect("worker run");
+        assert_eq!(report, report_main);
         assert_eq!(trace, trace_main);
     }
 }

@@ -1,0 +1,189 @@
+//! Integration: the multi-site federation (DESIGN.md S27) — capability
+//! routing rejects what no site can run, burst overflow spills only to
+//! *compatible* sites, and cross-site replication is paid (and
+//! accounted) before a job may start, with concurrent arrivals
+//! coalescing onto one WAN transfer.
+
+use shifter_rs::federation::PinnedHome;
+use shifter_rs::launch::JobSpec;
+use shifter_rs::tenancy::{JobClass, TenantJob};
+use shifter_rs::{
+    Federation, FederationStorm, SiteBuilder, SystemProfile,
+};
+
+/// A CPU-class job that asks for the specialized-networking extension
+/// (`SHIFTER_NET=host`) — eligible only on sites whose fabric supports
+/// it (the laptop profile has no fabric, so it never qualifies).
+fn net_job(id: u32, tenant_idx: u32, arrival: f64, width: u32) -> TenantJob {
+    TenantJob {
+        id,
+        tenant: format!("tenant-{tenant_idx:02}"),
+        tenant_idx,
+        arrival_secs: arrival,
+        runtime_secs: 600.0,
+        class: JobClass::Cpu,
+        spec: JobSpec::new("ubuntu:xenial", &["true"], width)
+            .with_env("SHIFTER_NET", "host"),
+    }
+}
+
+fn cpu_job(id: u32, tenant_idx: u32, arrival: f64, width: u32) -> TenantJob {
+    TenantJob {
+        id,
+        tenant: format!("tenant-{tenant_idx:02}"),
+        tenant_idx,
+        arrival_secs: arrival,
+        runtime_secs: 600.0,
+        class: JobClass::Cpu,
+        spec: JobSpec::new("ubuntu:xenial", &["true"], width),
+    }
+}
+
+#[test]
+fn capability_mismatch_rejects_with_a_reason_instead_of_failing_late() {
+    // two laptop sites: GPU and MPI are available, but no fabric —
+    // a net-requiring job has nowhere to go
+    let mut fed = Federation::builder()
+        .site(
+            "laptop-a",
+            SiteBuilder::new().profile(SystemProfile::laptop()).nodes(4),
+        )
+        .site(
+            "laptop-b",
+            SiteBuilder::new().profile(SystemProfile::laptop()).nodes(4),
+        )
+        .build()
+        .unwrap();
+    let report = fed
+        .run_storm(&FederationStorm::new().job_stream(vec![
+            net_job(0, 0, 0.0, 2),
+            cpu_job(1, 0, 1.0, 2),
+        ]))
+        .unwrap();
+
+    // the net job was rejected up front with a per-site reason...
+    assert_eq!(report.rejections.len(), 1);
+    let rejection = &report.rejections[0];
+    assert_eq!(rejection.id, 0);
+    assert!(
+        rejection.reason.contains("net"),
+        "the reason must name the missing capability: {}",
+        rejection.reason
+    );
+    // ...while the plain CPU job from the same stream ran normally
+    assert_eq!(report.records.len(), 1);
+    assert_eq!(report.records[0].id, 1);
+    assert_eq!(report.completed(), 1);
+}
+
+#[test]
+fn burst_overflow_spills_only_to_capability_compatible_sites() {
+    // one contended stream of net-requiring jobs, tiny threshold: the
+    // home queue estimate crosses it almost immediately
+    let stream: Vec<TenantJob> =
+        (0..6).map(|i| net_job(i, 0, f64::from(i), 8)).collect();
+    let storm = || {
+        FederationStorm::new().job_stream(stream.clone())
+    };
+    let daint =
+        || SiteBuilder::new().profile(SystemProfile::piz_daint()).nodes(8);
+
+    // fleet A: the only net-capable site is the home — overflow has no
+    // compatible alternative, so every job stays (and none is rejected)
+    let mut capped = Federation::builder()
+        .site("daint", daint())
+        .site(
+            "edge",
+            SiteBuilder::new().profile(SystemProfile::laptop()).nodes(8),
+        )
+        .overflow_threshold_secs(1.0)
+        .build()
+        .unwrap();
+    let capped_report = capped.run_storm(&storm()).unwrap();
+    assert!(capped_report.rejections.is_empty());
+    assert_eq!(capped_report.overflows, 0);
+    assert_eq!(capped_report.completed(), stream.len());
+    assert!(
+        capped_report.records.iter().all(|r| r.site == "daint"),
+        "net jobs may only run on the net-capable site"
+    );
+
+    // fleet B: replace the edge box with a second net-capable site —
+    // the identical stream now spills
+    let mut open = Federation::builder()
+        .site("daint", daint())
+        .site("alps", daint())
+        .overflow_threshold_secs(1.0)
+        .build()
+        .unwrap();
+    let open_report = open.run_storm(&storm()).unwrap();
+    assert!(open_report.rejections.is_empty());
+    assert!(
+        open_report.overflows > 0,
+        "with a compatible alternative the same stream must overflow"
+    );
+    assert_eq!(open_report.completed(), stream.len());
+    assert!(open_report.records.iter().any(|r| r.site == "alps"));
+}
+
+#[test]
+fn replication_is_paid_before_start_and_concurrent_pulls_coalesce() {
+    let member =
+        || SiteBuilder::new().profile(SystemProfile::piz_daint()).nodes(8);
+    let mut fed = Federation::builder()
+        .site("alpha", member())
+        .site("bravo", member())
+        // tenant 0 -> alpha, tenant 1 -> bravo
+        .routing(Box::new(PinnedHome::new(2)))
+        .build()
+        .unwrap();
+
+    // alpha sees three arrivals of one image: two inside the transfer
+    // window (coalesce), one long after (warm replica); bravo pulls the
+    // same image once — from its peer, not the origin
+    let report = fed
+        .run_storm(&FederationStorm::new().job_stream(vec![
+            cpu_job(0, 0, 0.0, 2),
+            cpu_job(1, 0, 0.2, 2),
+            cpu_job(2, 0, 5000.0, 2),
+            cpu_job(3, 1, 0.0, 2),
+        ]))
+        .unwrap();
+    assert!(report.rejections.is_empty());
+    assert_eq!(report.completed(), 4);
+
+    // exactly one transfer per (site, image): alpha's two concurrent
+    // arrivals share one, the warm third costs nothing
+    assert_eq!(report.replications, 2);
+    assert!(report.origin_bytes > 0, "alpha pulls from the origin");
+    assert!(
+        report.peer_bytes > 0,
+        "bravo must source the replica from its peer (alpha committed \
+         the index first), not the origin"
+    );
+
+    let rec = |id: u32| {
+        report.records.iter().find(|r| r.id == id).expect("routed")
+    };
+    let (r0, r1, r2, r3) = (rec(0), rec(1), rec(2), rec(3));
+    // the WAN delay is charged before the site queue sees the job
+    assert!(r0.wan_wait_secs > 0.0);
+    assert!(r3.wan_wait_secs > 0.0);
+    // coalesced arrivals become ready at the same instant: job 1
+    // piggybacks on job 0's in-flight transfer
+    let ready = |r: &shifter_rs::federation::FedJobRecord| {
+        r.arrival_secs + r.wan_wait_secs
+    };
+    assert!(r1.wan_wait_secs > 0.0 && r1.wan_wait_secs < r0.wan_wait_secs);
+    assert!((ready(r0) - ready(r1)).abs() < 1e-9);
+    // by job 2's arrival the replica is warm — no WAN wait at all
+    assert_eq!(r2.wan_wait_secs, 0.0);
+    // accounting is consistent: total = wan + site for every record
+    for r in &report.records {
+        assert!(
+            (r.total_wait_secs - (r.wan_wait_secs + r.site_wait_secs))
+                .abs()
+                < 1e-9
+        );
+    }
+}

@@ -12,7 +12,8 @@ and sub-tolerance jitter pass, with a note.
 
 Baselines must be produced with the same knobs CI uses (see
 .github/workflows/ci.yml bench-smoke: LAUNCH_SCALE_NODES=256,
-EXTENSION_OVERHEAD_NODES=64, GATEWAY_SCALE_NODES=500); artifacts whose
+EXTENSION_OVERHEAD_NODES=64, GATEWAY_SCALE_NODES=500,
+FEDERATION_SITES=3, FEDERATION_JOBS=32); artifacts whose
 ``max_nodes`` differs from the baseline are skipped with a notice
 instead of mis-compared.
 
@@ -107,10 +108,27 @@ def distrib_metrics(doc):
     return out
 
 
+def federation_metrics(doc):
+    """(config key, metric name) -> value for BENCH_federation.json."""
+    out = {}
+    for cfg in ("pinned", "burst", "locality", "random"):
+        report = doc.get(cfg, {})
+        for metric in ("overflows", "replications", "replication_bytes",
+                       "wan_transfer_secs", "makespan_secs"):
+            if metric in report:
+                out[f"{cfg}.{metric}"] = report[metric]
+        wait = report.get("total_wait") or {}
+        for metric in ("p50", "p99", "worst"):
+            if metric in wait:
+                out[f"{cfg}.total_wait.{metric}"] = wait[metric]
+    return out
+
+
 EXTRACTORS = {
     "launch_scale": launch_metrics,
     "extension_overhead": extensions_metrics,
     "distrib_cascade": distrib_metrics,
+    "federation_burst": federation_metrics,
 }
 
 

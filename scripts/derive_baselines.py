@@ -6,7 +6,8 @@ Two modes:
 * **Toolchain mode** (default when ``cargo`` is on PATH): run the
   gated benches with the exact CI bench-smoke knobs
   (``LAUNCH_SCALE_NODES=256``, ``EXTENSION_OVERHEAD_NODES=64``,
-  ``GATEWAY_SCALE_NODES=500``), then record the fresh artifacts via
+  ``GATEWAY_SCALE_NODES=500``, ``FEDERATION_SITES=3``,
+  ``FEDERATION_JOBS=32``), then record the fresh artifacts via
   ``bench_regression.py --update``. The result is a full-magnitude
   baseline — commit ``rust/bench_baselines/``.
 
@@ -47,6 +48,10 @@ import sys
 LAUNCH_SCALE_NODES = 256
 EXTENSION_OVERHEAD_NODES = 64
 GATEWAY_SCALE_NODES = 500
+FEDERATION_SITES = 3
+FEDERATION_JOBS = 32
+# federation_burst reports max_nodes = sites * 48 (NODES_PER_SITE)
+FEDERATION_MAX_NODES = FEDERATION_SITES * 48
 
 # OSU message sizes priced by the net-split table
 # (rust/src/fabric/mod.rs OSU_SIZES)
@@ -117,6 +122,18 @@ def distrib_expected_metrics(cap):
     return keys
 
 
+def federation_expected_metrics(_cap):
+    """Metric keys federation_burst emits (any site/job knobs)."""
+    keys = []
+    for cfg in ("pinned", "burst", "locality", "random"):
+        for m in ("overflows", "replications", "replication_bytes",
+                  "wan_transfer_secs", "makespan_secs"):
+            keys.append(f"{cfg}.{m}")
+        for m in ("p50", "p99", "worst"):
+            keys.append(f"{cfg}.total_wait.{m}")
+    return keys
+
+
 PROVISIONAL = [
     ("BENCH_launch.json", "launch_scale", LAUNCH_SCALE_NODES,
      launch_expected_metrics),
@@ -124,6 +141,8 @@ PROVISIONAL = [
      EXTENSION_OVERHEAD_NODES, extensions_expected_metrics),
     ("BENCH_distrib.json", "distrib_cascade", GATEWAY_SCALE_NODES,
      distrib_expected_metrics),
+    ("BENCH_federation.json", "federation_burst", FEDERATION_MAX_NODES,
+     federation_expected_metrics),
 ]
 
 
@@ -156,6 +175,9 @@ def run_benches_and_update(baseline_dir):
          {"EXTENSION_OVERHEAD_NODES": str(EXTENSION_OVERHEAD_NODES)}),
         ("gateway_scale",
          {"GATEWAY_SCALE_NODES": str(GATEWAY_SCALE_NODES)}),
+        ("federation_burst",
+         {"FEDERATION_SITES": str(FEDERATION_SITES),
+          "FEDERATION_JOBS": str(FEDERATION_JOBS)}),
     ]
     for bench, knobs in benches:
         print(f"  running cargo bench --bench {bench} ({knobs})")
@@ -171,7 +193,8 @@ def run_benches_and_update(baseline_dir):
          "--update", "--baseline-dir", baseline_dir,
          os.path.join(root, "rust", "BENCH_launch.json"),
          os.path.join(root, "rust", "BENCH_extensions.json"),
-         os.path.join(root, "rust", "BENCH_distrib.json")],
+         os.path.join(root, "rust", "BENCH_distrib.json"),
+         os.path.join(root, "rust", "BENCH_federation.json")],
         check=True,
     )
 
